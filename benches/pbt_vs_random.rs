@@ -1,0 +1,78 @@
+//! C2 bench: PBT vs static random search on the non-stationary
+//! objective (optimal lr decays over time), across seeds — regenerates
+//! the PBT-paper-shaped result that the paper's §4.2 claim 3 (clone
+//! parameters of promising trials mid-training) exists to enable.
+//!
+//! Run: `cargo bench --bench pbt_vs_random`
+
+use tune::coordinator::spec::SpaceBuilder;
+use tune::coordinator::{
+    run_experiments, ExperimentSpec, Mode, RunOptions, SchedulerKind, SearchKind,
+};
+use tune::ray::{Cluster, Resources};
+use tune::trainable::factory;
+use tune::trainable::synthetic::NonStationaryTrainable;
+use tune::util::bench;
+
+fn run(kind: SchedulerKind, seed: u64) -> tune::coordinator::ExperimentResult {
+    let space = SpaceBuilder::new().loguniform("lr", 1e-4, 0.5).build();
+    let mut spec = ExperimentSpec::named("c2");
+    spec.metric = "score".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = 16;
+    spec.max_iterations_per_trial = 160;
+    spec.seed = seed;
+    run_experiments(
+        spec,
+        space,
+        kind,
+        SearchKind::Random,
+        factory(|c, s| Box::new(NonStationaryTrainable::new(c, s))),
+        RunOptions {
+            cluster: Cluster::uniform(2, Resources::cpu(8.0)),
+            ..Default::default()
+        },
+    )
+}
+
+fn main() {
+    let space = SpaceBuilder::new().loguniform("lr", 1e-4, 0.5).build();
+    println!("== C2 table: population 16, 160 iters, perturb every 10 ==");
+    println!(
+        "{:>6} {:>12} {:>12} {:>8} {:>10} {:>10}",
+        "seed", "pbt score", "rand score", "ratio", "exploits", "mutated"
+    );
+    let mut ratios = Vec::new();
+    for seed in [1u64, 2, 3, 4, 5] {
+        let pbt = run(
+            SchedulerKind::Pbt { perturbation_interval: 10, space: space.clone() },
+            seed,
+        );
+        let rnd = run(SchedulerKind::Fifo, seed);
+        let ratio = pbt.best_metric().unwrap() / rnd.best_metric().unwrap();
+        ratios.push(ratio);
+        println!(
+            "{:>6} {:>12.2} {:>12.2} {:>8.2} {:>10} {:>10}",
+            seed,
+            pbt.best_metric().unwrap(),
+            rnd.best_metric().unwrap(),
+            ratio,
+            pbt.stats.exploits,
+            pbt.trials.values().filter(|t| t.mutations > 0).count(),
+        );
+    }
+    let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    println!("\nmean PBT advantage: {mean:.2}x (paper-shape: PBT > static on non-stationary objectives)");
+
+    println!("\n== wall time ==");
+    bench::header();
+    let mut seed = 10;
+    bench::bench_n("pbt/16x160 experiment", 1, 10, || {
+        seed += 1;
+        std::hint::black_box(
+            run(SchedulerKind::Pbt { perturbation_interval: 10, space: space.clone() }, seed)
+                .stats
+                .exploits,
+        );
+    });
+}

@@ -1,0 +1,95 @@
+//! C4 bench: coordinator overhead — the cost Tune adds per intermediate
+//! result on top of raw trial compute. Measures end-to-end results/sec
+//! through the full runner (admission, scheduler callback, decision
+//! application, logging fan-out) with near-zero-cost trainables, plus
+//! the checkpoint path (save/restore round-trips through the store).
+//!
+//! Run: `cargo bench --bench runner_overhead`
+
+use tune::coordinator::spec::SpaceBuilder;
+use tune::coordinator::{
+    run_experiments, ExperimentSpec, Mode, ParamValue, RunOptions, SchedulerKind, SearchKind,
+};
+use tune::ray::{Cluster, Resources};
+use tune::trainable::factory;
+use tune::trainable::synthetic::{ConstTrainable, CurveTrainable};
+use tune::util::bench;
+
+fn throughput(kind: SchedulerKind, samples: usize, iters: u64, checkpoint_freq: u64) -> f64 {
+    let space = SpaceBuilder::new()
+        .loguniform("lr", 1e-4, 1.0)
+        .constant("step_cost", ParamValue::F64(1.0))
+        .build();
+    let mut spec = ExperimentSpec::named("overhead");
+    spec.metric = "accuracy".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = samples;
+    spec.max_iterations_per_trial = iters;
+    spec.checkpoint_freq = checkpoint_freq;
+    let t0 = std::time::Instant::now();
+    let res = run_experiments(
+        spec,
+        space,
+        kind,
+        SearchKind::Random,
+        factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+        RunOptions {
+            cluster: Cluster::uniform(4, Resources::cpu(8.0)),
+            ..Default::default()
+        },
+    );
+    res.stats.results as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    println!("== runner throughput: intermediate results/sec through the full loop ==");
+    println!("{:<34} {:>16}", "configuration", "results/sec");
+    for (name, kind) in [
+        ("fifo", SchedulerKind::Fifo),
+        ("asha", SchedulerKind::Asha { grace_period: 1, reduction_factor: 3.0, max_t: 81 }),
+        ("median_stopping", SchedulerKind::MedianStopping { grace_period: 8, min_samples: 3 }),
+        ("hyperband", SchedulerKind::HyperBand { max_t: 81, eta: 3.0 }),
+    ] {
+        let rps = throughput(kind, 64, 81, 0);
+        println!("{name:<34} {rps:>16.0}");
+    }
+    let rps = throughput(SchedulerKind::Fifo, 64, 81, 5);
+    println!("{:<34} {:>16.0}", "fifo + checkpoint every 5 iters", rps);
+
+    println!("\n== hot-path micro-benches ==");
+    bench::header();
+
+    // Checkpoint store round-trip at MLP state size (~46 KB).
+    let blob = vec![0u8; 11_566 * 4];
+    bench::bench_n("checkpoint/save+get 46KB", 100, 1000, || {
+        let mut store = tune::checkpoint::CheckpointStore::new();
+        let id = store.save(1, 1, blob.clone());
+        std::hint::black_box(store.get(id).map(|b| b.len()));
+    });
+
+    // Trainable step dispatch through the boxed trait.
+    let f = factory(|c, s| Box::new(ConstTrainable::new(c, s)));
+    let mut t = f(&Default::default(), 0);
+    bench::bench_n("trainable/boxed step", 1000, 10_000, || {
+        std::hint::black_box(t.step().unwrap().metrics.len());
+    });
+
+    // Whole small experiment (admission + events + teardown).
+    bench::bench_n("experiment/16x20 fifo end-to-end", 2, 30, || {
+        let space = SpaceBuilder::new().loguniform("lr", 1e-4, 1.0).build();
+        let mut spec = ExperimentSpec::named("micro");
+        spec.metric = "accuracy".into();
+        spec.mode = Mode::Max;
+        spec.num_samples = 16;
+        spec.max_iterations_per_trial = 20;
+        let res = run_experiments(
+            spec,
+            space,
+            SchedulerKind::Fifo,
+            SearchKind::Random,
+            factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+            RunOptions::default(),
+        );
+        std::hint::black_box(res.stats.results);
+    });
+}

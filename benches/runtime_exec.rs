@@ -1,0 +1,63 @@
+//! Runtime (L1/L2) bench: latency of the AOT-compiled train step through
+//! PJRT per model variant, plus the checkpoint serialize/restore path.
+//! These are the numbers the L3 coordinator overhead is compared against
+//! in EXPERIMENTS.md §Perf (coordinator cost must be ≪ step cost).
+//!
+//! Requires artifacts (`make artifacts`); exits gracefully otherwise.
+//!
+//! Run: `cargo bench --bench runtime_exec`
+
+use tune::runtime::{Manifest, PjrtService};
+use tune::util::bench;
+
+fn main() {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping runtime bench: run `make artifacts`");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let svc = PjrtService::spawn(dir).unwrap();
+
+    bench::header();
+    let mut session = 0u64;
+    for (name, mm) in &manifest.models {
+        session += 1;
+        svc.open(session, name, 42).unwrap();
+        // One step to trigger compilation outside the timed region.
+        svc.step(session, 1, 0.05, 0.9).unwrap();
+
+        let s = session;
+        let svc2 = svc.clone();
+        bench::bench_n(&format!("train_step/{name} ({}p)", mm.param_count), 3, 30, move || {
+            std::hint::black_box(svc2.step(s, 1, 0.05, 0.9).unwrap().0);
+        });
+
+        let svc3 = svc.clone();
+        let stats = bench::bench_n(&format!("checkpoint_save/{name}"), 3, 30, move || {
+            std::hint::black_box(svc3.save(s).unwrap().len());
+        });
+        let state_bytes = mm.state_elements() * 4 + 16;
+        println!(
+            "    -> {} KB state, {:.0} MB/s serialize",
+            state_bytes / 1024,
+            state_bytes as f64 / stats.median_ns * 1e3
+        );
+
+        let blob = svc.save(session).unwrap();
+        let svc4 = svc.clone();
+        bench::bench_n(&format!("checkpoint_restore/{name}"), 3, 30, move || {
+            svc4.restore(s, blob.clone()).unwrap();
+        });
+        svc.close(session);
+    }
+
+    // Amortization: 5 steps per report (what the trainable does).
+    svc.open(999, "mlp_relu", 1).unwrap();
+    svc.step(999, 1, 0.05, 0.9).unwrap();
+    let svc5 = svc.clone();
+    bench::bench_n("train_step/mlp_relu x5 batched", 3, 30, move || {
+        std::hint::black_box(svc5.step(999, 5, 0.05, 0.9).unwrap().0);
+    });
+    svc.shutdown();
+}

@@ -1,0 +1,90 @@
+//! C3 bench: scaling with cluster size (§4.3.1 / §5 claims).
+//!
+//! (a) 512 short trials on 1..64 simulated nodes: virtual makespan must
+//!     shrink near-linearly; the coordinator's wall time stays flat.
+//! (b) two-level vs centralized placement microbench: local-first
+//!     placement is O(1) per decision vs O(#nodes) for the central
+//!     least-loaded scan — the paper's "avoids any central bottleneck".
+//!
+//! Run: `cargo bench --bench scaling`
+
+use tune::coordinator::spec::SpaceBuilder;
+use tune::coordinator::{
+    run_experiments, ExperimentSpec, Mode, ParamValue, RunOptions, SchedulerKind, SearchKind,
+};
+use tune::ray::{Cluster, Resources, TwoLevelScheduler};
+use tune::trainable::factory;
+use tune::trainable::synthetic::ConstTrainable;
+use tune::util::bench;
+
+fn run_cluster(nodes: usize) -> (f64, f64, u64) {
+    let mut spec = ExperimentSpec::named("scaling");
+    spec.metric = "iters".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = 512;
+    spec.max_iterations_per_trial = 4;
+    let space = SpaceBuilder::new().constant("step_cost", ParamValue::F64(1.0)).build();
+    let t0 = std::time::Instant::now();
+    let res = run_experiments(
+        spec,
+        space,
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        factory(|c, s| Box::new(ConstTrainable::new(c, s))),
+        RunOptions {
+            cluster: Cluster::uniform(nodes, Resources::cpu(4.0)),
+            ..Default::default()
+        },
+    );
+    (res.duration_s, t0.elapsed().as_secs_f64(), res.placement.spilled)
+}
+
+fn main() {
+    println!("== C3(a): 512 trials x 4 iters, 4 cpus/node ==");
+    println!(
+        "{:>6} {:>14} {:>10} {:>12} {:>10}",
+        "nodes", "makespan(vs)", "speedup", "wall(s)", "spilled"
+    );
+    let base = run_cluster(1);
+    println!("{:>6} {:>14.0} {:>10.1} {:>12.3} {:>10}", 1, base.0, 1.0, base.1, base.2);
+    for nodes in [2, 4, 8, 16, 32, 64] {
+        let (makespan, wall, spilled) = run_cluster(nodes);
+        println!(
+            "{:>6} {:>14.0} {:>10.1} {:>12.3} {:>10}",
+            nodes,
+            makespan,
+            base.0 / makespan,
+            wall,
+            spilled
+        );
+    }
+
+    println!("\n== C3(b): placement decision latency, two-level vs centralized ==");
+    bench::header();
+    for nodes in [4usize, 64, 512] {
+        // Fill the cluster half full, then time placements into the
+        // remaining capacity (steady-state decision cost).
+        let demand = Resources::cpu(1.0);
+        bench::bench_n(&format!("two_level/{nodes}_nodes"), 10, 100, || {
+            let mut cluster = Cluster::uniform(nodes, Resources::cpu(8.0));
+            let mut placer = TwoLevelScheduler::new();
+            for _ in 0..nodes * 8 {
+                if placer.place(&mut cluster, 0, &demand).is_none() {
+                    break;
+                }
+            }
+            std::hint::black_box(placer.stats.total());
+        });
+        bench::bench_n(&format!("centralized/{nodes}_nodes"), 10, 100, || {
+            let mut cluster = Cluster::uniform(nodes, Resources::cpu(8.0));
+            let mut placer = TwoLevelScheduler::new();
+            for _ in 0..nodes * 8 {
+                if placer.place_centralized(&mut cluster, &demand).is_none() {
+                    break;
+                }
+            }
+            std::hint::black_box(placer.stats.total());
+        });
+    }
+    println!("\n(expected shape: two-level stays near-flat per placement; centralized grows with node count)");
+}

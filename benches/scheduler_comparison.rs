@@ -1,0 +1,85 @@
+//! C1 bench: regenerate the scheduler-comparison table (quality + budget
+//! per scheduler at matched trial count) and time the full experiment
+//! loop per scheduler — the cost of the coordinator itself, since trial
+//! compute is virtual.
+//!
+//! Run: `cargo bench --bench scheduler_comparison`
+
+use tune::coordinator::spec::SpaceBuilder;
+use tune::coordinator::{
+    run_experiments, ExperimentSpec, Mode, RunOptions, SchedulerKind, SearchKind,
+};
+use tune::ray::{Cluster, Resources};
+use tune::trainable::factory;
+use tune::trainable::synthetic::CurveTrainable;
+use tune::util::bench;
+
+const SAMPLES: usize = 64;
+const MAX_T: u64 = 81;
+
+fn run_one(kind: &SchedulerKind, seed: u64) -> tune::coordinator::ExperimentResult {
+    let space = SpaceBuilder::new()
+        .loguniform("lr", 1e-4, 1.0)
+        .uniform("momentum", 0.8, 0.99)
+        .build();
+    let mut spec = ExperimentSpec::named("bench");
+    spec.metric = "accuracy".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = SAMPLES;
+    spec.max_iterations_per_trial = MAX_T;
+    spec.seed = seed;
+    run_experiments(
+        spec,
+        space,
+        kind.clone(),
+        SearchKind::Random,
+        factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+        RunOptions {
+            cluster: Cluster::uniform(4, Resources::cpu(8.0)),
+            ..Default::default()
+        },
+    )
+}
+
+fn main() {
+    let kinds: Vec<(&str, SchedulerKind)> = vec![
+        ("fifo", SchedulerKind::Fifo),
+        ("median_stopping", SchedulerKind::MedianStopping { grace_period: 8, min_samples: 3 }),
+        ("asha", SchedulerKind::Asha { grace_period: 1, reduction_factor: 3.0, max_t: MAX_T }),
+        ("hyperband", SchedulerKind::HyperBand { max_t: MAX_T, eta: 3.0 }),
+    ];
+
+    println!("== C1 table: {SAMPLES} trials, max_t={MAX_T} (virtual time) ==");
+    println!(
+        "{:<18} {:>10} {:>12} {:>10} {:>10} {:>14}",
+        "scheduler", "best acc", "budget(s)", "stopped", "results", "decision ns/res"
+    );
+    let mut fifo_budget = 0.0;
+    for (name, kind) in &kinds {
+        let res = run_one(kind, 7);
+        if *name == "fifo" {
+            fifo_budget = res.budget_used_s;
+        }
+        println!(
+            "{:<18} {:>10.4} {:>12.0} {:>10} {:>10} {:>14.0}",
+            name,
+            res.best_metric().unwrap_or(0.0),
+            res.budget_used_s,
+            res.stats.stopped_early,
+            res.stats.results,
+            res.stats.decision_ns as f64 / res.stats.results.max(1) as f64,
+        );
+    }
+    println!("(fifo budget reference: {fifo_budget:.0}s)\n");
+
+    println!("== wall time of the full coordinator loop per scheduler ==");
+    bench::header();
+    for (name, kind) in &kinds {
+        let mut seed = 0;
+        bench::bench_n(&format!("experiment/{name}"), 1, 10, || {
+            seed += 1;
+            let r = run_one(kind, seed);
+            std::hint::black_box(r.stats.results);
+        });
+    }
+}

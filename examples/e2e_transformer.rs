@@ -1,0 +1,123 @@
+//! End-to-end model-selection driver (the E2E experiment of DESIGN.md):
+//! ASHA over {lr, momentum, activation} of the transformer language
+//! model — every layer of the stack composing on a real workload:
+//!
+//!   L1 Pallas fused-linear + attention kernels
+//!     -> L2 JAX fwd/bwd/SGD-momentum train step
+//!       -> AOT HLO text -> PJRT CPU executable
+//!         -> L3 rust coordinator (ASHA, checkpoints, ray substrate)
+//!
+//! 12 trials, up to 60 reported iterations x 5 train steps = 300 PJRT
+//! steps for surviving trials; ASHA culls the rest at rungs 3/9/27.
+//! Loss curves land in tune_logs/e2e_transformer/ and the summary is
+//! recorded in EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_transformer`
+
+use tune::coordinator::spec::SpaceBuilder;
+use tune::coordinator::{
+    run_experiments, ExecMode, ExperimentSpec, Mode, RunOptions, SchedulerKind, SearchKind,
+};
+use tune::logger::ExperimentAnalysis;
+use tune::ray::{Cluster, Resources};
+use tune::runtime::{Manifest, PjrtService};
+use tune::trainable::jax_model::jax_factory;
+
+fn main() {
+    let artifacts = Manifest::default_dir();
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("artifacts missing: run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let manifest = Manifest::load(&artifacts).unwrap();
+    let tlm = manifest.model("tlm_gelu").unwrap();
+    println!(
+        "transformer LM: {} params, batch {}, vocab {} (Pallas attention + fused-linear inside)",
+        tlm.param_count,
+        tlm.batch,
+        tlm.meta.get("vocab").and_then(|v| v.as_u64()).unwrap_or(0)
+    );
+
+    let svc = PjrtService::spawn(artifacts).expect("spawn PJRT service");
+
+    let space = SpaceBuilder::new()
+        .loguniform("lr", 3e-3, 1.0)
+        .uniform("momentum", 0.5, 0.99)
+        .choice_str("activation", &["gelu", "relu"])
+        .build();
+
+    let mut spec = ExperimentSpec::named("e2e_transformer");
+    spec.metric = "loss".into();
+    spec.mode = Mode::Min;
+    spec.num_samples = 12;
+    spec.max_iterations_per_trial = 60; // x5 = 300 PJRT steps max
+    spec.checkpoint_freq = 9;
+    spec.max_concurrent = 4;
+    spec.seed = 1;
+
+    let t0 = std::time::Instant::now();
+    let res = run_experiments(
+        spec,
+        space,
+        SchedulerKind::Asha { grace_period: 3, reduction_factor: 3.0, max_t: 60 },
+        SearchKind::Random,
+        jax_factory(svc.clone(), "tlm", 5),
+        RunOptions {
+            cluster: Cluster::uniform(1, Resources::cpu(4.0)),
+            exec: ExecMode::Threads,
+            progress_every: 50,
+            log_dir: Some("tune_logs/e2e_transformer".into()),
+        },
+    );
+    svc.shutdown();
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n=== e2e transformer model selection ===");
+    println!("wall time            : {wall:.1}s");
+    println!("trials               : {}", res.trials.len());
+    println!(
+        "completed / stopped  : {} / {}",
+        res.stats.completed, res.stats.stopped_early
+    );
+    println!(
+        "total PJRT steps     : {} (x5 per iteration)",
+        res.total_iterations() * 5
+    );
+    println!("checkpoints/restores : {}/{}", res.stats.checkpoints, res.stats.restores);
+
+    println!("\n{:<52} {:>6} {:>9} {:>10}", "config", "iters", "status", "final loss");
+    for t in res.trials.values() {
+        println!(
+            "{:<52} {:>6} {:>9} {:>10}",
+            tune::coordinator::trial::config_str(&t.config),
+            t.iteration,
+            format!("{:?}", t.status),
+            t.last_result
+                .as_ref()
+                .and_then(|r| r.metric("loss"))
+                .map(|l| format!("{l:.3}"))
+                .unwrap_or_else(|| "-".into()),
+        );
+    }
+
+    let best = res.best.expect("a best trial");
+    println!(
+        "\nbest trial #{best}: loss {:.4} [{}]",
+        res.best_metric().unwrap(),
+        tune::coordinator::trial::config_str(&res.trials[&best].config)
+    );
+
+    // Print the winner's loss curve from the JSONL logs.
+    let a = ExperimentAnalysis::load(std::path::Path::new("tune_logs/e2e_transformer")).unwrap();
+    if let Some(rec) = a.trials.get(&best) {
+        println!("\nbest-trial loss curve (iteration -> loss; ln(128)=4.85 init, chain entropy ln(4)=1.39):");
+        let step = (rec.rows.len() / 12).max(1);
+        for (iter, _, m) in rec.rows.iter().step_by(step) {
+            if let Some(l) = m.get("loss") {
+                let bar = "#".repeat((l * 12.0) as usize);
+                println!("  iter {iter:>4}  loss {l:>7.3}  {bar}");
+            }
+        }
+    }
+    println!("\nlogs: tune_logs/e2e_transformer");
+}

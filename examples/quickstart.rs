@@ -1,0 +1,88 @@
+//! Quickstart — the paper's §4.3 minimal example, on real compute:
+//!
+//! ```python
+//! tune.run_experiments(my_func, {
+//!     "lr": tune.grid_search([0.01, 0.001, 0.0001]),
+//!     "activation": tune.grid_search(["relu", "tanh"]),
+//! }, scheduler=HyperBand)
+//! ```
+//!
+//! Here `my_func` is the AOT-compiled JAX MLP (L2) with Pallas
+//! fused-linear kernels (L1), trained through PJRT from the rust
+//! coordinator (L3). Falls back to the synthetic curve workload when
+//! artifacts are absent.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use tune::coordinator::spec::SpaceBuilder;
+use tune::coordinator::{
+    run_experiments, ExecMode, ExperimentSpec, Mode, RunOptions, SchedulerKind, SearchKind,
+};
+use tune::ray::{Cluster, Resources};
+use tune::runtime::{Manifest, PjrtService};
+use tune::trainable::jax_model::jax_factory;
+use tune::trainable::{factory, synthetic::CurveTrainable};
+
+fn main() {
+    let space = SpaceBuilder::new()
+        .grid_f64("lr", &[0.1, 0.01, 0.001]) // MLP's useful range
+        .grid_str("activation", &["relu", "tanh"])
+        .build();
+
+    let mut spec = ExperimentSpec::named("quickstart");
+    spec.metric = "loss".into();
+    spec.mode = Mode::Min;
+    spec.max_iterations_per_trial = 9; // 9 reports x 5 PJRT steps
+    spec.checkpoint_freq = 3;
+
+    let artifacts = Manifest::default_dir();
+    let (fac, exec) = if artifacts.join("manifest.json").exists() {
+        println!("using AOT JAX/Pallas MLP via PJRT ({artifacts:?})");
+        let svc = PjrtService::spawn(artifacts).expect("spawn PJRT service");
+        (jax_factory(svc, "mlp", 5), ExecMode::Threads)
+    } else {
+        println!("artifacts missing — falling back to synthetic curves (run `make artifacts`)");
+        spec.metric = "accuracy".into();
+        spec.mode = Mode::Max;
+        (
+            factory(|c: &tune::coordinator::Config, s: u64| {
+                Box::new(CurveTrainable::new(c, s)) as Box<dyn tune::trainable::Trainable>
+            }),
+            ExecMode::Sim,
+        )
+    };
+
+    let res = run_experiments(
+        spec,
+        space,
+        SchedulerKind::HyperBand { max_t: 9, eta: 3.0 },
+        SearchKind::Grid,
+        fac,
+        RunOptions {
+            cluster: Cluster::uniform(1, Resources::cpu(4.0)),
+            exec,
+            progress_every: 10,
+            log_dir: Some("tune_logs/quickstart".into()),
+        },
+    );
+
+    println!("\n=== quickstart: 3x2 grid under HyperBand ===");
+    println!("{:<40} {:>8} {:>10} {:>12}", "config", "iters", "status", "best metric");
+    for t in res.trials.values() {
+        println!(
+            "{:<40} {:>8} {:>10} {:>12}",
+            tune::coordinator::trial::config_str(&t.config),
+            t.iteration,
+            format!("{:?}", t.status),
+            t.best_metric.map(|m| format!("{m:.4}")).unwrap_or_else(|| "-".into()),
+        );
+    }
+    if let Some(best) = res.best {
+        println!(
+            "\nbest: trial #{best} [{}] -> {:.4}",
+            tune::coordinator::trial::config_str(&res.trials[&best].config),
+            res.best_metric().unwrap()
+        );
+    }
+    println!("logs: tune_logs/quickstart (try `tune analyze --log-dir tune_logs/quickstart`)");
+}

@@ -1,0 +1,123 @@
+//! Scheduler shootout (C1, figure-equivalent): best-found accuracy as a
+//! function of consumed training budget for FIFO / median stopping /
+//! ASHA / HyperBand, averaged over seeds, on 96 random-search trials of
+//! the synthetic curve workload. The expected *shape* (from the
+//! HyperBand/ASHA papers): early-stopping schedulers reach a given
+//! quality with a fraction of FIFO's budget; ASHA ~ HyperBand.
+//!
+//! Run: `cargo run --release --example scheduler_shootout`
+
+use tune::coordinator::spec::SpaceBuilder;
+use tune::coordinator::{
+    run_experiments, ExperimentSpec, Mode, RunOptions, SchedulerKind, SearchKind,
+};
+use tune::ray::{Cluster, Resources};
+use tune::trainable::factory;
+use tune::trainable::synthetic::CurveTrainable;
+
+const SAMPLES: usize = 96;
+const MAX_T: u64 = 81;
+const SEEDS: [u64; 3] = [1, 2, 3];
+
+fn kinds(space: &tune::coordinator::spec::SearchSpace) -> Vec<(&'static str, SchedulerKind)> {
+    let _ = space;
+    vec![
+        ("fifo", SchedulerKind::Fifo),
+        ("median_stopping", SchedulerKind::MedianStopping { grace_period: 8, min_samples: 3 }),
+        ("asha", SchedulerKind::Asha { grace_period: 1, reduction_factor: 3.0, max_t: MAX_T }),
+        ("hyperband", SchedulerKind::HyperBand { max_t: MAX_T, eta: 3.0 }),
+    ]
+}
+
+fn main() {
+    let space = SpaceBuilder::new()
+        .loguniform("lr", 1e-4, 1.0)
+        .uniform("momentum", 0.8, 0.99)
+        .build();
+
+    println!(
+        "C1 shootout: {} random trials, max_t={}, {} seeds (virtual time)\n",
+        SAMPLES,
+        MAX_T,
+        SEEDS.len()
+    );
+    println!(
+        "{:<18} {:>10} {:>12} {:>12} {:>9} {:>10}",
+        "scheduler", "best acc", "budget(s)", "vs fifo", "stopped", "results"
+    );
+    println!("{}", "-".repeat(78));
+
+    let mut fifo_budget = 0.0;
+    let mut curves: Vec<(&'static str, Vec<(f64, f64)>)> = Vec::new();
+    for (name, kind) in kinds(&space) {
+        let mut best_acc = 0.0;
+        let mut budget = 0.0;
+        let mut stopped = 0u64;
+        let mut results = 0u64;
+        let mut curve: Vec<(f64, f64)> = Vec::new();
+        for seed in SEEDS {
+            let mut spec = ExperimentSpec::named(&format!("shootout-{name}-{seed}"));
+            spec.metric = "accuracy".into();
+            spec.mode = Mode::Max;
+            spec.num_samples = SAMPLES;
+            spec.max_iterations_per_trial = MAX_T;
+            spec.seed = seed;
+            let res = run_experiments(
+                spec,
+                space.clone(),
+                kind.clone(),
+                SearchKind::Random,
+                factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+                RunOptions {
+                    cluster: Cluster::uniform(4, Resources::cpu(8.0)),
+                    ..Default::default()
+                },
+            );
+            best_acc += res.best_metric().unwrap_or(0.0);
+            budget += res.budget_used_s;
+            stopped += res.stats.stopped_early;
+            results += res.stats.results;
+            if seed == SEEDS[0] {
+                curve = res.best_curve.clone();
+            }
+        }
+        let n = SEEDS.len() as f64;
+        best_acc /= n;
+        budget /= n;
+        if name == "fifo" {
+            fifo_budget = budget;
+        }
+        println!(
+            "{:<18} {:>10.4} {:>12.0} {:>11.1}x {:>9} {:>10}",
+            name,
+            best_acc,
+            budget,
+            fifo_budget / budget,
+            stopped / SEEDS.len() as u64,
+            results / SEEDS.len() as u64
+        );
+        curves.push((name, curve));
+    }
+
+    // Best-found-vs-time curves (the "figure"): sampled at fixed times.
+    println!("\nbest accuracy vs experiment time (seed {}):", SEEDS[0]);
+    print!("{:>8}", "t(s)");
+    for (name, _) in &curves {
+        print!(" {name:>16}");
+    }
+    println!();
+    for t in [10.0, 25.0, 50.0, 100.0, 200.0, 400.0] {
+        print!("{t:>8.0}");
+        for (_, curve) in &curves {
+            let v = curve
+                .iter()
+                .take_while(|(ct, _)| *ct <= t)
+                .last()
+                .map(|(_, v)| *v)
+                .unwrap_or(0.0);
+            print!(" {v:>16.4}");
+        }
+        println!();
+    }
+    println!("\n(expected shape: asha/hyperband reach the fifo asymptote with 3-20x less budget)");
+}

@@ -1,0 +1,136 @@
+"""AOT lowering: JAX train/init functions -> HLO *text* artifacts + manifest.
+
+HLO text (NOT `.serialize()`): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the rust side's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the HLO text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/gen_hlo.py).
+
+For every model variant in model.variants() this writes:
+    artifacts/<name>_train.hlo.txt   train_step_flat(state.., batch.., lr, mu)
+                                       -> (state'.., loss, metric..)
+    artifacts/<name>_init.hlo.txt    init_flat(seed: i32) -> (state..,)
+and one artifacts/manifest.json describing, per variant, the exact state
+array order/shapes/dtypes, batch inputs, scalar hyperparameter inputs, and
+metric output names — everything the rust runtime needs to drive the
+executables without ever importing python.
+
+Run via `make artifacts`; python never runs on the request path.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_train_flat(variant):
+    """Flat-signature train step: (*state, *batch, lr, momentum) -> tuple."""
+    n = len(variant["param_spec"])
+    nb = len(variant["batch_inputs"])
+    step = M.make_train_step(variant["loss_fn"])
+    metric_names = [m for m in variant["metrics"] if m != "loss"]
+
+    def train_flat(*args):
+        params = list(args[:n])
+        vels = list(args[n:2 * n])
+        batch = args[2 * n:2 * n + nb]
+        lr, momentum = args[2 * n + nb], args[2 * n + nb + 1]
+        new_p, new_v, loss, metrics = step(params, vels, batch, lr, momentum)
+        extra = [metrics[m] for m in metric_names]
+        return tuple(new_p + new_v + [loss] + extra)
+
+    return train_flat
+
+
+def build_init_flat(variant):
+    def init_flat(seed):
+        params = variant["init"](seed)
+        vels = [jnp.zeros_like(p) for p in params]
+        return tuple(params + vels)
+
+    return init_flat
+
+
+def example_args(variant):
+    """ShapeDtypeStructs matching train_flat's signature."""
+    state = [jax.ShapeDtypeStruct(shape, jnp.float32)
+             for _, shape in variant["param_spec"]] * 2
+    batch = [jax.ShapeDtypeStruct(shape, _DTYPES[dt])
+             for _, shape, dt in variant["batch_inputs"]]
+    scalars = [jax.ShapeDtypeStruct((), jnp.float32)] * 2
+    return state + batch + scalars
+
+
+def lower_variant(name, variant, outdir):
+    train_path = os.path.join(outdir, f"{name}_train.hlo.txt")
+    init_path = os.path.join(outdir, f"{name}_init.hlo.txt")
+
+    lowered = jax.jit(build_train_flat(variant)).lower(*example_args(variant))
+    with open(train_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    lowered = jax.jit(build_init_flat(variant)).lower(
+        jax.ShapeDtypeStruct((), jnp.int32))
+    with open(init_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    spec = variant["param_spec"]
+    n_params = sum(int(jnp.prod(jnp.array(s))) for _, s in spec)
+    return {
+        "train_hlo": os.path.basename(train_path),
+        "init_hlo": os.path.basename(init_path),
+        # state = params then velocities, identical shapes.
+        "state": [{"name": n_, "shape": list(s)} for n_, s in spec],
+        "batch_inputs": [{"name": n_, "shape": list(s), "dtype": dt}
+                         for n_, s, dt in variant["batch_inputs"]],
+        "scalars": ["lr", "momentum"],
+        "metrics": variant["metrics"],
+        "param_count": n_params,
+        "meta": variant["meta"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/manifest.json",
+                    help="manifest path; HLO files land beside it")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated variant names (default: all)")
+    args = ap.parse_args()
+    outdir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(outdir, exist_ok=True)
+
+    manifest = {"models": {}}
+    names = args.only.split(",") if args.only else None
+    for name, variant in M.variants().items():
+        if names and name not in names:
+            continue
+        print(f"lowering {name} ...", flush=True)
+        manifest["models"][name] = lower_variant(name, variant, outdir)
+
+    with open(args.out, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    sizes = {m: os.path.getsize(os.path.join(outdir, v["train_hlo"]))
+             for m, v in manifest["models"].items()}
+    print(f"wrote {args.out}; train HLO sizes: {sizes}")
+
+
+if __name__ == "__main__":
+    main()

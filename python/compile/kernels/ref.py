@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package
+must match its oracle to float32 tolerance under pytest (see
+python/tests/test_kernel.py). They are also used as the backward pass of
+the custom_vjp wrappers, so gradients are exact regardless of kernel
+implementation details.
+"""
+
+import jax
+import jax.numpy as jnp
+
+ACTIVATIONS = {
+    "linear": lambda x: x,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+    "gelu": jax.nn.gelu,
+}
+
+
+def fused_linear_ref(x, w, b, activation="linear"):
+    """Oracle for kernels.fused_linear: act(x @ w + b).
+
+    x: f32[M, K], w: f32[K, N], b: f32[N] -> f32[M, N]
+    """
+    act = ACTIVATIONS[activation]
+    return act(jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :])
+
+
+def attention_ref(q, k, v, causal=True):
+    """Oracle for kernels.attention: scaled dot-product attention.
+
+    q, k, v: f32[B, H, S, D] -> f32[B, H, S, D]
+    """
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k) * scale
+    if causal:
+        s = q.shape[2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v)

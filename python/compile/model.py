@@ -1,0 +1,229 @@
+"""L2: trial workloads as JAX compute graphs, calling the L1 Pallas kernels.
+
+Two model families (the paper's trials are arbitrary training scripts; we
+ship two representative ones):
+
+  * MLP classifier   — the quickstart workload (grid search over lr x
+    activation, mirroring the paper's §4.3 example).
+  * Transformer LM   — the end-to-end model-selection workload (ASHA over
+    lr / momentum / activation on a ~0.9M-param causal LM).
+
+Each model exposes:
+  init(seed)                      -> params               (list of arrays)
+  loss_fn(params, *batch)         -> (loss, metrics_dict)
+
+and `make_train_step` composes them into one fused fwd+bwd+SGD-momentum
+update — the single jitted function that is AOT-lowered to HLO text and
+executed from the rust runtime. Hyperparameters that trial schedulers
+mutate at runtime (lr, momentum) are *runtime scalar inputs*, so one
+compiled artifact serves every trial of a variant; the discrete
+`activation` choice selects between compiled variants.
+
+State layout: state = params + velocities (same shapes, velocities zero at
+init). SGD-momentum: v' = mu * v + g ; p' = p - lr * v'.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+from .kernels.fused_linear import fused_linear
+
+# ---------------------------------------------------------------------------
+# MLP classifier
+# ---------------------------------------------------------------------------
+
+MLP_DIMS = (32, 64, 64, 10)
+MLP_BATCH = 64
+
+
+def mlp_param_spec(dims=MLP_DIMS):
+    spec = []
+    for i in range(len(dims) - 1):
+        spec.append((f"w{i}", (dims[i], dims[i + 1])))
+        spec.append((f"b{i}", (dims[i + 1],)))
+    return spec
+
+
+def mlp_init(seed, dims=MLP_DIMS):
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for i in range(len(dims) - 1):
+        key, wk = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / dims[i])
+        params.append(jax.random.normal(wk, (dims[i], dims[i + 1]), jnp.float32) * scale)
+        params.append(jnp.zeros((dims[i + 1],), jnp.float32))
+    return params
+
+
+def mlp_apply(params, x, activation):
+    """Hidden layers use the fused Pallas kernel; the head is linear."""
+    n_layers = len(params) // 2
+    h = x
+    for i in range(n_layers):
+        w, b = params[2 * i], params[2 * i + 1]
+        act = activation if i < n_layers - 1 else "linear"
+        h = fused_linear(h, w, b, act)
+    return h
+
+
+def mlp_loss(params, x, y, activation):
+    logits = mlp_apply(params, x, activation)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, {"accuracy": acc}
+
+
+# ---------------------------------------------------------------------------
+# Transformer language model
+# ---------------------------------------------------------------------------
+
+TLM_CONFIG = dict(vocab=128, d_model=128, n_heads=4, d_ff=256, n_layers=2, seq=64)
+TLM_BATCH = 8
+
+
+def tlm_param_spec(cfg=TLM_CONFIG):
+    v, d, f, s = cfg["vocab"], cfg["d_model"], cfg["d_ff"], cfg["seq"]
+    spec = [("embed", (v, d)), ("pos", (s, d))]
+    for l in range(cfg["n_layers"]):
+        spec += [
+            (f"l{l}.ln1_s", (d,)), (f"l{l}.ln1_b", (d,)),
+            (f"l{l}.wq", (d, d)), (f"l{l}.wk", (d, d)),
+            (f"l{l}.wv", (d, d)), (f"l{l}.wo", (d, d)), (f"l{l}.bo", (d,)),
+            (f"l{l}.ln2_s", (d,)), (f"l{l}.ln2_b", (d,)),
+            (f"l{l}.wf1", (d, f)), (f"l{l}.bf1", (f,)),
+            (f"l{l}.wf2", (f, d)), (f"l{l}.bf2", (d,)),
+        ]
+    spec += [("lnf_s", (d,)), ("lnf_b", (d,)), ("unembed", (d, v))]
+    return spec
+
+
+def tlm_init(seed, cfg=TLM_CONFIG):
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in tlm_param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("_s"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("_b", ".bo", ".bf1", ".bf2")):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            scale = jnp.sqrt(1.0 / shape[0])
+            params.append(jax.random.normal(sub, shape, jnp.float32) * scale)
+    return params
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def tlm_apply(params, tokens, activation, cfg=TLM_CONFIG):
+    """tokens: i32[B, S] -> logits f32[B, S, V]."""
+    names = [n for n, _ in tlm_param_spec(cfg)]
+    p = dict(zip(names, params))
+    b, s = tokens.shape
+    d, h = cfg["d_model"], cfg["n_heads"]
+    dh = d // h
+    x = p["embed"][tokens] + p["pos"][None, :s, :]
+    zero_d = jnp.zeros((d,), jnp.float32)
+    for l in range(cfg["n_layers"]):
+        pre = f"l{l}."
+        hx = _layer_norm(x, p[pre + "ln1_s"], p[pre + "ln1_b"])
+        flat = hx.reshape(b * s, d)
+        q = fused_linear(flat, p[pre + "wq"], zero_d, "linear")
+        k = fused_linear(flat, p[pre + "wk"], zero_d, "linear")
+        v = fused_linear(flat, p[pre + "wv"], zero_d, "linear")
+        q = q.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        k = k.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        v = v.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        o = attention(q, k, v, True)
+        o = o.transpose(0, 2, 1, 3).reshape(b * s, d)
+        o = fused_linear(o, p[pre + "wo"], p[pre + "bo"], "linear")
+        x = x + o.reshape(b, s, d)
+        hx = _layer_norm(x, p[pre + "ln2_s"], p[pre + "ln2_b"]).reshape(b * s, d)
+        ff = fused_linear(hx, p[pre + "wf1"], p[pre + "bf1"], activation)
+        ff = fused_linear(ff, p[pre + "wf2"], p[pre + "bf2"], "linear")
+        x = x + ff.reshape(b, s, d)
+    x = _layer_norm(x, p["lnf_s"], p["lnf_b"])
+    return jnp.einsum("bsd,dv->bsv", x, p["unembed"])
+
+
+def tlm_loss(params, tokens, activation, cfg=TLM_CONFIG):
+    """tokens: i32[B, S+1]; next-token cross-entropy over positions 0..S-1."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = tlm_apply(params, inp, activation, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[:, :, None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == tgt).astype(jnp.float32))
+    return loss, {"accuracy": acc}
+
+
+# ---------------------------------------------------------------------------
+# Generic fused train step (fwd + bwd + SGD-momentum)
+# ---------------------------------------------------------------------------
+
+def make_train_step(loss_fn):
+    """loss_fn(params, *batch) -> (loss, metrics). Returns
+    train_step(params, velocities, batch, lr, momentum)
+      -> (params', velocities', loss, metrics)."""
+
+    def train_step(params, velocities, batch, lr, momentum):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, *batch)
+        new_v = [momentum * v + g for v, g in zip(velocities, grads)]
+        new_p = [p - lr * v for p, v in zip(params, new_v)]
+        return new_p, new_v, loss, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Variant registry consumed by aot.py
+# ---------------------------------------------------------------------------
+
+def _mlp_loss_for(act):
+    def f(params, x, y):
+        return mlp_loss(params, x, y, act)
+    return f
+
+
+def _tlm_loss_for(act):
+    def f(params, tokens):
+        return tlm_loss(params, tokens, act)
+    return f
+
+
+def variants():
+    """name -> dict(init, loss_fn, param_spec, batch_inputs, metrics, meta).
+
+    batch_inputs: ordered [(name, shape, dtype-str)] fed after the state
+    arrays; `lr` and `momentum` f32 scalars always follow the batch.
+    """
+    out = {}
+    for act in ("relu", "tanh"):
+        out[f"mlp_{act}"] = dict(
+            init=mlp_init,
+            loss_fn=_mlp_loss_for(act),
+            param_spec=mlp_param_spec(),
+            batch_inputs=[("x", (MLP_BATCH, MLP_DIMS[0]), "f32"),
+                          ("y", (MLP_BATCH,), "i32")],
+            metrics=["loss", "accuracy"],
+            meta=dict(kind="mlp", activation=act, dims=list(MLP_DIMS),
+                      batch=MLP_BATCH),
+        )
+    for act in ("gelu", "relu"):
+        out[f"tlm_{act}"] = dict(
+            init=tlm_init,
+            loss_fn=_tlm_loss_for(act),
+            param_spec=tlm_param_spec(),
+            batch_inputs=[("tokens", (TLM_BATCH, TLM_CONFIG["seq"] + 1), "i32")],
+            metrics=["loss", "accuracy"],
+            meta=dict(kind="transformer_lm", activation=act, batch=TLM_BATCH,
+                      **TLM_CONFIG),
+        )
+    return out

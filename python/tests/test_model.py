@@ -1,0 +1,169 @@
+"""L2 model tests: shapes, loss behaviour, train-step semantics, and the
+flat AOT signatures consumed by the rust runtime."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+
+def mlp_batch(seed=0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (M.MLP_BATCH, M.MLP_DIMS[0]))
+    y = jax.random.randint(jax.random.PRNGKey(seed + 1), (M.MLP_BATCH,), 0, M.MLP_DIMS[-1])
+    return x, y
+
+
+def tlm_batch(seed=0):
+    return (jax.random.randint(jax.random.PRNGKey(seed),
+                               (M.TLM_BATCH, M.TLM_CONFIG["seq"] + 1),
+                               0, M.TLM_CONFIG["vocab"]),)
+
+
+# ---------------------------------------------------------------------------
+# init / apply shapes
+# ---------------------------------------------------------------------------
+
+def test_mlp_init_matches_spec():
+    params = M.mlp_init(0)
+    spec = M.mlp_param_spec()
+    assert len(params) == len(spec)
+    for p, (name, shape) in zip(params, spec):
+        assert p.shape == shape, name
+        assert p.dtype == jnp.float32
+
+
+def test_tlm_init_matches_spec():
+    params = M.tlm_init(0)
+    spec = M.tlm_param_spec()
+    assert len(params) == len(spec)
+    for p, (name, shape) in zip(params, spec):
+        assert p.shape == shape, name
+
+
+def test_init_seeds_differ():
+    a, b = M.mlp_init(0), M.mlp_init(1)
+    assert not np.allclose(a[0], b[0])
+    a, b = M.tlm_init(0), M.tlm_init(7)
+    assert not np.allclose(a[0], b[0])
+
+
+def test_mlp_apply_shape():
+    logits = M.mlp_apply(M.mlp_init(0), mlp_batch()[0], "relu")
+    assert logits.shape == (M.MLP_BATCH, M.MLP_DIMS[-1])
+
+
+def test_tlm_apply_shape():
+    toks = tlm_batch()[0][:, :-1]
+    logits = M.tlm_apply(M.tlm_init(0), toks, "gelu")
+    assert logits.shape == (M.TLM_BATCH, M.TLM_CONFIG["seq"], M.TLM_CONFIG["vocab"])
+
+
+# ---------------------------------------------------------------------------
+# loss semantics
+# ---------------------------------------------------------------------------
+
+def test_mlp_initial_loss_near_uniform():
+    loss, _ = M.mlp_loss(M.mlp_init(0), *mlp_batch(), "relu")
+    assert abs(float(loss) - np.log(M.MLP_DIMS[-1])) < 0.7
+
+
+def test_tlm_initial_loss_near_uniform():
+    loss, _ = M.tlm_loss(M.tlm_init(0), tlm_batch()[0], "gelu")
+    assert abs(float(loss) - np.log(M.TLM_CONFIG["vocab"])) < 1.0
+
+
+@pytest.mark.parametrize("variant", ["mlp_relu", "mlp_tanh"])
+def test_mlp_train_step_decreases_loss(variant):
+    var = M.variants()[variant]
+    step = M.make_train_step(var["loss_fn"])
+    params = var["init"](0)
+    vels = [jnp.zeros_like(p) for p in params]
+    batch = mlp_batch()
+    first = None
+    for _ in range(15):
+        params, vels, loss, _ = step(params, vels, batch, 0.1, 0.9)
+        first = first if first is not None else float(loss)
+    assert float(loss) < first * 0.5
+
+
+def test_tlm_train_step_decreases_loss():
+    var = M.variants()["tlm_gelu"]
+    step = jax.jit(lambda p, v, b, lr, mu: M.make_train_step(var["loss_fn"])(p, v, b, lr, mu))
+    params = var["init"](0)
+    vels = [jnp.zeros_like(p) for p in params]
+    batch = tlm_batch()
+    first = None
+    for _ in range(10):
+        params, vels, loss, _ = step(params, vels, batch, 0.1, 0.9)
+        first = first if first is not None else float(loss)
+    assert float(loss) < first
+
+
+def test_momentum_zero_equals_sgd():
+    var = M.variants()["mlp_relu"]
+    step = M.make_train_step(var["loss_fn"])
+    params = var["init"](0)
+    vels = [jnp.zeros_like(p) for p in params]
+    batch = mlp_batch()
+    (loss, _), grads = jax.value_and_grad(var["loss_fn"], has_aux=True)(params, *batch)
+    new_p, new_v, _, _ = step(params, vels, batch, 0.05, 0.0)
+    for p, g, np_ in zip(params, grads, new_p):
+        np.testing.assert_allclose(np_, p - 0.05 * g, rtol=1e-6, atol=1e-7)
+
+
+def test_lr_is_runtime_input():
+    """Same compiled step, different lr scalars -> different updates."""
+    var = M.variants()["mlp_relu"]
+    step = M.make_train_step(var["loss_fn"])
+    params = var["init"](0)
+    vels = [jnp.zeros_like(p) for p in params]
+    batch = mlp_batch()
+    a, _, _, _ = step(params, vels, batch, 0.01, 0.9)
+    b, _, _, _ = step(params, vels, batch, 0.5, 0.9)
+    assert not np.allclose(a[0], b[0])
+
+
+# ---------------------------------------------------------------------------
+# flat AOT signatures (what rust actually calls)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", list(M.variants().keys()))
+def test_flat_train_signature(name):
+    var = M.variants()[name]
+    flat = aot.build_train_flat(var)
+    n = len(var["param_spec"])
+    params = var["init"](0)
+    vels = [jnp.zeros_like(p) for p in params]
+    batch = mlp_batch() if var["meta"]["kind"] == "mlp" else tlm_batch()
+    out = flat(*params, *vels, *batch, jnp.float32(0.1), jnp.float32(0.9))
+    assert len(out) == 2 * n + len(var["metrics"])
+    for o, p in zip(out[:n], params):
+        assert o.shape == p.shape
+    loss = out[2 * n]
+    assert loss.shape == ()
+
+
+@pytest.mark.parametrize("name", list(M.variants().keys()))
+def test_flat_init_signature(name):
+    var = M.variants()[name]
+    flat = aot.build_init_flat(var)
+    out = flat(jnp.int32(3))
+    n = len(var["param_spec"])
+    assert len(out) == 2 * n
+    for v in out[n:]:
+        assert float(jnp.abs(v).sum()) == 0.0  # velocities start at zero
+
+
+def test_example_args_match_flat():
+    var = M.variants()["mlp_relu"]
+    args = aot.example_args(var)
+    assert len(args) == 2 * len(var["param_spec"]) + len(var["batch_inputs"]) + 2
+
+
+def test_flat_train_is_lowerable():
+    var = M.variants()["mlp_relu"]
+    lowered = jax.jit(aot.build_train_flat(var)).lower(*aot.example_args(var))
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and len(text) > 1000

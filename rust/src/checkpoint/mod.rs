@@ -1,0 +1,152 @@
+//! Checkpoint management. Per the paper (§4.2), Tune keeps trial
+//! metadata in memory and relies on checkpoints for fault tolerance;
+//! schedulers "save and clone promising parameters (via checkpoint and
+//! restore)". Checkpoints are opaque byte blobs produced by
+//! `Trainable::save`; the store keeps them in memory and can optionally
+//! spill every write to disk for post-mortem restore.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+pub type CheckpointId = u64;
+
+#[derive(Clone, Debug)]
+pub struct CheckpointMeta {
+    pub id: CheckpointId,
+    pub trial: u64,
+    pub iteration: u64,
+    pub bytes: usize,
+}
+
+#[derive(Debug, Default)]
+pub struct CheckpointStore {
+    next_id: CheckpointId,
+    data: BTreeMap<CheckpointId, Vec<u8>>,
+    meta: BTreeMap<CheckpointId, CheckpointMeta>,
+    /// Latest checkpoint per trial (what PBT exploit clones).
+    latest: BTreeMap<u64, CheckpointId>,
+    disk_dir: Option<PathBuf>,
+    /// Keep at most this many checkpoints per trial (0 = unbounded).
+    pub keep_per_trial: usize,
+    pub saved: u64,
+    pub restored: u64,
+}
+
+impl CheckpointStore {
+    pub fn new() -> Self {
+        CheckpointStore { next_id: 1, keep_per_trial: 2, ..Default::default() }
+    }
+
+    /// Also persist every checkpoint under `dir` (for `analyze`/restart).
+    pub fn with_disk(mut self, dir: PathBuf) -> Self {
+        std::fs::create_dir_all(&dir).ok();
+        self.disk_dir = Some(dir);
+        self
+    }
+
+    pub fn save(&mut self, trial: u64, iteration: u64, blob: Vec<u8>) -> CheckpointId {
+        let id = self.next_id;
+        self.next_id += 1;
+        if let Some(dir) = &self.disk_dir {
+            let path = dir.join(format!("trial{trial}_iter{iteration}_ckpt{id}.bin"));
+            std::fs::write(path, &blob).ok();
+        }
+        self.meta.insert(id, CheckpointMeta { id, trial, iteration, bytes: blob.len() });
+        self.data.insert(id, blob);
+        self.latest.insert(trial, id);
+        self.saved += 1;
+        self.gc(trial);
+        id
+    }
+
+    pub fn get(&mut self, id: CheckpointId) -> Option<&[u8]> {
+        let found = self.data.get(&id).map(|v| v.as_slice());
+        if found.is_some() {
+            self.restored += 1;
+        }
+        found
+    }
+
+    pub fn meta(&self, id: CheckpointId) -> Option<&CheckpointMeta> {
+        self.meta.get(&id)
+    }
+
+    pub fn latest_for(&self, trial: u64) -> Option<CheckpointId> {
+        self.latest.get(&trial).copied()
+    }
+
+    /// Drop all but the newest `keep_per_trial` checkpoints of `trial`.
+    fn gc(&mut self, trial: u64) {
+        if self.keep_per_trial == 0 {
+            return;
+        }
+        let mut ids: Vec<CheckpointId> = self
+            .meta
+            .values()
+            .filter(|m| m.trial == trial)
+            .map(|m| m.id)
+            .collect();
+        ids.sort();
+        while ids.len() > self.keep_per_trial {
+            let old = ids.remove(0);
+            self.data.remove(&old);
+            self.meta.remove(&old);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    pub fn total_bytes(&self) -> usize {
+        self.data.values().map(|v| v.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_get_roundtrip() {
+        let mut s = CheckpointStore::new();
+        let id = s.save(7, 10, vec![1, 2, 3]);
+        assert_eq!(s.get(id).unwrap(), &[1, 2, 3]);
+        assert_eq!(s.latest_for(7), Some(id));
+        assert_eq!(s.meta(id).unwrap().iteration, 10);
+        assert_eq!((s.saved, s.restored), (1, 1));
+    }
+
+    #[test]
+    fn gc_keeps_newest() {
+        let mut s = CheckpointStore::new(); // keep_per_trial = 2
+        let a = s.save(1, 1, vec![1]);
+        let b = s.save(1, 2, vec![2]);
+        let c = s.save(1, 3, vec![3]);
+        assert!(s.get(a).is_none());
+        assert!(s.get(b).is_some());
+        assert_eq!(s.latest_for(1), Some(c));
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn gc_is_per_trial() {
+        let mut s = CheckpointStore::new();
+        for t in 0..4 {
+            s.save(t, 1, vec![t as u8]);
+        }
+        assert_eq!(s.len(), 4);
+    }
+
+    #[test]
+    fn disk_spill_writes_files() {
+        let dir = std::env::temp_dir().join(format!("tune_ckpt_test_{}", std::process::id()));
+        let mut s = CheckpointStore::new().with_disk(dir.clone());
+        s.save(1, 5, vec![9; 16]);
+        let n = std::fs::read_dir(&dir).unwrap().count();
+        assert_eq!(n, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,408 @@
+//! Trial executors: where trainables actually run.
+//!
+//! Two implementations behind one interface, so every scheduler/search
+//! algorithm is oblivious to the execution substrate (§3's requirement
+//! to "handle irregular computations" lives here):
+//!
+//! * [`SimExecutor`] — discrete-event, virtual clock. Each step costs
+//!   `Trainable::step_cost()` virtual seconds; a binary heap orders
+//!   completions. Runs thousand-trial experiments in milliseconds of
+//!   wall time; the scheduler benches (C1–C3) use it.
+//! * [`ThreadExecutor`] — one worker thread per live trial, command
+//!   channels in, one shared event channel out. Wall-clock time. The
+//!   end-to-end PJRT workloads run here, mirroring Ray's
+//!   process-per-trial model in-process.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use crate::coordinator::trial::{Config, Trial, TrialId};
+use crate::trainable::{StepOutput, Trainable, TrainableFactory};
+
+/// Completion events delivered to the runner.
+#[derive(Debug)]
+pub enum ExecEvent {
+    Stepped { trial: TrialId, out: StepOutput },
+    Failed { trial: TrialId, error: String },
+}
+
+pub trait Executor: Send {
+    /// Seconds since experiment start (virtual or wall).
+    fn now(&self) -> f64;
+
+    /// Instantiate the trial's trainable (optionally restoring).
+    fn launch(&mut self, trial: &Trial, restore: Option<Vec<u8>>) -> Result<(), String>;
+
+    /// Ask for one asynchronous training iteration.
+    fn request_step(&mut self, id: TrialId);
+
+    /// Next completion event; None when nothing is in flight.
+    fn next_event(&mut self) -> Option<ExecEvent>;
+
+    /// Synchronous state snapshot (trainable is idle between steps).
+    fn save(&mut self, id: TrialId) -> Option<Vec<u8>>;
+
+    /// Restore state in place (PBT exploit).
+    fn restore(&mut self, id: TrialId, blob: &[u8]) -> Result<(), String>;
+
+    /// Runtime hyperparameter mutation.
+    fn update_config(&mut self, id: TrialId, config: &Config);
+
+    /// Tear down the trial's trainable.
+    fn halt(&mut self, id: TrialId);
+
+    fn num_live(&self) -> usize;
+}
+
+// ---------------------------------------------------------------------------
+// Discrete-event executor
+// ---------------------------------------------------------------------------
+
+/// f64 ordered for the heap (times are finite by construction).
+#[derive(PartialEq, PartialOrd)]
+struct F64Ord(f64);
+impl Eq for F64Ord {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for F64Ord {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).unwrap()
+    }
+}
+
+pub struct SimExecutor {
+    factory: TrainableFactory,
+    now: f64,
+    seq: u64,
+    queue: BinaryHeap<Reverse<(F64Ord, u64, TrialId)>>,
+    live: HashMap<TrialId, Box<dyn Trainable>>,
+}
+
+impl SimExecutor {
+    pub fn new(factory: TrainableFactory) -> Self {
+        SimExecutor { factory, now: 0.0, seq: 0, queue: BinaryHeap::new(), live: HashMap::new() }
+    }
+}
+
+impl Executor for SimExecutor {
+    fn now(&self) -> f64 {
+        self.now
+    }
+
+    fn launch(&mut self, trial: &Trial, restore: Option<Vec<u8>>) -> Result<(), String> {
+        let mut t = (self.factory)(&trial.config, trial.seed);
+        if let Some(blob) = restore {
+            t.restore(&blob)?;
+        }
+        self.live.insert(trial.id, t);
+        Ok(())
+    }
+
+    fn request_step(&mut self, id: TrialId) {
+        if let Some(t) = self.live.get(&id) {
+            let done_at = self.now + t.step_cost().max(1e-9);
+            self.seq += 1;
+            self.queue.push(Reverse((F64Ord(done_at), self.seq, id)));
+        }
+    }
+
+    fn next_event(&mut self) -> Option<ExecEvent> {
+        while let Some(Reverse((F64Ord(at), _, id))) = self.queue.pop() {
+            // Halted trials may leave stale queue entries; skip them.
+            let Some(t) = self.live.get_mut(&id) else { continue };
+            self.now = self.now.max(at);
+            return Some(match t.step() {
+                Ok(out) => ExecEvent::Stepped { trial: id, out },
+                Err(error) => ExecEvent::Failed { trial: id, error },
+            });
+        }
+        None
+    }
+
+    fn save(&mut self, id: TrialId) -> Option<Vec<u8>> {
+        self.live.get_mut(&id).map(|t| t.save())
+    }
+
+    fn restore(&mut self, id: TrialId, blob: &[u8]) -> Result<(), String> {
+        self.live.get_mut(&id).ok_or("trial not live")?.restore(blob)
+    }
+
+    fn update_config(&mut self, id: TrialId, config: &Config) {
+        if let Some(t) = self.live.get_mut(&id) {
+            t.update_config(config);
+        }
+    }
+
+    fn halt(&mut self, id: TrialId) {
+        self.live.remove(&id);
+    }
+
+    fn num_live(&self) -> usize {
+        self.live.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threaded executor
+// ---------------------------------------------------------------------------
+
+enum WorkerCmd {
+    Step,
+    Save(Sender<Vec<u8>>),
+    Restore(Vec<u8>, Sender<Result<(), String>>),
+    Update(Config),
+    Halt,
+}
+
+struct Worker {
+    tx: Sender<WorkerCmd>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+pub struct ThreadExecutor {
+    factory: TrainableFactory,
+    workers: HashMap<TrialId, Worker>,
+    event_tx: Sender<ExecEvent>,
+    event_rx: Receiver<ExecEvent>,
+    started: Instant,
+}
+
+impl ThreadExecutor {
+    pub fn new(factory: TrainableFactory) -> Self {
+        let (event_tx, event_rx) = mpsc::channel();
+        ThreadExecutor {
+            factory,
+            workers: HashMap::new(),
+            event_tx,
+            event_rx,
+            started: Instant::now(),
+        }
+    }
+}
+
+impl Executor for ThreadExecutor {
+    fn now(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    fn launch(&mut self, trial: &Trial, restore: Option<Vec<u8>>) -> Result<(), String> {
+        let (tx, rx) = mpsc::channel::<WorkerCmd>();
+        let factory = Arc::clone(&self.factory);
+        let config = trial.config.clone();
+        let seed = trial.seed;
+        let id = trial.id;
+        let events = self.event_tx.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("trial-{id}"))
+            .spawn(move || {
+                let mut t = factory(&config, seed);
+                if let Some(blob) = restore {
+                    if let Err(e) = t.restore(&blob) {
+                        let _ = events.send(ExecEvent::Failed { trial: id, error: e });
+                        return;
+                    }
+                }
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        WorkerCmd::Step => {
+                            let ev = match t.step() {
+                                Ok(out) => ExecEvent::Stepped { trial: id, out },
+                                Err(error) => ExecEvent::Failed { trial: id, error },
+                            };
+                            if events.send(ev).is_err() {
+                                return;
+                            }
+                        }
+                        WorkerCmd::Save(reply) => {
+                            let _ = reply.send(t.save());
+                        }
+                        WorkerCmd::Restore(blob, reply) => {
+                            let _ = reply.send(t.restore(&blob));
+                        }
+                        WorkerCmd::Update(cfg) => t.update_config(&cfg),
+                        WorkerCmd::Halt => return,
+                    }
+                }
+            })
+            .map_err(|e| e.to_string())?;
+        self.workers.insert(id, Worker { tx, handle: Some(handle) });
+        Ok(())
+    }
+
+    fn request_step(&mut self, id: TrialId) {
+        if let Some(w) = self.workers.get(&id) {
+            let _ = w.tx.send(WorkerCmd::Step);
+        }
+    }
+
+    fn next_event(&mut self) -> Option<ExecEvent> {
+        if self.workers.is_empty() {
+            return None;
+        }
+        // In-flight events from just-halted workers are still valid to
+        // receive; the runner filters by trial status.
+        self.event_rx.recv().ok()
+    }
+
+    fn save(&mut self, id: TrialId) -> Option<Vec<u8>> {
+        let w = self.workers.get(&id)?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        w.tx.send(WorkerCmd::Save(reply_tx)).ok()?;
+        reply_rx.recv().ok()
+    }
+
+    fn restore(&mut self, id: TrialId, blob: &[u8]) -> Result<(), String> {
+        let w = self.workers.get(&id).ok_or("trial not live")?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        w.tx.send(WorkerCmd::Restore(blob.to_vec(), reply_tx))
+            .map_err(|e| e.to_string())?;
+        reply_rx.recv().map_err(|e| e.to_string())?
+    }
+
+    fn update_config(&mut self, id: TrialId, config: &Config) {
+        if let Some(w) = self.workers.get(&id) {
+            let _ = w.tx.send(WorkerCmd::Update(config.clone()));
+        }
+    }
+
+    fn halt(&mut self, id: TrialId) {
+        if let Some(mut w) = self.workers.remove(&id) {
+            let _ = w.tx.send(WorkerCmd::Halt);
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+
+    fn num_live(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadExecutor {
+    fn drop(&mut self) {
+        let ids: Vec<TrialId> = self.workers.keys().copied().collect();
+        for id in ids {
+            self.halt(id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trial::ParamValue;
+    use crate::ray::Resources;
+    use crate::trainable::factory;
+    use crate::trainable::synthetic::ConstTrainable;
+
+    fn mk_trial(id: TrialId, cost: f64) -> Trial {
+        let mut c = Config::new();
+        c.insert("step_cost".into(), ParamValue::F64(cost));
+        Trial::new(id, c, Resources::cpu(1.0), id)
+    }
+
+    fn const_factory() -> TrainableFactory {
+        factory(|c, s| Box::new(ConstTrainable::new(c, s)))
+    }
+
+    #[test]
+    fn sim_orders_by_virtual_time() {
+        let mut ex = SimExecutor::new(const_factory());
+        ex.launch(&mk_trial(1, 5.0), None).unwrap();
+        ex.launch(&mk_trial(2, 1.0), None).unwrap();
+        ex.request_step(1);
+        ex.request_step(2);
+        // Trial 2 (cost 1) completes before trial 1 (cost 5).
+        match ex.next_event().unwrap() {
+            ExecEvent::Stepped { trial, .. } => assert_eq!(trial, 2),
+            e => panic!("{e:?}"),
+        }
+        assert!((ex.now() - 1.0).abs() < 1e-9);
+        match ex.next_event().unwrap() {
+            ExecEvent::Stepped { trial, .. } => assert_eq!(trial, 1),
+            e => panic!("{e:?}"),
+        }
+        assert!((ex.now() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sim_halt_discards_stale_events() {
+        let mut ex = SimExecutor::new(const_factory());
+        ex.launch(&mk_trial(1, 1.0), None).unwrap();
+        ex.request_step(1);
+        ex.halt(1);
+        assert!(ex.next_event().is_none());
+        assert_eq!(ex.num_live(), 0);
+    }
+
+    #[test]
+    fn sim_save_restore() {
+        let mut ex = SimExecutor::new(const_factory());
+        ex.launch(&mk_trial(1, 1.0), None).unwrap();
+        ex.request_step(1);
+        ex.next_event();
+        let blob = ex.save(1).unwrap();
+        ex.launch(&mk_trial(2, 1.0), Some(blob)).unwrap();
+        ex.request_step(2);
+        match ex.next_event().unwrap() {
+            ExecEvent::Stepped { out, .. } => assert_eq!(out.metrics["iters"], 2.0),
+            e => panic!("{e:?}"),
+        }
+    }
+
+    #[test]
+    fn threaded_steps_flow() {
+        let mut ex = ThreadExecutor::new(const_factory());
+        ex.launch(&mk_trial(1, 0.0), None).unwrap();
+        ex.request_step(1);
+        match ex.next_event().unwrap() {
+            ExecEvent::Stepped { trial, out } => {
+                assert_eq!(trial, 1);
+                assert_eq!(out.metrics["iters"], 1.0);
+            }
+            e => panic!("{e:?}"),
+        }
+        let blob = ex.save(1).unwrap();
+        assert_eq!(u64::from_le_bytes(blob.try_into().unwrap()), 1);
+        ex.halt(1);
+        assert_eq!(ex.num_live(), 0);
+    }
+
+    #[test]
+    fn threaded_parallel_trials() {
+        let mut ex = ThreadExecutor::new(const_factory());
+        for id in 0..8 {
+            ex.launch(&mk_trial(id, 0.0), None).unwrap();
+            ex.request_step(id);
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..8 {
+            match ex.next_event().unwrap() {
+                ExecEvent::Stepped { trial, .. } => {
+                    seen.insert(trial);
+                }
+                e => panic!("{e:?}"),
+            }
+        }
+        assert_eq!(seen.len(), 8);
+    }
+
+    #[test]
+    fn threaded_restore_in_place() {
+        let mut ex = ThreadExecutor::new(const_factory());
+        ex.launch(&mk_trial(1, 0.0), None).unwrap();
+        for _ in 0..3 {
+            ex.request_step(1);
+            ex.next_event();
+        }
+        ex.restore(1, &0u64.to_le_bytes()).unwrap();
+        ex.request_step(1);
+        match ex.next_event().unwrap() {
+            ExecEvent::Stepped { out, .. } => assert_eq!(out.metrics["iters"], 1.0),
+            e => panic!("{e:?}"),
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! Experiment specification and the `run_experiments` facade (§4.3):
+//! "the user must specify their model training function or class, an
+//! initial set of trials, and a trial scheduler."
+
+use crate::logger::{JsonlLogger, ProgressReporter};
+use crate::ray::{Cluster, FaultPlan, Resources};
+use crate::trainable::TrainableFactory;
+
+use super::executor::{Executor, SimExecutor, ThreadExecutor};
+use super::runner::{ExperimentResult, TrialRunner};
+use super::schedulers::{
+    AshaScheduler, FifoScheduler, HyperBandScheduler, MedianStoppingRule, PbtScheduler,
+    TrialScheduler,
+};
+use super::search::{EvolutionSearch, GridSearch, RandomSearch, SearchAlgorithm, TpeSearch};
+use super::spec::SearchSpace;
+use super::trial::Mode;
+
+/// Everything that defines an experiment run.
+#[derive(Clone, Debug)]
+pub struct ExperimentSpec {
+    pub name: String,
+    /// Metric trials report and schedulers optimize.
+    pub metric: String,
+    pub mode: Mode,
+    /// Number of stochastic samples (grid dims multiply inside the
+    /// search algorithm).
+    pub num_samples: usize,
+    pub resources_per_trial: Resources,
+    /// Per-trial stopping: max training iterations.
+    pub max_iterations_per_trial: u64,
+    /// Per-trial stopping: terminate once the metric is at least (Max) /
+    /// at most (Min) this value.
+    pub metric_target: Option<f64>,
+    /// Experiment-wide (virtual or wall) seconds budget.
+    pub max_experiment_time_s: f64,
+    /// 0 = bounded by cluster resources only.
+    pub max_concurrent: usize,
+    /// Failures tolerated per trial before it is marked Errored.
+    pub max_failures: u32,
+    /// Checkpoint every N iterations (0 = only when schedulers ask).
+    pub checkpoint_freq: u64,
+    /// Snapshot final state of completed trials.
+    pub checkpoint_at_end: bool,
+    pub fault_plan: FaultPlan,
+    pub seed: u64,
+}
+
+impl ExperimentSpec {
+    pub fn named(name: &str) -> Self {
+        ExperimentSpec {
+            name: name.to_string(),
+            metric: "loss".into(),
+            mode: Mode::Min,
+            num_samples: 1,
+            resources_per_trial: Resources::cpu(1.0),
+            max_iterations_per_trial: 100,
+            metric_target: None,
+            max_experiment_time_s: f64::INFINITY,
+            max_concurrent: 0,
+            max_failures: 3,
+            checkpoint_freq: 0,
+            checkpoint_at_end: false,
+            fault_plan: FaultPlan::none(),
+            seed: 0,
+        }
+    }
+}
+
+/// Scheduler selection (string-friendly for the CLI).
+#[derive(Clone, Debug)]
+pub enum SchedulerKind {
+    Fifo,
+    Asha { grace_period: u64, reduction_factor: f64, max_t: u64 },
+    HyperBand { max_t: u64, eta: f64 },
+    MedianStopping { grace_period: u64, min_samples: usize },
+    Pbt { perturbation_interval: u64, space: SearchSpace },
+}
+
+impl SchedulerKind {
+    pub fn build(&self, seed: u64) -> Box<dyn TrialScheduler> {
+        match self {
+            SchedulerKind::Fifo => Box::new(FifoScheduler::new()),
+            SchedulerKind::Asha { grace_period, reduction_factor, max_t } => {
+                Box::new(AshaScheduler::new(*grace_period, *reduction_factor, *max_t))
+            }
+            SchedulerKind::HyperBand { max_t, eta } => {
+                Box::new(HyperBandScheduler::new(*max_t, *eta))
+            }
+            SchedulerKind::MedianStopping { grace_period, min_samples } => {
+                Box::new(MedianStoppingRule::new(*grace_period, *min_samples))
+            }
+            SchedulerKind::Pbt { perturbation_interval, space } => {
+                Box::new(PbtScheduler::new(*perturbation_interval, space.clone(), seed ^ 0x9B7))
+            }
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedulerKind::Fifo => "fifo",
+            SchedulerKind::Asha { .. } => "asha",
+            SchedulerKind::HyperBand { .. } => "hyperband",
+            SchedulerKind::MedianStopping { .. } => "median_stopping",
+            SchedulerKind::Pbt { .. } => "pbt",
+        }
+    }
+}
+
+/// Search-algorithm selection.
+#[derive(Clone, Debug)]
+pub enum SearchKind {
+    Grid,
+    Random,
+    Tpe,
+    Evolution,
+}
+
+impl SearchKind {
+    pub fn build(&self, space: SearchSpace, num_samples: usize) -> Box<dyn SearchAlgorithm> {
+        match self {
+            SearchKind::Grid => Box::new(GridSearch::new(space, num_samples)),
+            SearchKind::Random => Box::new(RandomSearch::new(space, num_samples)),
+            SearchKind::Tpe => Box::new(TpeSearch::new(space, num_samples)),
+            SearchKind::Evolution => Box::new(EvolutionSearch::new(space, num_samples)),
+        }
+    }
+}
+
+/// Execution substrate selection.
+pub enum ExecMode {
+    /// Discrete-event simulation over `Trainable::step_cost` virtual
+    /// seconds — scheduler research mode.
+    Sim,
+    /// Real threads, wall-clock time — production mode (PJRT models).
+    Threads,
+}
+
+/// Options bag for [`run_experiments`].
+pub struct RunOptions {
+    pub cluster: Cluster,
+    pub exec: ExecMode,
+    /// Print progress every N results (0 = quiet).
+    pub progress_every: u64,
+    /// Write JSONL logs under this directory.
+    pub log_dir: Option<std::path::PathBuf>,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions {
+            cluster: Cluster::uniform(1, Resources::cpu(8.0)),
+            exec: ExecMode::Sim,
+            progress_every: 0,
+            log_dir: None,
+        }
+    }
+}
+
+/// §4.3's entry point: run an experiment end to end.
+pub fn run_experiments(
+    spec: ExperimentSpec,
+    space: SearchSpace,
+    scheduler: SchedulerKind,
+    search: SearchKind,
+    factory: TrainableFactory,
+    opts: RunOptions,
+) -> ExperimentResult {
+    let executor: Box<dyn Executor> = match opts.exec {
+        ExecMode::Sim => Box::new(SimExecutor::new(factory)),
+        ExecMode::Threads => Box::new(ThreadExecutor::new(factory)),
+    };
+    let sched = scheduler.build(spec.seed);
+    let search_alg = search.build(space, spec.num_samples);
+    let mut runner = TrialRunner::new(spec, sched, search_alg, executor, opts.cluster);
+    if opts.progress_every > 0 {
+        let metric = runner.spec.metric.clone();
+        runner.add_logger(Box::new(ProgressReporter::new(&metric, opts.progress_every)));
+    }
+    if let Some(dir) = opts.log_dir {
+        runner.add_logger(Box::new(JsonlLogger::new(dir).expect("create log dir")));
+    }
+    runner.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::spec::SpaceBuilder;
+    use crate::trainable::factory;
+    use crate::trainable::synthetic::CurveTrainable;
+
+    #[test]
+    fn facade_runs_grid_experiment() {
+        let mut spec = ExperimentSpec::named("quickstart");
+        spec.metric = "accuracy".into();
+        spec.mode = Mode::Max;
+        spec.max_iterations_per_trial = 10;
+        let space = SpaceBuilder::new()
+            .grid_f64("lr", &[0.01, 0.001, 0.0001])
+            .grid_str("activation", &["relu", "tanh"])
+            .build();
+        let res = run_experiments(
+            spec,
+            space,
+            SchedulerKind::Fifo,
+            SearchKind::Grid,
+            factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+            RunOptions::default(),
+        );
+        assert_eq!(res.trials.len(), 6); // 3 x 2 grid, §4.3
+        assert!(res.best_metric().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn scheduler_kinds_build() {
+        let space = SpaceBuilder::new().uniform("lr", 0.0, 1.0).build();
+        for k in [
+            SchedulerKind::Fifo,
+            SchedulerKind::Asha { grace_period: 1, reduction_factor: 3.0, max_t: 81 },
+            SchedulerKind::HyperBand { max_t: 81, eta: 3.0 },
+            SchedulerKind::MedianStopping { grace_period: 5, min_samples: 3 },
+            SchedulerKind::Pbt { perturbation_interval: 5, space: space.clone() },
+        ] {
+            let s = k.build(0);
+            assert_eq!(s.name(), k.label());
+        }
+    }
+}

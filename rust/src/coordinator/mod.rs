@@ -1,0 +1,23 @@
+//! The Tune coordinator — the paper's system contribution.
+//!
+//! Layout mirrors the paper's API split:
+//! * [`trial`] / [`spec`] — trials, configs, the parameter DSL (§3, §4.3)
+//! * [`schedulers`] — the trial-scheduling API + Table 1 algorithms (§4.2)
+//! * [`search`] — suggestion algorithms (grid / random / TPE)
+//! * [`executor`] — where trainables run (discrete-event sim or threads)
+//! * [`runner`] — the central event loop tying it all together
+//! * [`experiment`] — user-facing `run_experiments` facade (§4.3)
+
+pub mod executor;
+pub mod experiment;
+pub mod runner;
+pub mod schedulers;
+pub mod search;
+pub mod spec;
+pub mod spec_file;
+pub mod trial;
+
+pub use experiment::{run_experiments, ExecMode, ExperimentSpec, RunOptions, SchedulerKind, SearchKind};
+pub use runner::{ExperimentResult, RunnerStats, TrialRunner};
+pub use spec_file::SpecFile;
+pub use trial::{Config, Mode, ParamValue, ResultRow, Trial, TrialId, TrialStatus};

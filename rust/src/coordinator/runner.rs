@@ -1,0 +1,646 @@
+//! The trial runner: Tune's central event loop.
+//!
+//! Owns the trial table and drives the narrow-waist protocol of §4.2:
+//! when resources free up it asks the scheduler `choose_trial_to_run`
+//! (pulling fresh configs from the search algorithm as needed), places
+//! the trial on the Ray-like substrate, and launches it on an executor;
+//! as intermediate results arrive it invokes `scheduler.on_result` and
+//! applies the returned decision — continue, checkpoint, pause, stop,
+//! or restart-with-mutated-config. Checkpoints provide fault tolerance
+//! (trial metadata itself stays in memory, per the paper).
+
+use std::collections::BTreeMap;
+
+use crate::checkpoint::CheckpointStore;
+use crate::logger::ResultLogger;
+use crate::ray::{Cluster, FaultInjector, LeaseId, NodeId, PlacementStats, TwoLevelScheduler};
+use crate::util::rng::Rng;
+
+use super::executor::{ExecEvent, Executor};
+use super::experiment::ExperimentSpec;
+use super::schedulers::{Decision, SchedulerCtx, TrialScheduler};
+use super::search::SearchAlgorithm;
+use super::trial::{ResultRow, Trial, TrialId, TrialStatus};
+
+/// Counters the benches and EXPERIMENTS.md report.
+#[derive(Clone, Debug, Default)]
+pub struct RunnerStats {
+    pub results: u64,
+    pub checkpoints: u64,
+    pub restores: u64,
+    pub exploits: u64,
+    pub stopped_early: u64,
+    pub completed: u64,
+    pub errored: u64,
+    pub failures_recovered: u64,
+    pub launches: u64,
+    /// Nanoseconds spent inside scheduler callbacks (decision latency).
+    pub decision_ns: u64,
+    /// Nanoseconds spent in the whole handling path (runner overhead).
+    pub handling_ns: u64,
+}
+
+pub struct ExperimentResult {
+    pub trials: BTreeMap<TrialId, Trial>,
+    pub best: Option<TrialId>,
+    /// Total (virtual or wall) seconds the experiment spanned.
+    pub duration_s: f64,
+    /// Sum over trials of consumed training seconds (the search budget).
+    pub budget_used_s: f64,
+    pub stats: RunnerStats,
+    pub placement: PlacementStats,
+    /// (experiment time, best raw metric so far) — per-result samples.
+    pub best_curve: Vec<(f64, f64)>,
+}
+
+impl ExperimentResult {
+    pub fn best_metric(&self) -> Option<f64> {
+        self.best.and_then(|id| self.trials[&id].best_metric)
+    }
+    pub fn best_config(&self) -> Option<&super::trial::Config> {
+        self.best.map(|id| &self.trials[&id].config)
+    }
+    pub fn total_iterations(&self) -> u64 {
+        self.trials.values().map(|t| t.iteration).sum()
+    }
+    pub fn count(&self, status: TrialStatus) -> usize {
+        self.trials.values().filter(|t| t.status == status).count()
+    }
+}
+
+pub struct TrialRunner {
+    pub spec: ExperimentSpec,
+    scheduler: Box<dyn TrialScheduler>,
+    search: Box<dyn SearchAlgorithm>,
+    executor: Box<dyn Executor>,
+    cluster: Cluster,
+    placer: TwoLevelScheduler,
+    pub checkpoints: CheckpointStore,
+    fault: FaultInjector,
+    trials: BTreeMap<TrialId, Trial>,
+    leases: BTreeMap<TrialId, (NodeId, LeaseId)>,
+    /// Wall/virtual time at which each running trial was (re)launched,
+    /// plus previously accumulated training seconds.
+    run_clock: BTreeMap<TrialId, (f64, f64)>,
+    loggers: Vec<Box<dyn ResultLogger>>,
+    rng: Rng,
+    next_id: TrialId,
+    search_exhausted: bool,
+    stats: RunnerStats,
+    best_curve: Vec<(f64, f64)>,
+    best_so_far: Option<f64>,
+}
+
+impl TrialRunner {
+    pub fn new(
+        spec: ExperimentSpec,
+        scheduler: Box<dyn TrialScheduler>,
+        search: Box<dyn SearchAlgorithm>,
+        executor: Box<dyn Executor>,
+        cluster: Cluster,
+    ) -> Self {
+        let rng = Rng::new(spec.seed);
+        let fault = FaultInjector::new(spec.fault_plan.clone(), spec.seed ^ 0xFA17);
+        TrialRunner {
+            spec,
+            scheduler,
+            search,
+            executor,
+            cluster,
+            placer: TwoLevelScheduler::new(),
+            checkpoints: CheckpointStore::new(),
+            fault,
+            trials: BTreeMap::new(),
+            leases: BTreeMap::new(),
+            run_clock: BTreeMap::new(),
+            loggers: Vec::new(),
+            rng,
+            next_id: 0,
+            search_exhausted: false,
+            stats: RunnerStats::default(),
+            best_curve: Vec::new(),
+            best_so_far: None,
+        }
+    }
+
+    pub fn add_logger(&mut self, logger: Box<dyn ResultLogger>) {
+        self.loggers.push(logger);
+    }
+
+    pub fn trials(&self) -> &BTreeMap<TrialId, Trial> {
+        &self.trials
+    }
+
+    /// Pull one fresh config from the search algorithm into the pool.
+    fn create_trial(&mut self) -> Option<TrialId> {
+        if self.search_exhausted {
+            return None;
+        }
+        let Some(config) = self.search.next_config(&mut self.rng) else {
+            self.search_exhausted = true;
+            return None;
+        };
+        let id = self.next_id;
+        self.next_id += 1;
+        let seed = self.rng.fork(id).next_u64();
+        let trial = Trial::new(id, config, self.spec.resources_per_trial.clone(), seed);
+        self.scheduler.on_trial_add(
+            &SchedulerCtx {
+                trials: &self.trials,
+                metric: &self.spec.metric,
+                mode: self.spec.mode,
+            },
+            &trial,
+        );
+        self.trials.insert(id, trial);
+        Some(id)
+    }
+
+    fn num_running(&self) -> usize {
+        self.trials.values().filter(|t| t.status == TrialStatus::Running).count()
+    }
+
+    /// Admission: launch trials while the scheduler has candidates and
+    /// the cluster has room.
+    fn admit(&mut self) {
+        loop {
+            if self.spec.max_concurrent > 0 && self.num_running() >= self.spec.max_concurrent {
+                return;
+            }
+            // Ask the scheduler first (it may resume paused trials);
+            // otherwise try to create a fresh trial.
+            let mut choice = {
+                let ctx = SchedulerCtx {
+                    trials: &self.trials,
+                    metric: &self.spec.metric,
+                    mode: self.spec.mode,
+                };
+                self.scheduler.choose_trial_to_run(&ctx)
+            };
+            if choice.is_none() {
+                if self.create_trial().is_none() {
+                    return;
+                }
+                let ctx = SchedulerCtx {
+                    trials: &self.trials,
+                    metric: &self.spec.metric,
+                    mode: self.spec.mode,
+                };
+                choice = self.scheduler.choose_trial_to_run(&ctx);
+            }
+            let Some(id) = choice else { return };
+            if !self.launch(id) {
+                return; // no resources (or broken trial): stop admitting
+            }
+        }
+    }
+
+    /// Place + start one trial. Returns false when out of resources.
+    fn launch(&mut self, id: TrialId) -> bool {
+        let demand = self.trials[&id].resources.clone();
+        // Trial drivers originate on the head node (node 0), matching
+        // Tune-on-Ray's driver placement; children would spill.
+        let Some(p) = self.placer.place(&mut self.cluster, 0, &demand) else {
+            return false;
+        };
+        let restore = self.trials[&id]
+            .checkpoint
+            .and_then(|c| self.checkpoints.get(c).map(|b| b.to_vec()));
+        let restored = restore.is_some();
+        let trial = self.trials.get_mut(&id).unwrap();
+        trial.node = Some(p.node);
+        match self.executor.launch(trial, restore) {
+            Ok(()) => {
+                trial.status = TrialStatus::Running;
+                self.leases.insert(id, (p.node, p.lease));
+                self.run_clock.insert(id, (self.executor.now(), trial.time_total_s));
+                self.stats.launches += 1;
+                if restored {
+                    self.stats.restores += 1;
+                }
+                self.executor.request_step(id);
+                true
+            }
+            Err(e) => {
+                self.cluster.release(p.node, p.lease);
+                eprintln!("trial {id} failed to launch: {e}");
+                self.finish(id, TrialStatus::Errored);
+                true // keep admitting others
+            }
+        }
+    }
+
+    fn release(&mut self, id: TrialId) {
+        if let Some((node, lease)) = self.leases.remove(&id) {
+            self.cluster.release(node, lease);
+        }
+        self.run_clock.remove(&id);
+    }
+
+    fn finish(&mut self, id: TrialId, status: TrialStatus) {
+        self.executor.halt(id);
+        self.release(id);
+        let (config, last_metric);
+        {
+            let t = self.trials.get_mut(&id).unwrap();
+            t.status = status;
+            config = t.config.clone();
+            last_metric = t.last_result.as_ref().and_then(|r| r.metric(&self.spec.metric));
+        }
+        match status {
+            TrialStatus::Completed => self.stats.completed += 1,
+            TrialStatus::Stopped => self.stats.stopped_early += 1,
+            TrialStatus::Errored => self.stats.errored += 1,
+            _ => {}
+        }
+        let ctx = SchedulerCtx {
+            trials: &self.trials,
+            metric: &self.spec.metric,
+            mode: self.spec.mode,
+        };
+        self.scheduler.on_trial_remove(&ctx, id);
+        self.search.on_complete(&config, last_metric, self.spec.mode);
+        let t = self.trials[&id].clone();
+        for l in &mut self.loggers {
+            l.on_trial_end(&t);
+        }
+    }
+
+    fn save_checkpoint(&mut self, id: TrialId) {
+        if let Some(blob) = self.executor.save(id) {
+            let iter = self.trials[&id].iteration;
+            let cid = self.checkpoints.save(id, iter, blob);
+            self.trials.get_mut(&id).unwrap().checkpoint = Some(cid);
+            self.stats.checkpoints += 1;
+        }
+    }
+
+    fn handle_failure(&mut self, id: TrialId, error: &str) {
+        self.executor.halt(id);
+        self.release(id);
+        let max_failures = self.spec.max_failures;
+        let t = self.trials.get_mut(&id).unwrap();
+        t.num_failures += 1;
+        if t.num_failures <= max_failures {
+            // Recover: back to Pending; relaunch restores the latest
+            // checkpoint (possibly iteration 0 if none exists).
+            t.status = TrialStatus::Pending;
+            if t.checkpoint.is_none() {
+                t.iteration = 0;
+                t.time_total_s = 0.0;
+            } else if let Some(c) = t.checkpoint {
+                // Roll visible progress back to the checkpoint.
+                if let Some(m) = self.checkpoints.meta(c) {
+                    t.iteration = m.iteration;
+                }
+            }
+            self.stats.failures_recovered += 1;
+        } else {
+            eprintln!("trial {id} errored permanently: {error}");
+            self.finish(id, TrialStatus::Errored);
+        }
+    }
+
+    fn apply_decision(&mut self, id: TrialId, decision: Decision) {
+        match decision {
+            Decision::Continue => self.executor.request_step(id),
+            Decision::Checkpoint => {
+                self.save_checkpoint(id);
+                self.executor.request_step(id);
+            }
+            Decision::Pause => {
+                self.save_checkpoint(id);
+                self.executor.halt(id);
+                self.release(id);
+                self.trials.get_mut(&id).unwrap().status = TrialStatus::Paused;
+            }
+            Decision::Stop => self.finish(id, TrialStatus::Stopped),
+            Decision::Exploit { source, config } => {
+                let donor = self
+                    .trials
+                    .get(&source)
+                    .and_then(|t| t.checkpoint)
+                    .or_else(|| self.checkpoints.latest_for(source));
+                match donor.and_then(|c| self.checkpoints.get(c).map(|b| b.to_vec())) {
+                    Some(blob) => {
+                        if self.executor.restore(id, &blob).is_ok() {
+                            let iter = self.trials[&id].iteration;
+                            let cid = self.checkpoints.save(id, iter, blob);
+                            let t = self.trials.get_mut(&id).unwrap();
+                            t.config = config.clone();
+                            t.checkpoint = Some(cid);
+                            t.mutations += 1;
+                            self.executor.update_config(id, &config);
+                            self.stats.exploits += 1;
+                            self.stats.restores += 1;
+                        }
+                        self.executor.request_step(id);
+                    }
+                    None => {
+                        // No donor checkpoint yet: mutate config only.
+                        let t = self.trials.get_mut(&id).unwrap();
+                        t.config = config.clone();
+                        t.mutations += 1;
+                        self.executor.update_config(id, &config);
+                        self.executor.request_step(id);
+                    }
+                }
+            }
+        }
+    }
+
+    fn handle_stepped(&mut self, id: TrialId, out: crate::trainable::StepOutput) {
+        if self.trials.get(&id).map(|t| t.status) != Some(TrialStatus::Running) {
+            return; // stale event from a halted worker
+        }
+        if self.fault.step_fails() {
+            self.handle_failure(id, "injected step failure");
+            return;
+        }
+        if out.done {
+            self.finish(id, TrialStatus::Completed);
+            return;
+        }
+        let now = self.executor.now();
+        let (iteration, row) = {
+            let (started, acc) = self.run_clock[&id];
+            let t = self.trials.get_mut(&id).unwrap();
+            let iteration = t.iteration + 1;
+            let mut row = ResultRow::new(iteration, acc + (now - started));
+            row.metrics = out.metrics;
+            t.record(row.clone(), &self.spec.metric, self.spec.mode);
+            (iteration, row)
+        };
+        self.stats.results += 1;
+
+        // Best-so-far curve (experiment time axis).
+        if let Some(v) = row.metric(&self.spec.metric) {
+            let better = self.best_so_far.map_or(true, |b| self.spec.mode.better(v, b));
+            if better {
+                self.best_so_far = Some(v);
+                self.best_curve.push((now, v));
+            }
+        }
+
+        // Hot path: no Trial clone — loggers/search/scheduler live in
+        // disjoint fields, so shared borrows of `trials` coexist with
+        // mutable borrows of each consumer (perf iteration 1, §Perf).
+        {
+            let t = &self.trials[&id];
+            for l in &mut self.loggers {
+                l.on_result(t, &row);
+            }
+            self.search.on_result(&t.config, &row);
+        }
+
+        // Runner-level stopping criteria outrank the scheduler.
+        let target_hit = match (self.spec.metric_target, row.metric(&self.spec.metric)) {
+            (Some(tgt), Some(v)) => self.spec.mode.better(v, tgt) || v == tgt,
+            _ => false,
+        };
+        if iteration >= self.spec.max_iterations_per_trial || target_hit {
+            // Final checkpoint so results are restorable post-hoc.
+            if self.spec.checkpoint_at_end {
+                self.save_checkpoint(id);
+            }
+            self.finish(id, TrialStatus::Completed);
+            return;
+        }
+        // Periodic checkpointing orthogonal to scheduler decisions.
+        if self.spec.checkpoint_freq > 0 && iteration % self.spec.checkpoint_freq == 0 {
+            self.save_checkpoint(id);
+        }
+
+        let decision = {
+            let t0 = std::time::Instant::now();
+            let ctx = SchedulerCtx {
+                trials: &self.trials,
+                metric: &self.spec.metric,
+                mode: self.spec.mode,
+            };
+            let d = self.scheduler.on_result(&ctx, &self.trials[&id], &row);
+            self.stats.decision_ns += t0.elapsed().as_nanos() as u64;
+            d
+        };
+        self.apply_decision(id, decision);
+
+        // Out-of-band terminations (HyperBand rung cuts).
+        for victim in self.scheduler.drain_stops() {
+            if !self.trials[&victim].status.is_terminal() {
+                self.finish(victim, TrialStatus::Stopped);
+            }
+        }
+    }
+
+    fn fault_tick(&mut self) {
+        if self.fault.plan.node_failure_prob == 0.0 {
+            return;
+        }
+        let alive: Vec<NodeId> = self.cluster.alive_nodes().map(|n| n.id).collect();
+        let (kill, restarts) = self.fault.tick(&alive);
+        for n in restarts {
+            self.cluster.restart_node(n);
+        }
+        if let Some(victim) = kill {
+            let dead_leases = self.cluster.kill_node(victim);
+            let victims: Vec<TrialId> = self
+                .leases
+                .iter()
+                .filter(|(_, (node, lease))| *node == victim && dead_leases.contains(lease))
+                .map(|(id, _)| *id)
+                .collect();
+            for id in victims {
+                self.handle_failure(id, "node failure");
+            }
+        }
+    }
+
+    /// Drive the experiment to completion; returns the result summary.
+    pub fn run(&mut self) -> ExperimentResult {
+        loop {
+            self.admit();
+            if self.executor.now() >= self.spec.max_experiment_time_s {
+                break;
+            }
+            let event = self.executor.next_event();
+            let t0 = std::time::Instant::now();
+            match event {
+                Some(ExecEvent::Stepped { trial, out }) => self.handle_stepped(trial, out),
+                Some(ExecEvent::Failed { trial, error }) => self.handle_failure(trial, &error),
+                None => {
+                    // Nothing in flight. If nothing can ever run again,
+                    // we are done; otherwise admit more.
+                    let can_progress = {
+                        let ctx = SchedulerCtx {
+                            trials: &self.trials,
+                            metric: &self.spec.metric,
+                            mode: self.spec.mode,
+                        };
+                        self.scheduler.choose_trial_to_run(&ctx).is_some()
+                    };
+                    if !can_progress && self.search_exhausted {
+                        break;
+                    }
+                    if !can_progress && self.create_trial().is_none() {
+                        break;
+                    }
+                }
+            }
+            self.stats.handling_ns += t0.elapsed().as_nanos() as u64;
+            self.fault_tick();
+        }
+        // Endgame: terminate whatever is still live (budget exhausted or
+        // orphaned paused trials).
+        let leftovers: Vec<TrialId> = self
+            .trials
+            .values()
+            .filter(|t| !t.status.is_terminal())
+            .map(|t| t.id)
+            .collect();
+        for id in leftovers {
+            self.finish(id, TrialStatus::Stopped);
+        }
+        for l in &mut self.loggers {
+            l.on_experiment_end(&self.trials);
+        }
+
+        let best = self
+            .trials
+            .values()
+            .filter(|t| t.best_metric.is_some())
+            .max_by(|a, b| {
+                let am = self.spec.mode.ascending(a.best_metric.unwrap());
+                let bm = self.spec.mode.ascending(b.best_metric.unwrap());
+                am.partial_cmp(&bm).unwrap()
+            })
+            .map(|t| t.id);
+        ExperimentResult {
+            best,
+            duration_s: self.executor.now(),
+            budget_used_s: self.trials.values().map(|t| t.time_total_s).sum(),
+            trials: std::mem::take(&mut self.trials),
+            stats: self.stats.clone(),
+            placement: self.placer.stats,
+            best_curve: std::mem::take(&mut self.best_curve),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::executor::SimExecutor;
+    use crate::coordinator::schedulers::FifoScheduler;
+    use crate::coordinator::search::RandomSearch;
+    use crate::coordinator::spec::SpaceBuilder;
+    use crate::coordinator::trial::Mode;
+    use crate::ray::{FaultPlan, Resources};
+    use crate::trainable::factory;
+    use crate::trainable::synthetic::CurveTrainable;
+
+    fn quick_spec(n: usize, iters: u64) -> ExperimentSpec {
+        let mut spec = ExperimentSpec::named("test");
+        spec.metric = "accuracy".into();
+        spec.mode = Mode::Max;
+        spec.num_samples = n;
+        spec.max_iterations_per_trial = iters;
+        spec
+    }
+
+    fn runner(spec: ExperimentSpec, nodes: usize) -> TrialRunner {
+        let space = SpaceBuilder::new().loguniform("lr", 1e-4, 1.0).build();
+        let search = Box::new(RandomSearch::new(space, spec.num_samples));
+        let executor = Box::new(SimExecutor::new(factory(|c, s| {
+            Box::new(CurveTrainable::new(c, s))
+        })));
+        let cluster = Cluster::uniform(nodes, Resources::cpu(4.0));
+        TrialRunner::new(spec, Box::new(FifoScheduler::new()), search, executor, cluster)
+    }
+
+    #[test]
+    fn fifo_runs_all_trials_to_completion() {
+        let mut r = runner(quick_spec(10, 20), 2);
+        let res = r.run();
+        assert_eq!(res.trials.len(), 10);
+        assert_eq!(res.count(TrialStatus::Completed), 10);
+        assert_eq!(res.total_iterations(), 200);
+        assert!(res.best.is_some());
+        assert!(res.duration_s > 0.0);
+    }
+
+    #[test]
+    fn resource_limits_bound_parallelism() {
+        // 1 node x 4 cpus, 1 cpu per trial -> <= 4 concurrent; virtual
+        // duration must reflect queueing: 8 trials x 20 steps x ~[0.5,2]s
+        // over 4 slots.
+        let mut r = runner(quick_spec(8, 20), 1);
+        let res = r.run();
+        assert_eq!(res.count(TrialStatus::Completed), 8);
+        // With 4-way parallelism, duration >= total/4.
+        assert!(res.duration_s >= res.budget_used_s / 4.0 - 1e-6);
+        assert!(res.placement.failed > 0); // admission hit the limit
+    }
+
+    #[test]
+    fn max_concurrent_is_respected() {
+        let mut spec = quick_spec(6, 10);
+        spec.max_concurrent = 1;
+        let mut r = runner(spec, 4);
+        let res = r.run();
+        // Serial execution: duration == total budget.
+        assert!((res.duration_s - res.budget_used_s).abs() < 1e-6);
+    }
+
+    #[test]
+    fn metric_target_completes_early() {
+        let mut spec = quick_spec(4, 10_000);
+        spec.metric_target = Some(0.5); // accuracy >= 0.5 stops a trial
+        let mut r = runner(spec, 2);
+        let res = r.run();
+        assert!(res.total_iterations() < 4 * 10_000);
+    }
+
+    #[test]
+    fn experiment_time_budget_halts() {
+        let mut spec = quick_spec(100, 1_000);
+        spec.max_experiment_time_s = 50.0;
+        let mut r = runner(spec, 1);
+        let res = r.run();
+        assert!(res.duration_s <= 55.0, "{}", res.duration_s);
+        assert!(res.count(TrialStatus::Stopped) > 0);
+    }
+
+    #[test]
+    fn step_failures_recover_from_checkpoints() {
+        let mut spec = quick_spec(6, 30);
+        spec.fault_plan = FaultPlan::flaky_steps(0.02);
+        spec.checkpoint_freq = 5;
+        spec.max_failures = 10;
+        let mut r = runner(spec, 2);
+        let res = r.run();
+        assert!(res.stats.failures_recovered > 0);
+        assert_eq!(res.count(TrialStatus::Completed), 6);
+    }
+
+    #[test]
+    fn node_failures_reschedule_trials() {
+        let mut spec = quick_spec(8, 40);
+        spec.fault_plan = FaultPlan { node_failure_prob: 0.02, ..Default::default() };
+        spec.checkpoint_freq = 5;
+        spec.max_failures = 50;
+        let mut r = runner(spec, 4);
+        let res = r.run();
+        let done = res.count(TrialStatus::Completed);
+        assert_eq!(done, 8, "{:?}", res.stats);
+    }
+
+    #[test]
+    fn best_curve_is_monotone() {
+        let mut r = runner(quick_spec(20, 30), 2);
+        let res = r.run();
+        for w in res.best_curve.windows(2) {
+            assert!(w[1].1 >= w[0].1); // Max mode: improving
+            assert!(w[1].0 >= w[0].0);
+        }
+    }
+}

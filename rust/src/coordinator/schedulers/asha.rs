@@ -1,0 +1,163 @@
+//! Asynchronous HyperBand / ASHA (Li et al. 2018; Table 1: 78 LoC) —
+//! "the asynchronous variation which is simpler to implement in the
+//! distributed setting".
+//!
+//! Rungs sit at iterations r, r*eta, r*eta^2, ... up to max_t. When a
+//! trial reaches a rung it records its metric there; it is promoted
+//! (continues) iff it sits in the top 1/eta of everything recorded at
+//! that rung so far, else it stops. No barrier, no paused trials — the
+//! asynchrony that makes it cluster-friendly.
+
+use std::collections::BTreeMap;
+
+use super::{Decision, ResultRow, SchedulerCtx, Trial, TrialScheduler};
+
+pub struct AshaScheduler {
+    pub grace_period: u64,
+    pub reduction_factor: f64,
+    pub max_t: u64,
+    /// rung iteration -> ascending-normalized metrics recorded there.
+    rungs: BTreeMap<u64, Vec<f64>>,
+    stopped: u64,
+}
+
+impl AshaScheduler {
+    pub fn new(grace_period: u64, reduction_factor: f64, max_t: u64) -> Self {
+        assert!(reduction_factor > 1.0 && grace_period >= 1);
+        AshaScheduler {
+            grace_period,
+            reduction_factor,
+            max_t,
+            rungs: BTreeMap::new(),
+            stopped: 0,
+        }
+    }
+
+    pub fn num_stopped(&self) -> u64 {
+        self.stopped
+    }
+
+    /// Largest rung milestone <= iter (None below the first rung).
+    fn milestone(&self, iter: u64) -> Option<u64> {
+        let mut rung = self.grace_period;
+        let mut hit = None;
+        while rung <= iter && rung < self.max_t {
+            hit = Some(rung);
+            rung = ((rung as f64) * self.reduction_factor).round() as u64;
+        }
+        hit.filter(|m| *m == iter)
+    }
+
+    /// Top 1/eta cutoff of the values recorded at a rung: keep
+    /// max(1, floor(n/eta)) values; the cutoff is the worst kept value.
+    fn cutoff(values: &[f64], eta: f64) -> Option<f64> {
+        if values.is_empty() {
+            return None;
+        }
+        // O(n) selection of the keep-th best (perf iteration 3, §Perf).
+        let mut scratch = values.to_vec();
+        let keep = ((scratch.len() as f64 / eta).floor() as usize).max(1);
+        let (_, kth, _) =
+            scratch.select_nth_unstable_by(keep - 1, |a, b| b.partial_cmp(a).unwrap());
+        Some(*kth)
+    }
+}
+
+impl TrialScheduler for AshaScheduler {
+    fn name(&self) -> &'static str {
+        "asha"
+    }
+
+    fn on_result(&mut self, ctx: &SchedulerCtx, _trial: &Trial, result: &ResultRow) -> Decision {
+        let Some(value) = result.metric(ctx.metric).map(|v| ctx.mode.ascending(v)) else {
+            return Decision::Continue;
+        };
+        let Some(rung) = self.milestone(result.iteration) else {
+            return Decision::Continue;
+        };
+        let values = self.rungs.entry(rung).or_default();
+        values.push(value);
+        let cut = Self::cutoff(values, self.reduction_factor).unwrap();
+        if value < cut {
+            self.stopped += 1;
+            Decision::Stop
+        } else {
+            // Promotion is implicit: the trial just keeps training
+            // toward the next rung (checkpoint so late arrivals at this
+            // rung that displace us lose nothing — cheap insurance).
+            Decision::Checkpoint
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::Sandbox;
+    use super::*;
+    use crate::coordinator::trial::Mode;
+
+    #[test]
+    fn milestones_are_geometric() {
+        let s = AshaScheduler::new(2, 3.0, 100);
+        assert_eq!(s.milestone(2), Some(2));
+        assert_eq!(s.milestone(6), Some(6));
+        assert_eq!(s.milestone(18), Some(18));
+        assert_eq!(s.milestone(54), Some(54));
+        assert_eq!(s.milestone(3), None);
+        assert_eq!(s.milestone(1), None);
+    }
+
+    #[test]
+    fn bottom_trials_stop_at_first_rung() {
+        let mut sb = Sandbox::new(9, "acc", Mode::Max);
+        let mut s = AshaScheduler::new(1, 3.0, 81);
+        let mut stopped = 0;
+        // Trials arrive at rung 1 in descending quality.
+        for id in 0..9u64 {
+            let acc = 1.0 - id as f64 * 0.1;
+            match sb.feed(&mut s, id, 1, acc) {
+                Decision::Stop => stopped += 1,
+                Decision::Checkpoint | Decision::Continue => {}
+                d => panic!("{d:?}"),
+            }
+        }
+        // With eta=3, roughly 2/3 of later arrivals are below cutoff.
+        assert!(stopped >= 4, "stopped={stopped}");
+        assert!(s.num_stopped() == stopped);
+    }
+
+    #[test]
+    fn early_arrivals_are_optimistically_promoted() {
+        let mut sb = Sandbox::new(2, "acc", Mode::Max);
+        let mut s = AshaScheduler::new(1, 2.0, 100);
+        // First at a rung always promotes (top-1 of 1).
+        assert_ne!(sb.feed(&mut s, 0, 1, 0.1), Decision::Stop);
+    }
+
+    #[test]
+    fn non_rung_iterations_continue() {
+        let mut sb = Sandbox::new(1, "acc", Mode::Max);
+        let mut s = AshaScheduler::new(4, 2.0, 100);
+        for iter in 1..4 {
+            assert_eq!(sb.feed(&mut s, 0, iter, 0.0), Decision::Continue);
+        }
+    }
+
+    #[test]
+    fn min_mode_promotes_low_loss() {
+        let mut sb = Sandbox::new(4, "loss", Mode::Min);
+        let mut s = AshaScheduler::new(1, 2.0, 100);
+        sb.feed(&mut s, 0, 1, 0.1);
+        sb.feed(&mut s, 1, 1, 0.2);
+        sb.feed(&mut s, 2, 1, 0.3);
+        // Worst loss among 4 with eta=2 -> below top-half cutoff.
+        assert_eq!(sb.feed(&mut s, 3, 1, 0.9), Decision::Stop);
+    }
+
+    #[test]
+    fn no_rungs_at_or_past_max_t() {
+        let s = AshaScheduler::new(1, 2.0, 8);
+        assert_eq!(s.milestone(8), None); // max_t itself is not a rung
+        assert_eq!(s.milestone(4), Some(4));
+    }
+}

@@ -1,0 +1,40 @@
+//! FIFO — the paper's "trivial scheduler" (Table 1: 10 LoC). Runs each
+//! trial to its stopping condition, launching pending trials in arrival
+//! order whenever resources free up. Baseline for every comparison.
+
+use super::{Decision, ResultRow, SchedulerCtx, Trial, TrialScheduler};
+
+#[derive(Default)]
+pub struct FifoScheduler;
+
+impl FifoScheduler {
+    pub fn new() -> Self {
+        FifoScheduler
+    }
+}
+
+impl TrialScheduler for FifoScheduler {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+    fn on_result(&mut self, _ctx: &SchedulerCtx, _trial: &Trial, _r: &ResultRow) -> Decision {
+        Decision::Continue
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::Sandbox;
+    use super::*;
+    use crate::coordinator::trial::Mode;
+
+    #[test]
+    fn always_continues_and_picks_in_order() {
+        let mut sb = Sandbox::new(3, "acc", Mode::Max);
+        let mut s = FifoScheduler::new();
+        assert_eq!(s.choose_trial_to_run(&sb.ctx()), Some(0));
+        for i in 1..=5 {
+            assert_eq!(sb.feed(&mut s, 0, i, 0.1), Decision::Continue);
+        }
+    }
+}

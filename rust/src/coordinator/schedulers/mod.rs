@@ -1,0 +1,221 @@
+//! The scheduling API (§4.2 of the paper) — the narrow waist between
+//! the execution engine and hyperparameter-search research.
+//!
+//! The paper's interface is event-based:
+//!
+//! ```text
+//! class TrialScheduler:
+//!     def on_result(self, trial, result): ...
+//!     def choose_trial_to_run(self): ...
+//! ```
+//!
+//! `on_result` is invoked as intermediate results arrive and returns a
+//! flag "indicating whether to continue, checkpoint, stop, or restart a
+//! trial with an updated hyperparameter configuration" — our
+//! [`Decision`]. `choose_trial_to_run` is called whenever the cluster
+//! has free resources. This module hosts the trait plus the shared
+//! context; the concrete algorithms of Table 1 live in the submodules:
+//!
+//! | module              | algorithm                         | paper LoC |
+//! |---------------------|-----------------------------------|-----------|
+//! | `fifo`              | FIFO (trivial scheduler)          | 10        |
+//! | `asha`              | Asynchronous HyperBand            | 78        |
+//! | `hyperband`         | HyperBand (original, synchronous) | 215       |
+//! | `median_stopping`   | Median Stopping Rule              | 68        |
+//! | `pbt`               | Population-Based Training         | 169       |
+//!
+//! (HyperOpt-style TPE is a *search algorithm*, `coordinator::search::tpe`.)
+
+use std::collections::BTreeMap;
+
+use super::trial::{Config, Mode, ResultRow, Trial, TrialId, TrialStatus};
+
+pub mod asha;
+pub mod fifo;
+pub mod hyperband;
+pub mod median_stopping;
+pub mod pbt;
+
+pub use asha::AshaScheduler;
+pub use fifo::FifoScheduler;
+pub use hyperband::HyperBandScheduler;
+pub use median_stopping::MedianStoppingRule;
+pub use pbt::PbtScheduler;
+
+/// What the scheduler wants done with a trial after a result.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Decision {
+    /// Keep training.
+    Continue,
+    /// Snapshot, then keep training.
+    Checkpoint,
+    /// Snapshot and deschedule; resumable later via
+    /// `choose_trial_to_run` (HyperBand rung barrier).
+    Pause,
+    /// Terminate early.
+    Stop,
+    /// Restart from `source`'s latest checkpoint with a mutated config
+    /// (PBT exploit+explore).
+    Exploit { source: TrialId, config: Config },
+}
+
+/// Read-only view of experiment state passed to scheduler callbacks.
+pub struct SchedulerCtx<'a> {
+    pub trials: &'a BTreeMap<TrialId, Trial>,
+    pub metric: &'a str,
+    pub mode: Mode,
+}
+
+impl<'a> SchedulerCtx<'a> {
+    /// Last reported metric of a trial, normalized so higher is better.
+    pub fn score(&self, trial: &Trial) -> Option<f64> {
+        trial
+            .last_result
+            .as_ref()
+            .and_then(|r| r.metric(self.metric))
+            .map(|v| self.mode.ascending(v))
+    }
+
+    pub fn first_pending(&self) -> Option<TrialId> {
+        self.trials
+            .values()
+            .find(|t| t.status == TrialStatus::Pending)
+            .map(|t| t.id)
+    }
+}
+
+/// The trial scheduler interface (§4.2).
+pub trait TrialScheduler: Send {
+    fn name(&self) -> &'static str;
+
+    /// A new trial has been added to the experiment.
+    fn on_trial_add(&mut self, _ctx: &SchedulerCtx, _trial: &Trial) {}
+
+    /// An intermediate result arrived; decide the trial's fate.
+    fn on_result(&mut self, ctx: &SchedulerCtx, trial: &Trial, result: &ResultRow) -> Decision;
+
+    /// The trial reached a terminal state (completed/stopped/errored).
+    fn on_trial_remove(&mut self, _ctx: &SchedulerCtx, _id: TrialId) {}
+
+    /// Pick the next trial to launch (among Pending/Paused) now that
+    /// resources are available. Default: FIFO over pending trials.
+    fn choose_trial_to_run(&mut self, ctx: &SchedulerCtx) -> Option<TrialId> {
+        ctx.first_pending()
+    }
+
+    /// Trials condemned outside an `on_result` return value (HyperBand
+    /// rung cuts terminate *paused* peers). Runner drains after every
+    /// event. Default: none.
+    fn drain_stops(&mut self) -> Vec<TrialId> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::coordinator::trial::ParamValue;
+    use crate::ray::Resources;
+
+    pub fn mk_trial(id: TrialId, lr: f64) -> Trial {
+        let mut c = Config::new();
+        c.insert("lr".into(), ParamValue::F64(lr));
+        Trial::new(id, c, Resources::cpu(1.0), id)
+    }
+
+    pub fn row(iter: u64, metric: &str, v: f64) -> ResultRow {
+        ResultRow::new(iter, iter as f64).with(metric, v)
+    }
+
+    /// Drive `n` trials through `scheduler`, feeding per-trial metric
+    /// sequences; returns the decisions taken at each (trial, iter).
+    pub struct Sandbox {
+        pub trials: BTreeMap<TrialId, Trial>,
+        pub metric: String,
+        pub mode: Mode,
+    }
+
+    impl Sandbox {
+        pub fn new(n: u64, metric: &str, mode: Mode) -> Self {
+            let trials = (0..n).map(|i| (i, mk_trial(i, 0.01 * (i + 1) as f64))).collect();
+            Sandbox { trials, metric: metric.into(), mode }
+        }
+
+        pub fn ctx(&self) -> SchedulerCtx<'_> {
+            SchedulerCtx { trials: &self.trials, metric: &self.metric, mode: self.mode }
+        }
+
+        pub fn add_all(&mut self, s: &mut dyn TrialScheduler) {
+            let ids: Vec<TrialId> = self.trials.keys().copied().collect();
+            for id in ids {
+                let t = self.trials[&id].clone();
+                let ctx = SchedulerCtx {
+                    trials: &self.trials,
+                    metric: &self.metric,
+                    mode: self.mode,
+                };
+                s.on_trial_add(&ctx, &t);
+            }
+        }
+
+        pub fn feed(
+            &mut self,
+            s: &mut dyn TrialScheduler,
+            id: TrialId,
+            iter: u64,
+            value: f64,
+        ) -> Decision {
+            let metric = self.metric.clone();
+            let r = row(iter, &metric, value);
+            {
+                let t = self.trials.get_mut(&id).unwrap();
+                t.status = TrialStatus::Running;
+                t.record(r.clone(), &metric, self.mode);
+            }
+            let t = self.trials[&id].clone();
+            let ctx = SchedulerCtx {
+                trials: &self.trials,
+                metric: &self.metric,
+                mode: self.mode,
+            };
+            let d = s.on_result(&ctx, &t, &r);
+            match &d {
+                Decision::Stop => self.trials.get_mut(&id).unwrap().status = TrialStatus::Stopped,
+                Decision::Pause => self.trials.get_mut(&id).unwrap().status = TrialStatus::Paused,
+                _ => {}
+            }
+            d
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn ctx_score_normalizes_mode() {
+        let mut sb = Sandbox::new(1, "loss", Mode::Min);
+        let metric = sb.metric.clone();
+        let mode = sb.mode;
+        sb.trials.get_mut(&0).unwrap().record(row(1, &metric, 2.0), &metric, mode);
+        let ctx = sb.ctx();
+        assert_eq!(ctx.score(&ctx.trials[&0]), Some(-2.0));
+    }
+
+    #[test]
+    fn default_choose_is_first_pending() {
+        let sb = Sandbox::new(3, "loss", Mode::Min);
+        struct S;
+        impl TrialScheduler for S {
+            fn name(&self) -> &'static str {
+                "s"
+            }
+            fn on_result(&mut self, _: &SchedulerCtx, _: &Trial, _: &ResultRow) -> Decision {
+                Decision::Continue
+            }
+        }
+        assert_eq!(S.choose_trial_to_run(&sb.ctx()), Some(0));
+    }
+}

@@ -1,0 +1,204 @@
+//! (mu + lambda) evolutionary search — the "genetic algorithms" family
+//! §3 cites as a motivating workload class ("genetic algorithms
+//! commonly clone or mutate model parameters in the middle of
+//! training"). This is the *search-side* variant (PBT is the
+//! scheduler-side one): parents are the top-mu completed trials;
+//! children mutate a random parent's config (perturb continuous dims,
+//! occasionally resample; resample categoricals with low probability).
+
+use super::SearchAlgorithm;
+use crate::coordinator::spec::{sample_config, ParamDist, SearchSpace};
+use crate::coordinator::trial::{Config, Mode, ParamValue, ResultRow};
+use crate::util::rng::Rng;
+
+pub struct EvolutionSearch {
+    space: SearchSpace,
+    remaining: usize,
+    /// Parents pool size.
+    pub mu: usize,
+    /// Random configs before evolution starts (and exploration mix-in).
+    pub population_size: usize,
+    pub resample_prob: f64,
+    pub perturb_sigma: f64,
+    /// Completed (config, ascending score), kept sorted best-first,
+    /// truncated to mu.
+    parents: Vec<(Config, f64)>,
+    evaluated: usize,
+}
+
+impl EvolutionSearch {
+    pub fn new(space: SearchSpace, num_samples: usize) -> Self {
+        EvolutionSearch {
+            space,
+            remaining: num_samples,
+            mu: 4,
+            population_size: 12,
+            resample_prob: 0.15,
+            perturb_sigma: 0.25,
+            parents: Vec::new(),
+            evaluated: 0,
+        }
+    }
+
+    pub fn num_parents(&self) -> usize {
+        self.parents.len()
+    }
+
+    fn mutate(&self, parent: &Config, rng: &mut Rng) -> Config {
+        let mut child = parent.clone();
+        for (key, dist) in &self.space {
+            if rng.bool(self.resample_prob) {
+                child.insert(key.clone(), dist.sample(rng));
+                continue;
+            }
+            let cur = child.get(key).cloned();
+            let newv = match (dist, cur) {
+                (ParamDist::Uniform(lo, hi), Some(v)) => {
+                    let x = v.as_f64().unwrap_or((*lo + *hi) / 2.0);
+                    let sigma = (hi - lo) * self.perturb_sigma;
+                    Some(ParamValue::F64((x + rng.normal() * sigma).clamp(*lo, *hi)))
+                }
+                (ParamDist::LogUniform(lo, hi), Some(v)) => {
+                    // Perturb in log space (scale parameters).
+                    let x = v.as_f64().unwrap_or((lo * hi).sqrt()).max(*lo);
+                    let span = (hi / lo).ln();
+                    let y = x.ln() + rng.normal() * span * self.perturb_sigma;
+                    Some(ParamValue::F64(y.exp().clamp(*lo, *hi)))
+                }
+                (ParamDist::QUniform(lo, hi, q), Some(v)) => {
+                    let x = v.as_f64().unwrap_or(*lo);
+                    let sigma = (hi - lo) * self.perturb_sigma;
+                    let y = ((x + rng.normal() * sigma) / q).round() * q;
+                    Some(ParamValue::F64(y.clamp(*lo, *hi)))
+                }
+                (ParamDist::RandInt(lo, hi), Some(v)) => {
+                    let x = match v {
+                        ParamValue::I64(i) => i,
+                        _ => *lo,
+                    };
+                    let step = rng.range(-2, 3);
+                    Some(ParamValue::I64((x + step).clamp(*lo, *hi - 1)))
+                }
+                // Categorical / grid / const: inherit (resample handled
+                // above).
+                (_, Some(v)) => Some(v),
+                (_, None) => None,
+            };
+            match newv {
+                Some(v) => {
+                    child.insert(key.clone(), v);
+                }
+                None => {
+                    child.insert(key.clone(), dist.sample(rng));
+                }
+            }
+        }
+        child
+    }
+}
+
+impl SearchAlgorithm for EvolutionSearch {
+    fn name(&self) -> &'static str {
+        "evolution"
+    }
+
+    fn next_config(&mut self, rng: &mut Rng) -> Option<Config> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        // Warmup generation, plus a persistent exploration mix-in.
+        if self.parents.is_empty() || self.evaluated < self.population_size || rng.bool(0.1) {
+            return Some(sample_config(&self.space, rng));
+        }
+        let parent = &self.parents[rng.index(self.parents.len())].0.clone();
+        Some(self.mutate(parent, rng))
+    }
+
+    fn on_complete(&mut self, config: &Config, final_metric: Option<f64>, mode: Mode) {
+        let Some(m) = final_metric else { return };
+        self.evaluated += 1;
+        self.parents.push((config.clone(), mode.ascending(m)));
+        self.parents
+            .sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        self.parents.truncate(self.mu);
+    }
+
+    fn on_result(&mut self, _config: &Config, _result: &ResultRow) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::spec::SpaceBuilder;
+
+    fn space() -> SearchSpace {
+        SpaceBuilder::new()
+            .loguniform("lr", 1e-5, 1.0)
+            .uniform("m", 0.0, 1.0)
+            .choice_str("act", &["a", "b"])
+            .randint("layers", 1, 6)
+            .build()
+    }
+
+    /// Bowl objective: best at lr = 1e-2, m = 0.7.
+    fn objective(c: &Config) -> f64 {
+        let lr = c["lr"].as_f64().unwrap();
+        let m = c["m"].as_f64().unwrap();
+        -(lr.log10() + 2.0).powi(2) - 4.0 * (m - 0.7).powi(2)
+    }
+
+    #[test]
+    fn converges_toward_optimum() {
+        let mut es = EvolutionSearch::new(space(), 300);
+        let mut rng = Rng::new(3);
+        let mut late = Vec::new();
+        let mut i = 0;
+        while let Some(c) = es.next_config(&mut rng) {
+            es.on_complete(&c, Some(objective(&c)), Mode::Max);
+            i += 1;
+            if i > 200 {
+                late.push(c["lr"].as_f64().unwrap().log10());
+            }
+        }
+        let mean: f64 = late.iter().sum::<f64>() / late.len() as f64;
+        assert!((mean + 2.0).abs() < 0.8, "mean log10(lr) = {mean}");
+    }
+
+    #[test]
+    fn children_stay_in_support() {
+        let sp = space();
+        let mut es = EvolutionSearch::new(sp.clone(), 200);
+        let mut rng = Rng::new(5);
+        while let Some(c) = es.next_config(&mut rng) {
+            for (k, d) in &sp {
+                assert!(d.contains(&c[k]), "{k}: {:?}", c[k]);
+            }
+            es.on_complete(&c, Some(rng.f64()), Mode::Max);
+        }
+    }
+
+    #[test]
+    fn parent_pool_is_truncated_to_mu() {
+        let mut es = EvolutionSearch::new(space(), 100);
+        let mut rng = Rng::new(7);
+        for i in 0..50 {
+            let c = es.next_config(&mut rng).unwrap();
+            es.on_complete(&c, Some(i as f64), Mode::Max);
+        }
+        assert_eq!(es.num_parents(), es.mu);
+        // Parents are the best scores seen (46..49 ascending-normalized).
+        assert!(es.parents.iter().all(|(_, s)| *s >= 46.0));
+    }
+
+    #[test]
+    fn exhausts_after_num_samples() {
+        let mut es = EvolutionSearch::new(space(), 7);
+        let mut rng = Rng::new(9);
+        let mut n = 0;
+        while es.next_config(&mut rng).is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 7);
+    }
+}

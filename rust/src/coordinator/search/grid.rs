@@ -1,0 +1,99 @@
+//! Grid search over the DSL's `grid_search` dimensions (§4.3's
+//! quickstart: a 3x2 grid over lr x activation), with stochastic
+//! dimensions sampled per repetition. `num_samples` repeats the whole
+//! grid, matching Tune's semantics.
+
+use super::SearchAlgorithm;
+use crate::coordinator::spec::{expand_grid, SearchSpace};
+use crate::coordinator::trial::Config;
+use crate::util::rng::Rng;
+
+pub struct GridSearch {
+    space: SearchSpace,
+    num_samples: usize,
+    emitted_in_pass: usize,
+    pass: usize,
+    current: Vec<Config>,
+}
+
+impl GridSearch {
+    pub fn new(space: SearchSpace, num_samples: usize) -> Self {
+        GridSearch {
+            space,
+            num_samples: num_samples.max(1),
+            emitted_in_pass: 0,
+            pass: 0,
+            current: Vec::new(),
+        }
+    }
+}
+
+impl SearchAlgorithm for GridSearch {
+    fn name(&self) -> &'static str {
+        "grid"
+    }
+
+    fn next_config(&mut self, rng: &mut Rng) -> Option<Config> {
+        if self.pass >= self.num_samples {
+            return None;
+        }
+        if self.emitted_in_pass == 0 {
+            // Each pass re-samples stochastic dimensions.
+            self.current = expand_grid(&self.space, rng);
+        }
+        let cfg = self.current.get(self.emitted_in_pass).cloned();
+        self.emitted_in_pass += 1;
+        if self.emitted_in_pass >= self.current.len() {
+            self.emitted_in_pass = 0;
+            self.pass += 1;
+        }
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::spec::SpaceBuilder;
+
+    #[test]
+    fn emits_full_grid_then_exhausts() {
+        let sp = SpaceBuilder::new()
+            .grid_f64("lr", &[0.01, 0.001, 0.0001])
+            .grid_str("activation", &["relu", "tanh"])
+            .build();
+        let mut g = GridSearch::new(sp, 1);
+        let mut rng = Rng::new(0);
+        let mut n = 0;
+        while g.next_config(&mut rng).is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 6);
+        assert!(g.next_config(&mut rng).is_none());
+    }
+
+    #[test]
+    fn num_samples_repeats_grid() {
+        let sp = SpaceBuilder::new().grid_f64("lr", &[0.1, 0.2]).build();
+        let mut g = GridSearch::new(sp, 3);
+        let mut rng = Rng::new(0);
+        let mut n = 0;
+        while g.next_config(&mut rng).is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 6);
+    }
+
+    #[test]
+    fn stochastic_dims_resample_each_pass() {
+        let sp = SpaceBuilder::new()
+            .grid_f64("lr", &[0.1])
+            .uniform("m", 0.0, 1.0)
+            .build();
+        let mut g = GridSearch::new(sp, 2);
+        let mut rng = Rng::new(1);
+        let a = g.next_config(&mut rng).unwrap()["m"].as_f64().unwrap();
+        let b = g.next_config(&mut rng).unwrap()["m"].as_f64().unwrap();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,59 @@
+//! Search algorithms: the *suggestion* side of model selection.
+//!
+//! §4.2: trial schedulers "can add to the list of trials to execute
+//! (e.g., based on suggestions from HyperOpt)". In Tune (as in Ray
+//! today) this is factored into a second narrow interface: a
+//! [`SearchAlgorithm`] proposes hyperparameter configurations; the trial
+//! scheduler decides how to allocate resources among the resulting
+//! trials. Any search algorithm composes with any scheduler.
+
+use super::spec::SearchSpace;
+use super::trial::{Config, Mode, ResultRow};
+use crate::util::rng::Rng;
+
+pub mod evolution;
+pub mod grid;
+pub mod random;
+pub mod tpe;
+
+pub use evolution::EvolutionSearch;
+pub use grid::GridSearch;
+pub use random::RandomSearch;
+pub use tpe::TpeSearch;
+
+/// Produces trial configurations, optionally conditioning on results.
+pub trait SearchAlgorithm: Send {
+    fn name(&self) -> &'static str;
+
+    /// Next configuration to try; None = exhausted.
+    fn next_config(&mut self, rng: &mut Rng) -> Option<Config>;
+
+    /// Intermediate result feedback (most algorithms ignore it).
+    fn on_result(&mut self, _config: &Config, _result: &ResultRow) {}
+
+    /// A trial finished with `final_metric` (already in the raw metric
+    /// space; `mode` tells the algorithm which direction is better).
+    fn on_complete(&mut self, _config: &Config, _final_metric: Option<f64>, _mode: Mode) {}
+}
+
+/// Helper shared by search impls: total configs a space yields for
+/// `num_samples` (grid dims multiply, per §4.3's DSL semantics).
+pub fn total_trials(space: &SearchSpace, num_samples: usize) -> usize {
+    super::spec::grid_size(space) * num_samples.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::spec::SpaceBuilder;
+
+    #[test]
+    fn total_trials_multiplies_grid() {
+        let sp = SpaceBuilder::new()
+            .grid_f64("lr", &[0.1, 0.01])
+            .uniform("m", 0.0, 1.0)
+            .build();
+        assert_eq!(total_trials(&sp, 3), 6);
+        assert_eq!(total_trials(&sp, 0), 2);
+    }
+}

@@ -1,0 +1,64 @@
+//! Random search (Bergstra & Bengio 2012): i.i.d. samples from the
+//! search space. The workhorse baseline under ASHA/HyperBand/median
+//! stopping in C1, and the static baseline PBT must beat in C2.
+
+use super::SearchAlgorithm;
+use crate::coordinator::spec::{sample_config, SearchSpace};
+use crate::coordinator::trial::Config;
+use crate::util::rng::Rng;
+
+pub struct RandomSearch {
+    space: SearchSpace,
+    remaining: usize,
+}
+
+impl RandomSearch {
+    pub fn new(space: SearchSpace, num_samples: usize) -> Self {
+        RandomSearch { space, remaining: num_samples }
+    }
+}
+
+impl SearchAlgorithm for RandomSearch {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn next_config(&mut self, rng: &mut Rng) -> Option<Config> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        Some(sample_config(&self.space, rng))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::spec::SpaceBuilder;
+
+    #[test]
+    fn emits_exactly_n() {
+        let sp = SpaceBuilder::new().uniform("x", 0.0, 1.0).build();
+        let mut s = RandomSearch::new(sp, 5);
+        let mut rng = Rng::new(0);
+        let mut n = 0;
+        while s.next_config(&mut rng).is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 5);
+    }
+
+    #[test]
+    fn samples_are_distinct() {
+        let sp = SpaceBuilder::new().uniform("x", 0.0, 1.0).build();
+        let mut s = RandomSearch::new(sp, 10);
+        let mut rng = Rng::new(1);
+        let mut xs = Vec::new();
+        while let Some(c) = s.next_config(&mut rng) {
+            xs.push(c["x"].as_f64().unwrap());
+        }
+        xs.dedup();
+        assert_eq!(xs.len(), 10);
+    }
+}

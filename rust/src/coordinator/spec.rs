@@ -1,0 +1,238 @@
+//! The parameter DSL of §4.3: `grid_search`, `uniform`, `loguniform`,
+//! `quniform`, `randint`, `choice`, constants — and the machinery that
+//! turns a search space into concrete trial configs (full grid cross
+//! product for grid dimensions, seeded sampling for stochastic ones).
+//! "Tune's parameter DSL offers features similar to those provided by
+//! HyperOpt."
+
+use std::collections::BTreeMap;
+
+use crate::util::rng::Rng;
+
+use super::trial::{Config, ParamValue};
+
+#[derive(Clone, Debug)]
+pub enum ParamDist {
+    /// Every value is expanded into the initial trial grid.
+    GridSearch(Vec<ParamValue>),
+    /// Sampled uniformly from the listed values.
+    Choice(Vec<ParamValue>),
+    Uniform(f64, f64),
+    LogUniform(f64, f64),
+    /// Uniform quantized to multiples of `q`.
+    QUniform(f64, f64, f64),
+    RandInt(i64, i64),
+    Const(ParamValue),
+}
+
+impl ParamDist {
+    pub fn sample(&self, rng: &mut Rng) -> ParamValue {
+        match self {
+            ParamDist::GridSearch(vs) | ParamDist::Choice(vs) => rng.choose(vs).clone(),
+            ParamDist::Uniform(lo, hi) => ParamValue::F64(rng.uniform(*lo, *hi)),
+            ParamDist::LogUniform(lo, hi) => ParamValue::F64(rng.log_uniform(*lo, *hi)),
+            ParamDist::QUniform(lo, hi, q) => {
+                let v = rng.uniform(*lo, *hi);
+                ParamValue::F64((v / q).round() * q)
+            }
+            ParamDist::RandInt(lo, hi) => ParamValue::I64(rng.range(*lo, *hi)),
+            ParamDist::Const(v) => v.clone(),
+        }
+    }
+
+    /// Is the value inside this distribution's support?
+    pub fn contains(&self, v: &ParamValue) -> bool {
+        match self {
+            ParamDist::GridSearch(vs) | ParamDist::Choice(vs) => vs.contains(v),
+            ParamDist::Uniform(lo, hi) | ParamDist::LogUniform(lo, hi) => {
+                v.as_f64().map_or(false, |x| x >= *lo && x <= *hi)
+            }
+            ParamDist::QUniform(lo, hi, _) => {
+                v.as_f64().map_or(false, |x| x >= *lo - 1e-12 && x <= *hi + 1e-12)
+            }
+            ParamDist::RandInt(lo, hi) => match v {
+                ParamValue::I64(x) => x >= lo && x < hi,
+                _ => false,
+            },
+            ParamDist::Const(c) => v == c,
+        }
+    }
+}
+
+/// An ordered search space: param name -> distribution.
+pub type SearchSpace = BTreeMap<String, ParamDist>;
+
+/// Builder-style helpers mirroring the python DSL.
+pub struct SpaceBuilder {
+    space: SearchSpace,
+}
+
+impl SpaceBuilder {
+    pub fn new() -> Self {
+        SpaceBuilder { space: SearchSpace::new() }
+    }
+    pub fn grid_f64(mut self, key: &str, values: &[f64]) -> Self {
+        self.space.insert(
+            key.into(),
+            ParamDist::GridSearch(values.iter().map(|v| ParamValue::F64(*v)).collect()),
+        );
+        self
+    }
+    pub fn grid_str(mut self, key: &str, values: &[&str]) -> Self {
+        self.space.insert(
+            key.into(),
+            ParamDist::GridSearch(values.iter().map(|v| ParamValue::Str(v.to_string())).collect()),
+        );
+        self
+    }
+    pub fn choice_str(mut self, key: &str, values: &[&str]) -> Self {
+        self.space.insert(
+            key.into(),
+            ParamDist::Choice(values.iter().map(|v| ParamValue::Str(v.to_string())).collect()),
+        );
+        self
+    }
+    pub fn uniform(mut self, key: &str, lo: f64, hi: f64) -> Self {
+        self.space.insert(key.into(), ParamDist::Uniform(lo, hi));
+        self
+    }
+    pub fn loguniform(mut self, key: &str, lo: f64, hi: f64) -> Self {
+        self.space.insert(key.into(), ParamDist::LogUniform(lo, hi));
+        self
+    }
+    pub fn quniform(mut self, key: &str, lo: f64, hi: f64, q: f64) -> Self {
+        self.space.insert(key.into(), ParamDist::QUniform(lo, hi, q));
+        self
+    }
+    pub fn randint(mut self, key: &str, lo: i64, hi: i64) -> Self {
+        self.space.insert(key.into(), ParamDist::RandInt(lo, hi));
+        self
+    }
+    pub fn constant(mut self, key: &str, v: ParamValue) -> Self {
+        self.space.insert(key.into(), ParamDist::Const(v));
+        self
+    }
+    pub fn build(self) -> SearchSpace {
+        self.space
+    }
+}
+
+impl Default for SpaceBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Number of configs in the grid cross-product (stochastic dims count 1).
+pub fn grid_size(space: &SearchSpace) -> usize {
+    space
+        .values()
+        .map(|d| match d {
+            ParamDist::GridSearch(vs) => vs.len().max(1),
+            _ => 1,
+        })
+        .product()
+}
+
+/// Expand the full grid over `GridSearch` dimensions; each grid point
+/// samples the stochastic dimensions once from `rng`. This is exactly
+/// the paper's "initial set of trials input to the scheduler".
+pub fn expand_grid(space: &SearchSpace, rng: &mut Rng) -> Vec<Config> {
+    let mut configs = vec![Config::new()];
+    for (key, dist) in space {
+        match dist {
+            ParamDist::GridSearch(vs) => {
+                let mut next = Vec::with_capacity(configs.len() * vs.len());
+                for c in &configs {
+                    for v in vs {
+                        let mut c2 = c.clone();
+                        c2.insert(key.clone(), v.clone());
+                        next.push(c2);
+                    }
+                }
+                configs = next;
+            }
+            _ => {
+                for c in &mut configs {
+                    c.insert(key.clone(), dist.sample(rng));
+                }
+            }
+        }
+    }
+    configs
+}
+
+/// Sample one full config (all dimensions, grid dims sampled uniformly).
+pub fn sample_config(space: &SearchSpace, rng: &mut Rng) -> Config {
+    space.iter().map(|(k, d)| (k.clone(), d.sample(rng))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space() -> SearchSpace {
+        SpaceBuilder::new()
+            .grid_f64("lr", &[0.01, 0.001, 0.0001])
+            .grid_str("activation", &["relu", "tanh"])
+            .uniform("momentum", 0.8, 0.99)
+            .build()
+    }
+
+    #[test]
+    fn grid_size_is_cross_product() {
+        assert_eq!(grid_size(&space()), 6);
+    }
+
+    #[test]
+    fn expand_grid_covers_all_combinations() {
+        let mut rng = Rng::new(0);
+        let configs = expand_grid(&space(), &mut rng);
+        assert_eq!(configs.len(), 6);
+        let mut seen = std::collections::BTreeSet::new();
+        for c in &configs {
+            let lr = c["lr"].as_f64().unwrap();
+            let act = c["activation"].as_str().unwrap().to_string();
+            seen.insert((format!("{lr}"), act));
+            let m = c["momentum"].as_f64().unwrap();
+            assert!((0.8..0.99).contains(&m));
+        }
+        assert_eq!(seen.len(), 6);
+    }
+
+    #[test]
+    fn samples_respect_support() {
+        let sp = SpaceBuilder::new()
+            .loguniform("lr", 1e-4, 1e-1)
+            .quniform("bs", 16.0, 256.0, 16.0)
+            .randint("layers", 1, 5)
+            .choice_str("opt", &["sgd", "adam"])
+            .build();
+        let mut rng = Rng::new(1);
+        for _ in 0..500 {
+            let c = sample_config(&sp, &mut rng);
+            for (k, d) in &sp {
+                assert!(d.contains(&c[k]), "{k}: {:?}", c[k]);
+            }
+            let bs = c["bs"].as_f64().unwrap();
+            assert!((bs / 16.0 - (bs / 16.0).round()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn const_dim_is_constant() {
+        let sp = SpaceBuilder::new().constant("model", ParamValue::Str("tlm".into())).build();
+        let mut rng = Rng::new(2);
+        assert_eq!(sample_config(&sp, &mut rng)["model"], ParamValue::Str("tlm".into()));
+    }
+
+    #[test]
+    fn quickstart_grid_matches_paper_example() {
+        // §4.3: 3 x 2 grid over lr and activation.
+        let sp = SpaceBuilder::new()
+            .grid_f64("lr", &[0.01, 0.001, 0.0001])
+            .grid_str("activation", &["relu", "tanh"])
+            .build();
+        assert_eq!(grid_size(&sp), 6);
+    }
+}

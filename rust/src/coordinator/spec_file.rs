@@ -1,0 +1,314 @@
+//! Experiment specification files: the declarative JSON form of §4.3's
+//! `run_experiments` call, so whole experiments are launchable from the
+//! CLI (`tune run --spec configs/example.json`) and reproducible as
+//! checked-in artifacts.
+//!
+//! ```json
+//! {
+//!   "name": "asha-tlm", "metric": "loss", "mode": "min",
+//!   "num_samples": 16, "max_iterations_per_trial": 60,
+//!   "workload": "jax-tlm",
+//!   "scheduler": {"type": "asha", "grace_period": 3,
+//!                  "reduction_factor": 3, "max_t": 60},
+//!   "search": "random",
+//!   "space": {
+//!     "lr":         {"loguniform": [0.003, 1.0]},
+//!     "momentum":   {"uniform": [0.5, 0.99]},
+//!     "activation": {"choice": ["gelu", "relu"]},
+//!     "layers":     {"randint": [1, 4]},
+//!     "batch":      {"grid": [16, 32]}
+//!   },
+//!   "cluster": {"nodes": 4, "cpus_per_node": 8.0},
+//!   "resources_per_trial": {"cpu": 1.0, "gpu": 0.0}
+//! }
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::ray::{Cluster, Resources};
+use crate::util::json::{parse, Json};
+
+use super::experiment::{ExperimentSpec, SchedulerKind, SearchKind};
+use super::spec::{ParamDist, SearchSpace};
+use super::trial::{Mode, ParamValue};
+
+/// Everything a spec file defines.
+pub struct SpecFile {
+    pub spec: ExperimentSpec,
+    pub space: SearchSpace,
+    pub scheduler: SchedulerKind,
+    pub search: SearchKind,
+    /// Workload name: "curve" | "pbt-sim" | "const" | "jax-mlp" | "jax-tlm".
+    pub workload: String,
+    pub cluster: Cluster,
+}
+
+fn jf(j: &Json, key: &str) -> Option<f64> {
+    j.get(key).and_then(|v| v.as_f64())
+}
+
+fn param_value(j: &Json) -> Result<ParamValue> {
+    Ok(match j {
+        Json::Num(n) => ParamValue::F64(*n),
+        Json::Str(s) => ParamValue::Str(s.clone()),
+        Json::Bool(b) => ParamValue::Bool(*b),
+        other => bail!("unsupported param literal {other:?}"),
+    })
+}
+
+fn parse_dist(j: &Json) -> Result<ParamDist> {
+    // Bare literal = constant.
+    if !matches!(j, Json::Obj(_)) {
+        return Ok(ParamDist::Const(param_value(j)?));
+    }
+    let obj = j.as_obj().unwrap();
+    let (kind, arg) = obj.iter().next().ok_or_else(|| anyhow!("empty dist"))?;
+    let pair = || -> Result<(f64, f64)> {
+        let a = arg.as_arr().ok_or_else(|| anyhow!("{kind}: expected [lo, hi]"))?;
+        anyhow::ensure!(a.len() >= 2, "{kind}: expected [lo, hi]");
+        Ok((
+            a[0].as_f64().ok_or_else(|| anyhow!("bad lo"))?,
+            a[1].as_f64().ok_or_else(|| anyhow!("bad hi"))?,
+        ))
+    };
+    Ok(match kind.as_str() {
+        "uniform" => {
+            let (lo, hi) = pair()?;
+            ParamDist::Uniform(lo, hi)
+        }
+        "loguniform" => {
+            let (lo, hi) = pair()?;
+            ParamDist::LogUniform(lo, hi)
+        }
+        "quniform" => {
+            let a = arg.as_arr().ok_or_else(|| anyhow!("quniform: [lo,hi,q]"))?;
+            anyhow::ensure!(a.len() == 3, "quniform: [lo, hi, q]");
+            ParamDist::QUniform(
+                a[0].as_f64().unwrap_or(0.0),
+                a[1].as_f64().unwrap_or(0.0),
+                a[2].as_f64().unwrap_or(1.0),
+            )
+        }
+        "randint" => {
+            let (lo, hi) = pair()?;
+            ParamDist::RandInt(lo as i64, hi as i64)
+        }
+        "choice" => ParamDist::Choice(
+            arg.as_arr()
+                .ok_or_else(|| anyhow!("choice: expected array"))?
+                .iter()
+                .map(param_value)
+                .collect::<Result<_>>()?,
+        ),
+        "grid" | "grid_search" => ParamDist::GridSearch(
+            arg.as_arr()
+                .ok_or_else(|| anyhow!("grid: expected array"))?
+                .iter()
+                .map(param_value)
+                .collect::<Result<_>>()?,
+        ),
+        "const" => ParamDist::Const(param_value(arg)?),
+        other => bail!("unknown distribution {other:?}"),
+    })
+}
+
+fn parse_scheduler(j: Option<&Json>, max_t: u64, space: &SearchSpace) -> Result<SchedulerKind> {
+    let Some(j) = j else { return Ok(SchedulerKind::Fifo) };
+    let ty = match j {
+        Json::Str(s) => s.clone(),
+        _ => j
+            .get("type")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("scheduler needs a type"))?
+            .to_string(),
+    };
+    Ok(match ty.as_str() {
+        "fifo" => SchedulerKind::Fifo,
+        "asha" => SchedulerKind::Asha {
+            grace_period: jf(j, "grace_period").unwrap_or(1.0) as u64,
+            reduction_factor: jf(j, "reduction_factor").unwrap_or(3.0),
+            max_t: jf(j, "max_t").unwrap_or(max_t as f64) as u64,
+        },
+        "hyperband" => SchedulerKind::HyperBand {
+            max_t: jf(j, "max_t").unwrap_or(max_t as f64) as u64,
+            eta: jf(j, "eta").unwrap_or(3.0),
+        },
+        "median" | "median_stopping" => SchedulerKind::MedianStopping {
+            grace_period: jf(j, "grace_period").unwrap_or(5.0) as u64,
+            min_samples: jf(j, "min_samples").unwrap_or(3.0) as usize,
+        },
+        "pbt" => SchedulerKind::Pbt {
+            perturbation_interval: jf(j, "perturbation_interval").unwrap_or(10.0) as u64,
+            space: space.clone(),
+        },
+        other => bail!("unknown scheduler {other:?}"),
+    })
+}
+
+impl SpecFile {
+    pub fn load(path: &std::path::Path) -> Result<SpecFile> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        Self::parse_str(&text)
+    }
+
+    pub fn parse_str(text: &str) -> Result<SpecFile> {
+        let j = parse(text).map_err(|e| anyhow!("parsing spec: {e}"))?;
+
+        let mut space = SearchSpace::new();
+        if let Some(sp) = j.get("space").and_then(|v| v.as_obj()) {
+            for (k, dj) in sp {
+                space.insert(
+                    k.clone(),
+                    parse_dist(dj).with_context(|| format!("space.{k}"))?,
+                );
+            }
+        }
+
+        let mut spec = ExperimentSpec::named(
+            j.get("name").and_then(|v| v.as_str()).unwrap_or("experiment"),
+        );
+        if let Some(m) = j.get("metric").and_then(|v| v.as_str()) {
+            spec.metric = m.to_string();
+        }
+        spec.mode = match j.get("mode").and_then(|v| v.as_str()) {
+            Some("max") => Mode::Max,
+            Some("min") | None => Mode::Min,
+            Some(other) => bail!("mode must be min|max, got {other:?}"),
+        };
+        if let Some(n) = jf(&j, "num_samples") {
+            spec.num_samples = n as usize;
+        }
+        if let Some(n) = jf(&j, "max_iterations_per_trial") {
+            spec.max_iterations_per_trial = n as u64;
+        }
+        if let Some(n) = jf(&j, "metric_target") {
+            spec.metric_target = Some(n);
+        }
+        if let Some(n) = jf(&j, "max_experiment_time_s") {
+            spec.max_experiment_time_s = n;
+        }
+        if let Some(n) = jf(&j, "max_concurrent") {
+            spec.max_concurrent = n as usize;
+        }
+        if let Some(n) = jf(&j, "max_failures") {
+            spec.max_failures = n as u32;
+        }
+        if let Some(n) = jf(&j, "checkpoint_freq") {
+            spec.checkpoint_freq = n as u64;
+        }
+        if let Some(n) = jf(&j, "seed") {
+            spec.seed = n as u64;
+        }
+        if let Some(r) = j.get("resources_per_trial") {
+            spec.resources_per_trial = Resources::cpu_gpu(
+                jf(r, "cpu").unwrap_or(1.0),
+                jf(r, "gpu").unwrap_or(0.0),
+            );
+        }
+
+        let scheduler =
+            parse_scheduler(j.get("scheduler"), spec.max_iterations_per_trial, &space)?;
+        let search = match j.get("search").and_then(|v| v.as_str()).unwrap_or("random") {
+            "grid" => SearchKind::Grid,
+            "random" => SearchKind::Random,
+            "tpe" => SearchKind::Tpe,
+            "evolution" => SearchKind::Evolution,
+            other => bail!("unknown search {other:?}"),
+        };
+        let workload = j
+            .get("workload")
+            .and_then(|v| v.as_str())
+            .unwrap_or("curve")
+            .to_string();
+        let nodes = j.get("cluster").and_then(|c| jf(c, "nodes")).unwrap_or(4.0) as usize;
+        let cpus = j.get("cluster").and_then(|c| jf(c, "cpus_per_node")).unwrap_or(8.0);
+        let gpus = j.get("cluster").and_then(|c| jf(c, "gpus_per_node")).unwrap_or(0.0);
+        let cluster = Cluster::uniform(nodes.max(1), Resources::cpu_gpu(cpus, gpus));
+
+        Ok(SpecFile { spec, space, scheduler, search, workload, cluster })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EXAMPLE: &str = r#"{
+        "name": "t", "metric": "loss", "mode": "min",
+        "num_samples": 8, "max_iterations_per_trial": 27, "seed": 5,
+        "workload": "curve",
+        "scheduler": {"type": "asha", "grace_period": 2, "reduction_factor": 3, "max_t": 27},
+        "search": "tpe",
+        "space": {
+            "lr": {"loguniform": [1e-4, 1.0]},
+            "momentum": {"uniform": [0.8, 0.99]},
+            "activation": {"choice": ["relu", "tanh"]},
+            "layers": {"randint": [1, 4]},
+            "bs": {"grid": [16, 32]},
+            "model": "mlp"
+        },
+        "cluster": {"nodes": 2, "cpus_per_node": 4},
+        "resources_per_trial": {"cpu": 0.5}
+    }"#;
+
+    #[test]
+    fn parses_full_spec() {
+        let f = SpecFile::parse_str(EXAMPLE).unwrap();
+        assert_eq!(f.spec.name, "t");
+        assert_eq!(f.spec.num_samples, 8);
+        assert_eq!(f.spec.mode, Mode::Min);
+        assert_eq!(f.spec.seed, 5);
+        assert_eq!(f.spec.resources_per_trial.cpu, 0.5);
+        assert_eq!(f.space.len(), 6);
+        assert!(matches!(f.space["lr"], ParamDist::LogUniform(..)));
+        assert!(matches!(f.space["bs"], ParamDist::GridSearch(..)));
+        assert!(matches!(f.space["model"], ParamDist::Const(..)));
+        assert!(matches!(f.scheduler, SchedulerKind::Asha { grace_period: 2, .. }));
+        assert_eq!(f.cluster.nodes.len(), 2);
+        assert_eq!(f.workload, "curve");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let f = SpecFile::parse_str(r#"{"space": {"x": {"uniform": [0, 1]}}}"#).unwrap();
+        assert!(matches!(f.scheduler, SchedulerKind::Fifo));
+        assert_eq!(f.spec.metric, "loss");
+        assert_eq!(f.workload, "curve");
+    }
+
+    #[test]
+    fn pbt_scheduler_captures_space() {
+        let f = SpecFile::parse_str(
+            r#"{"space": {"lr": {"loguniform": [1e-4, 1.0]}},
+                "scheduler": {"type": "pbt", "perturbation_interval": 5}}"#,
+        )
+        .unwrap();
+        match f.scheduler {
+            SchedulerKind::Pbt { perturbation_interval, space } => {
+                assert_eq!(perturbation_interval, 5);
+                assert!(space.contains_key("lr"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_specs_error() {
+        assert!(SpecFile::parse_str("{").is_err());
+        assert!(SpecFile::parse_str(r#"{"mode": "sideways"}"#).is_err());
+        assert!(SpecFile::parse_str(r#"{"scheduler": "warp"}"#).is_err());
+        assert!(SpecFile::parse_str(r#"{"space": {"x": {"zipf": [1]}}}"#).is_err());
+    }
+
+    #[test]
+    fn sampled_configs_respect_parsed_space() {
+        let f = SpecFile::parse_str(EXAMPLE).unwrap();
+        let mut rng = crate::util::rng::Rng::new(0);
+        for _ in 0..100 {
+            let c = crate::coordinator::spec::sample_config(&f.space, &mut rng);
+            for (k, d) in &f.space {
+                assert!(d.contains(&c[k]), "{k}");
+            }
+        }
+    }
+}

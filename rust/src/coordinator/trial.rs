@@ -1,0 +1,234 @@
+//! Trials: a single training run with a fixed initial hyperparameter
+//! configuration (§3 of the paper), plus the result rows trainables
+//! report and the lifecycle state machine the runner drives.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::ray::{NodeId, Resources};
+
+pub type TrialId = u64;
+
+/// A hyperparameter value. Configs are ordered maps so they have a
+/// canonical printable form (used in logs and by search algorithms).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ParamValue {
+    F64(f64),
+    I64(i64),
+    Str(String),
+    Bool(bool),
+}
+
+impl ParamValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            ParamValue::F64(v) => Some(*v),
+            ParamValue::I64(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            ParamValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ParamValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ParamValue::F64(v) => write!(f, "{v}"),
+            ParamValue::I64(v) => write!(f, "{v}"),
+            ParamValue::Str(s) => write!(f, "{s}"),
+            ParamValue::Bool(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+pub type Config = BTreeMap<String, ParamValue>;
+
+/// Render a config compactly: `lr=0.01,momentum=0.9`.
+pub fn config_str(config: &Config) -> String {
+    config
+        .iter()
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// One intermediate result reported by a trial (the unit the scheduler
+/// API consumes).
+#[derive(Clone, Debug, Default)]
+pub struct ResultRow {
+    /// Training iteration (monotone per trial).
+    pub iteration: u64,
+    /// Total time this trial has consumed, in (possibly virtual) seconds.
+    pub time_total_s: f64,
+    pub metrics: BTreeMap<String, f64>,
+}
+
+impl ResultRow {
+    pub fn new(iteration: u64, time_total_s: f64) -> Self {
+        ResultRow { iteration, time_total_s, metrics: BTreeMap::new() }
+    }
+    pub fn with(mut self, key: &str, value: f64) -> Self {
+        self.metrics.insert(key.to_string(), value);
+        self
+    }
+    pub fn metric(&self, key: &str) -> Option<f64> {
+        self.metrics.get(key).copied()
+    }
+}
+
+/// Whether larger or smaller metric values are better.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Min,
+    Max,
+}
+
+impl Mode {
+    /// Is `a` better than `b` under this mode?
+    pub fn better(&self, a: f64, b: f64) -> bool {
+        match self {
+            Mode::Min => a < b,
+            Mode::Max => a > b,
+        }
+    }
+    /// Normalize so that higher is always better.
+    pub fn ascending(&self, v: f64) -> f64 {
+        match self {
+            Mode::Min => -v,
+            Mode::Max => v,
+        }
+    }
+    pub fn worst(&self) -> f64 {
+        match self {
+            Mode::Min => f64::INFINITY,
+            Mode::Max => f64::NEG_INFINITY,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrialStatus {
+    /// Waiting for resources (never started, or descheduled).
+    Pending,
+    Running,
+    /// Checkpointed and descheduled by the scheduler (e.g. HyperBand
+    /// rung boundary); resumable via `choose_trial_to_run`.
+    Paused,
+    /// Finished normally (stopping criterion met).
+    Completed,
+    /// Stopped early by the scheduler.
+    Stopped,
+    /// Failed more than `max_failures` times.
+    Errored,
+}
+
+impl TrialStatus {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, TrialStatus::Completed | TrialStatus::Stopped | TrialStatus::Errored)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Trial {
+    pub id: TrialId,
+    pub config: Config,
+    pub status: TrialStatus,
+    pub resources: Resources,
+    /// Node the trial is (or was last) placed on.
+    pub node: Option<NodeId>,
+    pub iteration: u64,
+    pub time_total_s: f64,
+    pub last_result: Option<ResultRow>,
+    /// Best metric value seen (under the experiment's mode).
+    pub best_metric: Option<f64>,
+    pub checkpoint: Option<crate::checkpoint::CheckpointId>,
+    pub num_failures: u32,
+    /// Seed for the trial's own stochasticity (data order, init).
+    pub seed: u64,
+    /// Set when the scheduler mutated the config (PBT lineage).
+    pub mutations: u32,
+}
+
+impl Trial {
+    pub fn new(id: TrialId, config: Config, resources: Resources, seed: u64) -> Self {
+        Trial {
+            id,
+            config,
+            status: TrialStatus::Pending,
+            resources,
+            node: None,
+            iteration: 0,
+            time_total_s: 0.0,
+            last_result: None,
+            best_metric: None,
+            checkpoint: None,
+            num_failures: 0,
+            seed,
+            mutations: 0,
+        }
+    }
+
+    /// Record a result row; returns the previous best metric.
+    pub fn record(&mut self, row: ResultRow, metric: &str, mode: Mode) {
+        self.iteration = row.iteration;
+        self.time_total_s = row.time_total_s;
+        if let Some(v) = row.metric(metric) {
+            let better = self.best_metric.map_or(true, |b| mode.better(v, b));
+            if better {
+                self.best_metric = Some(v);
+            }
+        }
+        self.last_result = Some(row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(lr: f64) -> Config {
+        let mut c = Config::new();
+        c.insert("lr".into(), ParamValue::F64(lr));
+        c
+    }
+
+    #[test]
+    fn mode_comparisons() {
+        assert!(Mode::Min.better(1.0, 2.0));
+        assert!(Mode::Max.better(2.0, 1.0));
+        assert_eq!(Mode::Min.ascending(3.0), -3.0);
+        assert!(Mode::Min.worst().is_infinite());
+    }
+
+    #[test]
+    fn record_tracks_best_under_min() {
+        let mut t = Trial::new(1, cfg(0.1), Resources::cpu(1.0), 0);
+        t.record(ResultRow::new(1, 1.0).with("loss", 2.0), "loss", Mode::Min);
+        t.record(ResultRow::new(2, 2.0).with("loss", 3.0), "loss", Mode::Min);
+        assert_eq!(t.best_metric, Some(2.0));
+        assert_eq!(t.iteration, 2);
+        t.record(ResultRow::new(3, 3.0).with("loss", 1.0), "loss", Mode::Min);
+        assert_eq!(t.best_metric, Some(1.0));
+    }
+
+    #[test]
+    fn terminal_statuses() {
+        assert!(TrialStatus::Completed.is_terminal());
+        assert!(TrialStatus::Stopped.is_terminal());
+        assert!(TrialStatus::Errored.is_terminal());
+        assert!(!TrialStatus::Paused.is_terminal());
+        assert!(!TrialStatus::Pending.is_terminal());
+    }
+
+    #[test]
+    fn config_str_is_canonical() {
+        let mut c = cfg(0.5);
+        c.insert("act".into(), ParamValue::Str("relu".into()));
+        assert_eq!(config_str(&c), "act=relu,lr=0.5");
+    }
+}

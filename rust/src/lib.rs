@@ -1,0 +1,53 @@
+//! # tune — a reproduction of *Tune: A Research Platform for Distributed
+//! # Model Selection and Training* (Liaw et al., 2018)
+//!
+//! A rust coordinator implementing the paper's narrow-waist APIs between
+//! training scripts and hyperparameter-search algorithms, executing over
+//! a Ray-like substrate, with the actual training workloads AOT-compiled
+//! from JAX/Pallas to HLO and executed through PJRT — python never runs
+//! on the request path.
+//!
+//! * [`coordinator`] — trials, the scheduler API, Table 1's algorithms
+//!   (FIFO / HyperBand / ASHA / median stopping / PBT), search
+//!   (grid / random / TPE), the runner, `run_experiments`.
+//! * [`ray`] — the substrate: resources, cluster, two-level placement,
+//!   object store, fault injection.
+//! * [`trainable`] — the user API (class-based + cooperative function),
+//!   synthetic benchmark workloads.
+//! * [`runtime`] — PJRT: load HLO artifacts, drive real training steps.
+//! * [`checkpoint`] / [`logger`] — durability and observability.
+//! * [`util`] — JSON, deterministic RNG, bench/prop harnesses.
+//!
+//! ## Quickstart (§4.3 of the paper)
+//!
+//! ```
+//! use tune::coordinator::{run_experiments, ExperimentSpec, Mode,
+//!                         RunOptions, SchedulerKind, SearchKind};
+//! use tune::coordinator::spec::SpaceBuilder;
+//! use tune::trainable::{factory, synthetic::CurveTrainable};
+//!
+//! let mut spec = ExperimentSpec::named("quickstart");
+//! spec.metric = "accuracy".into();
+//! spec.mode = Mode::Max;
+//! spec.max_iterations_per_trial = 50;
+//! let space = SpaceBuilder::new()
+//!     .grid_f64("lr", &[0.01, 0.001, 0.0001])
+//!     .grid_str("activation", &["relu", "tanh"])
+//!     .build();
+//! let result = run_experiments(
+//!     spec, space,
+//!     SchedulerKind::Asha { grace_period: 1, reduction_factor: 3.0, max_t: 50 },
+//!     SearchKind::Grid,
+//!     factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+//!     RunOptions::default(),
+//! );
+//! assert_eq!(result.trials.len(), 6);
+//! ```
+
+pub mod checkpoint;
+pub mod coordinator;
+pub mod logger;
+pub mod ray;
+pub mod runtime;
+pub mod trainable;
+pub mod util;

@@ -1,0 +1,191 @@
+//! Offline experiment analysis: read the JSONL logs back, find best
+//! trials/configs, and extract best-metric-vs-budget curves — the
+//! "performance analysis" role Vizier/Tune expose to users, and what
+//! the benches use to compare schedulers (C1/C2).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::coordinator::trial::Mode;
+use crate::util::json::{parse, Json};
+
+#[derive(Clone, Debug)]
+pub struct TrialRecord {
+    pub trial: u64,
+    pub config: BTreeMap<String, String>,
+    pub rows: Vec<(u64, f64, BTreeMap<String, f64>)>, // (iter, time, metrics)
+    pub end_status: Option<String>,
+    pub best_metric: Option<f64>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentAnalysis {
+    pub trials: BTreeMap<u64, TrialRecord>,
+}
+
+impl ExperimentAnalysis {
+    /// Load every `trial_*.jsonl` under `dir`.
+    pub fn load(dir: &Path) -> std::io::Result<Self> {
+        let mut out = ExperimentAnalysis::default();
+        let mut entries: Vec<_> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map_or(false, |n| n.starts_with("trial_") && n.ends_with(".jsonl"))
+            })
+            .collect();
+        entries.sort();
+        for path in entries {
+            let text = std::fs::read_to_string(&path)?;
+            if let Some(rec) = Self::parse_trial(&text) {
+                out.trials.insert(rec.trial, rec);
+            }
+        }
+        Ok(out)
+    }
+
+    fn parse_trial(text: &str) -> Option<TrialRecord> {
+        let mut rec: Option<TrialRecord> = None;
+        for line in text.lines() {
+            let Ok(v) = parse(line) else { continue };
+            if let Some(cfg) = v.get("config") {
+                // Header line.
+                let config = cfg
+                    .as_obj()?
+                    .iter()
+                    .map(|(k, jv)| {
+                        let s = match jv {
+                            Json::Str(s) => s.clone(),
+                            Json::Num(n) => format!("{n}"),
+                            Json::Bool(b) => format!("{b}"),
+                            _ => String::new(),
+                        };
+                        (k.clone(), s)
+                    })
+                    .collect();
+                rec = Some(TrialRecord {
+                    trial: v.get("trial")?.as_u64()?,
+                    config,
+                    rows: Vec::new(),
+                    end_status: None,
+                    best_metric: None,
+                });
+            } else if let Some(end) = v.get("end") {
+                if let Some(r) = rec.as_mut() {
+                    r.end_status = end.as_str().map(|s| s.to_string());
+                    r.best_metric = v.get("best_metric").and_then(|m| m.as_f64());
+                }
+            } else if let (Some(iter), Some(r)) = (v.get("iteration"), rec.as_mut()) {
+                let iter = iter.as_u64()?;
+                let time = v.get("time_total_s").and_then(|t| t.as_f64()).unwrap_or(0.0);
+                let metrics = v
+                    .as_obj()?
+                    .iter()
+                    .filter(|(k, _)| {
+                        !matches!(k.as_str(), "trial" | "iteration" | "time_total_s")
+                    })
+                    .filter_map(|(k, jv)| jv.as_f64().map(|f| (k.clone(), f)))
+                    .collect();
+                r.rows.push((iter, time, metrics));
+            }
+        }
+        rec
+    }
+
+    /// Best (trial id, metric value) under `mode`.
+    pub fn best_trial(&self, metric: &str, mode: Mode) -> Option<(u64, f64)> {
+        self.trials
+            .values()
+            .filter_map(|t| {
+                t.rows
+                    .iter()
+                    .filter_map(|(_, _, m)| m.get(metric).copied())
+                    .fold(None, |acc: Option<f64>, v| {
+                        Some(acc.map_or(v, |a| if mode.better(v, a) { v } else { a }))
+                    })
+                    .map(|v| (t.trial, v))
+            })
+            .max_by(|a, b| {
+                mode.ascending(a.1)
+                    .partial_cmp(&mode.ascending(b.1))
+                    .unwrap()
+            })
+    }
+
+    /// Experiment-level best-metric-so-far vs cumulative budget
+    /// (total virtual/wall seconds consumed across all trials).
+    pub fn best_vs_budget(&self, metric: &str, mode: Mode) -> Vec<(f64, f64)> {
+        // Merge all rows by per-trial time deltas to get global budget.
+        let mut events: Vec<(f64, f64)> = Vec::new(); // (delta budget, value)
+        for t in self.trials.values() {
+            let mut prev = 0.0;
+            for (_, time, m) in &t.rows {
+                if let Some(v) = m.get(metric) {
+                    events.push(((time - prev).max(0.0), *v));
+                }
+                prev = *time;
+            }
+        }
+        // Order events by per-trial time is lost; approximate by
+        // original insertion (trial-major) — callers that need exact
+        // interleaving use the runner's in-memory best_curve instead.
+        let mut budget = 0.0;
+        let mut best = mode.worst();
+        let mut curve = Vec::with_capacity(events.len());
+        for (dt, v) in events {
+            budget += dt;
+            if mode.better(v, best) {
+                best = v;
+            }
+            curve.push((budget, best));
+        }
+        curve
+    }
+
+    pub fn num_results(&self) -> usize {
+        self.trials.values().map(|t| t.rows.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trial::{Config, ParamValue, ResultRow, Trial};
+    use crate::logger::{JsonlLogger, ResultLogger};
+    use crate::ray::Resources;
+
+    #[test]
+    fn roundtrip_through_jsonl() {
+        let dir = std::env::temp_dir().join(format!("tune_analysis_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut l = JsonlLogger::new(dir.clone()).unwrap();
+        for id in 0..3u64 {
+            let mut c = Config::new();
+            c.insert("lr".into(), ParamValue::F64(0.1 * (id + 1) as f64));
+            let mut t = Trial::new(id, c, Resources::cpu(1.0), id);
+            for it in 1..=4 {
+                let loss = 1.0 / (it as f64) + id as f64; // trial 0 best
+                let row = ResultRow::new(it, it as f64).with("loss", loss);
+                t.record(row.clone(), "loss", Mode::Min);
+                l.on_result(&t, &row);
+            }
+            l.on_trial_end(&t);
+        }
+        let a = ExperimentAnalysis::load(&dir).unwrap();
+        assert_eq!(a.trials.len(), 3);
+        assert_eq!(a.num_results(), 12);
+        let (best_id, best_v) = a.best_trial("loss", Mode::Min).unwrap();
+        assert_eq!(best_id, 0);
+        assert!((best_v - 0.25).abs() < 1e-9);
+        let curve = a.best_vs_budget("loss", Mode::Min);
+        assert_eq!(curve.len(), 12);
+        // Monotone non-increasing best for Min mode.
+        for w in curve.windows(2) {
+            assert!(w[1].1 <= w[0].1 + 1e-12);
+            assert!(w[1].0 >= w[0].0);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,156 @@
+//! JSONL result logs — one file per trial plus an experiment summary,
+//! the moral equivalent of Tune's result.json/TensorBoard integration.
+//! `ExperimentAnalysis` (and the `analyze` CLI subcommand) reads these
+//! back.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::PathBuf;
+
+use crate::coordinator::trial::{config_str, ParamValue, ResultRow, Trial, TrialId};
+use crate::util::json::Json;
+
+use super::ResultLogger;
+
+pub struct JsonlLogger {
+    dir: PathBuf,
+    writers: BTreeMap<TrialId, BufWriter<File>>,
+}
+
+impl JsonlLogger {
+    pub fn new(dir: PathBuf) -> std::io::Result<Self> {
+        std::fs::create_dir_all(&dir)?;
+        Ok(JsonlLogger { dir, writers: BTreeMap::new() })
+    }
+
+    pub fn dir(&self) -> &PathBuf {
+        &self.dir
+    }
+
+    fn config_json(trial: &Trial) -> Json {
+        Json::Obj(
+            trial
+                .config
+                .iter()
+                .map(|(k, v)| {
+                    let jv = match v {
+                        ParamValue::F64(f) => Json::Num(*f),
+                        ParamValue::I64(i) => Json::Num(*i as f64),
+                        ParamValue::Str(s) => Json::Str(s.clone()),
+                        ParamValue::Bool(b) => Json::Bool(*b),
+                    };
+                    (k.clone(), jv)
+                })
+                .collect(),
+        )
+    }
+
+    fn row_json(trial: &Trial, row: &ResultRow) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("trial".into(), Json::Num(trial.id as f64));
+        obj.insert("iteration".into(), Json::Num(row.iteration as f64));
+        obj.insert("time_total_s".into(), Json::Num(row.time_total_s));
+        for (k, v) in &row.metrics {
+            obj.insert(k.clone(), Json::Num(*v));
+        }
+        Json::Obj(obj)
+    }
+}
+
+impl ResultLogger for JsonlLogger {
+    fn on_result(&mut self, trial: &Trial, row: &ResultRow) {
+        let dir = self.dir.clone();
+        let w = self.writers.entry(trial.id).or_insert_with(|| {
+            let path = dir.join(format!("trial_{:04}.jsonl", trial.id));
+            let mut w = BufWriter::new(File::create(path).expect("create trial log"));
+            // First line: the trial header (config, seed).
+            let header = Json::obj(vec![
+                ("trial", Json::Num(trial.id as f64)),
+                ("config", Self::config_json(trial)),
+                ("config_str", Json::Str(config_str(&trial.config))),
+                ("seed", Json::Num(trial.seed as f64)),
+            ]);
+            writeln!(w, "{}", header.to_string()).ok();
+            w
+        });
+        writeln!(w, "{}", Self::row_json(trial, row).to_string()).ok();
+    }
+
+    fn on_trial_end(&mut self, trial: &Trial) {
+        if let Some(mut w) = self.writers.remove(&trial.id) {
+            let end = Json::obj(vec![
+                ("trial", Json::Num(trial.id as f64)),
+                ("end", Json::Str(format!("{:?}", trial.status))),
+                ("iterations", Json::Num(trial.iteration as f64)),
+                ("best_metric", trial.best_metric.map(Json::Num).unwrap_or(Json::Null)),
+            ]);
+            writeln!(w, "{}", end.to_string()).ok();
+            w.flush().ok();
+        }
+    }
+
+    fn on_experiment_end(&mut self, trials: &BTreeMap<TrialId, Trial>) {
+        for w in self.writers.values_mut() {
+            w.flush().ok();
+        }
+        let summary = Json::Arr(
+            trials
+                .values()
+                .map(|t| {
+                    Json::obj(vec![
+                        ("trial", Json::Num(t.id as f64)),
+                        ("status", Json::Str(format!("{:?}", t.status))),
+                        ("iterations", Json::Num(t.iteration as f64)),
+                        ("best_metric", t.best_metric.map(Json::Num).unwrap_or(Json::Null)),
+                        ("config", Self::config_json(t)),
+                        ("mutations", Json::Num(t.mutations as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        std::fs::write(self.dir.join("experiment.json"), summary.to_string()).ok();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trial::{Config, TrialStatus};
+    use crate::ray::Resources;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tune_jsonl_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    #[test]
+    fn writes_header_rows_and_summary() {
+        let dir = tmpdir("basic");
+        let mut l = JsonlLogger::new(dir.clone()).unwrap();
+        let mut c = Config::new();
+        c.insert("lr".into(), ParamValue::F64(0.1));
+        let mut t = Trial::new(3, c, Resources::cpu(1.0), 7);
+        l.on_result(&t, &ResultRow::new(1, 0.5).with("loss", 1.0));
+        l.on_result(&t, &ResultRow::new(2, 1.0).with("loss", 0.5));
+        t.status = TrialStatus::Completed;
+        t.iteration = 2;
+        t.best_metric = Some(0.5);
+        l.on_trial_end(&t);
+        let mut trials = BTreeMap::new();
+        trials.insert(t.id, t);
+        l.on_experiment_end(&trials);
+
+        let log = std::fs::read_to_string(dir.join("trial_0003.jsonl")).unwrap();
+        let lines: Vec<&str> = log.lines().collect();
+        assert_eq!(lines.len(), 4); // header + 2 rows + end
+        let header = crate::util::json::parse(lines[0]).unwrap();
+        assert_eq!(header.get("config.lr").unwrap().as_f64(), Some(0.1));
+        let summary =
+            crate::util::json::parse(&std::fs::read_to_string(dir.join("experiment.json")).unwrap())
+                .unwrap();
+        assert_eq!(summary.as_arr().unwrap().len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

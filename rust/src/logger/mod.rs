@@ -1,0 +1,62 @@
+//! Monitoring & persistence (§3: "monitoring and visualization of trial
+//! progress and outcomes"): a logger interface the runner fans results
+//! out to, with console, JSONL and in-memory implementations, plus the
+//! offline [`analysis`] module that reads the logs back.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::trial::{ResultRow, Trial, TrialId};
+
+pub mod analysis;
+pub mod jsonl;
+pub mod progress;
+
+pub use analysis::ExperimentAnalysis;
+pub use jsonl::JsonlLogger;
+pub use progress::ProgressReporter;
+
+/// Receives every intermediate result and lifecycle transition.
+pub trait ResultLogger: Send {
+    fn on_result(&mut self, trial: &Trial, row: &ResultRow);
+    fn on_trial_end(&mut self, _trial: &Trial) {}
+    fn on_experiment_end(&mut self, _trials: &BTreeMap<TrialId, Trial>) {}
+}
+
+/// In-memory recorder used by tests and the analysis pipeline.
+#[derive(Default)]
+pub struct MemoryLogger {
+    pub rows: Vec<(TrialId, ResultRow)>,
+    pub ended: Vec<TrialId>,
+}
+
+impl MemoryLogger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl ResultLogger for MemoryLogger {
+    fn on_result(&mut self, trial: &Trial, row: &ResultRow) {
+        self.rows.push((trial.id, row.clone()));
+    }
+    fn on_trial_end(&mut self, trial: &Trial) {
+        self.ended.push(trial.id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trial::Config;
+    use crate::ray::Resources;
+
+    #[test]
+    fn memory_logger_records() {
+        let mut l = MemoryLogger::new();
+        let t = Trial::new(1, Config::new(), Resources::cpu(1.0), 0);
+        l.on_result(&t, &ResultRow::new(1, 1.0).with("loss", 0.5));
+        l.on_trial_end(&t);
+        assert_eq!(l.rows.len(), 1);
+        assert_eq!(l.ended, vec![1]);
+    }
+}

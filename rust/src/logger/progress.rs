@@ -1,0 +1,104 @@
+//! Console progress reporter: the periodic status table Tune prints
+//! ("the progress of trials is periodically reported in the console",
+//! §4.3). Throttled by result count so sim-mode experiments with
+//! millions of virtual seconds don't flood the terminal.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::trial::{config_str, ResultRow, Trial, TrialId, TrialStatus};
+
+use super::ResultLogger;
+
+pub struct ProgressReporter {
+    /// Print every N results (0 = silent until the end).
+    pub every: u64,
+    metric: String,
+    seen: u64,
+    /// trial -> (status, iteration, last metric)
+    table: BTreeMap<TrialId, (TrialStatus, u64, Option<f64>, String)>,
+}
+
+impl ProgressReporter {
+    pub fn new(metric: &str, every: u64) -> Self {
+        ProgressReporter { every, metric: metric.into(), seen: 0, table: BTreeMap::new() }
+    }
+
+    fn print_table(&self) {
+        let counts = |s: TrialStatus| self.table.values().filter(|(st, ..)| *st == s).count();
+        println!(
+            "== status: {} RUNNING | {} PENDING | {} PAUSED | {} terminal ==",
+            counts(TrialStatus::Running),
+            counts(TrialStatus::Pending),
+            counts(TrialStatus::Paused),
+            self.table
+                .values()
+                .filter(|(st, ..)| st.is_terminal())
+                .count(),
+        );
+        for (id, (status, iter, metric, cfg)) in self.table.iter().take(12) {
+            println!(
+                "  trial {id:>4} {:<10} iter {iter:>6} {}={} [{}]",
+                format!("{status:?}"),
+                self.metric,
+                metric.map(|m| format!("{m:.4}")).unwrap_or_else(|| "-".into()),
+                cfg
+            );
+        }
+        if self.table.len() > 12 {
+            println!("  ... {} more trials", self.table.len() - 12);
+        }
+    }
+}
+
+impl ResultLogger for ProgressReporter {
+    fn on_result(&mut self, trial: &Trial, row: &ResultRow) {
+        self.table.insert(
+            trial.id,
+            (
+                trial.status,
+                row.iteration,
+                row.metric(&self.metric),
+                config_str(&trial.config),
+            ),
+        );
+        self.seen += 1;
+        if self.every > 0 && self.seen % self.every == 0 {
+            self.print_table();
+        }
+    }
+
+    fn on_trial_end(&mut self, trial: &Trial) {
+        if let Some(e) = self.table.get_mut(&trial.id) {
+            e.0 = trial.status;
+        }
+    }
+
+    fn on_experiment_end(&mut self, trials: &BTreeMap<TrialId, Trial>) {
+        for t in trials.values() {
+            self.table.insert(
+                t.id,
+                (t.status, t.iteration, t.best_metric, config_str(&t.config)),
+            );
+        }
+        self.print_table();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trial::Config;
+    use crate::ray::Resources;
+
+    #[test]
+    fn tracks_status_counts() {
+        let mut p = ProgressReporter::new("loss", 0);
+        let mut t = Trial::new(1, Config::new(), Resources::cpu(1.0), 0);
+        t.status = TrialStatus::Running;
+        p.on_result(&t, &ResultRow::new(1, 1.0).with("loss", 0.3));
+        assert_eq!(p.table[&1].0, TrialStatus::Running);
+        t.status = TrialStatus::Completed;
+        p.on_trial_end(&t);
+        assert_eq!(p.table[&1].0, TrialStatus::Completed);
+    }
+}

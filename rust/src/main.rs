@@ -1,0 +1,375 @@
+//! `tune` CLI — experiment launcher and analysis tool.
+//!
+//! Subcommands:
+//!   run        run a model-selection experiment (sim or jax workloads)
+//!   shootout   compare all schedulers on the synthetic benchmark (C1)
+//!   loc-table  regenerate the paper's Table 1 (LoC per algorithm)
+//!   analyze    summarize a JSONL log directory
+//!
+//! Hand-rolled argument parsing: the offline dependency set has no clap.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use tune::coordinator::spec::{SearchSpace, SpaceBuilder};
+use tune::coordinator::{
+    run_experiments, ExecMode, ExperimentSpec, Mode, RunOptions, SchedulerKind, SearchKind,
+};
+use tune::logger::ExperimentAnalysis;
+use tune::ray::{Cluster, Resources};
+use tune::runtime::{Manifest, PjrtService};
+use tune::trainable::jax_model::jax_factory;
+use tune::trainable::synthetic::{CurveTrainable, NonStationaryTrainable};
+use tune::trainable::{factory, TrainableFactory};
+use tune::util::loc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            usage();
+            return;
+        }
+    };
+    let flags = Flags::parse(&rest);
+    match cmd {
+        "run" => cmd_run(&flags),
+        "shootout" => cmd_shootout(&flags),
+        "loc-table" => cmd_loc_table(),
+        "analyze" => cmd_analyze(&flags),
+        "help" | "--help" | "-h" => usage(),
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            usage();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn usage() {
+    println!(
+        "tune — distributed model selection (Liaw et al. 2018 reproduction)
+
+USAGE: tune <command> [--flag value ...]
+
+COMMANDS
+  run        --spec FILE.json   declarative experiment spec (see configs/)
+             --workload curve|jax-mlp|jax-tlm|pbt-sim  (default curve)
+             --scheduler fifo|asha|hyperband|median|pbt (default asha)
+             --search grid|random|tpe|evolution          (default random)
+             --samples N        trials (default 32)
+             --iters N          max iterations per trial (default 81)
+             --nodes N          cluster nodes (default 4)
+             --cpus-per-node F  (default 8)
+             --metric NAME --mode min|max
+             --log-dir DIR      write JSONL logs
+             --seed N
+  shootout   --samples N --iters N   compare all schedulers (sim, C1)
+  loc-table  regenerate Table 1 (lines of code per algorithm)
+  analyze    --log-dir DIR --metric NAME --mode min|max"
+    );
+}
+
+struct Flags(BTreeMap<String, String>);
+
+impl Flags {
+    fn parse(args: &[String]) -> Flags {
+        let mut m = BTreeMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    i += 1;
+                    args[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                m.insert(key.to_string(), val);
+            } else {
+                eprintln!("ignoring stray argument {a:?}");
+            }
+            i += 1;
+        }
+        Flags(m)
+    }
+    fn get(&self, key: &str, default: &str) -> String {
+        self.0.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+    fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.0.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.0.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn scheduler_kind(name: &str, iters: u64, space: &SearchSpace) -> SchedulerKind {
+    match name {
+        "fifo" => SchedulerKind::Fifo,
+        "asha" => SchedulerKind::Asha { grace_period: 1, reduction_factor: 3.0, max_t: iters },
+        "hyperband" => SchedulerKind::HyperBand { max_t: iters, eta: 3.0 },
+        "median" | "median_stopping" => {
+            SchedulerKind::MedianStopping { grace_period: iters / 10 + 1, min_samples: 3 }
+        }
+        "pbt" => SchedulerKind::Pbt {
+            perturbation_interval: (iters / 10).max(1),
+            space: space.clone(),
+        },
+        other => {
+            eprintln!("unknown scheduler {other:?}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn search_kind(name: &str) -> SearchKind {
+    match name {
+        "grid" => SearchKind::Grid,
+        "random" => SearchKind::Random,
+        "tpe" => SearchKind::Tpe,
+        "evolution" => SearchKind::Evolution,
+        other => {
+            eprintln!("unknown search {other:?}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_run(flags: &Flags) {
+    if let Some(path) = flags.0.get("spec") {
+        return run_spec_file(std::path::Path::new(path), flags);
+    }
+    let workload = flags.get("workload", "curve");
+    let iters = flags.get_u64("iters", 81);
+    let samples = flags.get_u64("samples", 32) as usize;
+    let nodes = flags.get_u64("nodes", 4) as usize;
+    let cpus = flags.get_f64("cpus-per-node", 8.0);
+    let seed = flags.get_u64("seed", 0);
+
+    // Workload-specific defaults.
+    let (space, fac, metric, mode, exec): (SearchSpace, TrainableFactory, String, Mode, ExecMode) =
+        match workload.as_str() {
+            "curve" => (
+                SpaceBuilder::new()
+                    .loguniform("lr", 1e-4, 1.0)
+                    .uniform("momentum", 0.8, 0.99)
+                    .build(),
+                factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+                "accuracy".into(),
+                Mode::Max,
+                ExecMode::Sim,
+            ),
+            "pbt-sim" => (
+                SpaceBuilder::new().loguniform("lr", 1e-4, 0.5).build(),
+                factory(|c, s| Box::new(NonStationaryTrainable::new(c, s))),
+                "score".into(),
+                Mode::Max,
+                ExecMode::Sim,
+            ),
+            "jax-mlp" | "jax-tlm" => {
+                let family = if workload == "jax-mlp" { "mlp" } else { "tlm" };
+                let acts: &[&str] =
+                    if family == "mlp" { &["relu", "tanh"] } else { &["gelu", "relu"] };
+                let svc = PjrtService::spawn(Manifest::default_dir())
+                    .expect("artifacts missing: run `make artifacts`");
+                (
+                    SpaceBuilder::new()
+                        .loguniform("lr", 1e-3, 1.0)
+                        .uniform("momentum", 0.5, 0.99)
+                        .choice_str("activation", acts)
+                        .build(),
+                    jax_factory(svc, if family == "mlp" { "mlp" } else { "tlm" }, 5),
+                    "loss".into(),
+                    Mode::Min,
+                    ExecMode::Threads,
+                )
+            }
+            other => {
+                eprintln!("unknown workload {other:?}");
+                std::process::exit(2);
+            }
+        };
+
+    let mut spec = ExperimentSpec::named(&format!("run-{workload}"));
+    spec.metric = flags.get("metric", &metric);
+    spec.mode = match flags.get("mode", if mode == Mode::Max { "max" } else { "min" }).as_str() {
+        "max" => Mode::Max,
+        _ => Mode::Min,
+    };
+    spec.num_samples = samples;
+    spec.max_iterations_per_trial = iters;
+    spec.seed = seed;
+    spec.checkpoint_freq = (iters / 10).max(1);
+
+    let sched = scheduler_kind(&flags.get("scheduler", "asha"), iters, &space);
+    let search = search_kind(&flags.get("search", "random"));
+    let opts = RunOptions {
+        cluster: Cluster::uniform(nodes, Resources::cpu(cpus)),
+        exec,
+        progress_every: flags.get_u64("progress-every", 200),
+        log_dir: flags.0.get("log-dir").map(PathBuf::from),
+    };
+
+    let label = sched.label();
+    let res = run_experiments(spec, space, sched, search, fac, opts);
+    println!("\n== experiment complete ==");
+    println!("scheduler            : {label}");
+    println!("trials               : {}", res.trials.len());
+    println!(
+        "completed/stopped/err: {}/{}/{}",
+        res.stats.completed, res.stats.stopped_early, res.stats.errored
+    );
+    println!("duration             : {:.1}s  (budget used {:.1} trial-s)", res.duration_s, res.budget_used_s);
+    println!("checkpoints/restores : {}/{}", res.stats.checkpoints, res.stats.restores);
+    println!(
+        "placement            : {} local, {} spilled ({:.0}% spill)",
+        res.placement.local,
+        res.placement.spilled,
+        res.placement.spill_fraction() * 100.0
+    );
+    if let (Some(best), Some(m)) = (res.best, res.best_metric()) {
+        println!(
+            "best trial           : #{best}  best metric {m:.4} after {} iters",
+            res.trials[&best].iteration
+        );
+        println!(
+            "best config          : {}",
+            tune::coordinator::trial::config_str(&res.trials[&best].config)
+        );
+    }
+}
+
+
+/// Resolve a workload name to (factory, exec mode).
+fn workload_factory(workload: &str) -> (TrainableFactory, ExecMode) {
+    match workload {
+        "curve" => (
+            factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+            ExecMode::Sim,
+        ),
+        "pbt-sim" => (
+            factory(|c, s| Box::new(NonStationaryTrainable::new(c, s))),
+            ExecMode::Sim,
+        ),
+        "const" => (
+            factory(|c, s| Box::new(tune::trainable::synthetic::ConstTrainable::new(c, s))),
+            ExecMode::Sim,
+        ),
+        "jax-mlp" | "jax-tlm" => {
+            let family: &'static str = if workload == "jax-mlp" { "mlp" } else { "tlm" };
+            let svc = PjrtService::spawn(Manifest::default_dir())
+                .expect("artifacts missing: run `make artifacts`");
+            (jax_factory(svc, family, 5), ExecMode::Threads)
+        }
+        other => {
+            eprintln!("unknown workload {other:?}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// `tune run --spec file.json`: the declarative §4.3 form.
+fn run_spec_file(path: &std::path::Path, flags: &Flags) {
+    let f = tune::coordinator::SpecFile::load(path).unwrap_or_else(|e| {
+        eprintln!("spec error: {e:#}");
+        std::process::exit(2);
+    });
+    let (fac, exec) = workload_factory(&f.workload);
+    let opts = RunOptions {
+        cluster: f.cluster,
+        exec,
+        progress_every: flags.get_u64("progress-every", 200),
+        log_dir: flags
+            .0
+            .get("log-dir")
+            .map(PathBuf::from)
+            .or_else(|| Some(PathBuf::from(format!("tune_logs/{}", f.spec.name)))),
+    };
+    let label = f.scheduler.label();
+    println!("spec {:?}: workload={} scheduler={} trials={}",
+             f.spec.name, f.workload, label, f.spec.num_samples);
+    let res = run_experiments(f.spec, f.space, f.scheduler, f.search, fac, opts);
+    println!("\n== {} complete: {} trials, best {} ==",
+             label,
+             res.trials.len(),
+             res.best_metric().map(|m| format!("{m:.4}")).unwrap_or_else(|| "-".into()));
+    if let Some(best) = res.best {
+        println!("best config: {}",
+                 tune::coordinator::trial::config_str(&res.trials[&best].config));
+    }
+}
+
+fn cmd_shootout(flags: &Flags) {
+    let samples = flags.get_u64("samples", 64) as usize;
+    let iters = flags.get_u64("iters", 81);
+    let seed = flags.get_u64("seed", 0);
+    println!("C1: schedulers on {samples} random curve trials, max_t={iters} (virtual time)\n");
+    println!(
+        "{:<18} {:>10} {:>12} {:>12} {:>10} {:>10}",
+        "scheduler", "best acc", "budget(s)", "duration(s)", "stopped", "results"
+    );
+    println!("{}", "-".repeat(78));
+    let space = SpaceBuilder::new()
+        .loguniform("lr", 1e-4, 1.0)
+        .uniform("momentum", 0.8, 0.99)
+        .build();
+    for name in ["fifo", "median", "asha", "hyperband"] {
+        let mut spec = ExperimentSpec::named(&format!("shootout-{name}"));
+        spec.metric = "accuracy".into();
+        spec.mode = Mode::Max;
+        spec.num_samples = samples;
+        spec.max_iterations_per_trial = iters;
+        spec.seed = seed;
+        let sched = scheduler_kind(name, iters, &space);
+        let res = run_experiments(
+            spec,
+            space.clone(),
+            sched,
+            SearchKind::Random,
+            factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+            RunOptions {
+                cluster: Cluster::uniform(4, Resources::cpu(8.0)),
+                ..Default::default()
+            },
+        );
+        println!(
+            "{:<18} {:>10.4} {:>12.0} {:>12.0} {:>10} {:>10}",
+            name,
+            res.best_metric().unwrap_or(0.0),
+            res.budget_used_s,
+            res.duration_s,
+            res.stats.stopped_early,
+            res.stats.results
+        );
+    }
+}
+
+fn cmd_loc_table() {
+    let rows = loc::table1(&PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+    loc::print_table1(&rows);
+}
+
+fn cmd_analyze(flags: &Flags) {
+    let dir = PathBuf::from(flags.get("log-dir", "tune_logs"));
+    let metric = flags.get("metric", "loss");
+    let mode = if flags.get("mode", "min") == "max" { Mode::Max } else { Mode::Min };
+    let a = ExperimentAnalysis::load(&dir).expect("reading log dir");
+    println!("{} trials, {} results", a.trials.len(), a.num_results());
+    match a.best_trial(&metric, mode) {
+        Some((id, v)) => {
+            println!("best trial #{id}: {metric}={v:.5}");
+            println!("config: {:?}", a.trials[&id].config);
+        }
+        None => println!("no results with metric {metric:?}"),
+    }
+    let curve = a.best_vs_budget(&metric, mode);
+    if !curve.is_empty() {
+        println!("\nbest-vs-budget ({} points, showing 10):", curve.len());
+        let step = (curve.len() / 10).max(1);
+        for (b, v) in curve.iter().step_by(step) {
+            println!("  budget {b:>10.1}s  best {v:.5}");
+        }
+    }
+}

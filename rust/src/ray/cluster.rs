@@ -1,0 +1,180 @@
+//! Nodes and the cluster they form.
+//!
+//! The substrate Tune runs on (the paper runs on Ray): a set of nodes
+//! with resource capacities. Nodes can be added (autoscaling) or killed
+//! (fault injection); killing a node surfaces the set of lease-holders
+//! that were placed there so the coordinator can reschedule them.
+
+use std::collections::BTreeMap;
+
+use super::resources::Resources;
+
+pub type NodeId = u32;
+pub type LeaseId = u64;
+
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub total: Resources,
+    pub available: Resources,
+    pub alive: bool,
+    /// Live leases placed on this node: lease -> demand.
+    pub leases: BTreeMap<LeaseId, Resources>,
+}
+
+impl Node {
+    pub fn new(id: NodeId, total: Resources) -> Self {
+        Node { id, available: total.clone(), total, alive: true, leases: BTreeMap::new() }
+    }
+
+    pub fn utilization_cpu(&self) -> f64 {
+        if self.total.cpu == 0.0 {
+            0.0
+        } else {
+            1.0 - self.available.cpu / self.total.cpu
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub nodes: Vec<Node>,
+    next_lease: LeaseId,
+}
+
+impl Cluster {
+    pub fn new() -> Self {
+        Cluster { nodes: Vec::new(), next_lease: 1 }
+    }
+
+    /// `n` identical nodes of `each` capacity.
+    pub fn uniform(n: usize, each: Resources) -> Self {
+        let mut c = Cluster::new();
+        for _ in 0..n {
+            c.add_node(each.clone());
+        }
+        c
+    }
+
+    pub fn add_node(&mut self, total: Resources) -> NodeId {
+        let id = self.nodes.len() as NodeId;
+        self.nodes.push(Node::new(id, total));
+        id
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id as usize]
+    }
+
+    /// Grant a lease of `demand` on `node`. Caller must have verified
+    /// the fit (the placement layer does); returns the lease id.
+    pub fn lease(&mut self, node: NodeId, demand: Resources) -> LeaseId {
+        let n = &mut self.nodes[node as usize];
+        debug_assert!(n.alive && n.available.fits(&demand));
+        n.available.acquire(&demand);
+        let id = self.next_lease;
+        self.next_lease += 1;
+        n.leases.insert(id, demand);
+        id
+    }
+
+    /// Release a lease; no-op if the node already died (its resources
+    /// are gone with it).
+    pub fn release(&mut self, node: NodeId, lease: LeaseId) {
+        let n = &mut self.nodes[node as usize];
+        if let Some(demand) = n.leases.remove(&lease) {
+            if n.alive {
+                n.available.release(&demand);
+            }
+        }
+    }
+
+    /// Kill a node; returns the lease ids that were running there.
+    pub fn kill_node(&mut self, node: NodeId) -> Vec<LeaseId> {
+        let n = &mut self.nodes[node as usize];
+        n.alive = false;
+        n.available = Resources::default();
+        std::mem::take(&mut n.leases).into_keys().collect()
+    }
+
+    /// Restart a dead node with its original capacity.
+    pub fn restart_node(&mut self, node: NodeId) {
+        let n = &mut self.nodes[node as usize];
+        if !n.alive {
+            n.alive = true;
+            n.available = n.total.clone();
+        }
+    }
+
+    pub fn alive_nodes(&self) -> impl Iterator<Item = &Node> {
+        self.nodes.iter().filter(|n| n.alive)
+    }
+
+    pub fn total_available(&self) -> Resources {
+        let mut r = Resources::default();
+        for n in self.alive_nodes() {
+            r.release(&n.available);
+        }
+        r
+    }
+
+    /// Accounting invariant: per-node available + sum(leases) == total.
+    pub fn check_invariants(&self) -> bool {
+        self.nodes.iter().all(|n| {
+            if !n.alive {
+                return true;
+            }
+            let mut acc = n.available.clone();
+            for d in n.leases.values() {
+                acc.release(d);
+            }
+            (acc.cpu - n.total.cpu).abs() < 1e-6
+                && (acc.gpu - n.total.gpu).abs() < 1e-6
+                && n.available.is_valid()
+        })
+    }
+}
+
+impl Default for Cluster {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_and_release() {
+        let mut c = Cluster::uniform(2, Resources::cpu_gpu(4.0, 1.0));
+        let l = c.lease(0, Resources::cpu(2.0));
+        assert_eq!(c.node(0).available.cpu, 2.0);
+        assert!(c.check_invariants());
+        c.release(0, l);
+        assert_eq!(c.node(0).available.cpu, 4.0);
+    }
+
+    #[test]
+    fn kill_node_returns_leases() {
+        let mut c = Cluster::uniform(1, Resources::cpu(4.0));
+        let l1 = c.lease(0, Resources::cpu(1.0));
+        let l2 = c.lease(0, Resources::cpu(1.0));
+        let mut killed = c.kill_node(0);
+        killed.sort();
+        assert_eq!(killed, vec![l1, l2]);
+        assert!(!c.node(0).alive);
+        // Release after death is a no-op, not a panic.
+        c.release(0, l1);
+        c.restart_node(0);
+        assert_eq!(c.node(0).available.cpu, 4.0);
+        assert!(c.check_invariants());
+    }
+
+    #[test]
+    fn total_available_sums_alive_only() {
+        let mut c = Cluster::uniform(3, Resources::cpu(2.0));
+        c.kill_node(1);
+        assert_eq!(c.total_available().cpu, 4.0);
+    }
+}

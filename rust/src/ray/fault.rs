@@ -1,0 +1,166 @@
+//! Fault injection for the substrate: per-step trial crashes and whole-
+//! node failures, driven by the library's deterministic RNG so failure
+//! scenarios replay exactly (C4 in DESIGN.md). The coordinator's
+//! checkpoint-based recovery (§4.2 of the paper: "Tune ... relies on
+//! checkpoints for fault tolerance") is exercised against this.
+
+use crate::util::rng::Rng;
+
+use super::cluster::NodeId;
+
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// Probability a single trial step raises (process crash).
+    pub step_failure_prob: f64,
+    /// Probability per executor tick that a random alive node dies.
+    pub node_failure_prob: f64,
+    /// Whether dead nodes come back after `node_restart_delay` ticks.
+    pub nodes_restart: bool,
+    pub node_restart_delay: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            step_failure_prob: 0.0,
+            node_failure_prob: 0.0,
+            nodes_restart: true,
+            node_restart_delay: 50,
+        }
+    }
+}
+
+impl FaultPlan {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn flaky_steps(p: f64) -> Self {
+        FaultPlan { step_failure_prob: p, ..Default::default() }
+    }
+
+    pub fn flaky_nodes(p: f64) -> Self {
+        FaultPlan { node_failure_prob: p, ..Default::default() }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.step_failure_prob == 0.0 && self.node_failure_prob == 0.0
+    }
+}
+
+#[derive(Debug)]
+pub struct FaultInjector {
+    pub plan: FaultPlan,
+    rng: Rng,
+    tick: u64,
+    /// (node, tick at which to restart)
+    pending_restarts: Vec<(NodeId, u64)>,
+    pub injected_step_failures: u64,
+    pub injected_node_failures: u64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan, seed: u64) -> Self {
+        FaultInjector {
+            plan,
+            rng: Rng::new(seed),
+            tick: 0,
+            pending_restarts: Vec::new(),
+            injected_step_failures: 0,
+            injected_node_failures: 0,
+        }
+    }
+
+    /// Should this trial step crash?
+    pub fn step_fails(&mut self) -> bool {
+        if self.plan.step_failure_prob > 0.0 && self.rng.bool(self.plan.step_failure_prob) {
+            self.injected_step_failures += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Advance one tick; returns (node to kill, nodes to restart now).
+    pub fn tick(&mut self, alive: &[NodeId]) -> (Option<NodeId>, Vec<NodeId>) {
+        self.tick += 1;
+        let restarts: Vec<NodeId> = {
+            let tick = self.tick;
+            let (ready, keep): (Vec<_>, Vec<_>) =
+                self.pending_restarts.drain(..).partition(|(_, t)| *t <= tick);
+            self.pending_restarts = keep;
+            ready.into_iter().map(|(n, _)| n).collect()
+        };
+        let kill = if self.plan.node_failure_prob > 0.0
+            && !alive.is_empty()
+            && self.rng.bool(self.plan.node_failure_prob)
+        {
+            let victim = *self.rng.choose(alive);
+            self.injected_node_failures += 1;
+            if self.plan.nodes_restart {
+                self.pending_restarts
+                    .push((victim, self.tick + self.plan.node_restart_delay));
+            }
+            Some(victim)
+        } else {
+            None
+        };
+        (kill, restarts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_faults_by_default() {
+        let mut f = FaultInjector::new(FaultPlan::none(), 1);
+        for _ in 0..1000 {
+            assert!(!f.step_fails());
+            let (kill, _) = f.tick(&[0, 1]);
+            assert!(kill.is_none());
+        }
+    }
+
+    #[test]
+    fn step_failure_rate_tracks_prob() {
+        let mut f = FaultInjector::new(FaultPlan::flaky_steps(0.2), 2);
+        let fails = (0..10_000).filter(|_| f.step_fails()).count();
+        assert!((fails as f64 / 10_000.0 - 0.2).abs() < 0.02, "{fails}");
+    }
+
+    #[test]
+    fn node_failures_and_restarts() {
+        let plan = FaultPlan { node_failure_prob: 0.5, node_restart_delay: 3, ..Default::default() };
+        let mut f = FaultInjector::new(plan, 3);
+        let mut killed = None;
+        for _ in 0..20 {
+            let (kill, _) = f.tick(&[0, 1, 2]);
+            if kill.is_some() {
+                killed = kill;
+                break;
+            }
+        }
+        let victim = killed.expect("should kill within 20 ticks at p=0.5");
+        // Restart arrives within delay + slack ticks.
+        let mut restarted = false;
+        for _ in 0..10 {
+            let (_, restarts) = f.tick(&[0, 1, 2]);
+            if restarts.contains(&victim) {
+                restarted = true;
+                break;
+            }
+        }
+        assert!(restarted);
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mk = || FaultInjector::new(FaultPlan::flaky_steps(0.3), 42);
+        let (mut a, mut b) = (mk(), mk());
+        for _ in 0..100 {
+            assert_eq!(a.step_fails(), b.step_fails());
+        }
+    }
+}

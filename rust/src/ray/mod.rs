@@ -1,0 +1,22 @@
+//! The Ray-like execution substrate Tune depends on (Moritz et al. 2017),
+//! rebuilt in-process: resource vectors, a multi-node cluster, two-level
+//! (local-first / spill-over) placement, an object store with transfer
+//! accounting, and deterministic fault injection.
+//!
+//! The coordinator only touches this layer through resource leases,
+//! placements, and object ids — the same narrow surface Tune uses of
+//! real Ray — so trial scheduling logic is oblivious to whether trials
+//! run on the discrete-event executor (virtual time) or on real threads
+//! driving PJRT executables.
+
+pub mod cluster;
+pub mod fault;
+pub mod object_store;
+pub mod placement;
+pub mod resources;
+
+pub use cluster::{Cluster, LeaseId, Node, NodeId};
+pub use fault::{FaultInjector, FaultPlan};
+pub use object_store::{ObjectId, ObjectStore};
+pub use placement::{Placement, PlacementStats, TwoLevelScheduler};
+pub use resources::Resources;

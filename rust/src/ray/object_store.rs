@@ -1,0 +1,139 @@
+//! Ray-style object store (§4.3.2 of the paper): `put` an immutable blob
+//! once, `get` it from any node; the store tracks which nodes hold a
+//! copy and accounts inter-node transfer bytes, so the e2e example can
+//! demonstrate weight/dataset broadcast (`ray.put` / `ray.get`) and the
+//! benches can report transfer volume.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+use super::cluster::NodeId;
+
+pub type ObjectId = u64;
+
+#[derive(Debug, Default)]
+pub struct ObjectStore {
+    next_id: ObjectId,
+    objects: BTreeMap<ObjectId, Arc<Vec<u8>>>,
+    /// Which nodes hold a local copy of each object.
+    locations: BTreeMap<ObjectId, BTreeSet<NodeId>>,
+    pub transfers: u64,
+    pub transfer_bytes: u64,
+    pub local_hits: u64,
+}
+
+impl ObjectStore {
+    pub fn new() -> Self {
+        Self { next_id: 1, ..Default::default() }
+    }
+
+    /// Store `data`, creating the primary copy on `node`.
+    pub fn put(&mut self, node: NodeId, data: Vec<u8>) -> ObjectId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.objects.insert(id, Arc::new(data));
+        self.locations.entry(id).or_default().insert(node);
+        id
+    }
+
+    /// Fetch an object from `node`. First access from a node without a
+    /// local copy counts as one inter-node transfer (and caches it
+    /// there); later accesses are local hits.
+    pub fn get(&mut self, node: NodeId, id: ObjectId) -> Option<Arc<Vec<u8>>> {
+        let data = self.objects.get(&id)?.clone();
+        let locs = self.locations.get_mut(&id).expect("locations tracked per object");
+        if locs.contains(&node) {
+            self.local_hits += 1;
+        } else {
+            self.transfers += 1;
+            self.transfer_bytes += data.len() as u64;
+            locs.insert(node);
+        }
+        Some(data)
+    }
+
+    pub fn contains(&self, id: ObjectId) -> bool {
+        self.objects.contains_key(&id)
+    }
+
+    /// Drop an object everywhere (checkpoint GC).
+    pub fn delete(&mut self, id: ObjectId) {
+        self.objects.remove(&id);
+        self.locations.remove(&id);
+    }
+
+    /// A node died: its cached copies are gone (primary copies live in
+    /// the driver's memory in our in-process model, so objects stay
+    /// fetchable — matching Tune's "metadata in memory, checkpoints for
+    /// fault tolerance" design).
+    pub fn evict_node(&mut self, node: NodeId) {
+        for locs in self.locations.values_mut() {
+            locs.remove(&node);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.objects.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.objects.is_empty()
+    }
+    pub fn total_bytes(&self) -> u64 {
+        self.objects.values().map(|o| o.len() as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut s = ObjectStore::new();
+        let id = s.put(0, vec![1, 2, 3]);
+        assert_eq!(&*s.get(0, id).unwrap(), &vec![1, 2, 3]);
+        assert_eq!(s.local_hits, 1);
+        assert_eq!(s.transfers, 0);
+    }
+
+    #[test]
+    fn remote_get_transfers_once() {
+        let mut s = ObjectStore::new();
+        let id = s.put(0, vec![0u8; 100]);
+        s.get(1, id).unwrap();
+        s.get(1, id).unwrap();
+        assert_eq!(s.transfers, 1);
+        assert_eq!(s.transfer_bytes, 100);
+        assert_eq!(s.local_hits, 1);
+    }
+
+    #[test]
+    fn broadcast_accounting() {
+        let mut s = ObjectStore::new();
+        let id = s.put(0, vec![0u8; 1000]);
+        for node in 1..=4 {
+            s.get(node, id).unwrap();
+        }
+        assert_eq!(s.transfers, 4);
+        assert_eq!(s.transfer_bytes, 4000);
+    }
+
+    #[test]
+    fn evict_node_forces_retransfer() {
+        let mut s = ObjectStore::new();
+        let id = s.put(0, vec![0u8; 10]);
+        s.get(1, id).unwrap();
+        s.evict_node(1);
+        s.get(1, id).unwrap();
+        assert_eq!(s.transfers, 2);
+    }
+
+    #[test]
+    fn missing_object_is_none() {
+        let mut s = ObjectStore::new();
+        assert!(s.get(0, 99).is_none());
+        let id = s.put(0, vec![1]);
+        s.delete(id);
+        assert!(s.get(0, id).is_none());
+    }
+}

@@ -1,0 +1,173 @@
+//! Two-level placement, the Ray property the paper singles out (§5):
+//! "task scheduling decisions are typically made on the local machine
+//! when possible, only 'spilling over' to other machines when local
+//! resources are exhausted. This avoids any central bottleneck."
+//!
+//! Each placement request carries an *origin* node (the node the
+//! requesting driver/actor lives on; trial drivers originate on the head
+//! node, nested child tasks originate on their trial's node). The local
+//! node is tried first in O(1); only on local exhaustion do we scan for
+//! spill-over — and that scan starts from a rotating cursor so the spill
+//! path is also O(#nodes-scanned), not O(#nodes * #pending).
+
+use super::cluster::{Cluster, LeaseId, NodeId};
+use super::resources::Resources;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlacementStats {
+    pub local: u64,
+    pub spilled: u64,
+    pub failed: u64,
+}
+
+impl PlacementStats {
+    pub fn total(&self) -> u64 {
+        self.local + self.spilled + self.failed
+    }
+    pub fn spill_fraction(&self) -> f64 {
+        let placed = self.local + self.spilled;
+        if placed == 0 {
+            0.0
+        } else {
+            self.spilled as f64 / placed as f64
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub node: NodeId,
+    pub lease: LeaseId,
+    pub spilled: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TwoLevelScheduler {
+    cursor: usize,
+    pub stats: PlacementStats,
+}
+
+impl TwoLevelScheduler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Place `demand` preferring `origin`; spill over otherwise.
+    pub fn place(
+        &mut self,
+        cluster: &mut Cluster,
+        origin: NodeId,
+        demand: &Resources,
+    ) -> Option<Placement> {
+        // Level 1: local decision.
+        {
+            let n = cluster.node(origin);
+            if n.alive && n.available.fits(demand) {
+                let lease = cluster.lease(origin, demand.clone());
+                self.stats.local += 1;
+                return Some(Placement { node: origin, lease, spilled: false });
+            }
+        }
+        // Level 2: spill over, rotating start to spread load.
+        let n_nodes = cluster.nodes.len();
+        for k in 0..n_nodes {
+            let id = ((self.cursor + k) % n_nodes) as NodeId;
+            if id == origin {
+                continue;
+            }
+            let n = cluster.node(id);
+            if n.alive && n.available.fits(demand) {
+                self.cursor = (self.cursor + k + 1) % n_nodes;
+                let lease = cluster.lease(id, demand.clone());
+                self.stats.spilled += 1;
+                return Some(Placement { node: id, lease, spilled: true });
+            }
+        }
+        self.stats.failed += 1;
+        None
+    }
+
+    /// Centralized baseline (for the C3 scaling ablation): always scans
+    /// every node from zero and picks the least-loaded fit — the
+    /// "central bottleneck" policy the paper contrasts with.
+    pub fn place_centralized(
+        &mut self,
+        cluster: &mut Cluster,
+        demand: &Resources,
+    ) -> Option<Placement> {
+        let mut best: Option<(NodeId, f64)> = None;
+        for n in cluster.nodes.iter() {
+            if n.alive && n.available.fits(demand) {
+                let load = n.utilization_cpu();
+                if best.map_or(true, |(_, b)| load < b) {
+                    best = Some((n.id, load));
+                }
+            }
+        }
+        match best {
+            Some((id, _)) => {
+                let lease = cluster.lease(id, demand.clone());
+                self.stats.spilled += 1;
+                Some(Placement { node: id, lease, spilled: true })
+            }
+            None => {
+                self.stats.failed += 1;
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefers_local() {
+        let mut c = Cluster::uniform(3, Resources::cpu(2.0));
+        let mut s = TwoLevelScheduler::new();
+        let p = s.place(&mut c, 1, &Resources::cpu(1.0)).unwrap();
+        assert_eq!(p.node, 1);
+        assert!(!p.spilled);
+        assert_eq!(s.stats.local, 1);
+    }
+
+    #[test]
+    fn spills_on_local_exhaustion() {
+        let mut c = Cluster::uniform(2, Resources::cpu(1.0));
+        let mut s = TwoLevelScheduler::new();
+        let _ = s.place(&mut c, 0, &Resources::cpu(1.0)).unwrap();
+        let p = s.place(&mut c, 0, &Resources::cpu(1.0)).unwrap();
+        assert_eq!(p.node, 1);
+        assert!(p.spilled);
+        assert_eq!(s.stats.spill_fraction(), 0.5);
+    }
+
+    #[test]
+    fn fails_when_full() {
+        let mut c = Cluster::uniform(2, Resources::cpu(1.0));
+        let mut s = TwoLevelScheduler::new();
+        assert!(s.place(&mut c, 0, &Resources::cpu(1.0)).is_some());
+        assert!(s.place(&mut c, 0, &Resources::cpu(1.0)).is_some());
+        assert!(s.place(&mut c, 0, &Resources::cpu(1.0)).is_none());
+        assert_eq!(s.stats.failed, 1);
+    }
+
+    #[test]
+    fn skips_dead_nodes() {
+        let mut c = Cluster::uniform(2, Resources::cpu(1.0));
+        c.kill_node(0);
+        let mut s = TwoLevelScheduler::new();
+        let p = s.place(&mut c, 0, &Resources::cpu(1.0)).unwrap();
+        assert_eq!(p.node, 1);
+    }
+
+    #[test]
+    fn centralized_picks_least_loaded() {
+        let mut c = Cluster::uniform(2, Resources::cpu(4.0));
+        let mut s = TwoLevelScheduler::new();
+        c.lease(0, Resources::cpu(3.0));
+        let p = s.place_centralized(&mut c, &Resources::cpu(1.0)).unwrap();
+        assert_eq!(p.node, 1);
+    }
+}

@@ -1,0 +1,129 @@
+//! Resource vectors, the unit of admission control.
+//!
+//! Mirrors Ray's resource model as Tune uses it: each trial declares a
+//! `{cpu, gpu, custom...}` demand; nodes hold capacities; the placement
+//! layer does vector fits. Fractional quantities are allowed (Ray
+//! permits e.g. 0.5 GPU).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+const EPS: f64 = 1e-9;
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Resources {
+    pub cpu: f64,
+    pub gpu: f64,
+    pub custom: BTreeMap<String, f64>,
+}
+
+impl Resources {
+    pub fn cpu(cpu: f64) -> Self {
+        Resources { cpu, ..Default::default() }
+    }
+
+    pub fn cpu_gpu(cpu: f64, gpu: f64) -> Self {
+        Resources { cpu, gpu, ..Default::default() }
+    }
+
+    pub fn with_custom(mut self, key: &str, amount: f64) -> Self {
+        self.custom.insert(key.to_string(), amount);
+        self
+    }
+
+    /// Does `self` (a capacity) admit `demand`?
+    pub fn fits(&self, demand: &Resources) -> bool {
+        if self.cpu + EPS < demand.cpu || self.gpu + EPS < demand.gpu {
+            return false;
+        }
+        demand
+            .custom
+            .iter()
+            .all(|(k, v)| self.custom.get(k).copied().unwrap_or(0.0) + EPS >= *v)
+    }
+
+    /// Subtract a demand. Panics (debug) on underflow — the placement
+    /// layer must have checked `fits` first; release/acquire imbalance is
+    /// a coordinator bug, not a recoverable condition.
+    pub fn acquire(&mut self, demand: &Resources) {
+        debug_assert!(self.fits(demand), "acquire without fits: {self:?} < {demand:?}");
+        self.cpu -= demand.cpu;
+        self.gpu -= demand.gpu;
+        for (k, v) in &demand.custom {
+            *self.custom.entry(k.clone()).or_insert(0.0) -= v;
+        }
+    }
+
+    pub fn release(&mut self, demand: &Resources) {
+        self.cpu += demand.cpu;
+        self.gpu += demand.gpu;
+        for (k, v) in &demand.custom {
+            *self.custom.entry(k.clone()).or_insert(0.0) += v;
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.cpu.abs() < EPS
+            && self.gpu.abs() < EPS
+            && self.custom.values().all(|v| v.abs() < EPS)
+    }
+
+    /// Non-negative up to float tolerance (accounting invariant).
+    pub fn is_valid(&self) -> bool {
+        self.cpu > -EPS && self.gpu > -EPS && self.custom.values().all(|v| *v > -EPS)
+    }
+}
+
+impl fmt::Display for Resources {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{{cpu:{:.2}, gpu:{:.2}", self.cpu, self.gpu)?;
+        for (k, v) in &self.custom {
+            write!(f, ", {k}:{v:.2}")?;
+        }
+        write!(f, "}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_basic() {
+        let cap = Resources::cpu_gpu(4.0, 1.0);
+        assert!(cap.fits(&Resources::cpu_gpu(4.0, 1.0)));
+        assert!(cap.fits(&Resources::cpu(0.5)));
+        assert!(!cap.fits(&Resources::cpu_gpu(4.5, 0.0)));
+        assert!(!cap.fits(&Resources::cpu_gpu(1.0, 2.0)));
+    }
+
+    #[test]
+    fn fits_custom() {
+        let cap = Resources::cpu(1.0).with_custom("tpu", 2.0);
+        assert!(cap.fits(&Resources::cpu(1.0).with_custom("tpu", 2.0)));
+        assert!(!cap.fits(&Resources::cpu(0.0).with_custom("tpu", 3.0)));
+        assert!(!cap.fits(&Resources::cpu(0.0).with_custom("fpga", 1.0)));
+    }
+
+    #[test]
+    fn acquire_release_roundtrip() {
+        let mut cap = Resources::cpu_gpu(8.0, 2.0).with_custom("mem", 64.0);
+        let d = Resources::cpu_gpu(3.0, 0.5).with_custom("mem", 16.0);
+        cap.acquire(&d);
+        assert!(cap.is_valid());
+        assert_eq!(cap.cpu, 5.0);
+        cap.release(&d);
+        assert_eq!(cap, Resources::cpu_gpu(8.0, 2.0).with_custom("mem", 64.0));
+    }
+
+    #[test]
+    fn fractional_gpu() {
+        let mut cap = Resources::cpu_gpu(1.0, 1.0);
+        let half = Resources::cpu_gpu(0.5, 0.5);
+        cap.acquire(&half);
+        assert!(cap.fits(&half));
+        cap.acquire(&half);
+        assert!(!cap.fits(&Resources::cpu_gpu(0.0, 0.1)));
+        assert!(cap.is_valid());
+    }
+}

@@ -1,0 +1,292 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and drive them.
+//!
+//! This is the request-path compute engine: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` once per model variant →
+//! `execute` per training step. Python is never involved (it ran once at
+//! `make artifacts`).
+//!
+//! NOT Send (the xla crate's client is Rc-based): the owning thread is
+//! the "device". [`super::service::PjrtService`] wraps this in a
+//! dedicated thread with a channel API for the multi-threaded executor.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{Manifest, ModelManifest};
+
+/// One compiled model variant: train + init executables.
+pub struct LoadedModel {
+    pub manifest: ModelManifest,
+    train: xla::PjRtLoadedExecutable,
+    init: xla::PjRtLoadedExecutable,
+}
+
+/// Output of one fused train step.
+pub struct StepResult {
+    pub state: Vec<xla::Literal>,
+    pub loss: f64,
+    /// Extra metrics in manifest order (after "loss").
+    pub metrics: Vec<f64>,
+}
+
+impl LoadedModel {
+    /// Run the init executable: seed -> fresh state (params + zero
+    /// velocities).
+    pub fn init_state(&self, seed: i32) -> Result<Vec<xla::Literal>> {
+        let seed_lit = xla::Literal::scalar(seed);
+        let result = self.init.execute::<xla::Literal>(&[seed_lit])?[0][0].to_literal_sync()?;
+        let state = result.to_tuple()?;
+        if state.len() != self.manifest.num_state_arrays() {
+            return Err(anyhow!(
+                "init returned {} arrays, manifest says {}",
+                state.len(),
+                self.manifest.num_state_arrays()
+            ));
+        }
+        Ok(state)
+    }
+
+    /// Run one fused fwd+bwd+update step.
+    ///
+    /// `state` is consumed and replaced (the executable is functional;
+    /// feeding outputs back as inputs is the rust-side analogue of
+    /// donated buffers).
+    pub fn train_step(
+        &self,
+        state: Vec<xla::Literal>,
+        batch: &[xla::Literal],
+        lr: f32,
+        momentum: f32,
+    ) -> Result<StepResult> {
+        let n = self.manifest.num_state_arrays();
+        if state.len() != n {
+            return Err(anyhow!("state has {} arrays, expected {n}", state.len()));
+        }
+        if batch.len() != self.manifest.batch_inputs.len() {
+            return Err(anyhow!("batch has {} inputs", batch.len()));
+        }
+        let mut args: Vec<xla::Literal> = state;
+        args.extend(batch.iter().map(clone_literal));
+        args.push(xla::Literal::scalar(lr));
+        args.push(xla::Literal::scalar(momentum));
+
+        let result = self.train.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let mut outs = result.to_tuple()?;
+        if outs.len() != self.manifest.num_outputs() {
+            return Err(anyhow!(
+                "train returned {} outputs, manifest says {}",
+                outs.len(),
+                self.manifest.num_outputs()
+            ));
+        }
+        let metrics_lits: Vec<xla::Literal> = outs.split_off(n);
+        let loss = metrics_lits[0].get_first_element::<f32>()? as f64;
+        let metrics = metrics_lits[1..]
+            .iter()
+            .map(|l| l.get_first_element::<f32>().map(|v| v as f64))
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        Ok(StepResult { state: outs, loss, metrics })
+    }
+
+    /// Build batch literals from host vectors according to the manifest.
+    pub fn batch_literals(&self, f32_data: &[Vec<f32>], i32_data: &[Vec<i32>]) -> Result<Vec<xla::Literal>> {
+        let mut fi = 0;
+        let mut ii = 0;
+        let mut out = Vec::new();
+        for spec in &self.manifest.batch_inputs {
+            let dims: Vec<i64> = spec.shape.iter().map(|d| *d as i64).collect();
+            let lit = match spec.dtype.as_str() {
+                "f32" => {
+                    let v = f32_data.get(fi).ok_or_else(|| anyhow!("missing f32 input"))?;
+                    fi += 1;
+                    anyhow::ensure!(v.len() == spec.elements(), "bad f32 input size");
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+                "i32" => {
+                    let v = i32_data.get(ii).ok_or_else(|| anyhow!("missing i32 input"))?;
+                    ii += 1;
+                    anyhow::ensure!(v.len() == spec.elements(), "bad i32 input size");
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+                other => return Err(anyhow!("unsupported dtype {other}")),
+            };
+            out.push(lit);
+        }
+        Ok(out)
+    }
+
+    /// Serialize state to bytes (checkpoint payload): f32 LE, arrays in
+    /// manifest order (params then velocities).
+    pub fn serialize_state(&self, state: &[xla::Literal]) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(self.manifest.state_elements() * 4);
+        for lit in state {
+            let v: Vec<f32> = lit.to_vec()?;
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Inverse of [`serialize_state`].
+    pub fn deserialize_state(&self, bytes: &[u8]) -> Result<Vec<xla::Literal>> {
+        let want = self.manifest.state_elements() * 4;
+        anyhow::ensure!(bytes.len() == want, "state blob {} bytes, want {want}", bytes.len());
+        let mut out = Vec::with_capacity(self.manifest.num_state_arrays());
+        let mut off = 0;
+        // params then velocities: same shapes twice.
+        for pass in 0..2 {
+            let _ = pass;
+            for spec in &self.manifest.state {
+                let n = spec.elements();
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    v.push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
+                    off += 4;
+                }
+                let dims: Vec<i64> = spec.shape.iter().map(|d| *d as i64).collect();
+                out.push(xla::Literal::vec1(&v).reshape(&dims)?);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Literal lacks Clone in the crate; round-trip through bytes.
+fn clone_literal(l: &xla::Literal) -> xla::Literal {
+    // Literals we clone are small batch inputs; shape-preserving copy.
+    let shape = l.array_shape().expect("array literal");
+    let dims: Vec<i64> = shape.dims().to_vec();
+    match l.ty().expect("element type") {
+        xla::ElementType::F32 => {
+            let v: Vec<f32> = l.to_vec().expect("f32 vec");
+            xla::Literal::vec1(&v).reshape(&dims).expect("reshape")
+        }
+        xla::ElementType::S32 => {
+            let v: Vec<i32> = l.to_vec().expect("i32 vec");
+            xla::Literal::vec1(&v).reshape(&dims).expect("reshape")
+        }
+        other => panic!("unsupported literal type {other:?}"),
+    }
+}
+
+/// The single-threaded PJRT runtime.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    models: BTreeMap<String, LoadedModel>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client over an artifacts directory. Models are
+    /// compiled lazily on first use (compilation is seconds per
+    /// variant).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtRuntime { client, manifest, models: BTreeMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and return a model variant.
+    pub fn model(&mut self, name: &str) -> Result<&LoadedModel> {
+        if !self.models.contains_key(name) {
+            let mm = self.manifest.model(name)?.clone();
+            let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+                let path = self.manifest.dir.join(file);
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .with_context(|| format!("loading {path:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                Ok(self.client.compile(&comp)?)
+            };
+            let train = compile(&mm.train_hlo)?;
+            let init = compile(&mm.init_hlo)?;
+            self.models.insert(name.to_string(), LoadedModel { manifest: mm, train, init });
+        }
+        Ok(&self.models[name])
+    }
+
+    pub fn compiled_variants(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::data::MlpBatchGen;
+
+    fn runtime() -> Option<PjrtRuntime> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return None;
+        }
+        Some(PjrtRuntime::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn mlp_loss_decreases_over_steps() {
+        let Some(mut rt) = runtime() else { return };
+        let model = rt.model("mlp_relu").unwrap();
+        let mut state = model.init_state(0).unwrap();
+        let mut gen = MlpBatchGen::new(model.manifest.batch, 32, 10, 1);
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..30 {
+            let (x, y) = gen.next();
+            let batch = model.batch_literals(&[x], &[y]).unwrap();
+            let out = model.train_step(state, &batch, 0.1, 0.9).unwrap();
+            state = out.state;
+            first.get_or_insert(out.loss);
+            last = out.loss;
+        }
+        let first = first.unwrap();
+        assert!(last < first * 0.7, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn init_is_seed_dependent() {
+        let Some(mut rt) = runtime() else { return };
+        let model = rt.model("mlp_relu").unwrap();
+        let a = model.init_state(0).unwrap();
+        let b = model.init_state(1).unwrap();
+        let av: Vec<f32> = a[0].to_vec().unwrap();
+        let bv: Vec<f32> = b[0].to_vec().unwrap();
+        assert_ne!(av, bv);
+    }
+
+    #[test]
+    fn state_serialization_roundtrip_is_exact() {
+        let Some(mut rt) = runtime() else { return };
+        let model = rt.model("mlp_tanh").unwrap();
+        let state = model.init_state(7).unwrap();
+        let blob = model.serialize_state(&state).unwrap();
+        let state2 = model.deserialize_state(&blob).unwrap();
+        for (a, b) in state.iter().zip(&state2) {
+            let av: Vec<f32> = a.to_vec().unwrap();
+            let bv: Vec<f32> = b.to_vec().unwrap();
+            assert_eq!(av, bv);
+        }
+    }
+
+    #[test]
+    fn lr_zero_is_identity_update() {
+        let Some(mut rt) = runtime() else { return };
+        let model = rt.model("mlp_relu").unwrap();
+        let state = model.init_state(3).unwrap();
+        let before = model.serialize_state(&state).unwrap();
+        let mut gen = MlpBatchGen::new(model.manifest.batch, 32, 10, 1);
+        let (x, y) = gen.next();
+        let batch = model.batch_literals(&[x], &[y]).unwrap();
+        let out = model.train_step(state, &batch, 0.0, 0.0).unwrap();
+        let after = model.serialize_state(&out.state).unwrap();
+        // Params unchanged (first half); velocities become grads.
+        assert_eq!(before[..before.len() / 2], after[..after.len() / 2]);
+    }
+}

@@ -1,0 +1,214 @@
+//! The artifact manifest: the contract between the build-time python
+//! layer (`python/compile/aot.py`) and the rust runtime. Describes, per
+//! model variant, the HLO files plus the exact flat signature of the
+//! train/init executables (state array order/shapes, batch inputs,
+//! scalar hyperparameters, metric outputs).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+#[derive(Clone, Debug)]
+pub struct ArraySpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ArraySpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "f32" or "i32".
+    pub dtype: String,
+}
+
+impl InputSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    pub train_hlo: String,
+    pub init_hlo: String,
+    /// Parameter arrays; the executable's state is params then
+    /// velocities, each in this order with identical shapes.
+    pub state: Vec<ArraySpec>,
+    pub batch_inputs: Vec<InputSpec>,
+    pub scalars: Vec<String>,
+    /// Output metric names; `loss` first by convention.
+    pub metrics: Vec<String>,
+    pub param_count: u64,
+    /// "mlp" | "transformer_lm".
+    pub kind: String,
+    pub activation: String,
+    pub batch: usize,
+    pub meta: Json,
+}
+
+impl ModelManifest {
+    /// Number of state arrays in the executable (params + velocities).
+    pub fn num_state_arrays(&self) -> usize {
+        self.state.len() * 2
+    }
+
+    /// Total f32 elements across the full state.
+    pub fn state_elements(&self) -> usize {
+        self.state.iter().map(|a| a.elements()).sum::<usize>() * 2
+    }
+
+    /// Number of train-executable outputs: state' + loss + extra metrics.
+    pub fn num_outputs(&self) -> usize {
+        self.num_state_arrays() + self.metrics.len()
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+fn arr_usize(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("expected array"))?
+        .iter()
+        .map(|v| v.as_u64().map(|u| u as usize).ok_or_else(|| anyhow!("bad dim")))
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let root = parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+        let mut models = BTreeMap::new();
+        let model_obj = root
+            .get("models")
+            .and_then(|m| m.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing models"))?;
+        for (name, m) in model_obj {
+            let strf = |k: &str| -> Result<String> {
+                m.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| anyhow!("model {name}: missing {k}"))
+            };
+            let state = m
+                .get("state")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("model {name}: missing state"))?
+                .iter()
+                .map(|a| {
+                    Ok(ArraySpec {
+                        name: a.get("name").and_then(|v| v.as_str()).unwrap_or("").into(),
+                        shape: arr_usize(a.get("shape").ok_or_else(|| anyhow!("shape"))?)?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let batch_inputs = m
+                .get("batch_inputs")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("model {name}: missing batch_inputs"))?
+                .iter()
+                .map(|a| {
+                    Ok(InputSpec {
+                        name: a.get("name").and_then(|v| v.as_str()).unwrap_or("").into(),
+                        shape: arr_usize(a.get("shape").ok_or_else(|| anyhow!("shape"))?)?,
+                        dtype: a.get("dtype").and_then(|v| v.as_str()).unwrap_or("f32").into(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let strings = |k: &str| -> Vec<String> {
+                m.get(k)
+                    .and_then(|v| v.as_arr())
+                    .map(|a| a.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+                    .unwrap_or_default()
+            };
+            models.insert(
+                name.clone(),
+                ModelManifest {
+                    name: name.clone(),
+                    train_hlo: strf("train_hlo")?,
+                    init_hlo: strf("init_hlo")?,
+                    state,
+                    batch_inputs,
+                    scalars: strings("scalars"),
+                    metrics: strings("metrics"),
+                    param_count: m.get("param_count").and_then(|v| v.as_u64()).unwrap_or(0),
+                    kind: m
+                        .get("meta.kind")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("unknown")
+                        .into(),
+                    activation: m
+                        .get("meta.activation")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("linear")
+                        .into(),
+                    batch: m.get("meta.batch").and_then(|v| v.as_u64()).unwrap_or(0) as usize,
+                    meta: m.get("meta").cloned().unwrap_or(Json::Null),
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model variant {name:?}; have {:?}", self.models.keys()))
+    }
+
+    /// Default artifacts directory (repo-root/artifacts), overridable
+    /// via TUNE_ARTIFACTS.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("TUNE_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_generated_manifest_if_present() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.models.contains_key("mlp_relu"), "{:?}", m.models.keys());
+        let mlp = m.model("mlp_relu").unwrap();
+        assert_eq!(mlp.kind, "mlp");
+        assert_eq!(mlp.state.len(), 6); // 3 layers x (w, b)
+        assert_eq!(mlp.num_state_arrays(), 12);
+        assert_eq!(mlp.scalars, vec!["lr", "momentum"]);
+        assert_eq!(mlp.metrics[0], "loss");
+        let tlm = m.model("tlm_gelu").unwrap();
+        assert_eq!(tlm.kind, "transformer_lm");
+        assert!(tlm.param_count > 100_000);
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

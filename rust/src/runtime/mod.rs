@@ -1,0 +1,15 @@
+//! Runtime layer: AOT-compiled JAX/Pallas workloads behind PJRT.
+//!
+//! * [`manifest`] — the python↔rust artifact contract
+//! * [`client`] — PJRT client, compiled executables, state ser/de
+//! * [`service`] — device-owning thread + Send channel handle
+//! * [`data`] — deterministic synthetic batch generators
+
+pub mod client;
+pub mod data;
+pub mod manifest;
+pub mod service;
+
+pub use client::{LoadedModel, PjrtRuntime, StepResult};
+pub use manifest::{Manifest, ModelManifest};
+pub use service::{PjrtService, SessionId};

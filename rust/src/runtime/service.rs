@@ -1,0 +1,286 @@
+//! PJRT service thread: the xla crate's client is Rc-based (not Send),
+//! so one dedicated thread owns the runtime and all live model states —
+//! the in-process analogue of Ray's "actor owning the accelerator".
+//! Trial trainables talk to it through a cloneable, Send channel handle.
+//!
+//! Data generation also lives here (per-session, seeded), so a trial's
+//! entire compute path — batch synthesis, train step, state
+//! serialization — happens device-side, and the trainable only moves
+//! metrics and (on checkpoint) opaque state blobs.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Receiver, Sender};
+
+use anyhow::{anyhow, Result};
+
+use super::client::PjrtRuntime;
+use super::data::{LmBatchGen, MlpBatchGen};
+
+pub type SessionId = u64;
+
+enum Request {
+    /// Create a training session for (model variant, seed).
+    Open { session: SessionId, model: String, seed: u64, reply: Sender<Result<()>> },
+    /// Run `n` fused train steps; returns (mean loss, mean extra metrics).
+    Step {
+        session: SessionId,
+        n: u32,
+        lr: f32,
+        momentum: f32,
+        reply: Sender<Result<(f64, Vec<f64>)>>,
+    },
+    /// Serialize session state (+ data-stream position).
+    Save { session: SessionId, reply: Sender<Result<Vec<u8>>> },
+    /// Restore session state from a Save blob.
+    Restore { session: SessionId, blob: Vec<u8>, reply: Sender<Result<()>> },
+    Close { session: SessionId },
+    Shutdown,
+}
+
+enum DataGen {
+    Mlp(MlpBatchGen),
+    Lm(LmBatchGen),
+}
+
+struct Session {
+    model: String,
+    state: Vec<xla::Literal>,
+    gen: DataGen,
+    steps: u64,
+    seed: u64,
+}
+
+/// Send + Clone handle to the service thread.
+#[derive(Clone)]
+pub struct PjrtService {
+    tx: Sender<Request>,
+}
+
+impl PjrtService {
+    /// Spawn the service over an artifacts directory.
+    pub fn spawn(dir: PathBuf) -> Result<PjrtService> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || match PjrtRuntime::load(&dir) {
+                Ok(rt) => {
+                    let _ = ready_tx.send(Ok(()));
+                    serve(rt, rx);
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                }
+            })?;
+        ready_rx.recv().map_err(|e| anyhow!("service died: {e}"))??;
+        Ok(PjrtService { tx })
+    }
+
+    pub fn open(&self, session: SessionId, model: &str, seed: u64) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Open { session, model: model.into(), seed, reply })
+            .map_err(|_| anyhow!("service gone"))?;
+        rx.recv().map_err(|_| anyhow!("service gone"))?
+    }
+
+    pub fn step(&self, session: SessionId, n: u32, lr: f32, momentum: f32) -> Result<(f64, Vec<f64>)> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Step { session, n, lr, momentum, reply })
+            .map_err(|_| anyhow!("service gone"))?;
+        rx.recv().map_err(|_| anyhow!("service gone"))?
+    }
+
+    pub fn save(&self, session: SessionId) -> Result<Vec<u8>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Save { session, reply })
+            .map_err(|_| anyhow!("service gone"))?;
+        rx.recv().map_err(|_| anyhow!("service gone"))?
+    }
+
+    pub fn restore(&self, session: SessionId, blob: Vec<u8>) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Restore { session, blob, reply })
+            .map_err(|_| anyhow!("service gone"))?;
+        rx.recv().map_err(|_| anyhow!("service gone"))?
+    }
+
+    pub fn close(&self, session: SessionId) {
+        let _ = self.tx.send(Request::Close { session });
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Request::Shutdown);
+    }
+}
+
+fn make_gen(rt: &mut PjrtRuntime, model: &str, seed: u64) -> Result<DataGen> {
+    let mm = rt.manifest.model(model)?;
+    Ok(match mm.kind.as_str() {
+        "mlp" => {
+            let in_dim = mm.batch_inputs[0].shape[1];
+            DataGen::Mlp(MlpBatchGen::new(mm.batch, in_dim, 10, seed))
+        }
+        "transformer_lm" => {
+            let row_len = mm.batch_inputs[0].shape[1];
+            let vocab = rt
+                .manifest
+                .model(model)?
+                .meta
+                .get("vocab")
+                .and_then(|v| v.as_u64())
+                .unwrap_or(128) as i32;
+            DataGen::Lm(LmBatchGen::new(mm.batch, row_len, vocab, seed))
+        }
+        other => return Err(anyhow!("unknown model kind {other}")),
+    })
+}
+
+fn serve(mut rt: PjrtRuntime, rx: Receiver<Request>) {
+    let mut sessions: BTreeMap<SessionId, Session> = BTreeMap::new();
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Open { session, model, seed, reply } => {
+                let r = (|| -> Result<()> {
+                    let gen = make_gen(&mut rt, &model, seed)?;
+                    let m = rt.model(&model)?;
+                    let state = m.init_state((seed & 0x7FFF_FFFF) as i32)?;
+                    sessions.insert(session, Session { model, state, gen, steps: 0, seed });
+                    Ok(())
+                })();
+                let _ = reply.send(r);
+            }
+            Request::Step { session, n, lr, momentum, reply } => {
+                let r = (|| -> Result<(f64, Vec<f64>)> {
+                    let s = sessions.get_mut(&session).ok_or_else(|| anyhow!("no session"))?;
+                    let model = rt.model(&s.model)?;
+                    let mut loss_acc = 0.0;
+                    let mut metric_acc: Vec<f64> = Vec::new();
+                    for _ in 0..n.max(1) {
+                        let batch = match &mut s.gen {
+                            DataGen::Mlp(g) => {
+                                let (x, y) = g.next();
+                                model.batch_literals(&[x], &[y])?
+                            }
+                            DataGen::Lm(g) => {
+                                let toks = g.next();
+                                model.batch_literals(&[], &[toks])?
+                            }
+                        };
+                        let state = std::mem::take(&mut s.state);
+                        let out = model.train_step(state, &batch, lr, momentum)?;
+                        s.state = out.state;
+                        s.steps += 1;
+                        loss_acc += out.loss;
+                        if metric_acc.is_empty() {
+                            metric_acc = vec![0.0; out.metrics.len()];
+                        }
+                        for (a, m) in metric_acc.iter_mut().zip(&out.metrics) {
+                            *a += m;
+                        }
+                    }
+                    let inv = 1.0 / n.max(1) as f64;
+                    Ok((loss_acc * inv, metric_acc.into_iter().map(|m| m * inv).collect()))
+                })();
+                let _ = reply.send(r);
+            }
+            Request::Save { session, reply } => {
+                let r = (|| -> Result<Vec<u8>> {
+                    let s = sessions.get(&session).ok_or_else(|| anyhow!("no session"))?;
+                    let model = rt.model(&s.model)?;
+                    let mut blob = Vec::new();
+                    blob.extend_from_slice(&s.steps.to_le_bytes());
+                    blob.extend_from_slice(&s.seed.to_le_bytes());
+                    blob.extend(model.serialize_state(&s.state)?);
+                    Ok(blob)
+                })();
+                let _ = reply.send(r);
+            }
+            Request::Restore { session, blob, reply } => {
+                let r = (|| -> Result<()> {
+                    anyhow::ensure!(blob.len() > 16, "short state blob");
+                    let steps = u64::from_le_bytes(blob[..8].try_into().unwrap());
+                    let seed = u64::from_le_bytes(blob[8..16].try_into().unwrap());
+                    let model_name = sessions
+                        .get(&session)
+                        .ok_or_else(|| anyhow!("no session"))?
+                        .model
+                        .clone();
+                    let state = rt.model(&model_name)?.deserialize_state(&blob[16..])?;
+                    // Re-seed the data stream past the checkpoint, so
+                    // restored trials see fresh (but deterministic) data.
+                    let gen = make_gen(&mut rt, &model_name, seed ^ steps)?;
+                    let s = sessions.get_mut(&session).unwrap();
+                    s.state = state;
+                    s.steps = steps;
+                    s.gen = gen;
+                    Ok(())
+                })();
+                let _ = reply.send(r);
+            }
+            Request::Close { session } => {
+                sessions.remove(&session);
+            }
+            Request::Shutdown => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn service() -> Option<PjrtService> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return None;
+        }
+        Some(PjrtService::spawn(dir).unwrap())
+    }
+
+    #[test]
+    fn sessions_are_independent_and_learn() {
+        let Some(svc) = service() else { return };
+        svc.open(1, "mlp_relu", 11).unwrap();
+        svc.open(2, "mlp_relu", 22).unwrap();
+        let (l1a, _) = svc.step(1, 5, 0.1, 0.9).unwrap();
+        let (l2a, _) = svc.step(2, 5, 0.1, 0.9).unwrap();
+        let (l1b, m1) = svc.step(1, 20, 0.1, 0.9).unwrap();
+        assert!(l1b < l1a, "{l1a} -> {l1b}");
+        assert!(l2a > 0.0);
+        assert!(!m1.is_empty()); // accuracy
+        svc.close(1);
+        svc.close(2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn save_restore_resumes_loss_level() {
+        let Some(svc) = service() else { return };
+        svc.open(1, "mlp_tanh", 5).unwrap();
+        svc.step(1, 25, 0.1, 0.9).unwrap();
+        let blob = svc.save(1).unwrap();
+        let (trained_loss, _) = svc.step(1, 1, 0.0, 0.0).unwrap();
+
+        svc.open(2, "mlp_tanh", 99).unwrap();
+        let (fresh_loss, _) = svc.step(2, 1, 0.0, 0.0).unwrap();
+        svc.restore(2, blob).unwrap();
+        let (restored_loss, _) = svc.step(2, 1, 0.0, 0.0).unwrap();
+        assert!(restored_loss < fresh_loss, "{restored_loss} vs fresh {fresh_loss}");
+        assert!((restored_loss - trained_loss).abs() < 0.5);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn open_unknown_model_errors() {
+        let Some(svc) = service() else { return };
+        assert!(svc.open(1, "nope", 0).is_err());
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,377 @@
+//! The cooperative function-based user API (Figure 2(a)).
+//!
+//! The user writes an ordinary training loop taking a [`TuneHandle`]:
+//!
+//! ```
+//! use tune::trainable::function::{FunctionTrainable, TuneHandle};
+//! use tune::trainable::Trainable;
+//! let f = |tune: TuneHandle| {
+//!     let lr = tune.param_f64("lr", 0.01);
+//!     let mut model = 0.0;
+//!     for i in tune.start_iteration()..100 {
+//!         model += lr; // one training epoch
+//!         if tune.should_checkpoint() {
+//!             tune.record_checkpoint(model.to_le_bytes().to_vec());
+//!         }
+//!         if !tune.report(i, &[("score", model)]) { return; }
+//!     }
+//! };
+//! let mut t = FunctionTrainable::spawn(Default::default(), 0, std::sync::Arc::new(f));
+//! assert!(t.step().unwrap().metrics["score"] > 0.0);
+//! ```
+//!
+//! `report` *blocks* until the scheduler wants another iteration — the
+//! cooperative control model: the framework decides between iterations
+//! whether to continue, checkpoint, mutate, or stop, with minimal
+//! changes to user code. The adapter below wraps the function in a
+//! thread and exposes the class-based [`Trainable`] interface to the
+//! executors ("Tune inserts adapters over the cooperative interface to
+//! provide a facade of direct control to trial schedulers").
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::coordinator::trial::Config;
+
+use super::{StepOutput, Trainable};
+
+/// What the driver sends to the user function.
+enum Cmd {
+    /// Run until the next `report`.
+    Continue,
+    /// Finish: `report` returns false, function should return.
+    Stop,
+}
+
+/// What the user function sends to the driver.
+enum Msg {
+    Report { iteration: u64, metrics: BTreeMap<String, f64> },
+    Done,
+}
+
+type TrainFn = Arc<dyn Fn(TuneHandle) + Send + Sync>;
+
+/// Handle passed into the user's training function.
+pub struct TuneHandle {
+    params: Config,
+    cmd_rx: Receiver<Cmd>,
+    msg_tx: Sender<Msg>,
+    shared: Arc<Shared>,
+    start_iteration: u64,
+}
+
+#[derive(Default)]
+struct Shared {
+    /// Set by the driver when it wants a checkpoint at the next
+    /// cooperative opportunity; cleared when one is recorded.
+    want_checkpoint: Mutex<bool>,
+    /// Last checkpoint blob recorded by the user function.
+    last_checkpoint: Mutex<Option<Vec<u8>>>,
+    /// Blob to restore from at (re)start.
+    restore_from: Mutex<Option<Vec<u8>>>,
+    /// Config updates applied between iterations (PBT).
+    config_update: Mutex<Option<Config>>,
+}
+
+impl TuneHandle {
+    /// Hyperparameters (`tune.params` in the paper's snippet).
+    pub fn param_f64(&self, key: &str, default: f64) -> f64 {
+        self.latest_config()
+            .get(key)
+            .and_then(|v| v.as_f64())
+            .unwrap_or(default)
+    }
+
+    pub fn param_str(&self, key: &str, default: &str) -> String {
+        self.latest_config()
+            .get(key)
+            .and_then(|v| v.as_str().map(|s| s.to_string()))
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    fn latest_config(&self) -> Config {
+        if let Some(c) = self.shared.config_update.lock().unwrap().clone() {
+            c
+        } else {
+            self.params.clone()
+        }
+    }
+
+    /// Iteration to resume from (0 on fresh start; the checkpointed
+    /// iteration after a restore-restart).
+    pub fn start_iteration(&self) -> u64 {
+        self.start_iteration
+    }
+
+    /// Blob recorded by a previous incarnation, if restoring.
+    pub fn get_checkpoint(&self) -> Option<Vec<u8>> {
+        self.shared.restore_from.lock().unwrap().clone()
+    }
+
+    /// True when the framework wants a snapshot now (§4.1:
+    /// `tune.should_checkpoint()`).
+    pub fn should_checkpoint(&self) -> bool {
+        *self.shared.want_checkpoint.lock().unwrap()
+    }
+
+    /// Hand the framework a snapshot (§4.1: `tune.record_checkpoint`).
+    pub fn record_checkpoint(&self, blob: Vec<u8>) {
+        *self.shared.last_checkpoint.lock().unwrap() = Some(blob);
+        *self.shared.want_checkpoint.lock().unwrap() = false;
+    }
+
+    /// Report intermediate results; blocks until the framework requests
+    /// the next iteration. Returns false when the trial should stop.
+    pub fn report(&self, iteration: u64, metrics: &[(&str, f64)]) -> bool {
+        let metrics = metrics.iter().map(|(k, v)| (k.to_string(), *v)).collect();
+        if self.msg_tx.send(Msg::Report { iteration, metrics }).is_err() {
+            return false;
+        }
+        matches!(self.cmd_rx.recv(), Ok(Cmd::Continue))
+    }
+}
+
+/// Adapter: cooperative function -> class-based [`Trainable`].
+pub struct FunctionTrainable {
+    f: TrainFn,
+    config: Config,
+    #[allow(dead_code)]
+    seed: u64,
+    shared: Arc<Shared>,
+    cmd_tx: Option<Sender<Cmd>>,
+    msg_rx: Option<Receiver<Msg>>,
+    thread: Option<JoinHandle<()>>,
+    iteration: u64,
+    finished: bool,
+}
+
+impl FunctionTrainable {
+    pub fn spawn(config: Config, seed: u64, f: TrainFn) -> Self {
+        let mut t = FunctionTrainable {
+            f,
+            config,
+            seed,
+            shared: Arc::new(Shared::default()),
+            cmd_tx: None,
+            msg_rx: None,
+            thread: None,
+            iteration: 0,
+            finished: false,
+        };
+        t.start_thread();
+        t
+    }
+
+    fn start_thread(&mut self) {
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        let (msg_tx, msg_rx) = mpsc::channel();
+        let handle = TuneHandle {
+            params: self.config.clone(),
+            cmd_rx,
+            msg_tx: msg_tx.clone(),
+            shared: self.shared.clone(),
+            start_iteration: self.iteration,
+        };
+        let f = self.f.clone();
+        self.thread = Some(std::thread::spawn(move || {
+            f(handle);
+            let _ = msg_tx.send(Msg::Done);
+        }));
+        self.cmd_tx = Some(cmd_tx);
+        self.msg_rx = Some(msg_rx);
+        self.finished = false;
+    }
+
+    fn shutdown_thread(&mut self) {
+        if let Some(tx) = self.cmd_tx.take() {
+            let _ = tx.send(Cmd::Stop);
+        }
+        if let Some(rx) = self.msg_rx.take() {
+            // Drain until the function acknowledges by returning.
+            while let Ok(msg) = rx.recv() {
+                if matches!(msg, Msg::Done) {
+                    break;
+                }
+            }
+        }
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Trainable for FunctionTrainable {
+    fn step(&mut self) -> Result<StepOutput, String> {
+        if self.finished {
+            return Ok(StepOutput { metrics: BTreeMap::new(), done: true });
+        }
+        let rx = self.msg_rx.as_ref().ok_or("function thread not running")?;
+        // The function is parked inside `report` (or hasn't reported yet
+        // on a fresh start). First wait for its report, then it parks.
+        match rx.recv() {
+            Ok(Msg::Report { iteration, metrics }) => {
+                self.iteration = iteration;
+                // Ask for one more iteration so the next `step` finds a
+                // fresh report; the *scheduler* decides what actually
+                // happens via the runner, which calls stop()/save() etc.
+                if let Some(tx) = &self.cmd_tx {
+                    let _ = tx.send(Cmd::Continue);
+                }
+                Ok(StepOutput { metrics, done: false })
+            }
+            Ok(Msg::Done) | Err(_) => {
+                self.finished = true;
+                Ok(StepOutput { metrics: BTreeMap::new(), done: true })
+            }
+        }
+    }
+
+    fn save(&mut self) -> Vec<u8> {
+        // Cooperative model: request a checkpoint; it becomes available
+        // at the function's next should_checkpoint() poll. We return the
+        // most recent recorded blob (Ray's function API semantics).
+        *self.shared.want_checkpoint.lock().unwrap() = true;
+        let blob = self.shared.last_checkpoint.lock().unwrap().clone();
+        let mut out = self.iteration.to_le_bytes().to_vec();
+        out.extend(blob.unwrap_or_default());
+        out
+    }
+
+    fn restore(&mut self, blob: &[u8]) -> Result<(), String> {
+        if blob.len() < 8 {
+            return Err("bad function checkpoint".into());
+        }
+        // Restart the function thread from the checkpointed iteration —
+        // the actor-restart semantics of the real system.
+        self.shutdown_thread();
+        self.iteration = u64::from_le_bytes(blob[..8].try_into().unwrap());
+        *self.shared.restore_from.lock().unwrap() = Some(blob[8..].to_vec());
+        *self.shared.last_checkpoint.lock().unwrap() = Some(blob[8..].to_vec());
+        self.start_thread();
+        Ok(())
+    }
+
+    fn update_config(&mut self, config: &Config) {
+        *self.shared.config_update.lock().unwrap() = Some(config.clone());
+    }
+}
+
+impl Drop for FunctionTrainable {
+    fn drop(&mut self) {
+        // Don't hang on a parked user thread.
+        if let Some(tx) = self.cmd_tx.take() {
+            let _ = tx.send(Cmd::Stop);
+        }
+        if let Some(rx) = self.msg_rx.take() {
+            loop {
+                match rx.try_recv() {
+                    Ok(Msg::Done) | Err(TryRecvError::Disconnected) => break,
+                    Ok(_) => continue,
+                    Err(TryRecvError::Empty) => break,
+                }
+            }
+        }
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trial::ParamValue;
+
+    fn train_fn(tune: TuneHandle) {
+        let lr = tune.param_f64("lr", 0.1);
+        let mut model = match tune.get_checkpoint() {
+            Some(b) if b.len() == 8 => f64::from_le_bytes(b.try_into().unwrap()),
+            _ => 0.0,
+        };
+        let mut i = tune.start_iteration();
+        loop {
+            i += 1;
+            model += lr;
+            if tune.should_checkpoint() {
+                tune.record_checkpoint(model.to_le_bytes().to_vec());
+            }
+            if !tune.report(i, &[("score", model)]) {
+                return;
+            }
+        }
+    }
+
+    fn cfg(lr: f64) -> Config {
+        let mut c = Config::new();
+        c.insert("lr".into(), ParamValue::F64(lr));
+        c
+    }
+
+    #[test]
+    fn reports_flow_through_step() {
+        let mut t = FunctionTrainable::spawn(cfg(0.5), 0, Arc::new(train_fn));
+        let a = t.step().unwrap();
+        let b = t.step().unwrap();
+        assert_eq!(a.metrics["score"], 0.5);
+        assert_eq!(b.metrics["score"], 1.0);
+    }
+
+    #[test]
+    fn checkpoint_and_restore_across_incarnations() {
+        let mut t = FunctionTrainable::spawn(cfg(1.0), 0, Arc::new(train_fn));
+        t.step().unwrap();
+        t.save(); // arm want_checkpoint
+        t.step().unwrap(); // function records at next poll
+        let blob = t.save();
+        drop(t);
+
+        let mut t2 = FunctionTrainable::spawn(cfg(1.0), 0, Arc::new(train_fn));
+        t2.restore(&blob).unwrap();
+        let out = t2.step().unwrap();
+        // Restored model had score >= 2.0, so next report is >= 3.0.
+        assert!(out.metrics["score"] >= 3.0, "{:?}", out.metrics);
+    }
+
+    #[test]
+    fn update_config_reaches_function() {
+        let f = |tune: TuneHandle| {
+            let mut i = 0;
+            loop {
+                i += 1;
+                let lr = tune.param_f64("lr", 0.0);
+                if !tune.report(i, &[("lr", lr)]) {
+                    return;
+                }
+            }
+        };
+        let mut t = FunctionTrainable::spawn(cfg(0.1), 0, Arc::new(f));
+        assert_eq!(t.step().unwrap().metrics["lr"], 0.1);
+        t.update_config(&cfg(0.9));
+        assert_eq!(t.step().unwrap().metrics["lr"], 0.9);
+    }
+
+    #[test]
+    fn finite_function_signals_done() {
+        let f = |tune: TuneHandle| {
+            for i in 1..=3u64 {
+                if !tune.report(i, &[("i", i as f64)]) {
+                    return;
+                }
+            }
+        };
+        let mut t = FunctionTrainable::spawn(Config::new(), 0, Arc::new(f));
+        for _ in 0..3 {
+            assert!(!t.step().unwrap().done);
+        }
+        assert!(t.step().unwrap().done);
+        assert!(t.step().unwrap().done); // idempotent after finish
+    }
+
+    #[test]
+    fn drop_does_not_hang() {
+        let t = FunctionTrainable::spawn(cfg(0.1), 0, Arc::new(train_fn));
+        drop(t); // must not deadlock
+    }
+}

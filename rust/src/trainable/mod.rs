@@ -1,0 +1,119 @@
+//! The user API (§4.1 of the paper): trainables.
+//!
+//! The paper offers two integration styles and so do we:
+//!
+//! * **Class-based** ([`Trainable`], Figure 2(b)) — `step`/`save`/
+//!   `restore` methods the trial schedulers call to incrementally train
+//!   models. This is the native interface of the executors.
+//! * **Function-based cooperative** ([`function::run_function`],
+//!   Figure 2(a)) — the user writes a plain training loop calling
+//!   `tune.report(..)` / `tune.should_checkpoint()` /
+//!   `tune.record_checkpoint(..)`; an adapter ("Tune inserts adapters
+//!   over the cooperative interface to provide a facade of direct
+//!   control") turns it into a [`Trainable`].
+//!
+//! Everything a scheduler needs — intermediate results, snapshot,
+//! restore, runtime hyperparameter mutation — flows through this narrow
+//! waist, which is the paper's central design claim.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::coordinator::trial::Config;
+
+pub mod function;
+pub mod jax_model;
+pub mod synthetic;
+
+/// Metrics from one training iteration.
+#[derive(Clone, Debug, Default)]
+pub struct StepOutput {
+    pub metrics: BTreeMap<String, f64>,
+    /// The trainable itself declares it is finished (e.g. the
+    /// cooperative function returned).
+    pub done: bool,
+}
+
+impl StepOutput {
+    pub fn of(pairs: &[(&str, f64)]) -> Self {
+        StepOutput {
+            metrics: pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+            done: false,
+        }
+    }
+}
+
+/// The class-based user API (Figure 2(b)).
+pub trait Trainable: Send {
+    /// Run one training iteration and report metrics.
+    fn step(&mut self) -> Result<StepOutput, String>;
+
+    /// Snapshot the full training state as an opaque blob.
+    fn save(&mut self) -> Vec<u8>;
+
+    /// Restore from a blob produced by `save` (possibly by a *different*
+    /// trial — PBT clones across the population).
+    fn restore(&mut self, blob: &[u8]) -> Result<(), String>;
+
+    /// Apply a mutated hyperparameter configuration at runtime
+    /// ("alter hyperparameters in the middle of training", §4.1).
+    fn update_config(&mut self, _config: &Config) {}
+
+    /// Virtual seconds one `step` costs on the discrete-event executor.
+    /// Irregular computations (§3) surface here: trainables may report
+    /// config-dependent or time-varying costs.
+    fn step_cost(&self) -> f64 {
+        1.0
+    }
+}
+
+/// Creates a trainable for a trial: (config, trial seed) -> Trainable.
+pub type TrainableFactory = Arc<dyn Fn(&Config, u64) -> Box<dyn Trainable> + Send + Sync>;
+
+/// Convenience for tests and examples.
+pub fn factory<F>(f: F) -> TrainableFactory
+where
+    F: Fn(&Config, u64) -> Box<dyn Trainable> + Send + Sync + 'static,
+{
+    Arc::new(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Counter {
+        n: u64,
+    }
+    impl Trainable for Counter {
+        fn step(&mut self) -> Result<StepOutput, String> {
+            self.n += 1;
+            Ok(StepOutput::of(&[("n", self.n as f64)]))
+        }
+        fn save(&mut self) -> Vec<u8> {
+            self.n.to_le_bytes().to_vec()
+        }
+        fn restore(&mut self, blob: &[u8]) -> Result<(), String> {
+            self.n = u64::from_le_bytes(blob.try_into().map_err(|_| "bad blob")?);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn save_restore_roundtrip() {
+        let mut c = Counter { n: 0 };
+        c.step().unwrap();
+        c.step().unwrap();
+        let blob = c.save();
+        let mut c2 = Counter { n: 0 };
+        c2.restore(&blob).unwrap();
+        assert_eq!(c2.step().unwrap().metrics["n"], 3.0);
+    }
+
+    #[test]
+    fn factory_builds_boxed() {
+        let f = factory(|_, _| Box::new(Counter { n: 0 }));
+        let mut t = f(&Config::new(), 0);
+        assert_eq!(t.step().unwrap().metrics["n"], 1.0);
+    }
+}

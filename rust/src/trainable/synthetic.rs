@@ -1,0 +1,276 @@
+//! Synthetic trainables: parametric learning curves whose observable
+//! interface (iteration -> metric stream, config sensitivity, save/
+//! restore, runtime mutation) matches a real training job at ~10^6x less
+//! compute. The HyperBand / ASHA / PBT papers evaluate schedulers on
+//! exactly this kind of simulated workload; DESIGN.md documents the
+//! substitution (C1/C2).
+
+use crate::coordinator::trial::Config;
+use crate::util::rng::Rng;
+
+use super::{StepOutput, Trainable};
+
+fn cfg_f64(config: &Config, key: &str, default: f64) -> f64 {
+    config.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+}
+
+/// Stationary learning curve:
+///
+///   quality q  = exp(-(log10 lr - log10 lr*)^2 / w) * m(momentum)
+///   acc(t)     = q * (1 - exp(-t / tau)) + eps,  eps ~ N(0, noise)
+///   loss(t)    = 1 - acc(t)
+///
+/// with lr* = 0.02. Better configs converge to higher ceilings; tau also
+/// depends on the config so curves cross — exactly the regime where
+/// early stopping on intermediate results can be fooled, which is what
+/// separates median-stopping / ASHA / HyperBand from FIFO in C1.
+pub struct CurveTrainable {
+    t: u64,
+    quality: f64,
+    tau: f64,
+    noise: f64,
+    cost: f64,
+    rng: Rng,
+}
+
+impl CurveTrainable {
+    pub const OPT_LR: f64 = 0.02;
+
+    pub fn new(config: &Config, seed: u64) -> Self {
+        let lr = cfg_f64(config, "lr", 0.01);
+        let momentum = cfg_f64(config, "momentum", 0.9);
+        let dist = (lr.log10() - Self::OPT_LR.log10()).powi(2);
+        let mq = 1.0 - 0.3 * (momentum - 0.9).abs();
+        let quality = 0.97 * (-dist / 1.5).exp() * mq;
+        let mut rng = Rng::new(seed ^ 0xC0FFEE);
+        // Slow starters: worse configs converge slower => curves cross.
+        let tau = 8.0 + 30.0 * (1.0 - quality) + rng.uniform(0.0, 4.0);
+        // Irregular computations (§3): per-trial step cost varies ~4x.
+        let cost = rng.uniform(0.5, 2.0);
+        CurveTrainable { t: 0, quality, tau, noise: 0.01, cost, rng }
+    }
+
+    pub fn asymptote(&self) -> f64 {
+        self.quality
+    }
+
+    fn accuracy_at(&mut self, t: u64) -> f64 {
+        let base = self.quality * (1.0 - (-(t as f64) / self.tau).exp());
+        (base + self.rng.normal_scaled(0.0, self.noise)).clamp(0.0, 1.0)
+    }
+}
+
+impl Trainable for CurveTrainable {
+    fn step(&mut self) -> Result<StepOutput, String> {
+        self.t += 1;
+        let acc = self.accuracy_at(self.t);
+        Ok(StepOutput::of(&[("accuracy", acc), ("loss", 1.0 - acc)]))
+    }
+
+    fn save(&mut self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16);
+        out.extend_from_slice(&self.t.to_le_bytes());
+        out.extend_from_slice(&self.quality.to_le_bytes());
+        out
+    }
+
+    fn restore(&mut self, blob: &[u8]) -> Result<(), String> {
+        if blob.len() != 16 {
+            return Err(format!("bad curve checkpoint: {} bytes", blob.len()));
+        }
+        self.t = u64::from_le_bytes(blob[..8].try_into().unwrap());
+        self.quality = f64::from_le_bytes(blob[8..].try_into().unwrap());
+        Ok(())
+    }
+
+    fn step_cost(&self) -> f64 {
+        self.cost
+    }
+}
+
+/// Non-stationary objective for PBT (C2): the optimal learning rate
+/// decays over time,
+///
+///   lr*(t) = 0.1 * 10^(-t / half_life)
+///
+/// and the per-step gain is exp(-(log10 lr - log10 lr*(t))^2 / w).
+/// The reported metric is cumulative score. A static config can only be
+/// near-optimal for a short window; PBT's mid-training mutation/cloning
+/// tracks the moving target — the paper's claim 3 in §4.2.
+pub struct NonStationaryTrainable {
+    t: u64,
+    score: f64,
+    lr: f64,
+    half_life: f64,
+    rng: Rng,
+}
+
+impl NonStationaryTrainable {
+    pub fn new(config: &Config, seed: u64) -> Self {
+        NonStationaryTrainable {
+            t: 0,
+            score: 0.0,
+            lr: cfg_f64(config, "lr", 0.01),
+            half_life: cfg_f64(config, "half_life", 40.0),
+            rng: Rng::new(seed ^ 0xDECade),
+        }
+    }
+
+    pub fn optimal_lr_at(t: u64, half_life: f64) -> f64 {
+        0.1 * 10f64.powf(-(t as f64) / half_life)
+    }
+
+    fn gain(&mut self) -> f64 {
+        let opt = Self::optimal_lr_at(self.t, self.half_life);
+        let d = (self.lr.log10() - opt.log10()).powi(2);
+        ((-d / 0.5).exp() + self.rng.normal_scaled(0.0, 0.005)).max(0.0)
+    }
+}
+
+impl Trainable for NonStationaryTrainable {
+    fn step(&mut self) -> Result<StepOutput, String> {
+        self.t += 1;
+        let g = self.gain();
+        self.score += g;
+        Ok(StepOutput::of(&[
+            ("score", self.score),
+            ("gain", g),
+            ("lr", self.lr),
+        ]))
+    }
+
+    fn save(&mut self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16);
+        out.extend_from_slice(&self.t.to_le_bytes());
+        out.extend_from_slice(&self.score.to_le_bytes());
+        out
+    }
+
+    fn restore(&mut self, blob: &[u8]) -> Result<(), String> {
+        if blob.len() != 16 {
+            return Err("bad checkpoint".into());
+        }
+        self.t = u64::from_le_bytes(blob[..8].try_into().unwrap());
+        self.score = f64::from_le_bytes(blob[8..].try_into().unwrap());
+        Ok(())
+    }
+
+    /// PBT explore lands here: the new lr takes effect mid-training.
+    fn update_config(&mut self, config: &Config) {
+        self.lr = cfg_f64(config, "lr", self.lr);
+    }
+}
+
+/// Fixed-length trivial trainable for overhead/scaling benches (C3):
+/// every step costs `cost` virtual seconds and reports one metric.
+pub struct ConstTrainable {
+    t: u64,
+    cost: f64,
+}
+
+impl ConstTrainable {
+    pub fn new(config: &Config, _seed: u64) -> Self {
+        ConstTrainable { t: 0, cost: cfg_f64(config, "step_cost", 1.0) }
+    }
+}
+
+impl Trainable for ConstTrainable {
+    fn step(&mut self) -> Result<StepOutput, String> {
+        self.t += 1;
+        Ok(StepOutput::of(&[("iters", self.t as f64)]))
+    }
+    fn save(&mut self) -> Vec<u8> {
+        self.t.to_le_bytes().to_vec()
+    }
+    fn restore(&mut self, blob: &[u8]) -> Result<(), String> {
+        self.t = u64::from_le_bytes(blob.try_into().map_err(|_| "bad blob")?);
+        Ok(())
+    }
+    fn step_cost(&self) -> f64 {
+        self.cost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trial::ParamValue;
+
+    fn cfg(lr: f64) -> Config {
+        let mut c = Config::new();
+        c.insert("lr".into(), ParamValue::F64(lr));
+        c
+    }
+
+    #[test]
+    fn good_lr_beats_bad_lr() {
+        let mut good = CurveTrainable::new(&cfg(0.02), 1);
+        let mut bad = CurveTrainable::new(&cfg(1e-4), 1);
+        let mut g_acc = 0.0;
+        let mut b_acc = 0.0;
+        for _ in 0..200 {
+            g_acc = good.step().unwrap().metrics["accuracy"];
+            b_acc = bad.step().unwrap().metrics["accuracy"];
+        }
+        assert!(g_acc > b_acc + 0.2, "good={g_acc} bad={b_acc}");
+    }
+
+    #[test]
+    fn curve_is_monotone_ish() {
+        let mut t = CurveTrainable::new(&cfg(0.02), 2);
+        let early = t.step().unwrap().metrics["accuracy"];
+        for _ in 0..100 {
+            t.step().unwrap();
+        }
+        let late = t.step().unwrap().metrics["accuracy"];
+        assert!(late > early);
+    }
+
+    #[test]
+    fn curve_checkpoint_resumes_time() {
+        let mut a = CurveTrainable::new(&cfg(0.02), 3);
+        for _ in 0..50 {
+            a.step().unwrap();
+        }
+        let blob = a.save();
+        let mut b = CurveTrainable::new(&cfg(0.02), 3);
+        b.restore(&blob).unwrap();
+        assert_eq!(b.t, 50);
+    }
+
+    #[test]
+    fn irregular_step_costs() {
+        let a = CurveTrainable::new(&cfg(0.02), 1);
+        let b = CurveTrainable::new(&cfg(0.02), 99);
+        assert_ne!(a.step_cost(), b.step_cost());
+        assert!(a.step_cost() >= 0.5 && a.step_cost() <= 2.0);
+    }
+
+    #[test]
+    fn nonstationary_rewards_tracking() {
+        // An adaptive lr (reset every 20 steps to the optimum) must beat
+        // any static lr — the PBT premise.
+        let mut adaptive = NonStationaryTrainable::new(&cfg(0.1), 4);
+        let mut static_ = NonStationaryTrainable::new(&cfg(0.1), 4);
+        for t in 0..120 {
+            if t % 10 == 0 {
+                let opt = NonStationaryTrainable::optimal_lr_at(t, 40.0);
+                let mut c = cfg(opt);
+                c.insert("half_life".into(), ParamValue::F64(40.0));
+                adaptive.update_config(&c);
+            }
+            adaptive.step().unwrap();
+            static_.step().unwrap();
+        }
+        assert!(adaptive.score > static_.score * 1.5,
+                "adaptive={} static={}", adaptive.score, static_.score);
+    }
+
+    #[test]
+    fn update_config_changes_lr_midstream() {
+        let mut t = NonStationaryTrainable::new(&cfg(0.1), 5);
+        t.step().unwrap();
+        t.update_config(&cfg(0.001));
+        assert_eq!(t.step().unwrap().metrics["lr"], 0.001);
+    }
+}

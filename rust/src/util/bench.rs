@@ -1,0 +1,111 @@
+//! Micro-benchmark harness (criterion is not in the offline dep set).
+//!
+//! Plain-binary benches (`harness = false` in Cargo.toml) call
+//! [`bench`] / [`bench_n`]: warm up, time `iters` runs, and report
+//! min / median / mean / p95 per iteration plus derived throughput.
+//! Output is one aligned row per case so `cargo bench` output can be
+//! pasted straight into EXPERIMENTS.md.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchStats {
+    pub fn per_iter_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12}   ({} iters)",
+            self.name,
+            fmt_ns(self.min_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns),
+            self.iters,
+        );
+    }
+}
+
+pub fn header() {
+    println!(
+        "{:<44} {:>10} {:>12} {:>12} {:>12}",
+        "benchmark", "min", "median", "mean", "p95"
+    );
+    println!("{}", "-".repeat(96));
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench_n<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters,
+        min_ns: samples[0],
+        median_ns: samples[samples.len() / 2],
+        mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+        p95_ns: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+    };
+    stats.report();
+    stats
+}
+
+/// Auto-calibrated variant: picks an iteration count that gives ~1s of
+/// total measurement, bounded to [5, 200].
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchStats {
+    let t = Instant::now();
+    f();
+    let once = t.elapsed().as_nanos().max(1) as f64;
+    let iters = ((1e9 / once) as usize).clamp(5, 200);
+    bench_n(name, (iters / 10).max(1), iters, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let s = bench_n("noop", 2, 50, || { std::hint::black_box(1 + 1); });
+        assert!(s.min_ns <= s.median_ns);
+        assert!(s.median_ns <= s.p95_ns);
+        assert_eq!(s.iters, 50);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5e4).ends_with("us"));
+        assert!(fmt_ns(5e7).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+}

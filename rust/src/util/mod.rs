@@ -1,0 +1,8 @@
+//! Shared infrastructure: JSON, deterministic RNG, micro-bench harness,
+//! property-test harness, and the Table-1 LoC counter.
+
+pub mod bench;
+pub mod json;
+pub mod loc;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,68 @@
+//! Tiny property-based testing harness (proptest is not in the offline
+//! dep set).
+//!
+//! [`check`] runs a property over `cases` deterministic random cases; on
+//! the first failure it panics with the case index and the per-case seed
+//! so the exact input can be replayed with [`replay`]. Generators are
+//! plain closures over [`Rng`], which composes naturally with the
+//! library's own deterministic-seeding discipline.
+
+use super::rng::Rng;
+
+/// Run `prop` on `cases` random cases derived from `seed`.
+/// `prop` gets a per-case RNG and the case index; it should panic (e.g.
+/// via assert!) on violation.
+pub fn check<F: FnMut(&mut Rng, usize)>(name: &str, seed: u64, cases: usize, mut prop: F) {
+    for i in 0..cases {
+        let mut rng = Rng::new(seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, i);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {i} (replay with seed={seed}, case={i}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case.
+pub fn replay<F: FnMut(&mut Rng, usize)>(seed: u64, case: usize, mut prop: F) {
+    let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    prop(&mut rng, case);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("unit_interval", 1, 200, |rng, _| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails'")]
+    fn failing_property_reports_case() {
+        check("always_fails", 2, 10, |_, i| {
+            assert!(i < 3, "boom at {i}");
+        });
+    }
+
+    #[test]
+    fn replay_matches_check_stream() {
+        let mut seen = Vec::new();
+        check("record", 3, 5, |rng, _| seen.push(rng.next_u64()));
+        let mut replayed = 0;
+        replay(3, 2, |rng, _| replayed = rng.next_u64());
+        assert_eq!(replayed, seen[2]);
+    }
+}

@@ -1,0 +1,190 @@
+//! Edge cases of the coordinator: endgame with orphaned paused trials,
+//! scheduler/search compositions, zero-result metrics, degenerate specs.
+
+use tune::coordinator::schedulers::{Decision, SchedulerCtx, TrialScheduler};
+use tune::coordinator::spec::SpaceBuilder;
+use tune::coordinator::trial::{ResultRow, Trial};
+use tune::coordinator::{
+    run_experiments, ExperimentSpec, Mode, RunOptions, SchedulerKind, SearchKind, TrialRunner,
+    TrialStatus,
+};
+use tune::coordinator::executor::SimExecutor;
+use tune::coordinator::search::RandomSearch;
+use tune::ray::{Cluster, Resources};
+use tune::trainable::factory;
+use tune::trainable::synthetic::{ConstTrainable, CurveTrainable};
+
+/// A pathological scheduler that pauses everything and never resumes:
+/// the runner's endgame must still terminate, stopping orphaned trials.
+struct PauseForever;
+impl TrialScheduler for PauseForever {
+    fn name(&self) -> &'static str {
+        "pause_forever"
+    }
+    fn on_result(&mut self, _: &SchedulerCtx, _: &Trial, _: &ResultRow) -> Decision {
+        Decision::Pause
+    }
+    fn choose_trial_to_run(&mut self, ctx: &SchedulerCtx) -> Option<tune::coordinator::TrialId> {
+        ctx.first_pending() // never offers paused trials back
+    }
+}
+
+#[test]
+fn orphaned_paused_trials_do_not_hang_the_runner() {
+    let mut spec = ExperimentSpec::named("orphans");
+    spec.metric = "iters".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = 6;
+    spec.max_iterations_per_trial = 50;
+    let space = SpaceBuilder::new().uniform("x", 0.0, 1.0).build();
+    let search = Box::new(RandomSearch::new(space, 6));
+    let executor = Box::new(SimExecutor::new(factory(|c, s| {
+        Box::new(ConstTrainable::new(c, s))
+    })));
+    let mut runner = TrialRunner::new(
+        spec,
+        Box::new(PauseForever),
+        search,
+        executor,
+        Cluster::uniform(1, Resources::cpu(8.0)),
+    );
+    let res = runner.run(); // must return, not loop forever
+    assert_eq!(res.trials.len(), 6);
+    for t in res.trials.values() {
+        assert_eq!(t.status, TrialStatus::Stopped);
+        assert_eq!(t.iteration, 1); // paused after the first result
+    }
+    assert!(res.stats.checkpoints >= 6); // pause implies snapshot
+}
+
+/// HyperBand under a tight max_concurrent: rung barriers must still
+/// complete even though cohort members run in small waves.
+#[test]
+fn hyperband_with_limited_concurrency_terminates() {
+    let mut spec = ExperimentSpec::named("hb-tight");
+    spec.metric = "accuracy".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = 20;
+    spec.max_iterations_per_trial = 27;
+    spec.max_concurrent = 2;
+    let space = SpaceBuilder::new().loguniform("lr", 1e-4, 1.0).build();
+    let res = run_experiments(
+        spec,
+        space,
+        SchedulerKind::HyperBand { max_t: 27, eta: 3.0 },
+        SearchKind::Random,
+        factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+        RunOptions {
+            cluster: Cluster::uniform(1, Resources::cpu(16.0)),
+            ..Default::default()
+        },
+    );
+    assert_eq!(res.trials.len(), 20);
+    for t in res.trials.values() {
+        assert!(t.status.is_terminal());
+    }
+    assert!(res.stats.stopped_early > 0);
+}
+
+/// TPE composes with ASHA over a mixed continuous/categorical space
+/// through the full runner.
+#[test]
+fn tpe_with_asha_on_mixed_space() {
+    let mut spec = ExperimentSpec::named("tpe-asha");
+    spec.metric = "accuracy".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = 40;
+    spec.max_iterations_per_trial = 27;
+    let space = SpaceBuilder::new()
+        .loguniform("lr", 1e-4, 1.0)
+        .uniform("momentum", 0.8, 0.99)
+        .choice_str("opt", &["sgd", "adam"])
+        .randint("layers", 1, 4)
+        .build();
+    let res = run_experiments(
+        spec,
+        space.clone(),
+        SchedulerKind::Asha { grace_period: 1, reduction_factor: 3.0, max_t: 27 },
+        SearchKind::Tpe,
+        factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+        RunOptions::default(),
+    );
+    assert_eq!(res.trials.len(), 40);
+    // Every config TPE emitted stays in the declared support.
+    for t in res.trials.values() {
+        for (k, d) in &space {
+            assert!(d.contains(&t.config[k]), "{k}: {:?}", t.config[k]);
+        }
+    }
+    assert!(res.best_metric().unwrap() > 0.8);
+}
+
+/// Trainables that report a metric the experiment doesn't track: the
+/// scheduler sees no value and must keep the trial running to its
+/// stopping criterion (never crash, never stop on missing data).
+#[test]
+fn missing_metric_defaults_to_continue() {
+    let mut spec = ExperimentSpec::named("missing-metric");
+    spec.metric = "no_such_metric".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = 4;
+    spec.max_iterations_per_trial = 10;
+    let space = SpaceBuilder::new().uniform("x", 0.0, 1.0).build();
+    let res = run_experiments(
+        spec,
+        space,
+        SchedulerKind::Asha { grace_period: 1, reduction_factor: 2.0, max_t: 10 },
+        SearchKind::Random,
+        factory(|c, s| Box::new(ConstTrainable::new(c, s))),
+        RunOptions::default(),
+    );
+    assert_eq!(res.count(TrialStatus::Completed), 4);
+    assert!(res.best.is_none()); // no metric ever observed
+}
+
+/// num_samples = 0 and empty spaces degrade gracefully.
+#[test]
+fn degenerate_specs_run_cleanly() {
+    let mut spec = ExperimentSpec::named("empty");
+    spec.metric = "iters".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = 0;
+    spec.max_iterations_per_trial = 5;
+    let res = run_experiments(
+        spec,
+        SpaceBuilder::new().build(),
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        factory(|c, s| Box::new(ConstTrainable::new(c, s))),
+        RunOptions::default(),
+    );
+    assert_eq!(res.trials.len(), 0);
+    assert_eq!(res.stats.results, 0);
+}
+
+/// A metric target in Min mode stops trials the moment they cross it.
+#[test]
+fn metric_target_min_mode() {
+    let mut spec = ExperimentSpec::named("target");
+    spec.metric = "loss".into();
+    spec.mode = Mode::Min;
+    spec.num_samples = 8;
+    spec.max_iterations_per_trial = 10_000;
+    spec.metric_target = Some(0.3);
+    let space = SpaceBuilder::new().loguniform("lr", 0.01, 0.05).build();
+    let res = run_experiments(
+        spec,
+        space,
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+        RunOptions::default(),
+    );
+    // Good lr region: every trial reaches loss <= 0.3 well before 10k.
+    assert_eq!(res.count(TrialStatus::Completed), 8);
+    assert!(res.total_iterations() < 8 * 10_000);
+    for t in res.trials.values() {
+        let last = t.last_result.as_ref().unwrap().metric("loss").unwrap();
+        assert!(last <= 0.31, "trial {} stopped at loss {last}", t.id);
+    }
+}

@@ -1,0 +1,212 @@
+//! End-to-end scheduler behaviour over the full runner + sim executor +
+//! ray substrate — the C1/C2 claims of DESIGN.md as assertions.
+
+use tune::coordinator::spec::SpaceBuilder;
+use tune::coordinator::{
+    run_experiments, ExperimentSpec, Mode, RunOptions, SchedulerKind, SearchKind, TrialStatus,
+};
+use tune::ray::{Cluster, Resources};
+use tune::trainable::factory;
+use tune::trainable::synthetic::{CurveTrainable, NonStationaryTrainable};
+
+fn curve_spec(name: &str, samples: usize, iters: u64, seed: u64) -> ExperimentSpec {
+    let mut spec = ExperimentSpec::named(name);
+    spec.metric = "accuracy".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = samples;
+    spec.max_iterations_per_trial = iters;
+    spec.seed = seed;
+    spec
+}
+
+fn curve_space() -> tune::coordinator::spec::SearchSpace {
+    SpaceBuilder::new()
+        .loguniform("lr", 1e-4, 1.0)
+        .uniform("momentum", 0.8, 0.99)
+        .build()
+}
+
+fn run_sched(kind: SchedulerKind, samples: usize, iters: u64, seed: u64) -> tune::coordinator::ExperimentResult {
+    run_experiments(
+        curve_spec(kind.label(), samples, iters, seed),
+        curve_space(),
+        kind,
+        SearchKind::Random,
+        factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+        RunOptions {
+            cluster: Cluster::uniform(4, Resources::cpu(8.0)),
+            ..Default::default()
+        },
+    )
+}
+
+/// C1: at matched trial count, early-stopping schedulers must reach
+/// within 5% of FIFO's best accuracy using far less training budget
+/// (HyperBand trades a little terminal quality for the largest budget
+/// saving, as in the original paper).
+#[test]
+fn early_stoppers_save_budget_without_losing_quality() {
+    let fifo = run_sched(SchedulerKind::Fifo, 64, 81, 7);
+    for kind in [
+        SchedulerKind::Asha { grace_period: 1, reduction_factor: 3.0, max_t: 81 },
+        SchedulerKind::HyperBand { max_t: 81, eta: 3.0 },
+        SchedulerKind::MedianStopping { grace_period: 8, min_samples: 3 },
+    ] {
+        let label = kind.label();
+        let res = run_sched(kind, 64, 81, 7);
+        let quality_gap = fifo.best_metric().unwrap() - res.best_metric().unwrap();
+        assert!(quality_gap < 0.05, "{label}: gap {quality_gap}");
+        assert!(
+            res.budget_used_s < fifo.budget_used_s * 0.65,
+            "{label}: budget {} vs fifo {}",
+            res.budget_used_s,
+            fifo.budget_used_s
+        );
+        assert!(res.stats.stopped_early > 0, "{label} never stopped a trial");
+    }
+}
+
+/// ASHA should stop the majority of bad trials at low rungs.
+#[test]
+fn asha_kills_bad_trials_early() {
+    let res = run_sched(
+        SchedulerKind::Asha { grace_period: 1, reduction_factor: 3.0, max_t: 81 },
+        96,
+        81,
+        3,
+    );
+    let stopped = res.count(TrialStatus::Stopped);
+    assert!(stopped > 48, "only {stopped} stopped");
+    // Stopped trials should on average have consumed far less than max_t.
+    let mean_iter: f64 = res
+        .trials
+        .values()
+        .filter(|t| t.status == TrialStatus::Stopped)
+        .map(|t| t.iteration as f64)
+        .sum::<f64>()
+        / stopped as f64;
+    assert!(mean_iter < 20.0, "mean stopped iteration {mean_iter}");
+}
+
+/// HyperBand's pause/resume machinery: paused trials must resume (the
+/// checkpoint+restore path) and the experiment must terminate cleanly.
+#[test]
+fn hyperband_pauses_and_resumes_via_checkpoints() {
+    let res = run_sched(SchedulerKind::HyperBand { max_t: 27, eta: 3.0 }, 40, 27, 1);
+    assert!(res.stats.checkpoints > 0);
+    assert!(res.stats.restores > 0, "no paused trial ever resumed");
+    // No trial left non-terminal.
+    for t in res.trials.values() {
+        assert!(t.status.is_terminal(), "trial {} in {:?}", t.id, t.status);
+    }
+    // Some trials must have trained past the first rung.
+    assert!(res.trials.values().any(|t| t.iteration >= 9));
+}
+
+/// C2: on the non-stationary objective PBT must beat random search at
+/// the same budget, and must actually exploit/mutate.
+#[test]
+fn pbt_beats_static_configs_on_nonstationary_objective() {
+    let space = SpaceBuilder::new().loguniform("lr", 1e-4, 0.5).build();
+    let mut spec = ExperimentSpec::named("pbt");
+    spec.metric = "score".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = 16;
+    spec.max_iterations_per_trial = 120;
+    spec.seed = 5;
+    let run = |kind: SchedulerKind| {
+        run_experiments(
+            spec.clone(),
+            space.clone(),
+            kind,
+            SearchKind::Random,
+            factory(|c, s| Box::new(NonStationaryTrainable::new(c, s))),
+            RunOptions {
+                cluster: Cluster::uniform(2, Resources::cpu(8.0)),
+                ..Default::default()
+            },
+        )
+    };
+    let pbt = run(SchedulerKind::Pbt { perturbation_interval: 10, space: space.clone() });
+    let random = run(SchedulerKind::Fifo);
+    assert!(pbt.stats.exploits > 0, "PBT never exploited");
+    let pbt_best = pbt.best_metric().unwrap();
+    let rnd_best = random.best_metric().unwrap();
+    assert!(
+        pbt_best > rnd_best * 1.15,
+        "pbt {pbt_best} vs random {rnd_best}"
+    );
+    // Mutation lineage is recorded.
+    assert!(pbt.trials.values().any(|t| t.mutations > 0));
+}
+
+/// TPE should find a better config than random search on a smooth
+/// objective at equal trial count.
+#[test]
+fn tpe_beats_random_on_smooth_objective() {
+    let mk = |search: SearchKind, seed: u64| {
+        run_experiments(
+            curve_spec("tpe-vs-random", 60, 30, seed),
+            curve_space(),
+            SchedulerKind::Fifo,
+            search,
+            factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+            RunOptions {
+                cluster: Cluster::uniform(1, Resources::cpu(4.0)),
+                ..Default::default()
+            },
+        )
+    };
+    // Compare mean final asymptote quality proxy: mean best over trials.
+    let mean_best = |r: &tune::coordinator::ExperimentResult| {
+        let v: Vec<f64> = r.trials.values().filter_map(|t| t.best_metric).collect();
+        v.iter().sum::<f64>() / v.len() as f64
+    };
+    let mut tpe_wins = 0;
+    for seed in [1, 2, 3] {
+        let tpe = mk(SearchKind::Tpe, seed);
+        let rnd = mk(SearchKind::Random, seed);
+        if mean_best(&tpe) > mean_best(&rnd) {
+            tpe_wins += 1;
+        }
+    }
+    assert!(tpe_wins >= 2, "TPE won only {tpe_wins}/3 seeds");
+}
+
+/// Determinism: the same seed must produce the identical experiment.
+#[test]
+fn experiments_replay_bit_identically() {
+    let a = run_sched(SchedulerKind::Asha { grace_period: 1, reduction_factor: 3.0, max_t: 27 }, 24, 27, 11);
+    let b = run_sched(SchedulerKind::Asha { grace_period: 1, reduction_factor: 3.0, max_t: 27 }, 24, 27, 11);
+    assert_eq!(a.trials.len(), b.trials.len());
+    assert_eq!(a.best, b.best);
+    assert_eq!(a.best_metric(), b.best_metric());
+    assert_eq!(a.stats.results, b.stats.results);
+    assert!((a.duration_s - b.duration_s).abs() < 1e-9);
+    for (x, y) in a.trials.values().zip(b.trials.values()) {
+        assert_eq!(x.iteration, y.iteration);
+        assert_eq!(x.status, y.status);
+    }
+}
+
+/// Grid search + §4.3's quickstart space: exactly 6 trials, all complete.
+#[test]
+fn quickstart_grid_runs_six_trials() {
+    let mut spec = curve_spec("quickstart", 1, 20, 0);
+    spec.checkpoint_at_end = true;
+    let space = SpaceBuilder::new()
+        .grid_f64("lr", &[0.01, 0.001, 0.0001])
+        .grid_str("activation", &["relu", "tanh"])
+        .build();
+    let res = run_experiments(
+        spec,
+        space,
+        SchedulerKind::Fifo,
+        SearchKind::Grid,
+        factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+        RunOptions::default(),
+    );
+    assert_eq!(res.trials.len(), 6);
+    assert_eq!(res.count(TrialStatus::Completed), 6);
+    assert!(res.stats.checkpoints >= 6); // final checkpoints
+}

@@ -1,0 +1,198 @@
+//! Integration over the Ray-like substrate: placement under load,
+//! object-store broadcast, fault injection + checkpoint recovery (C3/C4),
+//! and the cooperative function API driven by real schedulers.
+
+use std::sync::Arc;
+
+use tune::coordinator::spec::SpaceBuilder;
+use tune::coordinator::{
+    run_experiments, ExecMode, ExperimentSpec, Mode, ParamValue, RunOptions, SchedulerKind,
+    SearchKind, TrialStatus,
+};
+use tune::ray::{Cluster, FaultPlan, ObjectStore, Resources};
+use tune::trainable::factory;
+use tune::trainable::function::{FunctionTrainable, TuneHandle};
+use tune::trainable::synthetic::ConstTrainable;
+
+/// C3: trial throughput scales with cluster size (512 short trials).
+#[test]
+fn throughput_scales_with_nodes() {
+    let run = |nodes: usize| {
+        let mut spec = ExperimentSpec::named("scaling");
+        spec.metric = "iters".into();
+        spec.mode = Mode::Max;
+        spec.num_samples = 256;
+        spec.max_iterations_per_trial = 4;
+        let space = SpaceBuilder::new().constant("step_cost", ParamValue::F64(1.0)).build();
+        run_experiments(
+            spec,
+            space,
+            SchedulerKind::Fifo,
+            SearchKind::Random,
+            factory(|c, s| Box::new(ConstTrainable::new(c, s))),
+            RunOptions {
+                cluster: Cluster::uniform(nodes, Resources::cpu(4.0)),
+                ..Default::default()
+            },
+        )
+    };
+    let one = run(1);
+    let eight = run(8);
+    // Virtual duration shrinks near-linearly with node count.
+    let speedup = one.duration_s / eight.duration_s;
+    assert!(speedup > 6.0, "speedup {speedup}");
+    // Two-level placement: with one node everything is local; with 8
+    // nodes the head node saturates and work spills.
+    assert_eq!(one.placement.spilled, 0);
+    assert!(eight.placement.spilled > 0);
+}
+
+/// C4: heavy step-failure injection with checkpointing — every trial
+/// still completes, recovering from its latest checkpoint.
+#[test]
+fn failure_storm_recovers_via_checkpoints() {
+    let mut spec = ExperimentSpec::named("faults");
+    spec.metric = "iters".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = 24;
+    spec.max_iterations_per_trial = 40;
+    spec.checkpoint_freq = 4;
+    spec.max_failures = 100;
+    spec.fault_plan = FaultPlan::flaky_steps(0.05);
+    let space = SpaceBuilder::new().constant("step_cost", ParamValue::F64(1.0)).build();
+    let res = run_experiments(
+        spec,
+        space,
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        factory(|c, s| Box::new(ConstTrainable::new(c, s))),
+        RunOptions {
+            cluster: Cluster::uniform(2, Resources::cpu(8.0)),
+            ..Default::default()
+        },
+    );
+    assert_eq!(res.count(TrialStatus::Completed), 24, "{:?}", res.stats);
+    assert!(res.stats.failures_recovered > 10);
+    assert!(res.stats.restores > 0);
+}
+
+/// Zero tolerance: max_failures = 0 must error trials out instead.
+#[test]
+fn max_failures_zero_errors_out() {
+    let mut spec = ExperimentSpec::named("fragile");
+    spec.metric = "iters".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = 16;
+    spec.max_iterations_per_trial = 50;
+    spec.max_failures = 0;
+    spec.fault_plan = FaultPlan::flaky_steps(0.05);
+    let space = SpaceBuilder::new().constant("step_cost", ParamValue::F64(1.0)).build();
+    let res = run_experiments(
+        spec,
+        space,
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        factory(|c, s| Box::new(ConstTrainable::new(c, s))),
+        RunOptions::default(),
+    );
+    assert!(res.stats.errored > 0);
+    assert_eq!(res.stats.failures_recovered, 0);
+}
+
+/// §4.3.2: weight broadcast through the object store — one transfer per
+/// remote node, local hits afterwards.
+#[test]
+fn object_store_broadcast_pattern() {
+    let mut store = ObjectStore::new();
+    let weights = vec![0u8; 1 << 20]; // 1 MiB of "weights"
+    let id = store.put(0, weights);
+    // 16 trials spread over 4 nodes fetch at init.
+    for trial in 0..16u32 {
+        let node = trial % 4;
+        let got = store.get(node, id).unwrap();
+        assert_eq!(got.len(), 1 << 20);
+    }
+    assert_eq!(store.transfers, 3); // nodes 1..3; node 0 was local
+    assert_eq!(store.transfer_bytes, 3 << 20);
+    assert_eq!(store.local_hits, 13);
+}
+
+/// The cooperative function API (Figure 2(a)) composed with ASHA over
+/// the threaded executor: reports flow, bad trials stop early.
+#[test]
+fn function_api_under_asha_threads() {
+    let train = Arc::new(|tune: TuneHandle| {
+        // Converges to `quality`, fast; reports every iteration.
+        let quality = tune.param_f64("quality", 0.5);
+        let mut acc = 0.0;
+        for i in (tune.start_iteration() + 1)..=100 {
+            acc += (quality - acc) * 0.3;
+            if tune.should_checkpoint() {
+                tune.record_checkpoint(acc.to_le_bytes().to_vec());
+            }
+            if !tune.report(i, &[("accuracy", acc)]) {
+                return;
+            }
+        }
+    });
+    let mut spec = ExperimentSpec::named("fn-asha");
+    spec.metric = "accuracy".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = 12;
+    spec.max_iterations_per_trial = 30;
+    spec.max_concurrent = 4;
+    let space = SpaceBuilder::new().uniform("quality", 0.1, 0.9).build();
+    let res = run_experiments(
+        spec,
+        space,
+        SchedulerKind::Asha { grace_period: 2, reduction_factor: 2.0, max_t: 30 },
+        SearchKind::Random,
+        factory(move |c, s| {
+            Box::new(FunctionTrainable::spawn(c.clone(), s, train.clone()))
+        }),
+        RunOptions {
+            cluster: Cluster::uniform(1, Resources::cpu(4.0)),
+            exec: ExecMode::Threads,
+            ..Default::default()
+        },
+    );
+    assert_eq!(res.trials.len(), 12);
+    assert!(res.count(TrialStatus::Stopped) > 0, "ASHA stopped nothing");
+    assert!(res.best_metric().unwrap() > 0.6);
+    for t in res.trials.values() {
+        assert!(t.status.is_terminal());
+    }
+}
+
+/// Resource accounting stays exact across a whole noisy experiment.
+#[test]
+fn cluster_invariants_hold_under_churn() {
+    // Churn: failures + node failures + pauses (hyperband).
+    let mut spec = ExperimentSpec::named("churn");
+    spec.metric = "accuracy".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = 32;
+    spec.max_iterations_per_trial = 27;
+    spec.checkpoint_freq = 3;
+    spec.max_failures = 50;
+    spec.fault_plan = FaultPlan { step_failure_prob: 0.01, node_failure_prob: 0.002, ..Default::default() };
+    let space = SpaceBuilder::new().loguniform("lr", 1e-4, 1.0).build();
+    let res = run_experiments(
+        spec,
+        space,
+        SchedulerKind::HyperBand { max_t: 27, eta: 3.0 },
+        SearchKind::Random,
+        factory(|c, s| Box::new(tune::trainable::synthetic::CurveTrainable::new(c, s))),
+        RunOptions {
+            cluster: Cluster::uniform(4, Resources::cpu(4.0)),
+            ..Default::default()
+        },
+    );
+    // All trials terminal, none stuck; accounting verified inside the
+    // cluster (check_invariants is exercised by the runner's release
+    // paths — a leak would deadlock admission and fail the run).
+    for t in res.trials.values() {
+        assert!(t.status.is_terminal(), "trial {} stuck in {:?}", t.id, t.status);
+    }
+    assert!(res.stats.results > 0);
+}

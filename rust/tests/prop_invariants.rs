@@ -1,0 +1,229 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! state), using the library's deterministic property harness.
+
+use tune::coordinator::schedulers::{
+    AshaScheduler, Decision, MedianStoppingRule, PbtScheduler, SchedulerCtx, TrialScheduler,
+};
+use tune::coordinator::spec::{expand_grid, grid_size, sample_config, ParamDist, SpaceBuilder};
+use tune::coordinator::trial::{Config, Mode, ParamValue, ResultRow, Trial, TrialStatus};
+use tune::ray::{Cluster, Resources, TwoLevelScheduler};
+use tune::util::prop::check;
+use tune::util::rng::Rng;
+
+fn random_space(rng: &mut Rng) -> tune::coordinator::spec::SearchSpace {
+    let mut b = SpaceBuilder::new();
+    let n = rng.range(1, 5);
+    for i in 0..n {
+        b = match rng.index(4) {
+            0 => b.uniform(&format!("u{i}"), 0.0, rng.uniform(0.5, 10.0)),
+            1 => b.loguniform(&format!("l{i}"), 1e-5, 1.0),
+            2 => b.randint(&format!("r{i}"), 0, rng.range(1, 20)),
+            _ => b.grid_f64(&format!("g{i}"), &[0.1, 0.2, 0.3][..rng.index(3) + 1]),
+        };
+    }
+    b.build()
+}
+
+#[test]
+fn prop_samples_always_in_support() {
+    check("samples_in_support", 0xA11CE, 200, |rng, _| {
+        let space = random_space(rng);
+        let cfg = sample_config(&space, rng);
+        for (k, d) in &space {
+            assert!(d.contains(&cfg[k]), "{k}: {:?} not in {:?}", cfg[k], d);
+        }
+    });
+}
+
+#[test]
+fn prop_grid_expansion_size_is_product() {
+    check("grid_size", 0xB0B, 200, |rng, _| {
+        let space = random_space(rng);
+        let configs = expand_grid(&space, rng);
+        assert_eq!(configs.len(), grid_size(&space));
+        // All configs complete and distinct on grid dims.
+        for c in &configs {
+            assert_eq!(c.len(), space.len());
+        }
+    });
+}
+
+/// Placement never over-commits a node and accounting stays exact under
+/// random lease/release/kill churn.
+#[test]
+fn prop_cluster_accounting_under_churn() {
+    check("cluster_accounting", 0xC1u64, 120, |rng, _| {
+        let n_nodes = rng.index(6) + 1;
+        let mut cluster = Cluster::uniform(n_nodes, Resources::cpu_gpu(8.0, 2.0));
+        let mut placer = TwoLevelScheduler::new();
+        let mut live: Vec<(u32, u64)> = Vec::new();
+        for _ in 0..200 {
+            match rng.index(10) {
+                0..=5 => {
+                    let demand = Resources::cpu_gpu(
+                        rng.uniform(0.5, 3.0),
+                        if rng.bool(0.3) { rng.uniform(0.0, 1.0) } else { 0.0 },
+                    );
+                    let origin = rng.index(n_nodes) as u32;
+                    if let Some(p) = placer.place(&mut cluster, origin, &demand) {
+                        live.push((p.node, p.lease));
+                    }
+                }
+                6..=8 => {
+                    if !live.is_empty() {
+                        let (node, lease) = live.swap_remove(rng.index(live.len()));
+                        cluster.release(node, lease);
+                    }
+                }
+                _ => {
+                    let victim = rng.index(n_nodes) as u32;
+                    let dead = cluster.kill_node(victim);
+                    live.retain(|(n, l)| *n != victim || !dead.contains(l));
+                    cluster.restart_node(victim);
+                }
+            }
+            assert!(cluster.check_invariants(), "accounting broke");
+        }
+    });
+}
+
+/// ASHA decisions use only the rung contents at arrival time. Two
+/// order-sensitive invariants: (a) strictly descending arrivals promote
+/// exactly the first trial; (b) random arrival order promotes at most
+/// n/eta + O(log n) trials (the harmonic excess of running-top-1/eta).
+#[test]
+fn prop_asha_promotion_rate_bounded() {
+    check("asha_promotions", 0xA5A, 60, |rng, case| {
+        let eta = [2.0, 3.0, 4.0][rng.index(3)];
+        let mut s = AshaScheduler::new(1, eta, 1000);
+        let mut trials = std::collections::BTreeMap::new();
+        let n = rng.index(40) + 5;
+        let descending = case % 2 == 0;
+        let mut values: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        if descending {
+            values.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            values.dedup();
+        }
+        let mut promoted = 0;
+        let m = values.len();
+        for (i, v) in values.into_iter().enumerate() {
+            let id = i as u64;
+            let mut t = Trial::new(id, Config::new(), Resources::cpu(1.0), id);
+            let row = ResultRow::new(1, 1.0).with("m", v);
+            t.status = TrialStatus::Running;
+            t.record(row.clone(), "m", Mode::Max);
+            trials.insert(id, t.clone());
+            let ctx = SchedulerCtx { trials: &trials, metric: "m", mode: Mode::Max };
+            match s.on_result(&ctx, &t, &row) {
+                Decision::Stop => {}
+                _ => promoted += 1,
+            }
+        }
+        if descending {
+            assert_eq!(promoted, 1, "descending arrivals must promote only the first");
+        } else {
+            let bound = m as f64 / eta + 3.0 * (m as f64).ln() + 3.0;
+            assert!(
+                (promoted as f64) <= bound,
+                "promoted {promoted} of {m} at eta {eta} (bound {bound:.1})"
+            );
+        }
+    });
+}
+
+/// Median stopping never stops the best trial.
+#[test]
+fn prop_median_never_stops_best() {
+    check("median_best_survives", 0x3E0, 60, |rng, _| {
+        let mut s = MedianStoppingRule::new(1, 2);
+        let n = rng.index(8) + 3;
+        let qualities: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let best = qualities
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0 as u64;
+        let mut trials = std::collections::BTreeMap::new();
+        for id in 0..n as u64 {
+            let t = Trial::new(id, Config::new(), Resources::cpu(1.0), id);
+            trials.insert(id, t);
+        }
+        for iter in 1..=10u64 {
+            for id in 0..n as u64 {
+                let v = qualities[id as usize] + rng.normal_scaled(0.0, 0.001);
+                let row = ResultRow::new(iter, iter as f64).with("acc", v);
+                {
+                    let t = trials.get_mut(&id).unwrap();
+                    if t.status != TrialStatus::Running {
+                        continue;
+                    }
+                    t.record(row.clone(), "acc", Mode::Max);
+                    t.status = TrialStatus::Running;
+                }
+                let t = trials[&id].clone();
+                let ctx = SchedulerCtx { trials: &trials, metric: "acc", mode: Mode::Max };
+                let d = s.on_result(&ctx, &t, &row);
+                if let Decision::Stop = d {
+                    assert_ne!(id, best, "stopped the best trial (quality {})", qualities[id as usize]);
+                    trials.get_mut(&id).unwrap().status = TrialStatus::Stopped;
+                }
+            }
+        }
+    });
+}
+
+/// PBT exploit sources are always top-quantile members and mutated
+/// configs stay inside the search space.
+#[test]
+fn prop_pbt_exploit_sources_are_top() {
+    check("pbt_sources", 0x9B7, 40, |rng, case| {
+        let space = SpaceBuilder::new().loguniform("lr", 1e-5, 1.0).build();
+        let mut s = PbtScheduler::new(1, space.clone(), case as u64);
+        let n = rng.index(12) + 6;
+        let mut trials = std::collections::BTreeMap::new();
+        let scores: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        for id in 0..n as u64 {
+            let mut c = Config::new();
+            c.insert("lr".into(), ParamValue::F64(rng.log_uniform(1e-5, 1.0)));
+            let mut t = Trial::new(id, c, Resources::cpu(1.0), id);
+            t.status = TrialStatus::Running;
+            trials.insert(id, t);
+        }
+        // One full round of reports at iteration 1.
+        for id in 0..n as u64 {
+            let row = ResultRow::new(1, 1.0).with("score", scores[id as usize]);
+            trials.get_mut(&id).unwrap().record(row.clone(), "score", Mode::Max);
+            let t = trials[&id].clone();
+            let ctx = SchedulerCtx { trials: &trials, metric: "score", mode: Mode::Max };
+            if let Decision::Exploit { source, config } = s.on_result(&ctx, &t, &row) {
+                // Source strictly better than self.
+                assert!(
+                    scores[source as usize] > scores[id as usize],
+                    "exploited a worse trial"
+                );
+                let lr = config["lr"].as_f64().unwrap();
+                assert!((1e-5..=1.0).contains(&lr));
+            }
+        }
+    });
+}
+
+/// Checkpoint store GC keeps the newest blobs and latest_for is stable.
+#[test]
+fn prop_checkpoint_gc_keeps_latest() {
+    check("ckpt_gc", 0xCC, 100, |rng, _| {
+        let mut store = tune::checkpoint::CheckpointStore::new();
+        let trials = rng.index(4) + 1;
+        let mut latest = std::collections::BTreeMap::new();
+        for i in 0..rng.index(30) + 5 {
+            let trial = rng.index(trials) as u64;
+            let id = store.save(trial, i as u64, vec![i as u8]);
+            latest.insert(trial, (id, i as u8));
+        }
+        for (trial, (id, byte)) in latest {
+            assert_eq!(store.latest_for(trial), Some(id));
+            assert_eq!(store.get(id).unwrap(), &[byte]);
+        }
+    });
+}
