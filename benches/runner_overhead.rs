@@ -8,7 +8,8 @@
 
 use tune::coordinator::spec::SpaceBuilder;
 use tune::coordinator::{
-    run_experiments, ExperimentSpec, Mode, ParamValue, RunOptions, SchedulerKind, SearchKind,
+    run_experiments, ExecMode, ExperimentSpec, Mode, ParamValue, RunOptions, SchedulerKind,
+    SearchKind,
 };
 use tune::ray::{Cluster, Resources};
 use tune::trainable::factory;
@@ -41,8 +42,45 @@ fn throughput(kind: SchedulerKind, samples: usize, iters: u64, checkpoint_freq: 
     res.stats.results as f64 / t0.elapsed().as_secs_f64()
 }
 
+/// Results/sec of a FIFO experiment with near-zero-cost trainables on a
+/// given executor — isolates the substrate's dispatch overhead.
+fn executor_throughput(exec: ExecMode, samples: usize, iters: u64) -> f64 {
+    let space = SpaceBuilder::new().constant("step_cost", ParamValue::F64(1.0)).build();
+    let mut spec = ExperimentSpec::named("exec-overhead");
+    spec.metric = "iters".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = samples;
+    spec.max_iterations_per_trial = iters;
+    let t0 = std::time::Instant::now();
+    let res = run_experiments(
+        spec,
+        space,
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        factory(|c, s| Box::new(ConstTrainable::new(c, s))),
+        RunOptions {
+            cluster: Cluster::uniform(4, Resources::cpu(64.0)),
+            exec,
+            ..Default::default()
+        },
+    );
+    res.stats.results as f64 / t0.elapsed().as_secs_f64()
+}
+
 fn main() {
-    println!("== runner throughput: intermediate results/sec through the full loop ==");
+    println!("== executor dispatch overhead: 128 trials x 25 iters, fifo, results/sec ==");
+    println!("{:<34} {:>16}", "executor", "results/sec");
+    for (name, exec) in [
+        ("sim (virtual clock)", ExecMode::Sim),
+        ("threads (1 thread/trial)", ExecMode::Threads),
+        ("pool (4 workers)", ExecMode::Pool { workers: 4 }),
+        ("pool (16 workers)", ExecMode::Pool { workers: 16 }),
+    ] {
+        let rps = executor_throughput(exec, 128, 25);
+        println!("{name:<34} {rps:>16.0}");
+    }
+
+    println!("\n== runner throughput: intermediate results/sec through the full loop ==");
     println!("{:<34} {:>16}", "configuration", "results/sec");
     for (name, kind) in [
         ("fifo", SchedulerKind::Fifo),

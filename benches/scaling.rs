@@ -10,7 +10,8 @@
 
 use tune::coordinator::spec::SpaceBuilder;
 use tune::coordinator::{
-    run_experiments, ExperimentSpec, Mode, ParamValue, RunOptions, SchedulerKind, SearchKind,
+    run_experiments, ExecMode, ExperimentSpec, Mode, ParamValue, RunOptions, SchedulerKind,
+    SearchKind,
 };
 use tune::ray::{Cluster, Resources, TwoLevelScheduler};
 use tune::trainable::factory;
@@ -57,6 +58,45 @@ fn main() {
             wall,
             spilled
         );
+    }
+
+    println!("\n== C3(c): wall-clock executors, 256 live trials (M >> N pool) ==");
+    println!("{:>26} {:>12} {:>16}", "executor", "wall(s)", "results/sec");
+    let wall_run = |exec: ExecMode| -> (f64, f64) {
+        let mut spec = ExperimentSpec::named("pool-scaling");
+        spec.metric = "iters".into();
+        spec.mode = Mode::Max;
+        spec.num_samples = 256;
+        spec.max_iterations_per_trial = 8;
+        let space = SpaceBuilder::new().constant("step_cost", ParamValue::F64(1.0)).build();
+        let t0 = std::time::Instant::now();
+        let res = run_experiments(
+            spec,
+            space,
+            SchedulerKind::Fifo,
+            SearchKind::Random,
+            factory(|c, s| Box::new(ConstTrainable::new(c, s))),
+            RunOptions {
+                // Enough capacity that all 256 trials are live at once:
+                // the executor, not the cluster, is the bottleneck.
+                cluster: Cluster::uniform(8, Resources::cpu(32.0)),
+                exec,
+                ..Default::default()
+            },
+        );
+        let wall = t0.elapsed().as_secs_f64();
+        (wall, res.stats.results as f64 / wall)
+    };
+    for (name, exec) in [
+        ("threads (256 threads)", ExecMode::Threads),
+        ("pool (1 worker)", ExecMode::Pool { workers: 1 }),
+        ("pool (2 workers)", ExecMode::Pool { workers: 2 }),
+        ("pool (4 workers)", ExecMode::Pool { workers: 4 }),
+        ("pool (8 workers)", ExecMode::Pool { workers: 8 }),
+        ("pool (16 workers)", ExecMode::Pool { workers: 16 }),
+    ] {
+        let (wall, rps) = wall_run(exec);
+        println!("{name:>26} {wall:>12.3} {rps:>16.0}");
     }
 
     println!("\n== C3(b): placement decision latency, two-level vs centralized ==");

@@ -8,16 +8,23 @@
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
+/// Handle to one stored checkpoint.
 pub type CheckpointId = u64;
 
+/// Bookkeeping for one checkpoint.
 #[derive(Clone, Debug)]
 pub struct CheckpointMeta {
+    /// The checkpoint's id.
     pub id: CheckpointId,
+    /// Trial that produced it.
     pub trial: u64,
+    /// Training iteration at snapshot time.
     pub iteration: u64,
+    /// Blob size in bytes.
     pub bytes: usize,
 }
 
+/// In-memory checkpoint store with per-trial GC and optional disk spill.
 #[derive(Debug, Default)]
 pub struct CheckpointStore {
     next_id: CheckpointId,
@@ -28,11 +35,14 @@ pub struct CheckpointStore {
     disk_dir: Option<PathBuf>,
     /// Keep at most this many checkpoints per trial (0 = unbounded).
     pub keep_per_trial: usize,
+    /// Checkpoints written so far.
     pub saved: u64,
+    /// Successful reads so far.
     pub restored: u64,
 }
 
 impl CheckpointStore {
+    /// A store keeping the 2 newest checkpoints per trial.
     pub fn new() -> Self {
         CheckpointStore { next_id: 1, keep_per_trial: 2, ..Default::default() }
     }
@@ -44,6 +54,7 @@ impl CheckpointStore {
         self
     }
 
+    /// Store a blob for `trial` at `iteration`; returns its id.
     pub fn save(&mut self, trial: u64, iteration: u64, blob: Vec<u8>) -> CheckpointId {
         let id = self.next_id;
         self.next_id += 1;
@@ -59,6 +70,7 @@ impl CheckpointStore {
         id
     }
 
+    /// Read a checkpoint blob back (counts as a restore).
     pub fn get(&mut self, id: CheckpointId) -> Option<&[u8]> {
         let found = self.data.get(&id).map(|v| v.as_slice());
         if found.is_some() {
@@ -67,10 +79,12 @@ impl CheckpointStore {
         found
     }
 
+    /// Metadata of a stored checkpoint.
     pub fn meta(&self, id: CheckpointId) -> Option<&CheckpointMeta> {
         self.meta.get(&id)
     }
 
+    /// Newest checkpoint id for a trial, if any.
     pub fn latest_for(&self, trial: u64) -> Option<CheckpointId> {
         self.latest.get(&trial).copied()
     }
@@ -94,12 +108,15 @@ impl CheckpointStore {
         }
     }
 
+    /// Number of checkpoints currently stored.
     pub fn len(&self) -> usize {
         self.data.len()
     }
+    /// True when no checkpoints are stored.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
+    /// Total stored bytes across checkpoints.
     pub fn total_bytes(&self) -> usize {
         self.data.values().map(|v| v.len()).sum()
     }

@@ -1,6 +1,6 @@
 //! Trial executors: where trainables actually run.
 //!
-//! Two implementations behind one interface, so every scheduler/search
+//! Three implementations behind one interface, so every scheduler/search
 //! algorithm is oblivious to the execution substrate (§3's requirement
 //! to "handle irregular computations" lives here):
 //!
@@ -12,11 +12,16 @@
 //!   channels in, one shared event channel out. Wall-clock time. The
 //!   end-to-end PJRT workloads run here, mirroring Ray's
 //!   process-per-trial model in-process.
+//! * [`PoolExecutor`] — a bounded pool of N worker threads servicing
+//!   M ≫ N live trials through a shared injector queue, so concurrency
+//!   is decoupled from trial count. Wall-clock time. This is the
+//!   production substrate: thousand-trial experiments no longer burn a
+//!   thread per trial.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::coordinator::trial::{Config, Trial, TrialId};
@@ -25,10 +30,26 @@ use crate::trainable::{StepOutput, Trainable, TrainableFactory};
 /// Completion events delivered to the runner.
 #[derive(Debug)]
 pub enum ExecEvent {
-    Stepped { trial: TrialId, out: StepOutput },
-    Failed { trial: TrialId, error: String },
+    /// One training iteration finished and reported metrics.
+    Stepped {
+        /// Trial that stepped.
+        trial: TrialId,
+        /// Metrics (and done flag) the trainable reported.
+        out: StepOutput,
+    },
+    /// The trial's step raised an error (crash, injected fault, ...).
+    Failed {
+        /// Trial that failed.
+        trial: TrialId,
+        /// Human-readable failure cause.
+        error: String,
+    },
 }
 
+/// The execution substrate interface the runner drives. Implementations
+/// differ in clock (virtual vs wall) and concurrency model, not
+/// semantics: launch, request asynchronous steps, collect completion
+/// events, and snapshot/restore/mutate idle trainables synchronously.
 pub trait Executor: Send {
     /// Seconds since experiment start (virtual or wall).
     fn now(&self) -> f64;
@@ -54,6 +75,7 @@ pub trait Executor: Send {
     /// Tear down the trial's trainable.
     fn halt(&mut self, id: TrialId);
 
+    /// Number of trials currently holding a live trainable.
     fn num_live(&self) -> usize;
 }
 
@@ -72,17 +94,32 @@ impl Ord for F64Ord {
     }
 }
 
+/// Discrete-event executor: virtual clock ordered by `step_cost`.
 pub struct SimExecutor {
     factory: TrainableFactory,
     now: f64,
     seq: u64,
-    queue: BinaryHeap<Reverse<(F64Ord, u64, TrialId)>>,
+    /// (completion time, seq, trial, launch epoch).
+    queue: BinaryHeap<Reverse<(F64Ord, u64, TrialId, u64)>>,
     live: HashMap<TrialId, Box<dyn Trainable>>,
+    /// Launch generation per trial id. A halt + relaunch of the same id
+    /// bumps it, so stale queue entries from a previous incarnation are
+    /// discarded instead of stepping the new trainable (fault recovery
+    /// relaunches ids while their old entries may still be queued).
+    epoch: HashMap<TrialId, u64>,
 }
 
 impl SimExecutor {
+    /// Create a simulator over `factory`-built trainables.
     pub fn new(factory: TrainableFactory) -> Self {
-        SimExecutor { factory, now: 0.0, seq: 0, queue: BinaryHeap::new(), live: HashMap::new() }
+        SimExecutor {
+            factory,
+            now: 0.0,
+            seq: 0,
+            queue: BinaryHeap::new(),
+            live: HashMap::new(),
+            epoch: HashMap::new(),
+        }
     }
 }
 
@@ -96,6 +133,7 @@ impl Executor for SimExecutor {
         if let Some(blob) = restore {
             t.restore(&blob)?;
         }
+        *self.epoch.entry(trial.id).or_insert(0) += 1;
         self.live.insert(trial.id, t);
         Ok(())
     }
@@ -104,13 +142,18 @@ impl Executor for SimExecutor {
         if let Some(t) = self.live.get(&id) {
             let done_at = self.now + t.step_cost().max(1e-9);
             self.seq += 1;
-            self.queue.push(Reverse((F64Ord(done_at), self.seq, id)));
+            let epoch = self.epoch.get(&id).copied().unwrap_or(0);
+            self.queue.push(Reverse((F64Ord(done_at), self.seq, id, epoch)));
         }
     }
 
     fn next_event(&mut self) -> Option<ExecEvent> {
-        while let Some(Reverse((F64Ord(at), _, id))) = self.queue.pop() {
-            // Halted trials may leave stale queue entries; skip them.
+        while let Some(Reverse((F64Ord(at), _, id, epoch))) = self.queue.pop() {
+            // Halted (or halted-then-relaunched) trials leave stale queue
+            // entries; skip anything from a previous launch epoch.
+            if self.epoch.get(&id).copied().unwrap_or(0) != epoch {
+                continue;
+            }
             let Some(t) = self.live.get_mut(&id) else { continue };
             self.now = self.now.max(at);
             return Some(match t.step() {
@@ -161,6 +204,8 @@ struct Worker {
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
+/// Wall-clock executor: one OS thread per live trial (Ray's
+/// process-per-trial model, in-process).
 pub struct ThreadExecutor {
     factory: TrainableFactory,
     workers: HashMap<TrialId, Worker>,
@@ -170,6 +215,7 @@ pub struct ThreadExecutor {
 }
 
 impl ThreadExecutor {
+    /// Create a thread-per-trial executor over `factory`-built trainables.
     pub fn new(factory: TrainableFactory) -> Self {
         let (event_tx, event_rx) = mpsc::channel();
         ThreadExecutor {
@@ -290,6 +336,293 @@ impl Drop for ThreadExecutor {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Bounded work-stealing pool executor
+// ---------------------------------------------------------------------------
+
+/// Per-trial mailbox state inside the pool.
+enum Slot {
+    /// Trainable parked between steps; synchronous ops may touch it.
+    Idle(Box<dyn Trainable>),
+    /// A worker checked the trainable out and is stepping it.
+    Busy,
+    /// Halted while a worker was mid-step; the worker drops the
+    /// trainable (and removes this marker) at check-in.
+    Halted,
+}
+
+/// Mailboxes + launch generations, guarded by one lock.
+#[derive(Default)]
+struct PoolState {
+    slots: HashMap<TrialId, Slot>,
+    /// Launch generation per trial id, bumped on every `launch`. Step
+    /// requests carry the epoch they were issued under; a request from a
+    /// previous incarnation of a relaunched id resolves as a skip
+    /// instead of stepping the new trainable (fault recovery relaunches
+    /// ids while their old requests may still sit in the injector).
+    epochs: HashMap<TrialId, u64>,
+}
+
+/// State shared between the coordinator thread and the pool workers.
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Signalled whenever a slot transitions out of `Busy` (check-in or
+    /// halted-drop), waking synchronous ops parked in `with_idle` and
+    /// relaunches parked in `launch`.
+    idle_cv: Condvar,
+}
+
+/// Internal event stream: every queued step request produces exactly one
+/// entry, so `next_event` can count in-flight work without timeouts.
+enum PoolEvent {
+    Exec(ExecEvent),
+    /// The request targeted a halted/missing trial; no runner event.
+    Skipped,
+}
+
+/// Wall-clock executor with a **bounded** worker pool: N workers service
+/// M ≫ N live trials. Step requests go through a shared injector queue
+/// that idle workers steal from; each trial's trainable lives in a
+/// mailbox [`Slot`] that is checked out for the duration of one step.
+/// Synchronous operations (`save`/`restore`/`update_config`) briefly wait
+/// for an in-flight step to park, preserving the "idle between steps"
+/// contract the runner relies on.
+///
+/// This decouples concurrency from trial count: a 10 000-trial experiment
+/// runs on `num_cpus` threads instead of 10 000.
+pub struct PoolExecutor {
+    factory: TrainableFactory,
+    shared: Arc<PoolShared>,
+    /// Work queue of (trial, launch epoch) feeding the workers; dropped
+    /// first on teardown so the workers observe a closed channel and
+    /// exit.
+    injector_tx: Option<Sender<(TrialId, u64)>>,
+    event_rx: Receiver<PoolEvent>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Step requests queued but not yet answered by a `PoolEvent`.
+    queued: usize,
+    started: Instant,
+}
+
+impl PoolExecutor {
+    /// Spawn a pool of `workers` (min 1) threads over `factory`-built
+    /// trainables.
+    pub fn new(factory: TrainableFactory, workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (injector_tx, injector_rx) = mpsc::channel::<(TrialId, u64)>();
+        let injector_rx = Arc::new(Mutex::new(injector_rx));
+        let (event_tx, event_rx) = mpsc::channel::<PoolEvent>();
+        let shared =
+            Arc::new(PoolShared { state: Mutex::new(PoolState::default()), idle_cv: Condvar::new() });
+
+        let handles = (0..workers)
+            .map(|w| {
+                let injector_rx = Arc::clone(&injector_rx);
+                let event_tx = event_tx.clone();
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("tune-pool-{w}"))
+                    .spawn(move || pool_worker(&injector_rx, &event_tx, &shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+
+        PoolExecutor {
+            factory,
+            shared,
+            injector_tx: Some(injector_tx),
+            event_rx,
+            workers: handles,
+            queued: 0,
+            started: Instant::now(),
+        }
+    }
+
+    /// Number of worker threads in the pool.
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run `f` on the trial's parked trainable, waiting out an in-flight
+    /// step first. `None` if the trial is not live.
+    fn with_idle<R>(&self, id: TrialId, f: impl FnOnce(&mut Box<dyn Trainable>) -> R) -> Option<R> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if matches!(st.slots.get(&id), Some(Slot::Busy)) {
+                st = self.shared.idle_cv.wait(st).unwrap();
+                continue;
+            }
+            return match st.slots.get_mut(&id) {
+                Some(Slot::Idle(t)) => Some(f(t)),
+                _ => None,
+            };
+        }
+    }
+}
+
+/// One pool worker: steal a trial id from the injector, check its
+/// trainable out, step it, check it back in, emit the event.
+fn pool_worker(
+    injector_rx: &Mutex<Receiver<(TrialId, u64)>>,
+    event_tx: &Sender<PoolEvent>,
+    shared: &PoolShared,
+) {
+    loop {
+        // Holding the lock across recv is fine: at most one idle worker
+        // parks inside recv; the rest park on the mutex and rotate in as
+        // work arrives.
+        let (id, epoch) = match injector_rx.lock().unwrap().recv() {
+            Ok(req) => req,
+            Err(_) => return, // injector closed: executor dropped
+        };
+        // Check out: Idle -> Busy. Requests from a previous launch epoch
+        // and halted/missing trials are answered with a Skipped marker so
+        // next_event's accounting stays exact.
+        let taken = {
+            let mut st = shared.state.lock().unwrap();
+            if st.epochs.get(&id).copied().unwrap_or(0) != epoch {
+                None
+            } else {
+                match st.slots.remove(&id) {
+                    Some(Slot::Idle(t)) => {
+                        st.slots.insert(id, Slot::Busy);
+                        Some(t)
+                    }
+                    Some(other) => {
+                        st.slots.insert(id, other);
+                        None
+                    }
+                    None => None,
+                }
+            }
+        };
+        let Some(mut t) = taken else {
+            if event_tx.send(PoolEvent::Skipped).is_err() {
+                return;
+            }
+            continue;
+        };
+
+        let result = t.step();
+
+        // Check in: Busy -> Idle, unless halted mid-step (drop it).
+        let halted = {
+            let mut st = shared.state.lock().unwrap();
+            match st.slots.remove(&id) {
+                Some(Slot::Busy) => {
+                    st.slots.insert(id, Slot::Idle(t));
+                    false
+                }
+                _ => true,
+            }
+        };
+        shared.idle_cv.notify_all();
+
+        let event = if halted {
+            PoolEvent::Skipped
+        } else {
+            PoolEvent::Exec(match result {
+                Ok(out) => ExecEvent::Stepped { trial: id, out },
+                Err(error) => ExecEvent::Failed { trial: id, error },
+            })
+        };
+        if event_tx.send(event).is_err() {
+            return;
+        }
+    }
+}
+
+impl Executor for PoolExecutor {
+    fn now(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    fn launch(&mut self, trial: &Trial, restore: Option<Vec<u8>>) -> Result<(), String> {
+        let mut t = (self.factory)(&trial.config, trial.seed);
+        if let Some(blob) = restore {
+            t.restore(&blob)?;
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        // A relaunch can race a halted-mid-step worker; wait for the
+        // stale slot to clear so the worker cannot drop the new trainable.
+        while st.slots.contains_key(&trial.id) {
+            st = self.shared.idle_cv.wait(st).unwrap();
+        }
+        *st.epochs.entry(trial.id).or_insert(0) += 1;
+        st.slots.insert(trial.id, Slot::Idle(t));
+        Ok(())
+    }
+
+    fn request_step(&mut self, id: TrialId) {
+        let epoch = self.shared.state.lock().unwrap().epochs.get(&id).copied().unwrap_or(0);
+        if let Some(tx) = &self.injector_tx {
+            if tx.send((id, epoch)).is_ok() {
+                self.queued += 1;
+            }
+        }
+    }
+
+    fn next_event(&mut self) -> Option<ExecEvent> {
+        while self.queued > 0 {
+            match self.event_rx.recv() {
+                Ok(PoolEvent::Exec(ev)) => {
+                    self.queued -= 1;
+                    return Some(ev);
+                }
+                Ok(PoolEvent::Skipped) => self.queued -= 1,
+                Err(_) => return None,
+            }
+        }
+        None
+    }
+
+    fn save(&mut self, id: TrialId) -> Option<Vec<u8>> {
+        self.with_idle(id, |t| t.save())
+    }
+
+    fn restore(&mut self, id: TrialId, blob: &[u8]) -> Result<(), String> {
+        self.with_idle(id, |t| t.restore(blob)).unwrap_or_else(|| Err("trial not live".into()))
+    }
+
+    fn update_config(&mut self, id: TrialId, config: &Config) {
+        self.with_idle(id, |t| t.update_config(config));
+    }
+
+    fn halt(&mut self, id: TrialId) {
+        let mut st = self.shared.state.lock().unwrap();
+        if matches!(st.slots.get(&id), Some(Slot::Busy)) {
+            // Mid-step: leave a marker; the worker drops the trainable
+            // and clears the slot at check-in.
+            st.slots.insert(id, Slot::Halted);
+        } else if !matches!(st.slots.get(&id), Some(Slot::Halted)) {
+            st.slots.remove(&id);
+            self.shared.idle_cv.notify_all();
+        }
+    }
+
+    fn num_live(&self) -> usize {
+        self.shared
+            .state
+            .lock()
+            .unwrap()
+            .slots
+            .values()
+            .filter(|s| !matches!(s, Slot::Halted))
+            .count()
+    }
+}
+
+impl Drop for PoolExecutor {
+    fn drop(&mut self) {
+        // Close the injector; workers drain and exit on the closed
+        // channel. Trainables still parked in slots drop with the map.
+        self.injector_tx.take();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -336,6 +669,25 @@ mod tests {
         ex.halt(1);
         assert!(ex.next_event().is_none());
         assert_eq!(ex.num_live(), 0);
+    }
+
+    #[test]
+    fn sim_relaunch_does_not_consume_stale_entry() {
+        // Fault recovery halts and relaunches the same trial id while the
+        // old step entry is still queued: the stale entry must NOT step
+        // the new incarnation (it would double the trial's step stream).
+        let mut ex = SimExecutor::new(const_factory());
+        ex.launch(&mk_trial(1, 1.0), None).unwrap();
+        ex.request_step(1);
+        ex.halt(1);
+        ex.launch(&mk_trial(1, 1.0), None).unwrap();
+        assert!(ex.next_event().is_none(), "stale pre-relaunch entry was executed");
+        // The relaunched trial still works normally.
+        ex.request_step(1);
+        match ex.next_event().unwrap() {
+            ExecEvent::Stepped { out, .. } => assert_eq!(out.metrics["iters"], 1.0),
+            e => panic!("{e:?}"),
+        }
     }
 
     #[test]
@@ -404,5 +756,167 @@ mod tests {
             ExecEvent::Stepped { out, .. } => assert_eq!(out.metrics["iters"], 1.0),
             e => panic!("{e:?}"),
         }
+    }
+
+    #[test]
+    fn pool_completes_64_trials_with_4_workers() {
+        // M = 64 live trials over N = 4 workers: every trial must step to
+        // completion without a dedicated thread.
+        let mut ex = PoolExecutor::new(const_factory(), 4);
+        assert_eq!(ex.num_workers(), 4);
+        for id in 0..64 {
+            ex.launch(&mk_trial(id, 0.0), None).unwrap();
+        }
+        assert_eq!(ex.num_live(), 64);
+        let steps_per_trial = 3u64;
+        let mut counts = std::collections::BTreeMap::new();
+        for round in 0..steps_per_trial {
+            for id in 0..64 {
+                ex.request_step(id);
+            }
+            for _ in 0..64 {
+                match ex.next_event().unwrap() {
+                    ExecEvent::Stepped { trial, out } => {
+                        assert!(out.metrics["iters"] >= (round + 1) as f64);
+                        *counts.entry(trial).or_insert(0u64) += 1;
+                    }
+                    e => panic!("{e:?}"),
+                }
+            }
+        }
+        assert_eq!(counts.len(), 64);
+        assert!(counts.values().all(|&c| c == steps_per_trial));
+        for id in 0..64 {
+            ex.halt(id);
+        }
+        assert_eq!(ex.num_live(), 0);
+        assert!(ex.next_event().is_none());
+    }
+
+    #[test]
+    fn pool_save_restore_update_matches_threaded() {
+        // The same command sequence must be observationally identical on
+        // the pool and the thread-per-trial executor.
+        fn drive(ex: &mut dyn Executor) -> (Vec<f64>, Vec<u8>, f64) {
+            ex.launch(&mk_trial(1, 0.0), None).unwrap();
+            let mut iters = Vec::new();
+            for _ in 0..3 {
+                ex.request_step(1);
+                match ex.next_event().unwrap() {
+                    ExecEvent::Stepped { out, .. } => iters.push(out.metrics["iters"]),
+                    e => panic!("{e:?}"),
+                }
+            }
+            let blob = ex.save(1).unwrap();
+            // Roll back to iteration 1 and mutate the config in place.
+            ex.restore(1, &1u64.to_le_bytes()).unwrap();
+            let mut cfg = Config::new();
+            cfg.insert("step_cost".into(), ParamValue::F64(2.0));
+            ex.update_config(1, &cfg);
+            ex.request_step(1);
+            let after = match ex.next_event().unwrap() {
+                ExecEvent::Stepped { out, .. } => out.metrics["iters"],
+                e => panic!("{e:?}"),
+            };
+            ex.halt(1);
+            (iters, blob, after)
+        }
+        let mut pool = PoolExecutor::new(const_factory(), 2);
+        let mut threads = ThreadExecutor::new(const_factory());
+        assert_eq!(drive(&mut pool), drive(&mut threads));
+    }
+
+    #[test]
+    fn pool_halt_discards_pending_requests() {
+        let mut ex = PoolExecutor::new(const_factory(), 1);
+        ex.launch(&mk_trial(1, 0.0), None).unwrap();
+        ex.request_step(1);
+        ex.halt(1);
+        // The queued request resolves as a skip, never a runner event.
+        assert!(ex.next_event().is_none());
+        assert_eq!(ex.num_live(), 0);
+        // Relaunching the same trial id afterwards is clean.
+        ex.launch(&mk_trial(1, 0.0), None).unwrap();
+        ex.request_step(1);
+        match ex.next_event().unwrap() {
+            ExecEvent::Stepped { out, .. } => assert_eq!(out.metrics["iters"], 1.0),
+            e => panic!("{e:?}"),
+        }
+    }
+
+    #[test]
+    fn pool_relaunch_does_not_consume_stale_request() {
+        // A trainable slow enough to pin the single worker while we
+        // halt + relaunch another trial whose request is still queued.
+        struct Slow(u64);
+        impl Trainable for Slow {
+            fn step(&mut self) -> Result<StepOutput, String> {
+                std::thread::sleep(std::time::Duration::from_millis(100));
+                self.0 += 1;
+                Ok(StepOutput::of(&[("iters", self.0 as f64)]))
+            }
+            fn save(&mut self) -> Vec<u8> {
+                self.0.to_le_bytes().to_vec()
+            }
+            fn restore(&mut self, blob: &[u8]) -> Result<(), String> {
+                self.0 = u64::from_le_bytes(blob.try_into().map_err(|_| "bad blob")?);
+                Ok(())
+            }
+        }
+        let factory: TrainableFactory = factory(|c, s| {
+            if c.contains_key("slow") {
+                Box::new(Slow(0))
+            } else {
+                Box::new(ConstTrainable::new(c, s))
+            }
+        });
+        let mut ex = PoolExecutor::new(factory, 1);
+        let mut slow_cfg = Config::new();
+        slow_cfg.insert("slow".into(), ParamValue::Bool(true));
+        let blocker = Trial::new(99, slow_cfg, Resources::cpu(1.0), 0);
+        ex.launch(&blocker, None).unwrap();
+        ex.request_step(99); // pins the only worker for ~100ms
+
+        // Victim: request queued behind the blocker, then halt + relaunch
+        // (the fault-recovery sequence) before the worker reaches it.
+        ex.launch(&mk_trial(1, 0.0), None).unwrap();
+        ex.request_step(1);
+        ex.halt(1);
+        ex.launch(&mk_trial(1, 0.0), None).unwrap();
+
+        // Blocker's event arrives; the victim's stale request must
+        // resolve as a skip, never as a step of the new incarnation.
+        match ex.next_event().unwrap() {
+            ExecEvent::Stepped { trial, .. } => assert_eq!(trial, 99),
+            e => panic!("{e:?}"),
+        }
+        assert!(ex.next_event().is_none(), "stale pre-relaunch request was executed");
+        ex.request_step(1);
+        match ex.next_event().unwrap() {
+            ExecEvent::Stepped { trial, out } => {
+                assert_eq!(trial, 1);
+                assert_eq!(out.metrics["iters"], 1.0);
+            }
+            e => panic!("{e:?}"),
+        }
+    }
+
+    #[test]
+    fn pool_single_worker_serializes_m_trials() {
+        let mut ex = PoolExecutor::new(const_factory(), 1);
+        for id in 0..16 {
+            ex.launch(&mk_trial(id, 0.0), None).unwrap();
+            ex.request_step(id);
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        while let Some(ev) = ex.next_event() {
+            match ev {
+                ExecEvent::Stepped { trial, .. } => {
+                    seen.insert(trial);
+                }
+                e => panic!("{e:?}"),
+            }
+        }
+        assert_eq!(seen.len(), 16);
     }
 }

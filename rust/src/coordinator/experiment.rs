@@ -6,7 +6,7 @@ use crate::logger::{JsonlLogger, ProgressReporter};
 use crate::ray::{Cluster, FaultPlan, Resources};
 use crate::trainable::TrainableFactory;
 
-use super::executor::{Executor, SimExecutor, ThreadExecutor};
+use super::executor::{Executor, PoolExecutor, SimExecutor, ThreadExecutor};
 use super::runner::{ExperimentResult, TrialRunner};
 use super::schedulers::{
     AshaScheduler, FifoScheduler, HyperBandScheduler, MedianStoppingRule, PbtScheduler,
@@ -19,13 +19,16 @@ use super::trial::Mode;
 /// Everything that defines an experiment run.
 #[derive(Clone, Debug)]
 pub struct ExperimentSpec {
+    /// Experiment name (log directories, progress output).
     pub name: String,
     /// Metric trials report and schedulers optimize.
     pub metric: String,
+    /// Whether larger or smaller metric values are better.
     pub mode: Mode,
     /// Number of stochastic samples (grid dims multiply inside the
     /// search algorithm).
     pub num_samples: usize,
+    /// Resource demand each trial leases from the cluster.
     pub resources_per_trial: Resources,
     /// Per-trial stopping: max training iterations.
     pub max_iterations_per_trial: u64,
@@ -42,11 +45,16 @@ pub struct ExperimentSpec {
     pub checkpoint_freq: u64,
     /// Snapshot final state of completed trials.
     pub checkpoint_at_end: bool,
+    /// Deterministic fault injection plan (none by default).
     pub fault_plan: FaultPlan,
+    /// Root seed: search sampling, trial seeds and fault injection all
+    /// derive from it, so runs replay bit-identically.
     pub seed: u64,
 }
 
 impl ExperimentSpec {
+    /// A spec with workable defaults for `name` (metric "loss", Min
+    /// mode, one sample, 1 CPU per trial, 100 iterations).
     pub fn named(name: &str) -> Self {
         ExperimentSpec {
             name: name.to_string(),
@@ -69,15 +77,23 @@ impl ExperimentSpec {
 
 /// Scheduler selection (string-friendly for the CLI).
 #[derive(Clone, Debug)]
+#[allow(missing_docs)] // parameter fields are documented on the schedulers themselves
 pub enum SchedulerKind {
+    /// Run every trial to its stopping criterion (the trivial baseline).
     Fifo,
+    /// Asynchronous HyperBand (Li et al. 2018).
     Asha { grace_period: u64, reduction_factor: f64, max_t: u64 },
+    /// Synchronous HyperBand with rung barriers (Li et al. 2016).
     HyperBand { max_t: u64, eta: f64 },
+    /// Median stopping rule (Golovin et al. 2017).
     MedianStopping { grace_period: u64, min_samples: usize },
+    /// Population-Based Training (Jaderberg et al. 2017).
     Pbt { perturbation_interval: u64, space: SearchSpace },
 }
 
 impl SchedulerKind {
+    /// Instantiate the concrete scheduler (PBT derives its RNG from
+    /// `seed`).
     pub fn build(&self, seed: u64) -> Box<dyn TrialScheduler> {
         match self {
             SchedulerKind::Fifo => Box::new(FifoScheduler::new()),
@@ -96,6 +112,7 @@ impl SchedulerKind {
         }
     }
 
+    /// Stable CLI/log label for the scheduler.
     pub fn label(&self) -> &'static str {
         match self {
             SchedulerKind::Fifo => "fifo",
@@ -110,13 +127,18 @@ impl SchedulerKind {
 /// Search-algorithm selection.
 #[derive(Clone, Debug)]
 pub enum SearchKind {
+    /// Full cross-product over `grid_search` dimensions.
     Grid,
+    /// I.i.d. sampling from the space (Bergstra & Bengio 2012).
     Random,
+    /// Tree-structured Parzen Estimator (HyperOpt's algorithm).
     Tpe,
+    /// (mu + lambda) evolutionary search.
     Evolution,
 }
 
 impl SearchKind {
+    /// Instantiate the concrete search algorithm over `space`.
     pub fn build(&self, space: SearchSpace, num_samples: usize) -> Box<dyn SearchAlgorithm> {
         match self {
             SearchKind::Grid => Box::new(GridSearch::new(space, num_samples)),
@@ -128,17 +150,39 @@ impl SearchKind {
 }
 
 /// Execution substrate selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ExecMode {
     /// Discrete-event simulation over `Trainable::step_cost` virtual
     /// seconds — scheduler research mode.
     Sim,
-    /// Real threads, wall-clock time — production mode (PJRT models).
+    /// One real thread per live trial, wall-clock time — mirrors Ray's
+    /// process-per-trial model (PJRT models run here).
     Threads,
+    /// Bounded worker pool: `workers` threads service every live trial
+    /// through a shared injector queue — production mode; concurrency is
+    /// decoupled from trial count.
+    Pool {
+        /// Number of pool worker threads (min 1).
+        workers: usize,
+    },
+}
+
+impl ExecMode {
+    /// Stable CLI/log label for the mode.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExecMode::Sim => "sim",
+            ExecMode::Threads => "threads",
+            ExecMode::Pool { .. } => "pool",
+        }
+    }
 }
 
 /// Options bag for [`run_experiments`].
 pub struct RunOptions {
+    /// The (simulated) cluster trials are placed onto.
     pub cluster: Cluster,
+    /// Which executor runs the trainables.
     pub exec: ExecMode,
     /// Print progress every N results (0 = quiet).
     pub progress_every: u64,
@@ -169,6 +213,7 @@ pub fn run_experiments(
     let executor: Box<dyn Executor> = match opts.exec {
         ExecMode::Sim => Box::new(SimExecutor::new(factory)),
         ExecMode::Threads => Box::new(ThreadExecutor::new(factory)),
+        ExecMode::Pool { workers } => Box::new(PoolExecutor::new(factory, workers)),
     };
     let sched = scheduler.build(spec.seed);
     let search_alg = search.build(space, spec.num_samples);

@@ -4,7 +4,8 @@
 //! * [`trial`] / [`spec`] — trials, configs, the parameter DSL (§3, §4.3)
 //! * [`schedulers`] — the trial-scheduling API + Table 1 algorithms (§4.2)
 //! * [`search`] — suggestion algorithms (grid / random / TPE)
-//! * [`executor`] — where trainables run (discrete-event sim or threads)
+//! * [`executor`] — where trainables run (discrete-event sim,
+//!   thread-per-trial, or bounded worker pool)
 //! * [`runner`] — the central event loop tying it all together
 //! * [`experiment`] — user-facing `run_experiments` facade (§4.3)
 

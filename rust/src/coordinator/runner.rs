@@ -25,14 +25,23 @@ use super::trial::{ResultRow, Trial, TrialId, TrialStatus};
 /// Counters the benches and EXPERIMENTS.md report.
 #[derive(Clone, Debug, Default)]
 pub struct RunnerStats {
+    /// Intermediate results processed.
     pub results: u64,
+    /// Checkpoints written to the store.
     pub checkpoints: u64,
+    /// Restores from checkpoints (relaunches + PBT exploits).
     pub restores: u64,
+    /// PBT exploit operations applied.
     pub exploits: u64,
+    /// Trials stopped early by a scheduler.
     pub stopped_early: u64,
+    /// Trials that reached their stopping criterion.
     pub completed: u64,
+    /// Trials that exhausted `max_failures`.
     pub errored: u64,
+    /// Failures recovered via checkpoint relaunch.
     pub failures_recovered: u64,
+    /// Trainable launches (initial + relaunches).
     pub launches: u64,
     /// Nanoseconds spent inside scheduler callbacks (decision latency).
     pub decision_ns: u64,
@@ -40,41 +49,54 @@ pub struct RunnerStats {
     pub handling_ns: u64,
 }
 
+/// Everything an experiment run produced.
 pub struct ExperimentResult {
+    /// Final state of every trial, by id.
     pub trials: BTreeMap<TrialId, Trial>,
+    /// Trial with the best metric value observed, if any metric was.
     pub best: Option<TrialId>,
     /// Total (virtual or wall) seconds the experiment spanned.
     pub duration_s: f64,
     /// Sum over trials of consumed training seconds (the search budget).
     pub budget_used_s: f64,
+    /// Runner-level counters.
     pub stats: RunnerStats,
+    /// Placement counters from the two-level scheduler.
     pub placement: PlacementStats,
     /// (experiment time, best raw metric so far) — per-result samples.
     pub best_curve: Vec<(f64, f64)>,
 }
 
 impl ExperimentResult {
+    /// Best metric value observed across the experiment.
     pub fn best_metric(&self) -> Option<f64> {
         self.best.and_then(|id| self.trials[&id].best_metric)
     }
+    /// Config of the best trial.
     pub fn best_config(&self) -> Option<&super::trial::Config> {
         self.best.map(|id| &self.trials[&id].config)
     }
+    /// Total training iterations across all trials.
     pub fn total_iterations(&self) -> u64 {
         self.trials.values().map(|t| t.iteration).sum()
     }
+    /// Number of trials that ended in `status`.
     pub fn count(&self, status: TrialStatus) -> usize {
         self.trials.values().filter(|t| t.status == status).count()
     }
 }
 
+/// Tune's central event loop: owns the trial table and drives the
+/// scheduler/search/executor/substrate quartet to completion.
 pub struct TrialRunner {
+    /// The experiment being run.
     pub spec: ExperimentSpec,
     scheduler: Box<dyn TrialScheduler>,
     search: Box<dyn SearchAlgorithm>,
     executor: Box<dyn Executor>,
     cluster: Cluster,
     placer: TwoLevelScheduler,
+    /// Checkpoint store (exposed for post-hoc restore tooling).
     pub checkpoints: CheckpointStore,
     fault: FaultInjector,
     trials: BTreeMap<TrialId, Trial>,
@@ -92,6 +114,7 @@ pub struct TrialRunner {
 }
 
 impl TrialRunner {
+    /// Assemble a runner from its four pluggable parts plus a cluster.
     pub fn new(
         spec: ExperimentSpec,
         scheduler: Box<dyn TrialScheduler>,
@@ -123,10 +146,12 @@ impl TrialRunner {
         }
     }
 
+    /// Attach a result logger (fan-out on every intermediate result).
     pub fn add_logger(&mut self, logger: Box<dyn ResultLogger>) {
         self.loggers.push(logger);
     }
 
+    /// Read-only view of the trial table.
     pub fn trials(&self) -> &BTreeMap<TrialId, Trial> {
         &self.trials
     }

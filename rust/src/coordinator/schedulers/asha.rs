@@ -12,9 +12,14 @@ use std::collections::BTreeMap;
 
 use super::{Decision, ResultRow, SchedulerCtx, Trial, TrialScheduler};
 
+/// Asynchronous successive halving: promote the top 1/eta at each rung,
+/// stop the rest, no barriers.
 pub struct AshaScheduler {
+    /// First rung: never stop before this many iterations.
     pub grace_period: u64,
+    /// eta: rung spacing factor and promotion fraction 1/eta.
     pub reduction_factor: f64,
+    /// Maximum iterations a single trial may train for.
     pub max_t: u64,
     /// rung iteration -> ascending-normalized metrics recorded there.
     rungs: BTreeMap<u64, Vec<f64>>,
@@ -22,6 +27,7 @@ pub struct AshaScheduler {
 }
 
 impl AshaScheduler {
+    /// New scheduler with rungs at `grace_period * reduction_factor^k`.
     pub fn new(grace_period: u64, reduction_factor: f64, max_t: u64) -> Self {
         assert!(reduction_factor > 1.0 && grace_period >= 1);
         AshaScheduler {
@@ -33,6 +39,7 @@ impl AshaScheduler {
         }
     }
 
+    /// Trials this scheduler has stopped at a rung so far.
     pub fn num_stopped(&self) -> u64 {
         self.stopped
     }

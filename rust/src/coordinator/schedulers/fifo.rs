@@ -4,10 +4,12 @@
 
 use super::{Decision, ResultRow, SchedulerCtx, Trial, TrialScheduler};
 
+/// The trivial scheduler: always continue, launch in arrival order.
 #[derive(Default)]
 pub struct FifoScheduler;
 
 impl FifoScheduler {
+    /// New FIFO scheduler (stateless).
     pub fn new() -> Self {
         FifoScheduler
     }

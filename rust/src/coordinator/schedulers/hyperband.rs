@@ -56,9 +56,12 @@ impl Bracket {
     }
 }
 
+/// Synchronous HyperBand: brackets of successive-halving cohorts with
+/// rung barriers (pause, cut, resume the promoted).
 pub struct HyperBandScheduler {
     /// R: maximum iterations a single trial may consume.
     pub max_t: u64,
+    /// Halving factor: keep the top 1/eta of each rung cohort.
     pub eta: f64,
     s_max: u32,
     brackets: Vec<Bracket>,
@@ -72,6 +75,7 @@ pub struct HyperBandScheduler {
 }
 
 impl HyperBandScheduler {
+    /// New scheduler with brackets shaped by `R = max_t` and `eta`.
     pub fn new(max_t: u64, eta: f64) -> Self {
         assert!(eta > 1.0 && max_t >= 1);
         let s_max = (max_t as f64).ln().div_euclid((eta).ln()) as u32;
@@ -87,6 +91,7 @@ impl HyperBandScheduler {
         }
     }
 
+    /// Trials terminated by rung cuts so far.
     pub fn num_stopped(&self) -> u64 {
         self.stopped
     }

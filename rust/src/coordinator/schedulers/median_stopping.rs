@@ -10,6 +10,7 @@ use std::collections::BTreeMap;
 use super::{Decision, ResultRow, SchedulerCtx, Trial, TrialScheduler};
 use crate::coordinator::trial::TrialId;
 
+/// Stop trials whose running average falls below the peer median.
 pub struct MedianStoppingRule {
     /// Never stop before this many iterations.
     pub grace_period: u64,
@@ -22,6 +23,7 @@ pub struct MedianStoppingRule {
 }
 
 impl MedianStoppingRule {
+    /// New rule with the given grace period and peer quorum.
     pub fn new(grace_period: u64, min_samples_required: usize) -> Self {
         MedianStoppingRule {
             grace_period,
@@ -31,6 +33,7 @@ impl MedianStoppingRule {
         }
     }
 
+    /// Trials stopped by the rule so far.
     pub fn num_stopped(&self) -> u64 {
         self.stopped
     }

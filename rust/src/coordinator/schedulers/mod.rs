@@ -61,8 +61,11 @@ pub enum Decision {
 
 /// Read-only view of experiment state passed to scheduler callbacks.
 pub struct SchedulerCtx<'a> {
+    /// The full trial table, by id.
     pub trials: &'a BTreeMap<TrialId, Trial>,
+    /// Metric being optimized.
     pub metric: &'a str,
+    /// Optimization direction.
     pub mode: Mode,
 }
 
@@ -76,6 +79,7 @@ impl<'a> SchedulerCtx<'a> {
             .map(|v| self.mode.ascending(v))
     }
 
+    /// First Pending trial in id order (the FIFO policy).
     pub fn first_pending(&self) -> Option<TrialId> {
         self.trials
             .values()
@@ -86,6 +90,7 @@ impl<'a> SchedulerCtx<'a> {
 
 /// The trial scheduler interface (§4.2).
 pub trait TrialScheduler: Send {
+    /// Stable label ("fifo", "asha", ...) for logs and tables.
     fn name(&self) -> &'static str;
 
     /// A new trial has been added to the experiment.

@@ -14,6 +14,8 @@ use crate::coordinator::spec::{ParamDist, SearchSpace};
 use crate::coordinator::trial::{Config, ParamValue, TrialId, TrialStatus};
 use crate::util::rng::Rng;
 
+/// Population-Based Training: bottom-quantile trials clone top-quantile
+/// checkpoints (exploit) with perturbed configs (explore).
 pub struct PbtScheduler {
     /// Exploit/explore every this many iterations.
     pub perturbation_interval: u64,
@@ -29,10 +31,12 @@ pub struct PbtScheduler {
     /// Last interval at which each trial was considered (dedup guard).
     last_perturb: BTreeMap<TrialId, u64>,
     rng: Rng,
+    /// Exploit decisions issued so far.
     pub exploits: u64,
 }
 
 impl PbtScheduler {
+    /// New PBT scheduler mutating within `space`, seeded for replay.
     pub fn new(perturbation_interval: u64, space: SearchSpace, seed: u64) -> Self {
         assert!(perturbation_interval >= 1);
         PbtScheduler {

@@ -11,6 +11,7 @@ use crate::coordinator::spec::{sample_config, ParamDist, SearchSpace};
 use crate::coordinator::trial::{Config, Mode, ParamValue, ResultRow};
 use crate::util::rng::Rng;
 
+/// (mu + lambda) evolutionary search: children mutate top-mu parents.
 pub struct EvolutionSearch {
     space: SearchSpace,
     remaining: usize,
@@ -27,6 +28,7 @@ pub struct EvolutionSearch {
 }
 
 impl EvolutionSearch {
+    /// New evolutionary search with default mu/population/mutation rates.
     pub fn new(space: SearchSpace, num_samples: usize) -> Self {
         EvolutionSearch {
             space,
@@ -40,6 +42,7 @@ impl EvolutionSearch {
         }
     }
 
+    /// Current parent-pool size (grows to mu, then stays).
     pub fn num_parents(&self) -> usize {
         self.parents.len()
     }

@@ -8,6 +8,8 @@ use crate::coordinator::spec::{expand_grid, SearchSpace};
 use crate::coordinator::trial::Config;
 use crate::util::rng::Rng;
 
+/// Exhaustive sweep over the grid cross-product, repeated `num_samples`
+/// times with stochastic dims re-sampled per pass.
 pub struct GridSearch {
     space: SearchSpace,
     num_samples: usize,
@@ -17,6 +19,7 @@ pub struct GridSearch {
 }
 
 impl GridSearch {
+    /// New grid search over `space` (`num_samples` grid repetitions).
     pub fn new(space: SearchSpace, num_samples: usize) -> Self {
         GridSearch {
             space,

@@ -23,6 +23,7 @@ pub use tpe::TpeSearch;
 
 /// Produces trial configurations, optionally conditioning on results.
 pub trait SearchAlgorithm: Send {
+    /// Stable label ("grid", "random", ...) for logs and tables.
     fn name(&self) -> &'static str;
 
     /// Next configuration to try; None = exhausted.

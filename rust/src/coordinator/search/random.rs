@@ -7,12 +7,14 @@ use crate::coordinator::spec::{sample_config, SearchSpace};
 use crate::coordinator::trial::Config;
 use crate::util::rng::Rng;
 
+/// I.i.d. sampling from the search space, `num_samples` times.
 pub struct RandomSearch {
     space: SearchSpace,
     remaining: usize,
 }
 
 impl RandomSearch {
+    /// New random search emitting exactly `num_samples` configs.
     pub fn new(space: SearchSpace, num_samples: usize) -> Self {
         RandomSearch { space, remaining: num_samples }
     }

@@ -17,6 +17,8 @@ use crate::coordinator::spec::{ParamDist, SearchSpace};
 use crate::coordinator::trial::{Config, Mode, ParamValue, ResultRow};
 use crate::util::rng::Rng;
 
+/// Tree-structured Parzen Estimator: model good/bad observation
+/// densities per dimension and suggest the best l(x)/g(x) candidate.
 pub struct TpeSearch {
     space: SearchSpace,
     remaining: usize,
@@ -31,6 +33,8 @@ pub struct TpeSearch {
 }
 
 impl TpeSearch {
+    /// New TPE search with HyperOpt-like defaults (10 random warmup
+    /// trials, gamma 0.25, 24 EI candidates).
     pub fn new(space: SearchSpace, num_samples: usize) -> Self {
         TpeSearch {
             space,
@@ -42,6 +46,7 @@ impl TpeSearch {
         }
     }
 
+    /// Completed observations the estimator currently conditions on.
     pub fn num_observations(&self) -> usize {
         self.observations.len()
     }

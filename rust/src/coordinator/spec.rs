@@ -11,21 +11,27 @@ use crate::util::rng::Rng;
 
 use super::trial::{Config, ParamValue};
 
+/// One dimension of a search space: how a parameter's values arise.
 #[derive(Clone, Debug)]
 pub enum ParamDist {
     /// Every value is expanded into the initial trial grid.
     GridSearch(Vec<ParamValue>),
     /// Sampled uniformly from the listed values.
     Choice(Vec<ParamValue>),
+    /// Uniform float in `[lo, hi)`.
     Uniform(f64, f64),
+    /// Log-uniform float in `[lo, hi)`, `lo > 0`.
     LogUniform(f64, f64),
     /// Uniform quantized to multiples of `q`.
     QUniform(f64, f64, f64),
+    /// Uniform integer in `[lo, hi)`.
     RandInt(i64, i64),
+    /// A fixed value.
     Const(ParamValue),
 }
 
 impl ParamDist {
+    /// Draw one value from this distribution.
     pub fn sample(&self, rng: &mut Rng) -> ParamValue {
         match self {
             ParamDist::GridSearch(vs) | ParamDist::Choice(vs) => rng.choose(vs).clone(),
@@ -68,9 +74,11 @@ pub struct SpaceBuilder {
 }
 
 impl SpaceBuilder {
+    /// An empty search space.
     pub fn new() -> Self {
         SpaceBuilder { space: SearchSpace::new() }
     }
+    /// `grid_search` over float values.
     pub fn grid_f64(mut self, key: &str, values: &[f64]) -> Self {
         self.space.insert(
             key.into(),
@@ -78,6 +86,7 @@ impl SpaceBuilder {
         );
         self
     }
+    /// `grid_search` over string values.
     pub fn grid_str(mut self, key: &str, values: &[&str]) -> Self {
         self.space.insert(
             key.into(),
@@ -85,6 +94,7 @@ impl SpaceBuilder {
         );
         self
     }
+    /// Uniform choice over string values.
     pub fn choice_str(mut self, key: &str, values: &[&str]) -> Self {
         self.space.insert(
             key.into(),
@@ -92,26 +102,32 @@ impl SpaceBuilder {
         );
         self
     }
+    /// Uniform float in `[lo, hi)`.
     pub fn uniform(mut self, key: &str, lo: f64, hi: f64) -> Self {
         self.space.insert(key.into(), ParamDist::Uniform(lo, hi));
         self
     }
+    /// Log-uniform float in `[lo, hi)`, `lo > 0`.
     pub fn loguniform(mut self, key: &str, lo: f64, hi: f64) -> Self {
         self.space.insert(key.into(), ParamDist::LogUniform(lo, hi));
         self
     }
+    /// Uniform float quantized to multiples of `q`.
     pub fn quniform(mut self, key: &str, lo: f64, hi: f64, q: f64) -> Self {
         self.space.insert(key.into(), ParamDist::QUniform(lo, hi, q));
         self
     }
+    /// Uniform integer in `[lo, hi)`.
     pub fn randint(mut self, key: &str, lo: i64, hi: i64) -> Self {
         self.space.insert(key.into(), ParamDist::RandInt(lo, hi));
         self
     }
+    /// A fixed parameter.
     pub fn constant(mut self, key: &str, v: ParamValue) -> Self {
         self.space.insert(key.into(), ParamDist::Const(v));
         self
     }
+    /// Finish building.
     pub fn build(self) -> SearchSpace {
         self.space
     }

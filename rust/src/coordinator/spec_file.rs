@@ -34,12 +34,17 @@ use super::trial::{Mode, ParamValue};
 
 /// Everything a spec file defines.
 pub struct SpecFile {
+    /// The experiment parameters.
     pub spec: ExperimentSpec,
+    /// Parsed search space.
     pub space: SearchSpace,
+    /// Scheduler selection.
     pub scheduler: SchedulerKind,
+    /// Search-algorithm selection.
     pub search: SearchKind,
     /// Workload name: "curve" | "pbt-sim" | "const" | "jax-mlp" | "jax-tlm".
     pub workload: String,
+    /// Cluster shape to run on.
     pub cluster: Cluster,
 }
 
@@ -146,11 +151,13 @@ fn parse_scheduler(j: Option<&Json>, max_t: u64, space: &SearchSpace) -> Result<
 }
 
 impl SpecFile {
+    /// Load and parse a spec file from disk.
     pub fn load(path: &std::path::Path) -> Result<SpecFile> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
         Self::parse_str(&text)
     }
 
+    /// Parse a spec from JSON text (defaults applied per field).
     pub fn parse_str(text: &str) -> Result<SpecFile> {
         let j = parse(text).map_err(|e| anyhow!("parsing spec: {e}"))?;
 

@@ -7,19 +7,25 @@ use std::fmt;
 
 use crate::ray::{NodeId, Resources};
 
+/// Unique identifier of a trial within an experiment.
 pub type TrialId = u64;
 
 /// A hyperparameter value. Configs are ordered maps so they have a
 /// canonical printable form (used in logs and by search algorithms).
 #[derive(Clone, Debug, PartialEq)]
 pub enum ParamValue {
+    /// Floating-point parameter.
     F64(f64),
+    /// Integer parameter.
     I64(i64),
+    /// Categorical string parameter.
     Str(String),
+    /// Boolean flag parameter.
     Bool(bool),
 }
 
 impl ParamValue {
+    /// Numeric view (`F64` directly, `I64` widened); `None` otherwise.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             ParamValue::F64(v) => Some(*v),
@@ -27,6 +33,7 @@ impl ParamValue {
             _ => None,
         }
     }
+    /// String view of a categorical parameter; `None` otherwise.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             ParamValue::Str(s) => Some(s),
@@ -46,6 +53,7 @@ impl fmt::Display for ParamValue {
     }
 }
 
+/// A trial's full hyperparameter assignment: name -> value, ordered.
 pub type Config = BTreeMap<String, ParamValue>;
 
 /// Render a config compactly: `lr=0.01,momentum=0.9`.
@@ -65,17 +73,21 @@ pub struct ResultRow {
     pub iteration: u64,
     /// Total time this trial has consumed, in (possibly virtual) seconds.
     pub time_total_s: f64,
+    /// Metric name -> value, as reported by the trainable.
     pub metrics: BTreeMap<String, f64>,
 }
 
 impl ResultRow {
+    /// An empty row at `iteration` after `time_total_s` seconds.
     pub fn new(iteration: u64, time_total_s: f64) -> Self {
         ResultRow { iteration, time_total_s, metrics: BTreeMap::new() }
     }
+    /// Builder-style metric insertion.
     pub fn with(mut self, key: &str, value: f64) -> Self {
         self.metrics.insert(key.to_string(), value);
         self
     }
+    /// Look up one metric by name.
     pub fn metric(&self, key: &str) -> Option<f64> {
         self.metrics.get(key).copied()
     }
@@ -84,7 +96,9 @@ impl ResultRow {
 /// Whether larger or smaller metric values are better.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Mode {
+    /// Smaller metric values are better (loss-like).
     Min,
+    /// Larger metric values are better (accuracy-like).
     Max,
 }
 
@@ -103,6 +117,7 @@ impl Mode {
             Mode::Max => v,
         }
     }
+    /// The worst possible value under this mode (identity of `better`).
     pub fn worst(&self) -> f64 {
         match self {
             Mode::Min => f64::INFINITY,
@@ -111,10 +126,12 @@ impl Mode {
     }
 }
 
+/// Lifecycle state of a trial, driven by the runner.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TrialStatus {
     /// Waiting for resources (never started, or descheduled).
     Pending,
+    /// Placed on a node with a live trainable, stepping.
     Running,
     /// Checkpointed and descheduled by the scheduler (e.g. HyperBand
     /// rung boundary); resumable via `choose_trial_to_run`.
@@ -128,25 +145,37 @@ pub enum TrialStatus {
 }
 
 impl TrialStatus {
+    /// Completed, Stopped or Errored: the trial will never run again.
     pub fn is_terminal(&self) -> bool {
         matches!(self, TrialStatus::Completed | TrialStatus::Stopped | TrialStatus::Errored)
     }
 }
 
+/// One training run with a (mutable under PBT) hyperparameter
+/// configuration — the coordinator's unit of scheduling.
 #[derive(Clone, Debug)]
 pub struct Trial {
+    /// Unique id within the experiment.
     pub id: TrialId,
+    /// Current hyperparameter assignment.
     pub config: Config,
+    /// Lifecycle state.
     pub status: TrialStatus,
+    /// Resource demand leased while running.
     pub resources: Resources,
     /// Node the trial is (or was last) placed on.
     pub node: Option<NodeId>,
+    /// Training iterations completed so far.
     pub iteration: u64,
+    /// Training seconds consumed so far (virtual or wall).
     pub time_total_s: f64,
+    /// Most recent intermediate result.
     pub last_result: Option<ResultRow>,
     /// Best metric value seen (under the experiment's mode).
     pub best_metric: Option<f64>,
+    /// Latest checkpoint of this trial, if any.
     pub checkpoint: Option<crate::checkpoint::CheckpointId>,
+    /// Failures so far (compared against `max_failures`).
     pub num_failures: u32,
     /// Seed for the trial's own stochasticity (data order, init).
     pub seed: u64,
@@ -155,6 +184,7 @@ pub struct Trial {
 }
 
 impl Trial {
+    /// A fresh Pending trial.
     pub fn new(id: TrialId, config: Config, resources: Resources, seed: u64) -> Self {
         Trial {
             id,
@@ -173,7 +203,7 @@ impl Trial {
         }
     }
 
-    /// Record a result row; returns the previous best metric.
+    /// Record a result row, updating iteration, time and best metric.
     pub fn record(&mut self, row: ResultRow, metric: &str, mode: Mode) {
         self.iteration = row.iteration;
         self.time_total_s = row.time_total_s;

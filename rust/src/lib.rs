@@ -44,6 +44,8 @@
 //! assert_eq!(result.trials.len(), 6);
 //! ```
 
+#![warn(missing_docs)]
+
 pub mod checkpoint;
 pub mod coordinator;
 pub mod logger;

@@ -9,17 +9,25 @@ use std::path::Path;
 use crate::coordinator::trial::Mode;
 use crate::util::json::{parse, Json};
 
+/// One trial's history as reconstructed from its JSONL log.
 #[derive(Clone, Debug)]
 pub struct TrialRecord {
+    /// Trial id.
     pub trial: u64,
+    /// Config rendered as strings (the JSONL header form).
     pub config: BTreeMap<String, String>,
-    pub rows: Vec<(u64, f64, BTreeMap<String, f64>)>, // (iter, time, metrics)
+    /// Result rows as (iter, time, metrics).
+    pub rows: Vec<(u64, f64, BTreeMap<String, f64>)>,
+    /// Terminal status string, if the end line was written.
     pub end_status: Option<String>,
+    /// Best metric from the end line, if present.
     pub best_metric: Option<f64>,
 }
 
+/// Offline view over a whole experiment's JSONL logs.
 #[derive(Clone, Debug, Default)]
 pub struct ExperimentAnalysis {
+    /// Reconstructed trials by id.
     pub trials: BTreeMap<u64, TrialRecord>,
 }
 
@@ -144,6 +152,7 @@ impl ExperimentAnalysis {
         curve
     }
 
+    /// Total result rows across all trials.
     pub fn num_results(&self) -> usize {
         self.trials.values().map(|t| t.rows.len()).sum()
     }

@@ -13,17 +13,20 @@ use crate::util::json::Json;
 
 use super::ResultLogger;
 
+/// Writes one `trial_NNNN.jsonl` per trial plus `experiment.json`.
 pub struct JsonlLogger {
     dir: PathBuf,
     writers: BTreeMap<TrialId, BufWriter<File>>,
 }
 
 impl JsonlLogger {
+    /// Create (and mkdir -p) a logger rooted at `dir`.
     pub fn new(dir: PathBuf) -> std::io::Result<Self> {
         std::fs::create_dir_all(&dir)?;
         Ok(JsonlLogger { dir, writers: BTreeMap::new() })
     }
 
+    /// The directory logs are written under.
     pub fn dir(&self) -> &PathBuf {
         &self.dir
     }

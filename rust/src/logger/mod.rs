@@ -17,19 +17,25 @@ pub use progress::ProgressReporter;
 
 /// Receives every intermediate result and lifecycle transition.
 pub trait ResultLogger: Send {
+    /// One intermediate result arrived for `trial`.
     fn on_result(&mut self, trial: &Trial, row: &ResultRow);
+    /// `trial` reached a terminal status.
     fn on_trial_end(&mut self, _trial: &Trial) {}
+    /// The whole experiment finished.
     fn on_experiment_end(&mut self, _trials: &BTreeMap<TrialId, Trial>) {}
 }
 
 /// In-memory recorder used by tests and the analysis pipeline.
 #[derive(Default)]
 pub struct MemoryLogger {
+    /// Every (trial, result) pair observed, in arrival order.
     pub rows: Vec<(TrialId, ResultRow)>,
+    /// Trials that ended, in completion order.
     pub ended: Vec<TrialId>,
 }
 
 impl MemoryLogger {
+    /// An empty recorder.
     pub fn new() -> Self {
         Self::default()
     }

@@ -9,6 +9,7 @@ use crate::coordinator::trial::{config_str, ResultRow, Trial, TrialId, TrialStat
 
 use super::ResultLogger;
 
+/// Console status-table reporter, throttled by result count.
 pub struct ProgressReporter {
     /// Print every N results (0 = silent until the end).
     pub every: u64,
@@ -19,6 +20,7 @@ pub struct ProgressReporter {
 }
 
 impl ProgressReporter {
+    /// New reporter tracking `metric`, printing every `every` results.
     pub fn new(metric: &str, every: u64) -> Self {
         ProgressReporter { every, metric: metric.into(), seen: 0, table: BTreeMap::new() }
     }

@@ -62,6 +62,8 @@ COMMANDS
              --iters N          max iterations per trial (default 81)
              --nodes N          cluster nodes (default 4)
              --cpus-per-node F  (default 8)
+             --exec sim|threads|pool  executor (default per workload)
+             --workers N        pool worker threads (default 4)
              --metric NAME --mode min|max
              --log-dir DIR      write JSONL logs
              --seed N
@@ -119,6 +121,20 @@ fn scheduler_kind(name: &str, iters: u64, space: &SearchSpace) -> SchedulerKind 
         },
         other => {
             eprintln!("unknown scheduler {other:?}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// `--exec`/`--workers` override of a workload's default executor.
+fn exec_override(flags: &Flags, default: ExecMode) -> ExecMode {
+    match flags.0.get("exec").map(|s| s.as_str()) {
+        None => default,
+        Some("sim") => ExecMode::Sim,
+        Some("threads") => ExecMode::Threads,
+        Some("pool") => ExecMode::Pool { workers: flags.get_u64("workers", 4) as usize },
+        Some(other) => {
+            eprintln!("unknown executor {other:?} (expected sim|threads|pool)");
             std::process::exit(2);
         }
     }
@@ -205,6 +221,8 @@ fn cmd_run(flags: &Flags) {
 
     let sched = scheduler_kind(&flags.get("scheduler", "asha"), iters, &space);
     let search = search_kind(&flags.get("search", "random"));
+    let exec = exec_override(flags, exec);
+    let exec_label = exec.label();
     let opts = RunOptions {
         cluster: Cluster::uniform(nodes, Resources::cpu(cpus)),
         exec,
@@ -216,6 +234,7 @@ fn cmd_run(flags: &Flags) {
     let res = run_experiments(spec, space, sched, search, fac, opts);
     println!("\n== experiment complete ==");
     println!("scheduler            : {label}");
+    println!("executor             : {exec_label}");
     println!("trials               : {}", res.trials.len());
     println!(
         "completed/stopped/err: {}/{}/{}",
@@ -279,7 +298,7 @@ fn run_spec_file(path: &std::path::Path, flags: &Flags) {
     let (fac, exec) = workload_factory(&f.workload);
     let opts = RunOptions {
         cluster: f.cluster,
-        exec,
+        exec: exec_override(flags, exec),
         progress_every: flags.get_u64("progress-every", 200),
         log_dir: flags
             .0

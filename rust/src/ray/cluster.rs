@@ -9,24 +9,33 @@ use std::collections::BTreeMap;
 
 use super::resources::Resources;
 
+/// Index of a node within the cluster.
 pub type NodeId = u32;
+/// Handle for one granted resource lease.
 pub type LeaseId = u64;
 
+/// One machine: total capacity, what is still free, and who holds leases.
 #[derive(Clone, Debug)]
 pub struct Node {
+    /// This node's id (its index in the cluster).
     pub id: NodeId,
+    /// Full capacity.
     pub total: Resources,
+    /// Capacity not currently leased.
     pub available: Resources,
+    /// False once killed by fault injection (until restarted).
     pub alive: bool,
     /// Live leases placed on this node: lease -> demand.
     pub leases: BTreeMap<LeaseId, Resources>,
 }
 
 impl Node {
+    /// A fresh, alive node with `total` capacity.
     pub fn new(id: NodeId, total: Resources) -> Self {
         Node { id, available: total.clone(), total, alive: true, leases: BTreeMap::new() }
     }
 
+    /// Fraction of CPU capacity currently leased.
     pub fn utilization_cpu(&self) -> f64 {
         if self.total.cpu == 0.0 {
             0.0
@@ -36,13 +45,16 @@ impl Node {
     }
 }
 
+/// A set of nodes trials are placed onto.
 #[derive(Clone, Debug)]
 pub struct Cluster {
+    /// All nodes, indexed by `NodeId`.
     pub nodes: Vec<Node>,
     next_lease: LeaseId,
 }
 
 impl Cluster {
+    /// An empty cluster.
     pub fn new() -> Self {
         Cluster { nodes: Vec::new(), next_lease: 1 }
     }
@@ -56,12 +68,14 @@ impl Cluster {
         c
     }
 
+    /// Add a node with `total` capacity (autoscaling); returns its id.
     pub fn add_node(&mut self, total: Resources) -> NodeId {
         let id = self.nodes.len() as NodeId;
         self.nodes.push(Node::new(id, total));
         id
     }
 
+    /// Borrow a node by id.
     pub fn node(&self, id: NodeId) -> &Node {
         &self.nodes[id as usize]
     }
@@ -106,10 +120,12 @@ impl Cluster {
         }
     }
 
+    /// Iterator over nodes that are currently alive.
     pub fn alive_nodes(&self) -> impl Iterator<Item = &Node> {
         self.nodes.iter().filter(|n| n.alive)
     }
 
+    /// Sum of free capacity across alive nodes.
     pub fn total_available(&self) -> Resources {
         let mut r = Resources::default();
         for n in self.alive_nodes() {

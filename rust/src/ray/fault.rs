@@ -8,6 +8,7 @@ use crate::util::rng::Rng;
 
 use super::cluster::NodeId;
 
+/// What faults to inject, with what probability.
 #[derive(Clone, Debug)]
 pub struct FaultPlan {
     /// Probability a single trial step raises (process crash).
@@ -31,35 +32,44 @@ impl Default for FaultPlan {
 }
 
 impl FaultPlan {
+    /// No faults at all (the default).
     pub fn none() -> Self {
         Self::default()
     }
 
+    /// Step crashes with probability `p`, no node failures.
     pub fn flaky_steps(p: f64) -> Self {
         FaultPlan { step_failure_prob: p, ..Default::default() }
     }
 
+    /// Node failures with probability `p` per tick, no step crashes.
     pub fn flaky_nodes(p: f64) -> Self {
         FaultPlan { node_failure_prob: p, ..Default::default() }
     }
 
+    /// True when this plan injects nothing.
     pub fn is_none(&self) -> bool {
         self.step_failure_prob == 0.0 && self.node_failure_prob == 0.0
     }
 }
 
+/// Deterministic fault source driven by the library RNG.
 #[derive(Debug)]
 pub struct FaultInjector {
+    /// The plan being executed.
     pub plan: FaultPlan,
     rng: Rng,
     tick: u64,
     /// (node, tick at which to restart)
     pending_restarts: Vec<(NodeId, u64)>,
+    /// Step crashes injected so far.
     pub injected_step_failures: u64,
+    /// Node kills injected so far.
     pub injected_node_failures: u64,
 }
 
 impl FaultInjector {
+    /// New injector for `plan`, seeded for exact replay.
     pub fn new(plan: FaultPlan, seed: u64) -> Self {
         FaultInjector {
             plan,

@@ -9,20 +9,26 @@ use std::sync::Arc;
 
 use super::cluster::NodeId;
 
+/// Handle to one immutable stored object.
 pub type ObjectId = u64;
 
+/// In-process Ray-style object store with transfer accounting.
 #[derive(Debug, Default)]
 pub struct ObjectStore {
     next_id: ObjectId,
     objects: BTreeMap<ObjectId, Arc<Vec<u8>>>,
     /// Which nodes hold a local copy of each object.
     locations: BTreeMap<ObjectId, BTreeSet<NodeId>>,
+    /// Inter-node transfers performed.
     pub transfers: u64,
+    /// Bytes moved across nodes.
     pub transfer_bytes: u64,
+    /// Reads served from a local copy.
     pub local_hits: u64,
 }
 
 impl ObjectStore {
+    /// An empty store.
     pub fn new() -> Self {
         Self { next_id: 1, ..Default::default() }
     }
@@ -52,6 +58,7 @@ impl ObjectStore {
         Some(data)
     }
 
+    /// Is the object still stored?
     pub fn contains(&self, id: ObjectId) -> bool {
         self.objects.contains_key(&id)
     }
@@ -72,12 +79,15 @@ impl ObjectStore {
         }
     }
 
+    /// Number of stored objects.
     pub fn len(&self) -> usize {
         self.objects.len()
     }
+    /// True when nothing is stored.
     pub fn is_empty(&self) -> bool {
         self.objects.is_empty()
     }
+    /// Total payload bytes currently stored.
     pub fn total_bytes(&self) -> u64 {
         self.objects.values().map(|o| o.len() as u64).sum()
     }

@@ -13,17 +13,23 @@
 use super::cluster::{Cluster, LeaseId, NodeId};
 use super::resources::Resources;
 
+/// Placement outcome counters.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PlacementStats {
+    /// Requests satisfied on the origin node.
     pub local: u64,
+    /// Requests spilled to another node.
     pub spilled: u64,
+    /// Requests that found no capacity anywhere.
     pub failed: u64,
 }
 
 impl PlacementStats {
+    /// All placement attempts.
     pub fn total(&self) -> u64 {
         self.local + self.spilled + self.failed
     }
+    /// Fraction of successful placements that spilled.
     pub fn spill_fraction(&self) -> f64 {
         let placed = self.local + self.spilled;
         if placed == 0 {
@@ -34,20 +40,27 @@ impl PlacementStats {
     }
 }
 
+/// A successful placement: where, under which lease, and how.
 #[derive(Clone, Debug)]
 pub struct Placement {
+    /// Node the demand landed on.
     pub node: NodeId,
+    /// Lease granted by the cluster.
     pub lease: LeaseId,
+    /// True when the origin node was exhausted and the demand spilled.
     pub spilled: bool,
 }
 
+/// Local-first, spill-over placement (the paper's §5 property).
 #[derive(Clone, Debug, Default)]
 pub struct TwoLevelScheduler {
     cursor: usize,
+    /// Outcome counters (read by benches and result summaries).
     pub stats: PlacementStats,
 }
 
 impl TwoLevelScheduler {
+    /// A fresh scheduler with zeroed stats.
     pub fn new() -> Self {
         Self::default()
     }

@@ -10,22 +10,30 @@ use std::fmt;
 
 const EPS: f64 = 1e-9;
 
+/// A resource vector: CPU + GPU + named custom quantities, fractional
+/// amounts allowed. Used both as node capacity and as trial demand.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Resources {
+    /// CPU cores (fractional allowed).
     pub cpu: f64,
+    /// GPU devices (fractional allowed, as in Ray).
     pub gpu: f64,
+    /// Named custom resources (e.g. "tpu", "mem").
     pub custom: BTreeMap<String, f64>,
 }
 
 impl Resources {
+    /// CPU-only vector.
     pub fn cpu(cpu: f64) -> Self {
         Resources { cpu, ..Default::default() }
     }
 
+    /// CPU + GPU vector.
     pub fn cpu_gpu(cpu: f64, gpu: f64) -> Self {
         Resources { cpu, gpu, ..Default::default() }
     }
 
+    /// Builder-style custom resource entry.
     pub fn with_custom(mut self, key: &str, amount: f64) -> Self {
         self.custom.insert(key.to_string(), amount);
         self
@@ -54,6 +62,7 @@ impl Resources {
         }
     }
 
+    /// Return a demand to this capacity (inverse of `acquire`).
     pub fn release(&mut self, demand: &Resources) {
         self.cpu += demand.cpu;
         self.gpu += demand.gpu;
@@ -62,6 +71,7 @@ impl Resources {
         }
     }
 
+    /// All quantities zero (up to float tolerance).
     pub fn is_zero(&self) -> bool {
         self.cpu.abs() < EPS
             && self.gpu.abs() < EPS

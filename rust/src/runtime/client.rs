@@ -18,6 +18,7 @@ use super::manifest::{Manifest, ModelManifest};
 
 /// One compiled model variant: train + init executables.
 pub struct LoadedModel {
+    /// The variant's manifest entry (shapes, metric names, metadata).
     pub manifest: ModelManifest,
     train: xla::PjRtLoadedExecutable,
     init: xla::PjRtLoadedExecutable,
@@ -25,7 +26,9 @@ pub struct LoadedModel {
 
 /// Output of one fused train step.
 pub struct StepResult {
+    /// Updated training state (params + velocities).
     pub state: Vec<xla::Literal>,
+    /// Scalar training loss of the step.
     pub loss: f64,
     /// Extra metrics in manifest order (after "loss").
     pub metrics: Vec<f64>,
@@ -172,9 +175,10 @@ fn clone_literal(l: &xla::Literal) -> xla::Literal {
     }
 }
 
-/// The single-threaded PJRT runtime.
+/// The single-threaded PJRT runtime (not `Send`; see the service).
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
+    /// The artifact manifest this runtime serves models from.
     pub manifest: Manifest,
     models: BTreeMap<String, LoadedModel>,
 }
@@ -189,6 +193,7 @@ impl PjrtRuntime {
         Ok(PjrtRuntime { client, manifest, models: BTreeMap::new() })
     }
 
+    /// Name of the backing PJRT platform ("cpu", or "stub" offline).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -211,6 +216,7 @@ impl PjrtRuntime {
         Ok(&self.models[name])
     }
 
+    /// Names of the variants compiled so far.
     pub fn compiled_variants(&self) -> Vec<&str> {
         self.models.keys().map(|s| s.as_str()).collect()
     }

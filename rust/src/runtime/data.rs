@@ -14,12 +14,16 @@ use crate::util::rng::Rng;
 pub struct MlpBatchGen {
     rng: Rng,
     teacher: Vec<f32>, // in_dim x classes, fixed across all trials
+    /// Input feature dimension.
     pub in_dim: usize,
+    /// Number of label classes.
     pub classes: usize,
+    /// Rows per batch.
     pub batch: usize,
 }
 
 impl MlpBatchGen {
+    /// New generator; `seed` controls the data stream, not the teacher.
     pub fn new(batch: usize, in_dim: usize, classes: usize, seed: u64) -> Self {
         // Teacher is shared (seeded independently of the trial) so every
         // trial optimizes the same task.
@@ -59,13 +63,16 @@ impl MlpBatchGen {
 /// Token-sequence batches for the transformer-LM variants.
 pub struct LmBatchGen {
     rng: Rng,
+    /// Rows per batch.
     pub batch: usize,
     /// Tokens per row = seq + 1 (input + shifted target).
     pub row_len: usize,
+    /// Vocabulary size.
     pub vocab: i32,
 }
 
 impl LmBatchGen {
+    /// New generator over a `vocab`-token affine chain.
     pub fn new(batch: usize, row_len: usize, vocab: i32, seed: u64) -> Self {
         LmBatchGen { rng: Rng::new(seed), batch, row_len, vocab }
     }

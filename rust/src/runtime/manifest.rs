@@ -11,49 +11,67 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::util::json::{parse, Json};
 
+/// Shape of one state array (a parameter or velocity tensor).
 #[derive(Clone, Debug)]
 pub struct ArraySpec {
+    /// Array name from the python exporter.
     pub name: String,
+    /// Dimension extents.
     pub shape: Vec<usize>,
 }
 
 impl ArraySpec {
+    /// Element count (scalars count as 1).
     pub fn elements(&self) -> usize {
         self.shape.iter().product::<usize>().max(1)
     }
 }
 
+/// Shape + dtype of one batch input to the train executable.
 #[derive(Clone, Debug)]
 pub struct InputSpec {
+    /// Input name from the python exporter.
     pub name: String,
+    /// Dimension extents.
     pub shape: Vec<usize>,
     /// "f32" or "i32".
     pub dtype: String,
 }
 
 impl InputSpec {
+    /// Element count (scalars count as 1).
     pub fn elements(&self) -> usize {
         self.shape.iter().product::<usize>().max(1)
     }
 }
 
+/// Everything the runtime needs to know about one compiled variant.
 #[derive(Clone, Debug)]
 pub struct ModelManifest {
+    /// Variant name (e.g. "mlp_relu", "tlm_gelu").
     pub name: String,
+    /// HLO text file of the fused train step.
     pub train_hlo: String,
+    /// HLO text file of the state initializer.
     pub init_hlo: String,
     /// Parameter arrays; the executable's state is params then
     /// velocities, each in this order with identical shapes.
     pub state: Vec<ArraySpec>,
+    /// Batch inputs in executable argument order.
     pub batch_inputs: Vec<InputSpec>,
+    /// Scalar hyperparameter names fed each step (e.g. lr, momentum).
     pub scalars: Vec<String>,
     /// Output metric names; `loss` first by convention.
     pub metrics: Vec<String>,
+    /// Total trainable parameters.
     pub param_count: u64,
     /// "mlp" | "transformer_lm".
     pub kind: String,
+    /// Activation the variant was compiled with.
     pub activation: String,
+    /// Batch size baked into the executable.
     pub batch: usize,
+    /// Raw `meta` object from the manifest (vocab size, etc.).
     pub meta: Json,
 }
 
@@ -74,9 +92,12 @@ impl ModelManifest {
     }
 }
 
+/// The full artifact manifest: directory + per-variant entries.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// Artifacts directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Model variants by name.
     pub models: BTreeMap<String, ModelManifest>,
 }
 
@@ -89,6 +110,7 @@ fn arr_usize(j: &Json) -> Result<Vec<usize>> {
 }
 
 impl Manifest {
+    /// Parse `<dir>/manifest.json` written by `python/compile/aot.py`.
     pub fn load(dir: &Path) -> Result<Self> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -166,6 +188,7 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), models })
     }
 
+    /// Look up a variant by name, with a helpful error listing options.
     pub fn model(&self, name: &str) -> Result<&ModelManifest> {
         self.models
             .get(name)

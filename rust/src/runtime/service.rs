@@ -17,6 +17,7 @@ use anyhow::{anyhow, Result};
 use super::client::PjrtRuntime;
 use super::data::{LmBatchGen, MlpBatchGen};
 
+/// Identifier of one training session inside the service.
 pub type SessionId = u64;
 
 enum Request {
@@ -77,6 +78,7 @@ impl PjrtService {
         Ok(PjrtService { tx })
     }
 
+    /// Create a training session for a model variant.
     pub fn open(&self, session: SessionId, model: &str, seed: u64) -> Result<()> {
         let (reply, rx) = mpsc::channel();
         self.tx
@@ -85,6 +87,7 @@ impl PjrtService {
         rx.recv().map_err(|_| anyhow!("service gone"))?
     }
 
+    /// Run `n` fused train steps; returns (mean loss, mean extra metrics).
     pub fn step(&self, session: SessionId, n: u32, lr: f32, momentum: f32) -> Result<(f64, Vec<f64>)> {
         let (reply, rx) = mpsc::channel();
         self.tx
@@ -93,6 +96,7 @@ impl PjrtService {
         rx.recv().map_err(|_| anyhow!("service gone"))?
     }
 
+    /// Serialize the session's full training state to a blob.
     pub fn save(&self, session: SessionId) -> Result<Vec<u8>> {
         let (reply, rx) = mpsc::channel();
         self.tx
@@ -101,6 +105,7 @@ impl PjrtService {
         rx.recv().map_err(|_| anyhow!("service gone"))?
     }
 
+    /// Restore a session from a `save` blob (possibly another trial's).
     pub fn restore(&self, session: SessionId, blob: Vec<u8>) -> Result<()> {
         let (reply, rx) = mpsc::channel();
         self.tx
@@ -109,10 +114,12 @@ impl PjrtService {
         rx.recv().map_err(|_| anyhow!("service gone"))?
     }
 
+    /// Drop a session's state.
     pub fn close(&self, session: SessionId) {
         let _ = self.tx.send(Request::Close { session });
     }
 
+    /// Stop the service thread (idempotent; in-flight requests drain).
     pub fn shutdown(&self) {
         let _ = self.tx.send(Request::Shutdown);
     }

@@ -84,6 +84,7 @@ impl TuneHandle {
             .unwrap_or(default)
     }
 
+    /// String hyperparameter lookup with a default.
     pub fn param_str(&self, key: &str, default: &str) -> String {
         self.latest_config()
             .get(key)
@@ -148,6 +149,8 @@ pub struct FunctionTrainable {
 }
 
 impl FunctionTrainable {
+    /// Start the user function on its own thread, parked at its first
+    /// `report` until the executor steps it.
     pub fn spawn(config: Config, seed: u64, f: TrainFn) -> Self {
         let mut t = FunctionTrainable {
             f,

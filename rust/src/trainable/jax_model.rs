@@ -16,6 +16,8 @@ use super::{StepOutput, Trainable};
 
 static NEXT_SESSION: AtomicU64 = AtomicU64::new(1);
 
+/// A trainable whose compute is an AOT-compiled JAX model behind the
+/// PJRT service; only metrics and opaque state blobs cross the channel.
 pub struct JaxTrainable {
     svc: PjrtService,
     session: SessionId,
@@ -41,6 +43,7 @@ pub fn variant_for(config: &Config, default_family: &str) -> String {
 }
 
 impl JaxTrainable {
+    /// Open a session for the variant `config` resolves to.
     pub fn new(
         svc: PjrtService,
         config: &Config,

@@ -28,6 +28,7 @@ pub mod synthetic;
 /// Metrics from one training iteration.
 #[derive(Clone, Debug, Default)]
 pub struct StepOutput {
+    /// Metric name -> value for this iteration.
     pub metrics: BTreeMap<String, f64>,
     /// The trainable itself declares it is finished (e.g. the
     /// cooperative function returned).
@@ -35,6 +36,7 @@ pub struct StepOutput {
 }
 
 impl StepOutput {
+    /// Build a (not-done) output from metric pairs.
     pub fn of(pairs: &[(&str, f64)]) -> Self {
         StepOutput {
             metrics: pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect(),

@@ -34,8 +34,10 @@ pub struct CurveTrainable {
 }
 
 impl CurveTrainable {
+    /// The learning rate with the highest quality ceiling.
     pub const OPT_LR: f64 = 0.02;
 
+    /// Build from a config (`lr`, `momentum`) and a trial seed.
     pub fn new(config: &Config, seed: u64) -> Self {
         let lr = cfg_f64(config, "lr", 0.01);
         let momentum = cfg_f64(config, "momentum", 0.9);
@@ -50,6 +52,7 @@ impl CurveTrainable {
         CurveTrainable { t: 0, quality, tau, noise: 0.01, cost, rng }
     }
 
+    /// The accuracy ceiling this config converges to.
     pub fn asymptote(&self) -> f64 {
         self.quality
     }
@@ -106,6 +109,7 @@ pub struct NonStationaryTrainable {
 }
 
 impl NonStationaryTrainable {
+    /// Build from a config (`lr`, `half_life`) and a trial seed.
     pub fn new(config: &Config, seed: u64) -> Self {
         NonStationaryTrainable {
             t: 0,
@@ -116,6 +120,7 @@ impl NonStationaryTrainable {
         }
     }
 
+    /// The moving optimum `lr*(t)` the objective rewards tracking.
     pub fn optimal_lr_at(t: u64, half_life: f64) -> f64 {
         0.1 * 10f64.powf(-(t as f64) / half_life)
     }
@@ -169,6 +174,7 @@ pub struct ConstTrainable {
 }
 
 impl ConstTrainable {
+    /// Build from a config (`step_cost`) — the seed is unused.
     pub fn new(config: &Config, _seed: u64) -> Self {
         ConstTrainable { t: 0, cost: cfg_f64(config, "step_cost", 1.0) }
     }

@@ -8,20 +8,29 @@
 
 use std::time::Instant;
 
+/// Timing summary of one benchmark case.
 #[derive(Clone, Debug)]
 pub struct BenchStats {
+    /// Case label.
     pub name: String,
+    /// Measured iterations.
     pub iters: usize,
+    /// Fastest iteration, nanoseconds.
     pub min_ns: f64,
+    /// Median iteration, nanoseconds.
     pub median_ns: f64,
+    /// Mean iteration, nanoseconds.
     pub mean_ns: f64,
+    /// 95th-percentile iteration, nanoseconds.
     pub p95_ns: f64,
 }
 
 impl BenchStats {
+    /// Median per-iteration cost in milliseconds.
     pub fn per_iter_ms(&self) -> f64 {
         self.median_ns / 1e6
     }
+    /// Print this row (same columns as [`header`]).
     pub fn report(&self) {
         println!(
             "{:<44} {:>10} {:>12} {:>12} {:>12}   ({} iters)",
@@ -35,6 +44,7 @@ impl BenchStats {
     }
 }
 
+/// Print the column header matching [`BenchStats::report`].
 pub fn header() {
     println!(
         "{:<44} {:>10} {:>12} {:>12} {:>12}",

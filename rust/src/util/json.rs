@@ -9,44 +9,57 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// A JSON value; numbers are f64, objects are ordered maps.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// Any number (held as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (ordered).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Number view.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// Number view truncated to u64.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().map(|f| f as u64)
     }
+    /// String view.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// Boolean view.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// Array view.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// Object view.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -62,10 +75,13 @@ impl Json {
         Some(cur)
     }
 
+    /// Build an object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Serialize to compact JSON text.
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);
@@ -132,6 +148,7 @@ fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
 }
 
+/// Parse a complete JSON document (trailing data is an error).
 pub fn parse(input: &str) -> Result<Json, String> {
     let mut p = Parser {
         bytes: input.as_bytes(),

@@ -40,9 +40,13 @@ pub fn algorithm_loc(source: &str) -> usize {
 /// One row of the regenerated Table 1.
 #[derive(Debug, Clone)]
 pub struct LocRow {
+    /// Algorithm name as printed in the paper.
     pub algorithm: &'static str,
+    /// LoC the paper reports for its python implementation.
     pub paper_loc: usize,
+    /// Our source files implementing the algorithm.
     pub files: Vec<&'static str>,
+    /// Our LoC counted the paper's way.
     pub our_loc: usize,
 }
 
@@ -73,6 +77,7 @@ pub fn table1(repo_root: &std::path::Path) -> Vec<LocRow> {
         .collect()
 }
 
+/// Print Table 1 (paper LoC vs ours) to stdout.
 pub fn print_table1(rows: &[LocRow]) {
     println!("Table 1 — model selection algorithms: lines of code");
     println!("{:<28} {:>10} {:>10}", "Algorithm", "paper", "ours");

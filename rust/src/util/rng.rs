@@ -7,12 +7,14 @@
 //! on. No external `rand` crate in the offline dep set; SplitMix64 is
 //! tiny, fast and passes BigCrush.
 
+/// SplitMix64 PRNG with distribution helpers.
 #[derive(Clone, Debug)]
 pub struct Rng {
     state: u64,
 }
 
 impl Rng {
+    /// Seeded generator (same seed, same stream).
     pub fn new(seed: u64) -> Self {
         Rng {
             // Avoid the all-zero fixed point and decorrelate small seeds.
@@ -25,6 +27,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ salt.wrapping_mul(0xBF58476D1CE4E5B9))
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;
@@ -61,6 +64,7 @@ impl Rng {
         (self.next_u64() % n as u64) as usize
     }
 
+    /// Biased coin flip: true with probability `p`.
     pub fn bool(&mut self, p: f64) -> bool {
         self.f64() < p
     }
@@ -72,6 +76,7 @@ impl Rng {
         (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
     }
 
+    /// Normal draw with mean `mu` and standard deviation `sigma`.
     pub fn normal_scaled(&mut self, mu: f64, sigma: f64) -> f64 {
         mu + sigma * self.normal()
     }
@@ -84,6 +89,7 @@ impl Rng {
         }
     }
 
+    /// Uniformly pick one element of a non-empty slice.
     pub fn choose<'a, T>(&mut self, v: &'a [T]) -> &'a T {
         &v[self.index(v.len())]
     }

@@ -3,7 +3,8 @@
 
 use tune::coordinator::spec::SpaceBuilder;
 use tune::coordinator::{
-    run_experiments, ExperimentSpec, Mode, RunOptions, SchedulerKind, SearchKind, TrialStatus,
+    run_experiments, ExecMode, ExperimentSpec, Mode, RunOptions, SchedulerKind, SearchKind,
+    TrialStatus,
 };
 use tune::ray::{Cluster, Resources};
 use tune::trainable::factory;
@@ -171,6 +172,70 @@ fn tpe_beats_random_on_smooth_objective() {
         }
     }
     assert!(tpe_wins >= 2, "TPE won only {tpe_wins}/3 seeds");
+}
+
+/// The bounded pool executor: a 64-trial ASHA experiment on 4 workers.
+/// Every trial is live concurrently (the cluster has capacity for all of
+/// them) but only 4 OS threads ever run trainables — M >> N. The run
+/// must terminate cleanly with ASHA culling bad trials, checkpoints
+/// flowing through the pool's synchronous save path.
+#[test]
+fn asha_on_pool_executor_64_trials_4_workers() {
+    let mut spec = curve_spec("asha-pool", 64, 27, 9);
+    spec.checkpoint_freq = 5;
+    let res = run_experiments(
+        spec,
+        curve_space(),
+        SchedulerKind::Asha { grace_period: 1, reduction_factor: 3.0, max_t: 27 },
+        SearchKind::Random,
+        factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+        RunOptions {
+            // 128 cpus: all 64 trials admitted at once; the pool's 4
+            // workers are the only execution threads.
+            cluster: Cluster::uniform(8, Resources::cpu(16.0)),
+            exec: ExecMode::Pool { workers: 4 },
+            ..Default::default()
+        },
+    );
+    assert_eq!(res.trials.len(), 64);
+    for t in res.trials.values() {
+        assert!(t.status.is_terminal(), "trial {} stuck in {:?}", t.id, t.status);
+    }
+    assert!(res.stats.stopped_early > 0, "ASHA stopped nothing on the pool");
+    assert!(res.stats.checkpoints > 0, "no checkpoint flowed through the pool");
+    assert!(res.best_metric().unwrap() > 0.5, "best {:?}", res.best_metric());
+    // Wall-clock executor: duration is real seconds, not virtual budget.
+    assert!(res.duration_s > 0.0);
+}
+
+/// Pool and thread executors agree on experiment outcomes (same trials,
+/// same per-trial iteration counts) for a deterministic FIFO workload.
+#[test]
+fn pool_matches_threads_on_fifo_outcomes() {
+    let run = |exec: ExecMode| {
+        let spec = curve_spec("pool-parity", 12, 10, 4);
+        run_experiments(
+            spec,
+            curve_space(),
+            SchedulerKind::Fifo,
+            SearchKind::Random,
+            factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+            RunOptions {
+                cluster: Cluster::uniform(2, Resources::cpu(8.0)),
+                exec,
+                ..Default::default()
+            },
+        )
+    };
+    let pool = run(ExecMode::Pool { workers: 3 });
+    let threads = run(ExecMode::Threads);
+    assert_eq!(pool.trials.len(), threads.trials.len());
+    assert_eq!(pool.count(TrialStatus::Completed), threads.count(TrialStatus::Completed));
+    for (a, b) in pool.trials.values().zip(threads.trials.values()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.iteration, b.iteration);
+        assert_eq!(a.config, b.config);
+    }
 }
 
 /// Determinism: the same seed must produce the identical experiment.

@@ -1,0 +1,215 @@
+//! Minimal, offline, API-compatible subset of the `anyhow` crate.
+//!
+//! The container this repository builds in has no network access to
+//! crates.io, so the handful of `anyhow` features the codebase uses are
+//! reimplemented here behind the same names:
+//!
+//! * [`Error`] — an opaque error value holding a chain of context
+//!   messages. `{}` prints the outermost message; `{:#}` prints the full
+//!   chain separated by `": "` (matching upstream's alternate formatting).
+//! * [`Result`] — `Result<T, Error>` with a defaulted error type.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the construction macros.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`, including results that already carry an [`Error`].
+//! * `?` conversion from any `std::error::Error + Send + Sync + 'static`.
+
+use std::fmt;
+
+/// An error chain: `messages[0]` is the outermost (most recent) context,
+/// the last element is the root cause.
+pub struct Error {
+    messages: Vec<String>,
+}
+
+impl Error {
+    /// Construct an error from a printable root cause.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { messages: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.messages.insert(0, context.to_string());
+        self
+    }
+
+    /// The root cause message (innermost entry of the chain).
+    pub fn root_cause(&self) -> &str {
+        self.messages.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, outermost first — "ctx: ctx: cause".
+            write!(f, "{}", self.messages.join(": "))
+        } else {
+            write!(f, "{}", self.messages.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Mirrors upstream's Debug: message plus a caused-by list.
+        write!(f, "{}", self.messages.first().map(String::as_str).unwrap_or(""))?;
+        if self.messages.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for m in &self.messages[1..] {
+                write!(f, "\n    {m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`, exactly as
+// upstream: that keeps this blanket conversion coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Sealed helper: anything `Context` can treat as an error value.
+pub trait IntoError: private::Sealed {
+    /// Convert into an [`Error`] chain.
+    fn into_error(self) -> Error;
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+    fn into_error(self) -> Error {
+        Error::msg(self)
+    }
+}
+
+impl IntoError for Error {
+    fn into_error(self) -> Error {
+        self
+    }
+}
+
+mod private {
+    pub trait Sealed {}
+    impl<E: std::error::Error + Send + Sync + 'static> Sealed for E {}
+    impl Sealed for super::Error {}
+}
+
+/// Extension trait adding context to `Result` and `Option` values.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_and_alternate_show_chain() {
+        let e: Error = Err::<(), _>(io_err()).with_context(|| "reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: missing file");
+        assert_eq!(e.root_cause(), "missing file");
+    }
+
+    #[test]
+    fn context_stacks_on_existing_error() {
+        let inner: Result<()> = Err(anyhow!("cause"));
+        let outer = inner.context("outer").unwrap_err();
+        assert_eq!(format!("{outer:#}"), "outer: cause");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(format!("{}", v.context("nothing there").unwrap_err()), "nothing there");
+        assert_eq!(Some(3u32).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<String> {
+            let s = std::str::from_utf8(&[0xff])?;
+            Ok(s.to_string())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x > 10 {
+                bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "negative: -1");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "too big: 11");
+    }
+}

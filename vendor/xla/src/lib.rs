@@ -1,0 +1,300 @@
+//! Offline stub of the `xla` crate (the PJRT bindings the runtime layer
+//! compiles against).
+//!
+//! The build container has no network access and no XLA shared library,
+//! so this crate provides the exact API surface `tune::runtime` uses:
+//!
+//! * a **functional** [`Literal`] host-data model (scalars, rank-N f32/i32
+//!   arrays, tuples) — construction, reshape, readback all work, so state
+//!   serialization code paths are fully testable without a backend;
+//! * **stubbed execution**: [`PjRtClient::cpu`] and
+//!   [`HloModuleProto::from_text_file`] return a descriptive [`Error`].
+//!   Callers that gate on artifacts being present (all of them in this
+//!   repository) skip gracefully.
+//!
+//! Swapping in a real backend means replacing this path dependency with
+//! the real `xla` crate; no call sites change.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type for all stub operations. Implements `std::error::Error` so
+/// `?` converts it into `anyhow::Error` at call sites.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias used throughout the stub.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error(msg.into()))
+}
+
+const NO_BACKEND: &str = "offline stub has no XLA backend; link the real xla crate (and run `make artifacts`) to execute HLO";
+
+/// Element types the runtime layer exchanges with executables.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    /// 32-bit IEEE float.
+    F32,
+    /// 32-bit signed integer.
+    S32,
+}
+
+/// Shape of an array literal: element type + dimensions.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    /// Dimension extents, outermost first.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Element type of the array.
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Data {
+    F32(Vec<f32>),
+    S32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side literal value: a typed array or a tuple of literals.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+/// Rust scalar types that map onto XLA element types.
+pub trait NativeType: Copy {
+    /// The corresponding XLA element type.
+    const TY: ElementType;
+    /// Wrap a host vector as literal storage.
+    fn wrap(v: Vec<Self>) -> Data;
+    /// Extract a host vector from literal storage.
+    fn unwrap(d: &Data) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap(d: &Data) -> Result<Vec<Self>> {
+        match d {
+            Data::F32(v) => Ok(v.clone()),
+            _ => err("literal is not f32"),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::S32(v)
+    }
+    fn unwrap(d: &Data) -> Result<Vec<Self>> {
+        match d {
+            Data::S32(v) => Ok(v.clone()),
+            _ => err("literal is not i32"),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-0 literal from one scalar.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { data: T::wrap(vec![v]), dims: Vec::new() }
+    }
+
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { data: T::wrap(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    /// Tuple literal from parts.
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { data: Data::Tuple(parts), dims: Vec::new() }
+    }
+
+    /// Reinterpret the array with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        let have = match &self.data {
+            Data::F32(v) => v.len() as i64,
+            Data::S32(v) => v.len() as i64,
+            Data::Tuple(_) => return err("cannot reshape a tuple literal"),
+        };
+        if n != have {
+            return err(format!("reshape {dims:?} wants {n} elements, literal has {have}"));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(parts) => Ok(parts),
+            _ => err("literal is not a tuple"),
+        }
+    }
+
+    /// First element of an array literal, converted to `T`.
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::unwrap(&self.data)?.first().copied().map_or_else(|| err("empty literal"), Ok)
+    }
+
+    /// Full host readback of an array literal.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+    }
+
+    /// Shape of an array literal (error on tuples).
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = self.ty()?;
+        Ok(ArrayShape { ty, dims: self.dims.clone() })
+    }
+
+    /// Element type of an array literal (error on tuples).
+    pub fn ty(&self) -> Result<ElementType> {
+        match &self.data {
+            Data::F32(_) => Ok(ElementType::F32),
+            Data::S32(_) => Ok(ElementType::S32),
+            Data::Tuple(_) => err("tuple literal has no element type"),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: never constructible offline).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file. Always errors in the offline stub.
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        err(NO_BACKEND)
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device-resident buffer handle returned by execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal. Unreachable offline (no
+    /// execution can produce a buffer), kept for API parity.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        err(NO_BACKEND)
+    }
+}
+
+/// A compiled executable. Never constructible offline.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments. Unreachable offline.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        err(NO_BACKEND)
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU client. Always errors in the offline stub, with a
+    /// message explaining how to get a real backend.
+    pub fn cpu() -> Result<PjRtClient> {
+        err(NO_BACKEND)
+    }
+
+    /// Platform name of the backing runtime.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation. Always errors in the offline stub.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        err(NO_BACKEND)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(l.ty().unwrap(), ElementType::F32);
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn literal_scalar_and_tuple() {
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.get_first_element::<i32>().unwrap(), 7);
+        let t = Literal::tuple(vec![s, Literal::scalar(1.5f32)]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].get_first_element::<f32>().unwrap(), 1.5);
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        assert!(Literal::vec1(&[1.0f32, 2.0]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn type_mismatch_errors() {
+        let l = Literal::vec1(&[1i32]);
+        assert!(l.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn backend_entry_points_error_clearly() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("offline stub"));
+        assert!(HloModuleProto::from_text_file("/tmp/x.hlo").is_err());
+    }
+}
