@@ -67,6 +67,7 @@ fn main() {
             exec: ExecMode::Threads,
             progress_every: 50,
             log_dir: Some("tune_logs/e2e_transformer".into()),
+            ..Default::default()
         },
     );
     svc.shutdown();

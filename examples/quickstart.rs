@@ -63,6 +63,7 @@ fn main() {
             exec,
             progress_every: 10,
             log_dir: Some("tune_logs/quickstart".into()),
+            ..Default::default()
         },
     );
 

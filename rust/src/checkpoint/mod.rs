@@ -3,10 +3,27 @@
 //! schedulers "save and clone promising parameters (via checkpoint and
 //! restore)". Checkpoints are opaque byte blobs produced by
 //! `Trainable::save`; the store keeps them in memory and can optionally
-//! spill every write to disk for post-mortem restore.
+//! spill every write to disk for post-mortem restore — and, since the
+//! durability work, for crash-safe experiment resume: the store's
+//! metadata is serialized into the experiment snapshot and the blobs
+//! are re-read from the spill directory on restart.
+//!
+//! # Example
+//!
+//! ```
+//! use tune::checkpoint::CheckpointStore;
+//!
+//! let mut store = CheckpointStore::new(); // keeps the 2 newest per trial
+//! let id = store.save(7, 10, vec![1, 2, 3]);
+//! assert_eq!(store.get(id), Some(&[1u8, 2, 3][..]));
+//! assert_eq!(store.latest_for(7), Some(id));
+//! assert_eq!(store.meta(id).unwrap().iteration, 10);
+//! ```
 
 use std::collections::BTreeMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
 
 /// Handle to one stored checkpoint.
 pub type CheckpointId = u64;
@@ -20,6 +37,11 @@ pub struct CheckpointMeta {
     pub trial: u64,
     /// Training iteration at snapshot time.
     pub iteration: u64,
+    /// Training seconds the trial had consumed at snapshot time (0.0
+    /// when saved via [`CheckpointStore::save`]; the runner uses
+    /// [`CheckpointStore::save_timed`] so crash-resume rollback restores
+    /// time accounting exactly, not just the iteration count).
+    pub time_total_s: f64,
     /// Blob size in bytes.
     pub bytes: usize,
 }
@@ -56,13 +78,26 @@ impl CheckpointStore {
 
     /// Store a blob for `trial` at `iteration`; returns its id.
     pub fn save(&mut self, trial: u64, iteration: u64, blob: Vec<u8>) -> CheckpointId {
+        self.save_timed(trial, iteration, 0.0, blob)
+    }
+
+    /// [`CheckpointStore::save`] plus the trial's accumulated training
+    /// seconds, so a crash-resume rollback can restore time accounting
+    /// exactly alongside the iteration count.
+    pub fn save_timed(
+        &mut self,
+        trial: u64,
+        iteration: u64,
+        time_total_s: f64,
+        blob: Vec<u8>,
+    ) -> CheckpointId {
         let id = self.next_id;
         self.next_id += 1;
+        let meta = CheckpointMeta { id, trial, iteration, time_total_s, bytes: blob.len() };
         if let Some(dir) = &self.disk_dir {
-            let path = dir.join(format!("trial{trial}_iter{iteration}_ckpt{id}.bin"));
-            std::fs::write(path, &blob).ok();
+            std::fs::write(dir.join(Self::spill_name(&meta)), &blob).ok();
         }
-        self.meta.insert(id, CheckpointMeta { id, trial, iteration, bytes: blob.len() });
+        self.meta.insert(id, meta);
         self.data.insert(id, blob);
         self.latest.insert(trial, id);
         self.saved += 1;
@@ -89,7 +124,11 @@ impl CheckpointStore {
         self.latest.get(&trial).copied()
     }
 
-    /// Drop all but the newest `keep_per_trial` checkpoints of `trial`.
+    /// Drop all but the newest `keep_per_trial` checkpoints of `trial`,
+    /// including their spill files — otherwise a long durable run grows
+    /// `checkpoints/` without bound. (Snapshots only ever reference
+    /// still-live metadata, so deleting evicted files never breaks
+    /// resume.)
     fn gc(&mut self, trial: u64) {
         if self.keep_per_trial == 0 {
             return;
@@ -104,8 +143,90 @@ impl CheckpointStore {
         while ids.len() > self.keep_per_trial {
             let old = ids.remove(0);
             self.data.remove(&old);
-            self.meta.remove(&old);
+            if let Some(meta) = self.meta.remove(&old) {
+                if let Some(dir) = &self.disk_dir {
+                    std::fs::remove_file(dir.join(Self::spill_name(&meta))).ok();
+                }
+            }
         }
+    }
+
+    /// File name a checkpoint spills to (stable across restarts).
+    fn spill_name(meta: &CheckpointMeta) -> String {
+        format!("trial{}_iter{}_ckpt{}.bin", meta.trial, meta.iteration, meta.id)
+    }
+
+    /// Serialize the store's metadata for the experiment snapshot. Blobs
+    /// are not embedded — they already live in the spill directory.
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("next_id", Json::Num(self.next_id as f64)),
+            ("saved", Json::Num(self.saved as f64)),
+            ("restored", Json::Num(self.restored as f64)),
+            (
+                "metas",
+                Json::Arr(
+                    self.meta
+                        .values()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("id", Json::Num(m.id as f64)),
+                                ("trial", Json::Num(m.trial as f64)),
+                                ("iteration", Json::Num(m.iteration as f64)),
+                                ("time", Json::Num(m.time_total_s)),
+                                ("bytes", Json::Num(m.bytes as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Rebuild a store from a [`CheckpointStore::snapshot`] manifest,
+    /// reading the blobs back from the spill directory `dir`. Metadata
+    /// entries whose blob file is missing or truncated are dropped
+    /// (callers fall back to restart-from-scratch for those trials).
+    /// The rebuilt store keeps spilling to `dir`.
+    pub fn restore_from(snap: &Json, dir: &Path) -> Result<Self, String> {
+        let mut store = CheckpointStore::new().with_disk(dir.to_path_buf());
+        store.next_id = snap
+            .get("next_id")
+            .and_then(|v| v.as_u64())
+            .ok_or("checkpoint snapshot: missing next_id")?;
+        store.saved = snap.get("saved").and_then(|v| v.as_u64()).unwrap_or(0);
+        store.restored = snap.get("restored").and_then(|v| v.as_u64()).unwrap_or(0);
+        let metas = snap
+            .get("metas")
+            .and_then(|m| m.as_arr())
+            .ok_or("checkpoint snapshot: missing metas")?;
+        for m in metas {
+            let (Some(id), Some(trial), Some(iteration), Some(bytes)) = (
+                m.get("id").and_then(|v| v.as_u64()),
+                m.get("trial").and_then(|v| v.as_u64()),
+                m.get("iteration").and_then(|v| v.as_u64()),
+                m.get("bytes").and_then(|v| v.as_u64()),
+            ) else {
+                return Err("checkpoint snapshot: malformed meta entry".into());
+            };
+            let time_total_s = m.get("time").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let meta =
+                CheckpointMeta { id, trial, iteration, time_total_s, bytes: bytes as usize };
+            let Ok(blob) = std::fs::read(dir.join(Self::spill_name(&meta))) else {
+                continue; // spill file lost: drop the entry
+            };
+            if blob.len() != meta.bytes {
+                continue; // truncated write: drop the entry
+            }
+            // `latest` is the max id per trial by construction (ids are
+            // monotone), so it rebuilds incrementally here.
+            if store.latest.get(&trial).map_or(true, |l| *l < id) {
+                store.latest.insert(trial, id);
+            }
+            store.data.insert(id, blob);
+            store.meta.insert(id, meta);
+        }
+        Ok(store)
     }
 
     /// Number of checkpoints currently stored.
@@ -155,6 +276,64 @@ mod tests {
             s.save(t, 1, vec![t as u8]);
         }
         assert_eq!(s.len(), 4);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip_through_disk() {
+        let dir = std::env::temp_dir().join(format!("tune_ckpt_resume_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut s = CheckpointStore::new().with_disk(dir.clone());
+        let a = s.save(1, 5, vec![1, 1]);
+        let b = s.save(1, 10, vec![2, 2]);
+        let c = s.save(3, 2, vec![3]);
+        let snap = s.snapshot();
+        let text = snap.to_string();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let mut r = CheckpointStore::restore_from(&parsed, &dir).unwrap();
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.get(a).unwrap(), &[1, 1]);
+        assert_eq!(r.get(b).unwrap(), &[2, 2]);
+        assert_eq!(r.latest_for(1), Some(b));
+        assert_eq!(r.latest_for(3), Some(c));
+        assert_eq!(r.meta(b).unwrap().iteration, 10);
+        // New saves continue the id sequence without collisions.
+        let d = r.save(1, 15, vec![4]);
+        assert!(d > c);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restore_drops_missing_and_truncated_blobs() {
+        let dir = std::env::temp_dir().join(format!("tune_ckpt_trunc_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut s = CheckpointStore::new().with_disk(dir.clone());
+        let a = s.save(1, 1, vec![9; 8]);
+        let b = s.save(2, 1, vec![8; 8]);
+        let snap = s.snapshot();
+        // Corrupt trial 1's file, delete trial 2's entirely.
+        std::fs::write(dir.join("trial1_iter1_ckpt1.bin"), [9; 3]).unwrap();
+        std::fs::remove_file(dir.join("trial2_iter1_ckpt2.bin")).unwrap();
+        let mut r = CheckpointStore::restore_from(&snap, &dir).unwrap();
+        assert!(r.get(a).is_none());
+        assert!(r.get(b).is_none());
+        assert_eq!(r.latest_for(1), None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gc_also_deletes_spill_files() {
+        let dir = std::env::temp_dir().join(format!("tune_ckpt_gc_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut s = CheckpointStore::new().with_disk(dir.clone()); // keep 2
+        for i in 1..=5u64 {
+            s.save_timed(1, i, i as f64, vec![i as u8]);
+        }
+        // Only the 2 newest survive, in memory AND on disk.
+        assert_eq!(s.len(), 2);
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 2);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

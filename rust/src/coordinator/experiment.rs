@@ -5,8 +5,10 @@
 use crate::logger::{JsonlLogger, ProgressReporter};
 use crate::ray::{Cluster, FaultPlan, Resources};
 use crate::trainable::TrainableFactory;
+use crate::util::json::Json;
 
 use super::executor::{Executor, PoolExecutor, SimExecutor, ThreadExecutor};
+use super::persist::{u64_from_json, u64_to_json, ExperimentDir, FORMAT_VERSION};
 use super::runner::{ExperimentResult, TrialRunner};
 use super::schedulers::{
     AshaScheduler, FifoScheduler, HyperBandScheduler, MedianStoppingRule, PbtScheduler,
@@ -147,6 +149,16 @@ impl SearchKind {
             SearchKind::Evolution => Box::new(EvolutionSearch::new(space, num_samples)),
         }
     }
+
+    /// Stable CLI/log label for the search algorithm.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SearchKind::Grid => "grid",
+            SearchKind::Random => "random",
+            SearchKind::Tpe => "tpe",
+            SearchKind::Evolution => "evolution",
+        }
+    }
 }
 
 /// Execution substrate selection.
@@ -186,8 +198,22 @@ pub struct RunOptions {
     pub exec: ExecMode,
     /// Print progress every N results (0 = quiet).
     pub progress_every: u64,
-    /// Write JSONL logs under this directory.
+    /// Write JSONL logs under this directory (without durability; see
+    /// `experiment_dir` for the crash-safe variant).
     pub log_dir: Option<std::path::PathBuf>,
+    /// Durable experiment directory: JSONL logs, spilled checkpoints,
+    /// a spec/options manifest and periodic atomic runner snapshots all
+    /// live here, making the experiment resumable after a crash.
+    pub experiment_dir: Option<std::path::PathBuf>,
+    /// Snapshot the runner state every N processed results when
+    /// `experiment_dir` is set (0 = only the final snapshot).
+    pub snapshot_every: u64,
+    /// Resume from `experiment_dir` instead of starting over: rebuild
+    /// the trial table, scheduler, search and checkpoint state from the
+    /// latest snapshot and continue to the same deterministic outcome an
+    /// uninterrupted run would have reached. Starts fresh (with a note)
+    /// when the directory holds no snapshot yet.
+    pub resume: bool,
 }
 
 impl Default for RunOptions {
@@ -197,8 +223,147 @@ impl Default for RunOptions {
             exec: ExecMode::Sim,
             progress_every: 0,
             log_dir: None,
+            experiment_dir: None,
+            snapshot_every: 50,
+            resume: false,
         }
     }
+}
+
+/// The spec + options manifest written into an experiment directory, so
+/// `--resume` can sanity-check that it is continuing the same run.
+fn manifest_json(
+    spec: &ExperimentSpec,
+    scheduler: &SchedulerKind,
+    search: &SearchKind,
+    exec: ExecMode,
+    snapshot_every: u64,
+) -> Json {
+    Json::obj(vec![
+        ("version", Json::Num(FORMAT_VERSION as f64)),
+        ("name", Json::Str(spec.name.clone())),
+        ("metric", Json::Str(spec.metric.clone())),
+        (
+            "mode",
+            Json::Str(if spec.mode == Mode::Max { "max" } else { "min" }.into()),
+        ),
+        ("num_samples", Json::Num(spec.num_samples as f64)),
+        ("max_iterations_per_trial", Json::Num(spec.max_iterations_per_trial as f64)),
+        ("seed", u64_to_json(spec.seed)),
+        ("scheduler", Json::Str(scheduler.label().into())),
+        ("search", Json::Str(search.label().into())),
+        ("exec", Json::Str(exec.label().into())),
+        ("snapshot_every", Json::Num(snapshot_every as f64)),
+    ])
+}
+
+/// Assemble the runner [`run_experiments`] drives — exposed so tests and
+/// tools can hold the runner itself (e.g. crash-injection via
+/// [`TrialRunner::run_to_crash`]). Honors `opts.experiment_dir` /
+/// `opts.resume` exactly like [`run_experiments`].
+pub fn build_runner(
+    spec: ExperimentSpec,
+    space: SearchSpace,
+    scheduler: SchedulerKind,
+    search: SearchKind,
+    factory: TrainableFactory,
+    opts: RunOptions,
+) -> TrialRunner {
+    let RunOptions {
+        cluster,
+        exec,
+        progress_every,
+        log_dir,
+        experiment_dir,
+        snapshot_every,
+        resume,
+    } = opts;
+    let executor: Box<dyn Executor> = match exec {
+        ExecMode::Sim => Box::new(SimExecutor::new(factory)),
+        ExecMode::Threads => Box::new(ThreadExecutor::new(factory)),
+        ExecMode::Pool { workers } => Box::new(PoolExecutor::new(factory, workers)),
+    };
+    let sched = scheduler.build(spec.seed);
+    let search_alg = search.build(space, spec.num_samples);
+    let mut runner = TrialRunner::new(spec, sched, search_alg, executor, cluster);
+
+    if let Some(root) = experiment_dir {
+        let dir = ExperimentDir::new(root.clone()).expect("create experiment dir");
+        let mut resumed = false;
+        if resume {
+            if dir.has_snapshot() {
+                validate_manifest(&dir, &runner.spec, &scheduler, &search);
+                runner
+                    .restore_from_dir(&dir)
+                    .unwrap_or_else(|e| panic!("resume from {root:?} failed: {e}"));
+                resumed = true;
+            } else {
+                eprintln!("note: --resume but {root:?} has no snapshot yet; starting fresh");
+            }
+        }
+        if !resumed {
+            // A fresh run into a reused directory must not leave a prior
+            // run's snapshot/logs/checkpoints behind: a later --resume
+            // would silently restore the abandoned run's state.
+            dir.reset().expect("clear stale experiment state");
+            let manifest =
+                manifest_json(&runner.spec, &scheduler, &search, exec, snapshot_every);
+            dir.write_manifest(&manifest).expect("write experiment manifest");
+        }
+        let logger =
+            if resumed { JsonlLogger::resume(root) } else { JsonlLogger::new(root) };
+        runner.add_logger(Box::new(logger.expect("create experiment dir logger")));
+        runner.enable_persistence(dir, snapshot_every);
+    } else if let Some(dir) = log_dir {
+        runner.add_logger(Box::new(JsonlLogger::new(dir).expect("create log dir")));
+    }
+    if progress_every > 0 {
+        let metric = runner.spec.metric.clone();
+        runner.add_logger(Box::new(ProgressReporter::new(&metric, progress_every)));
+    }
+    runner
+}
+
+/// Refuse to resume a directory that was written by a different
+/// experiment — a mismatched name/seed/objective/algorithm/shape would
+/// silently corrupt it (e.g. restored ASHA rungs sized for a different
+/// max_t, or a restored best-so-far reinterpreted under the opposite
+/// mode).
+fn validate_manifest(
+    dir: &ExperimentDir,
+    spec: &ExperimentSpec,
+    scheduler: &SchedulerKind,
+    search: &SearchKind,
+) {
+    let Some(m) = dir.read_manifest() else {
+        return; // manifest lost but snapshot present: trust the snapshot
+    };
+    let s = |k: &str| m.get(k).and_then(|v| v.as_str()).unwrap_or("").to_string();
+    let got = (
+        s("name"),
+        m.get("seed").and_then(u64_from_json).unwrap_or(0),
+        s("metric"),
+        s("mode"),
+        s("scheduler"),
+        s("search"),
+        m.get("num_samples").and_then(|v| v.as_u64()).unwrap_or(0) as usize,
+        m.get("max_iterations_per_trial").and_then(|v| v.as_u64()).unwrap_or(0),
+    );
+    let want = (
+        spec.name.clone(),
+        spec.seed,
+        spec.metric.clone(),
+        (if spec.mode == Mode::Max { "max" } else { "min" }).to_string(),
+        scheduler.label().to_string(),
+        search.label().to_string(),
+        spec.num_samples,
+        spec.max_iterations_per_trial,
+    );
+    assert!(
+        got == want,
+        "resume mismatch: directory manifest (name, seed, metric, mode, scheduler, search, \
+         samples, iters) = {got:?} but the caller asked for {want:?}",
+    );
 }
 
 /// §4.3's entry point: run an experiment end to end.
@@ -210,22 +375,7 @@ pub fn run_experiments(
     factory: TrainableFactory,
     opts: RunOptions,
 ) -> ExperimentResult {
-    let executor: Box<dyn Executor> = match opts.exec {
-        ExecMode::Sim => Box::new(SimExecutor::new(factory)),
-        ExecMode::Threads => Box::new(ThreadExecutor::new(factory)),
-        ExecMode::Pool { workers } => Box::new(PoolExecutor::new(factory, workers)),
-    };
-    let sched = scheduler.build(spec.seed);
-    let search_alg = search.build(space, spec.num_samples);
-    let mut runner = TrialRunner::new(spec, sched, search_alg, executor, opts.cluster);
-    if opts.progress_every > 0 {
-        let metric = runner.spec.metric.clone();
-        runner.add_logger(Box::new(ProgressReporter::new(&metric, opts.progress_every)));
-    }
-    if let Some(dir) = opts.log_dir {
-        runner.add_logger(Box::new(JsonlLogger::new(dir).expect("create log dir")));
-    }
-    runner.run()
+    build_runner(spec, space, scheduler, search, factory, opts).run()
 }
 
 #[cfg(test)]

@@ -8,9 +8,12 @@
 //!   thread-per-trial, or bounded worker pool)
 //! * [`runner`] — the central event loop tying it all together
 //! * [`experiment`] — user-facing `run_experiments` facade (§4.3)
+//! * [`persist`] — the durable experiment directory (crash-safe
+//!   snapshots + `--resume`)
 
 pub mod executor;
 pub mod experiment;
+pub mod persist;
 pub mod runner;
 pub mod schedulers;
 pub mod search;
@@ -18,7 +21,10 @@ pub mod spec;
 pub mod spec_file;
 pub mod trial;
 
-pub use experiment::{run_experiments, ExecMode, ExperimentSpec, RunOptions, SchedulerKind, SearchKind};
+pub use experiment::{
+    build_runner, run_experiments, ExecMode, ExperimentSpec, RunOptions, SchedulerKind, SearchKind,
+};
+pub use persist::ExperimentDir;
 pub use runner::{ExperimentResult, RunnerStats, TrialRunner};
 pub use spec_file::SpecFile;
 pub use trial::{Config, Mode, ParamValue, ResultRow, Trial, TrialId, TrialStatus};

@@ -1,0 +1,408 @@
+//! Durable experiments: the versioned on-disk experiment directory and
+//! the JSON (de)serialization helpers the snapshot/restore machinery
+//! shares.
+//!
+//! The paper (§4.2) keeps trial metadata in memory and "relies on
+//! checkpoints for fault tolerance" — which recovers *trials*, but a
+//! coordinator crash still loses the *experiment*. This module makes
+//! experiment state durable end to end. Layout of an experiment
+//! directory:
+//!
+//! ```text
+//! <dir>/
+//!   experiment.meta.json   # manifest: version, spec + run options
+//!   snapshot.json          # atomic periodic snapshot of runner state
+//!   trial_0000.jsonl ...   # per-trial result logs (JsonlLogger)
+//!   experiment.json        # final summary (written at experiment end)
+//!   checkpoints/           # spilled trainable checkpoints (*.bin)
+//! ```
+//!
+//! Snapshots are written atomically (`snapshot.json.tmp` + rename), so
+//! a crash mid-write leaves the previous snapshot intact. `resume`
+//! (see [`crate::coordinator::run_experiments`]) rebuilds the runner,
+//! scheduler, search-algorithm and checkpoint-store state from the
+//! directory and continues the run.
+//!
+//! # Example: durable run + resume
+//!
+//! ```
+//! use tune::coordinator::spec::SpaceBuilder;
+//! use tune::coordinator::{run_experiments, ExperimentSpec, Mode, RunOptions,
+//!                         SchedulerKind, SearchKind};
+//! use tune::trainable::{factory, synthetic::CurveTrainable};
+//!
+//! let dir = std::env::temp_dir().join(format!("tune_doc_resume_{}", std::process::id()));
+//! std::fs::remove_dir_all(&dir).ok();
+//! let mut spec = ExperimentSpec::named("doc-resume");
+//! spec.metric = "accuracy".into();
+//! spec.mode = Mode::Max;
+//! spec.num_samples = 4;
+//! spec.max_iterations_per_trial = 9;
+//! let space = SpaceBuilder::new().loguniform("lr", 1e-4, 1.0).build();
+//! let run = |resume: bool| {
+//!     run_experiments(
+//!         spec.clone(), space.clone(),
+//!         SchedulerKind::Fifo, SearchKind::Random,
+//!         factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+//!         RunOptions {
+//!             experiment_dir: Some(dir.clone()),
+//!             snapshot_every: 10,
+//!             resume,
+//!             ..Default::default()
+//!         },
+//!     )
+//! };
+//! let first = run(false);           // durable run: logs + snapshots on disk
+//! let resumed = run(true);          // finished experiment: resume is a no-op
+//! assert_eq!(resumed.best, first.best);
+//! assert_eq!(resumed.best_metric(), first.best_metric());
+//! std::fs::remove_dir_all(&dir).ok();
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::trial::{Config, ParamValue};
+use crate::util::json::{parse, Json};
+
+/// Version stamp written into manifests and snapshots; bumped whenever
+/// the on-disk format changes incompatibly.
+pub const FORMAT_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------------
+// JSON helpers shared by the snapshot/restore implementations
+// ---------------------------------------------------------------------------
+
+// Lossless u64 encoding lives in util::json (the fault injector in
+// `ray` uses it too); re-exported here next to its sibling helpers.
+pub use crate::util::json::{u64_from_json, u64_to_json};
+
+/// Encode a [`ParamValue`] with enough tagging to round-trip the
+/// variant: floats/strings/bools map directly; integers are wrapped as
+/// `{"$i": n}` so they do not come back as `F64`.
+pub fn param_to_json(v: &ParamValue) -> Json {
+    match v {
+        ParamValue::F64(f) => Json::Num(*f),
+        ParamValue::I64(i) => Json::obj(vec![("$i", Json::Num(*i as f64))]),
+        ParamValue::Str(s) => Json::Str(s.clone()),
+        ParamValue::Bool(b) => Json::Bool(*b),
+    }
+}
+
+/// Decode a [`ParamValue`] written by [`param_to_json`].
+pub fn param_from_json(j: &Json) -> Option<ParamValue> {
+    Some(match j {
+        Json::Num(n) => ParamValue::F64(*n),
+        Json::Str(s) => ParamValue::Str(s.clone()),
+        Json::Bool(b) => ParamValue::Bool(*b),
+        Json::Obj(o) => ParamValue::I64(o.get("$i")?.as_f64()? as i64),
+        _ => return None,
+    })
+}
+
+/// Encode a full config (ordered map of tagged params).
+pub fn config_to_json(c: &Config) -> Json {
+    Json::Obj(c.iter().map(|(k, v)| (k.clone(), param_to_json(v))).collect())
+}
+
+/// Decode a config written by [`config_to_json`].
+pub fn config_from_json(j: &Json) -> Option<Config> {
+    let mut out = Config::new();
+    for (k, v) in j.as_obj()? {
+        out.insert(k.clone(), param_from_json(v)?);
+    }
+    Some(out)
+}
+
+/// Encode a `Vec<f64>`.
+pub fn f64s_to_json(v: &[f64]) -> Json {
+    Json::Arr(v.iter().map(|x| Json::Num(*x)).collect())
+}
+
+/// Decode a `Vec<f64>` written by [`f64s_to_json`].
+pub fn f64s_from_json(j: &Json) -> Option<Vec<f64>> {
+    j.as_arr()?.iter().map(|x| x.as_f64()).collect()
+}
+
+/// Encode a map keyed by trial id (decimal-string keys).
+pub fn id_map_to_json<V>(m: &BTreeMap<u64, V>, f: impl Fn(&V) -> Json) -> Json {
+    Json::Obj(m.iter().map(|(k, v)| (k.to_string(), f(v))).collect())
+}
+
+/// Decode a map written by [`id_map_to_json`].
+pub fn id_map_from_json<V>(j: &Json, f: impl Fn(&Json) -> Option<V>) -> Option<BTreeMap<u64, V>> {
+    let mut out = BTreeMap::new();
+    for (k, v) in j.as_obj()? {
+        out.insert(k.parse().ok()?, f(v)?);
+    }
+    Some(out)
+}
+
+// ---------------------------------------------------------------------------
+// The experiment directory
+// ---------------------------------------------------------------------------
+
+/// Handle to a durable experiment directory (layout in the module docs).
+#[derive(Clone, Debug)]
+pub struct ExperimentDir {
+    root: PathBuf,
+}
+
+impl ExperimentDir {
+    /// Open (creating directories as needed) an experiment directory.
+    pub fn new(root: PathBuf) -> std::io::Result<Self> {
+        std::fs::create_dir_all(root.join("checkpoints"))?;
+        Ok(ExperimentDir { root })
+    }
+
+    /// Read-only handle to an existing directory: no directories are
+    /// created and nothing is written — the right constructor for
+    /// inspection paths like `tune analyze` (which may run against a
+    /// read-only mount).
+    pub fn open(root: PathBuf) -> Self {
+        ExperimentDir { root }
+    }
+
+    /// Remove all durable state from a previous run — the stale
+    /// snapshot, trial logs, summary and spilled checkpoints — so a
+    /// fresh (non-resume) run reusing the directory can never be
+    /// accidentally "resumed" into the abandoned run's state later.
+    /// The manifest is left for the caller to overwrite.
+    pub fn reset(&self) -> std::io::Result<()> {
+        let snapshot = self.snapshot_path();
+        if snapshot.exists() {
+            std::fs::remove_file(&snapshot)?;
+        }
+        let summary = self.root.join("experiment.json");
+        if summary.exists() {
+            std::fs::remove_file(&summary)?;
+        }
+        for entry in std::fs::read_dir(&self.root)?.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name.starts_with("trial_") && name.ends_with(".jsonl") {
+                std::fs::remove_file(entry.path())?;
+            }
+        }
+        for entry in std::fs::read_dir(self.checkpoints_dir())?.flatten() {
+            std::fs::remove_file(entry.path())?;
+        }
+        Ok(())
+    }
+
+    /// The directory root.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Where spilled trainable checkpoints live.
+    pub fn checkpoints_dir(&self) -> PathBuf {
+        self.root.join("checkpoints")
+    }
+
+    fn manifest_path(&self) -> PathBuf {
+        self.root.join("experiment.meta.json")
+    }
+
+    fn snapshot_path(&self) -> PathBuf {
+        self.root.join("snapshot.json")
+    }
+
+    /// Does the directory hold a runner snapshot to resume from?
+    pub fn has_snapshot(&self) -> bool {
+        self.snapshot_path().exists()
+    }
+
+    /// Write the run manifest (spec + run options), overwriting.
+    pub fn write_manifest(&self, manifest: &Json) -> std::io::Result<()> {
+        write_atomic(&self.manifest_path(), &manifest.to_string())
+    }
+
+    /// Read the run manifest back, if present and parseable.
+    pub fn read_manifest(&self) -> Option<Json> {
+        let text = std::fs::read_to_string(self.manifest_path()).ok()?;
+        parse(&text).ok()
+    }
+
+    /// Atomically replace the runner snapshot (tmp file + rename, so a
+    /// crash mid-write never corrupts the previous snapshot).
+    pub fn write_snapshot(&self, snapshot: &Json) -> std::io::Result<()> {
+        write_atomic(&self.snapshot_path(), &snapshot.to_string())
+    }
+
+    /// Read the runner snapshot back, if present and parseable.
+    pub fn read_snapshot(&self) -> Option<Json> {
+        let text = std::fs::read_to_string(self.snapshot_path()).ok()?;
+        parse(&text).ok()
+    }
+
+    /// Path of one trial's JSONL result log.
+    pub fn trial_log_path(&self, trial: u64) -> PathBuf {
+        self.root.join(format!("trial_{trial:04}.jsonl"))
+    }
+
+    /// Ids of every `trial_*.jsonl` log currently in the directory.
+    pub fn trial_log_ids(&self) -> Vec<u64> {
+        let Ok(entries) = std::fs::read_dir(&self.root) else {
+            return Vec::new();
+        };
+        let mut ids: Vec<u64> = entries
+            .flatten()
+            .filter_map(|e| {
+                let name = e.file_name();
+                let name = name.to_str()?;
+                name.strip_prefix("trial_")?.strip_suffix(".jsonl")?.parse().ok()
+            })
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Truncate a trial's JSONL log to its header plus result rows with
+    /// `iteration <= max_iter`, dropping end lines and anything
+    /// unparseable (e.g. a half-written final line from a crash). Called
+    /// on resume for every non-terminal trial so the log and the
+    /// restored runner state agree, and replayed iterations are not
+    /// logged twice.
+    pub fn prune_trial_log(&self, trial: u64, max_iter: u64) -> std::io::Result<()> {
+        let path = self.trial_log_path(trial);
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            return Ok(()); // no log yet: nothing to prune
+        };
+        let mut kept = String::new();
+        for line in text.lines() {
+            let Ok(v) = parse(line) else { continue };
+            let keep = if v.get("config").is_some() {
+                true // header
+            } else if v.get("end").is_some() {
+                false // a resumed trial is not over; drop stale end lines
+            } else {
+                v.get("iteration").and_then(|i| i.as_u64()).map_or(false, |i| i <= max_iter)
+            };
+            if keep {
+                kept.push_str(line);
+                kept.push('\n');
+            }
+        }
+        write_atomic(&path, &kept)
+    }
+}
+
+/// Write `text` to `path` atomically *and durably*: write a sibling
+/// `.tmp` file, fsync it, rename over the target (atomic on POSIX
+/// filesystems), then fsync the parent directory — without the syncs a
+/// power loss can persist the rename before the data, replacing the
+/// previous good file with garbage.
+pub fn write_atomic(path: &Path, text: &str) -> std::io::Result<()> {
+    use std::io::Write as _;
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    let tmp = path.with_file_name(name);
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(text.as_bytes())?;
+    f.sync_all()?;
+    std::fs::rename(&tmp, path)?;
+    // Directory fsync makes the rename itself durable; best-effort since
+    // opening a directory for sync is not supported everywhere.
+    if let Some(parent) = path.parent() {
+        if let Ok(d) = std::fs::File::open(parent) {
+            d.sync_all().ok();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tune_persist_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    #[test]
+    fn u64_roundtrip_is_lossless_above_2_53() {
+        for v in [0u64, 1, u64::MAX, 0x9E3779B97F4A7C15, (1 << 53) + 1] {
+            assert_eq!(u64_from_json(&u64_to_json(v)), Some(v), "{v}");
+        }
+    }
+
+    #[test]
+    fn param_roundtrip_preserves_variants() {
+        for v in [
+            ParamValue::F64(0.1),
+            ParamValue::I64(-3),
+            ParamValue::Str("relu".into()),
+            ParamValue::Bool(true),
+        ] {
+            let j = param_to_json(&v);
+            let back = param_from_json(&parse(&j.to_string()).unwrap()).unwrap();
+            assert_eq!(back, v);
+        }
+    }
+
+    #[test]
+    fn config_roundtrip() {
+        let mut c = Config::new();
+        c.insert("lr".into(), ParamValue::F64(0.015625));
+        c.insert("layers".into(), ParamValue::I64(4));
+        c.insert("act".into(), ParamValue::Str("tanh".into()));
+        let j = config_to_json(&c);
+        assert_eq!(config_from_json(&parse(&j.to_string()).unwrap()).unwrap(), c);
+    }
+
+    #[test]
+    fn snapshot_write_is_atomic_and_readable() {
+        let dir = ExperimentDir::new(tmpdir("snap")).unwrap();
+        assert!(!dir.has_snapshot());
+        dir.write_snapshot(&Json::obj(vec![("version", Json::Num(1.0))])).unwrap();
+        assert!(dir.has_snapshot());
+        let s = dir.read_snapshot().unwrap();
+        assert_eq!(s.get("version").unwrap().as_u64(), Some(1));
+        // The tmp file must not linger.
+        assert!(!dir.root().join("snapshot.json.tmp").exists());
+        std::fs::remove_dir_all(dir.root()).ok();
+    }
+
+    #[test]
+    fn reset_clears_stale_durable_state_but_keeps_manifest() {
+        let dir = ExperimentDir::new(tmpdir("reset")).unwrap();
+        dir.write_snapshot(&Json::obj(vec![("version", Json::Num(1.0))])).unwrap();
+        dir.write_manifest(&Json::obj(vec![("name", Json::Str("x".into()))])).unwrap();
+        std::fs::write(dir.trial_log_path(0), "stale\n").unwrap();
+        std::fs::write(dir.root().join("experiment.json"), "[]").unwrap();
+        std::fs::write(dir.checkpoints_dir().join("trial0_iter1_ckpt1.bin"), [1]).unwrap();
+        dir.reset().unwrap();
+        assert!(!dir.has_snapshot());
+        assert!(!dir.trial_log_path(0).exists());
+        assert!(!dir.root().join("experiment.json").exists());
+        assert_eq!(std::fs::read_dir(dir.checkpoints_dir()).unwrap().count(), 0);
+        assert!(dir.read_manifest().is_some()); // caller overwrites it
+        std::fs::remove_dir_all(dir.root()).ok();
+    }
+
+    #[test]
+    fn prune_drops_future_rows_end_lines_and_garbage() {
+        let dir = ExperimentDir::new(tmpdir("prune")).unwrap();
+        let path = dir.trial_log_path(3);
+        std::fs::write(
+            &path,
+            "{\"trial\":3,\"config\":{\"lr\":0.1},\"seed\":0}\n\
+             {\"trial\":3,\"iteration\":1,\"loss\":0.5}\n\
+             {\"trial\":3,\"iteration\":2,\"loss\":0.4}\n\
+             {\"trial\":3,\"iteration\":3,\"loss\":0.3}\n\
+             {\"trial\":3,\"end\":\"Stopped\"}\n\
+             {\"trial\":3,\"iteration\":4,\"lo",
+        )
+        .unwrap();
+        dir.prune_trial_log(3, 2).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3); // header + iterations 1, 2
+        assert!(lines[0].contains("config"));
+        assert!(lines[2].contains("\"iteration\":2"));
+        std::fs::remove_dir_all(dir.root()).ok();
+    }
+}

@@ -14,10 +14,14 @@ use std::collections::BTreeMap;
 use crate::checkpoint::CheckpointStore;
 use crate::logger::ResultLogger;
 use crate::ray::{Cluster, FaultInjector, LeaseId, NodeId, PlacementStats, TwoLevelScheduler};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::executor::{ExecEvent, Executor};
 use super::experiment::ExperimentSpec;
+use super::persist::{
+    id_map_from_json, id_map_to_json, u64_from_json, u64_to_json, ExperimentDir, FORMAT_VERSION,
+};
 use super::schedulers::{Decision, SchedulerCtx, TrialScheduler};
 use super::search::SearchAlgorithm;
 use super::trial::{ResultRow, Trial, TrialId, TrialStatus};
@@ -47,6 +51,58 @@ pub struct RunnerStats {
     pub decision_ns: u64,
     /// Nanoseconds spent in the whole handling path (runner overhead).
     pub handling_ns: u64,
+    /// Experiment snapshots written to the experiment directory.
+    pub snapshots: u64,
+    /// Results re-executed (and suppressed) while replaying after resume.
+    pub replayed: u64,
+}
+
+impl RunnerStats {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("results", Json::Num(self.results as f64)),
+            ("checkpoints", Json::Num(self.checkpoints as f64)),
+            ("restores", Json::Num(self.restores as f64)),
+            ("exploits", Json::Num(self.exploits as f64)),
+            ("stopped_early", Json::Num(self.stopped_early as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("errored", Json::Num(self.errored as f64)),
+            ("failures_recovered", Json::Num(self.failures_recovered as f64)),
+            ("launches", Json::Num(self.launches as f64)),
+            ("decision_ns", Json::Num(self.decision_ns as f64)),
+            ("handling_ns", Json::Num(self.handling_ns as f64)),
+            ("snapshots", Json::Num(self.snapshots as f64)),
+            ("replayed", Json::Num(self.replayed as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> RunnerStats {
+        let g = |k: &str| j.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+        RunnerStats {
+            results: g("results"),
+            checkpoints: g("checkpoints"),
+            restores: g("restores"),
+            exploits: g("exploits"),
+            stopped_early: g("stopped_early"),
+            completed: g("completed"),
+            errored: g("errored"),
+            failures_recovered: g("failures_recovered"),
+            launches: g("launches"),
+            decision_ns: g("decision_ns"),
+            handling_ns: g("handling_ns"),
+            snapshots: g("snapshots"),
+            replayed: g("replayed"),
+        }
+    }
+}
+
+/// Durable-experiment sink attached via [`TrialRunner::enable_persistence`].
+struct Persist {
+    dir: ExperimentDir,
+    /// Snapshot every N processed results (0 = only the final snapshot).
+    every: u64,
+    /// `stats.results` at the last snapshot (dedup guard).
+    last_snap_results: u64,
 }
 
 /// Everything an experiment run produced.
@@ -111,6 +167,15 @@ pub struct TrialRunner {
     stats: RunnerStats,
     best_curve: Vec<(f64, f64)>,
     best_so_far: Option<f64>,
+    /// Experiment clock at the resumed-from snapshot; added to the fresh
+    /// executor clock so experiment time is continuous across restarts.
+    time_offset: f64,
+    /// Per trial: highest iteration the resumed-from snapshot had
+    /// already accounted for. Re-executed iterations at or below this
+    /// rebuild trainable state but are suppressed from schedulers,
+    /// search, loggers and stats — they already happened.
+    replay_until: BTreeMap<TrialId, u64>,
+    persist: Option<Persist>,
 }
 
 impl TrialRunner {
@@ -143,7 +208,16 @@ impl TrialRunner {
             stats: RunnerStats::default(),
             best_curve: Vec::new(),
             best_so_far: None,
+            time_offset: 0.0,
+            replay_until: BTreeMap::new(),
+            persist: None,
         }
+    }
+
+    /// Experiment time: the executor clock plus the offset carried over
+    /// from the snapshot a resumed run restarted from.
+    fn clock(&self) -> f64 {
+        self.time_offset + self.executor.now()
     }
 
     /// Attach a result logger (fan-out on every intermediate result).
@@ -238,7 +312,8 @@ impl TrialRunner {
             Ok(()) => {
                 trial.status = TrialStatus::Running;
                 self.leases.insert(id, (p.node, p.lease));
-                self.run_clock.insert(id, (self.executor.now(), trial.time_total_s));
+                let started = self.time_offset + self.executor.now();
+                self.run_clock.insert(id, (started, trial.time_total_s));
                 self.stats.launches += 1;
                 if restored {
                     self.stats.restores += 1;
@@ -293,8 +368,11 @@ impl TrialRunner {
 
     fn save_checkpoint(&mut self, id: TrialId) {
         if let Some(blob) = self.executor.save(id) {
-            let iter = self.trials[&id].iteration;
-            let cid = self.checkpoints.save(id, iter, blob);
+            let (iter, time) = {
+                let t = &self.trials[&id];
+                (t.iteration, t.time_total_s)
+            };
+            let cid = self.checkpoints.save_timed(id, iter, time, blob);
             self.trials.get_mut(&id).unwrap().checkpoint = Some(cid);
             self.stats.checkpoints += 1;
         }
@@ -317,6 +395,7 @@ impl TrialRunner {
                 // Roll visible progress back to the checkpoint.
                 if let Some(m) = self.checkpoints.meta(c) {
                     t.iteration = m.iteration;
+                    t.time_total_s = m.time_total_s;
                 }
             }
             self.stats.failures_recovered += 1;
@@ -349,8 +428,11 @@ impl TrialRunner {
                 match donor.and_then(|c| self.checkpoints.get(c).map(|b| b.to_vec())) {
                     Some(blob) => {
                         if self.executor.restore(id, &blob).is_ok() {
-                            let iter = self.trials[&id].iteration;
-                            let cid = self.checkpoints.save(id, iter, blob);
+                            let (iter, time) = {
+                                let t = &self.trials[&id];
+                                (t.iteration, t.time_total_s)
+                            };
+                            let cid = self.checkpoints.save_timed(id, iter, time, blob);
                             let t = self.trials.get_mut(&id).unwrap();
                             t.config = config.clone();
                             t.checkpoint = Some(cid);
@@ -386,7 +468,7 @@ impl TrialRunner {
             self.finish(id, TrialStatus::Completed);
             return;
         }
-        let now = self.executor.now();
+        let now = self.clock();
         let (iteration, row) = {
             let (started, acc) = self.run_clock[&id];
             let t = self.trials.get_mut(&id).unwrap();
@@ -396,6 +478,36 @@ impl TrialRunner {
             t.record(row.clone(), &self.spec.metric, self.spec.mode);
             (iteration, row)
         };
+
+        // Crash-resume replay: iterations the snapshot had already
+        // accounted for re-execute (to rebuild trainable state and the
+        // durable logs) but are suppressed from scheduler/search/stats
+        // and live reporters — the restored state already reflects them.
+        let replaying = matches!(self.replay_until.get(&id), Some(&u) if iteration <= u);
+
+        // Hot path: no Trial clone — loggers/search/scheduler live in
+        // disjoint fields, so shared borrows of `trials` coexist with
+        // mutable borrows of each consumer (perf iteration 1, §Perf).
+        {
+            let t = &self.trials[&id];
+            for l in &mut self.loggers {
+                if replaying {
+                    l.on_replayed_result(t, &row);
+                } else {
+                    l.on_result(t, &row);
+                }
+            }
+        }
+
+        if replaying {
+            if Some(&iteration) == self.replay_until.get(&id) {
+                self.replay_until.remove(&id); // caught up
+            }
+            self.stats.replayed += 1;
+            self.executor.request_step(id);
+            return;
+        }
+        self.replay_until.remove(&id);
         self.stats.results += 1;
 
         // Best-so-far curve (experiment time axis).
@@ -407,16 +519,7 @@ impl TrialRunner {
             }
         }
 
-        // Hot path: no Trial clone — loggers/search/scheduler live in
-        // disjoint fields, so shared borrows of `trials` coexist with
-        // mutable borrows of each consumer (perf iteration 1, §Perf).
-        {
-            let t = &self.trials[&id];
-            for l in &mut self.loggers {
-                l.on_result(t, &row);
-            }
-            self.search.on_result(&t.config, &row);
-        }
+        self.search.on_result(&self.trials[&id].config, &row);
 
         // Runner-level stopping criteria outrank the scheduler.
         let target_hit = match (self.spec.metric_target, row.metric(&self.spec.metric)) {
@@ -457,6 +560,230 @@ impl TrialRunner {
         }
     }
 
+    /// Attach a durable experiment directory: trainable checkpoints
+    /// spill under `<dir>/checkpoints/` and the runner writes an atomic
+    /// state snapshot every `snapshot_every` processed results (0 =
+    /// final snapshot only). Together with a `JsonlLogger` rooted at the
+    /// same directory this makes the experiment resumable after a crash
+    /// — see `coordinator::persist` for the on-disk layout.
+    pub fn enable_persistence(&mut self, dir: ExperimentDir, snapshot_every: u64) {
+        self.checkpoints =
+            std::mem::take(&mut self.checkpoints).with_disk(dir.checkpoints_dir());
+        self.persist = Some(Persist {
+            dir,
+            every: snapshot_every,
+            last_snap_results: self.stats.results,
+        });
+    }
+
+    /// Serialize the complete mutable runner state (trial table, clock,
+    /// RNG, scheduler, search, checkpoint manifest, counters).
+    fn snapshot_json(&self, finished: bool) -> Json {
+        Json::obj(vec![
+            ("version", Json::Num(FORMAT_VERSION as f64)),
+            ("finished", Json::Bool(finished)),
+            ("now", Json::Num(self.clock())),
+            ("next_id", Json::Num(self.next_id as f64)),
+            ("search_exhausted", Json::Bool(self.search_exhausted)),
+            ("rng", u64_to_json(self.rng.state())),
+            ("best_so_far", self.best_so_far.map(Json::Num).unwrap_or(Json::Null)),
+            (
+                "best_curve",
+                Json::Arr(
+                    self.best_curve
+                        .iter()
+                        .map(|(t, v)| Json::Arr(vec![Json::Num(*t), Json::Num(*v)]))
+                        .collect(),
+                ),
+            ),
+            ("stats", self.stats.to_json()),
+            (
+                "replay_until",
+                id_map_to_json(&self.replay_until, |v| Json::Num(*v as f64)),
+            ),
+            ("fault", self.fault.snapshot()),
+            ("checkpoints", self.checkpoints.snapshot()),
+            ("scheduler", self.scheduler.snapshot()),
+            ("search", self.search.snapshot()),
+            ("trials", Json::Arr(self.trials.values().map(|t| t.to_json()).collect())),
+        ])
+    }
+
+    /// Write a snapshot if the cadence says one is due.
+    fn maybe_snapshot(&mut self) -> bool {
+        let due = match &self.persist {
+            Some(p) => {
+                p.every > 0
+                    && self.stats.results != p.last_snap_results
+                    && self.stats.results % p.every == 0
+            }
+            None => false,
+        };
+        if due {
+            self.write_snapshot(false);
+        }
+        due
+    }
+
+    fn write_snapshot(&mut self, finished: bool) {
+        self.stats.snapshots += 1; // counted in the snapshot itself
+        let snap = self.snapshot_json(finished);
+        let results = self.stats.results;
+        if let Some(p) = &mut self.persist {
+            if let Err(e) = p.dir.write_snapshot(&snap) {
+                eprintln!("experiment snapshot write failed: {e}");
+            }
+            p.last_snap_results = results;
+        }
+    }
+
+    /// Resume fallback for a trial whose checkpoint blob did not
+    /// survive: restart it from iteration 0 and replay (suppressed) up
+    /// to the progress the snapshot had recorded.
+    fn degrade_to_scratch(&mut self, t: &mut Trial) {
+        let until = t.iteration;
+        t.status = TrialStatus::Pending;
+        t.checkpoint = None;
+        t.iteration = 0;
+        t.time_total_s = 0.0;
+        if until > 0 {
+            self.replay_until.insert(t.id, until);
+        }
+    }
+
+    /// Rebuild runner state from the snapshot in `dir`, so [`Self::run`]
+    /// continues the experiment instead of starting over. The runner
+    /// must have been freshly constructed with the same spec, scheduler
+    /// and search selections the snapshot was written under. Running
+    /// trials are rolled back to their latest durable checkpoint and
+    /// their already-accounted iterations are replayed with suppression
+    /// (see `replay_until`); paused and terminal trials restore as-is.
+    /// Also prunes each non-terminal trial's JSONL log back to the
+    /// snapshot state so resumed logging never duplicates rows.
+    pub fn restore_from_dir(&mut self, dir: &ExperimentDir) -> Result<(), String> {
+        let snap = dir.read_snapshot().ok_or("no readable snapshot in experiment dir")?;
+        let version = snap
+            .get("version")
+            .and_then(|v| v.as_u64())
+            .ok_or("snapshot: missing version")?;
+        if version != FORMAT_VERSION {
+            return Err(format!(
+                "snapshot format v{version} is not supported (this build reads v{FORMAT_VERSION})"
+            ));
+        }
+        let finished =
+            snap.get("finished").and_then(|v| v.as_bool()).unwrap_or(false);
+        self.time_offset =
+            snap.get("now").and_then(|v| v.as_f64()).ok_or("snapshot: missing clock")?;
+        self.next_id =
+            snap.get("next_id").and_then(|v| v.as_u64()).ok_or("snapshot: missing next_id")?;
+        self.search_exhausted = finished
+            || snap
+                .get("search_exhausted")
+                .and_then(|v| v.as_bool())
+                .ok_or("snapshot: missing search_exhausted")?;
+        let rng_state = snap
+            .get("rng")
+            .and_then(u64_from_json)
+            .ok_or("snapshot: missing rng state")?;
+        self.rng.set_state(rng_state);
+        self.best_so_far = snap.get("best_so_far").and_then(|v| v.as_f64());
+        self.best_curve = snap
+            .get("best_curve")
+            .and_then(|c| c.as_arr())
+            .ok_or("snapshot: missing best_curve")?
+            .iter()
+            .map(|p| {
+                let a = p.as_arr()?;
+                Some((a.first()?.as_f64()?, a.get(1)?.as_f64()?))
+            })
+            .collect::<Option<_>>()
+            .ok_or("snapshot: bad best_curve point")?;
+        self.stats = snap.get("stats").map(RunnerStats::from_json).unwrap_or_default();
+        if let Some(f) = snap.get("fault") {
+            self.fault.restore(f)?;
+        }
+        self.checkpoints = CheckpointStore::restore_from(
+            snap.get("checkpoints").ok_or("snapshot: missing checkpoints")?,
+            &dir.checkpoints_dir(),
+        )?;
+        self.scheduler.restore(snap.get("scheduler").unwrap_or(&Json::Null))?;
+        self.search.restore(snap.get("search").unwrap_or(&Json::Null))?;
+        self.replay_until = snap
+            .get("replay_until")
+            .and_then(|m| id_map_from_json(m, |v| v.as_u64()))
+            .unwrap_or_default();
+
+        self.trials.clear();
+        for tj in snap
+            .get("trials")
+            .and_then(|t| t.as_arr())
+            .ok_or("snapshot: missing trials")?
+        {
+            let mut t = Trial::from_json(tj).ok_or("snapshot: malformed trial")?;
+            // Progress recorded by the trial's checkpoint, if its blob
+            // survived.
+            let ck = t
+                .checkpoint
+                .and_then(|c| self.checkpoints.meta(c).map(|m| (m.iteration, m.time_total_s)));
+            match t.status {
+                TrialStatus::Running => {
+                    // Relaunch from the latest durable checkpoint; the
+                    // iterations between it and the snapshot replay with
+                    // suppression.
+                    let until =
+                        self.replay_until.get(&t.id).copied().unwrap_or(0).max(t.iteration);
+                    t.status = TrialStatus::Pending;
+                    match ck {
+                        Some((iter, time)) => {
+                            t.iteration = iter;
+                            t.time_total_s = time;
+                        }
+                        None => {
+                            t.checkpoint = None;
+                            t.iteration = 0;
+                            t.time_total_s = 0.0;
+                        }
+                    }
+                    if until > t.iteration {
+                        self.replay_until.insert(t.id, until);
+                    }
+                }
+                // A Paused trial whose spill file was lost, or a Pending
+                // trial (e.g. awaiting fault-recovery relaunch) whose
+                // recorded checkpoint no longer loads: degrade to
+                // replay-from-scratch instead of relaunching a fresh
+                // trainable against stale table progress.
+                TrialStatus::Paused if ck.is_none() => self.degrade_to_scratch(&mut t),
+                TrialStatus::Pending if t.checkpoint.is_some() && ck.is_none() => {
+                    self.degrade_to_scratch(&mut t)
+                }
+                _ => {}
+            }
+            self.trials.insert(t.id, t);
+        }
+        // Align the on-disk logs with the restored state: drop rows past
+        // the rollback point (the replay re-logs them identically) and
+        // any half-written final line from the crash.
+        for t in self.trials.values() {
+            if !t.status.is_terminal() {
+                if let Err(e) = dir.prune_trial_log(t.id, t.iteration) {
+                    eprintln!("pruning log of trial {}: {e}", t.id);
+                }
+            }
+        }
+        // Logs of trials the snapshot does not know about (created in
+        // the window between the snapshot and the crash) are orphans:
+        // the resumed run re-creates those ids from scratch and must not
+        // append to — and thereby duplicate — their old rows.
+        for id in dir.trial_log_ids() {
+            if !self.trials.contains_key(&id) {
+                std::fs::remove_file(dir.trial_log_path(id)).ok();
+            }
+        }
+        Ok(())
+    }
+
     fn fault_tick(&mut self) {
         if self.fault.plan.node_failure_prob == 0.0 {
             return;
@@ -480,12 +807,14 @@ impl TrialRunner {
         }
     }
 
-    /// Drive the experiment to completion; returns the result summary.
-    pub fn run(&mut self) -> ExperimentResult {
+    /// The event loop shared by [`TrialRunner::run`] and
+    /// [`TrialRunner::run_to_crash`]. Returns `true` when crash
+    /// injection fired (the loop was abandoned mid-flight).
+    fn drive(&mut self, crash_after_snapshots: Option<u64>) -> bool {
         loop {
             self.admit();
-            if self.executor.now() >= self.spec.max_experiment_time_s {
-                break;
+            if self.clock() >= self.spec.max_experiment_time_s {
+                return false;
             }
             let event = self.executor.next_event();
             let t0 = std::time::Instant::now();
@@ -504,16 +833,36 @@ impl TrialRunner {
                         self.scheduler.choose_trial_to_run(&ctx).is_some()
                     };
                     if !can_progress && self.search_exhausted {
-                        break;
+                        return false;
                     }
                     if !can_progress && self.create_trial().is_none() {
-                        break;
+                        return false;
                     }
                 }
             }
             self.stats.handling_ns += t0.elapsed().as_nanos() as u64;
             self.fault_tick();
+            let snapped = self.maybe_snapshot();
+            if snapped && crash_after_snapshots.map_or(false, |n| self.stats.snapshots >= n) {
+                return true;
+            }
         }
+    }
+
+    /// Deterministic crash injection for durability tests: drive the
+    /// event loop until `snapshots` periodic snapshots have been written
+    /// to the experiment directory, then abandon the run mid-flight —
+    /// no endgame, no logger finalization — exactly as a process kill at
+    /// a snapshot boundary would. Returns `true` if the crash fired
+    /// (`false` means the experiment finished first). Requires
+    /// [`TrialRunner::enable_persistence`] with a non-zero cadence.
+    pub fn run_to_crash(&mut self, snapshots: u64) -> bool {
+        self.drive(Some(snapshots))
+    }
+
+    /// Drive the experiment to completion; returns the result summary.
+    pub fn run(&mut self) -> ExperimentResult {
+        self.drive(None);
         // Endgame: terminate whatever is still live (budget exhausted or
         // orphaned paused trials).
         let leftovers: Vec<TrialId> = self
@@ -528,6 +877,11 @@ impl TrialRunner {
         for l in &mut self.loggers {
             l.on_experiment_end(&self.trials);
         }
+        // Final snapshot: marks the experiment finished so a later
+        // `--resume` reports completion instead of re-running anything.
+        if self.persist.is_some() {
+            self.write_snapshot(true);
+        }
 
         let best = self
             .trials
@@ -541,7 +895,7 @@ impl TrialRunner {
             .map(|t| t.id);
         ExperimentResult {
             best,
-            duration_s: self.executor.now(),
+            duration_s: self.clock(),
             budget_used_s: self.trials.values().map(|t| t.time_total_s).sum(),
             trials: std::mem::take(&mut self.trials),
             stats: self.stats.clone(),

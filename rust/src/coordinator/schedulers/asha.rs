@@ -10,6 +10,9 @@
 
 use std::collections::BTreeMap;
 
+use crate::coordinator::persist::{f64s_from_json, f64s_to_json, id_map_from_json, id_map_to_json};
+use crate::util::json::Json;
+
 use super::{Decision, ResultRow, SchedulerCtx, Trial, TrialScheduler};
 
 /// Asynchronous successive halving: promote the top 1/eta at each rung,
@@ -95,6 +98,22 @@ impl TrialScheduler for AshaScheduler {
             Decision::Checkpoint
         }
     }
+
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("rungs", id_map_to_json(&self.rungs, |vs| f64s_to_json(vs))),
+            ("stopped", Json::Num(self.stopped as f64)),
+        ])
+    }
+
+    fn restore(&mut self, snap: &Json) -> Result<(), String> {
+        self.rungs = snap
+            .get("rungs")
+            .and_then(|r| id_map_from_json(r, f64s_from_json))
+            .ok_or("asha snapshot: bad rungs")?;
+        self.stopped = snap.get("stopped").and_then(|v| v.as_u64()).unwrap_or(0);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -159,6 +178,32 @@ mod tests {
         sb.feed(&mut s, 2, 1, 0.3);
         // Worst loss among 4 with eta=2 -> below top-half cutoff.
         assert_eq!(sb.feed(&mut s, 3, 1, 0.9), Decision::Stop);
+    }
+
+    #[test]
+    fn snapshot_restore_preserves_rung_decisions() {
+        let mut sb = Sandbox::new(12, "acc", Mode::Max);
+        let mut a = AshaScheduler::new(1, 3.0, 81);
+        for id in 0..6u64 {
+            sb.feed(&mut a, id, 1, 0.9 - id as f64 * 0.1);
+        }
+        // Serialize through text (what the snapshot file does), restore
+        // into a fresh instance, then feed identical follow-ups to both.
+        let text = TrialScheduler::snapshot(&a).to_string();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let mut b = AshaScheduler::new(1, 3.0, 81);
+        TrialScheduler::restore(&mut b, &parsed).unwrap();
+        assert_eq!(b.num_stopped(), a.num_stopped());
+        // ASHA decisions depend only on result + rung state, so both
+        // instances can consume the same follow-up stream.
+        for id in 6..12u64 {
+            let v = 0.95 - id as f64 * 0.07;
+            let da = sb.feed(&mut a, id, 1, v);
+            let t = sb.trials[&id].clone();
+            let r = super::super::testutil::row(1, "acc", v);
+            let db = b.on_result(&sb.ctx(), &t, &r);
+            assert_eq!(da, db, "diverged at trial {id}");
+        }
     }
 
     #[test]

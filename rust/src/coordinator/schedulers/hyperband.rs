@@ -14,6 +14,7 @@ use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use super::{Decision, ResultRow, SchedulerCtx, Trial, TrialScheduler};
 use crate::coordinator::trial::{TrialId, TrialStatus};
+use crate::util::json::Json;
 
 struct Bracket {
     /// Bracket index s (larger = more configs, less initial budget).
@@ -236,6 +237,115 @@ impl TrialScheduler for HyperBandScheduler {
     fn drain_stops(&mut self) -> Vec<TrialId> {
         std::mem::take(&mut self.pending_stops)
     }
+
+    fn snapshot(&self) -> Json {
+        fn ids<I: IntoIterator<Item = TrialId>>(it: I) -> Json {
+            Json::Arr(it.into_iter().map(|id| Json::Num(id as f64)).collect())
+        }
+        let brackets = self
+            .brackets
+            .iter()
+            .map(|b| {
+                Json::obj(vec![
+                    ("s", Json::Num(b.s as f64)),
+                    ("capacity", Json::Num(b.capacity as f64)),
+                    ("milestone", Json::Num(b.milestone as f64)),
+                    ("active", ids(b.active.iter().copied())),
+                    (
+                        "recorded",
+                        Json::Obj(
+                            b.recorded
+                                .iter()
+                                .map(|(id, v)| (id.to_string(), Json::Num(*v)))
+                                .collect(),
+                        ),
+                    ),
+                    ("promoted", ids(b.promoted.iter().copied())),
+                    ("closed", Json::Bool(b.closed)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("brackets", Json::Arr(brackets)),
+            (
+                "assignment",
+                Json::Obj(
+                    self.assignment
+                        .iter()
+                        .map(|(id, bi)| (id.to_string(), Json::Num(*bi as f64)))
+                        .collect(),
+                ),
+            ),
+            ("next_s", Json::Num(self.next_s as f64)),
+            ("pending_stops", ids(self.pending_stops.iter().copied())),
+            ("stopped", Json::Num(self.stopped as f64)),
+        ])
+    }
+
+    fn restore(&mut self, snap: &Json) -> Result<(), String> {
+        let id_arr = |j: &Json| -> Option<Vec<TrialId>> {
+            j.as_arr()?.iter().map(|v| v.as_u64()).collect()
+        };
+        let mut brackets = Vec::new();
+        for bj in snap
+            .get("brackets")
+            .and_then(|b| b.as_arr())
+            .ok_or("hyperband snapshot: missing brackets")?
+        {
+            let mut recorded = BTreeMap::new();
+            for (k, v) in bj
+                .get("recorded")
+                .and_then(|r| r.as_obj())
+                .ok_or("hyperband snapshot: bad recorded")?
+            {
+                recorded.insert(
+                    k.parse::<TrialId>().map_err(|e| e.to_string())?,
+                    v.as_f64().ok_or("hyperband snapshot: bad recorded value")?,
+                );
+            }
+            brackets.push(Bracket {
+                s: bj.get("s").and_then(|v| v.as_u64()).ok_or("bad s")? as u32,
+                capacity: bj.get("capacity").and_then(|v| v.as_u64()).ok_or("bad capacity")?
+                    as usize,
+                milestone: bj.get("milestone").and_then(|v| v.as_u64()).ok_or("bad milestone")?,
+                active: bj
+                    .get("active")
+                    .and_then(id_arr)
+                    .ok_or("bad active")?
+                    .into_iter()
+                    .collect(),
+                recorded,
+                promoted: bj
+                    .get("promoted")
+                    .and_then(id_arr)
+                    .ok_or("bad promoted")?
+                    .into_iter()
+                    .collect(),
+                closed: bj.get("closed").and_then(|v| v.as_bool()).ok_or("bad closed")?,
+            });
+        }
+        self.brackets = brackets;
+        self.assignment = BTreeMap::new();
+        for (k, v) in snap
+            .get("assignment")
+            .and_then(|a| a.as_obj())
+            .ok_or("hyperband snapshot: missing assignment")?
+        {
+            self.assignment.insert(
+                k.parse::<TrialId>().map_err(|e| e.to_string())?,
+                v.as_u64().ok_or("hyperband snapshot: bad bracket index")? as usize,
+            );
+        }
+        self.next_s =
+            snap.get("next_s").and_then(|v| v.as_u64()).ok_or("hyperband snapshot: bad next_s")?
+                as u32;
+        self.pending_stops = snap
+            .get("pending_stops")
+            .and_then(id_arr)
+            .ok_or("hyperband snapshot: bad pending_stops")?;
+        self.stopped = snap.get("stopped").and_then(|v| v.as_u64()).unwrap_or(0);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -319,6 +429,28 @@ mod tests {
         // R=9, eta=3: s_max=2; bracket s=2 capacity ceil(3/3*9)=9.
         assert!(s.brackets.len() > 1, "brackets={}", s.brackets.len());
         assert_eq!(s.brackets[0].capacity, 9);
+    }
+
+    #[test]
+    fn snapshot_restore_preserves_barrier_and_promotions() {
+        let mut sb = Sandbox::new(3, "acc", Mode::Max);
+        let mut a = HyperBandScheduler::new(9, 3.0);
+        sb.add_all(&mut a);
+        for id in 0..3u64 {
+            sb.feed(&mut a, id, 1, (id + 1) as f64);
+        }
+        // Snapshot BEFORE draining: pending stops and the promotion
+        // queue must both survive the roundtrip.
+        let text = TrialScheduler::snapshot(&a).to_string();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let mut b = HyperBandScheduler::new(9, 3.0);
+        TrialScheduler::restore(&mut b, &parsed).unwrap();
+        assert_eq!(b.num_stopped(), a.num_stopped());
+        assert_eq!(b.drain_stops(), a.drain_stops());
+        assert_eq!(b.choose_trial_to_run(&sb.ctx()), Some(2));
+        assert_eq!(b.brackets.len(), a.brackets.len());
+        assert_eq!(b.brackets[0].milestone, a.brackets[0].milestone);
+        assert_eq!(b.assignment, a.assignment);
     }
 
     #[test]

@@ -8,7 +8,9 @@
 use std::collections::BTreeMap;
 
 use super::{Decision, ResultRow, SchedulerCtx, Trial, TrialScheduler};
+use crate::coordinator::persist::{f64s_from_json, f64s_to_json, id_map_from_json, id_map_to_json};
 use crate::coordinator::trial::TrialId;
+use crate::util::json::Json;
 
 /// Stop trials whose running average falls below the peer median.
 pub struct MedianStoppingRule {
@@ -96,6 +98,22 @@ impl TrialScheduler for MedianStoppingRule {
         // incremental — nothing to drop. Hook kept for symmetry.
         let _ = id;
     }
+
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("histories", id_map_to_json(&self.histories, |vs| f64s_to_json(vs))),
+            ("stopped", Json::Num(self.stopped as f64)),
+        ])
+    }
+
+    fn restore(&mut self, snap: &Json) -> Result<(), String> {
+        self.histories = snap
+            .get("histories")
+            .and_then(|h| id_map_from_json(h, f64s_from_json))
+            .ok_or("median snapshot: bad histories")?;
+        self.stopped = snap.get("stopped").and_then(|v| v.as_u64()).unwrap_or(0);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -160,6 +178,28 @@ mod tests {
             }
         }
         assert!(stopped);
+    }
+
+    #[test]
+    fn snapshot_restore_preserves_running_means() {
+        let mut sb = Sandbox::new(5, "acc", Mode::Max);
+        let mut a = MedianStoppingRule::new(3, 2);
+        for iter in 1..=2 {
+            for id in 0..5u64 {
+                sb.feed(&mut a, id, iter, if id == 0 { 0.1 } else { 0.8 });
+            }
+        }
+        let text = TrialScheduler::snapshot(&a).to_string();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let mut b = MedianStoppingRule::new(3, 2);
+        TrialScheduler::restore(&mut b, &parsed).unwrap();
+        // Iteration 3 is past grace: the restored instance must stop the
+        // bad trial exactly like the original would.
+        for id in 1..5u64 {
+            sb.feed(&mut b, id, 3, 0.8);
+        }
+        assert_eq!(sb.feed(&mut b, 0, 3, 0.1), Decision::Stop);
+        assert_eq!(b.num_stopped(), 1);
     }
 
     #[test]

@@ -114,6 +114,19 @@ pub trait TrialScheduler: Send {
     fn drain_stops(&mut self) -> Vec<TrialId> {
         Vec::new()
     }
+
+    /// Serialize all mutable state for the experiment snapshot (see
+    /// `coordinator::persist`). Stateless schedulers return `Null`.
+    fn snapshot(&self) -> crate::util::json::Json {
+        crate::util::json::Json::Null
+    }
+
+    /// Rebuild state from a [`TrialScheduler::snapshot`] value, so a
+    /// resumed experiment continues with identical decisions. The
+    /// receiver was freshly constructed with the same parameters.
+    fn restore(&mut self, _snap: &crate::util::json::Json) -> Result<(), String> {
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -134,6 +147,7 @@ pub(crate) mod testutil {
 
     /// Drive `n` trials through `scheduler`, feeding per-trial metric
     /// sequences; returns the decisions taken at each (trial, iter).
+    #[derive(Clone)]
     pub struct Sandbox {
         pub trials: BTreeMap<TrialId, Trial>,
         pub metric: String,

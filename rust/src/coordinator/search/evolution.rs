@@ -6,9 +6,10 @@
 //! children mutate a random parent's config (perturb continuous dims,
 //! occasionally resample; resample categoricals with low probability).
 
-use super::SearchAlgorithm;
+use super::{scored_from_json, scored_to_json, SearchAlgorithm};
 use crate::coordinator::spec::{sample_config, ParamDist, SearchSpace};
 use crate::coordinator::trial::{Config, Mode, ParamValue, ResultRow};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// (mu + lambda) evolutionary search: children mutate top-mu parents.
@@ -128,6 +129,30 @@ impl SearchAlgorithm for EvolutionSearch {
     }
 
     fn on_result(&mut self, _config: &Config, _result: &ResultRow) {}
+
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("remaining", Json::Num(self.remaining as f64)),
+            ("evaluated", Json::Num(self.evaluated as f64)),
+            ("parents", scored_to_json(&self.parents)),
+        ])
+    }
+
+    fn restore(&mut self, snap: &Json) -> Result<(), String> {
+        self.remaining = snap
+            .get("remaining")
+            .and_then(|v| v.as_u64())
+            .ok_or("evolution snapshot: bad remaining")? as usize;
+        self.evaluated = snap
+            .get("evaluated")
+            .and_then(|v| v.as_u64())
+            .ok_or("evolution snapshot: bad evaluated")? as usize;
+        self.parents = snap
+            .get("parents")
+            .and_then(scored_from_json)
+            .ok_or("evolution snapshot: bad parents")?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

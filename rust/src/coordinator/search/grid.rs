@@ -4,8 +4,10 @@
 //! grid, matching Tune's semantics.
 
 use super::SearchAlgorithm;
+use crate::coordinator::persist::{config_from_json, config_to_json};
 use crate::coordinator::spec::{expand_grid, SearchSpace};
 use crate::coordinator::trial::Config;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Exhaustive sweep over the grid cross-product, repeated `num_samples`
@@ -51,6 +53,32 @@ impl SearchAlgorithm for GridSearch {
             self.pass += 1;
         }
         cfg
+    }
+
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("pass", Json::Num(self.pass as f64)),
+            ("emitted_in_pass", Json::Num(self.emitted_in_pass as f64)),
+            ("current", Json::Arr(self.current.iter().map(config_to_json).collect())),
+        ])
+    }
+
+    fn restore(&mut self, snap: &Json) -> Result<(), String> {
+        self.pass =
+            snap.get("pass").and_then(|v| v.as_u64()).ok_or("grid snapshot: bad pass")? as usize;
+        self.emitted_in_pass = snap
+            .get("emitted_in_pass")
+            .and_then(|v| v.as_u64())
+            .ok_or("grid snapshot: bad cursor")? as usize;
+        self.current = snap
+            .get("current")
+            .and_then(|c| c.as_arr())
+            .ok_or("grid snapshot: bad current pass")?
+            .iter()
+            .map(config_from_json)
+            .collect::<Option<_>>()
+            .ok_or("grid snapshot: bad config")?;
+        Ok(())
     }
 }
 

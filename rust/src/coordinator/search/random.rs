@@ -5,6 +5,7 @@
 use super::SearchAlgorithm;
 use crate::coordinator::spec::{sample_config, SearchSpace};
 use crate::coordinator::trial::Config;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// I.i.d. sampling from the search space, `num_samples` times.
@@ -31,6 +32,18 @@ impl SearchAlgorithm for RandomSearch {
         }
         self.remaining -= 1;
         Some(sample_config(&self.space, rng))
+    }
+
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![("remaining", Json::Num(self.remaining as f64))])
+    }
+
+    fn restore(&mut self, snap: &Json) -> Result<(), String> {
+        self.remaining = snap
+            .get("remaining")
+            .and_then(|v| v.as_u64())
+            .ok_or("random snapshot: bad remaining")? as usize;
+        Ok(())
     }
 }
 

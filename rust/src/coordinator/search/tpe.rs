@@ -12,9 +12,10 @@
 //! candidates from l and keeps the candidate maximizing l(x)/g(x) — the
 //! expected-improvement surrogate.
 
-use super::SearchAlgorithm;
+use super::{scored_from_json, scored_to_json, SearchAlgorithm};
 use crate::coordinator::spec::{ParamDist, SearchSpace};
 use crate::coordinator::trial::{Config, Mode, ParamValue, ResultRow};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Tree-structured Parzen Estimator: model good/bad observation
@@ -214,6 +215,25 @@ impl SearchAlgorithm for TpeSearch {
     }
 
     fn on_result(&mut self, _config: &Config, _result: &ResultRow) {}
+
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("remaining", Json::Num(self.remaining as f64)),
+            ("observations", scored_to_json(&self.observations)),
+        ])
+    }
+
+    fn restore(&mut self, snap: &Json) -> Result<(), String> {
+        self.remaining = snap
+            .get("remaining")
+            .and_then(|v| v.as_u64())
+            .ok_or("tpe snapshot: bad remaining")? as usize;
+        self.observations = snap
+            .get("observations")
+            .and_then(scored_from_json)
+            .ok_or("tpe snapshot: bad observations")?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

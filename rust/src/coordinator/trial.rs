@@ -149,6 +149,31 @@ impl TrialStatus {
     pub fn is_terminal(&self) -> bool {
         matches!(self, TrialStatus::Completed | TrialStatus::Stopped | TrialStatus::Errored)
     }
+
+    /// Stable label used in snapshots and JSONL logs.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TrialStatus::Pending => "Pending",
+            TrialStatus::Running => "Running",
+            TrialStatus::Paused => "Paused",
+            TrialStatus::Completed => "Completed",
+            TrialStatus::Stopped => "Stopped",
+            TrialStatus::Errored => "Errored",
+        }
+    }
+
+    /// Parse a label written by [`TrialStatus::as_str`].
+    pub fn from_label(s: &str) -> Option<Self> {
+        Some(match s {
+            "Pending" => TrialStatus::Pending,
+            "Running" => TrialStatus::Running,
+            "Paused" => TrialStatus::Paused,
+            "Completed" => TrialStatus::Completed,
+            "Stopped" => TrialStatus::Stopped,
+            "Errored" => TrialStatus::Errored,
+            _ => return None,
+        })
+    }
 }
 
 /// One training run with a (mutable under PBT) hyperparameter
@@ -203,6 +228,91 @@ impl Trial {
         }
     }
 
+    /// Serialize for the experiment snapshot (see `coordinator::persist`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::coordinator::persist::{config_to_json, u64_to_json};
+        use crate::util::json::Json;
+        let row_json = |r: &ResultRow| {
+            Json::obj(vec![
+                ("iteration", Json::Num(r.iteration as f64)),
+                ("time_total_s", Json::Num(r.time_total_s)),
+                (
+                    "metrics",
+                    Json::Obj(r.metrics.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect()),
+                ),
+            ])
+        };
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("config", config_to_json(&self.config)),
+            ("status", Json::Str(self.status.as_str().into())),
+            ("cpu", Json::Num(self.resources.cpu)),
+            ("gpu", Json::Num(self.resources.gpu)),
+            (
+                "custom",
+                Json::Obj(
+                    self.resources
+                        .custom
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                        .collect(),
+                ),
+            ),
+            ("iteration", Json::Num(self.iteration as f64)),
+            ("time_total_s", Json::Num(self.time_total_s)),
+            ("last_result", self.last_result.as_ref().map(row_json).unwrap_or(Json::Null)),
+            ("best_metric", self.best_metric.map(Json::Num).unwrap_or(Json::Null)),
+            (
+                "checkpoint",
+                self.checkpoint.map(|c| Json::Num(c as f64)).unwrap_or(Json::Null),
+            ),
+            ("num_failures", Json::Num(self.num_failures as f64)),
+            ("seed", u64_to_json(self.seed)),
+            ("mutations", Json::Num(self.mutations as f64)),
+        ])
+    }
+
+    /// Rebuild a trial from a snapshot written by [`Trial::to_json`].
+    pub fn from_json(j: &crate::util::json::Json) -> Option<Trial> {
+        use crate::coordinator::persist::{config_from_json, u64_from_json};
+        let row = |r: &crate::util::json::Json| -> Option<ResultRow> {
+            Some(ResultRow {
+                iteration: r.get("iteration")?.as_u64()?,
+                time_total_s: r.get("time_total_s")?.as_f64()?,
+                metrics: r
+                    .get("metrics")?
+                    .as_obj()?
+                    .iter()
+                    .map(|(k, v)| v.as_f64().map(|f| (k.clone(), f)))
+                    .collect::<Option<_>>()?,
+            })
+        };
+        Some(Trial {
+            id: j.get("id")?.as_u64()?,
+            config: config_from_json(j.get("config")?)?,
+            status: TrialStatus::from_label(j.get("status")?.as_str()?)?,
+            resources: {
+                let mut r =
+                    Resources::cpu_gpu(j.get("cpu")?.as_f64()?, j.get("gpu")?.as_f64()?);
+                if let Some(custom) = j.get("custom").and_then(|c| c.as_obj()) {
+                    for (k, v) in custom {
+                        r.custom.insert(k.clone(), v.as_f64()?);
+                    }
+                }
+                r
+            },
+            node: None, // placement is rebuilt on relaunch
+            iteration: j.get("iteration")?.as_u64()?,
+            time_total_s: j.get("time_total_s")?.as_f64()?,
+            last_result: j.get("last_result").and_then(row),
+            best_metric: j.get("best_metric").and_then(|m| m.as_f64()),
+            checkpoint: j.get("checkpoint").and_then(|c| c.as_u64()),
+            num_failures: j.get("num_failures")?.as_u64()? as u32,
+            seed: u64_from_json(j.get("seed")?)?,
+            mutations: j.get("mutations")?.as_u64()? as u32,
+        })
+    }
+
     /// Record a result row, updating iteration, time and best metric.
     pub fn record(&mut self, row: ResultRow, metric: &str, mode: Mode) {
         self.iteration = row.iteration;
@@ -253,6 +363,34 @@ mod tests {
         assert!(TrialStatus::Errored.is_terminal());
         assert!(!TrialStatus::Paused.is_terminal());
         assert!(!TrialStatus::Pending.is_terminal());
+    }
+
+    #[test]
+    fn snapshot_json_roundtrip_preserves_everything() {
+        let mut c = cfg(0.015625);
+        c.insert("layers".into(), ParamValue::I64(3));
+        c.insert("act".into(), ParamValue::Str("gelu".into()));
+        let mut t = Trial::new(9, c, Resources::cpu(2.0).with_custom("tpu", 0.5), u64::MAX - 7);
+        t.status = TrialStatus::Paused;
+        t.record(ResultRow::new(4, 3.25).with("loss", 0.125), "loss", Mode::Min);
+        t.checkpoint = Some(17);
+        t.num_failures = 2;
+        t.mutations = 1;
+        let text = t.to_json().to_string();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let back = Trial::from_json(&parsed).unwrap();
+        assert_eq!(back.id, t.id);
+        assert_eq!(back.config, t.config);
+        assert_eq!(back.status, t.status);
+        assert_eq!(back.resources, t.resources);
+        assert_eq!(back.iteration, 4);
+        assert_eq!(back.time_total_s, 3.25);
+        assert_eq!(back.last_result.as_ref().unwrap().metrics, t.last_result.unwrap().metrics);
+        assert_eq!(back.best_metric, Some(0.125));
+        assert_eq!(back.checkpoint, Some(17));
+        assert_eq!(back.num_failures, 2);
+        assert_eq!(back.seed, u64::MAX - 7);
+        assert_eq!(back.mutations, 1);
     }
 
     #[test]

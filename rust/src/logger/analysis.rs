@@ -2,6 +2,32 @@
 //! trials/configs, and extract best-metric-vs-budget curves — the
 //! "performance analysis" role Vizier/Tune expose to users, and what
 //! the benches use to compare schedulers (C1/C2).
+//!
+//! The loader is deliberately crash-tolerant: a half-written final line
+//! (the process died mid-`write`) is skipped, and a missing
+//! `experiment.json` summary is never required — only the per-trial
+//! `trial_*.jsonl` files are read.
+//!
+//! # Example
+//!
+//! ```
+//! use tune::coordinator::trial::Mode;
+//! use tune::logger::ExperimentAnalysis;
+//!
+//! let dir = std::env::temp_dir().join(format!("tune_doc_analysis_{}", std::process::id()));
+//! std::fs::create_dir_all(&dir).unwrap();
+//! std::fs::write(
+//!     dir.join("trial_0000.jsonl"),
+//!     "{\"trial\":0,\"config\":{\"lr\":0.1},\"seed\":1}\n\
+//!      {\"trial\":0,\"iteration\":1,\"time_total_s\":1.0,\"loss\":0.5}\n",
+//! )
+//! .unwrap();
+//!
+//! let a = ExperimentAnalysis::load(&dir).unwrap();
+//! assert_eq!(a.num_results(), 1);
+//! assert_eq!(a.best_trial("loss", Mode::Min), Some((0, 0.5)));
+//! std::fs::remove_dir_all(&dir).unwrap();
+//! ```
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -195,6 +221,48 @@ mod tests {
             assert!(w[1].1 <= w[0].1 + 1e-12);
             assert!(w[1].0 >= w[0].0);
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tolerates_truncated_final_line() {
+        // Regression (crash-mid-write): a process killed while flushing
+        // leaves a partial last line; analysis must keep every complete
+        // row and ignore the fragment.
+        let dir = std::env::temp_dir().join(format!("tune_analysis_trunc_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("trial_0000.jsonl"),
+            "{\"trial\":0,\"config\":{\"lr\":0.1},\"seed\":1}\n\
+             {\"trial\":0,\"iteration\":1,\"time_total_s\":1.0,\"loss\":0.5}\n\
+             {\"trial\":0,\"iteration\":2,\"time_total_s\":2.0,\"lo",
+        )
+        .unwrap();
+        let a = ExperimentAnalysis::load(&dir).unwrap();
+        assert_eq!(a.trials.len(), 1);
+        assert_eq!(a.num_results(), 1); // the fragment is dropped
+        assert_eq!(a.best_trial("loss", Mode::Min), Some((0, 0.5)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tolerates_missing_experiment_summary() {
+        // Regression (crash before on_experiment_end): no experiment.json
+        // exists, only trial logs — load must still succeed.
+        let dir = std::env::temp_dir().join(format!("tune_analysis_nosum_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut l = JsonlLogger::new(dir.clone()).unwrap();
+        let mut c = Config::new();
+        c.insert("lr".into(), ParamValue::F64(0.2));
+        let t = Trial::new(4, c, Resources::cpu(1.0), 0);
+        l.on_result(&t, &ResultRow::new(1, 1.0).with("loss", 0.9));
+        drop(l); // crash: neither on_trial_end nor on_experiment_end ran
+        assert!(!dir.join("experiment.json").exists());
+        let a = ExperimentAnalysis::load(&dir).unwrap();
+        assert_eq!(a.trials.len(), 1);
+        assert_eq!(a.trials[&4].rows.len(), 1);
+        assert!(a.trials[&4].end_status.is_none());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

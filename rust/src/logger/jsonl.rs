@@ -4,7 +4,7 @@
 //! back.
 
 use std::collections::BTreeMap;
-use std::fs::File;
+use std::fs::{File, OpenOptions};
 use std::io::{BufWriter, Write};
 use std::path::PathBuf;
 
@@ -17,13 +17,25 @@ use super::ResultLogger;
 pub struct JsonlLogger {
     dir: PathBuf,
     writers: BTreeMap<TrialId, BufWriter<File>>,
+    /// Resume mode: append to existing trial logs (headers already
+    /// written before the crash) instead of truncating them.
+    append: bool,
 }
 
 impl JsonlLogger {
     /// Create (and mkdir -p) a logger rooted at `dir`.
     pub fn new(dir: PathBuf) -> std::io::Result<Self> {
         std::fs::create_dir_all(&dir)?;
-        Ok(JsonlLogger { dir, writers: BTreeMap::new() })
+        Ok(JsonlLogger { dir, writers: BTreeMap::new(), append: false })
+    }
+
+    /// Logger for a resumed experiment: existing `trial_*.jsonl` files
+    /// are appended to (their header lines survive from the previous
+    /// run); logs for trials first seen after the resume are created
+    /// normally. The runner prunes stale rows before attaching this.
+    pub fn resume(dir: PathBuf) -> std::io::Result<Self> {
+        std::fs::create_dir_all(&dir)?;
+        Ok(JsonlLogger { dir, writers: BTreeMap::new(), append: true })
     }
 
     /// The directory logs are written under.
@@ -64,20 +76,42 @@ impl JsonlLogger {
 impl ResultLogger for JsonlLogger {
     fn on_result(&mut self, trial: &Trial, row: &ResultRow) {
         let dir = self.dir.clone();
+        let append = self.append;
         let w = self.writers.entry(trial.id).or_insert_with(|| {
             let path = dir.join(format!("trial_{:04}.jsonl", trial.id));
-            let mut w = BufWriter::new(File::create(path).expect("create trial log"));
-            // First line: the trial header (config, seed).
-            let header = Json::obj(vec![
-                ("trial", Json::Num(trial.id as f64)),
-                ("config", Self::config_json(trial)),
-                ("config_str", Json::Str(config_str(&trial.config))),
-                ("seed", Json::Num(trial.seed as f64)),
-            ]);
-            writeln!(w, "{}", header.to_string()).ok();
+            // Resume mode reopens a surviving log in append position (its
+            // header is already on disk); everything else starts fresh.
+            let existing = append
+                && std::fs::metadata(&path).map(|m| m.len() > 0).unwrap_or(false);
+            let file = if existing {
+                OpenOptions::new().append(true).open(&path)
+            } else {
+                File::create(&path)
+            };
+            let mut w = BufWriter::new(file.expect("create trial log"));
+            if !existing {
+                // First line: the trial header (config, seed). The seed
+                // is a full-range u64 (forked from the experiment RNG),
+                // so it is hex-encoded — Json::Num is an f64 and would
+                // round it.
+                let header = Json::obj(vec![
+                    ("trial", Json::Num(trial.id as f64)),
+                    ("config", Self::config_json(trial)),
+                    ("config_str", Json::Str(config_str(&trial.config))),
+                    ("seed", crate::util::json::u64_to_json(trial.seed)),
+                ]);
+                writeln!(w, "{}", header.to_string()).ok();
+            }
             w
         });
         writeln!(w, "{}", Self::row_json(trial, row).to_string()).ok();
+    }
+
+    /// Replayed rows are logged normally: the resume path pruned this
+    /// trial's log back to the rollback point, so re-writing them keeps
+    /// the on-disk history complete and duplicate-free.
+    fn on_replayed_result(&mut self, trial: &Trial, row: &ResultRow) {
+        self.on_result(trial, row);
     }
 
     fn on_trial_end(&mut self, trial: &Trial) {
@@ -113,6 +147,18 @@ impl ResultLogger for JsonlLogger {
                 .collect(),
         );
         std::fs::write(self.dir.join("experiment.json"), summary.to_string()).ok();
+    }
+}
+
+impl Drop for JsonlLogger {
+    /// Flush everything buffered: rows logged before a panic or an
+    /// abandoned run must still reach disk (`BufWriter`'s own drop
+    /// flushes too, but silently — this makes the guarantee explicit
+    /// and keeps it even if the buffering strategy changes).
+    fn drop(&mut self) {
+        for w in self.writers.values_mut() {
+            w.flush().ok();
+        }
     }
 }
 
@@ -154,6 +200,46 @@ mod tests {
             crate::util::json::parse(&std::fs::read_to_string(dir.join("experiment.json")).unwrap())
                 .unwrap();
         assert_eq!(summary.as_arr().unwrap().len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn flushes_on_drop_without_trial_end() {
+        // Regression: rows from a crashed/abandoned run must reach disk
+        // even though on_trial_end/on_experiment_end never ran.
+        let dir = tmpdir("drop");
+        {
+            let mut l = JsonlLogger::new(dir.clone()).unwrap();
+            let mut c = Config::new();
+            c.insert("lr".into(), ParamValue::F64(0.1));
+            let t = Trial::new(1, c, Resources::cpu(1.0), 0);
+            l.on_result(&t, &ResultRow::new(1, 0.5).with("loss", 1.0));
+        } // dropped here, mid-experiment
+        let log = std::fs::read_to_string(dir.join("trial_0001.jsonl")).unwrap();
+        assert_eq!(log.lines().count(), 2); // header + 1 row
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_appends_without_duplicate_header() {
+        let dir = tmpdir("resume");
+        let mut c = Config::new();
+        c.insert("lr".into(), ParamValue::F64(0.1));
+        let t = Trial::new(2, c, Resources::cpu(1.0), 0);
+        {
+            let mut l = JsonlLogger::new(dir.clone()).unwrap();
+            l.on_result(&t, &ResultRow::new(1, 0.5).with("loss", 1.0));
+        }
+        {
+            let mut l = JsonlLogger::resume(dir.clone()).unwrap();
+            l.on_result(&t, &ResultRow::new(2, 1.0).with("loss", 0.8));
+        }
+        let log = std::fs::read_to_string(dir.join("trial_0002.jsonl")).unwrap();
+        let lines: Vec<&str> = log.lines().collect();
+        assert_eq!(lines.len(), 3, "{log}"); // one header + two rows
+        assert!(lines[0].contains("config"));
+        assert!(lines[1].contains("\"iteration\":1"));
+        assert!(lines[2].contains("\"iteration\":2"));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -19,6 +19,12 @@ pub use progress::ProgressReporter;
 pub trait ResultLogger: Send {
     /// One intermediate result arrived for `trial`.
     fn on_result(&mut self, trial: &Trial, row: &ResultRow);
+    /// A crash-resume *replayed* result: the iteration was already
+    /// processed (and reported) before the crash and is re-executing
+    /// only to rebuild state. Default: ignored, so live reporters do
+    /// not double-report; durable logs override this to re-write the
+    /// pruned rows (see `JsonlLogger`).
+    fn on_replayed_result(&mut self, _trial: &Trial, _row: &ResultRow) {}
     /// `trial` reached a terminal status.
     fn on_trial_end(&mut self, _trial: &Trial) {}
     /// The whole experiment finished.

@@ -65,11 +65,19 @@ COMMANDS
              --exec sim|threads|pool  executor (default per workload)
              --workers N        pool worker threads (default 4)
              --metric NAME --mode min|max
-             --log-dir DIR      write JSONL logs
+             --log-dir DIR      write JSONL logs (no durability)
+             --exp-dir DIR      durable experiment directory: JSONL logs,
+                                spilled checkpoints and periodic atomic
+                                state snapshots (crash-safe)
+             --resume           continue the experiment in --exp-dir from
+                                its latest snapshot
+             --snapshot-every N snapshot cadence in results (default 50)
              --seed N
   shootout   --samples N --iters N   compare all schedulers (sim, C1)
   loc-table  regenerate Table 1 (lines of code per algorithm)
-  analyze    --log-dir DIR --metric NAME --mode min|max"
+  analyze    --log-dir DIR --metric NAME --mode min|max
+             (accepts an --exp-dir experiment directory too; prints its
+              manifest and snapshot status when present)"
     );
 }
 
@@ -228,6 +236,9 @@ fn cmd_run(flags: &Flags) {
         exec,
         progress_every: flags.get_u64("progress-every", 200),
         log_dir: flags.0.get("log-dir").map(PathBuf::from),
+        experiment_dir: flags.0.get("exp-dir").map(PathBuf::from),
+        snapshot_every: flags.get_u64("snapshot-every", 50),
+        resume: flags.0.get("resume").is_some(),
     };
 
     let label = sched.label();
@@ -305,6 +316,9 @@ fn run_spec_file(path: &std::path::Path, flags: &Flags) {
             .get("log-dir")
             .map(PathBuf::from)
             .or_else(|| Some(PathBuf::from(format!("tune_logs/{}", f.spec.name)))),
+        experiment_dir: flags.0.get("exp-dir").map(PathBuf::from),
+        snapshot_every: flags.get_u64("snapshot-every", 50),
+        resume: flags.0.get("resume").is_some(),
     };
     let label = f.scheduler.label();
     println!("spec {:?}: workload={} scheduler={} trials={}",
@@ -371,9 +385,43 @@ fn cmd_loc_table() {
 }
 
 fn cmd_analyze(flags: &Flags) {
-    let dir = PathBuf::from(flags.get("log-dir", "tune_logs"));
+    let dir = flags
+        .0
+        .get("exp-dir")
+        .or_else(|| flags.0.get("log-dir"))
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("tune_logs"));
     let metric = flags.get("metric", "loss");
     let mode = if flags.get("mode", "min") == "max" { Mode::Max } else { Mode::Min };
+    // Durable experiment directories carry a manifest + snapshot; show
+    // their status so users can see whether the run is resumable.
+    // `open` is read-only: analyze must work on read-only mounts and
+    // never scaffold checkpoints/ into plain log dirs.
+    if dir.join("experiment.meta.json").exists() {
+        let exp = tune::coordinator::ExperimentDir::open(dir.clone());
+        if let Some(m) = exp.read_manifest() {
+            let get = |k: &str| m.get(k).and_then(|v| v.as_str()).unwrap_or("?").to_string();
+            println!(
+                "experiment {:?}: scheduler={} exec={} (durable dir)",
+                get("name"),
+                get("scheduler"),
+                get("exec"),
+            );
+            match exp.read_snapshot() {
+                Some(s) => {
+                    let finished =
+                        s.get("finished").and_then(|v| v.as_bool()).unwrap_or(false);
+                    println!(
+                        "snapshot: {} at experiment time {:.1}s{}",
+                        if finished { "final" } else { "mid-run" },
+                        s.get("now").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                        if finished { "" } else { " — resumable with `tune run --resume`" },
+                    );
+                }
+                None => println!("snapshot: none yet"),
+            }
+        }
+    }
     let a = ExperimentAnalysis::load(&dir).expect("reading log dir");
     println!("{} trials, {} results", a.trials.len(), a.num_results());
     match a.best_trial(&metric, mode) {

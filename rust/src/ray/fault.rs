@@ -91,6 +91,55 @@ impl FaultInjector {
         }
     }
 
+    /// Serialize mutable state for the experiment snapshot, so resumed
+    /// runs draw the same fault stream they would have uninterrupted.
+    pub fn snapshot(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("rng", crate::util::json::u64_to_json(self.rng.state())),
+            ("tick", Json::Num(self.tick as f64)),
+            (
+                "pending_restarts",
+                Json::Arr(
+                    self.pending_restarts
+                        .iter()
+                        .map(|(n, t)| {
+                            Json::Arr(vec![Json::Num(*n as f64), Json::Num(*t as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("step_failures", Json::Num(self.injected_step_failures as f64)),
+            ("node_failures", Json::Num(self.injected_node_failures as f64)),
+        ])
+    }
+
+    /// Rebuild state from a [`FaultInjector::snapshot`] value.
+    pub fn restore(&mut self, snap: &crate::util::json::Json) -> Result<(), String> {
+        let state = snap
+            .get("rng")
+            .and_then(crate::util::json::u64_from_json)
+            .ok_or("fault snapshot: bad rng state")?;
+        self.rng.set_state(state);
+        self.tick = snap.get("tick").and_then(|v| v.as_u64()).ok_or("fault snapshot: bad tick")?;
+        self.pending_restarts = snap
+            .get("pending_restarts")
+            .and_then(|p| p.as_arr())
+            .ok_or("fault snapshot: bad restarts")?
+            .iter()
+            .map(|e| {
+                let a = e.as_arr()?;
+                Some((a.first()?.as_u64()? as NodeId, a.get(1)?.as_u64()?))
+            })
+            .collect::<Option<_>>()
+            .ok_or("fault snapshot: bad restart entry")?;
+        self.injected_step_failures =
+            snap.get("step_failures").and_then(|v| v.as_u64()).unwrap_or(0);
+        self.injected_node_failures =
+            snap.get("node_failures").and_then(|v| v.as_u64()).unwrap_or(0);
+        Ok(())
+    }
+
     /// Advance one tick; returns (node to kill, nodes to restart now).
     pub fn tick(&mut self, alive: &[NodeId]) -> (Option<NodeId>, Vec<NodeId>) {
         self.tick += 1;

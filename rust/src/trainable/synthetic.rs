@@ -71,18 +71,23 @@ impl Trainable for CurveTrainable {
     }
 
     fn save(&mut self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(16);
+        // Full state including the noise RNG, so restoring a checkpoint
+        // replays the exact metric stream — the property crash-safe
+        // resume (`--resume`) relies on for deterministic outcomes.
+        let mut out = Vec::with_capacity(24);
         out.extend_from_slice(&self.t.to_le_bytes());
         out.extend_from_slice(&self.quality.to_le_bytes());
+        out.extend_from_slice(&self.rng.state().to_le_bytes());
         out
     }
 
     fn restore(&mut self, blob: &[u8]) -> Result<(), String> {
-        if blob.len() != 16 {
+        if blob.len() != 24 {
             return Err(format!("bad curve checkpoint: {} bytes", blob.len()));
         }
         self.t = u64::from_le_bytes(blob[..8].try_into().unwrap());
-        self.quality = f64::from_le_bytes(blob[8..].try_into().unwrap());
+        self.quality = f64::from_le_bytes(blob[8..16].try_into().unwrap());
+        self.rng.set_state(u64::from_le_bytes(blob[16..].try_into().unwrap()));
         Ok(())
     }
 
@@ -145,18 +150,22 @@ impl Trainable for NonStationaryTrainable {
     }
 
     fn save(&mut self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(16);
+        // Includes the noise RNG state for replay-exact restores (see
+        // CurveTrainable::save).
+        let mut out = Vec::with_capacity(24);
         out.extend_from_slice(&self.t.to_le_bytes());
         out.extend_from_slice(&self.score.to_le_bytes());
+        out.extend_from_slice(&self.rng.state().to_le_bytes());
         out
     }
 
     fn restore(&mut self, blob: &[u8]) -> Result<(), String> {
-        if blob.len() != 16 {
+        if blob.len() != 24 {
             return Err("bad checkpoint".into());
         }
         self.t = u64::from_le_bytes(blob[..8].try_into().unwrap());
-        self.score = f64::from_le_bytes(blob[8..].try_into().unwrap());
+        self.score = f64::from_le_bytes(blob[8..16].try_into().unwrap());
+        self.rng.set_state(u64::from_le_bytes(blob[16..].try_into().unwrap()));
         Ok(())
     }
 
@@ -242,6 +251,40 @@ mod tests {
         let mut b = CurveTrainable::new(&cfg(0.02), 3);
         b.restore(&blob).unwrap();
         assert_eq!(b.t, 50);
+    }
+
+    #[test]
+    fn curve_checkpoint_restore_is_replay_exact() {
+        // A restored trainable must emit the same metric stream the
+        // original would — noise included (the rng state travels in the
+        // blob). Crash-safe resume depends on this.
+        let mut a = CurveTrainable::new(&cfg(0.02), 3);
+        for _ in 0..10 {
+            a.step().unwrap();
+        }
+        let blob = a.save();
+        let mut b = CurveTrainable::new(&cfg(0.02), 3);
+        b.restore(&blob).unwrap();
+        for _ in 0..20 {
+            assert_eq!(
+                a.step().unwrap().metrics["accuracy"],
+                b.step().unwrap().metrics["accuracy"]
+            );
+        }
+    }
+
+    #[test]
+    fn nonstationary_checkpoint_restore_is_replay_exact() {
+        let mut a = NonStationaryTrainable::new(&cfg(0.05), 9);
+        for _ in 0..7 {
+            a.step().unwrap();
+        }
+        let blob = a.save();
+        let mut b = NonStationaryTrainable::new(&cfg(0.05), 9);
+        b.restore(&blob).unwrap();
+        for _ in 0..20 {
+            assert_eq!(a.step().unwrap().metrics["score"], b.step().unwrap().metrics["score"]);
+        }
     }
 
     #[test]

@@ -312,6 +312,22 @@ impl<'a> Parser<'a> {
     }
 }
 
+/// Encode a `u64` losslessly (hex string — [`Json::Num`] is an f64 and
+/// would corrupt values above 2^53, e.g. RNG states and trial seeds).
+pub fn u64_to_json(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+/// Decode a `u64` written by [`u64_to_json`].
+pub fn u64_from_json(j: &Json) -> Option<u64> {
+    match j {
+        Json::Str(s) => u64::from_str_radix(s, 16).ok(),
+        // Tolerate plain numbers (small counters round-trip exactly).
+        Json::Num(n) if *n >= 0.0 => Some(*n as u64),
+        _ => None,
+    }
+}
+
 fn utf8_len(first: u8) -> usize {
     match first {
         0xc0..=0xdf => 2,

@@ -27,6 +27,17 @@ impl Rng {
         Rng::new(self.next_u64() ^ salt.wrapping_mul(0xBF58476D1CE4E5B9))
     }
 
+    /// The raw generator state, for snapshot/resume. Restoring it with
+    /// [`Rng::set_state`] continues the stream exactly where it left off.
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
+    /// Overwrite the generator state (see [`Rng::state`]).
+    pub fn set_state(&mut self, state: u64) {
+        self.state = state;
+    }
+
     /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
@@ -106,6 +117,18 @@ mod tests {
         for _ in 0..100 {
             assert_eq!(a.next_u64(), b.next_u64());
         }
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_stream() {
+        let mut a = Rng::new(11);
+        a.next_u64();
+        let saved = a.state();
+        let expect: Vec<u64> = (0..10).map(|_| a.next_u64()).collect();
+        let mut b = Rng::new(0);
+        b.set_state(saved);
+        let got: Vec<u64> = (0..10).map(|_| b.next_u64()).collect();
+        assert_eq!(expect, got);
     }
 
     #[test]

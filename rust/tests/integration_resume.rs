@@ -1,0 +1,239 @@
+//! Durability end to end: run an ASHA experiment, hard-stop the runner
+//! mid-flight at a snapshot boundary, resume from the experiment
+//! directory, and finish with the identical outcome the same seed
+//! produces uninterrupted — under both the `sim` and `pool` executors.
+//!
+//! Determinism scope: with one trial in flight (`max_concurrent = 1`)
+//! the event order is fully sequential on every executor, so resume is
+//! bit-exact. (With concurrent trials the post-resume interleaving may
+//! differ, like any async system; ARCHITECTURE.md documents this.)
+
+use std::path::PathBuf;
+
+use tune::coordinator::spec::{SearchSpace, SpaceBuilder};
+use tune::coordinator::{
+    build_runner, run_experiments, ExecMode, ExperimentResult, ExperimentSpec, Mode, RunOptions,
+    SchedulerKind, SearchKind, TrialStatus,
+};
+use tune::logger::ExperimentAnalysis;
+use tune::ray::{Cluster, Resources};
+use tune::trainable::factory;
+use tune::trainable::synthetic::CurveTrainable;
+
+const SAMPLES: usize = 12;
+const ITERS: u64 = 27;
+const SEED: u64 = 21;
+/// Deliberately offset from `checkpoint_freq` (5) so the crash lands
+/// between checkpoints and the replay path is exercised.
+const SNAPSHOT_EVERY: u64 = 7;
+
+fn spec() -> ExperimentSpec {
+    let mut spec = ExperimentSpec::named("resume-asha");
+    spec.metric = "accuracy".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = SAMPLES;
+    spec.max_iterations_per_trial = ITERS;
+    spec.seed = SEED;
+    spec.max_concurrent = 1; // sequential events: bit-exact resume
+    spec.checkpoint_freq = 5;
+    spec
+}
+
+fn space() -> SearchSpace {
+    SpaceBuilder::new()
+        .loguniform("lr", 1e-4, 1.0)
+        .uniform("momentum", 0.8, 0.99)
+        .build()
+}
+
+fn scheduler() -> SchedulerKind {
+    SchedulerKind::Asha { grace_period: 1, reduction_factor: 3.0, max_t: ITERS }
+}
+
+fn opts(exec: ExecMode, exp_dir: Option<PathBuf>, resume: bool) -> RunOptions {
+    RunOptions {
+        cluster: Cluster::uniform(2, Resources::cpu(4.0)),
+        exec,
+        experiment_dir: exp_dir,
+        snapshot_every: SNAPSHOT_EVERY,
+        resume,
+        ..Default::default()
+    }
+}
+
+fn run(exec: ExecMode, exp_dir: Option<PathBuf>, resume: bool) -> ExperimentResult {
+    run_experiments(
+        spec(),
+        space(),
+        scheduler(),
+        SearchKind::Random,
+        factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+        opts(exec, exp_dir, resume),
+    )
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("tune_resume_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+/// Crash after two periodic snapshots, then resume; the final state must
+/// be identical to an uninterrupted run of the same seed.
+fn crash_resume_matches_uninterrupted(exec: ExecMode, tag: &str) {
+    let plain = run(exec, None, false);
+    assert_eq!(plain.trials.len(), SAMPLES);
+
+    let dir = tmpdir(tag);
+    // Phase 1: run until the second snapshot has been written, then
+    // abandon the runner mid-flight (the in-process analogue of a
+    // process kill at a snapshot boundary).
+    {
+        let mut runner = build_runner(
+            spec(),
+            space(),
+            scheduler(),
+            SearchKind::Random,
+            factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+            opts(exec, Some(dir.clone()), false),
+        );
+        let crashed = runner.run_to_crash(2);
+        assert!(crashed, "experiment finished before the crash point");
+        // Mid-flight state: at least one trial is non-terminal.
+        assert!(runner.trials().values().any(|t| !t.status.is_terminal()));
+    } // runner dropped here with live trials — the "crash"
+    assert!(dir.join("snapshot.json").exists());
+    assert!(dir.join("experiment.meta.json").exists());
+
+    // Phase 2: resume from the directory and run to completion.
+    let resumed = run(exec, Some(dir.clone()), true);
+
+    assert_eq!(resumed.trials.len(), plain.trials.len());
+    assert_eq!(resumed.best, plain.best, "best trial id diverged");
+    assert_eq!(resumed.best_metric(), plain.best_metric(), "best metric diverged");
+    assert_eq!(resumed.best_config(), plain.best_config(), "best config diverged");
+    for (a, b) in resumed.trials.values().zip(plain.trials.values()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.config, b.config, "trial {} config diverged", a.id);
+        assert_eq!(a.status, b.status, "trial {} status diverged", a.id);
+        assert_eq!(a.iteration, b.iteration, "trial {} iterations diverged", a.id);
+        assert_eq!(a.best_metric, b.best_metric, "trial {} metric diverged", a.id);
+    }
+    // Suppressed replays keep the result count exact across the crash.
+    assert_eq!(resumed.stats.results, plain.stats.results);
+    assert!(resumed.stats.replayed > 0, "the crash should have forced a replay");
+    // Checkpoint metadata carries time, so rollback/replay reconstructs
+    // per-trial time accounting exactly (virtual clock only — wall-clock
+    // executors measure real time).
+    if exec == ExecMode::Sim {
+        assert!(
+            (resumed.budget_used_s - plain.budget_used_s).abs() < 1e-9,
+            "budget diverged: {} vs {}",
+            resumed.budget_used_s,
+            plain.budget_used_s
+        );
+    }
+
+    // The on-disk logs are complete and duplicate-free: offline analysis
+    // sees exactly the rows an uninterrupted run would have produced,
+    // and agrees on the winner.
+    let analysis = ExperimentAnalysis::load(&dir).unwrap();
+    assert_eq!(analysis.num_results(), plain.stats.results as usize);
+    let (best_id, best_v) = analysis.best_trial("accuracy", Mode::Max).unwrap();
+    assert_eq!(Some(best_id), plain.best);
+    let plain_best = plain.best_metric().unwrap();
+    assert!((best_v - plain_best).abs() < 1e-12, "{best_v} vs {plain_best}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn asha_crash_resume_is_deterministic_on_sim() {
+    crash_resume_matches_uninterrupted(ExecMode::Sim, "sim");
+}
+
+#[test]
+fn asha_crash_resume_is_deterministic_on_pool() {
+    crash_resume_matches_uninterrupted(ExecMode::Pool { workers: 2 }, "pool");
+}
+
+/// `--resume` on a directory that has no snapshot yet (crashed before
+/// the first snapshot, or never ran) starts fresh instead of failing.
+#[test]
+fn resume_without_snapshot_starts_fresh() {
+    let dir = tmpdir("fresh");
+    let res = run(ExecMode::Sim, Some(dir.clone()), true);
+    assert_eq!(res.trials.len(), SAMPLES);
+    assert!(res.trials.values().all(|t| t.status.is_terminal()));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A completed experiment's final snapshot is marked finished: resuming
+/// it is a no-op that reports the same result instead of re-running.
+#[test]
+fn resume_of_finished_experiment_is_a_noop() {
+    let dir = tmpdir("finished");
+    let first = run(ExecMode::Sim, Some(dir.clone()), false);
+    let again = run(ExecMode::Sim, Some(dir.clone()), true);
+    assert_eq!(again.trials.len(), first.trials.len());
+    assert_eq!(again.best, first.best);
+    assert_eq!(again.best_metric(), first.best_metric());
+    assert_eq!(again.stats.results, first.stats.results);
+    assert_eq!(again.stats.replayed, 0);
+    assert_eq!(again.count(TrialStatus::Completed), first.count(TrialStatus::Completed));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A fresh (non-resume) run into a directory holding a crashed run's
+/// state must clear it: a later `--resume` continues the fresh run, not
+/// the abandoned one, and the logs contain no stale rows.
+#[test]
+fn fresh_run_clears_stale_state_from_reused_dir() {
+    let dir = tmpdir("reuse");
+    {
+        let mut runner = build_runner(
+            spec(),
+            space(),
+            scheduler(),
+            SearchKind::Random,
+            factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+            opts(ExecMode::Sim, Some(dir.clone()), false),
+        );
+        assert!(runner.run_to_crash(1));
+    } // crashed run A: snapshot + partial logs + checkpoints on disk
+    assert!(dir.join("snapshot.json").exists());
+
+    let fresh = run(ExecMode::Sim, Some(dir.clone()), false); // run B
+    let again = run(ExecMode::Sim, Some(dir.clone()), true); // resume = no-op of B
+    assert_eq!(again.best, fresh.best);
+    assert_eq!(again.stats.results, fresh.stats.results);
+    assert_eq!(again.stats.replayed, 0);
+    // The logs hold exactly run B's rows — nothing stale survived.
+    let analysis = ExperimentAnalysis::load(&dir).unwrap();
+    assert_eq!(analysis.num_results(), fresh.stats.results as usize);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Crash-resume also survives on the thread-per-trial executor (the
+/// third executor `--resume` must honor); outcome equality is checked
+/// structurally since trial threads interleave.
+#[test]
+fn crash_resume_completes_on_threads() {
+    let dir = tmpdir("threads");
+    {
+        let mut runner = build_runner(
+            spec(),
+            space(),
+            scheduler(),
+            SearchKind::Random,
+            factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+            opts(ExecMode::Threads, Some(dir.clone()), false),
+        );
+        assert!(runner.run_to_crash(2));
+    }
+    let resumed = run(ExecMode::Threads, Some(dir.clone()), true);
+    assert_eq!(resumed.trials.len(), SAMPLES);
+    assert!(resumed.trials.values().all(|t| t.status.is_terminal()));
+    assert!(resumed.best.is_some());
+    std::fs::remove_dir_all(&dir).ok();
+}
