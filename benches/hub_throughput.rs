@@ -1,0 +1,79 @@
+//! Hub serving bench: experiments/sec and steady-state live-trial
+//! occupancy when N experiments are multiplexed over ONE shared
+//! 4-worker pool (1 / 4 / 16 concurrent experiments).
+//!
+//! What to look for:
+//! * experiments/sec should grow with concurrency until the pool
+//!   saturates — the hub's whole point is that serving 16 studies does
+//!   not cost 16 pools;
+//! * mean occupancy (live trials summed over experiments, sampled at
+//!   every completion event) should sit near the global live-trial
+//!   budget — fair-share admission keeps the pool busy even when each
+//!   individual experiment is tiny.
+//!
+//! Run: `cargo bench --bench hub_throughput`
+
+use tune::coordinator::hub::{ExperimentHub, Submission};
+use tune::coordinator::spec::SpaceBuilder;
+use tune::coordinator::{ExperimentSpec, Mode, ParamValue, SchedulerKind, SearchKind};
+use tune::trainable::factory;
+use tune::trainable::synthetic::ConstTrainable;
+
+const WORKERS: usize = 4;
+const SAMPLES: usize = 16;
+const ITERS: u64 = 8;
+
+fn submission(name: &str, seed: u64) -> Submission {
+    let mut spec = ExperimentSpec::named(name);
+    spec.metric = "iters".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = SAMPLES;
+    spec.max_iterations_per_trial = ITERS;
+    spec.seed = seed;
+    let space = SpaceBuilder::new().constant("step_cost", ParamValue::F64(1.0)).build();
+    Submission::new(
+        spec,
+        space,
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        factory(|c, s| Box::new(ConstTrainable::new(c, s))),
+    )
+}
+
+fn run_fleet(n: usize) -> (f64, f64, u64) {
+    let mut hub = ExperimentHub::new(WORKERS, 4 * WORKERS);
+    for i in 0..n {
+        hub.submit(submission(&format!("bench-{i}"), i as u64)).expect("submit");
+    }
+    let t0 = std::time::Instant::now();
+    let results = hub.run_all();
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(results.len(), n);
+    let trials: u64 = results.iter().map(|(_, r)| r.trials.len() as u64).sum();
+    (wall, hub.mean_occupancy(), trials)
+}
+
+fn main() {
+    println!(
+        "== hub throughput: {SAMPLES} trials x {ITERS} iters per experiment, \
+         {WORKERS} workers, {} live-trial slots ==",
+        4 * WORKERS
+    );
+    println!(
+        "{:>12} {:>10} {:>12} {:>12} {:>14} {:>12}",
+        "experiments", "wall(s)", "exps/sec", "trials/sec", "results/sec", "occupancy"
+    );
+    for n in [1usize, 4, 16] {
+        let (wall, occupancy, trials) = run_fleet(n);
+        let results = trials * ITERS;
+        println!(
+            "{:>12} {:>10.3} {:>12.2} {:>12.1} {:>14.0} {:>12.2}",
+            n,
+            wall,
+            n as f64 / wall,
+            trials as f64 / wall,
+            results as f64 / wall,
+            occupancy
+        );
+    }
+}

@@ -17,12 +17,26 @@
 //!   is decoupled from trial count. Wall-clock time. This is the
 //!   production substrate: thousand-trial experiments no longer burn a
 //!   thread per trial.
+//!
+//! On top of the pool machinery sits the [`SharedPool`]: ONE bounded
+//! worker pool multiplexed across many *experiments*. Each experiment
+//! gets its own [`SharedPoolHandle`] (an [`Executor`]), trial ids are
+//! namespaced per experiment, and completion events are routed back to
+//! the owning experiment — the substrate under
+//! [`crate::coordinator::hub::ExperimentHub`].
+//!
+//! All wall-clock substrates contain trainable panics: a panicking
+//! `step()` (or constructor/restore) surfaces as [`ExecEvent::Failed`]
+//! so the runner's `max_failures` recovery applies, instead of
+//! poisoning shared state and cascading `lock().unwrap()` panics
+//! through the coordinator.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
-use std::sync::mpsc::{Receiver, Sender};
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::trial::{Config, Trial, TrialId};
 use crate::trainable::{StepOutput, Trainable, TrainableFactory};
@@ -37,7 +51,7 @@ pub enum ExecEvent {
         /// Metrics (and done flag) the trainable reported.
         out: StepOutput,
     },
-    /// The trial's step raised an error (crash, injected fault, ...).
+    /// The trial's step raised an error (crash, injected fault, panic).
     Failed {
         /// Trial that failed.
         trial: TrialId,
@@ -79,18 +93,64 @@ pub trait Executor: Send {
     fn num_live(&self) -> usize;
 }
 
+/// Render a caught panic payload for an [`ExecEvent::Failed`] message.
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    p.downcast_ref::<&str>()
+        .map(|s| (*s).to_string())
+        .or_else(|| p.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "unknown panic payload".into())
+}
+
+/// Build (and optionally restore) a trainable, converting panics into
+/// launch errors so one bad constructor cannot take down the
+/// coordinator thread — the runner marks the trial Errored and moves on.
+fn build_trainable(
+    factory: &TrainableFactory,
+    trial: &Trial,
+    restore: Option<Vec<u8>>,
+) -> Result<Box<dyn Trainable>, String> {
+    let config = &trial.config;
+    let seed = trial.seed;
+    let mut t = catch_unwind(AssertUnwindSafe(|| (factory)(config, seed)))
+        .map_err(|p| format!("trainable construction panicked: {}", panic_msg(&*p)))?;
+    if let Some(blob) = restore {
+        catch_unwind(AssertUnwindSafe(|| t.restore(&blob)))
+            .map_err(|p| format!("trainable restore panicked: {}", panic_msg(&*p)))??;
+    }
+    Ok(t)
+}
+
+/// Run one step with panic containment: a panicking trainable becomes a
+/// step error (→ [`ExecEvent::Failed`] → `max_failures` recovery), not
+/// a dead worker thread or a poisoned mutex.
+fn step_contained(t: &mut Box<dyn Trainable>) -> Result<StepOutput, String> {
+    catch_unwind(AssertUnwindSafe(|| t.step()))
+        .unwrap_or_else(|p| Err(format!("trainable panicked: {}", panic_msg(&*p))))
+}
+
 // ---------------------------------------------------------------------------
 // Discrete-event executor
 // ---------------------------------------------------------------------------
 
-/// f64 ordered for the heap (times are finite by construction).
-#[derive(PartialEq, PartialOrd)]
+/// f64 ordered for the completion heap. Times are finite by
+/// construction (step costs are clamped positive), but the order is
+/// total anyway — NaN sorts first — so a pathological `step_cost` can
+/// never panic the queue.
 struct F64Ord(f64);
+impl PartialEq for F64Ord {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
 impl Eq for F64Ord {}
-#[allow(clippy::derive_ord_xor_partial_ord)]
+impl PartialOrd for F64Ord {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
 impl Ord for F64Ord {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.partial_cmp(other).unwrap()
+        crate::util::order::asc(self.0, other.0)
     }
 }
 
@@ -129,10 +189,7 @@ impl Executor for SimExecutor {
     }
 
     fn launch(&mut self, trial: &Trial, restore: Option<Vec<u8>>) -> Result<(), String> {
-        let mut t = (self.factory)(&trial.config, trial.seed);
-        if let Some(blob) = restore {
-            t.restore(&blob)?;
-        }
+        let t = build_trainable(&self.factory, trial, restore)?;
         *self.epoch.entry(trial.id).or_insert(0) += 1;
         self.live.insert(trial.id, t);
         Ok(())
@@ -156,7 +213,7 @@ impl Executor for SimExecutor {
             }
             let Some(t) = self.live.get_mut(&id) else { continue };
             self.now = self.now.max(at);
-            return Some(match t.step() {
+            return Some(match step_contained(t) {
                 Ok(out) => ExecEvent::Stepped { trial: id, out },
                 Err(error) => ExecEvent::Failed { trial: id, error },
             });
@@ -243,9 +300,24 @@ impl Executor for ThreadExecutor {
         let handle = std::thread::Builder::new()
             .name(format!("trial-{id}"))
             .spawn(move || {
-                let mut t = factory(&config, seed);
+                // Construction and restore run with panic containment:
+                // a dead worker thread would otherwise strand the runner
+                // waiting on an event that can never arrive.
+                let built = catch_unwind(AssertUnwindSafe(|| factory(&config, seed)))
+                    .map_err(|p| format!("trainable construction panicked: {}", panic_msg(&*p)));
+                let mut t = match built {
+                    Ok(t) => t,
+                    Err(error) => {
+                        let _ = events.send(ExecEvent::Failed { trial: id, error });
+                        return;
+                    }
+                };
                 if let Some(blob) = restore {
-                    if let Err(e) = t.restore(&blob) {
+                    let restored = catch_unwind(AssertUnwindSafe(|| t.restore(&blob)))
+                        .unwrap_or_else(|p| {
+                            Err(format!("trainable restore panicked: {}", panic_msg(&*p)))
+                        });
+                    if let Err(e) = restored {
                         let _ = events.send(ExecEvent::Failed { trial: id, error: e });
                         return;
                     }
@@ -253,7 +325,7 @@ impl Executor for ThreadExecutor {
                 while let Ok(cmd) = rx.recv() {
                     match cmd {
                         WorkerCmd::Step => {
-                            let ev = match t.step() {
+                            let ev = match step_contained(&mut t) {
                                 Ok(out) => ExecEvent::Stepped { trial: id, out },
                                 Err(error) => ExecEvent::Failed { trial: id, error },
                             };
@@ -337,10 +409,17 @@ impl Drop for ThreadExecutor {
 }
 
 // ---------------------------------------------------------------------------
-// Bounded work-stealing pool executor
+// Bounded work-stealing pool machinery (shared by PoolExecutor and
+// SharedPool, generic over the work key)
 // ---------------------------------------------------------------------------
 
-/// Per-trial mailbox state inside the pool.
+/// Key identifying one unit of poolable work: a plain [`TrialId`] for
+/// the single-experiment [`PoolExecutor`], an `(ExpId, TrialId)` pair
+/// for the hub-shared pool.
+trait PoolKey: Copy + Eq + std::hash::Hash + Send + 'static {}
+impl<T: Copy + Eq + std::hash::Hash + Send + 'static> PoolKey for T {}
+
+/// Per-trial mailbox state inside a pool.
 enum Slot {
     /// Trainable parked between steps; synchronous ops may touch it.
     Idle(Box<dyn Trainable>),
@@ -352,38 +431,187 @@ enum Slot {
 }
 
 /// Mailboxes + launch generations, guarded by one lock.
-#[derive(Default)]
-struct PoolState {
-    slots: HashMap<TrialId, Slot>,
-    /// Launch generation per trial id, bumped on every `launch`. Step
+struct PoolState<K> {
+    slots: HashMap<K, Slot>,
+    /// Launch generation per key, bumped on every `launch`. Step
     /// requests carry the epoch they were issued under; a request from a
-    /// previous incarnation of a relaunched id resolves as a skip
+    /// previous incarnation of a relaunched key resolves as a skip
     /// instead of stepping the new trainable (fault recovery relaunches
     /// ids while their old requests may still sit in the injector).
-    epochs: HashMap<TrialId, u64>,
+    epochs: HashMap<K, u64>,
 }
 
-/// State shared between the coordinator thread and the pool workers.
-struct PoolShared {
-    state: Mutex<PoolState>,
+impl<K> Default for PoolState<K> {
+    fn default() -> Self {
+        PoolState { slots: HashMap::new(), epochs: HashMap::new() }
+    }
+}
+
+/// State shared between the coordinator thread(s) and the pool workers.
+struct PoolShared<K> {
+    state: Mutex<PoolState<K>>,
     /// Signalled whenever a slot transitions out of `Busy` (check-in or
     /// halted-drop), waking synchronous ops parked in `with_idle` and
-    /// relaunches parked in `launch`.
+    /// relaunches parked in `launch_slot`.
     idle_cv: Condvar,
 }
 
-/// Internal event stream: every queued step request produces exactly one
-/// entry, so `next_event` can count in-flight work without timeouts.
-enum PoolEvent {
-    Exec(ExecEvent),
-    /// The request targeted a halted/missing trial; no runner event.
-    Skipped,
+impl<K: PoolKey> PoolShared<K> {
+    fn new() -> Self {
+        PoolShared { state: Mutex::new(PoolState::default()), idle_cv: Condvar::new() }
+    }
+
+    /// Park a freshly built trainable in the key's mailbox, bumping the
+    /// launch epoch. A relaunch can race a halted-mid-step worker; wait
+    /// for the stale slot to clear so the worker cannot drop the new
+    /// trainable.
+    fn launch_slot(&self, key: K, t: Box<dyn Trainable>) {
+        let mut st = self.state.lock().unwrap();
+        while st.slots.contains_key(&key) {
+            st = self.idle_cv.wait(st).unwrap();
+        }
+        *st.epochs.entry(key).or_insert(0) += 1;
+        st.slots.insert(key, Slot::Idle(t));
+    }
+
+    /// The key's current launch epoch (0 if never launched).
+    fn epoch_of(&self, key: K) -> u64 {
+        self.state.lock().unwrap().epochs.get(&key).copied().unwrap_or(0)
+    }
+
+    /// Run `f` on the key's parked trainable, waiting out an in-flight
+    /// step first. `None` if the key is not live.
+    fn with_idle<R>(&self, key: K, f: impl FnOnce(&mut Box<dyn Trainable>) -> R) -> Option<R> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if matches!(st.slots.get(&key), Some(Slot::Busy)) {
+                st = self.idle_cv.wait(st).unwrap();
+                continue;
+            }
+            return match st.slots.get_mut(&key) {
+                Some(Slot::Idle(t)) => Some(f(t)),
+                _ => None,
+            };
+        }
+    }
+
+    /// Tear the key's trainable down (deferred to the worker's check-in
+    /// when a step is in flight).
+    fn halt_slot(&self, key: K) {
+        let mut st = self.state.lock().unwrap();
+        if matches!(st.slots.get(&key), Some(Slot::Busy)) {
+            // Mid-step: leave a marker; the worker drops the trainable
+            // and clears the slot at check-in.
+            st.slots.insert(key, Slot::Halted);
+        } else if !matches!(st.slots.get(&key), Some(Slot::Halted)) {
+            st.slots.remove(&key);
+            self.idle_cv.notify_all();
+        }
+    }
+
+    /// Live (non-halted) slots satisfying `pred`.
+    fn count_live(&self, pred: impl Fn(&K) -> bool) -> usize {
+        self.state
+            .lock()
+            .unwrap()
+            .slots
+            .iter()
+            .filter(|&(k, s)| pred(k) && !matches!(s, Slot::Halted))
+            .count()
+    }
 }
+
+/// Internal event stream: every queued step request produces exactly one
+/// entry, so receivers can count in-flight work without timeouts.
+enum RawEvent<K> {
+    /// The checked-out trainable ran one step (success or error).
+    Done { key: K, result: Result<StepOutput, String> },
+    /// The request targeted a halted/stale key; no runner event.
+    Skipped { key: K },
+}
+
+/// One pool worker: steal a key from the injector, check its trainable
+/// out, step it (with panic containment), check it back in, emit the
+/// event. The state lock is never held across a step, so a panicking
+/// trainable cannot poison it.
+fn pool_worker<K: PoolKey>(
+    injector_rx: &Mutex<Receiver<(K, u64)>>,
+    event_tx: &Sender<RawEvent<K>>,
+    shared: &PoolShared<K>,
+) {
+    loop {
+        // Holding the lock across recv is fine: at most one idle worker
+        // parks inside recv; the rest park on the mutex and rotate in as
+        // work arrives.
+        let (key, epoch) = match injector_rx.lock().unwrap().recv() {
+            Ok(req) => req,
+            Err(_) => return, // injector closed: executor dropped
+        };
+        // Check out: Idle -> Busy. Requests from a previous launch epoch
+        // and halted/missing keys are answered with a Skipped marker so
+        // in-flight accounting stays exact.
+        let taken = {
+            let mut st = shared.state.lock().unwrap();
+            if st.epochs.get(&key).copied().unwrap_or(0) != epoch {
+                None
+            } else {
+                match st.slots.remove(&key) {
+                    Some(Slot::Idle(t)) => {
+                        st.slots.insert(key, Slot::Busy);
+                        Some(t)
+                    }
+                    Some(other) => {
+                        st.slots.insert(key, other);
+                        None
+                    }
+                    None => None,
+                }
+            }
+        };
+        let Some(mut t) = taken else {
+            if event_tx.send(RawEvent::Skipped { key }).is_err() {
+                return;
+            }
+            continue;
+        };
+
+        let result = step_contained(&mut t);
+
+        // Check in: Busy -> Idle, unless halted mid-step (drop it). A
+        // panicked trainable checks in too — the Failed event routes
+        // through handle_failure, which halts and relaunches it from
+        // its last checkpoint.
+        let halted = {
+            let mut st = shared.state.lock().unwrap();
+            match st.slots.remove(&key) {
+                Some(Slot::Busy) => {
+                    st.slots.insert(key, Slot::Idle(t));
+                    false
+                }
+                _ => true,
+            }
+        };
+        shared.idle_cv.notify_all();
+
+        let event = if halted {
+            RawEvent::Skipped { key }
+        } else {
+            RawEvent::Done { key, result }
+        };
+        if event_tx.send(event).is_err() {
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Single-experiment bounded pool executor
+// ---------------------------------------------------------------------------
 
 /// Wall-clock executor with a **bounded** worker pool: N workers service
 /// M ≫ N live trials. Step requests go through a shared injector queue
 /// that idle workers steal from; each trial's trainable lives in a
-/// mailbox [`Slot`] that is checked out for the duration of one step.
+/// mailbox slot that is checked out for the duration of one step.
 /// Synchronous operations (`save`/`restore`/`update_config`) briefly wait
 /// for an in-flight step to park, preserving the "idle between steps"
 /// contract the runner relies on.
@@ -392,14 +620,14 @@ enum PoolEvent {
 /// runs on `num_cpus` threads instead of 10 000.
 pub struct PoolExecutor {
     factory: TrainableFactory,
-    shared: Arc<PoolShared>,
+    shared: Arc<PoolShared<TrialId>>,
     /// Work queue of (trial, launch epoch) feeding the workers; dropped
     /// first on teardown so the workers observe a closed channel and
     /// exit.
     injector_tx: Option<Sender<(TrialId, u64)>>,
-    event_rx: Receiver<PoolEvent>,
+    event_rx: Receiver<RawEvent<TrialId>>,
     workers: Vec<std::thread::JoinHandle<()>>,
-    /// Step requests queued but not yet answered by a `PoolEvent`.
+    /// Step requests queued but not yet answered by a [`RawEvent`].
     queued: usize,
     started: Instant,
 }
@@ -411,9 +639,8 @@ impl PoolExecutor {
         let workers = workers.max(1);
         let (injector_tx, injector_rx) = mpsc::channel::<(TrialId, u64)>();
         let injector_rx = Arc::new(Mutex::new(injector_rx));
-        let (event_tx, event_rx) = mpsc::channel::<PoolEvent>();
-        let shared =
-            Arc::new(PoolShared { state: Mutex::new(PoolState::default()), idle_cv: Condvar::new() });
+        let (event_tx, event_rx) = mpsc::channel::<RawEvent<TrialId>>();
+        let shared = Arc::new(PoolShared::new());
 
         let handles = (0..workers)
             .map(|w| {
@@ -442,94 +669,6 @@ impl PoolExecutor {
     pub fn num_workers(&self) -> usize {
         self.workers.len()
     }
-
-    /// Run `f` on the trial's parked trainable, waiting out an in-flight
-    /// step first. `None` if the trial is not live.
-    fn with_idle<R>(&self, id: TrialId, f: impl FnOnce(&mut Box<dyn Trainable>) -> R) -> Option<R> {
-        let mut st = self.shared.state.lock().unwrap();
-        loop {
-            if matches!(st.slots.get(&id), Some(Slot::Busy)) {
-                st = self.shared.idle_cv.wait(st).unwrap();
-                continue;
-            }
-            return match st.slots.get_mut(&id) {
-                Some(Slot::Idle(t)) => Some(f(t)),
-                _ => None,
-            };
-        }
-    }
-}
-
-/// One pool worker: steal a trial id from the injector, check its
-/// trainable out, step it, check it back in, emit the event.
-fn pool_worker(
-    injector_rx: &Mutex<Receiver<(TrialId, u64)>>,
-    event_tx: &Sender<PoolEvent>,
-    shared: &PoolShared,
-) {
-    loop {
-        // Holding the lock across recv is fine: at most one idle worker
-        // parks inside recv; the rest park on the mutex and rotate in as
-        // work arrives.
-        let (id, epoch) = match injector_rx.lock().unwrap().recv() {
-            Ok(req) => req,
-            Err(_) => return, // injector closed: executor dropped
-        };
-        // Check out: Idle -> Busy. Requests from a previous launch epoch
-        // and halted/missing trials are answered with a Skipped marker so
-        // next_event's accounting stays exact.
-        let taken = {
-            let mut st = shared.state.lock().unwrap();
-            if st.epochs.get(&id).copied().unwrap_or(0) != epoch {
-                None
-            } else {
-                match st.slots.remove(&id) {
-                    Some(Slot::Idle(t)) => {
-                        st.slots.insert(id, Slot::Busy);
-                        Some(t)
-                    }
-                    Some(other) => {
-                        st.slots.insert(id, other);
-                        None
-                    }
-                    None => None,
-                }
-            }
-        };
-        let Some(mut t) = taken else {
-            if event_tx.send(PoolEvent::Skipped).is_err() {
-                return;
-            }
-            continue;
-        };
-
-        let result = t.step();
-
-        // Check in: Busy -> Idle, unless halted mid-step (drop it).
-        let halted = {
-            let mut st = shared.state.lock().unwrap();
-            match st.slots.remove(&id) {
-                Some(Slot::Busy) => {
-                    st.slots.insert(id, Slot::Idle(t));
-                    false
-                }
-                _ => true,
-            }
-        };
-        shared.idle_cv.notify_all();
-
-        let event = if halted {
-            PoolEvent::Skipped
-        } else {
-            PoolEvent::Exec(match result {
-                Ok(out) => ExecEvent::Stepped { trial: id, out },
-                Err(error) => ExecEvent::Failed { trial: id, error },
-            })
-        };
-        if event_tx.send(event).is_err() {
-            return;
-        }
-    }
 }
 
 impl Executor for PoolExecutor {
@@ -538,23 +677,13 @@ impl Executor for PoolExecutor {
     }
 
     fn launch(&mut self, trial: &Trial, restore: Option<Vec<u8>>) -> Result<(), String> {
-        let mut t = (self.factory)(&trial.config, trial.seed);
-        if let Some(blob) = restore {
-            t.restore(&blob)?;
-        }
-        let mut st = self.shared.state.lock().unwrap();
-        // A relaunch can race a halted-mid-step worker; wait for the
-        // stale slot to clear so the worker cannot drop the new trainable.
-        while st.slots.contains_key(&trial.id) {
-            st = self.shared.idle_cv.wait(st).unwrap();
-        }
-        *st.epochs.entry(trial.id).or_insert(0) += 1;
-        st.slots.insert(trial.id, Slot::Idle(t));
+        let t = build_trainable(&self.factory, trial, restore)?;
+        self.shared.launch_slot(trial.id, t);
         Ok(())
     }
 
     fn request_step(&mut self, id: TrialId) {
-        let epoch = self.shared.state.lock().unwrap().epochs.get(&id).copied().unwrap_or(0);
+        let epoch = self.shared.epoch_of(id);
         if let Some(tx) = &self.injector_tx {
             if tx.send((id, epoch)).is_ok() {
                 self.queued += 1;
@@ -565,11 +694,14 @@ impl Executor for PoolExecutor {
     fn next_event(&mut self) -> Option<ExecEvent> {
         while self.queued > 0 {
             match self.event_rx.recv() {
-                Ok(PoolEvent::Exec(ev)) => {
+                Ok(RawEvent::Done { key, result }) => {
                     self.queued -= 1;
-                    return Some(ev);
+                    return Some(match result {
+                        Ok(out) => ExecEvent::Stepped { trial: key, out },
+                        Err(error) => ExecEvent::Failed { trial: key, error },
+                    });
                 }
-                Ok(PoolEvent::Skipped) => self.queued -= 1,
+                Ok(RawEvent::Skipped { .. }) => self.queued -= 1,
                 Err(_) => return None,
             }
         }
@@ -577,38 +709,25 @@ impl Executor for PoolExecutor {
     }
 
     fn save(&mut self, id: TrialId) -> Option<Vec<u8>> {
-        self.with_idle(id, |t| t.save())
+        self.shared.with_idle(id, |t| t.save())
     }
 
     fn restore(&mut self, id: TrialId, blob: &[u8]) -> Result<(), String> {
-        self.with_idle(id, |t| t.restore(blob)).unwrap_or_else(|| Err("trial not live".into()))
+        self.shared
+            .with_idle(id, |t| t.restore(blob))
+            .unwrap_or_else(|| Err("trial not live".into()))
     }
 
     fn update_config(&mut self, id: TrialId, config: &Config) {
-        self.with_idle(id, |t| t.update_config(config));
+        self.shared.with_idle(id, |t| t.update_config(config));
     }
 
     fn halt(&mut self, id: TrialId) {
-        let mut st = self.shared.state.lock().unwrap();
-        if matches!(st.slots.get(&id), Some(Slot::Busy)) {
-            // Mid-step: leave a marker; the worker drops the trainable
-            // and clears the slot at check-in.
-            st.slots.insert(id, Slot::Halted);
-        } else if !matches!(st.slots.get(&id), Some(Slot::Halted)) {
-            st.slots.remove(&id);
-            self.shared.idle_cv.notify_all();
-        }
+        self.shared.halt_slot(id);
     }
 
     fn num_live(&self) -> usize {
-        self.shared
-            .state
-            .lock()
-            .unwrap()
-            .slots
-            .values()
-            .filter(|s| !matches!(s, Slot::Halted))
-            .count()
+        self.shared.count_live(|_| true)
     }
 }
 
@@ -620,6 +739,303 @@ impl Drop for PoolExecutor {
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared multi-experiment pool
+// ---------------------------------------------------------------------------
+
+/// Identifies one experiment multiplexed onto a [`SharedPool`].
+pub type ExpId = u32;
+
+/// Work key on the shared pool: (experiment, trial).
+type SharedKey = (ExpId, TrialId);
+
+/// Outcome of one [`SharedPool`] poll by the hub.
+#[derive(Debug)]
+pub(crate) enum PoolPoll {
+    /// A completion event for the given experiment.
+    Event(ExpId, ExecEvent),
+    /// No step request is in flight anywhere: every experiment is idle.
+    Idle,
+    /// In-flight work exists but nothing completed within the timeout.
+    Timeout,
+}
+
+/// Per-experiment routing state: events received on the single shared
+/// channel are credited to the owning experiment, and those destined
+/// for a handle other than the caller are buffered until that
+/// experiment is driven.
+struct Router {
+    buffers: HashMap<ExpId, VecDeque<ExecEvent>>,
+    queued: HashMap<ExpId, usize>,
+    total_queued: usize,
+}
+
+impl Router {
+    fn inc(&mut self, exp: ExpId) {
+        *self.queued.entry(exp).or_insert(0) += 1;
+        self.total_queued += 1;
+    }
+    fn dec(&mut self, exp: ExpId) {
+        if let Some(n) = self.queued.get_mut(&exp) {
+            *n = n.saturating_sub(1);
+        }
+        self.total_queued = self.total_queued.saturating_sub(1);
+    }
+    fn pop_any(&mut self) -> Option<(ExpId, ExecEvent)> {
+        for (exp, q) in self.buffers.iter_mut() {
+            if let Some(ev) = q.pop_front() {
+                return Some((*exp, ev));
+            }
+        }
+        None
+    }
+}
+
+struct SharedPoolInner {
+    shared: PoolShared<SharedKey>,
+    /// `None` after shutdown: late `request_step`s are dropped silently,
+    /// matching a closed single-experiment pool.
+    injector_tx: Mutex<Option<Sender<(SharedKey, u64)>>>,
+    event_rx: Mutex<Receiver<RawEvent<SharedKey>>>,
+    router: Mutex<Router>,
+}
+
+impl SharedPoolInner {
+    /// Settle a raw event under ONE router lock: decrement the owning
+    /// experiment's in-flight count and, for `Done` events, buffer the
+    /// runner-visible [`ExecEvent`] for that experiment. Accounting and
+    /// buffering must be atomic — were they split, a sibling handle
+    /// could observe `queued == 0` with an empty buffer in the window
+    /// between them and wrongly conclude its experiment is idle.
+    fn route(&self, raw: RawEvent<SharedKey>) {
+        let mut r = self.router.lock().unwrap();
+        match raw {
+            RawEvent::Skipped { key: (exp, _) } => r.dec(exp),
+            RawEvent::Done { key: (exp, trial), result } => {
+                r.dec(exp);
+                let ev = match result {
+                    Ok(out) => ExecEvent::Stepped { trial, out },
+                    Err(error) => ExecEvent::Failed { trial, error },
+                };
+                r.buffers.entry(exp).or_default().push_back(ev);
+            }
+        }
+    }
+}
+
+/// ONE bounded worker pool multiplexed across many experiments — the
+/// substrate under [`crate::coordinator::hub::ExperimentHub`]. Every
+/// experiment gets its own [`SharedPoolHandle`] (an [`Executor`] with a
+/// private trial-id namespace, clock and trainable factory); the pool
+/// fans all of their step requests into the same injector queue and
+/// routes completions back to the owning experiment.
+///
+/// Drop order: drop (or finish) the handles' owners before the pool —
+/// the pool's `Drop` closes the injector and joins its workers.
+pub struct SharedPool {
+    inner: Arc<SharedPoolInner>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    next_exp: ExpId,
+}
+
+impl SharedPool {
+    /// Spawn a shared pool of `workers` (min 1) threads.
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (injector_tx, injector_rx) = mpsc::channel::<(SharedKey, u64)>();
+        let injector_rx = Arc::new(Mutex::new(injector_rx));
+        let (event_tx, event_rx) = mpsc::channel::<RawEvent<SharedKey>>();
+        let inner = Arc::new(SharedPoolInner {
+            shared: PoolShared::new(),
+            injector_tx: Mutex::new(Some(injector_tx)),
+            event_rx: Mutex::new(event_rx),
+            router: Mutex::new(Router {
+                buffers: HashMap::new(),
+                queued: HashMap::new(),
+                total_queued: 0,
+            }),
+        });
+        let handles = (0..workers)
+            .map(|w| {
+                let injector_rx = Arc::clone(&injector_rx);
+                let event_tx = event_tx.clone();
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("tune-hub-pool-{w}"))
+                    .spawn(move || pool_worker(&injector_rx, &event_tx, &inner.shared))
+                    .expect("spawn shared pool worker")
+            })
+            .collect();
+        SharedPool { inner, workers: handles, next_exp: 0 }
+    }
+
+    /// Number of worker threads in the pool.
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Create the executor handle for one experiment. `factory` is
+    /// per-experiment: different experiments can run entirely different
+    /// workloads on the same pool.
+    pub fn handle(&mut self, factory: TrainableFactory) -> SharedPoolHandle {
+        let exp = self.next_exp;
+        self.next_exp += 1;
+        {
+            let mut r = self.inner.router.lock().unwrap();
+            r.buffers.entry(exp).or_default();
+            r.queued.entry(exp).or_insert(0);
+        }
+        SharedPoolHandle {
+            inner: Arc::clone(&self.inner),
+            factory,
+            exp,
+            started: Instant::now(),
+        }
+    }
+
+    /// Hub event pump: the next completion event from *any* experiment.
+    /// Returns [`PoolPoll::Idle`] when no request is in flight anywhere
+    /// (every experiment is quiescent) and [`PoolPoll::Timeout`] when
+    /// in-flight work exists but nothing completed within `timeout`.
+    pub(crate) fn poll(&self, timeout: Duration) -> PoolPoll {
+        let deadline = Instant::now() + timeout;
+        loop {
+            {
+                let mut r = self.inner.router.lock().unwrap();
+                if let Some((exp, ev)) = r.pop_any() {
+                    return PoolPoll::Event(exp, ev);
+                }
+                if r.total_queued == 0 {
+                    return PoolPoll::Idle;
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PoolPoll::Timeout;
+            }
+            let raw = {
+                let rx = self.inner.event_rx.lock().unwrap();
+                match rx.recv_timeout(deadline - now) {
+                    Ok(raw) => raw,
+                    Err(RecvTimeoutError::Timeout) => return PoolPoll::Timeout,
+                    Err(RecvTimeoutError::Disconnected) => return PoolPoll::Idle,
+                }
+            };
+            // Settled into the router; the loop top pops it (or reports
+            // Idle if it was a skip that drained the last request).
+            self.inner.route(raw);
+        }
+    }
+}
+
+impl Drop for SharedPool {
+    fn drop(&mut self) {
+        // Close the injector; workers drain and exit on the closed
+        // channel. Handles that outlive the pool see their sends fail
+        // silently (same contract as a halted trial).
+        self.inner.injector_tx.lock().unwrap().take();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One experiment's view of a [`SharedPool`]: a full [`Executor`] whose
+/// trial ids live in a private namespace, with a wall clock starting at
+/// handle creation (so a later-submitted experiment's `now()` starts at
+/// zero, keeping `max_experiment_time_s` per-experiment).
+pub struct SharedPoolHandle {
+    inner: Arc<SharedPoolInner>,
+    factory: TrainableFactory,
+    exp: ExpId,
+    started: Instant,
+}
+
+impl SharedPoolHandle {
+    /// The experiment id this handle routes under.
+    pub fn exp_id(&self) -> ExpId {
+        self.exp
+    }
+}
+
+impl Executor for SharedPoolHandle {
+    fn now(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    fn launch(&mut self, trial: &Trial, restore: Option<Vec<u8>>) -> Result<(), String> {
+        let t = build_trainable(&self.factory, trial, restore)?;
+        self.inner.shared.launch_slot((self.exp, trial.id), t);
+        Ok(())
+    }
+
+    fn request_step(&mut self, id: TrialId) {
+        let key = (self.exp, id);
+        let epoch = self.inner.shared.epoch_of(key);
+        let guard = self.inner.injector_tx.lock().unwrap();
+        if let Some(tx) = guard.as_ref() {
+            if tx.send((key, epoch)).is_ok() {
+                self.inner.router.lock().unwrap().inc(self.exp);
+            }
+        }
+    }
+
+    /// Standalone event wait (the hub uses [`SharedPool::poll`] instead
+    /// and feeds events in). Every received event is settled into the
+    /// router's per-experiment buffers under one lock, and the loop top
+    /// pops this handle's buffer — with a short receive timeout so a
+    /// sibling handle draining the channel concurrently cannot strand
+    /// this one.
+    fn next_event(&mut self) -> Option<ExecEvent> {
+        loop {
+            {
+                let mut r = self.inner.router.lock().unwrap();
+                if let Some(ev) =
+                    r.buffers.get_mut(&self.exp).and_then(|q| q.pop_front())
+                {
+                    return Some(ev);
+                }
+                if r.queued.get(&self.exp).copied().unwrap_or(0) == 0 {
+                    return None;
+                }
+            }
+            let recv = {
+                let rx = self.inner.event_rx.lock().unwrap();
+                rx.recv_timeout(Duration::from_millis(10))
+            };
+            match recv {
+                Ok(raw) => self.inner.route(raw),
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => return None,
+            }
+        }
+    }
+
+    fn save(&mut self, id: TrialId) -> Option<Vec<u8>> {
+        self.inner.shared.with_idle((self.exp, id), |t| t.save())
+    }
+
+    fn restore(&mut self, id: TrialId, blob: &[u8]) -> Result<(), String> {
+        self.inner
+            .shared
+            .with_idle((self.exp, id), |t| t.restore(blob))
+            .unwrap_or_else(|| Err("trial not live".into()))
+    }
+
+    fn update_config(&mut self, id: TrialId, config: &Config) {
+        self.inner.shared.with_idle((self.exp, id), |t| t.update_config(config));
+    }
+
+    fn halt(&mut self, id: TrialId) {
+        self.inner.shared.halt_slot((self.exp, id));
+    }
+
+    fn num_live(&self) -> usize {
+        let exp = self.exp;
+        self.inner.shared.count_live(|(e, _)| *e == exp)
     }
 }
 
@@ -756,6 +1172,86 @@ mod tests {
             ExecEvent::Stepped { out, .. } => assert_eq!(out.metrics["iters"], 1.0),
             e => panic!("{e:?}"),
         }
+    }
+
+    /// Panics on every `step`; used by the containment tests.
+    struct PanicTrainable;
+    impl Trainable for PanicTrainable {
+        fn step(&mut self) -> Result<StepOutput, String> {
+            panic!("kaboom");
+        }
+        fn save(&mut self) -> Vec<u8> {
+            Vec::new()
+        }
+        fn restore(&mut self, _blob: &[u8]) -> Result<(), String> {
+            Ok(())
+        }
+    }
+
+    fn panicky_factory() -> TrainableFactory {
+        // Config key "panic" selects the panicking trainable.
+        factory(|c, s| {
+            if c.contains_key("panic") {
+                Box::new(PanicTrainable)
+            } else {
+                Box::new(ConstTrainable::new(c, s))
+            }
+        })
+    }
+
+    fn mk_panic_trial(id: TrialId) -> Trial {
+        let mut c = Config::new();
+        c.insert("panic".into(), ParamValue::Bool(true));
+        Trial::new(id, c, Resources::cpu(1.0), id)
+    }
+
+    #[test]
+    fn pool_step_panic_surfaces_as_failed_and_pool_survives() {
+        // Regression: a panicking trainable used to kill the worker (or
+        // poison the shared mutex); now it must surface as Failed and
+        // leave the pool fully operational for other trials.
+        let mut ex = PoolExecutor::new(panicky_factory(), 1);
+        ex.launch(&mk_panic_trial(7), None).unwrap();
+        ex.launch(&mk_trial(1, 0.0), None).unwrap();
+        ex.request_step(7);
+        ex.request_step(1);
+        let mut failed = false;
+        let mut stepped = false;
+        for _ in 0..2 {
+            match ex.next_event().unwrap() {
+                ExecEvent::Failed { trial, error } => {
+                    assert_eq!(trial, 7);
+                    assert!(error.contains("panicked"), "{error}");
+                    assert!(error.contains("kaboom"), "{error}");
+                    failed = true;
+                }
+                ExecEvent::Stepped { trial, .. } => {
+                    assert_eq!(trial, 1);
+                    stepped = true;
+                }
+            }
+        }
+        assert!(failed && stepped);
+        // The shared state is not poisoned: synchronous ops still work.
+        assert!(ex.save(1).is_some());
+        ex.halt(7);
+        ex.halt(1);
+        assert_eq!(ex.num_live(), 0);
+    }
+
+    #[test]
+    fn threaded_step_panic_surfaces_as_failed() {
+        let mut ex = ThreadExecutor::new(panicky_factory());
+        ex.launch(&mk_panic_trial(3), None).unwrap();
+        ex.request_step(3);
+        match ex.next_event().unwrap() {
+            ExecEvent::Failed { trial, error } => {
+                assert_eq!(trial, 3);
+                assert!(error.contains("panicked"), "{error}");
+            }
+            e => panic!("{e:?}"),
+        }
+        ex.halt(3);
     }
 
     #[test]
@@ -918,5 +1414,77 @@ mod tests {
             }
         }
         assert_eq!(seen.len(), 16);
+    }
+
+    #[test]
+    fn shared_pool_routes_events_to_owning_experiment() {
+        // Two experiments, overlapping trial ids, one pool: each
+        // handle must only ever observe its own trials' events.
+        let mut pool = SharedPool::new(2);
+        let mut a = pool.handle(const_factory());
+        let mut b = pool.handle(const_factory());
+        assert_ne!(a.exp_id(), b.exp_id());
+        for id in 0..4 {
+            a.launch(&mk_trial(id, 0.0), None).unwrap();
+            b.launch(&mk_trial(id, 0.0), None).unwrap();
+            a.request_step(id);
+            b.request_step(id);
+        }
+        assert_eq!(a.num_live(), 4);
+        assert_eq!(b.num_live(), 4);
+        let drain = |h: &mut SharedPoolHandle| -> std::collections::BTreeSet<TrialId> {
+            let mut seen = std::collections::BTreeSet::new();
+            while let Some(ev) = h.next_event() {
+                match ev {
+                    ExecEvent::Stepped { trial, .. } => {
+                        seen.insert(trial);
+                    }
+                    e => panic!("{e:?}"),
+                }
+            }
+            seen
+        };
+        let seen_a = drain(&mut a);
+        let seen_b = drain(&mut b);
+        assert_eq!(seen_a, (0..4).collect());
+        assert_eq!(seen_b, (0..4).collect());
+        for id in 0..4 {
+            a.halt(id);
+        }
+        assert_eq!(a.num_live(), 0);
+        assert_eq!(b.num_live(), 4); // sibling untouched
+    }
+
+    #[test]
+    fn shared_pool_poll_reports_idle_and_events() {
+        let mut pool = SharedPool::new(1);
+        let mut a = pool.handle(const_factory());
+        assert!(matches!(pool.poll(Duration::from_millis(10)), PoolPoll::Idle));
+        a.launch(&mk_trial(0, 0.0), None).unwrap();
+        a.request_step(0);
+        match pool.poll(Duration::from_secs(5)) {
+            PoolPoll::Event(exp, ExecEvent::Stepped { trial, .. }) => {
+                assert_eq!(exp, a.exp_id());
+                assert_eq!(trial, 0);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(pool.poll(Duration::from_millis(10)), PoolPoll::Idle));
+    }
+
+    #[test]
+    fn shared_pool_halted_requests_settle_as_skips() {
+        let mut pool = SharedPool::new(1);
+        let mut a = pool.handle(const_factory());
+        a.launch(&mk_trial(0, 0.0), None).unwrap();
+        a.request_step(0);
+        a.halt(0);
+        // The stale request settles internally; poll reports Idle
+        // (possibly after consuming the skip), never a phantom event.
+        match pool.poll(Duration::from_secs(5)) {
+            PoolPoll::Idle => {}
+            other => panic!("{other:?}"),
+        }
+        assert!(a.next_event().is_none());
     }
 }

@@ -232,7 +232,8 @@ impl Default for RunOptions {
 
 /// The spec + options manifest written into an experiment directory, so
 /// `--resume` can sanity-check that it is continuing the same run.
-fn manifest_json(
+/// Shared with the hub, which writes one per multiplexed experiment.
+pub(crate) fn manifest_json(
     spec: &ExperimentSpec,
     scheduler: &SchedulerKind,
     search: &SearchKind,

@@ -1,0 +1,553 @@
+//! The experiment hub: N experiments multiplexed over ONE shared
+//! bounded worker pool.
+//!
+//! The paper positions Tune as a *platform*: many users' training
+//! scripts and many search algorithms share the system simultaneously.
+//! `run_experiments` gives one experiment a private executor; the
+//! [`ExperimentHub`] is the serving layer above it — a long-running
+//! coordinator that admits experiments dynamically, schedules all of
+//! their trials onto one [`SharedPool`], and keeps them isolated:
+//!
+//! * **Fair-share admission** — live-trial slots are split across
+//!   active experiments by weighted share (weight / total weight of a
+//!   configurable global live-trial budget), remainder rotating
+//!   round-robin so no experiment is starved; every active experiment
+//!   is always guaranteed at least one slot, which is also what makes
+//!   fault-recovery relaunches deadlock-free under exhausted quotas.
+//! * **Isolation** — each experiment keeps its own `TrialRunner` (trial
+//!   table, RNG streams, scheduler/search state, fault injector, simulated
+//!   cluster), its own trial-id namespace and wall clock on the pool,
+//!   and its own durable directory; completion events are routed back
+//!   to the owning experiment only. Results are identical to running
+//!   the same experiment alone with the same seed.
+//! * **Containment** — a trial reporting `NaN` ranks worst instead of
+//!   panicking a scheduler (see [`crate::util::order`]), and a
+//!   panicking trainable becomes a normal step failure, so one sick
+//!   experiment cannot take down its neighbors.
+//!
+//! `tune serve` wraps this in a file-based control plane: spec files
+//! dropped into `<dir>/queue/` become live experiments, `tune status`
+//! reads the published status file, `tune stop` ends the server.
+
+use std::time::{Duration, Instant};
+
+use crate::logger::JsonlLogger;
+use crate::ray::{Cluster, Resources};
+use crate::trainable::TrainableFactory;
+use crate::util::json::Json;
+
+use super::executor::{ExpId, PoolPoll, SharedPool};
+use super::experiment::{manifest_json, ExecMode, ExperimentSpec, SchedulerKind, SearchKind};
+use super::persist::ExperimentDir;
+use super::runner::{ExperimentResult, TrialRunner};
+use super::spec::SearchSpace;
+use super::trial::Mode;
+
+/// One experiment handed to [`ExperimentHub::submit`].
+pub struct Submission {
+    /// The experiment parameters (name, metric, samples, seed, ...).
+    pub spec: ExperimentSpec,
+    /// Hyperparameter search space.
+    pub space: SearchSpace,
+    /// Trial scheduler selection.
+    pub scheduler: SchedulerKind,
+    /// Search algorithm selection.
+    pub search: SearchKind,
+    /// Builds this experiment's trainables (per-experiment: different
+    /// experiments can run different workloads on the same pool).
+    pub factory: TrainableFactory,
+    /// Simulated cluster the experiment's trials lease resources from
+    /// (per-experiment, like every other piece of runner state).
+    pub cluster: Cluster,
+    /// Fair-share weight (min 1): slots are split proportionally.
+    pub weight: u64,
+    /// Durable experiment directory (JSONL logs, checkpoint spill,
+    /// periodic snapshots), if wanted.
+    pub experiment_dir: Option<std::path::PathBuf>,
+    /// Snapshot cadence in processed results when `experiment_dir` is
+    /// set (0 = final snapshot only).
+    pub snapshot_every: u64,
+}
+
+impl Submission {
+    /// A submission with defaults for everything but the four
+    /// experiment-defining pieces: 1-node/8-cpu cluster, weight 1, no
+    /// durable directory.
+    pub fn new(
+        spec: ExperimentSpec,
+        space: SearchSpace,
+        scheduler: SchedulerKind,
+        search: SearchKind,
+        factory: TrainableFactory,
+    ) -> Self {
+        Submission {
+            spec,
+            space,
+            scheduler,
+            search,
+            factory,
+            cluster: Cluster::uniform(1, Resources::cpu(8.0)),
+            weight: 1,
+            experiment_dir: None,
+            snapshot_every: 50,
+        }
+    }
+}
+
+/// Lifecycle of a hub-managed experiment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExperimentState {
+    /// Still holding (or eligible for) live trials.
+    Running,
+    /// Finalized; its [`ExperimentResult`] is available.
+    Finished,
+}
+
+struct HubSlot {
+    name: String,
+    exp: ExpId,
+    weight: u64,
+    runner: TrialRunner,
+    done: bool,
+    result: Option<ExperimentResult>,
+}
+
+/// A long-running multi-experiment coordinator: every submitted
+/// experiment's trials run concurrently over one shared bounded
+/// [`SharedPool`], with weighted fair-share admission and full
+/// per-experiment isolation (see the module docs).
+///
+/// ```
+/// use tune::coordinator::hub::{ExperimentHub, Submission};
+/// use tune::coordinator::spec::SpaceBuilder;
+/// use tune::coordinator::{ExperimentSpec, Mode, SchedulerKind, SearchKind};
+/// use tune::trainable::{factory, synthetic::CurveTrainable};
+///
+/// let mut hub = ExperimentHub::new(2, 8);
+/// for seed in 0..3u64 {
+///     let mut spec = ExperimentSpec::named(&format!("exp-{seed}"));
+///     spec.metric = "accuracy".into();
+///     spec.mode = Mode::Max;
+///     spec.num_samples = 4;
+///     spec.max_iterations_per_trial = 5;
+///     spec.seed = seed;
+///     let space = SpaceBuilder::new().loguniform("lr", 1e-4, 1.0).build();
+///     hub.submit(Submission::new(
+///         spec, space, SchedulerKind::Fifo, SearchKind::Random,
+///         factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+///     )).expect("submit");
+/// }
+/// let results = hub.run_all();
+/// assert_eq!(results.len(), 3);
+/// assert!(results.iter().all(|(_, r)| r.trials.len() == 4));
+/// ```
+pub struct ExperimentHub {
+    // Declared before `pool`: slots (and with them the runners' pool
+    // handles) drop first, so the pool's Drop can join its workers.
+    experiments: Vec<HubSlot>,
+    pool: SharedPool,
+    /// Global live-trial budget split across active experiments
+    /// (0 = no global cap; per-experiment caps and clusters still bind).
+    max_live: usize,
+    /// Rotates the fair-share remainder (and advances on completions)
+    /// so leftover slots spread evenly over time.
+    rr_cursor: usize,
+    occ_sum: f64,
+    occ_samples: u64,
+}
+
+impl ExperimentHub {
+    /// A hub over a fresh pool of `workers` threads, splitting at most
+    /// `max_live` concurrently-running trials across its experiments
+    /// (0 = unbounded: each experiment is limited only by its own
+    /// `max_concurrent` and cluster capacity).
+    pub fn new(workers: usize, max_live: usize) -> Self {
+        ExperimentHub {
+            experiments: Vec::new(),
+            pool: SharedPool::new(workers),
+            max_live,
+            rr_cursor: 0,
+            occ_sum: 0.0,
+            occ_samples: 0,
+        }
+    }
+
+    /// Number of pool worker threads serving all experiments.
+    pub fn num_workers(&self) -> usize {
+        self.pool.num_workers()
+    }
+
+    /// Admit an experiment; it starts running immediately (its first
+    /// admission pass happens inside this call). Returns the hub-level
+    /// experiment id. Errors (an unwritable durable directory, a failed
+    /// manifest write) reject only this submission — a long-running
+    /// server must never die because one user's experiment could not be
+    /// set up.
+    pub fn submit(&mut self, sub: Submission) -> Result<ExpId, String> {
+        // Validate the durable directory before allocating anything.
+        let durable = match sub.experiment_dir {
+            Some(root) => {
+                let dir = ExperimentDir::new(root.clone())
+                    .map_err(|e| format!("creating experiment dir {root:?}: {e}"))?;
+                // Hub submissions always start fresh (resume goes
+                // through `tune run --resume`); clear any stale durable
+                // state so a later resume cannot restore an abandoned
+                // run.
+                dir.reset()
+                    .map_err(|e| format!("clearing stale state in {root:?}: {e}"))?;
+                Some((root, dir))
+            }
+            None => None,
+        };
+        let handle = self.pool.handle(sub.factory);
+        let exp = handle.exp_id();
+        let scheduler = sub.scheduler.build(sub.spec.seed);
+        let search = sub.search.build(sub.space, sub.spec.num_samples);
+        let mut runner =
+            TrialRunner::new(sub.spec, scheduler, search, Box::new(handle), sub.cluster);
+        if let Some((root, dir)) = durable {
+            let manifest = manifest_json(
+                &runner.spec,
+                &sub.scheduler,
+                &sub.search,
+                ExecMode::Pool { workers: self.pool.num_workers() },
+                sub.snapshot_every,
+            );
+            dir.write_manifest(&manifest)
+                .map_err(|e| format!("writing manifest in {root:?}: {e}"))?;
+            let logger = JsonlLogger::new(root.clone())
+                .map_err(|e| format!("creating logger in {root:?}: {e}"))?;
+            runner.add_logger(Box::new(logger));
+            runner.enable_persistence(dir, sub.snapshot_every);
+        }
+        self.experiments.push(HubSlot {
+            name: runner.spec.name.clone(),
+            exp,
+            // Clamped on both ends: the share math multiplies weights
+            // by the live-trial budget, so an absurd user-supplied
+            // weight must not be able to overflow it.
+            weight: sub.weight.clamp(1, 1_000_000),
+            runner,
+            done: false,
+            result: None,
+        });
+        self.recompute_shares();
+        let idx = self.experiments.len() - 1;
+        self.pump_one(idx);
+        Ok(exp)
+    }
+
+    /// Experiments still running.
+    pub fn active_count(&self) -> usize {
+        self.experiments.iter().filter(|s| !s.done).count()
+    }
+
+    /// State of one experiment, by the id `submit` returned.
+    pub fn state(&self, exp: ExpId) -> Option<ExperimentState> {
+        self.index_of(exp).map(|i| {
+            if self.experiments[i].done {
+                ExperimentState::Finished
+            } else {
+                ExperimentState::Running
+            }
+        })
+    }
+
+    /// Result of a finished experiment (None while it still runs).
+    pub fn result(&self, exp: ExpId) -> Option<&ExperimentResult> {
+        self.index_of(exp).and_then(|i| self.experiments[i].result.as_ref())
+    }
+
+    /// Mean live-trial occupancy across experiments, sampled at every
+    /// processed completion event (the `hub_throughput` bench reports
+    /// this as steady-state pool utilization).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.occ_samples == 0 {
+            0.0
+        } else {
+            self.occ_sum / self.occ_samples as f64
+        }
+    }
+
+    fn index_of(&self, exp: ExpId) -> Option<usize> {
+        self.experiments.iter().position(|s| s.exp == exp)
+    }
+
+    /// Weighted fair share over live-trial slots: every *active*
+    /// experiment gets `max_live * weight / total_weight` slots
+    /// (integer), the remainder rotates round-robin, and everyone gets
+    /// at least one — an experiment whose quota is exhausted can still
+    /// relaunch a fault-recovered trial, so recovery can never deadlock
+    /// behind admission.
+    fn recompute_shares(&mut self) {
+        let active: Vec<usize> = (0..self.experiments.len())
+            .filter(|i| !self.experiments[*i].done)
+            .collect();
+        if active.is_empty() {
+            return;
+        }
+        if self.max_live == 0 {
+            for &i in &active {
+                self.experiments[i].runner.set_slot_limit(0);
+            }
+            return;
+        }
+        // u128 products: weights are clamped to 1e6 but max_live is
+        // caller-controlled, so keep the arithmetic overflow-proof.
+        let total_w: u128 =
+            active.iter().map(|&i| self.experiments[i].weight as u128).sum();
+        let mut shares: Vec<usize> = active
+            .iter()
+            .map(|&i| {
+                (self.max_live as u128 * self.experiments[i].weight as u128 / total_w) as usize
+            })
+            .collect();
+        let used: usize = shares.iter().sum();
+        let remainder = self.max_live.saturating_sub(used);
+        let n = active.len();
+        for k in 0..remainder.min(n) {
+            shares[(self.rr_cursor + k) % n] += 1;
+        }
+        self.rr_cursor = self.rr_cursor.wrapping_add(1);
+        for (slot_idx, &i) in active.iter().enumerate() {
+            self.experiments[i].runner.set_slot_limit(shares[slot_idx].max(1));
+        }
+    }
+
+    /// Admission-pump one experiment; finalize it when it reports no
+    /// further progress. Returns true while it stays active.
+    fn pump_one(&mut self, i: usize) -> bool {
+        if self.experiments[i].done {
+            return false;
+        }
+        if self.experiments[i].runner.hub_pump() {
+            return true;
+        }
+        let result = self.experiments[i].runner.finalize();
+        let slot = &mut self.experiments[i];
+        slot.result = Some(result);
+        slot.done = true;
+        self.recompute_shares();
+        false
+    }
+
+    /// Admission pass over every active experiment (slots freed by a
+    /// completion are re-dealt here).
+    fn pump_all(&mut self) {
+        for i in 0..self.experiments.len() {
+            self.pump_one(i);
+        }
+    }
+
+    fn sample_occupancy(&mut self) {
+        let live: usize = self
+            .experiments
+            .iter()
+            .filter(|s| !s.done)
+            .map(|s| s.runner.num_running())
+            .sum();
+        self.occ_sum += live as f64;
+        self.occ_samples += 1;
+    }
+
+    /// Drive every experiment for up to `budget` wall time, returning
+    /// whether any experiment is still active. `tune serve` calls this
+    /// in a loop, interleaving control-plane work (queue ingestion,
+    /// status publication) between slices.
+    pub fn run_for(&mut self, budget: Duration) -> bool {
+        let deadline = Instant::now() + budget;
+        self.pump_all();
+        loop {
+            if self.active_count() == 0 {
+                return false;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return true;
+            }
+            match self.pool.poll(deadline - now) {
+                PoolPoll::Event(exp, ev) => {
+                    let Some(i) = self.index_of(exp) else { continue };
+                    if self.experiments[i].done {
+                        continue; // stale event for a finalized experiment
+                    }
+                    self.experiments[i].runner.hub_handle_event(ev);
+                    self.sample_occupancy();
+                    if !self.pump_one(i) {
+                        // Freed slots: re-deal them to the others now.
+                        self.pump_all();
+                    }
+                }
+                PoolPoll::Idle => {
+                    // Nothing in flight anywhere. Every active
+                    // experiment either issues fresh work in this pass
+                    // (making the next poll productive), stays alive
+                    // waiting out a node restart, or finalizes.
+                    self.pump_all();
+                    if self.active_count() > 0 {
+                        // Survivors may be fault-stalled (no in-flight
+                        // work until a dead node restarts): tick gently
+                        // instead of burning a core on the idle loop.
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+                PoolPoll::Timeout => return true,
+            }
+        }
+    }
+
+    /// Drive every submitted experiment to completion and return
+    /// `(name, result)` pairs in submission order.
+    pub fn run_all(&mut self) -> Vec<(String, ExperimentResult)> {
+        while self.run_for(Duration::from_millis(250)) {}
+        self.take_results()
+    }
+
+    /// Drain finished experiments out of the hub, in submission order.
+    /// Call after [`Self::run_all`] (or once `active_count` is 0).
+    pub fn take_results(&mut self) -> Vec<(String, ExperimentResult)> {
+        self.experiments
+            .drain(..)
+            .filter_map(|s| s.result.map(|r| (s.name, r)))
+            .collect()
+    }
+
+    /// Machine-readable status (what `tune serve` publishes and `tune
+    /// status` prints): per experiment, its state, trial counters and
+    /// best metric so far.
+    pub fn status_json(&self) -> Json {
+        let experiments = self
+            .experiments
+            .iter()
+            .map(|s| {
+                let (trials, running, best) = match &s.result {
+                    Some(r) => (r.trials.len(), 0, r.best_metric()),
+                    None => {
+                        let trials = s.runner.trials();
+                        let best = trials
+                            .values()
+                            .filter_map(|t| t.best_metric)
+                            .max_by(|a, b| {
+                                crate::util::order::asc(
+                                    s.runner.spec.mode.ascending(*a),
+                                    s.runner.spec.mode.ascending(*b),
+                                )
+                            });
+                        (trials.len(), s.runner.num_running(), best)
+                    }
+                };
+                Json::obj(vec![
+                    ("name", Json::Str(s.name.clone())),
+                    (
+                        "state",
+                        Json::Str(if s.done { "finished" } else { "running" }.into()),
+                    ),
+                    ("weight", Json::Num(s.weight as f64)),
+                    ("trials", Json::Num(trials as f64)),
+                    ("running", Json::Num(running as f64)),
+                    ("metric", Json::Str(s.runner.spec.metric.clone())),
+                    (
+                        "mode",
+                        Json::Str(
+                            if s.runner.spec.mode == Mode::Max { "max" } else { "min" }.into(),
+                        ),
+                    ),
+                    ("best_metric", best.map(Json::Num).unwrap_or(Json::Null)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("workers", Json::Num(self.pool.num_workers() as f64)),
+            ("max_live", Json::Num(self.max_live as f64)),
+            ("active", Json::Num(self.active_count() as f64)),
+            ("experiments", Json::Arr(experiments)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::spec::SpaceBuilder;
+    use crate::trainable::factory;
+    use crate::trainable::synthetic::CurveTrainable;
+
+    fn curve_submission(name: &str, seed: u64, samples: usize, iters: u64) -> Submission {
+        let mut spec = ExperimentSpec::named(name);
+        spec.metric = "accuracy".into();
+        spec.mode = Mode::Max;
+        spec.num_samples = samples;
+        spec.max_iterations_per_trial = iters;
+        spec.seed = seed;
+        let space = SpaceBuilder::new().loguniform("lr", 1e-4, 1.0).build();
+        Submission::new(
+            spec,
+            space,
+            SchedulerKind::Fifo,
+            SearchKind::Random,
+            factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+        )
+    }
+
+    #[test]
+    fn hub_runs_one_experiment_to_completion() {
+        let mut hub = ExperimentHub::new(2, 0);
+        let id = hub.submit(curve_submission("solo", 7, 5, 8)).unwrap();
+        let results = hub.run_all();
+        assert_eq!(results.len(), 1);
+        let (name, res) = &results[0];
+        assert_eq!(name, "solo");
+        assert_eq!(res.trials.len(), 5);
+        assert_eq!(res.count(crate::coordinator::trial::TrialStatus::Completed), 5);
+        assert!(res.best.is_some());
+        let _ = id;
+    }
+
+    #[test]
+    fn hub_runs_many_experiments_concurrently() {
+        let mut hub = ExperimentHub::new(4, 8);
+        for i in 0..3u64 {
+            hub.submit(curve_submission(&format!("e{i}"), i, 4, 6)).unwrap();
+        }
+        assert_eq!(hub.active_count(), 3);
+        let results = hub.run_all();
+        assert_eq!(results.len(), 3);
+        for (_, r) in &results {
+            assert_eq!(r.trials.len(), 4);
+            assert!(r.best_metric().is_some());
+        }
+    }
+
+    #[test]
+    fn fair_share_guarantees_a_slot_each() {
+        // 3 experiments, global budget of 2 slots: the max(1, ..) floor
+        // must still hand every active experiment one slot.
+        let mut hub = ExperimentHub::new(2, 2);
+        for i in 0..3u64 {
+            hub.submit(curve_submission(&format!("tiny{i}"), i, 2, 4)).unwrap();
+        }
+        let results = hub.run_all();
+        assert_eq!(results.len(), 3);
+        for (_, r) in &results {
+            assert_eq!(r.trials.len(), 2);
+        }
+    }
+
+    #[test]
+    fn state_and_result_accessors_track_lifecycle() {
+        let mut hub = ExperimentHub::new(2, 0);
+        let id = hub.submit(curve_submission("acc", 1, 2, 3)).unwrap();
+        // Freshly submitted: running (tiny experiments may already have
+        // live trials but cannot have finalized — events need polling).
+        assert_eq!(hub.state(id), Some(ExperimentState::Running));
+        assert!(hub.result(id).is_none());
+        while hub.run_for(Duration::from_millis(100)) {}
+        assert_eq!(hub.state(id), Some(ExperimentState::Finished));
+        assert!(hub.result(id).is_some());
+        let status = hub.status_json();
+        assert_eq!(status.get("active").unwrap().as_u64(), Some(0));
+        let exps = status.get("experiments").unwrap().as_arr().unwrap();
+        assert_eq!(exps.len(), 1);
+        assert_eq!(exps[0].get("state").unwrap().as_str(), Some("finished"));
+    }
+}

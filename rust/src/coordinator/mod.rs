@@ -8,11 +8,14 @@
 //!   thread-per-trial, or bounded worker pool)
 //! * [`runner`] — the central event loop tying it all together
 //! * [`experiment`] — user-facing `run_experiments` facade (§4.3)
+//! * [`hub`] — the serving layer: N experiments multiplexed over one
+//!   shared worker pool (`tune serve`)
 //! * [`persist`] — the durable experiment directory (crash-safe
 //!   snapshots + `--resume`)
 
 pub mod executor;
 pub mod experiment;
+pub mod hub;
 pub mod persist;
 pub mod runner;
 pub mod schedulers;
@@ -24,6 +27,7 @@ pub mod trial;
 pub use experiment::{
     build_runner, run_experiments, ExecMode, ExperimentSpec, RunOptions, SchedulerKind, SearchKind,
 };
+pub use hub::{ExperimentHub, ExperimentState, Submission};
 pub use persist::ExperimentDir;
 pub use runner::{ExperimentResult, RunnerStats, TrialRunner};
 pub use spec_file::SpecFile;

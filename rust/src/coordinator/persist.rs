@@ -114,14 +114,46 @@ pub fn config_from_json(j: &Json) -> Option<Config> {
     Some(out)
 }
 
-/// Encode a `Vec<f64>`.
+/// Encode one `f64` losslessly, including the non-finite values JSON
+/// cannot represent as numbers: `NaN`/`±inf` are written as tagged
+/// strings. Scheduler state (ASHA rungs, median-rule running means) can
+/// legitimately hold `NaN` once a trial diverges — the comparator ranks
+/// it worst instead of panicking — and a snapshot/resume cycle must
+/// preserve exactly that state.
+pub fn num_to_json(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else if x.is_nan() {
+        Json::Str("NaN".into())
+    } else if x > 0.0 {
+        Json::Str("Infinity".into())
+    } else {
+        Json::Str("-Infinity".into())
+    }
+}
+
+/// Decode an `f64` written by [`num_to_json`].
+pub fn num_from_json(j: &Json) -> Option<f64> {
+    match j {
+        Json::Num(n) => Some(*n),
+        Json::Str(s) => match s.as_str() {
+            "NaN" => Some(f64::NAN),
+            "Infinity" => Some(f64::INFINITY),
+            "-Infinity" => Some(f64::NEG_INFINITY),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// Encode a `Vec<f64>` (non-finite values survive, see [`num_to_json`]).
 pub fn f64s_to_json(v: &[f64]) -> Json {
-    Json::Arr(v.iter().map(|x| Json::Num(*x)).collect())
+    Json::Arr(v.iter().map(|x| num_to_json(*x)).collect())
 }
 
 /// Decode a `Vec<f64>` written by [`f64s_to_json`].
 pub fn f64s_from_json(j: &Json) -> Option<Vec<f64>> {
-    j.as_arr()?.iter().map(|x| x.as_f64()).collect()
+    j.as_arr()?.iter().map(num_from_json).collect()
 }
 
 /// Encode a map keyed by trial id (decimal-string keys).

@@ -176,6 +176,10 @@ pub struct TrialRunner {
     /// search, loggers and stats — they already happened.
     replay_until: BTreeMap<TrialId, u64>,
     persist: Option<Persist>,
+    /// Additional live-trial cap imposed by the hub's fair-share policy
+    /// (0 = none). Orthogonal to `spec.max_concurrent`: the effective
+    /// limit is the stricter of the two.
+    hub_slots: usize,
 }
 
 impl TrialRunner {
@@ -211,6 +215,7 @@ impl TrialRunner {
             time_offset: 0.0,
             replay_until: BTreeMap::new(),
             persist: None,
+            hub_slots: 0,
         }
     }
 
@@ -255,15 +260,27 @@ impl TrialRunner {
         Some(id)
     }
 
-    fn num_running(&self) -> usize {
+    pub(crate) fn num_running(&self) -> usize {
         self.trials.values().filter(|t| t.status == TrialStatus::Running).count()
+    }
+
+    /// Cap the number of live trials from outside (the hub's fair-share
+    /// admission). 0 lifts the cap. Takes effect at the next admission
+    /// pass; already-running trials above a shrunk cap finish their
+    /// current steps normally and are simply not topped up.
+    pub(crate) fn set_slot_limit(&mut self, slots: usize) {
+        self.hub_slots = slots;
     }
 
     /// Admission: launch trials while the scheduler has candidates and
     /// the cluster has room.
     fn admit(&mut self) {
         loop {
-            if self.spec.max_concurrent > 0 && self.num_running() >= self.spec.max_concurrent {
+            let running = self.num_running();
+            if self.spec.max_concurrent > 0 && running >= self.spec.max_concurrent {
+                return;
+            }
+            if self.hub_slots > 0 && running >= self.hub_slots {
                 return;
             }
             // Ask the scheduler first (it may resume paused trials);
@@ -510,12 +527,17 @@ impl TrialRunner {
         self.replay_until.remove(&id);
         self.stats.results += 1;
 
-        // Best-so-far curve (experiment time axis).
+        // Best-so-far curve (experiment time axis). A NaN (diverged)
+        // metric never enters the curve: as a *first* result it would
+        // otherwise stick — `mode.better` is false against NaN in both
+        // directions — and report a NaN "best" forever.
         if let Some(v) = row.metric(&self.spec.metric) {
-            let better = self.best_so_far.map_or(true, |b| self.spec.mode.better(v, b));
-            if better {
-                self.best_so_far = Some(v);
-                self.best_curve.push((now, v));
+            if !v.is_nan() {
+                let better = self.best_so_far.map_or(true, |b| self.spec.mode.better(v, b));
+                if better {
+                    self.best_so_far = Some(v);
+                    self.best_curve.push((now, v));
+                }
             }
         }
 
@@ -807,6 +829,37 @@ impl TrialRunner {
         }
     }
 
+    /// Apply one completion event (the body shared by the blocking
+    /// [`Self::drive`] loop and the hub's cooperative stepping).
+    fn dispatch(&mut self, event: ExecEvent) {
+        match event {
+            ExecEvent::Stepped { trial, out } => self.handle_stepped(trial, out),
+            ExecEvent::Failed { trial, error } => self.handle_failure(trial, &error),
+        }
+    }
+
+    /// Nothing is in flight: try to make progress anyway. True when the
+    /// scheduler already has a candidate (pending or resumable paused
+    /// trial) or a fresh trial was pulled from the search algorithm;
+    /// false when the experiment can never advance again.
+    fn try_unblock(&mut self) -> bool {
+        let can_progress = {
+            let ctx = SchedulerCtx {
+                trials: &self.trials,
+                metric: &self.spec.metric,
+                mode: self.spec.mode,
+            };
+            self.scheduler.choose_trial_to_run(&ctx).is_some()
+        };
+        if can_progress {
+            return true;
+        }
+        if self.search_exhausted {
+            return false;
+        }
+        self.create_trial().is_some()
+    }
+
     /// The event loop shared by [`TrialRunner::run`] and
     /// [`TrialRunner::run_to_crash`]. Returns `true` when crash
     /// injection fired (the loop was abandoned mid-flight).
@@ -819,23 +872,11 @@ impl TrialRunner {
             let event = self.executor.next_event();
             let t0 = std::time::Instant::now();
             match event {
-                Some(ExecEvent::Stepped { trial, out }) => self.handle_stepped(trial, out),
-                Some(ExecEvent::Failed { trial, error }) => self.handle_failure(trial, &error),
+                Some(ev) => self.dispatch(ev),
                 None => {
                     // Nothing in flight. If nothing can ever run again,
                     // we are done; otherwise admit more.
-                    let can_progress = {
-                        let ctx = SchedulerCtx {
-                            trials: &self.trials,
-                            metric: &self.spec.metric,
-                            mode: self.spec.mode,
-                        };
-                        self.scheduler.choose_trial_to_run(&ctx).is_some()
-                    };
-                    if !can_progress && self.search_exhausted {
-                        return false;
-                    }
-                    if !can_progress && self.create_trial().is_none() {
+                    if !self.try_unblock() {
                         return false;
                     }
                 }
@@ -849,6 +890,66 @@ impl TrialRunner {
         }
     }
 
+    // -----------------------------------------------------------------
+    // Cooperative stepping (the hub drives the loop, not the runner)
+    // -----------------------------------------------------------------
+
+    /// Hub-side admission pass: launch whatever the current fair-share
+    /// slot cap allows. Returns `false` when the experiment can make no
+    /// further progress (time budget spent, or no running trials and
+    /// nothing left to launch) — the hub should finalize it then.
+    ///
+    /// Invariant relied on: every `Running` trial has exactly one step
+    /// request in flight, so "`true`" with running trials implies a
+    /// completion event for this experiment will eventually reach the
+    /// hub. The one exception is an experiment stalled waiting out a
+    /// node restart (fault plan with restarts): it returns `true` with
+    /// nothing in flight, and the hub's idle pass re-pumps it until the
+    /// node comes back.
+    pub(crate) fn hub_pump(&mut self) -> bool {
+        loop {
+            if self.clock() >= self.spec.max_experiment_time_s {
+                return false;
+            }
+            self.admit();
+            if self.num_running() > 0 {
+                return true;
+            }
+            let created_before = self.next_id;
+            if !self.try_unblock() {
+                return false;
+            }
+            if self.next_id == created_before {
+                // A candidate exists but could not be placed with every
+                // lease free. Under a node-failure plan with restarts
+                // the cluster may just be waiting out a dead node: tick
+                // the fault clock (the blocking loop does this by
+                // spinning) and stay alive — the hub re-pumps on its
+                // next idle pass until the node returns. Without
+                // restarts the demand permanently exceeds the cluster:
+                // report no progress so the hub finalizes instead of
+                // livelocking.
+                if self.fault.plan.node_failure_prob > 0.0 && self.fault.plan.nodes_restart {
+                    self.fault_tick();
+                    return true;
+                }
+                return false;
+            }
+        }
+    }
+
+    /// Hub-side event application: everything one [`Self::drive`]
+    /// iteration does after `next_event` returns (decision handling,
+    /// fault ticks, snapshot cadence). The hub follows up with
+    /// [`Self::hub_pump`] to re-admit and detect completion.
+    pub(crate) fn hub_handle_event(&mut self, event: ExecEvent) {
+        let t0 = std::time::Instant::now();
+        self.dispatch(event);
+        self.stats.handling_ns += t0.elapsed().as_nanos() as u64;
+        self.fault_tick();
+        self.maybe_snapshot();
+    }
+
     /// Deterministic crash injection for durability tests: drive the
     /// event loop until `snapshots` periodic snapshots have been written
     /// to the experiment directory, then abandon the run mid-flight —
@@ -860,11 +961,11 @@ impl TrialRunner {
         self.drive(Some(snapshots))
     }
 
-    /// Drive the experiment to completion; returns the result summary.
-    pub fn run(&mut self) -> ExperimentResult {
-        self.drive(None);
-        // Endgame: terminate whatever is still live (budget exhausted or
-        // orphaned paused trials).
+    /// Endgame shared by [`TrialRunner::run`] and the hub: terminate
+    /// whatever is still live (budget exhausted or orphaned paused
+    /// trials), flush loggers, write the final snapshot and assemble
+    /// the result summary. The runner's trial table is consumed.
+    pub(crate) fn finalize(&mut self) -> ExperimentResult {
         let leftovers: Vec<TrialId> = self
             .trials
             .values()
@@ -883,6 +984,8 @@ impl TrialRunner {
             self.write_snapshot(true);
         }
 
+        // NaN-proof best pick: `best_metric` is never NaN (see
+        // `Trial::record`), but the order stays total regardless.
         let best = self
             .trials
             .values()
@@ -890,7 +993,7 @@ impl TrialRunner {
             .max_by(|a, b| {
                 let am = self.spec.mode.ascending(a.best_metric.unwrap());
                 let bm = self.spec.mode.ascending(b.best_metric.unwrap());
-                am.partial_cmp(&bm).unwrap()
+                crate::util::order::asc(am, bm)
             })
             .map(|t| t.id);
         ExperimentResult {
@@ -902,6 +1005,12 @@ impl TrialRunner {
             placement: self.placer.stats,
             best_curve: std::mem::take(&mut self.best_curve),
         }
+    }
+
+    /// Drive the experiment to completion; returns the result summary.
+    pub fn run(&mut self) -> ExperimentResult {
+        self.drive(None);
+        self.finalize()
     }
 }
 

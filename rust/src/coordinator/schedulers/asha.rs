@@ -65,10 +65,11 @@ impl AshaScheduler {
             return None;
         }
         // O(n) selection of the keep-th best (perf iteration 3, §Perf).
+        // NaN-proof: diverged trials rank strictly worst at the rung.
         let mut scratch = values.to_vec();
         let keep = ((scratch.len() as f64 / eta).floor() as usize).max(1);
         let (_, kth, _) =
-            scratch.select_nth_unstable_by(keep - 1, |a, b| b.partial_cmp(a).unwrap());
+            scratch.select_nth_unstable_by(keep - 1, |a, b| crate::util::order::desc(*a, *b));
         Some(*kth)
     }
 }
@@ -88,7 +89,9 @@ impl TrialScheduler for AshaScheduler {
         let values = self.rungs.entry(rung).or_default();
         values.push(value);
         let cut = Self::cutoff(values, self.reduction_factor).unwrap();
-        if value < cut {
+        // Total order, not `<`: a NaN value must stop (it is below every
+        // cutoff), not slip through because `NaN < cut` is false.
+        if crate::util::order::asc(value, cut) == std::cmp::Ordering::Less {
             self.stopped += 1;
             Decision::Stop
         } else {

@@ -119,7 +119,9 @@ impl HyperBandScheduler {
         let max_t = self.max_t;
         let b = &mut self.brackets[bi];
         let mut scored: Vec<(TrialId, f64)> = b.recorded.iter().map(|(k, v)| (*k, *v)).collect();
-        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap()); // best first
+        // Best first; NaN-proof (diverged cohort members sort last and
+        // are cut at the rung instead of panicking the barrier).
+        scored.sort_by(|a, b| crate::util::order::desc(a.1, b.1));
         let keep = ((scored.len() as f64 / eta).floor() as usize).max(1);
         let next_milestone = ((b.milestone as f64) * eta).round() as u64;
 
@@ -256,7 +258,11 @@ impl TrialScheduler for HyperBandScheduler {
                         Json::Obj(
                             b.recorded
                                 .iter()
-                                .map(|(id, v)| (id.to_string(), Json::Num(*v)))
+                                // num_to_json: a diverged (NaN) rung score
+                                // must survive the snapshot roundtrip.
+                                .map(|(id, v)| {
+                                    (id.to_string(), crate::coordinator::persist::num_to_json(*v))
+                                })
                                 .collect(),
                         ),
                     ),
@@ -300,7 +306,8 @@ impl TrialScheduler for HyperBandScheduler {
             {
                 recorded.insert(
                     k.parse::<TrialId>().map_err(|e| e.to_string())?,
-                    v.as_f64().ok_or("hyperband snapshot: bad recorded value")?,
+                    crate::coordinator::persist::num_from_json(v)
+                        .ok_or("hyperband snapshot: bad recorded value")?,
                 );
             }
             brackets.push(Bracket {

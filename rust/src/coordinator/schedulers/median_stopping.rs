@@ -80,11 +80,15 @@ impl TrialScheduler for MedianStoppingRule {
         }
         // O(n) selection instead of an O(n log n) sort — this callback
         // runs once per intermediate result (perf iteration 2, §Perf).
+        // NaN-proof: a peer whose running mean diverged ranks smallest.
         let mid = peers.len() / 2;
-        let (_, median, _) = peers.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
+        let (_, median, _) =
+            peers.select_nth_unstable_by(mid, |a, b| crate::util::order::asc(*a, *b));
         let median = *median;
         let own = Self::running_mean_at(&self.histories[&trial.id], t).unwrap();
-        if own < median {
+        // Total order, not `<`: once a trial's own running mean is NaN
+        // (one NaN result poisons the mean for good) it must stop.
+        if crate::util::order::asc(own, median) == std::cmp::Ordering::Less {
             self.stopped += 1;
             Decision::Stop
         } else {

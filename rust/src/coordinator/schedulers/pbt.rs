@@ -94,7 +94,10 @@ impl PbtScheduler {
             })
             .filter_map(|t| ctx.score(t).map(|s| (t.id, s)))
             .collect();
-        ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        // NaN-proof best-first order: diverged trials rank bottom, so
+        // they become exploiters (cloning a healthy top performer) —
+        // exactly PBT's recovery story — instead of panicking the sort.
+        ranked.sort_by(|a, b| crate::util::order::desc(a.1, b.1));
         ranked
     }
 }

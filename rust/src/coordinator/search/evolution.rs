@@ -120,11 +120,12 @@ impl SearchAlgorithm for EvolutionSearch {
     }
 
     fn on_complete(&mut self, config: &Config, final_metric: Option<f64>, mode: Mode) {
-        let Some(m) = final_metric else { return };
+        // Diverged (NaN) trials cannot parent the next generation; drop
+        // them before the pool instead of letting NaN poison the sort.
+        let Some(m) = final_metric.filter(|m| !m.is_nan()) else { return };
         self.evaluated += 1;
         self.parents.push((config.clone(), mode.ascending(m)));
-        self.parents
-            .sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        self.parents.sort_by(|a, b| crate::util::order::desc(a.1, b.1));
         self.parents.truncate(self.mu);
     }
 

@@ -56,7 +56,9 @@ impl TpeSearch {
     fn split(&self, key: &str) -> (Vec<ParamValue>, Vec<ParamValue>) {
         let mut scored: Vec<(&Config, f64)> =
             self.observations.iter().map(|(c, s)| (c, *s)).collect();
-        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap()); // best first
+        // Best first, NaN-proof (observations are filtered on entry, but
+        // the order must stay total for snapshots written by older runs).
+        scored.sort_by(|a, b| crate::util::order::desc(a.1, b.1));
         let n_good = ((scored.len() as f64 * self.gamma).ceil() as usize).max(1);
         let take = |slice: &[(&Config, f64)]| {
             slice
@@ -209,7 +211,10 @@ impl SearchAlgorithm for TpeSearch {
     }
 
     fn on_complete(&mut self, config: &Config, final_metric: Option<f64>, mode: Mode) {
-        if let Some(m) = final_metric {
+        // A NaN outcome carries no density information — conditioning
+        // the Parzen windows on it would only produce NaN likelihood
+        // ratios. Diverged trials are simply not observations.
+        if let Some(m) = final_metric.filter(|m| !m.is_nan()) {
             self.observations.push((config.clone(), mode.ascending(m)));
         }
     }

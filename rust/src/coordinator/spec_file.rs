@@ -46,6 +46,9 @@ pub struct SpecFile {
     pub workload: String,
     /// Cluster shape to run on.
     pub cluster: Cluster,
+    /// Fair-share weight when the spec runs under `tune serve` (min 1;
+    /// ignored by the single-experiment `tune run`).
+    pub weight: u64,
 }
 
 fn jf(j: &Json, key: &str) -> Option<f64> {
@@ -231,8 +234,11 @@ impl SpecFile {
         let cpus = j.get("cluster").and_then(|c| jf(c, "cpus_per_node")).unwrap_or(8.0);
         let gpus = j.get("cluster").and_then(|c| jf(c, "gpus_per_node")).unwrap_or(0.0);
         let cluster = Cluster::uniform(nodes.max(1), Resources::cpu_gpu(cpus, gpus));
+        // Clamped: the hub multiplies weights by the live-trial budget,
+        // so an absurd value must not be able to overflow the math.
+        let weight = (jf(&j, "weight").unwrap_or(1.0) as u64).clamp(1, 1_000_000);
 
-        Ok(SpecFile { spec, space, scheduler, search, workload, cluster })
+        Ok(SpecFile { spec, space, scheduler, search, workload, cluster, weight })
     }
 }
 

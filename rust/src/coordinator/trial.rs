@@ -279,12 +279,15 @@ impl Trial {
             Some(ResultRow {
                 iteration: r.get("iteration")?.as_u64()?,
                 time_total_s: r.get("time_total_s")?.as_f64()?,
+                // Non-numeric entries are skipped, not fatal: JSON has
+                // no NaN, so a diverged metric serializes as `null` and
+                // must not make the whole snapshot unreadable.
                 metrics: r
                     .get("metrics")?
                     .as_obj()?
                     .iter()
-                    .map(|(k, v)| v.as_f64().map(|f| (k.clone(), f)))
-                    .collect::<Option<_>>()?,
+                    .filter_map(|(k, v)| v.as_f64().map(|f| (k.clone(), f)))
+                    .collect(),
             })
         };
         Some(Trial {
@@ -314,13 +317,18 @@ impl Trial {
     }
 
     /// Record a result row, updating iteration, time and best metric.
+    /// `NaN` metric values never become the best: without the guard a
+    /// NaN *first* result would stick forever (`mode.better` is false
+    /// for every comparison against NaN, in both directions).
     pub fn record(&mut self, row: ResultRow, metric: &str, mode: Mode) {
         self.iteration = row.iteration;
         self.time_total_s = row.time_total_s;
         if let Some(v) = row.metric(metric) {
-            let better = self.best_metric.map_or(true, |b| mode.better(v, b));
-            if better {
-                self.best_metric = Some(v);
+            if !v.is_nan() {
+                let better = self.best_metric.map_or(true, |b| mode.better(v, b));
+                if better {
+                    self.best_metric = Some(v);
+                }
             }
         }
         self.last_result = Some(row);

@@ -128,7 +128,9 @@ impl ExperimentAnalysis {
         rec
     }
 
-    /// Best (trial id, metric value) under `mode`.
+    /// Best (trial id, metric value) under `mode`. NaN metric values
+    /// (serialized as `null`, re-read as absent) never win; the outer
+    /// comparison is the NaN-proof total order as belt and braces.
     pub fn best_trial(&self, metric: &str, mode: Mode) -> Option<(u64, f64)> {
         self.trials
             .values()
@@ -136,16 +138,13 @@ impl ExperimentAnalysis {
                 t.rows
                     .iter()
                     .filter_map(|(_, _, m)| m.get(metric).copied())
+                    .filter(|v| !v.is_nan())
                     .fold(None, |acc: Option<f64>, v| {
                         Some(acc.map_or(v, |a| if mode.better(v, a) { v } else { a }))
                     })
                     .map(|v| (t.trial, v))
             })
-            .max_by(|a, b| {
-                mode.ascending(a.1)
-                    .partial_cmp(&mode.ascending(b.1))
-                    .unwrap()
-            })
+            .max_by(|a, b| crate::util::order::asc(mode.ascending(a.1), mode.ascending(b.1)))
     }
 
     /// Experiment-level best-metric-so-far vs cumulative budget

@@ -1,7 +1,12 @@
-//! `tune` CLI — experiment launcher and analysis tool.
+//! `tune` CLI — experiment launcher, multi-experiment server and
+//! analysis tool.
 //!
 //! Subcommands:
 //!   run        run a model-selection experiment (sim or jax workloads)
+//!   serve      long-running multi-experiment coordinator (shared pool)
+//!   submit     queue a spec file onto a running `tune serve`
+//!   status     print a server's published experiment status
+//!   stop       ask a running `tune serve` to shut down
 //!   shootout   compare all schedulers on the synthetic benchmark (C1)
 //!   loc-table  regenerate the paper's Table 1 (LoC per algorithm)
 //!   analyze    summarize a JSONL log directory
@@ -9,11 +14,14 @@
 //! Hand-rolled argument parsing: the offline dependency set has no clap.
 
 use std::collections::BTreeMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
+use tune::coordinator::hub::{ExperimentHub, Submission};
+use tune::coordinator::persist::write_atomic;
 use tune::coordinator::spec::{SearchSpace, SpaceBuilder};
 use tune::coordinator::{
     run_experiments, ExecMode, ExperimentSpec, Mode, RunOptions, SchedulerKind, SearchKind,
+    SpecFile,
 };
 use tune::logger::ExperimentAnalysis;
 use tune::ray::{Cluster, Resources};
@@ -35,6 +43,10 @@ fn main() {
     let flags = Flags::parse(&rest);
     match cmd {
         "run" => cmd_run(&flags),
+        "serve" => cmd_serve(&flags),
+        "submit" => cmd_submit(&flags),
+        "status" => cmd_status(&flags),
+        "stop" => cmd_stop(&flags),
         "shootout" => cmd_shootout(&flags),
         "loc-table" => cmd_loc_table(),
         "analyze" => cmd_analyze(&flags),
@@ -73,6 +85,21 @@ COMMANDS
                                 its latest snapshot
              --snapshot-every N snapshot cadence in results (default 50)
              --seed N
+  serve      --exp-dir DIR      server root: spec files dropped into
+                                DIR/queue/ become live experiments, all
+                                multiplexed over ONE shared worker pool
+                                with weighted fair-share admission;
+                                results land in DIR/experiments/<name>/
+             --workers N        pool worker threads (default 4)
+             --max-live N       global live-trial budget split across
+                                experiments (default 4 x workers)
+             --drain            exit once the queue is empty and every
+                                experiment finished (for scripting)
+  submit     --exp-dir DIR --spec FILE.json
+                                validate FILE and queue it on the server
+                                (spec field \"weight\" sets its share)
+  status     --exp-dir DIR      print the server's experiment table
+  stop       --exp-dir DIR      ask the server to shut down
   shootout   --samples N --iters N   compare all schedulers (sim, C1)
   loc-table  regenerate Table 1 (lines of code per algorithm)
   analyze    --log-dir DIR --metric NAME --mode min|max
@@ -272,9 +299,11 @@ fn cmd_run(flags: &Flags) {
 }
 
 
-/// Resolve a workload name to (factory, exec mode).
-fn workload_factory(workload: &str) -> (TrainableFactory, ExecMode) {
-    match workload {
+/// Resolve a workload name to (factory, exec mode) without killing the
+/// process: `tune serve` rejects a bad submission with this error while
+/// other users' experiments keep running.
+fn try_workload_factory(workload: &str) -> Result<(TrainableFactory, ExecMode), String> {
+    Ok(match workload {
         "curve" => (
             factory(|c, s| Box::new(CurveTrainable::new(c, s))),
             ExecMode::Sim,
@@ -289,15 +318,21 @@ fn workload_factory(workload: &str) -> (TrainableFactory, ExecMode) {
         ),
         "jax-mlp" | "jax-tlm" => {
             let family: &'static str = if workload == "jax-mlp" { "mlp" } else { "tlm" };
-            let svc = PjrtService::spawn(Manifest::default_dir())
-                .expect("artifacts missing: run `make artifacts`");
+            let svc = PjrtService::spawn(Manifest::default_dir()).map_err(|e| {
+                format!("workload {workload:?} needs compiled artifacts (run `make artifacts`): {e:#}")
+            })?;
             (jax_factory(svc, family, 5), ExecMode::Threads)
         }
-        other => {
-            eprintln!("unknown workload {other:?}");
-            std::process::exit(2);
-        }
-    }
+        other => return Err(format!("unknown workload {other:?}")),
+    })
+}
+
+/// CLI-fatal variant for the single-experiment `tune run` path.
+fn workload_factory(workload: &str) -> (TrainableFactory, ExecMode) {
+    try_workload_factory(workload).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    })
 }
 
 /// `tune run --spec file.json`: the declarative §4.3 form.
@@ -332,6 +367,224 @@ fn run_spec_file(path: &std::path::Path, flags: &Flags) {
         println!("best config: {}",
                  tune::coordinator::trial::config_str(&res.trials[&best].config));
     }
+}
+
+/// File-name-safe slug of an experiment name (result directory).
+fn sanitize_name(name: &str) -> String {
+    let slug: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.') { c } else { '-' })
+        .collect();
+    if slug.is_empty() { "experiment".into() } else { slug }
+}
+
+/// Queued spec files, oldest-name-first (submission order is the file
+/// name order; `tune submit` preserves the caller's file name).
+fn queued_specs(queue: &Path) -> Vec<PathBuf> {
+    let Ok(entries) = std::fs::read_dir(queue) else { return Vec::new() };
+    let mut specs: Vec<PathBuf> = entries
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().map_or(false, |e| e == "json"))
+        .collect();
+    specs.sort();
+    specs
+}
+
+/// Pull every queued spec into the hub. Accepted specs are deleted from
+/// the queue; malformed ones are renamed `*.rejected` with a note.
+fn ingest_queue(
+    hub: &mut ExperimentHub,
+    root: &Path,
+    queue: &Path,
+    seen: &mut std::collections::BTreeSet<String>,
+) -> usize {
+    let mut accepted = 0;
+    for path in queued_specs(queue) {
+        let reject = |path: &Path, why: &str| {
+            eprintln!("serve: rejecting {path:?}: {why}");
+            let mut to = path.as_os_str().to_os_string();
+            to.push(".rejected");
+            std::fs::rename(path, &to).ok();
+        };
+        let f = match SpecFile::load(&path) {
+            Ok(f) => f,
+            Err(e) => {
+                reject(&path, &format!("{e:#}"));
+                continue;
+            }
+        };
+        let name = sanitize_name(&f.spec.name);
+        if seen.contains(&name) {
+            reject(&path, "an experiment with this name was already served");
+            continue;
+        }
+        // A bad workload (typo, missing jax artifacts) rejects this
+        // submission only — it must never exit/panic the shared server.
+        let factory = match try_workload_factory(&f.workload) {
+            Ok((factory, _exec)) => factory,
+            Err(e) => {
+                reject(&path, &e);
+                continue;
+            }
+        };
+        let mut sub = Submission::new(f.spec, f.space, f.scheduler, f.search, factory);
+        sub.cluster = f.cluster;
+        sub.weight = f.weight;
+        sub.experiment_dir = Some(root.join("experiments").join(&name));
+        match hub.submit(sub) {
+            Ok(_) => {
+                seen.insert(name.clone());
+                std::fs::remove_file(&path).ok();
+                println!("serve: admitted experiment {name:?}");
+                accepted += 1;
+            }
+            Err(e) => reject(&path, &e),
+        }
+    }
+    accepted
+}
+
+/// Atomically publish the hub's status table for `tune status`.
+fn publish_status(hub: &ExperimentHub, root: &Path) {
+    if let Err(e) = write_atomic(&root.join("serve.status.json"), &hub.status_json().to_string()) {
+        eprintln!("serve: writing status file: {e}");
+    }
+}
+
+/// `tune serve`: the long-running multi-experiment coordinator. One
+/// shared bounded pool serves every experiment; the control plane is
+/// the filesystem (queue/ for submissions, serve.status.json for
+/// status, serve.stop to shut down) so no network stack is needed.
+fn cmd_serve(flags: &Flags) {
+    let root = PathBuf::from(flags.get("exp-dir", "tune_serve"));
+    let workers = flags.get_u64("workers", 4) as usize;
+    let max_live = flags.get_u64("max-live", 4 * workers as u64) as usize;
+    let drain = flags.0.contains_key("drain");
+    let queue = root.join("queue");
+    std::fs::create_dir_all(&queue).expect("create serve queue dir");
+    let stop_file = root.join("serve.stop");
+    std::fs::remove_file(&stop_file).ok(); // stale stop from a past server
+
+    let mut hub = ExperimentHub::new(workers, max_live);
+    let mut seen = std::collections::BTreeSet::new();
+    let mut served = 0usize;
+    println!(
+        "serve: {} workers, {} live-trial slots; queue at {:?}",
+        workers, max_live, queue
+    );
+    loop {
+        served += ingest_queue(&mut hub, &root, &queue, &mut seen);
+        let any_active = hub.run_for(std::time::Duration::from_millis(300));
+        publish_status(&hub, &root);
+        if stop_file.exists() {
+            std::fs::remove_file(&stop_file).ok();
+            println!(
+                "serve: stop requested ({} experiment(s) still active)",
+                hub.active_count()
+            );
+            break;
+        }
+        if drain && !any_active && queued_specs(&queue).is_empty() {
+            println!("serve: drained ({served} experiment(s) served)");
+            break;
+        }
+        if !any_active {
+            // Nothing running: idle politely between queue polls.
+            std::thread::sleep(std::time::Duration::from_millis(200));
+        }
+    }
+    publish_status(&hub, &root);
+}
+
+/// `tune submit`: validate a spec file and queue it on a server.
+fn cmd_submit(flags: &Flags) {
+    let root = PathBuf::from(flags.get("exp-dir", "tune_serve"));
+    let Some(spec_path) = flags.0.get("spec").map(PathBuf::from) else {
+        eprintln!("submit: --spec FILE.json is required");
+        std::process::exit(2);
+    };
+    // Validate before queueing so the user gets the parse error, not
+    // a serve-side rejection note.
+    let f = SpecFile::load(&spec_path).unwrap_or_else(|e| {
+        eprintln!("submit: spec error: {e:#}");
+        std::process::exit(2);
+    });
+    let queue = root.join("queue");
+    std::fs::create_dir_all(&queue).expect("create serve queue dir");
+    let text = std::fs::read_to_string(&spec_path).expect("re-read spec file");
+    // Key the queue entry by the validated experiment name, not the
+    // caller's file stem: two users submitting different experiments
+    // from files that happen to share a name must not clobber each
+    // other's still-queued submission.
+    let target = queue.join(format!("{}.json", sanitize_name(&f.spec.name)));
+    if target.exists() {
+        eprintln!(
+            "submit: an experiment named {:?} is already queued at {target:?}; \
+             pick a different \"name\" or wait for the server to ingest it",
+            f.spec.name
+        );
+        std::process::exit(1);
+    }
+    write_atomic(&target, &text).expect("queue spec file");
+    println!(
+        "submitted {:?} (experiment {:?}, weight {}) to {:?}",
+        spec_path, f.spec.name, f.weight, queue
+    );
+}
+
+/// `tune status`: print the server's published experiment table.
+fn cmd_status(flags: &Flags) {
+    let root = PathBuf::from(flags.get("exp-dir", "tune_serve"));
+    let path = root.join("serve.status.json");
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        eprintln!(
+            "status: no status file at {path:?} (is `tune serve --exp-dir {}` running?)",
+            root.display()
+        );
+        std::process::exit(1);
+    };
+    let s = tune::util::json::parse(&text).unwrap_or_else(|e| {
+        eprintln!("status: unreadable status file: {e}");
+        std::process::exit(1);
+    });
+    let num = |k: &str| s.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+    println!(
+        "serve: {} workers, {} live-trial slots, {} active experiment(s)",
+        num("workers"),
+        num("max_live"),
+        num("active")
+    );
+    println!(
+        "{:<24} {:>9} {:>7} {:>8} {:>8} {:>12}",
+        "experiment", "state", "weight", "trials", "running", "best"
+    );
+    println!("{}", "-".repeat(74));
+    for e in s.get("experiments").and_then(|e| e.as_arr()).unwrap_or(&[]) {
+        let get = |k: &str| e.get(k).and_then(|v| v.as_str()).unwrap_or("?").to_string();
+        let n = |k: &str| e.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+        let best = e
+            .get("best_metric")
+            .and_then(|v| v.as_f64())
+            .map(|v| format!("{v:.4}"))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "{:<24} {:>9} {:>7} {:>8} {:>8} {:>12}",
+            get("name"),
+            get("state"),
+            n("weight"),
+            n("trials"),
+            n("running"),
+            best
+        );
+    }
+}
+
+/// `tune stop`: ask a running server to shut down.
+fn cmd_stop(flags: &Flags) {
+    let root = PathBuf::from(flags.get("exp-dir", "tune_serve"));
+    write_atomic(&root.join("serve.stop"), "stop\n").expect("write stop file");
+    println!("stop requested for server at {:?}", root);
 }
 
 fn cmd_shootout(flags: &Flags) {

@@ -175,6 +175,66 @@ impl Trainable for NonStationaryTrainable {
     }
 }
 
+/// A learning curve that *diverges*: behaves like [`CurveTrainable`]
+/// through iteration `nan_after` (config key), then reports `NaN` for
+/// every metric — the classic exploded-loss failure mode §3 calls an
+/// irregular computation. `nan_after` absent (or past the horizon)
+/// means it never diverges; `nan_after = 0` means every result is NaN.
+/// The trainable itself keeps stepping happily; it is the
+/// *coordinator's* job to rank the NaN stream as strictly worst instead
+/// of panicking (see `util::order`), which the NaN regression tests
+/// drive through every scheduler and searcher.
+pub struct DivergentTrainable {
+    inner: CurveTrainable,
+    t: u64,
+    nan_after: f64,
+}
+
+impl DivergentTrainable {
+    /// Build from a config (`lr`, `momentum`, `nan_after`) and a seed.
+    pub fn new(config: &Config, seed: u64) -> Self {
+        DivergentTrainable {
+            inner: CurveTrainable::new(config, seed),
+            t: 0,
+            nan_after: cfg_f64(config, "nan_after", f64::INFINITY),
+        }
+    }
+
+    /// Has this trainable started reporting NaN yet?
+    pub fn diverged(&self) -> bool {
+        self.t as f64 > self.nan_after
+    }
+}
+
+impl Trainable for DivergentTrainable {
+    fn step(&mut self) -> Result<StepOutput, String> {
+        self.t += 1;
+        let mut out = self.inner.step()?;
+        if self.diverged() {
+            for v in out.metrics.values_mut() {
+                *v = f64::NAN;
+            }
+        }
+        Ok(out)
+    }
+
+    fn save(&mut self) -> Vec<u8> {
+        // The divergence point is config-derived and `t` mirrors the
+        // inner curve's step counter, so the inner blob is sufficient.
+        self.inner.save()
+    }
+
+    fn restore(&mut self, blob: &[u8]) -> Result<(), String> {
+        self.inner.restore(blob)?;
+        self.t = u64::from_le_bytes(blob[..8].try_into().map_err(|_| "bad blob")?);
+        Ok(())
+    }
+
+    fn step_cost(&self) -> f64 {
+        self.inner.step_cost()
+    }
+}
+
 /// Fixed-length trivial trainable for overhead/scaling benches (C3):
 /// every step costs `cost` virtual seconds and reports one metric.
 pub struct ConstTrainable {
@@ -313,6 +373,34 @@ mod tests {
         }
         assert!(adaptive.score > static_.score * 1.5,
                 "adaptive={} static={}", adaptive.score, static_.score);
+    }
+
+    #[test]
+    fn divergent_reports_nan_after_threshold() {
+        let mut c = cfg(0.02);
+        c.insert("nan_after".into(), ParamValue::I64(3));
+        let mut t = DivergentTrainable::new(&c, 1);
+        for _ in 0..3 {
+            let out = t.step().unwrap();
+            assert!(out.metrics["accuracy"].is_finite());
+        }
+        assert!(!t.diverged());
+        let out = t.step().unwrap();
+        assert!(out.metrics["accuracy"].is_nan());
+        assert!(out.metrics["loss"].is_nan());
+        assert!(t.diverged());
+    }
+
+    #[test]
+    fn divergent_without_threshold_matches_curve() {
+        let mut a = DivergentTrainable::new(&cfg(0.02), 5);
+        let mut b = CurveTrainable::new(&cfg(0.02), 5);
+        for _ in 0..20 {
+            assert_eq!(
+                a.step().unwrap().metrics["accuracy"],
+                b.step().unwrap().metrics["accuracy"]
+            );
+        }
     }
 
     #[test]

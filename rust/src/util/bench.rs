@@ -76,7 +76,7 @@ pub fn bench_n<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) ->
         f();
         samples.push(t.elapsed().as_nanos() as f64);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| crate::util::order::asc(*a, *b));
     let stats = BenchStats {
         name: name.to_string(),
         iters,

@@ -1,8 +1,10 @@
-//! Shared infrastructure: JSON, deterministic RNG, micro-bench harness,
-//! property-test harness, and the Table-1 LoC counter.
+//! Shared infrastructure: JSON, deterministic RNG, NaN-proof metric
+//! ordering, micro-bench harness, property-test harness, and the
+//! Table-1 LoC counter.
 
 pub mod bench;
 pub mod json;
 pub mod loc;
+pub mod order;
 pub mod prop;
 pub mod rng;

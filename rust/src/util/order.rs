@@ -1,0 +1,80 @@
+//! NaN-proof total order over metric values.
+//!
+//! §4.2 of the paper requires the platform to "handle irregular
+//! computations" — and the most common irregularity of a real training
+//! job is a diverged loss: the trainable keeps stepping but reports
+//! `NaN`. Every ranking site in the coordinator (ASHA rung cutoffs, PBT
+//! population ranking, HyperBand rung cuts, median stopping, TPE's
+//! good/bad split, evolution's parent pool, the runner's best-trial
+//! pick) used to compare metrics with `partial_cmp(..).unwrap()`, so a
+//! single `NaN` panicked the whole coordinator and took every other
+//! trial — and, under the [`crate::coordinator::hub::ExperimentHub`],
+//! every other *experiment* — down with it.
+//!
+//! This module is the one shared fix: a total order on `f64` that ranks
+//! `NaN` strictly *worst*. All ranking sites normalize metrics with
+//! [`crate::coordinator::trial::Mode::ascending`] first (higher is
+//! always better), so "worst" uniformly means *smallest*: `NaN` sorts
+//! below `-inf` in ascending order and last in best-first order. A
+//! diverged trial therefore loses every comparison — it gets cut at
+//! rungs, exploited by PBT, stopped by the median rule — instead of
+//! crashing the scheduler.
+
+use std::cmp::Ordering;
+
+/// Ascending total order with `NaN` ranked strictly smallest (worst
+/// after `Mode::ascending` normalization). Total: never panics.
+pub fn asc(a: f64, b: f64) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Less,
+        (false, true) => Ordering::Greater,
+        // Both are non-NaN: IEEE order, with -0.0 < +0.0 tie-broken by
+        // total_cmp (irrelevant for rankings, but keeps Ord lawful).
+        (false, false) => a.total_cmp(&b),
+    }
+}
+
+/// Descending (best-first) total order with `NaN` ranked strictly last.
+pub fn desc(a: f64, b: f64) -> Ordering {
+    asc(b, a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nan_is_worst_in_both_directions() {
+        assert_eq!(asc(f64::NAN, f64::NEG_INFINITY), Ordering::Less);
+        assert_eq!(asc(f64::NEG_INFINITY, f64::NAN), Ordering::Greater);
+        assert_eq!(asc(f64::NAN, f64::NAN), Ordering::Equal);
+        assert_eq!(desc(f64::NAN, -1e300), Ordering::Greater); // sorts last
+        assert_eq!(desc(-1e300, f64::NAN), Ordering::Less);
+    }
+
+    #[test]
+    fn finite_values_order_normally() {
+        assert_eq!(asc(1.0, 2.0), Ordering::Less);
+        assert_eq!(asc(2.0, 1.0), Ordering::Greater);
+        assert_eq!(asc(1.0, 1.0), Ordering::Equal);
+        assert_eq!(desc(2.0, 1.0), Ordering::Less); // best first
+    }
+
+    #[test]
+    fn sorting_puts_nan_last_in_best_first_lists() {
+        let mut v = vec![0.3, f64::NAN, 0.9, f64::NAN, 0.1];
+        v.sort_by(|a, b| desc(*a, *b));
+        assert_eq!(v[0], 0.9);
+        assert_eq!(v[1], 0.3);
+        assert_eq!(v[2], 0.1);
+        assert!(v[3].is_nan() && v[4].is_nan());
+    }
+
+    #[test]
+    fn select_nth_with_nans_does_not_panic() {
+        let mut v = vec![f64::NAN, 0.5, f64::NAN, 0.7, 0.2];
+        let (_, kth, _) = v.select_nth_unstable_by(1, |a, b| desc(*a, *b));
+        assert_eq!(*kth, 0.5); // 2nd best of {0.7, 0.5, 0.2, NaN, NaN}
+    }
+}

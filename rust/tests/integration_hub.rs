@@ -1,0 +1,343 @@
+//! ExperimentHub integration suite: concurrent multi-experiment serving
+//! over one shared pool, with the isolation proof (hub results are
+//! byte-identical to solo runs), fault-recovery-under-quota regression,
+//! panic containment at the experiment level, and a `serve`/`submit`/
+//! `status` CLI smoke test.
+
+use tune::coordinator::hub::{ExperimentHub, Submission};
+use tune::coordinator::spec::SpaceBuilder;
+use tune::coordinator::trial::config_str;
+use tune::coordinator::{
+    run_experiments, ExecMode, ExperimentResult, ExperimentSpec, Mode, RunOptions, SchedulerKind,
+    SearchKind, TrialStatus,
+};
+use tune::ray::FaultPlan;
+use tune::trainable::synthetic::CurveTrainable;
+use tune::trainable::{factory, StepOutput, Trainable, TrainableFactory};
+
+fn curve_factory() -> TrainableFactory {
+    factory(|c, s| Box::new(CurveTrainable::new(c, s)))
+}
+
+fn curve_spec(name: &str, seed: u64, samples: usize, iters: u64) -> ExperimentSpec {
+    let mut spec = ExperimentSpec::named(name);
+    spec.metric = "accuracy".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = samples;
+    spec.max_iterations_per_trial = iters;
+    spec.seed = seed;
+    spec
+}
+
+fn lr_space() -> tune::coordinator::spec::SearchSpace {
+    SpaceBuilder::new().loguniform("lr", 1e-4, 1.0).build()
+}
+
+/// Canonical, timing-free serialization of an experiment's outcome:
+/// per trial its config, iteration count, terminal status and the exact
+/// bits of its best metric. Two runs with identical trial streams
+/// produce identical strings, byte for byte.
+fn fingerprint(res: &ExperimentResult) -> String {
+    let mut out = String::new();
+    for t in res.trials.values() {
+        out.push_str(&format!(
+            "{}|{}|{}|{}|{}\n",
+            t.id,
+            config_str(&t.config),
+            t.iteration,
+            t.status.as_str(),
+            t.best_metric.map(|v| format!("{:016x}", v.to_bits())).unwrap_or_else(|| "-".into()),
+        ));
+    }
+    out.push_str(&format!(
+        "best={:?} completed={}\n",
+        res.best,
+        res.count(TrialStatus::Completed)
+    ));
+    out
+}
+
+#[test]
+fn three_concurrent_experiments_match_solo_runs_byte_for_byte() {
+    // The isolation proof: 3 experiments multiplexed over one 4-worker
+    // pool must produce results byte-identical to running each
+    // experiment alone (same seeds) on its own pool. Per-experiment RNG
+    // streams, trial tables and clusters may share nothing.
+    let seeds = [11u64, 22, 33];
+    let solo: Vec<String> = seeds
+        .iter()
+        .map(|&seed| {
+            let res = run_experiments(
+                curve_spec(&format!("iso-{seed}"), seed, 6, 12),
+                lr_space(),
+                SchedulerKind::Fifo,
+                SearchKind::Random,
+                curve_factory(),
+                RunOptions {
+                    exec: ExecMode::Pool { workers: 4 },
+                    ..Default::default()
+                },
+            );
+            fingerprint(&res)
+        })
+        .collect();
+
+    let mut hub = ExperimentHub::new(4, 0);
+    for &seed in &seeds {
+        hub.submit(Submission::new(
+            curve_spec(&format!("iso-{seed}"), seed, 6, 12),
+            lr_space(),
+            SchedulerKind::Fifo,
+            SearchKind::Random,
+            curve_factory(),
+        ))
+        .unwrap();
+    }
+    let results = hub.run_all();
+    assert_eq!(results.len(), 3);
+    for (i, (name, res)) in results.iter().enumerate() {
+        assert_eq!(name, &format!("iso-{}", seeds[i]));
+        assert_eq!(
+            fingerprint(res),
+            solo[i],
+            "experiment {name} diverged from its solo run"
+        );
+    }
+}
+
+#[test]
+fn fault_recovery_cannot_deadlock_exhausted_quotas() {
+    // Regression (hub admission vs `handle_failure` relaunch): 3
+    // experiments on a 2-worker pool with a global budget of 3 slots —
+    // every experiment's fair share is exactly 1, so each fault-recovery
+    // relaunch competes with fresh admissions for the experiment's only
+    // slot. Flaky steps + checkpoints must still drive every trial to
+    // completion; a deadlock would hang the run (and the harness).
+    let mut hub = ExperimentHub::new(2, 3);
+    for seed in 0..3u64 {
+        let mut spec = curve_spec(&format!("flaky-{seed}"), seed, 3, 15);
+        spec.fault_plan = FaultPlan::flaky_steps(0.05);
+        spec.checkpoint_freq = 3;
+        spec.max_failures = 100;
+        hub.submit(Submission::new(
+            spec,
+            lr_space(),
+            SchedulerKind::Fifo,
+            SearchKind::Random,
+            curve_factory(),
+        ))
+        .unwrap();
+    }
+    let results = hub.run_all();
+    assert_eq!(results.len(), 3);
+    let mut recovered = 0;
+    for (name, res) in &results {
+        assert_eq!(
+            res.count(TrialStatus::Completed),
+            3,
+            "{name}: {:?}",
+            res.stats
+        );
+        recovered += res.stats.failures_recovered;
+    }
+    // 135 injected-fault coin flips at 5%: recovery definitely fired.
+    assert!(recovered > 0);
+}
+
+/// Panics deterministically every time it steps *to* iteration
+/// `panic_at` (so a checkpoint-restored incarnation panics again) —
+/// drives the permanent-failure path through `max_failures`.
+struct PanicAt {
+    t: u64,
+    panic_at: u64,
+}
+
+impl Trainable for PanicAt {
+    fn step(&mut self) -> Result<StepOutput, String> {
+        self.t += 1;
+        if self.panic_at > 0 && self.t == self.panic_at {
+            panic!("deterministic panic at iteration {}", self.t);
+        }
+        Ok(StepOutput::of(&[("accuracy", self.t as f64 / 100.0)]))
+    }
+    fn save(&mut self) -> Vec<u8> {
+        self.t.to_le_bytes().to_vec()
+    }
+    fn restore(&mut self, blob: &[u8]) -> Result<(), String> {
+        self.t = u64::from_le_bytes(blob.try_into().map_err(|_| "bad blob")?);
+        Ok(())
+    }
+}
+
+#[test]
+fn panicking_trainable_errors_out_without_killing_the_experiment() {
+    // 2 healthy + 2 permanently-panicking trials on the pool: the
+    // panicking ones exhaust max_failures and error out; the healthy
+    // ones (and the coordinator, and the pool mutex) survive.
+    let fac: TrainableFactory = factory(|c, _s| {
+        let panic_at = c.get("panic_at").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        Box::new(PanicAt { t: 0, panic_at })
+    });
+    let mut spec = curve_spec("panic-mix", 5, 2, 8);
+    spec.max_failures = 2;
+    spec.checkpoint_freq = 3;
+    let space = SpaceBuilder::new().grid_f64("panic_at", &[0.0, 4.0]).build();
+    let res = run_experiments(
+        spec,
+        space,
+        SchedulerKind::Fifo,
+        SearchKind::Grid,
+        fac,
+        RunOptions {
+            exec: ExecMode::Pool { workers: 2 },
+            ..Default::default()
+        },
+    );
+    assert_eq!(res.trials.len(), 4); // 2 passes x 2 grid values
+    assert_eq!(res.count(TrialStatus::Errored), 2, "{:?}", res.stats);
+    assert_eq!(res.count(TrialStatus::Completed), 2);
+    assert!(res.best_metric().is_some());
+}
+
+#[test]
+fn hub_experiments_keep_isolated_durable_dirs() {
+    let root = std::env::temp_dir().join(format!("tune_hub_dirs_{}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok();
+    let mut hub = ExperimentHub::new(2, 4);
+    for seed in 0..2u64 {
+        let name = format!("durable-{seed}");
+        let mut sub = Submission::new(
+            curve_spec(&name, seed, 3, 6),
+            lr_space(),
+            SchedulerKind::Fifo,
+            SearchKind::Random,
+            curve_factory(),
+        );
+        sub.experiment_dir = Some(root.join(&name));
+        sub.snapshot_every = 5;
+        hub.submit(sub).unwrap();
+    }
+    let results = hub.run_all();
+    assert_eq!(results.len(), 2);
+    for seed in 0..2u64 {
+        let dir = root.join(format!("durable-{seed}"));
+        assert!(dir.join("experiment.meta.json").exists(), "{dir:?}");
+        assert!(dir.join("snapshot.json").exists(), "{dir:?}");
+        assert!(dir.join("experiment.json").exists(), "{dir:?}");
+        // Each experiment logged exactly its own 3 trials.
+        let logs = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| {
+                let n = e.file_name();
+                let n = n.to_string_lossy().into_owned();
+                n.starts_with("trial_") && n.ends_with(".jsonl")
+            })
+            .count();
+        assert_eq!(logs, 3);
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn serve_submit_status_cli_smoke() {
+    use std::process::Command;
+    let tune = env!("CARGO_BIN_EXE_tune");
+    let root = std::env::temp_dir().join(format!("tune_serve_smoke_{}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok();
+    std::fs::create_dir_all(&root).unwrap();
+    let spec_path = root.join("smoke-a.json");
+    std::fs::write(
+        &spec_path,
+        r#"{
+            "name": "smoke-a", "metric": "accuracy", "mode": "max",
+            "num_samples": 4, "max_iterations_per_trial": 5, "seed": 3,
+            "workload": "curve", "scheduler": "fifo", "search": "random",
+            "weight": 2,
+            "space": {"lr": {"loguniform": [1e-4, 1.0]}},
+            "cluster": {"nodes": 1, "cpus_per_node": 8}
+        }"#,
+    )
+    .unwrap();
+    let exp_dir = root.join("server");
+
+    // submit: validates the spec and queues it.
+    let out = Command::new(tune)
+        .args(["submit", "--exp-dir"])
+        .arg(&exp_dir)
+        .arg("--spec")
+        .arg(&spec_path)
+        .output()
+        .expect("run tune submit");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(exp_dir.join("queue/smoke-a.json").exists());
+
+    // serve --drain: ingests the queue, runs it over the shared pool,
+    // publishes status, exits when drained.
+    let out = Command::new(tune)
+        .args(["serve", "--workers", "2", "--drain", "--exp-dir"])
+        .arg(&exp_dir)
+        .output()
+        .expect("run tune serve");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(!exp_dir.join("queue/smoke-a.json").exists(), "queue not drained");
+    let exp_out = exp_dir.join("experiments/smoke-a");
+    assert!(exp_out.join("experiment.json").exists(), "no results at {exp_out:?}");
+    assert!(exp_out.join("snapshot.json").exists());
+
+    // status: prints the published table.
+    let out = Command::new(tune)
+        .args(["status", "--exp-dir"])
+        .arg(&exp_dir)
+        .output()
+        .expect("run tune status");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("smoke-a"), "{stdout}");
+    assert!(stdout.contains("finished"), "{stdout}");
+
+    // stop: drops the stop marker for a (hypothetical) live server.
+    let out = Command::new(tune)
+        .args(["stop", "--exp-dir"])
+        .arg(&exp_dir)
+        .output()
+        .expect("run tune stop");
+    assert!(out.status.success());
+    assert!(exp_dir.join("serve.stop").exists());
+
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn weighted_shares_let_heavy_experiments_hold_more_slots() {
+    // Not a strict scheduling assertion (wall-clock pool), but the
+    // fair-share math is deterministic: run a heavy (weight 3) and a
+    // light (weight 1) experiment over a 4-slot budget and check both
+    // finish with full trial tables — the heavy one must not starve the
+    // light one despite owning 3 of 4 slots.
+    let mut hub = ExperimentHub::new(2, 4);
+    let mut heavy = Submission::new(
+        curve_spec("heavy", 1, 6, 8),
+        lr_space(),
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        curve_factory(),
+    );
+    heavy.weight = 3;
+    hub.submit(heavy).unwrap();
+    hub.submit(Submission::new(
+        curve_spec("light", 2, 6, 8),
+        lr_space(),
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        curve_factory(),
+    ))
+    .unwrap();
+    let results = hub.run_all();
+    assert_eq!(results.len(), 2);
+    for (name, res) in &results {
+        assert_eq!(res.trials.len(), 6, "{name}");
+        assert_eq!(res.count(TrialStatus::Completed), 6, "{name}");
+    }
+    assert!(hub.mean_occupancy() > 0.0);
+}

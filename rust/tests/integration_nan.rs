@@ -1,0 +1,190 @@
+//! NaN regression suite: a trainable whose metrics diverge to `NaN`
+//! mid-run must never panic a scheduler, a searcher or the runner, and
+//! the experiment must still complete with a *finite* best trial.
+//!
+//! Before the `util::order` total-order fix, every ranking site in the
+//! coordinator compared metrics with `partial_cmp(..).unwrap()`: the
+//! first NaN that reached an ASHA rung, a PBT ranking, a HyperBand
+//! barrier, the median rule, TPE's good/bad split, evolution's parent
+//! pool or the final best-trial pick panicked the whole coordinator.
+
+use tune::coordinator::spec::{SearchSpace, SpaceBuilder};
+use tune::coordinator::{
+    run_experiments, ExecMode, ExperimentSpec, Mode, ParamValue, RunOptions, SchedulerKind,
+    SearchKind, TrialStatus,
+};
+use tune::ray::{Cluster, Resources};
+use tune::trainable::synthetic::DivergentTrainable;
+use tune::trainable::{factory, TrainableFactory};
+
+/// EVERY trial diverges somewhere in iterations 4..=10, so each one
+/// records a few finite early results and then streams NaN for the rest
+/// of the run — the hardest version of the regression (no scheduler
+/// callback is safe from NaN), while the early finite results guarantee
+/// a finite best trial exists.
+fn all_diverge_space() -> SearchSpace {
+    SpaceBuilder::new()
+        .loguniform("lr", 1e-4, 1.0)
+        .randint("nan_after", 3, 11)
+        .build()
+}
+
+/// Exactly half the population healthy, half diverging at iteration 4
+/// (deterministic under grid expansion).
+fn half_diverge_space() -> SearchSpace {
+    SpaceBuilder::new()
+        .loguniform("lr", 1e-4, 1.0)
+        .grid_f64("nan_after", &[1e18, 3.0])
+        .build()
+}
+
+fn divergent_factory() -> TrainableFactory {
+    factory(|c, s| Box::new(DivergentTrainable::new(c, s)))
+}
+
+fn spec(name: &str, samples: usize, iters: u64) -> ExperimentSpec {
+    let mut spec = ExperimentSpec::named(name);
+    spec.metric = "accuracy".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = samples;
+    spec.max_iterations_per_trial = iters;
+    spec.seed = 42;
+    spec
+}
+
+/// One assertion shared by all cases: the experiment completes (every
+/// trial terminal) and the best metric is finite — NaN streams exist in
+/// every trial, but a NaN can never win.
+fn assert_nan_proof(scheduler: SchedulerKind, search: SearchKind, exec: ExecMode) {
+    let res = run_experiments(
+        spec("nan-proof", 8, 18),
+        all_diverge_space(),
+        scheduler,
+        search,
+        divergent_factory(),
+        RunOptions {
+            cluster: Cluster::uniform(2, Resources::cpu(8.0)),
+            exec,
+            ..Default::default()
+        },
+    );
+    assert_eq!(res.trials.len(), 8);
+    let terminal = res.trials.values().filter(|t| t.status.is_terminal()).count();
+    assert_eq!(terminal, res.trials.len());
+    let best = res.best_metric().expect("early finite results exist in every trial");
+    assert!(best.is_finite(), "best metric is {best}");
+    assert!(best > 0.0);
+    // Per-trial bests are NaN-free too (the Trial::record guard).
+    for t in res.trials.values() {
+        if let Some(b) = t.best_metric {
+            assert!(b.is_finite(), "trial {} best is {b}", t.id);
+        }
+    }
+}
+
+fn nan_scheduler(kind: &str) -> SchedulerKind {
+    match kind {
+        "fifo" => SchedulerKind::Fifo,
+        "asha" => SchedulerKind::Asha { grace_period: 1, reduction_factor: 3.0, max_t: 18 },
+        "hyperband" => SchedulerKind::HyperBand { max_t: 18, eta: 3.0 },
+        "median" => SchedulerKind::MedianStopping { grace_period: 2, min_samples: 2 },
+        "pbt" => SchedulerKind::Pbt { perturbation_interval: 4, space: all_diverge_space() },
+        other => unreachable!("{other}"),
+    }
+}
+
+#[test]
+fn nan_mid_run_does_not_panic_any_scheduler() {
+    for kind in ["fifo", "asha", "hyperband", "median", "pbt"] {
+        assert_nan_proof(nan_scheduler(kind), SearchKind::Random, ExecMode::Sim);
+    }
+}
+
+#[test]
+fn nan_mid_run_does_not_panic_any_searcher() {
+    for search in [SearchKind::Random, SearchKind::Grid, SearchKind::Tpe, SearchKind::Evolution]
+    {
+        assert_nan_proof(nan_scheduler("asha"), search, ExecMode::Sim);
+    }
+}
+
+#[test]
+fn nan_mid_run_survives_the_pool_executor() {
+    assert_nan_proof(nan_scheduler("asha"), SearchKind::Random, ExecMode::Pool { workers: 4 });
+}
+
+#[test]
+fn diverged_trials_never_beat_healthy_ones() {
+    // Grid-deterministic mix: 8 healthy trials, 8 diverging at
+    // iteration 4. A diverged trial's best is frozen at its third
+    // (early, low) curve point, so the winner must be healthy.
+    let res = run_experiments(
+        spec("nan-mixed", 8, 18),
+        half_diverge_space(),
+        SchedulerKind::Asha { grace_period: 1, reduction_factor: 3.0, max_t: 18 },
+        SearchKind::Grid,
+        divergent_factory(),
+        RunOptions::default(),
+    );
+    assert_eq!(res.trials.len(), 16); // 8 passes x 2 grid values
+    let best = res.best.expect("finite best exists");
+    let nan_after = res.trials[&best].config["nan_after"].as_f64().unwrap();
+    assert!(nan_after > 1e17, "a diverged trial won: {:?}", res.trials[&best].config);
+    assert!(res.best_metric().unwrap().is_finite());
+}
+
+#[test]
+fn all_nan_experiment_completes_with_no_best() {
+    // Pathological endgame: every result of every trial is NaN, so no
+    // finite metric is ever recorded — the experiment must still finish
+    // (no panic) and report no best rather than a NaN best.
+    let space = SpaceBuilder::new()
+        .loguniform("lr", 1e-4, 1.0)
+        .constant("nan_after", ParamValue::F64(0.0))
+        .build();
+    let res = run_experiments(
+        spec("nan-all", 6, 10),
+        space,
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        divergent_factory(),
+        RunOptions::default(),
+    );
+    assert_eq!(res.trials.len(), 6);
+    assert_eq!(res.count(TrialStatus::Completed), 6);
+    assert!(res.best.is_none());
+    assert!(res.best_metric().is_none());
+    assert!(res.best_curve.is_empty());
+}
+
+#[test]
+fn nan_experiment_snapshots_and_resumes() {
+    // Scheduler state containing NaN (ASHA rung values, trial
+    // last_result metrics) must survive a snapshot/restore roundtrip:
+    // the non-finite encoding in `persist` turns them into tagged
+    // strings instead of unreadable bare `NaN` tokens.
+    let dir = std::env::temp_dir().join(format!("tune_nan_resume_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let run = |resume: bool| {
+        run_experiments(
+            spec("nan-durable", 6, 18),
+            all_diverge_space(),
+            SchedulerKind::Asha { grace_period: 1, reduction_factor: 3.0, max_t: 18 },
+            SearchKind::Random,
+            divergent_factory(),
+            RunOptions {
+                experiment_dir: Some(dir.clone()),
+                snapshot_every: 10,
+                resume,
+                ..Default::default()
+            },
+        )
+    };
+    let first = run(false);
+    assert!(first.best_metric().unwrap().is_finite());
+    // Finished experiment: resume is a no-op and reproduces the result.
+    let resumed = run(true);
+    assert_eq!(resumed.best, first.best);
+    assert_eq!(resumed.best_metric(), first.best_metric());
+    std::fs::remove_dir_all(&dir).ok();
+}
