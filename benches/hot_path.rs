@@ -1,0 +1,134 @@
+//! C7 bench: the allocation-lean result hot path — end-to-end
+//! results/sec through the full coordinator loop (sim executor, virtual
+//! time) plus per-result decision/handling latency for every scheduler,
+//! at 64 and 1024 trials.
+//!
+//! Run: `cargo bench --bench hot_path`
+//!
+//! `TUNE_BENCH_FAST=1` shrinks per-trial iteration counts so CI can
+//! smoke the binary in seconds; the emitted `BENCH_hot_path.json`
+//! records which mode produced the numbers.
+
+use tune::coordinator::spec::SpaceBuilder;
+use tune::coordinator::{
+    run_experiments, ExperimentSpec, Mode, RunOptions, SchedulerKind, SearchKind,
+};
+use tune::ray::{Cluster, Resources};
+use tune::trainable::factory;
+use tune::trainable::synthetic::CurveTrainable;
+use tune::util::json::Json;
+
+struct Case {
+    scheduler: &'static str,
+    trials: usize,
+    results: u64,
+    results_per_sec: f64,
+    decision_ns_per_result: f64,
+    handling_ns_per_result: f64,
+}
+
+fn scheduler_kind(name: &str, iters: u64) -> SchedulerKind {
+    match name {
+        "fifo" => SchedulerKind::Fifo,
+        "asha" => SchedulerKind::Asha { grace_period: 1, reduction_factor: 3.0, max_t: iters },
+        "median" => {
+            SchedulerKind::MedianStopping { grace_period: iters / 10 + 1, min_samples: 3 }
+        }
+        "hyperband" => SchedulerKind::HyperBand { max_t: iters, eta: 3.0 },
+        other => unreachable!("{other}"),
+    }
+}
+
+fn run_case(name: &'static str, samples: usize, iters: u64) -> Case {
+    let space = SpaceBuilder::new()
+        .loguniform("lr", 1e-4, 1.0)
+        .uniform("momentum", 0.8, 0.99)
+        .build();
+    let mut spec = ExperimentSpec::named("hot-path");
+    spec.metric = "accuracy".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = samples;
+    spec.max_iterations_per_trial = iters;
+    let t0 = std::time::Instant::now();
+    let res = run_experiments(
+        spec,
+        space,
+        scheduler_kind(name, iters),
+        SearchKind::Random,
+        factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+        RunOptions {
+            cluster: Cluster::uniform(8, Resources::cpu(16.0)),
+            ..Default::default()
+        },
+    );
+    let wall = t0.elapsed().as_secs_f64();
+    let n = res.stats.results.max(1);
+    Case {
+        scheduler: name,
+        trials: samples,
+        results: res.stats.results,
+        results_per_sec: res.stats.results as f64 / wall,
+        decision_ns_per_result: res.stats.decision_ns as f64 / n as f64,
+        handling_ns_per_result: res.stats.handling_ns as f64 / n as f64,
+    }
+}
+
+fn main() {
+    let fast = std::env::var("TUNE_BENCH_FAST").is_ok();
+    let iters = if fast { 9 } else { 81 };
+    println!(
+        "== result hot path: full coordinator loop (sim, virtual time), {} iters/trial{} ==",
+        iters,
+        if fast { " [FAST]" } else { "" },
+    );
+    println!(
+        "{:<12} {:>7} {:>10} {:>14} {:>14} {:>14}",
+        "scheduler", "trials", "results", "results/sec", "decision ns", "handling ns"
+    );
+    println!("{}", "-".repeat(76));
+    let mut cases = Vec::new();
+    for name in ["fifo", "asha", "median", "hyperband"] {
+        for samples in [64usize, 1024] {
+            let c = run_case(name, samples, iters);
+            println!(
+                "{:<12} {:>7} {:>10} {:>14.0} {:>14.0} {:>14.0}",
+                c.scheduler,
+                c.trials,
+                c.results,
+                c.results_per_sec,
+                c.decision_ns_per_result,
+                c.handling_ns_per_result
+            );
+            cases.push(c);
+        }
+    }
+
+    // Machine-readable record for CI artifacts / EXPERIMENTS.md updates.
+    let json = Json::obj(vec![
+        ("bench", Json::Str("hot_path".into())),
+        ("fast_mode", Json::Bool(fast)),
+        ("iters_per_trial", Json::Num(iters as f64)),
+        (
+            "cases",
+            Json::Arr(
+                cases
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("scheduler", Json::Str(c.scheduler.into())),
+                            ("trials", Json::Num(c.trials as f64)),
+                            ("results", Json::Num(c.results as f64)),
+                            ("results_per_sec", Json::Num(c.results_per_sec)),
+                            ("decision_ns_per_result", Json::Num(c.decision_ns_per_result)),
+                            ("handling_ns_per_result", Json::Num(c.handling_ns_per_result)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    match std::fs::write("BENCH_hot_path.json", json.to_string()) {
+        Ok(()) => println!("\nwrote BENCH_hot_path.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_hot_path.json: {e}"),
+    }
+}

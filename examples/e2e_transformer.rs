@@ -95,7 +95,7 @@ fn main() {
             format!("{:?}", t.status),
             t.last_result
                 .as_ref()
-                .and_then(|r| r.metric("loss"))
+                .and_then(|r| r.metric(&res.schema, "loss"))
                 .map(|l| format!("{l:.3}"))
                 .unwrap_or_else(|| "-".into()),
         );

@@ -2,11 +2,13 @@
 //! metadata in memory and relies on checkpoints for fault tolerance;
 //! schedulers "save and clone promising parameters (via checkpoint and
 //! restore)". Checkpoints are opaque byte blobs produced by
-//! `Trainable::save`; the store keeps them in memory and can optionally
-//! spill every write to disk for post-mortem restore — and, since the
-//! durability work, for crash-safe experiment resume: the store's
-//! metadata is serialized into the experiment snapshot and the blobs
-//! are re-read from the spill directory on restart.
+//! `Trainable::save`; the store keeps them in memory (as shared
+//! `Arc<[u8]>` handles, so relaunches and PBT exploits clone a
+//! refcount, never the bytes) and can optionally spill every write to
+//! disk for post-mortem restore — and, since the durability work, for
+//! crash-safe experiment resume: the store's metadata is serialized
+//! into the experiment snapshot and the blobs are re-read from the
+//! spill directory on restart.
 //!
 //! # Example
 //!
@@ -15,13 +17,14 @@
 //!
 //! let mut store = CheckpointStore::new(); // keeps the 2 newest per trial
 //! let id = store.save(7, 10, vec![1, 2, 3]);
-//! assert_eq!(store.get(id), Some(&[1u8, 2, 3][..]));
+//! assert_eq!(store.get(id).as_deref(), Some(&[1u8, 2, 3][..]));
 //! assert_eq!(store.latest_for(7), Some(id));
 //! assert_eq!(store.meta(id).unwrap().iteration, 10);
 //! ```
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::util::json::Json;
 
@@ -50,7 +53,7 @@ pub struct CheckpointMeta {
 #[derive(Debug, Default)]
 pub struct CheckpointStore {
     next_id: CheckpointId,
-    data: BTreeMap<CheckpointId, Vec<u8>>,
+    data: BTreeMap<CheckpointId, Arc<[u8]>>,
     meta: BTreeMap<CheckpointId, CheckpointMeta>,
     /// Latest checkpoint per trial (what PBT exploit clones).
     latest: BTreeMap<u64, CheckpointId>,
@@ -61,6 +64,12 @@ pub struct CheckpointStore {
     pub saved: u64,
     /// Successful reads so far.
     pub restored: u64,
+    /// Ids saved since the delta cursor was last reset (still live —
+    /// a same-window GC eviction removes the id from here instead of
+    /// recording a remove).
+    delta_added: Vec<CheckpointId>,
+    /// Ids GC-evicted since the delta cursor was last reset.
+    delta_removed: Vec<CheckpointId>,
 }
 
 impl CheckpointStore {
@@ -77,37 +86,44 @@ impl CheckpointStore {
     }
 
     /// Store a blob for `trial` at `iteration`; returns its id.
-    pub fn save(&mut self, trial: u64, iteration: u64, blob: Vec<u8>) -> CheckpointId {
+    pub fn save(&mut self, trial: u64, iteration: u64, blob: impl Into<Arc<[u8]>>) -> CheckpointId {
         self.save_timed(trial, iteration, 0.0, blob)
     }
 
     /// [`CheckpointStore::save`] plus the trial's accumulated training
     /// seconds, so a crash-resume rollback can restore time accounting
-    /// exactly alongside the iteration count.
+    /// exactly alongside the iteration count. Accepts a `Vec<u8>`
+    /// (fresh `Trainable::save` output) or an already-shared
+    /// `Arc<[u8]>` (PBT exploit clones) — the latter stores without
+    /// copying the bytes.
     pub fn save_timed(
         &mut self,
         trial: u64,
         iteration: u64,
         time_total_s: f64,
-        blob: Vec<u8>,
+        blob: impl Into<Arc<[u8]>>,
     ) -> CheckpointId {
+        let blob: Arc<[u8]> = blob.into();
         let id = self.next_id;
         self.next_id += 1;
         let meta = CheckpointMeta { id, trial, iteration, time_total_s, bytes: blob.len() };
         if let Some(dir) = &self.disk_dir {
-            std::fs::write(dir.join(Self::spill_name(&meta)), &blob).ok();
+            std::fs::write(dir.join(Self::spill_name(&meta)), &blob[..]).ok();
         }
         self.meta.insert(id, meta);
         self.data.insert(id, blob);
         self.latest.insert(trial, id);
         self.saved += 1;
+        self.delta_added.push(id);
         self.gc(trial);
         id
     }
 
-    /// Read a checkpoint blob back (counts as a restore).
-    pub fn get(&mut self, id: CheckpointId) -> Option<&[u8]> {
-        let found = self.data.get(&id).map(|v| v.as_slice());
+    /// Shared handle to a checkpoint blob (counts as a restore). The
+    /// clone is a refcount bump, not a byte copy — launches and PBT
+    /// exploits hand the same allocation around.
+    pub fn get(&mut self, id: CheckpointId) -> Option<Arc<[u8]>> {
+        let found = self.data.get(&id).map(Arc::clone);
         if found.is_some() {
             self.restored += 1;
         }
@@ -147,6 +163,14 @@ impl CheckpointStore {
                 if let Some(dir) = &self.disk_dir {
                     std::fs::remove_file(dir.join(Self::spill_name(&meta))).ok();
                 }
+            }
+            // Delta bookkeeping: an id born and evicted inside the same
+            // delta window never reaches disk state — drop it from the
+            // add list instead of journaling a remove.
+            if let Some(pos) = self.delta_added.iter().position(|a| *a == old) {
+                self.delta_added.swap_remove(pos);
+            } else {
+                self.delta_removed.push(old);
             }
         }
     }
@@ -223,10 +247,116 @@ impl CheckpointStore {
             if store.latest.get(&trial).map_or(true, |l| *l < id) {
                 store.latest.insert(trial, id);
             }
-            store.data.insert(id, blob);
+            store.data.insert(id, blob.into());
             store.meta.insert(id, meta);
         }
         Ok(store)
+    }
+
+    /// Incremental snapshot: metadata added/removed since the last
+    /// [`CheckpointStore::snapshot`]/delta, for the runner's delta
+    /// records. Blobs are never embedded — additions re-read from the
+    /// spill directory on fold, exactly like a full restore.
+    pub fn snapshot_delta(&mut self) -> Json {
+        let added = self
+            .delta_added
+            .iter()
+            .filter_map(|id| self.meta.get(id))
+            .map(|m| {
+                Json::obj(vec![
+                    ("id", Json::Num(m.id as f64)),
+                    ("trial", Json::Num(m.trial as f64)),
+                    ("iteration", Json::Num(m.iteration as f64)),
+                    ("time", Json::Num(m.time_total_s)),
+                    ("bytes", Json::Num(m.bytes as f64)),
+                ])
+            })
+            .collect();
+        let removed = self.delta_removed.iter().map(|id| Json::Num(*id as f64)).collect();
+        self.delta_added.clear();
+        self.delta_removed.clear();
+        Json::obj(vec![
+            ("next_id", Json::Num(self.next_id as f64)),
+            ("saved", Json::Num(self.saved as f64)),
+            ("restored", Json::Num(self.restored as f64)),
+            ("added", Json::Arr(added)),
+            ("removed", Json::Arr(removed)),
+        ])
+    }
+
+    /// Fold a [`CheckpointStore::snapshot_delta`] record into this
+    /// store, reading added blobs back from the spill directory `dir`.
+    /// Additions whose spill file is missing/truncated are dropped, the
+    /// same degradation contract as [`CheckpointStore::restore_from`].
+    pub fn apply_delta(&mut self, delta: &Json, dir: &Path) -> Result<(), String> {
+        if let Some(n) = delta.get("next_id").and_then(|v| v.as_u64()) {
+            self.next_id = n;
+        }
+        if let Some(n) = delta.get("saved").and_then(|v| v.as_u64()) {
+            self.saved = n;
+        }
+        if let Some(n) = delta.get("restored").and_then(|v| v.as_u64()) {
+            self.restored = n;
+        }
+        for m in delta
+            .get("added")
+            .and_then(|a| a.as_arr())
+            .ok_or("checkpoint delta: missing added")?
+        {
+            let (Some(id), Some(trial), Some(iteration), Some(bytes)) = (
+                m.get("id").and_then(|v| v.as_u64()),
+                m.get("trial").and_then(|v| v.as_u64()),
+                m.get("iteration").and_then(|v| v.as_u64()),
+                m.get("bytes").and_then(|v| v.as_u64()),
+            ) else {
+                return Err("checkpoint delta: malformed added entry".into());
+            };
+            let time_total_s = m.get("time").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let meta =
+                CheckpointMeta { id, trial, iteration, time_total_s, bytes: bytes as usize };
+            let Ok(blob) = std::fs::read(dir.join(Self::spill_name(&meta))) else {
+                continue; // spill file lost: drop the entry
+            };
+            if blob.len() != meta.bytes {
+                continue; // truncated write: drop the entry
+            }
+            if self.latest.get(&trial).map_or(true, |l| *l < id) {
+                self.latest.insert(trial, id);
+            }
+            self.data.insert(id, blob.into());
+            self.meta.insert(id, meta);
+        }
+        for id in delta
+            .get("removed")
+            .and_then(|r| r.as_arr())
+            .ok_or("checkpoint delta: missing removed")?
+        {
+            let id = id.as_u64().ok_or("checkpoint delta: bad removed id")?;
+            self.data.remove(&id);
+            if let Some(meta) = self.meta.remove(&id) {
+                // GC only ever evicts non-latest ids, but stay robust:
+                // recompute this trial's latest if it was removed.
+                if self.latest.get(&meta.trial) == Some(&id) {
+                    let new_latest = self
+                        .meta
+                        .values()
+                        .filter(|m| m.trial == meta.trial)
+                        .map(|m| m.id)
+                        .max();
+                    match new_latest {
+                        Some(l) => self.latest.insert(meta.trial, l),
+                        None => self.latest.remove(&meta.trial),
+                    };
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// A full snapshot was just persisted; forget the journals.
+    pub fn reset_delta_cursor(&mut self) {
+        self.delta_added.clear();
+        self.delta_removed.clear();
     }
 
     /// Number of checkpoints currently stored.
@@ -251,7 +381,7 @@ mod tests {
     fn save_get_roundtrip() {
         let mut s = CheckpointStore::new();
         let id = s.save(7, 10, vec![1, 2, 3]);
-        assert_eq!(s.get(id).unwrap(), &[1, 2, 3]);
+        assert_eq!(&s.get(id).unwrap()[..], &[1, 2, 3]);
         assert_eq!(s.latest_for(7), Some(id));
         assert_eq!(s.meta(id).unwrap().iteration, 10);
         assert_eq!((s.saved, s.restored), (1, 1));
@@ -292,8 +422,8 @@ mod tests {
         let parsed = crate::util::json::parse(&text).unwrap();
         let mut r = CheckpointStore::restore_from(&parsed, &dir).unwrap();
         assert_eq!(r.len(), 3);
-        assert_eq!(r.get(a).unwrap(), &[1, 1]);
-        assert_eq!(r.get(b).unwrap(), &[2, 2]);
+        assert_eq!(&r.get(a).unwrap()[..], &[1, 1]);
+        assert_eq!(&r.get(b).unwrap()[..], &[2, 2]);
         assert_eq!(r.latest_for(1), Some(b));
         assert_eq!(r.latest_for(3), Some(c));
         assert_eq!(r.meta(b).unwrap().iteration, 10);
@@ -333,6 +463,48 @@ mod tests {
         // Only the 2 newest survive, in memory AND on disk.
         assert_eq!(s.len(), 2);
         assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn delta_fold_matches_live_store() {
+        let dir = std::env::temp_dir().join(format!("tune_ckpt_delta_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut live = CheckpointStore::new().with_disk(dir.clone());
+        let a = live.save_timed(1, 1, 1.0, vec![1; 4]);
+        let base = live.snapshot();
+        live.reset_delta_cursor();
+        // Window: two more saves for trial 1 -> GC evicts `a` (keep 2),
+        // plus one save for trial 2.
+        let b = live.save_timed(1, 2, 2.0, vec![2; 4]);
+        let c = live.save_timed(1, 3, 3.0, vec![3; 4]);
+        let d = live.save_timed(2, 1, 1.0, vec![4; 4]);
+        let delta = live.snapshot_delta();
+        let mut folded = CheckpointStore::restore_from(&base, &dir).unwrap();
+        folded
+            .apply_delta(&crate::util::json::parse(&delta.to_string()).unwrap(), &dir)
+            .unwrap();
+        assert!(folded.get(a).is_none(), "evicted id survived the fold");
+        assert_eq!(&folded.get(b).unwrap()[..], &[2; 4]);
+        assert_eq!(&folded.get(c).unwrap()[..], &[3; 4]);
+        assert_eq!(&folded.get(d).unwrap()[..], &[4; 4]);
+        assert_eq!(folded.latest_for(1), Some(c));
+        assert_eq!(folded.latest_for(2), Some(d));
+        assert_eq!(folded.len(), live.len());
+        // New saves continue the id sequence without collisions.
+        assert!(folded.save(3, 1, vec![9]) > d);
+        // An id born AND evicted inside one window never appears.
+        let mut w = CheckpointStore::new().with_disk(dir.clone());
+        w.keep_per_trial = 1;
+        w.reset_delta_cursor();
+        let x = w.save(7, 1, vec![1]);
+        let _y = w.save(7, 2, vec![2]); // evicts x within the window
+        let dj = w.snapshot_delta();
+        let added = dj.get("added").unwrap().as_arr().unwrap();
+        assert_eq!(added.len(), 1);
+        assert_ne!(added[0].get("id").unwrap().as_u64(), Some(x));
+        assert_eq!(dj.get("removed").unwrap().as_arr().unwrap().len(), 0);
         std::fs::remove_dir_all(&dir).ok();
     }
 

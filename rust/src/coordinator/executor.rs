@@ -68,8 +68,10 @@ pub trait Executor: Send {
     /// Seconds since experiment start (virtual or wall).
     fn now(&self) -> f64;
 
-    /// Instantiate the trial's trainable (optionally restoring).
-    fn launch(&mut self, trial: &Trial, restore: Option<Vec<u8>>) -> Result<(), String>;
+    /// Instantiate the trial's trainable (optionally restoring). The
+    /// blob is a shared checkpoint handle: passing it costs a refcount
+    /// bump, not a byte copy.
+    fn launch(&mut self, trial: &Trial, restore: Option<Arc<[u8]>>) -> Result<(), String>;
 
     /// Ask for one asynchronous training iteration.
     fn request_step(&mut self, id: TrialId);
@@ -80,8 +82,9 @@ pub trait Executor: Send {
     /// Synchronous state snapshot (trainable is idle between steps).
     fn save(&mut self, id: TrialId) -> Option<Vec<u8>>;
 
-    /// Restore state in place (PBT exploit).
-    fn restore(&mut self, id: TrialId, blob: &[u8]) -> Result<(), String>;
+    /// Restore state in place (PBT exploit). Shared blob handle, same
+    /// zero-copy contract as [`Executor::launch`].
+    fn restore(&mut self, id: TrialId, blob: Arc<[u8]>) -> Result<(), String>;
 
     /// Runtime hyperparameter mutation.
     fn update_config(&mut self, id: TrialId, config: &Config);
@@ -107,7 +110,7 @@ fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
 fn build_trainable(
     factory: &TrainableFactory,
     trial: &Trial,
-    restore: Option<Vec<u8>>,
+    restore: Option<Arc<[u8]>>,
 ) -> Result<Box<dyn Trainable>, String> {
     let config = &trial.config;
     let seed = trial.seed;
@@ -188,7 +191,7 @@ impl Executor for SimExecutor {
         self.now
     }
 
-    fn launch(&mut self, trial: &Trial, restore: Option<Vec<u8>>) -> Result<(), String> {
+    fn launch(&mut self, trial: &Trial, restore: Option<Arc<[u8]>>) -> Result<(), String> {
         let t = build_trainable(&self.factory, trial, restore)?;
         *self.epoch.entry(trial.id).or_insert(0) += 1;
         self.live.insert(trial.id, t);
@@ -225,8 +228,8 @@ impl Executor for SimExecutor {
         self.live.get_mut(&id).map(|t| t.save())
     }
 
-    fn restore(&mut self, id: TrialId, blob: &[u8]) -> Result<(), String> {
-        self.live.get_mut(&id).ok_or("trial not live")?.restore(blob)
+    fn restore(&mut self, id: TrialId, blob: Arc<[u8]>) -> Result<(), String> {
+        self.live.get_mut(&id).ok_or("trial not live")?.restore(&blob)
     }
 
     fn update_config(&mut self, id: TrialId, config: &Config) {
@@ -251,7 +254,7 @@ impl Executor for SimExecutor {
 enum WorkerCmd {
     Step,
     Save(Sender<Vec<u8>>),
-    Restore(Vec<u8>, Sender<Result<(), String>>),
+    Restore(Arc<[u8]>, Sender<Result<(), String>>),
     Update(Config),
     Halt,
 }
@@ -290,7 +293,7 @@ impl Executor for ThreadExecutor {
         self.started.elapsed().as_secs_f64()
     }
 
-    fn launch(&mut self, trial: &Trial, restore: Option<Vec<u8>>) -> Result<(), String> {
+    fn launch(&mut self, trial: &Trial, restore: Option<Arc<[u8]>>) -> Result<(), String> {
         let (tx, rx) = mpsc::channel::<WorkerCmd>();
         let factory = Arc::clone(&self.factory);
         let config = trial.config.clone();
@@ -371,11 +374,11 @@ impl Executor for ThreadExecutor {
         reply_rx.recv().ok()
     }
 
-    fn restore(&mut self, id: TrialId, blob: &[u8]) -> Result<(), String> {
+    fn restore(&mut self, id: TrialId, blob: Arc<[u8]>) -> Result<(), String> {
         let w = self.workers.get(&id).ok_or("trial not live")?;
         let (reply_tx, reply_rx) = mpsc::channel();
-        w.tx.send(WorkerCmd::Restore(blob.to_vec(), reply_tx))
-            .map_err(|e| e.to_string())?;
+        // Zero-copy: the Arc handle itself crosses the channel.
+        w.tx.send(WorkerCmd::Restore(blob, reply_tx)).map_err(|e| e.to_string())?;
         reply_rx.recv().map_err(|e| e.to_string())?
     }
 
@@ -676,7 +679,7 @@ impl Executor for PoolExecutor {
         self.started.elapsed().as_secs_f64()
     }
 
-    fn launch(&mut self, trial: &Trial, restore: Option<Vec<u8>>) -> Result<(), String> {
+    fn launch(&mut self, trial: &Trial, restore: Option<Arc<[u8]>>) -> Result<(), String> {
         let t = build_trainable(&self.factory, trial, restore)?;
         self.shared.launch_slot(trial.id, t);
         Ok(())
@@ -712,9 +715,9 @@ impl Executor for PoolExecutor {
         self.shared.with_idle(id, |t| t.save())
     }
 
-    fn restore(&mut self, id: TrialId, blob: &[u8]) -> Result<(), String> {
+    fn restore(&mut self, id: TrialId, blob: Arc<[u8]>) -> Result<(), String> {
         self.shared
-            .with_idle(id, |t| t.restore(blob))
+            .with_idle(id, |t| t.restore(&blob))
             .unwrap_or_else(|| Err("trial not live".into()))
     }
 
@@ -966,7 +969,7 @@ impl Executor for SharedPoolHandle {
         self.started.elapsed().as_secs_f64()
     }
 
-    fn launch(&mut self, trial: &Trial, restore: Option<Vec<u8>>) -> Result<(), String> {
+    fn launch(&mut self, trial: &Trial, restore: Option<Arc<[u8]>>) -> Result<(), String> {
         let t = build_trainable(&self.factory, trial, restore)?;
         self.inner.shared.launch_slot((self.exp, trial.id), t);
         Ok(())
@@ -1018,10 +1021,10 @@ impl Executor for SharedPoolHandle {
         self.inner.shared.with_idle((self.exp, id), |t| t.save())
     }
 
-    fn restore(&mut self, id: TrialId, blob: &[u8]) -> Result<(), String> {
+    fn restore(&mut self, id: TrialId, blob: Arc<[u8]>) -> Result<(), String> {
         self.inner
             .shared
-            .with_idle((self.exp, id), |t| t.restore(blob))
+            .with_idle((self.exp, id), |t| t.restore(&blob))
             .unwrap_or_else(|| Err("trial not live".into()))
     }
 
@@ -1113,7 +1116,7 @@ mod tests {
         ex.request_step(1);
         ex.next_event();
         let blob = ex.save(1).unwrap();
-        ex.launch(&mk_trial(2, 1.0), Some(blob)).unwrap();
+        ex.launch(&mk_trial(2, 1.0), Some(blob.into())).unwrap();
         ex.request_step(2);
         match ex.next_event().unwrap() {
             ExecEvent::Stepped { out, .. } => assert_eq!(out.metrics["iters"], 2.0),
@@ -1166,7 +1169,7 @@ mod tests {
             ex.request_step(1);
             ex.next_event();
         }
-        ex.restore(1, &0u64.to_le_bytes()).unwrap();
+        ex.restore(1, Arc::from(&0u64.to_le_bytes()[..])).unwrap();
         ex.request_step(1);
         match ex.next_event().unwrap() {
             ExecEvent::Stepped { out, .. } => assert_eq!(out.metrics["iters"], 1.0),
@@ -1305,7 +1308,7 @@ mod tests {
             }
             let blob = ex.save(1).unwrap();
             // Roll back to iteration 1 and mutate the config in place.
-            ex.restore(1, &1u64.to_le_bytes()).unwrap();
+            ex.restore(1, Arc::from(&1u64.to_le_bytes()[..])).unwrap();
             let mut cfg = Config::new();
             cfg.insert("step_cost".into(), ParamValue::F64(2.0));
             ex.update_config(1, &cfg);

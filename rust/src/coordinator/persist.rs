@@ -11,17 +11,26 @@
 //! ```text
 //! <dir>/
 //!   experiment.meta.json   # manifest: version, spec + run options
-//!   snapshot.json          # atomic periodic snapshot of runner state
+//!   snapshot.json          # atomic BASE snapshot of runner state
+//!   snapshot.delta.jsonl   # fsync'd incremental records since the base
 //!   trial_0000.jsonl ...   # per-trial result logs (JsonlLogger)
 //!   experiment.json        # final summary (written at experiment end)
 //!   checkpoints/           # spilled trainable checkpoints (*.bin)
 //! ```
 //!
-//! Snapshots are written atomically (`snapshot.json.tmp` + rename), so
-//! a crash mid-write leaves the previous snapshot intact. `resume`
-//! (see [`crate::coordinator::run_experiments`]) rebuilds the runner,
-//! scheduler, search-algorithm and checkpoint-store state from the
-//! directory and continues the run.
+//! Base snapshots are written atomically (`snapshot.json.tmp` +
+//! rename), so a crash mid-write leaves the previous snapshot intact.
+//! Between bases the runner appends compact **delta** records — dirty
+//! trials, appended scheduler state, checkpoint-manifest changes — to
+//! `snapshot.delta.jsonl`, each line fsync'd, so the periodic
+//! persistence cost is proportional to what changed since the last
+//! snapshot, not to total experiment size. `resume` (see
+//! [`crate::coordinator::run_experiments`]) restores the base and folds
+//! the deltas back in order; each base carries a monotone `delta_epoch`
+//! that deltas must match, so a crash between writing a new base and
+//! clearing the delta file can never fold stale records onto it. A
+//! directory holding only a full `snapshot.json` (the pre-delta format)
+//! restores exactly as before.
 //!
 //! # Example: durable run + resume
 //!
@@ -205,6 +214,7 @@ impl ExperimentDir {
         if snapshot.exists() {
             std::fs::remove_file(&snapshot)?;
         }
+        self.clear_deltas()?;
         let summary = self.root.join("experiment.json");
         if summary.exists() {
             std::fs::remove_file(&summary)?;
@@ -240,6 +250,10 @@ impl ExperimentDir {
         self.root.join("snapshot.json")
     }
 
+    fn delta_path(&self) -> PathBuf {
+        self.root.join("snapshot.delta.jsonl")
+    }
+
     /// Does the directory hold a runner snapshot to resume from?
     pub fn has_snapshot(&self) -> bool {
         self.snapshot_path().exists()
@@ -266,6 +280,79 @@ impl ExperimentDir {
     pub fn read_snapshot(&self) -> Option<Json> {
         let text = std::fs::read_to_string(self.snapshot_path()).ok()?;
         parse(&text).ok()
+    }
+
+    /// Append one delta record to `snapshot.delta.jsonl`, fsync'd: a
+    /// delta acknowledged here survives power loss, matching the base
+    /// snapshot's durability contract at a cost proportional to the
+    /// record, not the experiment.
+    pub fn append_delta(&self, delta: &Json) -> std::io::Result<()> {
+        use std::io::{Read as _, Seek as _, SeekFrom, Write as _};
+        let path = self.delta_path();
+        let created = !path.exists();
+        // Torn-tail guard: a crash mid-append can leave a final line
+        // with no trailing newline. Appending directly would merge the
+        // next (acknowledged!) record into that garbage; start a fresh
+        // line instead, so the torn fragment stays an isolated
+        // unparseable line that `read_deltas` skips.
+        let needs_newline = if created {
+            false
+        } else {
+            let mut f = std::fs::File::open(&path)?;
+            let len = f.metadata()?.len();
+            if len == 0 {
+                false
+            } else {
+                f.seek(SeekFrom::End(-1))?;
+                let mut last = [0u8; 1];
+                f.read_exact(&mut last)?;
+                last[0] != b'\n'
+            }
+        };
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
+        let mut line = delta.to_string();
+        line.push('\n');
+        if needs_newline {
+            line.insert(0, '\n');
+        }
+        f.write_all(line.as_bytes())?;
+        f.sync_all()?;
+        if created {
+            // First append since the file was (re)created: fsync the
+            // parent so the directory entry itself survives power loss
+            // — same reasoning (and same best-effort caveat) as
+            // `write_atomic`'s rename durability.
+            if let Some(parent) = path.parent() {
+                if let Ok(d) = std::fs::File::open(parent) {
+                    d.sync_all().ok();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Remove the delta file (called right after a new base snapshot is
+    /// written — the base subsumes every delta).
+    pub fn clear_deltas(&self) -> std::io::Result<()> {
+        match std::fs::remove_file(self.delta_path()) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Read the delta records in append order, skipping unparseable
+    /// lines. A bad line is always a record whose append was never
+    /// acknowledged (a crash tore the write before its fsync returned)
+    /// — every acknowledged record is a complete, newline-terminated
+    /// JSON line, and [`ExperimentDir::append_delta`]'s torn-tail guard
+    /// keeps post-resume appends from merging into a torn fragment — so
+    /// dropping it never loses durable state.
+    pub fn read_deltas(&self) -> Vec<Json> {
+        let Ok(text) = std::fs::read_to_string(self.delta_path()) else {
+            return Vec::new();
+        };
+        text.lines().filter_map(|line| parse(line).ok()).collect()
     }
 
     /// Path of one trial's JSONL result log.
@@ -412,6 +499,56 @@ mod tests {
         assert!(!dir.root().join("experiment.json").exists());
         assert_eq!(std::fs::read_dir(dir.checkpoints_dir()).unwrap().count(), 0);
         assert!(dir.read_manifest().is_some()); // caller overwrites it
+        std::fs::remove_dir_all(dir.root()).ok();
+    }
+
+    #[test]
+    fn delta_file_appends_reads_and_clears() {
+        let dir = ExperimentDir::new(tmpdir("delta")).unwrap();
+        assert!(dir.read_deltas().is_empty());
+        dir.append_delta(&Json::obj(vec![("seq", Json::Num(1.0))])).unwrap();
+        dir.append_delta(&Json::obj(vec![("seq", Json::Num(2.0))])).unwrap();
+        let deltas = dir.read_deltas();
+        assert_eq!(deltas.len(), 2);
+        assert_eq!(deltas[1].get("seq").unwrap().as_u64(), Some(2));
+        dir.clear_deltas().unwrap();
+        assert!(dir.read_deltas().is_empty());
+        dir.clear_deltas().unwrap(); // idempotent on a missing file
+        std::fs::remove_dir_all(dir.root()).ok();
+    }
+
+    #[test]
+    fn torn_final_delta_line_is_dropped_and_appends_stay_readable() {
+        let dir = ExperimentDir::new(tmpdir("delta_torn")).unwrap();
+        dir.append_delta(&Json::obj(vec![("seq", Json::Num(1.0))])).unwrap();
+        // Simulate a crash mid-append: raw partial line at the tail.
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(dir.root().join("snapshot.delta.jsonl"))
+            .unwrap();
+        f.write_all(b"{\"seq\":2,\"tri").unwrap();
+        drop(f);
+        let deltas = dir.read_deltas();
+        assert_eq!(deltas.len(), 1);
+        assert_eq!(deltas[0].get("seq").unwrap().as_u64(), Some(1));
+        // A resumed run appends past the torn fragment: the guard must
+        // start a fresh line so the new (acknowledged) record does not
+        // merge into the garbage and vanish.
+        dir.append_delta(&Json::obj(vec![("seq", Json::Num(3.0))])).unwrap();
+        let deltas = dir.read_deltas();
+        assert_eq!(deltas.len(), 2, "post-torn append must stay readable");
+        assert_eq!(deltas[1].get("seq").unwrap().as_u64(), Some(3));
+        std::fs::remove_dir_all(dir.root()).ok();
+    }
+
+    #[test]
+    fn reset_also_clears_the_delta_file() {
+        let dir = ExperimentDir::new(tmpdir("delta_reset")).unwrap();
+        dir.append_delta(&Json::obj(vec![("seq", Json::Num(1.0))])).unwrap();
+        dir.write_manifest(&Json::obj(vec![("name", Json::Str("x".into()))])).unwrap();
+        dir.reset().unwrap();
+        assert!(dir.read_deltas().is_empty());
         std::fs::remove_dir_all(dir.root()).ok();
     }
 

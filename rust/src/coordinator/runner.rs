@@ -9,11 +9,13 @@
 //! or restart-with-mutated-config. Checkpoints provide fault tolerance
 //! (trial metadata itself stays in memory, per the paper).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
 
 use crate::checkpoint::CheckpointStore;
 use crate::logger::ResultLogger;
 use crate::ray::{Cluster, FaultInjector, LeaseId, NodeId, PlacementStats, TwoLevelScheduler};
+use crate::util::intern::{MetricId, MetricSchema};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -24,7 +26,7 @@ use super::persist::{
 };
 use super::schedulers::{Decision, SchedulerCtx, TrialScheduler};
 use super::search::SearchAlgorithm;
-use super::trial::{ResultRow, Trial, TrialId, TrialStatus};
+use super::trial::{Trial, TrialId, TrialStatus};
 
 /// Counters the benches and EXPERIMENTS.md report.
 #[derive(Clone, Debug, Default)]
@@ -96,6 +98,11 @@ impl RunnerStats {
     }
 }
 
+/// Write a fresh base snapshot every this many delta records: bounds
+/// both the delta file's size and the fold work a resume must do, while
+/// keeping the common periodic snapshot O(changed).
+const DELTAS_PER_BASE: u64 = 32;
+
 /// Durable-experiment sink attached via [`TrialRunner::enable_persistence`].
 struct Persist {
     dir: ExperimentDir,
@@ -103,6 +110,12 @@ struct Persist {
     every: u64,
     /// `stats.results` at the last snapshot (dedup guard).
     last_snap_results: u64,
+    /// Monotone id of the current base snapshot (0 = none written yet).
+    /// Deltas carry it, so a crash between writing a new base and
+    /// clearing the delta file can never fold stale records onto it.
+    epoch: u64,
+    /// Delta records appended since the current base.
+    deltas_since_base: u64,
 }
 
 /// Everything an experiment run produced.
@@ -121,6 +134,9 @@ pub struct ExperimentResult {
     pub placement: PlacementStats,
     /// (experiment time, best raw metric so far) — per-result samples.
     pub best_curve: Vec<(f64, f64)>,
+    /// The experiment's metric-name table: resolves the interned ids in
+    /// each trial's `last_result` back to names.
+    pub schema: MetricSchema,
 }
 
 impl ExperimentResult {
@@ -176,6 +192,22 @@ pub struct TrialRunner {
     /// search, loggers and stats — they already happened.
     replay_until: BTreeMap<TrialId, u64>,
     persist: Option<Persist>,
+    /// The experiment's metric-name interner (ids are process-ephemeral;
+    /// snapshots and logs always write names).
+    schema: MetricSchema,
+    /// `spec.metric` interned once — per-result metric lookups are
+    /// integer compares from here on.
+    metric_id: MetricId,
+    /// Trials mutated since the last persisted snapshot/delta (what the
+    /// next delta record carries).
+    dirty: BTreeSet<TrialId>,
+    /// `best_curve` length already persisted (delta cursor).
+    curve_flushed: usize,
+    /// Epoch and delta count of the snapshot this runner was restored
+    /// from (0/0 for a fresh runner); seeds `Persist` so a resumed run
+    /// keeps appending to the same delta epoch.
+    restored_epoch: u64,
+    restored_deltas: u64,
     /// Additional live-trial cap imposed by the hub's fair-share policy
     /// (0 = none). Orthogonal to `spec.max_concurrent`: the effective
     /// limit is the stricter of the two.
@@ -193,6 +225,8 @@ impl TrialRunner {
     ) -> Self {
         let rng = Rng::new(spec.seed);
         let fault = FaultInjector::new(spec.fault_plan.clone(), spec.seed ^ 0xFA17);
+        let mut schema = MetricSchema::new();
+        let metric_id = schema.intern(&spec.metric);
         TrialRunner {
             spec,
             scheduler,
@@ -215,8 +249,19 @@ impl TrialRunner {
             time_offset: 0.0,
             replay_until: BTreeMap::new(),
             persist: None,
+            schema,
+            metric_id,
+            dirty: BTreeSet::new(),
+            curve_flushed: 0,
+            restored_epoch: 0,
+            restored_deltas: 0,
             hub_slots: 0,
         }
+    }
+
+    /// The experiment's metric-name table (interned ids <-> names).
+    pub fn schema(&self) -> &MetricSchema {
+        &self.schema
     }
 
     /// Experiment time: the executor clock plus the offset carried over
@@ -251,12 +296,13 @@ impl TrialRunner {
         self.scheduler.on_trial_add(
             &SchedulerCtx {
                 trials: &self.trials,
-                metric: &self.spec.metric,
+                metric_id: self.metric_id,
                 mode: self.spec.mode,
             },
             &trial,
         );
         self.trials.insert(id, trial);
+        self.dirty.insert(id);
         Some(id)
     }
 
@@ -288,7 +334,7 @@ impl TrialRunner {
             let mut choice = {
                 let ctx = SchedulerCtx {
                     trials: &self.trials,
-                    metric: &self.spec.metric,
+                    metric_id: self.metric_id,
                     mode: self.spec.mode,
                 };
                 self.scheduler.choose_trial_to_run(&ctx)
@@ -299,7 +345,7 @@ impl TrialRunner {
                 }
                 let ctx = SchedulerCtx {
                     trials: &self.trials,
-                    metric: &self.spec.metric,
+                    metric_id: self.metric_id,
                     mode: self.spec.mode,
                 };
                 choice = self.scheduler.choose_trial_to_run(&ctx);
@@ -319,15 +365,16 @@ impl TrialRunner {
         let Some(p) = self.placer.place(&mut self.cluster, 0, &demand) else {
             return false;
         };
-        let restore = self.trials[&id]
-            .checkpoint
-            .and_then(|c| self.checkpoints.get(c).map(|b| b.to_vec()));
+        // Shared checkpoint handle: a relaunch hands the executor the
+        // store's own Arc, never a byte copy.
+        let restore = self.trials[&id].checkpoint.and_then(|c| self.checkpoints.get(c));
         let restored = restore.is_some();
         let trial = self.trials.get_mut(&id).unwrap();
         trial.node = Some(p.node);
         match self.executor.launch(trial, restore) {
             Ok(()) => {
                 trial.status = TrialStatus::Running;
+                self.dirty.insert(id);
                 self.leases.insert(id, (p.node, p.lease));
                 let started = self.time_offset + self.executor.now();
                 self.run_clock.insert(id, (started, trial.time_total_s));
@@ -362,8 +409,9 @@ impl TrialRunner {
             let t = self.trials.get_mut(&id).unwrap();
             t.status = status;
             config = t.config.clone();
-            last_metric = t.last_result.as_ref().and_then(|r| r.metric(&self.spec.metric));
+            last_metric = t.last_result.as_ref().and_then(|r| r.get(self.metric_id));
         }
+        self.dirty.insert(id);
         match status {
             TrialStatus::Completed => self.stats.completed += 1,
             TrialStatus::Stopped => self.stats.stopped_early += 1,
@@ -372,14 +420,14 @@ impl TrialRunner {
         }
         let ctx = SchedulerCtx {
             trials: &self.trials,
-            metric: &self.spec.metric,
+            metric_id: self.metric_id,
             mode: self.spec.mode,
         };
         self.scheduler.on_trial_remove(&ctx, id);
         self.search.on_complete(&config, last_metric, self.spec.mode);
-        let t = self.trials[&id].clone();
+        let t = &self.trials[&id];
         for l in &mut self.loggers {
-            l.on_trial_end(&t);
+            l.on_trial_end(t);
         }
     }
 
@@ -391,6 +439,7 @@ impl TrialRunner {
             };
             let cid = self.checkpoints.save_timed(id, iter, time, blob);
             self.trials.get_mut(&id).unwrap().checkpoint = Some(cid);
+            self.dirty.insert(id);
             self.stats.checkpoints += 1;
         }
     }
@@ -398,6 +447,7 @@ impl TrialRunner {
     fn handle_failure(&mut self, id: TrialId, error: &str) {
         self.executor.halt(id);
         self.release(id);
+        self.dirty.insert(id);
         let max_failures = self.spec.max_failures;
         let t = self.trials.get_mut(&id).unwrap();
         t.num_failures += 1;
@@ -434,6 +484,7 @@ impl TrialRunner {
                 self.executor.halt(id);
                 self.release(id);
                 self.trials.get_mut(&id).unwrap().status = TrialStatus::Paused;
+                self.dirty.insert(id);
             }
             Decision::Stop => self.finish(id, TrialStatus::Stopped),
             Decision::Exploit { source, config } => {
@@ -442,9 +493,12 @@ impl TrialRunner {
                     .get(&source)
                     .and_then(|t| t.checkpoint)
                     .or_else(|| self.checkpoints.latest_for(source));
-                match donor.and_then(|c| self.checkpoints.get(c).map(|b| b.to_vec())) {
+                match donor.and_then(|c| self.checkpoints.get(c)) {
                     Some(blob) => {
-                        if self.executor.restore(id, &blob).is_ok() {
+                        // The donor blob is cloned by refcount: executor
+                        // restore and the exploiter's new checkpoint all
+                        // share one allocation.
+                        if self.executor.restore(id, Arc::clone(&blob)).is_ok() {
                             let (iter, time) = {
                                 let t = &self.trials[&id];
                                 (t.iteration, t.time_total_s)
@@ -454,6 +508,7 @@ impl TrialRunner {
                             t.config = config.clone();
                             t.checkpoint = Some(cid);
                             t.mutations += 1;
+                            self.dirty.insert(id);
                             self.executor.update_config(id, &config);
                             self.stats.exploits += 1;
                             self.stats.restores += 1;
@@ -465,6 +520,7 @@ impl TrialRunner {
                         let t = self.trials.get_mut(&id).unwrap();
                         t.config = config.clone();
                         t.mutations += 1;
+                        self.dirty.insert(id);
                         self.executor.update_config(id, &config);
                         self.executor.request_step(id);
                     }
@@ -486,15 +542,27 @@ impl TrialRunner {
             return;
         }
         let now = self.clock();
-        let (iteration, row) = {
+        let iteration = {
             let (started, acc) = self.run_clock[&id];
             let t = self.trials.get_mut(&id).unwrap();
             let iteration = t.iteration + 1;
-            let mut row = ResultRow::new(iteration, acc + (now - started));
-            row.metrics = out.metrics;
-            t.record(row.clone(), &self.spec.metric, self.spec.mode);
-            (iteration, row)
+            // Build the row in place inside the trial, reusing the
+            // previous `last_result` allocation: the hot path performs
+            // no row clone and (steady state) no row allocation at all.
+            t.record_step(
+                iteration,
+                acc + (now - started),
+                &out.metrics,
+                &mut self.schema,
+                self.metric_id,
+                self.spec.mode,
+            );
+            iteration
         };
+        self.dirty.insert(id);
+        // The metric value is Copy — grab it once; the row itself is
+        // re-borrowed from the trial wherever a consumer needs it.
+        let metric_val = self.trials[&id].last_result.as_ref().and_then(|r| r.get(self.metric_id));
 
         // Crash-resume replay: iterations the snapshot had already
         // accounted for re-execute (to rebuild trainable state and the
@@ -507,11 +575,12 @@ impl TrialRunner {
         // mutable borrows of each consumer (perf iteration 1, §Perf).
         {
             let t = &self.trials[&id];
+            let row = t.last_result.as_ref().expect("record_step just set last_result");
             for l in &mut self.loggers {
                 if replaying {
-                    l.on_replayed_result(t, &row);
+                    l.on_replayed_result(&self.schema, t, row);
                 } else {
-                    l.on_result(t, &row);
+                    l.on_result(&self.schema, t, row);
                 }
             }
         }
@@ -531,7 +600,7 @@ impl TrialRunner {
         // metric never enters the curve: as a *first* result it would
         // otherwise stick — `mode.better` is false against NaN in both
         // directions — and report a NaN "best" forever.
-        if let Some(v) = row.metric(&self.spec.metric) {
+        if let Some(v) = metric_val {
             if !v.is_nan() {
                 let better = self.best_so_far.map_or(true, |b| self.spec.mode.better(v, b));
                 if better {
@@ -541,10 +610,14 @@ impl TrialRunner {
             }
         }
 
-        self.search.on_result(&self.trials[&id].config, &row);
+        {
+            let t = &self.trials[&id];
+            let row = t.last_result.as_ref().expect("record_step just set last_result");
+            self.search.on_result(&t.config, row);
+        }
 
         // Runner-level stopping criteria outrank the scheduler.
-        let target_hit = match (self.spec.metric_target, row.metric(&self.spec.metric)) {
+        let target_hit = match (self.spec.metric_target, metric_val) {
             (Some(tgt), Some(v)) => self.spec.mode.better(v, tgt) || v == tgt,
             _ => false,
         };
@@ -565,10 +638,12 @@ impl TrialRunner {
             let t0 = std::time::Instant::now();
             let ctx = SchedulerCtx {
                 trials: &self.trials,
-                metric: &self.spec.metric,
+                metric_id: self.metric_id,
                 mode: self.spec.mode,
             };
-            let d = self.scheduler.on_result(&ctx, &self.trials[&id], &row);
+            let t = &self.trials[&id];
+            let row = t.last_result.as_ref().expect("record_step just set last_result");
+            let d = self.scheduler.on_result(&ctx, t, row);
             self.stats.decision_ns += t0.elapsed().as_nanos() as u64;
             d
         };
@@ -595,15 +670,23 @@ impl TrialRunner {
             dir,
             every: snapshot_every,
             last_snap_results: self.stats.results,
+            // A resumed runner keeps appending deltas to the epoch it
+            // restored (its in-memory state equals base + folded deltas
+            // exactly); a fresh runner starts at 0, forcing a base on
+            // the first snapshot.
+            epoch: self.restored_epoch,
+            deltas_since_base: self.restored_deltas,
         });
     }
 
     /// Serialize the complete mutable runner state (trial table, clock,
-    /// RNG, scheduler, search, checkpoint manifest, counters).
-    fn snapshot_json(&self, finished: bool) -> Json {
+    /// RNG, scheduler, search, checkpoint manifest, counters) as a BASE
+    /// snapshot stamped with its delta `epoch`.
+    fn snapshot_json(&self, finished: bool, epoch: u64) -> Json {
         Json::obj(vec![
             ("version", Json::Num(FORMAT_VERSION as f64)),
             ("finished", Json::Bool(finished)),
+            ("delta_epoch", Json::Num(epoch as f64)),
             ("now", Json::Num(self.clock())),
             ("next_id", Json::Num(self.next_id as f64)),
             ("search_exhausted", Json::Bool(self.search_exhausted)),
@@ -627,8 +710,60 @@ impl TrialRunner {
             ("checkpoints", self.checkpoints.snapshot()),
             ("scheduler", self.scheduler.snapshot()),
             ("search", self.search.snapshot()),
-            ("trials", Json::Arr(self.trials.values().map(|t| t.to_json()).collect())),
+            (
+                "trials",
+                Json::Arr(self.trials.values().map(|t| t.to_json(&self.schema)).collect()),
+            ),
         ])
+    }
+
+    /// Serialize only what changed since the last persisted record:
+    /// cheap scalar state in full, plus dirty trials, appended
+    /// best-curve points, scheduler/search/checkpoint deltas. Drains
+    /// every delta cursor.
+    fn delta_json(&mut self, finished: bool, epoch: u64) -> Json {
+        let curve_append: Vec<Json> = self.best_curve[self.curve_flushed..]
+            .iter()
+            .map(|(t, v)| Json::Arr(vec![Json::Num(*t), Json::Num(*v)]))
+            .collect();
+        self.curve_flushed = self.best_curve.len();
+        let trials: Vec<Json> = self
+            .dirty
+            .iter()
+            .filter_map(|id| self.trials.get(id))
+            .map(|t| t.to_json(&self.schema))
+            .collect();
+        self.dirty.clear();
+        Json::obj(vec![
+            ("epoch", Json::Num(epoch as f64)),
+            ("finished", Json::Bool(finished)),
+            ("now", Json::Num(self.clock())),
+            ("next_id", Json::Num(self.next_id as f64)),
+            ("search_exhausted", Json::Bool(self.search_exhausted)),
+            ("rng", u64_to_json(self.rng.state())),
+            ("best_so_far", self.best_so_far.map(Json::Num).unwrap_or(Json::Null)),
+            ("best_curve_append", Json::Arr(curve_append)),
+            ("stats", self.stats.to_json()),
+            (
+                "replay_until",
+                id_map_to_json(&self.replay_until, |v| Json::Num(*v as f64)),
+            ),
+            ("fault", self.fault.snapshot()),
+            ("checkpoints", self.checkpoints.snapshot_delta()),
+            ("scheduler", self.scheduler.snapshot_delta()),
+            ("search", self.search.snapshot_delta()),
+            ("trials", Json::Arr(trials)),
+        ])
+    }
+
+    /// Reset every delta cursor after a base snapshot was persisted:
+    /// the base contains everything, so the next delta starts empty.
+    fn reset_delta_cursors(&mut self) {
+        self.scheduler.reset_delta_cursor();
+        self.search.reset_delta_cursor();
+        self.checkpoints.reset_delta_cursor();
+        self.dirty.clear();
+        self.curve_flushed = self.best_curve.len();
     }
 
     /// Write a snapshot if the cadence says one is due.
@@ -647,15 +782,81 @@ impl TrialRunner {
         due
     }
 
+    /// Persist current state: a compact delta in the steady state, a
+    /// fresh base on the first snapshot, every [`DELTAS_PER_BASE`]
+    /// deltas (compaction), and at experiment end.
     fn write_snapshot(&mut self, finished: bool) {
+        let (epoch, deltas_since_base) = match &self.persist {
+            Some(p) => (p.epoch, p.deltas_since_base),
+            None => return,
+        };
         self.stats.snapshots += 1; // counted in the snapshot itself
-        let snap = self.snapshot_json(finished);
+        if finished || epoch == 0 || deltas_since_base >= DELTAS_PER_BASE {
+            self.write_base(finished);
+            return;
+        }
+        let delta = self.delta_json(finished, epoch); // drains the cursors
         let results = self.stats.results;
+        let mut append_failed = false;
         if let Some(p) = &mut self.persist {
-            if let Err(e) = p.dir.write_snapshot(&snap) {
-                eprintln!("experiment snapshot write failed: {e}");
+            match p.dir.append_delta(&delta) {
+                Ok(()) => {
+                    p.deltas_since_base += 1;
+                    p.last_snap_results = results;
+                }
+                Err(e) => {
+                    eprintln!("experiment delta append failed: {e}");
+                    append_failed = true;
+                }
             }
+        }
+        if append_failed {
+            // The drained window exists only in memory now. A later
+            // delta folded over this hole would silently diverge a
+            // resume, so fall back to a full base immediately — it
+            // contains the whole window (and everything else).
+            self.write_base(finished);
+        }
+    }
+
+    /// Write a full base snapshot. On success the delta file is cleared
+    /// and every delta cursor reset; on failure the old base + delta
+    /// file stay untouched (still mutually consistent) and further
+    /// deltas are blocked until a base succeeds — a delta chain must
+    /// never span a gap in the durable record.
+    fn write_base(&mut self, finished: bool) {
+        let Some(epoch) = self.persist.as_ref().map(|p| p.epoch + 1) else { return };
+        let snap = self.snapshot_json(finished, epoch);
+        let results = self.stats.results;
+        let mut base_written = false;
+        if let Some(p) = &mut self.persist {
+            match p.dir.write_snapshot(&snap) {
+                Ok(()) => {
+                    // Ordering matters: the new base (with its new
+                    // epoch) is durable before the old deltas vanish; a
+                    // crash in between leaves stale-epoch deltas that
+                    // restore skips.
+                    if let Err(e) = p.dir.clear_deltas() {
+                        eprintln!("clearing experiment deltas failed: {e}");
+                    }
+                    p.epoch = epoch;
+                    p.deltas_since_base = 0;
+                    base_written = true;
+                }
+                Err(e) => {
+                    eprintln!("experiment snapshot write failed: {e}");
+                    // Retry a base (never a delta) at the NEXT cadence
+                    // window; the accumulating cursors stay live and
+                    // land in it.
+                    p.deltas_since_base = DELTAS_PER_BASE;
+                }
+            }
+            // Advance the dedup guard on failure too: one attempt per
+            // cadence window, not one per executor event.
             p.last_snap_results = results;
+        }
+        if base_written {
+            self.reset_delta_cursors();
         }
     }
 
@@ -673,15 +874,59 @@ impl TrialRunner {
         }
     }
 
+    /// Apply the scalar fields shared by base snapshots and delta
+    /// records (`now`, `next_id`, rng, best-so-far, stats, replay map,
+    /// fault injector). Returns the record's `finished` flag.
+    fn apply_scalars(&mut self, j: &Json) -> Result<bool, String> {
+        let finished = j.get("finished").and_then(|v| v.as_bool()).unwrap_or(false);
+        self.time_offset =
+            j.get("now").and_then(|v| v.as_f64()).ok_or("snapshot: missing clock")?;
+        self.next_id =
+            j.get("next_id").and_then(|v| v.as_u64()).ok_or("snapshot: missing next_id")?;
+        self.search_exhausted = finished
+            || j.get("search_exhausted")
+                .and_then(|v| v.as_bool())
+                .ok_or("snapshot: missing search_exhausted")?;
+        let rng_state =
+            j.get("rng").and_then(u64_from_json).ok_or("snapshot: missing rng state")?;
+        self.rng.set_state(rng_state);
+        self.best_so_far = j.get("best_so_far").and_then(|v| v.as_f64());
+        self.stats = j.get("stats").map(RunnerStats::from_json).unwrap_or_default();
+        self.replay_until = j
+            .get("replay_until")
+            .and_then(|m| id_map_from_json(m, |v| v.as_u64()))
+            .unwrap_or_default();
+        if let Some(f) = j.get("fault") {
+            self.fault.restore(f)?;
+        }
+        Ok(finished)
+    }
+
+    fn parse_curve(points: &[Json]) -> Result<Vec<(f64, f64)>, String> {
+        points
+            .iter()
+            .map(|p| {
+                let a = p.as_arr()?;
+                Some((a.first()?.as_f64()?, a.get(1)?.as_f64()?))
+            })
+            .collect::<Option<_>>()
+            .ok_or_else(|| "snapshot: bad best_curve point".to_string())
+    }
+
     /// Rebuild runner state from the snapshot in `dir`, so [`Self::run`]
     /// continues the experiment instead of starting over. The runner
     /// must have been freshly constructed with the same spec, scheduler
-    /// and search selections the snapshot was written under. Running
-    /// trials are rolled back to their latest durable checkpoint and
-    /// their already-accounted iterations are replayed with suppression
-    /// (see `replay_until`); paused and terminal trials restore as-is.
-    /// Also prunes each non-terminal trial's JSONL log back to the
-    /// snapshot state so resumed logging never duplicates rows.
+    /// and search selections the snapshot was written under. The base
+    /// snapshot is restored first, then every delta record with a
+    /// matching epoch is folded in order (dirty-trial upserts, appended
+    /// curve points, incremental scheduler/checkpoint state) — a
+    /// pre-delta directory (full snapshot only) folds nothing and
+    /// restores exactly as before. Running trials are then rolled back
+    /// to their latest durable checkpoint and their already-accounted
+    /// iterations are replayed with suppression (see `replay_until`);
+    /// paused and terminal trials restore as-is. Also prunes each
+    /// non-terminal trial's JSONL log back to the restored state so
+    /// resumed logging never duplicates rows.
     pub fn restore_from_dir(&mut self, dir: &ExperimentDir) -> Result<(), String> {
         let snap = dir.read_snapshot().ok_or("no readable snapshot in experiment dir")?;
         let version = snap
@@ -693,56 +938,62 @@ impl TrialRunner {
                 "snapshot format v{version} is not supported (this build reads v{FORMAT_VERSION})"
             ));
         }
-        let finished =
-            snap.get("finished").and_then(|v| v.as_bool()).unwrap_or(false);
-        self.time_offset =
-            snap.get("now").and_then(|v| v.as_f64()).ok_or("snapshot: missing clock")?;
-        self.next_id =
-            snap.get("next_id").and_then(|v| v.as_u64()).ok_or("snapshot: missing next_id")?;
-        self.search_exhausted = finished
-            || snap
-                .get("search_exhausted")
-                .and_then(|v| v.as_bool())
-                .ok_or("snapshot: missing search_exhausted")?;
-        let rng_state = snap
-            .get("rng")
-            .and_then(u64_from_json)
-            .ok_or("snapshot: missing rng state")?;
-        self.rng.set_state(rng_state);
-        self.best_so_far = snap.get("best_so_far").and_then(|v| v.as_f64());
-        self.best_curve = snap
-            .get("best_curve")
-            .and_then(|c| c.as_arr())
-            .ok_or("snapshot: missing best_curve")?
-            .iter()
-            .map(|p| {
-                let a = p.as_arr()?;
-                Some((a.first()?.as_f64()?, a.get(1)?.as_f64()?))
-            })
-            .collect::<Option<_>>()
-            .ok_or("snapshot: bad best_curve point")?;
-        self.stats = snap.get("stats").map(RunnerStats::from_json).unwrap_or_default();
-        if let Some(f) = snap.get("fault") {
-            self.fault.restore(f)?;
-        }
+        // Pre-delta snapshots carry no epoch; 0 never matches a delta.
+        let base_epoch = snap.get("delta_epoch").and_then(|v| v.as_u64()).unwrap_or(0);
+
+        // ---- base ----
+        self.apply_scalars(&snap)?;
+        self.best_curve = Self::parse_curve(
+            snap.get("best_curve")
+                .and_then(|c| c.as_arr())
+                .ok_or("snapshot: missing best_curve")?,
+        )?;
         self.checkpoints = CheckpointStore::restore_from(
             snap.get("checkpoints").ok_or("snapshot: missing checkpoints")?,
             &dir.checkpoints_dir(),
         )?;
         self.scheduler.restore(snap.get("scheduler").unwrap_or(&Json::Null))?;
         self.search.restore(snap.get("search").unwrap_or(&Json::Null))?;
-        self.replay_until = snap
-            .get("replay_until")
-            .and_then(|m| id_map_from_json(m, |v| v.as_u64()))
-            .unwrap_or_default();
-
         self.trials.clear();
         for tj in snap
             .get("trials")
             .and_then(|t| t.as_arr())
             .ok_or("snapshot: missing trials")?
         {
-            let mut t = Trial::from_json(tj).ok_or("snapshot: malformed trial")?;
+            let t = Trial::from_json(tj, &mut self.schema).ok_or("snapshot: malformed trial")?;
+            self.trials.insert(t.id, t);
+        }
+
+        // ---- fold deltas (epoch-matched, in append order) ----
+        let mut folded = 0u64;
+        for d in dir.read_deltas() {
+            if d.get("epoch").and_then(|v| v.as_u64()) != Some(base_epoch) {
+                continue; // stale record from before the current base
+            }
+            self.apply_scalars(&d)?;
+            if let Some(points) = d.get("best_curve_append").and_then(|c| c.as_arr()) {
+                self.best_curve.extend(Self::parse_curve(points)?);
+            }
+            if let Some(cd) = d.get("checkpoints") {
+                self.checkpoints.apply_delta(cd, &dir.checkpoints_dir())?;
+            }
+            self.scheduler.apply_delta(d.get("scheduler").unwrap_or(&Json::Null))?;
+            self.search.apply_delta(d.get("search").unwrap_or(&Json::Null))?;
+            for tj in d.get("trials").and_then(|t| t.as_arr()).unwrap_or(&[]) {
+                let t =
+                    Trial::from_json(tj, &mut self.schema).ok_or("delta: malformed trial")?;
+                self.trials.insert(t.id, t);
+            }
+            folded += 1;
+        }
+        self.restored_epoch = base_epoch;
+        self.restored_deltas = folded;
+        self.curve_flushed = self.best_curve.len();
+
+        // ---- roll running trials back to durable state ----
+        let ids: Vec<TrialId> = self.trials.keys().copied().collect();
+        for id in ids {
+            let mut t = self.trials.remove(&id).expect("id enumerated from the table");
             // Progress recorded by the trial's checkpoint, if its blob
             // survived.
             let ck = t
@@ -782,8 +1033,14 @@ impl TrialRunner {
                 }
                 _ => {}
             }
-            self.trials.insert(t.id, t);
+            self.trials.insert(id, t);
         }
+        // The rollback diverges the table from disk until relaunches
+        // re-mark these trials; start the resumed run with a clean
+        // cursor anyway — the rollback is a deterministic function of
+        // disk state, so a repeated crash-resume reapplies it.
+        self.dirty.clear();
+
         // Align the on-disk logs with the restored state: drop rows past
         // the rollback point (the replay re-logs them identically) and
         // any half-written final line from the crash.
@@ -846,7 +1103,7 @@ impl TrialRunner {
         let can_progress = {
             let ctx = SchedulerCtx {
                 trials: &self.trials,
-                metric: &self.spec.metric,
+                metric_id: self.metric_id,
                 mode: self.spec.mode,
             };
             self.scheduler.choose_trial_to_run(&ctx).is_some()
@@ -1004,6 +1261,7 @@ impl TrialRunner {
             stats: self.stats.clone(),
             placement: self.placer.stats,
             best_curve: std::mem::take(&mut self.best_curve),
+            schema: self.schema.clone(),
         }
     }
 

@@ -176,7 +176,7 @@ impl TrialScheduler for HyperBandScheduler {
         let Some(&bi) = self.assignment.get(&trial.id) else {
             return Decision::Continue;
         };
-        let Some(value) = result.metric(ctx.metric).map(|v| ctx.mode.ascending(v)) else {
+        let Some(value) = result.get(ctx.metric_id).map(|v| ctx.mode.ascending(v)) else {
             return Decision::Continue;
         };
         let b = &mut self.brackets[bi];

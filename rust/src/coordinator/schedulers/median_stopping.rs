@@ -4,13 +4,76 @@
 //! strictly worse than the median of the running averages of all other
 //! trials *at the same iteration*, once past a grace period and with
 //! enough peers to make the median meaningful.
+//!
+//! Perf: instead of re-collecting every peer history and running an
+//! O(n) selection per result, the rule keeps a dual-heap running median
+//! per iteration index. Each trial's running mean at iteration t is
+//! inserted into the structure for t exactly once (when the trial
+//! reports its t-th result), so when a later trial reaches t the peer
+//! median is an O(1) peek — and the decision path is O(log n) per
+//! result, independent of how many peers exist.
+//!
+//! Semantics note: the peer set at iteration t is now exactly "other
+//! trials that have reached iteration t", matching this header's
+//! definition. The previous re-collecting implementation additionally
+//! *clamped* shorter histories — a peer stuck (or stopped) at iteration
+//! s < t contributed its mean-at-s to queries at t. The at-iteration
+//! form compares like against like (no iteration-3 mean judging an
+//! iteration-50 trial) and is what makes the median an O(1) peek; the
+//! observable difference is confined to the few frontier trials that
+//! temporarily lack `min_samples_required` peers at their iteration
+//! (they continue instead of being judged against laggards) and to
+//! long-dead trials no longer dragging every later median.
 
-use std::collections::BTreeMap;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 
 use super::{Decision, ResultRow, SchedulerCtx, Trial, TrialScheduler};
 use crate::coordinator::persist::{f64s_from_json, f64s_to_json, id_map_from_json, id_map_to_json};
 use crate::coordinator::trial::TrialId;
 use crate::util::json::Json;
+use crate::util::order::OrdF64;
+
+/// Incremental upper median (the element at index n/2 of the ascending
+/// sort — exactly what the old `select_nth_unstable` read): a max-heap
+/// over the lower half and a min-heap over the upper half, rebalanced so
+/// `|hi| ∈ {|lo|, |lo|+1}`; the median is `hi`'s minimum. Insert is
+/// O(log n), read is O(1), and the NaN-proof total order makes diverged
+/// running means rank smallest instead of corrupting the heaps.
+#[derive(Default)]
+struct RunningMedian {
+    lo: BinaryHeap<OrdF64>,
+    hi: BinaryHeap<Reverse<OrdF64>>,
+}
+
+impl RunningMedian {
+    fn len(&self) -> usize {
+        self.lo.len() + self.hi.len()
+    }
+
+    fn insert(&mut self, v: f64) {
+        let v = OrdF64(v);
+        let below_upper_half = matches!(self.hi.peek(), Some(&Reverse(h)) if v < h);
+        if below_upper_half {
+            self.lo.push(v);
+        } else {
+            self.hi.push(Reverse(v));
+        }
+        while self.hi.len() > self.lo.len() + 1 {
+            let Reverse(x) = self.hi.pop().unwrap();
+            self.lo.push(x);
+        }
+        while self.lo.len() > self.hi.len() {
+            let x = self.lo.pop().unwrap();
+            self.hi.push(Reverse(x));
+        }
+    }
+
+    /// The upper median (index n/2 of the ascending sort), if non-empty.
+    fn median(&self) -> Option<f64> {
+        self.hi.peek().map(|r| r.0 .0)
+    }
+}
 
 /// Stop trials whose running average falls below the peer median.
 pub struct MedianStoppingRule {
@@ -20,7 +83,19 @@ pub struct MedianStoppingRule {
     pub min_samples_required: usize,
     /// Running mean of the (ascending-normalized) metric per trial,
     /// indexed by iteration: histories[trial][t-1] = mean over 1..=t.
+    /// Retained verbatim — it is the (unchanged) snapshot format and
+    /// the source the delta cursor slices from.
     histories: BTreeMap<TrialId, Vec<f64>>,
+    /// Per-trial count of history entries the last persisted snapshot
+    /// already contains (the delta cursor). Invariant: `flushed[id] ==
+    /// histories[id].len()` for every id NOT in `dirty`.
+    flushed: BTreeMap<TrialId, usize>,
+    /// Trials whose history grew since the cursor was last drained, so
+    /// a periodic delta scans O(changed) trials, not the population.
+    dirty: BTreeSet<TrialId>,
+    /// Per-iteration running median over every trial's mean at that
+    /// iteration (each trial contributes to iteration t exactly once).
+    medians: BTreeMap<u64, RunningMedian>,
     stopped: u64,
 }
 
@@ -31,6 +106,9 @@ impl MedianStoppingRule {
             grace_period,
             min_samples_required,
             histories: BTreeMap::new(),
+            flushed: BTreeMap::new(),
+            dirty: BTreeSet::new(),
+            medians: BTreeMap::new(),
             stopped: 0,
         }
     }
@@ -40,12 +118,22 @@ impl MedianStoppingRule {
         self.stopped
     }
 
-    fn running_mean_at(history: &[f64], t: u64) -> Option<f64> {
-        if history.is_empty() || t == 0 {
-            return None;
-        }
-        let upto = (t as usize).min(history.len());
-        Some(history[upto - 1])
+    /// Append one running mean to a trial's history and mirror it into
+    /// the per-iteration median structure. Shared by the hot path and
+    /// the restore/fold paths so all three stay in exact agreement.
+    fn push_mean(
+        histories: &mut BTreeMap<TrialId, Vec<f64>>,
+        medians: &mut BTreeMap<u64, RunningMedian>,
+        dirty: &mut BTreeSet<TrialId>,
+        id: TrialId,
+        mean: f64,
+    ) -> u64 {
+        let h = histories.entry(id).or_default();
+        h.push(mean);
+        let t = h.len() as u64;
+        medians.entry(t).or_default().insert(mean);
+        dirty.insert(id);
+        t
     }
 }
 
@@ -55,45 +143,46 @@ impl TrialScheduler for MedianStoppingRule {
     }
 
     fn on_result(&mut self, ctx: &SchedulerCtx, trial: &Trial, result: &ResultRow) -> Decision {
-        let Some(value) = result.metric(ctx.metric).map(|v| ctx.mode.ascending(v)) else {
+        let Some(value) = result.get(ctx.metric_id).map(|v| ctx.mode.ascending(v)) else {
             return Decision::Continue;
         };
-        // Update this trial's running mean history.
+        // This trial's updated running mean (incremental, O(1)).
         let h = self.histories.entry(trial.id).or_default();
         let n = h.len() as f64;
         let prev = h.last().copied().unwrap_or(0.0);
-        h.push((prev * n + value) / (n + 1.0));
-        let t = h.len() as u64;
+        let own = (prev * n + value) / (n + 1.0);
+        let t = h.len() as u64 + 1;
 
-        if t < self.grace_period {
-            return Decision::Continue;
-        }
-        // Median of peers' running means at iteration t.
-        let mut peers: Vec<f64> = self
-            .histories
-            .iter()
-            .filter(|(id, _)| **id != trial.id)
-            .filter_map(|(_, ph)| Self::running_mean_at(ph, t))
-            .collect();
-        if peers.len() < self.min_samples_required {
-            return Decision::Continue;
-        }
-        // O(n) selection instead of an O(n log n) sort — this callback
-        // runs once per intermediate result (perf iteration 2, §Perf).
-        // NaN-proof: a peer whose running mean diverged ranks smallest.
-        let mid = peers.len() / 2;
-        let (_, median, _) =
-            peers.select_nth_unstable_by(mid, |a, b| crate::util::order::asc(*a, *b));
-        let median = *median;
-        let own = Self::running_mean_at(&self.histories[&trial.id], t).unwrap();
-        // Total order, not `<`: once a trial's own running mean is NaN
-        // (one NaN result poisons the mean for good) it must stop.
-        if crate::util::order::asc(own, median) == std::cmp::Ordering::Less {
-            self.stopped += 1;
-            Decision::Stop
-        } else {
+        // Query the peer median BEFORE inserting our own mean: the
+        // structure for iteration t then holds exactly the running
+        // means of the OTHER trials that already reached t (see the
+        // module docs for how this at-iteration peer set relates to the
+        // old clamped re-collection).
+        let peers = self.medians.get(&t);
+        let decision = if t < self.grace_period {
             Decision::Continue
-        }
+        } else {
+            match peers {
+                Some(m) if m.len() >= self.min_samples_required => {
+                    let median = m.median().expect("non-empty median structure");
+                    // Total order, not `<`: once a trial's own running
+                    // mean is NaN (one NaN result poisons the mean for
+                    // good) it must stop.
+                    if crate::util::order::asc(own, median) == std::cmp::Ordering::Less {
+                        self.stopped += 1;
+                        Decision::Stop
+                    } else {
+                        Decision::Continue
+                    }
+                }
+                _ => Decision::Continue,
+            }
+        };
+        // Record our mean either way — future peers at iteration t
+        // compare against it, stopped trials included (history is kept,
+        // exactly like the re-collecting implementation kept it).
+        Self::push_mean(&mut self.histories, &mut self.medians, &mut self.dirty, trial.id, own);
+        decision
     }
 
     fn on_trial_remove(&mut self, _ctx: &SchedulerCtx, id: TrialId) {
@@ -111,12 +200,71 @@ impl TrialScheduler for MedianStoppingRule {
     }
 
     fn restore(&mut self, snap: &Json) -> Result<(), String> {
-        self.histories = snap
+        let histories = snap
             .get("histories")
             .and_then(|h| id_map_from_json(h, f64s_from_json))
             .ok_or("median snapshot: bad histories")?;
+        self.histories = BTreeMap::new();
+        self.flushed = BTreeMap::new();
+        self.dirty = BTreeSet::new();
+        self.medians = BTreeMap::new();
+        for (id, h) in histories {
+            for mean in &h {
+                Self::push_mean(&mut self.histories, &mut self.medians, &mut self.dirty, id, *mean);
+            }
+            self.flushed.insert(id, h.len());
+        }
+        self.dirty.clear(); // restored state IS the durable state
         self.stopped = snap.get("stopped").and_then(|v| v.as_u64()).unwrap_or(0);
         Ok(())
+    }
+
+    fn snapshot_delta(&mut self) -> Json {
+        // O(changed): only trials in the dirty set can have grown.
+        let append: BTreeMap<TrialId, Vec<f64>> = self
+            .dirty
+            .iter()
+            .filter_map(|id| {
+                let h = self.histories.get(id)?;
+                let from = self.flushed.get(id).copied().unwrap_or(0);
+                (from < h.len()).then(|| (*id, h[from..].to_vec()))
+            })
+            .collect();
+        for id in std::mem::take(&mut self.dirty) {
+            if let Some(h) = self.histories.get(&id) {
+                self.flushed.insert(id, h.len());
+            }
+        }
+        Json::obj(vec![
+            ("histories_append", id_map_to_json(&append, |vs| f64s_to_json(vs))),
+            ("stopped", Json::Num(self.stopped as f64)),
+        ])
+    }
+
+    fn apply_delta(&mut self, delta: &Json) -> Result<(), String> {
+        let append = delta
+            .get("histories_append")
+            .and_then(|h| id_map_from_json(h, f64s_from_json))
+            .ok_or("median delta: bad histories_append")?;
+        for (id, means) in append {
+            for mean in means {
+                Self::push_mean(&mut self.histories, &mut self.medians, &mut self.dirty, id, mean);
+            }
+            self.flushed.insert(id, self.histories[&id].len());
+            self.dirty.remove(&id); // folded state IS the durable state
+        }
+        self.stopped = delta.get("stopped").and_then(|v| v.as_u64()).unwrap_or(self.stopped);
+        Ok(())
+    }
+
+    fn reset_delta_cursor(&mut self) {
+        // O(changed), same as snapshot_delta: clean trials already
+        // satisfy flushed == len by invariant.
+        for id in std::mem::take(&mut self.dirty) {
+            if let Some(h) = self.histories.get(&id) {
+                self.flushed.insert(id, h.len());
+            }
+        }
     }
 }
 
@@ -143,6 +291,68 @@ mod tests {
         }
         assert_eq!(stopped_at, Some(3)); // first iteration past grace
         assert_eq!(s.num_stopped(), 1);
+    }
+
+    /// The incremental per-iteration median structure must agree with a
+    /// brute-force re-collection of the SAME at-iteration peer set
+    /// (other trials with history length >= t) at every decision point
+    /// — this pins the dual-heap machinery, not the (intentionally
+    /// refined, see module docs) peer-set semantics.
+    #[test]
+    fn incremental_median_matches_recollection_reference() {
+        let n_trials = 7u64;
+        let mut s = MedianStoppingRule::new(1, 1);
+        // Reference state: full histories, recomputed per query.
+        let mut ref_hist: BTreeMap<TrialId, Vec<f64>> = BTreeMap::new();
+        let mut x = 0.2_f64;
+        for iter in 0..40u64 {
+            for id in 0..n_trials {
+                x = (x * 131.0 + id as f64 + iter as f64 * 0.31).sin();
+                let value = if (iter + id) % 13 == 7 { f64::NAN } else { x };
+                // Reference running-mean update.
+                let h = ref_hist.entry(id).or_default();
+                let n = h.len() as f64;
+                let prev = h.last().copied().unwrap_or(0.0);
+                h.push((prev * n + value) / (n + 1.0));
+                let t = h.len() as u64;
+                // Brute-force reference over the same at-iteration peer
+                // set: all OTHER trials whose history reaches t.
+                let mut peers: Vec<f64> = Vec::new();
+                for (pid, ph) in &ref_hist {
+                    if *pid != id && ph.len() >= t as usize {
+                        peers.push(ph[t as usize - 1]);
+                    }
+                }
+                let reference = if peers.is_empty() {
+                    None
+                } else {
+                    let mid = peers.len() / 2;
+                    let (_, m, _) = peers
+                        .select_nth_unstable_by(mid, |a, b| crate::util::order::asc(*a, *b));
+                    Some(*m)
+                };
+                // Incremental: query before inserting (what on_result
+                // does), then insert.
+                let incremental = s.medians.get(&t).and_then(|m| m.median());
+                let own = *ref_hist[&id].last().unwrap();
+                MedianStoppingRule::push_mean(
+                    &mut s.histories,
+                    &mut s.medians,
+                    &mut s.dirty,
+                    id,
+                    own,
+                );
+                match (incremental, reference) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => assert_eq!(
+                        crate::util::order::asc(a, b),
+                        std::cmp::Ordering::Equal,
+                        "iter {iter} trial {id}: {a} vs {b}"
+                    ),
+                    other => panic!("iter {iter} trial {id}: {other:?}"),
+                }
+            }
+        }
     }
 
     #[test]
@@ -204,6 +414,39 @@ mod tests {
         }
         assert_eq!(sb.feed(&mut b, 0, 3, 0.1), Decision::Stop);
         assert_eq!(b.num_stopped(), 1);
+    }
+
+    /// Base + delta fold equals a full snapshot of the final state.
+    #[test]
+    fn delta_fold_equals_full_snapshot() {
+        let mut sb = Sandbox::new(6, "acc", Mode::Max);
+        let mut a = MedianStoppingRule::new(2, 2);
+        for iter in 1..=2 {
+            for id in 0..6u64 {
+                sb.feed(&mut a, id, iter, 0.5 + id as f64 * 0.05);
+            }
+        }
+        let base = TrialScheduler::snapshot(&a);
+        a.reset_delta_cursor();
+        for id in 0..6u64 {
+            sb.feed(&mut a, id, 3, 0.6 + id as f64 * 0.01);
+        }
+        let delta = a.snapshot_delta();
+        // One appended mean per trial, not the whole history.
+        let appended = delta.get("histories_append.0").unwrap().as_arr().unwrap();
+        assert_eq!(appended.len(), 1);
+        let mut b = MedianStoppingRule::new(2, 2);
+        TrialScheduler::restore(
+            &mut b,
+            &crate::util::json::parse(&base.to_string()).unwrap(),
+        )
+        .unwrap();
+        b.apply_delta(&crate::util::json::parse(&delta.to_string()).unwrap()).unwrap();
+        assert_eq!(
+            TrialScheduler::snapshot(&b).to_string(),
+            TrialScheduler::snapshot(&a).to_string()
+        );
+        assert_eq!(b.num_stopped(), a.num_stopped());
     }
 
     #[test]

@@ -29,6 +29,7 @@
 use std::collections::BTreeMap;
 
 use super::trial::{Config, Mode, ResultRow, Trial, TrialId, TrialStatus};
+use crate::util::intern::MetricId;
 
 pub mod asha;
 pub mod fifo;
@@ -63,8 +64,10 @@ pub enum Decision {
 pub struct SchedulerCtx<'a> {
     /// The full trial table, by id.
     pub trials: &'a BTreeMap<TrialId, Trial>,
-    /// Metric being optimized.
-    pub metric: &'a str,
+    /// Interned id of the metric being optimized (resolved once per
+    /// experiment by the runner; per-result lookups are integer
+    /// compares, not string hashing).
+    pub metric_id: MetricId,
     /// Optimization direction.
     pub mode: Mode,
 }
@@ -75,7 +78,7 @@ impl<'a> SchedulerCtx<'a> {
         trial
             .last_result
             .as_ref()
-            .and_then(|r| r.metric(self.metric))
+            .and_then(|r| r.get(self.metric_id))
             .map(|v| self.mode.ascending(v))
     }
 
@@ -127,6 +130,32 @@ pub trait TrialScheduler: Send {
     fn restore(&mut self, _snap: &crate::util::json::Json) -> Result<(), String> {
         Ok(())
     }
+
+    /// Incremental snapshot for the delta-snapshot machinery (see
+    /// `coordinator::persist`): the state appended/changed since the
+    /// last [`TrialScheduler::snapshot_delta`] call or
+    /// [`TrialScheduler::reset_delta_cursor`], in an
+    /// implementation-private format consumed only by the same
+    /// implementation's [`TrialScheduler::apply_delta`]. The default
+    /// returns the full snapshot — always correct, O(state) — and
+    /// append-mostly schedulers (ASHA rungs, median histories) override
+    /// it so a periodic delta costs O(changed since last snapshot).
+    fn snapshot_delta(&mut self) -> crate::util::json::Json {
+        self.snapshot()
+    }
+
+    /// Fold a value produced by [`TrialScheduler::snapshot_delta`] into
+    /// the current state. The default pairs with the default
+    /// `snapshot_delta`: a full-state replace via
+    /// [`TrialScheduler::restore`].
+    fn apply_delta(&mut self, delta: &crate::util::json::Json) -> Result<(), String> {
+        self.restore(delta)
+    }
+
+    /// A *full* snapshot was just persisted: the next
+    /// [`TrialScheduler::snapshot_delta`] must be relative to it.
+    /// Default: nothing tracked, nothing to reset.
+    fn reset_delta_cursor(&mut self) {}
 }
 
 #[cfg(test)]
@@ -135,13 +164,17 @@ pub(crate) mod testutil {
     use crate::coordinator::trial::ParamValue;
     use crate::ray::Resources;
 
+    /// Test metric id: sandboxes intern exactly one metric, so it is
+    /// always id 0 regardless of the display name the test picks.
+    pub const METRIC: MetricId = 0;
+
     pub fn mk_trial(id: TrialId, lr: f64) -> Trial {
         let mut c = Config::new();
         c.insert("lr".into(), ParamValue::F64(lr));
         Trial::new(id, c, Resources::cpu(1.0), id)
     }
 
-    pub fn row(iter: u64, metric: &str, v: f64) -> ResultRow {
+    pub fn row(iter: u64, metric: MetricId, v: f64) -> ResultRow {
         ResultRow::new(iter, iter as f64).with(metric, v)
     }
 
@@ -150,18 +183,18 @@ pub(crate) mod testutil {
     #[derive(Clone)]
     pub struct Sandbox {
         pub trials: BTreeMap<TrialId, Trial>,
-        pub metric: String,
+        pub metric_id: MetricId,
         pub mode: Mode,
     }
 
     impl Sandbox {
-        pub fn new(n: u64, metric: &str, mode: Mode) -> Self {
+        pub fn new(n: u64, _metric: &str, mode: Mode) -> Self {
             let trials = (0..n).map(|i| (i, mk_trial(i, 0.01 * (i + 1) as f64))).collect();
-            Sandbox { trials, metric: metric.into(), mode }
+            Sandbox { trials, metric_id: METRIC, mode }
         }
 
         pub fn ctx(&self) -> SchedulerCtx<'_> {
-            SchedulerCtx { trials: &self.trials, metric: &self.metric, mode: self.mode }
+            SchedulerCtx { trials: &self.trials, metric_id: self.metric_id, mode: self.mode }
         }
 
         pub fn add_all(&mut self, s: &mut dyn TrialScheduler) {
@@ -170,7 +203,7 @@ pub(crate) mod testutil {
                 let t = self.trials[&id].clone();
                 let ctx = SchedulerCtx {
                     trials: &self.trials,
-                    metric: &self.metric,
+                    metric_id: self.metric_id,
                     mode: self.mode,
                 };
                 s.on_trial_add(&ctx, &t);
@@ -184,17 +217,16 @@ pub(crate) mod testutil {
             iter: u64,
             value: f64,
         ) -> Decision {
-            let metric = self.metric.clone();
-            let r = row(iter, &metric, value);
+            let r = row(iter, self.metric_id, value);
             {
                 let t = self.trials.get_mut(&id).unwrap();
                 t.status = TrialStatus::Running;
-                t.record(r.clone(), &metric, self.mode);
+                t.record(r.clone(), self.metric_id, self.mode);
             }
             let t = self.trials[&id].clone();
             let ctx = SchedulerCtx {
                 trials: &self.trials,
-                metric: &self.metric,
+                metric_id: self.metric_id,
                 mode: self.mode,
             };
             let d = s.on_result(&ctx, &t, &r);
@@ -216,9 +248,8 @@ mod tests {
     #[test]
     fn ctx_score_normalizes_mode() {
         let mut sb = Sandbox::new(1, "loss", Mode::Min);
-        let metric = sb.metric.clone();
-        let mode = sb.mode;
-        sb.trials.get_mut(&0).unwrap().record(row(1, &metric, 2.0), &metric, mode);
+        let (metric, mode) = (sb.metric_id, sb.mode);
+        sb.trials.get_mut(&0).unwrap().record(row(1, metric, 2.0), metric, mode);
         let ctx = sb.ctx();
         assert_eq!(ctx.score(&ctx.trials[&0]), Some(-2.0));
     }

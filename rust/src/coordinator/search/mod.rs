@@ -48,6 +48,26 @@ pub trait SearchAlgorithm: Send {
     fn restore(&mut self, _snap: &crate::util::json::Json) -> Result<(), String> {
         Ok(())
     }
+
+    /// Incremental snapshot for the delta-snapshot machinery. Search
+    /// state only changes on suggestion/completion (orders of magnitude
+    /// rarer than results), so the default — the full snapshot, folded
+    /// back by the default [`SearchAlgorithm::apply_delta`] as a full
+    /// replace — is already proportional to a small state and no
+    /// implementation overrides it today.
+    fn snapshot_delta(&mut self) -> crate::util::json::Json {
+        self.snapshot()
+    }
+
+    /// Fold a value produced by [`SearchAlgorithm::snapshot_delta`]
+    /// into the current state (default: full replace via
+    /// [`SearchAlgorithm::restore`]).
+    fn apply_delta(&mut self, delta: &crate::util::json::Json) -> Result<(), String> {
+        self.restore(delta)
+    }
+
+    /// A full snapshot was just persisted; reset any delta tracking.
+    fn reset_delta_cursor(&mut self) {}
 }
 
 /// Helper shared by search impls: total configs a space yields for

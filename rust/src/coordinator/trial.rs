@@ -6,6 +6,7 @@ use std::collections::BTreeMap;
 use std::fmt;
 
 use crate::ray::{NodeId, Resources};
+use crate::util::intern::{MetricId, MetricSchema};
 
 /// Unique identifier of a trial within an experiment.
 pub type TrialId = u64;
@@ -67,29 +68,49 @@ pub fn config_str(config: &Config) -> String {
 
 /// One intermediate result reported by a trial (the unit the scheduler
 /// API consumes).
-#[derive(Clone, Debug, Default)]
+///
+/// Metrics are interned: the experiment's
+/// [`MetricSchema`](crate::util::intern::MetricSchema) maps names to
+/// dense [`MetricId`]s once, and each row is a small `Vec<(id, value)>`
+/// — cloning a row is a single memcpy and looking the experiment metric
+/// up is a few integer compares, the allocation-lean contract of the
+/// result hot path.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ResultRow {
     /// Training iteration (monotone per trial).
     pub iteration: u64,
     /// Total time this trial has consumed, in (possibly virtual) seconds.
     pub time_total_s: f64,
-    /// Metric name -> value, as reported by the trainable.
-    pub metrics: BTreeMap<String, f64>,
+    /// Interned metric id -> value, in report order (the set is tiny —
+    /// a linear scan beats any map at this size).
+    pub metrics: Vec<(MetricId, f64)>,
 }
 
 impl ResultRow {
     /// An empty row at `iteration` after `time_total_s` seconds.
     pub fn new(iteration: u64, time_total_s: f64) -> Self {
-        ResultRow { iteration, time_total_s, metrics: BTreeMap::new() }
+        ResultRow { iteration, time_total_s, metrics: Vec::new() }
     }
-    /// Builder-style metric insertion.
-    pub fn with(mut self, key: &str, value: f64) -> Self {
-        self.metrics.insert(key.to_string(), value);
+    /// Builder-style metric insertion (replaces an existing id).
+    pub fn with(mut self, id: MetricId, value: f64) -> Self {
+        self.set(id, value);
         self
     }
-    /// Look up one metric by name.
-    pub fn metric(&self, key: &str) -> Option<f64> {
-        self.metrics.get(key).copied()
+    /// Insert or replace one metric value.
+    pub fn set(&mut self, id: MetricId, value: f64) {
+        match self.metrics.iter_mut().find(|(k, _)| *k == id) {
+            Some((_, v)) => *v = value,
+            None => self.metrics.push((id, value)),
+        }
+    }
+    /// Look up one metric by interned id (integer compare, no hashing).
+    pub fn get(&self, id: MetricId) -> Option<f64> {
+        self.metrics.iter().find(|(k, _)| *k == id).map(|(_, v)| *v)
+    }
+    /// Look up one metric by name through the experiment's schema —
+    /// the convenience form for analysis/reporting paths.
+    pub fn metric(&self, schema: &MetricSchema, name: &str) -> Option<f64> {
+        self.get(schema.lookup(name)?)
     }
 }
 
@@ -229,7 +250,10 @@ impl Trial {
     }
 
     /// Serialize for the experiment snapshot (see `coordinator::persist`).
-    pub fn to_json(&self) -> crate::util::json::Json {
+    /// Metric ids are resolved back to names through `schema`: snapshots
+    /// always store names, so ids stay process-ephemeral and old
+    /// snapshots keep restoring.
+    pub fn to_json(&self, schema: &MetricSchema) -> crate::util::json::Json {
         use crate::coordinator::persist::{config_to_json, u64_to_json};
         use crate::util::json::Json;
         let row_json = |r: &ResultRow| {
@@ -238,7 +262,14 @@ impl Trial {
                 ("time_total_s", Json::Num(r.time_total_s)),
                 (
                     "metrics",
-                    Json::Obj(r.metrics.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect()),
+                    Json::Obj(
+                        r.metrics
+                            .iter()
+                            .filter_map(|(id, v)| {
+                                schema.name(*id).map(|n| (n.to_string(), Json::Num(*v)))
+                            })
+                            .collect(),
+                    ),
                 ),
             ])
         };
@@ -272,10 +303,14 @@ impl Trial {
         ])
     }
 
-    /// Rebuild a trial from a snapshot written by [`Trial::to_json`].
-    pub fn from_json(j: &crate::util::json::Json) -> Option<Trial> {
+    /// Rebuild a trial from a snapshot written by [`Trial::to_json`],
+    /// re-interning metric names into `schema`.
+    pub fn from_json(
+        j: &crate::util::json::Json,
+        schema: &mut MetricSchema,
+    ) -> Option<Trial> {
         use crate::coordinator::persist::{config_from_json, u64_from_json};
-        let row = |r: &crate::util::json::Json| -> Option<ResultRow> {
+        let mut row = |r: &crate::util::json::Json| -> Option<ResultRow> {
             Some(ResultRow {
                 iteration: r.get("iteration")?.as_u64()?,
                 time_total_s: r.get("time_total_s")?.as_f64()?,
@@ -286,7 +321,7 @@ impl Trial {
                     .get("metrics")?
                     .as_obj()?
                     .iter()
-                    .filter_map(|(k, v)| v.as_f64().map(|f| (k.clone(), f)))
+                    .filter_map(|(k, v)| v.as_f64().map(|f| (schema.intern(k), f)))
                     .collect(),
             })
         };
@@ -320,18 +355,45 @@ impl Trial {
     /// `NaN` metric values never become the best: without the guard a
     /// NaN *first* result would stick forever (`mode.better` is false
     /// for every comparison against NaN, in both directions).
-    pub fn record(&mut self, row: ResultRow, metric: &str, mode: Mode) {
+    pub fn record(&mut self, row: ResultRow, metric: MetricId, mode: Mode) {
         self.iteration = row.iteration;
         self.time_total_s = row.time_total_s;
-        if let Some(v) = row.metric(metric) {
-            if !v.is_nan() {
-                let better = self.best_metric.map_or(true, |b| mode.better(v, b));
-                if better {
-                    self.best_metric = Some(v);
-                }
+        self.update_best(row.get(metric), mode);
+        self.last_result = Some(row);
+    }
+
+    /// Hot-path variant of [`Trial::record`]: build the row in place
+    /// from a trainable's raw `StepOutput` metrics, reusing the previous
+    /// `last_result` allocation — zero heap traffic per result once the
+    /// row vector has reached its steady-state capacity.
+    pub fn record_step(
+        &mut self,
+        iteration: u64,
+        time_total_s: f64,
+        metrics: &BTreeMap<String, f64>,
+        schema: &mut MetricSchema,
+        metric: MetricId,
+        mode: Mode,
+    ) {
+        self.iteration = iteration;
+        self.time_total_s = time_total_s;
+        let mut row = self.last_result.take().unwrap_or_default();
+        row.iteration = iteration;
+        row.time_total_s = time_total_s;
+        row.metrics.clear();
+        for (name, v) in metrics {
+            row.metrics.push((schema.intern(name), *v));
+        }
+        self.update_best(row.get(metric), mode);
+        self.last_result = Some(row);
+    }
+
+    fn update_best(&mut self, value: Option<f64>, mode: Mode) {
+        if let Some(v) = value {
+            if !v.is_nan() && self.best_metric.map_or(true, |b| mode.better(v, b)) {
+                self.best_metric = Some(v);
             }
         }
-        self.last_result = Some(row);
     }
 }
 
@@ -355,13 +417,41 @@ mod tests {
 
     #[test]
     fn record_tracks_best_under_min() {
+        let mut schema = MetricSchema::new();
+        let loss = schema.intern("loss");
         let mut t = Trial::new(1, cfg(0.1), Resources::cpu(1.0), 0);
-        t.record(ResultRow::new(1, 1.0).with("loss", 2.0), "loss", Mode::Min);
-        t.record(ResultRow::new(2, 2.0).with("loss", 3.0), "loss", Mode::Min);
+        t.record(ResultRow::new(1, 1.0).with(loss, 2.0), loss, Mode::Min);
+        t.record(ResultRow::new(2, 2.0).with(loss, 3.0), loss, Mode::Min);
         assert_eq!(t.best_metric, Some(2.0));
         assert_eq!(t.iteration, 2);
-        t.record(ResultRow::new(3, 3.0).with("loss", 1.0), "loss", Mode::Min);
+        t.record(ResultRow::new(3, 3.0).with(loss, 1.0), loss, Mode::Min);
         assert_eq!(t.best_metric, Some(1.0));
+    }
+
+    #[test]
+    fn record_step_reuses_the_row_allocation() {
+        let mut schema = MetricSchema::new();
+        let loss = schema.intern("loss");
+        let mut t = Trial::new(1, cfg(0.1), Resources::cpu(1.0), 0);
+        let mut metrics = BTreeMap::new();
+        metrics.insert("loss".to_string(), 2.0);
+        metrics.insert("accuracy".to_string(), 0.5);
+        t.record_step(1, 1.0, &metrics, &mut schema, loss, Mode::Min);
+        let cap = t.last_result.as_ref().unwrap().metrics.capacity();
+        let ptr = t.last_result.as_ref().unwrap().metrics.as_ptr();
+        metrics.insert("loss".to_string(), 1.0);
+        t.record_step(2, 2.0, &metrics, &mut schema, loss, Mode::Min);
+        let row = t.last_result.as_ref().unwrap();
+        assert_eq!(row.metrics.capacity(), cap);
+        assert_eq!(row.metrics.as_ptr(), ptr); // same buffer, no realloc
+        assert_eq!(row.get(loss), Some(1.0));
+        assert_eq!(t.best_metric, Some(1.0));
+        assert_eq!(t.iteration, 2);
+        // NaN never becomes best; iteration/time still advance.
+        metrics.insert("loss".to_string(), f64::NAN);
+        t.record_step(3, 3.0, &metrics, &mut schema, loss, Mode::Min);
+        assert_eq!(t.best_metric, Some(1.0));
+        assert_eq!(t.iteration, 3);
     }
 
     #[test]
@@ -375,18 +465,20 @@ mod tests {
 
     #[test]
     fn snapshot_json_roundtrip_preserves_everything() {
+        let mut schema = MetricSchema::new();
+        let loss = schema.intern("loss");
         let mut c = cfg(0.015625);
         c.insert("layers".into(), ParamValue::I64(3));
         c.insert("act".into(), ParamValue::Str("gelu".into()));
         let mut t = Trial::new(9, c, Resources::cpu(2.0).with_custom("tpu", 0.5), u64::MAX - 7);
         t.status = TrialStatus::Paused;
-        t.record(ResultRow::new(4, 3.25).with("loss", 0.125), "loss", Mode::Min);
+        t.record(ResultRow::new(4, 3.25).with(loss, 0.125), loss, Mode::Min);
         t.checkpoint = Some(17);
         t.num_failures = 2;
         t.mutations = 1;
-        let text = t.to_json().to_string();
+        let text = t.to_json(&schema).to_string();
         let parsed = crate::util::json::parse(&text).unwrap();
-        let back = Trial::from_json(&parsed).unwrap();
+        let back = Trial::from_json(&parsed, &mut schema).unwrap();
         assert_eq!(back.id, t.id);
         assert_eq!(back.config, t.config);
         assert_eq!(back.status, t.status);
@@ -399,6 +491,24 @@ mod tests {
         assert_eq!(back.num_failures, 2);
         assert_eq!(back.seed, u64::MAX - 7);
         assert_eq!(back.mutations, 1);
+    }
+
+    #[test]
+    fn from_json_interns_into_a_fresh_schema() {
+        // A resumed process starts with an empty schema: names written
+        // by the previous process must re-intern (ids may differ; values
+        // are found by name).
+        let mut writer = MetricSchema::new();
+        let acc = writer.intern("accuracy");
+        let mut t = Trial::new(1, cfg(0.1), Resources::cpu(1.0), 3);
+        t.record(ResultRow::new(2, 1.5).with(acc, 0.75), acc, Mode::Max);
+        let text = t.to_json(&writer).to_string();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let mut reader = MetricSchema::new();
+        reader.intern("loss"); // occupy id 0 so ids genuinely differ
+        let back = Trial::from_json(&parsed, &mut reader).unwrap();
+        let row = back.last_result.unwrap();
+        assert_eq!(row.metric(&reader, "accuracy"), Some(0.75));
     }
 
     #[test]

@@ -194,6 +194,8 @@ mod tests {
     fn roundtrip_through_jsonl() {
         let dir = std::env::temp_dir().join(format!("tune_analysis_{}", std::process::id()));
         std::fs::remove_dir_all(&dir).ok();
+        let mut schema = crate::util::intern::MetricSchema::new();
+        let loss_id = schema.intern("loss");
         let mut l = JsonlLogger::new(dir.clone()).unwrap();
         for id in 0..3u64 {
             let mut c = Config::new();
@@ -201,9 +203,9 @@ mod tests {
             let mut t = Trial::new(id, c, Resources::cpu(1.0), id);
             for it in 1..=4 {
                 let loss = 1.0 / (it as f64) + id as f64; // trial 0 best
-                let row = ResultRow::new(it, it as f64).with("loss", loss);
-                t.record(row.clone(), "loss", Mode::Min);
-                l.on_result(&t, &row);
+                let row = ResultRow::new(it, it as f64).with(loss_id, loss);
+                t.record(row.clone(), loss_id, Mode::Min);
+                l.on_result(&schema, &t, &row);
             }
             l.on_trial_end(&t);
         }
@@ -251,11 +253,13 @@ mod tests {
         // exists, only trial logs — load must still succeed.
         let dir = std::env::temp_dir().join(format!("tune_analysis_nosum_{}", std::process::id()));
         std::fs::remove_dir_all(&dir).ok();
+        let mut schema = crate::util::intern::MetricSchema::new();
+        let loss_id = schema.intern("loss");
         let mut l = JsonlLogger::new(dir.clone()).unwrap();
         let mut c = Config::new();
         c.insert("lr".into(), ParamValue::F64(0.2));
         let t = Trial::new(4, c, Resources::cpu(1.0), 0);
-        l.on_result(&t, &ResultRow::new(1, 1.0).with("loss", 0.9));
+        l.on_result(&schema, &t, &ResultRow::new(1, 1.0).with(loss_id, 0.9));
         drop(l); // crash: neither on_trial_end nor on_experiment_end ran
         assert!(!dir.join("experiment.json").exists());
         let a = ExperimentAnalysis::load(&dir).unwrap();

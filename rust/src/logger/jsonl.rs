@@ -2,31 +2,48 @@
 //! the moral equivalent of Tune's result.json/TensorBoard integration.
 //! `ExperimentAnalysis` (and the `analyze` CLI subcommand) reads these
 //! back.
+//!
+//! Perf: the per-result path streams each line into one reusable
+//! `String` buffer with the `util::json` streaming writers — no
+//! intermediate `Json::Obj`, no `BTreeMap`, no per-line `to_string()`
+//! allocation. Metric names come from the experiment's interned
+//! [`MetricSchema`], borrowed, never cloned.
+//!
+//! Robustness: a trial log that cannot be created (the directory
+//! vanished, permissions changed under a long-running `tune serve`)
+//! degrades to a once-per-trial warning and dropped rows for that trial
+//! — it must never panic the shared hub.
 
 use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};
 use std::io::{BufWriter, Write};
 use std::path::PathBuf;
 
-use crate::coordinator::trial::{config_str, ParamValue, ResultRow, Trial, TrialId};
-use crate::util::json::Json;
+use crate::coordinator::trial::{Config, ParamValue, ResultRow, Trial, TrialId};
+use crate::util::intern::MetricSchema;
+use crate::util::json::{write_json_f64, write_json_str, Json};
 
 use super::ResultLogger;
 
 /// Writes one `trial_NNNN.jsonl` per trial plus `experiment.json`.
 pub struct JsonlLogger {
     dir: PathBuf,
-    writers: BTreeMap<TrialId, BufWriter<File>>,
+    /// `None` marks a trial whose log could not be created: the failure
+    /// was warned about once and its rows are dropped.
+    writers: BTreeMap<TrialId, Option<BufWriter<File>>>,
     /// Resume mode: append to existing trial logs (headers already
     /// written before the crash) instead of truncating them.
     append: bool,
+    /// Reusable line buffer (the streaming encoder's only allocation,
+    /// amortized to zero once it reaches steady-state capacity).
+    buf: String,
 }
 
 impl JsonlLogger {
     /// Create (and mkdir -p) a logger rooted at `dir`.
     pub fn new(dir: PathBuf) -> std::io::Result<Self> {
         std::fs::create_dir_all(&dir)?;
-        Ok(JsonlLogger { dir, writers: BTreeMap::new(), append: false })
+        Ok(JsonlLogger { dir, writers: BTreeMap::new(), append: false, buf: String::new() })
     }
 
     /// Logger for a resumed experiment: existing `trial_*.jsonl` files
@@ -35,7 +52,7 @@ impl JsonlLogger {
     /// normally. The runner prunes stale rows before attaching this.
     pub fn resume(dir: PathBuf) -> std::io::Result<Self> {
         std::fs::create_dir_all(&dir)?;
-        Ok(JsonlLogger { dir, writers: BTreeMap::new(), append: true })
+        Ok(JsonlLogger { dir, writers: BTreeMap::new(), append: true, buf: String::new() })
     }
 
     /// The directory logs are written under.
@@ -43,110 +60,174 @@ impl JsonlLogger {
         &self.dir
     }
 
-    fn config_json(trial: &Trial) -> Json {
-        Json::Obj(
-            trial
-                .config
-                .iter()
-                .map(|(k, v)| {
-                    let jv = match v {
-                        ParamValue::F64(f) => Json::Num(*f),
-                        ParamValue::I64(i) => Json::Num(*i as f64),
-                        ParamValue::Str(s) => Json::Str(s.clone()),
-                        ParamValue::Bool(b) => Json::Bool(*b),
-                    };
-                    (k.clone(), jv)
-                })
-                .collect(),
-        )
+    /// Stream a config object (`{"lr":0.1,"act":"relu"}`) into `out` —
+    /// keys and string values are borrowed, never cloned.
+    fn write_config(config: &Config, out: &mut String) {
+        out.push('{');
+        for (i, (k, v)) in config.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            write_json_str(k, out);
+            out.push(':');
+            match v {
+                ParamValue::F64(f) => write_json_f64(*f, out),
+                ParamValue::I64(n) => {
+                    use std::fmt::Write as _;
+                    let _ = write!(out, "{n}");
+                }
+                ParamValue::Str(s) => write_json_str(s, out),
+                ParamValue::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            }
+        }
+        out.push('}');
     }
 
-    fn row_json(trial: &Trial, row: &ResultRow) -> Json {
-        let mut obj = BTreeMap::new();
-        obj.insert("trial".into(), Json::Num(trial.id as f64));
-        obj.insert("iteration".into(), Json::Num(row.iteration as f64));
-        obj.insert("time_total_s".into(), Json::Num(row.time_total_s));
-        for (k, v) in &row.metrics {
-            obj.insert(k.clone(), Json::Num(*v));
+    /// Stream the per-trial header line (config, seed) into `out`.
+    fn write_header(trial: &Trial, out: &mut String) {
+        use std::fmt::Write as _;
+        out.push_str("{\"trial\":");
+        let _ = write!(out, "{}", trial.id);
+        out.push_str(",\"config\":");
+        Self::write_config(&trial.config, out);
+        out.push_str(",\"config_str\":");
+        // config_str allocates, but this runs once per trial, not per
+        // result; the escaped write still borrows it.
+        let cfg = crate::coordinator::trial::config_str(&trial.config);
+        write_json_str(&cfg, out);
+        // The seed is a full-range u64 (forked from the experiment
+        // RNG), so it is hex-encoded — a JSON number is an f64 and
+        // would round it.
+        let _ = write!(out, ",\"seed\":\"{:016x}\"}}", trial.seed);
+        out.push('\n');
+    }
+
+    /// Stream one result line into `out`.
+    fn write_row(schema: &MetricSchema, trial: &Trial, row: &ResultRow, out: &mut String) {
+        use std::fmt::Write as _;
+        out.push_str("{\"trial\":");
+        let _ = write!(out, "{}", trial.id);
+        out.push_str(",\"iteration\":");
+        let _ = write!(out, "{}", row.iteration);
+        out.push_str(",\"time_total_s\":");
+        write_json_f64(row.time_total_s, out);
+        for (id, v) in &row.metrics {
+            if let Some(name) = schema.name(*id) {
+                out.push(',');
+                write_json_str(name, out);
+                out.push(':');
+                write_json_f64(*v, out);
+            }
         }
-        Json::Obj(obj)
+        out.push_str("}\n");
+    }
+
+    /// Open one trial's log and write its header (cold path: once per
+    /// trial, so the header's local buffer allocation is fine). `None`
+    /// when the file cannot be created — warned once, rows dropped.
+    fn open_writer(dir: &std::path::Path, append: bool, trial: &Trial) -> Option<BufWriter<File>> {
+        let path = dir.join(format!("trial_{:04}.jsonl", trial.id));
+        // Resume mode reopens a surviving log in append position (its
+        // header is already on disk); everything else starts fresh.
+        let existing = append && std::fs::metadata(&path).map(|m| m.len() > 0).unwrap_or(false);
+        let file = if existing {
+            OpenOptions::new().append(true).open(&path)
+        } else {
+            File::create(&path)
+        };
+        match file {
+            Ok(f) => {
+                let mut w = BufWriter::new(f);
+                if !existing {
+                    let mut header = String::new();
+                    Self::write_header(trial, &mut header);
+                    w.write_all(header.as_bytes()).ok();
+                }
+                Some(w)
+            }
+            Err(e) => {
+                // Degrade, never panic: one unwritable log dir under
+                // `tune serve` must not take the hub down.
+                eprintln!(
+                    "jsonl: cannot create log for trial {} at {path:?}: {e}; \
+                     dropping its rows",
+                    trial.id
+                );
+                None
+            }
+        }
     }
 }
 
 impl ResultLogger for JsonlLogger {
-    fn on_result(&mut self, trial: &Trial, row: &ResultRow) {
-        let dir = self.dir.clone();
-        let append = self.append;
-        let w = self.writers.entry(trial.id).or_insert_with(|| {
-            let path = dir.join(format!("trial_{:04}.jsonl", trial.id));
-            // Resume mode reopens a surviving log in append position (its
-            // header is already on disk); everything else starts fresh.
-            let existing = append
-                && std::fs::metadata(&path).map(|m| m.len() > 0).unwrap_or(false);
-            let file = if existing {
-                OpenOptions::new().append(true).open(&path)
-            } else {
-                File::create(&path)
-            };
-            let mut w = BufWriter::new(file.expect("create trial log"));
-            if !existing {
-                // First line: the trial header (config, seed). The seed
-                // is a full-range u64 (forked from the experiment RNG),
-                // so it is hex-encoded — Json::Num is an f64 and would
-                // round it.
-                let header = Json::obj(vec![
-                    ("trial", Json::Num(trial.id as f64)),
-                    ("config", Self::config_json(trial)),
-                    ("config_str", Json::Str(config_str(&trial.config))),
-                    ("seed", crate::util::json::u64_to_json(trial.seed)),
-                ]);
-                writeln!(w, "{}", header.to_string()).ok();
-            }
-            w
-        });
-        writeln!(w, "{}", Self::row_json(trial, row).to_string()).ok();
+    fn on_result(&mut self, schema: &MetricSchema, trial: &Trial, row: &ResultRow) {
+        // Encode into the reusable buffer, then resolve the writer with
+        // ONE map lookup — `buf`/`dir` and `writers` are disjoint
+        // fields, so the shared borrows coexist with the entry.
+        self.buf.clear();
+        Self::write_row(schema, trial, row, &mut self.buf);
+        let (dir, append, buf) = (&self.dir, self.append, &self.buf);
+        if let Some(w) = self
+            .writers
+            .entry(trial.id)
+            .or_insert_with(|| Self::open_writer(dir, append, trial))
+            .as_mut()
+        {
+            w.write_all(buf.as_bytes()).ok();
+        }
     }
 
     /// Replayed rows are logged normally: the resume path pruned this
     /// trial's log back to the rollback point, so re-writing them keeps
     /// the on-disk history complete and duplicate-free.
-    fn on_replayed_result(&mut self, trial: &Trial, row: &ResultRow) {
-        self.on_result(trial, row);
+    fn on_replayed_result(&mut self, schema: &MetricSchema, trial: &Trial, row: &ResultRow) {
+        self.on_result(schema, trial, row);
     }
 
     fn on_trial_end(&mut self, trial: &Trial) {
-        if let Some(mut w) = self.writers.remove(&trial.id) {
+        if let Some(Some(mut w)) = self.writers.remove(&trial.id) {
             let end = Json::obj(vec![
                 ("trial", Json::Num(trial.id as f64)),
                 ("end", Json::Str(format!("{:?}", trial.status))),
                 ("iterations", Json::Num(trial.iteration as f64)),
                 ("best_metric", trial.best_metric.map(Json::Num).unwrap_or(Json::Null)),
             ]);
-            writeln!(w, "{}", end.to_string()).ok();
+            self.buf.clear();
+            end.write_to(&mut self.buf);
+            self.buf.push('\n');
+            w.write_all(self.buf.as_bytes()).ok();
             w.flush().ok();
         }
     }
 
     fn on_experiment_end(&mut self, trials: &BTreeMap<TrialId, Trial>) {
-        for w in self.writers.values_mut() {
+        for w in self.writers.values_mut().flatten() {
             w.flush().ok();
         }
-        let summary = Json::Arr(
-            trials
-                .values()
-                .map(|t| {
-                    Json::obj(vec![
-                        ("trial", Json::Num(t.id as f64)),
-                        ("status", Json::Str(format!("{:?}", t.status))),
-                        ("iterations", Json::Num(t.iteration as f64)),
-                        ("best_metric", t.best_metric.map(Json::Num).unwrap_or(Json::Null)),
-                        ("config", Self::config_json(t)),
-                        ("mutations", Json::Num(t.mutations as f64)),
-                    ])
-                })
-                .collect(),
-        );
-        std::fs::write(self.dir.join("experiment.json"), summary.to_string()).ok();
+        // Cold path, but streamed anyway: configs are borrowed into the
+        // buffer instead of cloned into a Json tree.
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        out.push('[');
+        for (i, t) in trials.values().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("{\"trial\":");
+            let _ = write!(out, "{}", t.id);
+            let _ = write!(out, ",\"status\":\"{:?}\"", t.status);
+            let _ = write!(out, ",\"iterations\":{}", t.iteration);
+            out.push_str(",\"best_metric\":");
+            match t.best_metric {
+                Some(m) => write_json_f64(m, &mut out),
+                None => out.push_str("null"),
+            }
+            out.push_str(",\"config\":");
+            Self::write_config(&t.config, &mut out);
+            let _ = write!(out, ",\"mutations\":{}}}", t.mutations);
+        }
+        out.push(']');
+        std::fs::write(self.dir.join("experiment.json"), out).ok();
     }
 }
 
@@ -156,7 +237,7 @@ impl Drop for JsonlLogger {
     /// flushes too, but silently — this makes the guarantee explicit
     /// and keeps it even if the buffering strategy changes).
     fn drop(&mut self) {
-        for w in self.writers.values_mut() {
+        for w in self.writers.values_mut().flatten() {
             w.flush().ok();
         }
     }
@@ -174,15 +255,22 @@ mod tests {
         d
     }
 
+    fn loss_schema() -> (MetricSchema, u32) {
+        let mut s = MetricSchema::new();
+        let id = s.intern("loss");
+        (s, id)
+    }
+
     #[test]
     fn writes_header_rows_and_summary() {
         let dir = tmpdir("basic");
+        let (schema, loss) = loss_schema();
         let mut l = JsonlLogger::new(dir.clone()).unwrap();
         let mut c = Config::new();
         c.insert("lr".into(), ParamValue::F64(0.1));
         let mut t = Trial::new(3, c, Resources::cpu(1.0), 7);
-        l.on_result(&t, &ResultRow::new(1, 0.5).with("loss", 1.0));
-        l.on_result(&t, &ResultRow::new(2, 1.0).with("loss", 0.5));
+        l.on_result(&schema, &t, &ResultRow::new(1, 0.5).with(loss, 1.0));
+        l.on_result(&schema, &t, &ResultRow::new(2, 1.0).with(loss, 0.5));
         t.status = TrialStatus::Completed;
         t.iteration = 2;
         t.best_metric = Some(0.5);
@@ -196,10 +284,69 @@ mod tests {
         assert_eq!(lines.len(), 4); // header + 2 rows + end
         let header = crate::util::json::parse(lines[0]).unwrap();
         assert_eq!(header.get("config.lr").unwrap().as_f64(), Some(0.1));
+        assert_eq!(header.get("seed").unwrap().as_str(), Some("0000000000000007"));
+        let row = crate::util::json::parse(lines[1]).unwrap();
+        assert_eq!(row.get("loss").unwrap().as_f64(), Some(1.0));
+        assert_eq!(row.get("iteration").unwrap().as_u64(), Some(1));
         let summary =
             crate::util::json::parse(&std::fs::read_to_string(dir.join("experiment.json")).unwrap())
                 .unwrap();
-        assert_eq!(summary.as_arr().unwrap().len(), 1);
+        let arr = summary.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("config.lr").unwrap().as_f64(), Some(0.1));
+        assert_eq!(arr[0].get("status").unwrap().as_str(), Some("Completed"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn streamed_lines_match_parser_roundtrip() {
+        // Escaped config strings and non-finite metrics must survive the
+        // streaming encoder exactly like the old tree encoder.
+        let dir = tmpdir("escape");
+        let (mut schema, loss) = loss_schema();
+        let nan = schema.intern("weird\"metric");
+        let mut c = Config::new();
+        c.insert("act\n".into(), ParamValue::Str("re\"lu".into()));
+        c.insert("layers".into(), ParamValue::I64(-3));
+        c.insert("debug".into(), ParamValue::Bool(true));
+        let t = Trial::new(1, c, Resources::cpu(1.0), u64::MAX);
+        let mut l = JsonlLogger::new(dir.clone()).unwrap();
+        let row = ResultRow::new(1, 0.5).with(loss, 0.25).with(nan, f64::NAN);
+        l.on_result(&schema, &t, &row);
+        drop(l);
+        let log = std::fs::read_to_string(dir.join("trial_0001.jsonl")).unwrap();
+        let header = crate::util::json::parse(log.lines().next().unwrap()).unwrap();
+        assert_eq!(header.get("config.act\n").unwrap().as_str(), Some("re\"lu"));
+        assert_eq!(header.get("config.layers").unwrap().as_f64(), Some(-3.0));
+        assert_eq!(header.get("config.debug").unwrap().as_bool(), Some(true));
+        assert_eq!(header.get("seed").unwrap().as_str(), Some("ffffffffffffffff"));
+        let parsed = crate::util::json::parse(log.lines().nth(1).unwrap()).unwrap();
+        assert_eq!(parsed.get("loss").unwrap().as_f64(), Some(0.25));
+        // NaN serializes as null, exactly like Json::Num did.
+        assert_eq!(parsed.get("weird\"metric"), Some(&Json::Null));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unwritable_dir_degrades_to_dropped_rows_not_panic() {
+        // Regression for `tune serve`: the log directory vanishing mid-
+        // run (or being unwritable) must drop that trial's rows with a
+        // warning — one sick experiment cannot panic the shared hub.
+        let dir = tmpdir("gone");
+        let (schema, loss) = loss_schema();
+        let mut l = JsonlLogger::new(dir.clone()).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap(); // yank the dir away
+        let t = Trial::new(1, Config::new(), Resources::cpu(1.0), 0);
+        l.on_result(&schema, &t, &ResultRow::new(1, 0.5).with(loss, 1.0));
+        l.on_result(&schema, &t, &ResultRow::new(2, 1.0).with(loss, 0.9));
+        l.on_trial_end(&t); // no writer: quietly skipped
+        assert!(!dir.join("trial_0001.jsonl").exists());
+        // A later trial whose log CAN be created still logs normally.
+        std::fs::create_dir_all(&dir).unwrap();
+        let t2 = Trial::new(2, Config::new(), Resources::cpu(1.0), 0);
+        l.on_result(&schema, &t2, &ResultRow::new(1, 0.5).with(loss, 0.7));
+        drop(l);
+        assert!(dir.join("trial_0002.jsonl").exists());
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -208,12 +355,13 @@ mod tests {
         // Regression: rows from a crashed/abandoned run must reach disk
         // even though on_trial_end/on_experiment_end never ran.
         let dir = tmpdir("drop");
+        let (schema, loss) = loss_schema();
         {
             let mut l = JsonlLogger::new(dir.clone()).unwrap();
             let mut c = Config::new();
             c.insert("lr".into(), ParamValue::F64(0.1));
             let t = Trial::new(1, c, Resources::cpu(1.0), 0);
-            l.on_result(&t, &ResultRow::new(1, 0.5).with("loss", 1.0));
+            l.on_result(&schema, &t, &ResultRow::new(1, 0.5).with(loss, 1.0));
         } // dropped here, mid-experiment
         let log = std::fs::read_to_string(dir.join("trial_0001.jsonl")).unwrap();
         assert_eq!(log.lines().count(), 2); // header + 1 row
@@ -223,16 +371,17 @@ mod tests {
     #[test]
     fn resume_appends_without_duplicate_header() {
         let dir = tmpdir("resume");
+        let (schema, loss) = loss_schema();
         let mut c = Config::new();
         c.insert("lr".into(), ParamValue::F64(0.1));
         let t = Trial::new(2, c, Resources::cpu(1.0), 0);
         {
             let mut l = JsonlLogger::new(dir.clone()).unwrap();
-            l.on_result(&t, &ResultRow::new(1, 0.5).with("loss", 1.0));
+            l.on_result(&schema, &t, &ResultRow::new(1, 0.5).with(loss, 1.0));
         }
         {
             let mut l = JsonlLogger::resume(dir.clone()).unwrap();
-            l.on_result(&t, &ResultRow::new(2, 1.0).with("loss", 0.8));
+            l.on_result(&schema, &t, &ResultRow::new(2, 1.0).with(loss, 0.8));
         }
         let log = std::fs::read_to_string(dir.join("trial_0002.jsonl")).unwrap();
         let lines: Vec<&str> = log.lines().collect();

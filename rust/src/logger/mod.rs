@@ -6,6 +6,7 @@
 use std::collections::BTreeMap;
 
 use crate::coordinator::trial::{ResultRow, Trial, TrialId};
+use crate::util::intern::MetricSchema;
 
 pub mod analysis;
 pub mod jsonl;
@@ -15,16 +16,19 @@ pub use analysis::ExperimentAnalysis;
 pub use jsonl::JsonlLogger;
 pub use progress::ProgressReporter;
 
-/// Receives every intermediate result and lifecycle transition.
+/// Receives every intermediate result and lifecycle transition. Result
+/// rows carry interned metric ids; the experiment's [`MetricSchema`] is
+/// passed alongside so loggers that need names (JSONL, console) resolve
+/// them without per-row string allocation.
 pub trait ResultLogger: Send {
     /// One intermediate result arrived for `trial`.
-    fn on_result(&mut self, trial: &Trial, row: &ResultRow);
+    fn on_result(&mut self, schema: &MetricSchema, trial: &Trial, row: &ResultRow);
     /// A crash-resume *replayed* result: the iteration was already
     /// processed (and reported) before the crash and is re-executing
     /// only to rebuild state. Default: ignored, so live reporters do
     /// not double-report; durable logs override this to re-write the
     /// pruned rows (see `JsonlLogger`).
-    fn on_replayed_result(&mut self, _trial: &Trial, _row: &ResultRow) {}
+    fn on_replayed_result(&mut self, _schema: &MetricSchema, _trial: &Trial, _row: &ResultRow) {}
     /// `trial` reached a terminal status.
     fn on_trial_end(&mut self, _trial: &Trial) {}
     /// The whole experiment finished.
@@ -48,7 +52,7 @@ impl MemoryLogger {
 }
 
 impl ResultLogger for MemoryLogger {
-    fn on_result(&mut self, trial: &Trial, row: &ResultRow) {
+    fn on_result(&mut self, _schema: &MetricSchema, trial: &Trial, row: &ResultRow) {
         self.rows.push((trial.id, row.clone()));
     }
     fn on_trial_end(&mut self, trial: &Trial) {
@@ -64,11 +68,14 @@ mod tests {
 
     #[test]
     fn memory_logger_records() {
+        let mut schema = MetricSchema::new();
+        let loss = schema.intern("loss");
         let mut l = MemoryLogger::new();
         let t = Trial::new(1, Config::new(), Resources::cpu(1.0), 0);
-        l.on_result(&t, &ResultRow::new(1, 1.0).with("loss", 0.5));
+        l.on_result(&schema, &t, &ResultRow::new(1, 1.0).with(loss, 0.5));
         l.on_trial_end(&t);
         assert_eq!(l.rows.len(), 1);
+        assert_eq!(l.rows[0].1.get(loss), Some(0.5));
         assert_eq!(l.ended, vec![1]);
     }
 }

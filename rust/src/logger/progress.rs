@@ -6,6 +6,7 @@
 use std::collections::BTreeMap;
 
 use crate::coordinator::trial::{config_str, ResultRow, Trial, TrialId, TrialStatus};
+use crate::util::intern::MetricSchema;
 
 use super::ResultLogger;
 
@@ -53,13 +54,13 @@ impl ProgressReporter {
 }
 
 impl ResultLogger for ProgressReporter {
-    fn on_result(&mut self, trial: &Trial, row: &ResultRow) {
+    fn on_result(&mut self, schema: &MetricSchema, trial: &Trial, row: &ResultRow) {
         self.table.insert(
             trial.id,
             (
                 trial.status,
                 row.iteration,
-                row.metric(&self.metric),
+                row.metric(schema, &self.metric),
                 config_str(&trial.config),
             ),
         );
@@ -94,11 +95,14 @@ mod tests {
 
     #[test]
     fn tracks_status_counts() {
+        let mut schema = MetricSchema::new();
+        let loss = schema.intern("loss");
         let mut p = ProgressReporter::new("loss", 0);
         let mut t = Trial::new(1, Config::new(), Resources::cpu(1.0), 0);
         t.status = TrialStatus::Running;
-        p.on_result(&t, &ResultRow::new(1, 1.0).with("loss", 0.3));
+        p.on_result(&schema, &t, &ResultRow::new(1, 1.0).with(loss, 0.3));
         assert_eq!(p.table[&1].0, TrialStatus::Running);
+        assert_eq!(p.table[&1].2, Some(0.3));
         t.status = TrialStatus::Completed;
         p.on_trial_end(&t);
         assert_eq!(p.table[&1].0, TrialStatus::Completed);

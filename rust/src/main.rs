@@ -664,10 +664,25 @@ fn cmd_analyze(flags: &Flags) {
                 Some(s) => {
                     let finished =
                         s.get("finished").and_then(|v| v.as_bool()).unwrap_or(false);
+                    // Count only records a resume would actually fold:
+                    // stale-epoch leftovers from a base-write crash
+                    // window are skipped by restore, so do not report
+                    // them as pending incremental state.
+                    let epoch = s.get("delta_epoch").and_then(|v| v.as_u64()).unwrap_or(0);
+                    let deltas = exp
+                        .read_deltas()
+                        .iter()
+                        .filter(|d| d.get("epoch").and_then(|v| v.as_u64()) == Some(epoch))
+                        .count();
                     println!(
-                        "snapshot: {} at experiment time {:.1}s{}",
+                        "snapshot: {} at experiment time {:.1}s{}{}",
                         if finished { "final" } else { "mid-run" },
                         s.get("now").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                        if deltas > 0 {
+                            format!(" (+{deltas} incremental delta record(s))")
+                        } else {
+                            String::new()
+                        },
                         if finished { "" } else { " — resumable with `tune run --resume`" },
                     );
                 }

@@ -1,0 +1,89 @@
+//! Metric-name interning: the id ↔ name table behind the allocation-lean
+//! result hot path.
+//!
+//! Trainables report metrics by name (`"accuracy"`, `"loss"`), but the
+//! coordinator consumes millions of result rows per experiment and the
+//! set of distinct names is tiny and stable. A [`MetricSchema`] interns
+//! each name once per experiment; everything downstream of the executor
+//! boundary — [`crate::coordinator::trial::ResultRow`], schedulers,
+//! loggers, persistence — carries a compact [`MetricId`] instead of a
+//! heap-allocated string key, so per-result work is integer compares and
+//! memcpys, not `BTreeMap<String, _>` churn.
+//!
+//! Ids are **process-ephemeral**: snapshots and JSONL logs always write
+//! metric *names* (robust, human-readable, schema-evolution-proof) and
+//! re-intern on load, so the on-disk formats are unchanged and ids never
+//! need to survive a restart.
+
+use std::collections::HashMap;
+
+/// Compact per-experiment identifier of a metric name.
+pub type MetricId = u32;
+
+/// Bidirectional metric-name table: `intern` is amortized O(1) with no
+/// allocation for already-known names (the steady state after the first
+/// result of an experiment).
+#[derive(Clone, Debug, Default)]
+pub struct MetricSchema {
+    names: Vec<String>,
+    index: HashMap<String, MetricId>,
+}
+
+impl MetricSchema {
+    /// An empty schema.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Id of `name`, interning it on first sight. Steady state (name
+    /// already known) is a hash lookup with zero allocations.
+    pub fn intern(&mut self, name: &str) -> MetricId {
+        if let Some(id) = self.index.get(name) {
+            return *id;
+        }
+        let id = self.names.len() as MetricId;
+        self.names.push(name.to_string());
+        self.index.insert(name.to_string(), id);
+        id
+    }
+
+    /// Id of `name` if it has been interned (read-only view).
+    pub fn lookup(&self, name: &str) -> Option<MetricId> {
+        self.index.get(name).copied()
+    }
+
+    /// Name behind an id (None for ids this schema never issued).
+    pub fn name(&self, id: MetricId) -> Option<&str> {
+        self.names.get(id as usize).map(|s| s.as_str())
+    }
+
+    /// Number of interned names.
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    /// True when no names have been interned yet.
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_is_stable_and_dense() {
+        let mut s = MetricSchema::new();
+        let a = s.intern("accuracy");
+        let b = s.intern("loss");
+        assert_eq!(a, 0);
+        assert_eq!(b, 1);
+        assert_eq!(s.intern("accuracy"), a);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.name(a), Some("accuracy"));
+        assert_eq!(s.name(7), None);
+        assert_eq!(s.lookup("loss"), Some(b));
+        assert_eq!(s.lookup("nope"), None);
+    }
+}

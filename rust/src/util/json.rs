@@ -88,21 +88,17 @@ impl Json {
         out
     }
 
+    /// Serialize into a caller-provided buffer — the streaming encoder
+    /// the JSONL hot path uses to reuse one allocation across lines.
+    pub fn write_to(&self, out: &mut String) {
+        self.write(out);
+    }
+
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(n) => {
-                if n.is_finite() {
-                    if *n == n.trunc() && n.abs() < 1e15 {
-                        let _ = write!(out, "{}", *n as i64);
-                    } else {
-                        let _ = write!(out, "{n}");
-                    }
-                } else {
-                    out.push_str("null"); // JSON has no NaN/Inf
-                }
-            }
+            Json::Num(n) => write_json_f64(*n, out),
             Json::Str(s) => write_escaped(s, out),
             Json::Arr(a) => {
                 out.push('[');
@@ -128,6 +124,28 @@ impl Json {
             }
         }
     }
+}
+
+/// Append the JSON encoding of an `f64` to `out` — integers below 1e15
+/// print exactly (no `.0`), non-finite values become `null` (JSON has no
+/// NaN/Inf). This is [`Json::Num`]'s formatting, exposed so streaming
+/// encoders produce byte-identical output without building a [`Json`].
+pub fn write_json_f64(n: f64, out: &mut String) {
+    if n.is_finite() {
+        if n == n.trunc() && n.abs() < 1e15 {
+            let _ = write!(out, "{}", n as i64);
+        } else {
+            let _ = write!(out, "{n}");
+        }
+    } else {
+        out.push_str("null");
+    }
+}
+
+/// Append the JSON string encoding (quotes + escapes) of `s` to `out` —
+/// [`Json::Str`]'s formatting for streaming encoders.
+pub fn write_json_str(s: &str, out: &mut String) {
+    write_escaped(s, out);
 }
 
 fn write_escaped(s: &str, out: &mut String) {
@@ -389,5 +407,21 @@ mod tests {
     fn integer_formatting_is_exact() {
         assert_eq!(Json::Num(42.0).to_string(), "42");
         assert_eq!(Json::Num(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn streaming_writers_match_tree_encoding() {
+        for n in [0.0, -1.0, 42.0, 0.5, -1.5e3, 1e16, f64::NAN, f64::INFINITY] {
+            let mut buf = String::new();
+            write_json_f64(n, &mut buf);
+            assert_eq!(buf, Json::Num(n).to_string(), "{n}");
+        }
+        let mut buf = String::new();
+        write_json_str("a\"b\\c\nd\u{1}", &mut buf);
+        assert_eq!(buf, Json::Str("a\"b\\c\nd\u{1}".into()).to_string());
+        let v = parse(r#"{"a":[1,{"b":"x"}],"c":-1.5}"#).unwrap();
+        let mut buf = String::from("seed:");
+        v.write_to(&mut buf);
+        assert_eq!(buf, format!("seed:{}", v.to_string()));
     }
 }

@@ -1,8 +1,9 @@
-//! Shared infrastructure: JSON, deterministic RNG, NaN-proof metric
-//! ordering, micro-bench harness, property-test harness, and the
-//! Table-1 LoC counter.
+//! Shared infrastructure: JSON, metric-name interning, deterministic
+//! RNG, NaN-proof metric ordering, micro-bench harness, property-test
+//! harness, and the Table-1 LoC counter.
 
 pub mod bench;
+pub mod intern;
 pub mod json;
 pub mod loc;
 pub mod order;

@@ -40,6 +40,34 @@ pub fn desc(a: f64, b: f64) -> Ordering {
     asc(b, a)
 }
 
+/// An `f64` wrapped in the [`asc`] total order, so metric values can
+/// live in `BinaryHeap`s and other `Ord`-requiring structures — the
+/// incremental order-statistics the schedulers keep per rung/iteration
+/// are built on this. `NaN` ranks strictly smallest, like everywhere
+/// else in the coordinator.
+#[derive(Clone, Copy, Debug)]
+pub struct OrdF64(
+    /// The wrapped value.
+    pub f64,
+);
+
+impl PartialEq for OrdF64 {
+    fn eq(&self, other: &Self) -> bool {
+        asc(self.0, other.0) == Ordering::Equal
+    }
+}
+impl Eq for OrdF64 {}
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> Ordering {
+        asc(self.0, other.0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -69,6 +97,18 @@ mod tests {
         assert_eq!(v[1], 0.3);
         assert_eq!(v[2], 0.1);
         assert!(v[3].is_nan() && v[4].is_nan());
+    }
+
+    #[test]
+    fn ordf64_is_heap_safe_with_nans() {
+        let mut h = std::collections::BinaryHeap::new();
+        for v in [0.3, f64::NAN, 0.9, f64::NEG_INFINITY] {
+            h.push(OrdF64(v));
+        }
+        assert_eq!(h.pop().unwrap().0, 0.9); // max-heap, NaN never max
+        assert_eq!(h.pop().unwrap().0, 0.3);
+        assert_eq!(h.pop().unwrap().0, f64::NEG_INFINITY);
+        assert!(h.pop().unwrap().0.is_nan()); // NaN drains last
     }
 
     #[test]

@@ -1,0 +1,254 @@
+//! Delta-snapshot durability end to end: periodic persistence writes a
+//! base snapshot plus compact fsync'd delta records, a crash at any
+//! snapshot boundary resumes to the identical outcome an uninterrupted
+//! run produces, compaction rolls deltas into fresh bases, and a
+//! pre-delta directory (full `snapshot.json` only) still restores.
+
+use std::path::PathBuf;
+
+use tune::coordinator::persist::ExperimentDir;
+use tune::coordinator::spec::{SearchSpace, SpaceBuilder};
+use tune::coordinator::{
+    build_runner, run_experiments, ExecMode, ExperimentResult, ExperimentSpec, Mode, RunOptions,
+    SchedulerKind, SearchKind,
+};
+use tune::ray::{Cluster, Resources};
+use tune::trainable::factory;
+use tune::trainable::synthetic::CurveTrainable;
+
+const SAMPLES: usize = 12;
+const ITERS: u64 = 27;
+const SEED: u64 = 33;
+
+fn spec() -> ExperimentSpec {
+    let mut spec = ExperimentSpec::named("delta-asha");
+    spec.metric = "accuracy".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = SAMPLES;
+    spec.max_iterations_per_trial = ITERS;
+    spec.seed = SEED;
+    spec.max_concurrent = 1; // sequential events: bit-exact resume
+    spec.checkpoint_freq = 5;
+    spec
+}
+
+fn space() -> SearchSpace {
+    SpaceBuilder::new()
+        .loguniform("lr", 1e-4, 1.0)
+        .uniform("momentum", 0.8, 0.99)
+        .build()
+}
+
+fn scheduler() -> SchedulerKind {
+    SchedulerKind::Asha { grace_period: 1, reduction_factor: 3.0, max_t: ITERS }
+}
+
+fn opts(exp_dir: Option<PathBuf>, snapshot_every: u64, resume: bool) -> RunOptions {
+    RunOptions {
+        cluster: Cluster::uniform(2, Resources::cpu(4.0)),
+        exec: ExecMode::Sim,
+        experiment_dir: exp_dir,
+        snapshot_every,
+        resume,
+        ..Default::default()
+    }
+}
+
+fn run(exp_dir: Option<PathBuf>, snapshot_every: u64, resume: bool) -> ExperimentResult {
+    run_experiments(
+        spec(),
+        space(),
+        scheduler(),
+        SearchKind::Random,
+        factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+        opts(exp_dir, snapshot_every, resume),
+    )
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("tune_delta_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn assert_same_outcome(resumed: &ExperimentResult, plain: &ExperimentResult) {
+    assert_eq!(resumed.trials.len(), plain.trials.len());
+    assert_eq!(resumed.best, plain.best, "best trial id diverged");
+    assert_eq!(resumed.best_metric(), plain.best_metric(), "best metric diverged");
+    assert_eq!(resumed.best_config(), plain.best_config(), "best config diverged");
+    for (a, b) in resumed.trials.values().zip(plain.trials.values()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.config, b.config, "trial {} config diverged", a.id);
+        assert_eq!(a.status, b.status, "trial {} status diverged", a.id);
+        assert_eq!(a.iteration, b.iteration, "trial {} iterations diverged", a.id);
+        assert_eq!(a.best_metric, b.best_metric, "trial {} metric diverged", a.id);
+    }
+    assert_eq!(resumed.stats.results, plain.stats.results);
+}
+
+/// Crash while the durable state is base + several deltas; the resumed
+/// run must fold them and finish identically to an uninterrupted run.
+#[test]
+fn crash_with_pending_deltas_resumes_identically() {
+    let plain = run(None, 7, false);
+    let dir = tmpdir("fold");
+    {
+        let mut runner = build_runner(
+            spec(),
+            space(),
+            scheduler(),
+            SearchKind::Random,
+            factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+            opts(Some(dir.clone()), 7, false),
+        );
+        // 5 periodic snapshots: 1 base + 4 delta records.
+        assert!(runner.run_to_crash(5), "experiment finished before the crash point");
+    }
+    assert!(dir.join("snapshot.json").exists());
+    let exp = ExperimentDir::open(dir.clone());
+    let deltas = exp.read_deltas();
+    assert_eq!(deltas.len(), 4, "expected 4 delta records after 5 snapshots");
+    // Deltas are compact. The first delta's window is deterministic:
+    // under max_concurrent=1 trial 0 (alone, always top-1 at its rungs)
+    // is the only trial advancing through results 8..=14, so exactly
+    // one trial is dirty. Later windows may churn through several
+    // one-result ASHA casualties, but never the whole table.
+    let first = deltas[0].get("trials").unwrap().as_arr().unwrap();
+    assert_eq!(first.len(), 1, "first delta window should only touch trial 0");
+    for d in &deltas {
+        let trials = d.get("trials").unwrap().as_arr().unwrap();
+        assert!(
+            trials.len() < SAMPLES,
+            "delta carries all {SAMPLES} trials — not incremental"
+        );
+    }
+
+    let resumed = run(Some(dir.clone()), 7, true);
+    assert!(resumed.stats.replayed > 0, "the crash should have forced a replay");
+    assert_same_outcome(&resumed, &plain);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// More snapshots than DELTAS_PER_BASE: a new base must be written
+/// (compaction), the delta file restarted, and resume still exact.
+#[test]
+fn compaction_rolls_deltas_into_a_new_base() {
+    let plain = run(None, 1, false);
+    let dir = tmpdir("compact");
+    {
+        let mut runner = build_runner(
+            spec(),
+            space(),
+            scheduler(),
+            SearchKind::Random,
+            factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+            opts(Some(dir.clone()), 1, false),
+        );
+        // 36 snapshots at every result: base, 32 deltas, base (the
+        // compaction at snapshot 34), 2 deltas. 36 stays safely below
+        // the worst-case result count of this seeded ASHA run.
+        assert!(runner.run_to_crash(36), "experiment finished before the crash point");
+    }
+    let exp = ExperimentDir::open(dir.clone());
+    let base = exp.read_snapshot().unwrap();
+    assert_eq!(
+        base.get("delta_epoch").and_then(|v| v.as_u64()),
+        Some(2),
+        "expected a second (compacted) base"
+    );
+    let deltas = exp.read_deltas();
+    assert_eq!(deltas.len(), 2);
+    assert!(deltas.iter().all(|d| d.get("epoch").and_then(|v| v.as_u64()) == Some(2)));
+
+    let resumed = run(Some(dir.clone()), 1, true);
+    assert_same_outcome(&resumed, &plain);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Crash-window safety: a new base already written but the old delta
+/// file not yet cleared. Stale-epoch records must be skipped, not
+/// folded onto the new base.
+#[test]
+fn stale_epoch_deltas_are_ignored() {
+    let plain = run(None, 7, false);
+    let dir = tmpdir("stale");
+    {
+        let mut runner = build_runner(
+            spec(),
+            space(),
+            scheduler(),
+            SearchKind::Random,
+            factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+            opts(Some(dir.clone()), 7, false),
+        );
+        assert!(runner.run_to_crash(3)); // base + 2 deltas, epoch 1
+    }
+    let exp = ExperimentDir::open(dir.clone());
+    // Forge the crash window: bump the base's epoch as if a newer base
+    // had landed right before the crash, stranding epoch-1 deltas.
+    // (Folding them anyway would double-apply scheduler/trial state.)
+    let mut base = exp.read_snapshot().unwrap();
+    if let tune::util::json::Json::Obj(m) = &mut base {
+        m.insert("delta_epoch".into(), tune::util::json::Json::Num(2.0));
+    }
+    exp.write_snapshot(&base).unwrap();
+    let resumed = run(Some(dir.clone()), 7, true);
+    // Resume continues from the base's state, skipping the stranded
+    // epoch-1 deltas — exactly what a crash right after the first base
+    // would have resumed from, so the deterministic outcome still
+    // matches the uninterrupted run (folding the stale deltas would
+    // have double-applied scheduler and trial state instead).
+    assert_same_outcome(&resumed, &plain);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Backward compatibility: a directory holding only a pre-delta FULL
+/// snapshot (no `delta_epoch`, no delta file) restores exactly as the
+/// old format did.
+#[test]
+fn old_full_snapshot_format_still_restores() {
+    let plain = run(None, 7, false);
+    let dir = tmpdir("oldfmt");
+    {
+        let mut runner = build_runner(
+            spec(),
+            space(),
+            scheduler(),
+            SearchKind::Random,
+            factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+            opts(Some(dir.clone()), 7, false),
+        );
+        assert!(runner.run_to_crash(1)); // exactly one snapshot: the base
+    }
+    let exp = ExperimentDir::open(dir.clone());
+    assert!(exp.read_deltas().is_empty());
+    // Rewrite the base as the PRE-DELTA format: strip the epoch stamp.
+    let mut base = exp.read_snapshot().unwrap();
+    if let tune::util::json::Json::Obj(m) = &mut base {
+        assert!(m.remove("delta_epoch").is_some());
+    }
+    exp.write_snapshot(&base).unwrap();
+
+    let resumed = run(Some(dir.clone()), 7, true);
+    assert_same_outcome(&resumed, &plain);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A finished experiment ends on a clean base: no delta file remains,
+/// and `--resume` is a no-op reproducing the result.
+#[test]
+fn finished_experiment_leaves_no_deltas() {
+    let dir = tmpdir("finish");
+    let first = run(Some(dir.clone()), 7, false);
+    let exp = ExperimentDir::open(dir.clone());
+    assert!(exp.read_deltas().is_empty(), "final base must clear the delta file");
+    assert_eq!(
+        exp.read_snapshot().unwrap().get("finished").and_then(|v| v.as_bool()),
+        Some(true)
+    );
+    let again = run(Some(dir.clone()), 7, true);
+    assert_eq!(again.best, first.best);
+    assert_eq!(again.best_metric(), first.best_metric());
+    assert_eq!(again.stats.replayed, 0);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -184,7 +184,7 @@ fn metric_target_min_mode() {
     assert_eq!(res.count(TrialStatus::Completed), 8);
     assert!(res.total_iterations() < 8 * 10_000);
     for t in res.trials.values() {
-        let last = t.last_result.as_ref().unwrap().metric("loss").unwrap();
+        let last = t.last_result.as_ref().unwrap().metric(&res.schema, "loss").unwrap();
         assert!(last <= 0.31, "trial {} stopped at loss {last}", t.id);
     }
 }

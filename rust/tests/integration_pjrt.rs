@@ -127,7 +127,7 @@ fn transformer_lm_loss_decreases() {
     svc.shutdown();
     let t = res.trials.values().next().unwrap();
     assert_eq!(t.status, TrialStatus::Completed);
-    let final_loss = t.last_result.as_ref().unwrap().metric("loss").unwrap();
+    let final_loss = t.last_result.as_ref().unwrap().metric(&res.schema, "loss").unwrap();
     // ln(128) = 4.85 at init; the affine chain has ~ln(4)=1.39 entropy.
     // 100 steps at lr=0.3 reaches < 2.5 (see EXPERIMENTS.md).
     assert!(final_loss < 2.5, "loss barely moved: {final_loss}");

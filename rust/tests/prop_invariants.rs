@@ -7,6 +7,7 @@ use tune::coordinator::schedulers::{
 use tune::coordinator::spec::{expand_grid, grid_size, sample_config, ParamDist, SpaceBuilder};
 use tune::coordinator::trial::{Config, Mode, ParamValue, ResultRow, Trial, TrialStatus};
 use tune::ray::{Cluster, Resources, TwoLevelScheduler};
+use tune::util::intern::MetricId;
 use tune::util::prop::check;
 use tune::util::rng::Rng;
 
@@ -104,16 +105,17 @@ fn prop_asha_promotion_rate_bounded() {
             values.sort_by(|a, b| b.partial_cmp(a).unwrap());
             values.dedup();
         }
+        const METRIC: MetricId = 0;
         let mut promoted = 0;
         let m = values.len();
         for (i, v) in values.into_iter().enumerate() {
             let id = i as u64;
             let mut t = Trial::new(id, Config::new(), Resources::cpu(1.0), id);
-            let row = ResultRow::new(1, 1.0).with("m", v);
+            let row = ResultRow::new(1, 1.0).with(METRIC, v);
             t.status = TrialStatus::Running;
-            t.record(row.clone(), "m", Mode::Max);
+            t.record(row.clone(), METRIC, Mode::Max);
             trials.insert(id, t.clone());
-            let ctx = SchedulerCtx { trials: &trials, metric: "m", mode: Mode::Max };
+            let ctx = SchedulerCtx { trials: &trials, metric_id: METRIC, mode: Mode::Max };
             match s.on_result(&ctx, &t, &row) {
                 Decision::Stop => {}
                 _ => promoted += 1,
@@ -149,20 +151,21 @@ fn prop_median_never_stops_best() {
             let t = Trial::new(id, Config::new(), Resources::cpu(1.0), id);
             trials.insert(id, t);
         }
+        const METRIC: MetricId = 0;
         for iter in 1..=10u64 {
             for id in 0..n as u64 {
                 let v = qualities[id as usize] + rng.normal_scaled(0.0, 0.001);
-                let row = ResultRow::new(iter, iter as f64).with("acc", v);
+                let row = ResultRow::new(iter, iter as f64).with(METRIC, v);
                 {
                     let t = trials.get_mut(&id).unwrap();
                     if t.status != TrialStatus::Running {
                         continue;
                     }
-                    t.record(row.clone(), "acc", Mode::Max);
+                    t.record(row.clone(), METRIC, Mode::Max);
                     t.status = TrialStatus::Running;
                 }
                 let t = trials[&id].clone();
-                let ctx = SchedulerCtx { trials: &trials, metric: "acc", mode: Mode::Max };
+                let ctx = SchedulerCtx { trials: &trials, metric_id: METRIC, mode: Mode::Max };
                 let d = s.on_result(&ctx, &t, &row);
                 if let Decision::Stop = d {
                     assert_ne!(id, best, "stopped the best trial (quality {})", qualities[id as usize]);
@@ -191,11 +194,12 @@ fn prop_pbt_exploit_sources_are_top() {
             trials.insert(id, t);
         }
         // One full round of reports at iteration 1.
+        const METRIC: MetricId = 0;
         for id in 0..n as u64 {
-            let row = ResultRow::new(1, 1.0).with("score", scores[id as usize]);
-            trials.get_mut(&id).unwrap().record(row.clone(), "score", Mode::Max);
+            let row = ResultRow::new(1, 1.0).with(METRIC, scores[id as usize]);
+            trials.get_mut(&id).unwrap().record(row.clone(), METRIC, Mode::Max);
             let t = trials[&id].clone();
-            let ctx = SchedulerCtx { trials: &trials, metric: "score", mode: Mode::Max };
+            let ctx = SchedulerCtx { trials: &trials, metric_id: METRIC, mode: Mode::Max };
             if let Decision::Exploit { source, config } = s.on_result(&ctx, &t, &row) {
                 // Source strictly better than self.
                 assert!(
@@ -223,7 +227,7 @@ fn prop_checkpoint_gc_keeps_latest() {
         }
         for (trial, (id, byte)) in latest {
             assert_eq!(store.latest_for(trial), Some(id));
-            assert_eq!(store.get(id).unwrap(), &[byte]);
+            assert_eq!(&store.get(id).unwrap()[..], &[byte]);
         }
     });
 }
