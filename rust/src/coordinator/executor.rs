@@ -39,6 +39,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::trial::{Config, Trial, TrialId};
+use crate::ray::Resources;
 use crate::trainable::{StepOutput, Trainable, TrainableFactory};
 
 /// Completion events delivered to the runner.
@@ -60,6 +61,20 @@ pub enum ExecEvent {
     },
 }
 
+/// Outcome of executor-side capacity admission ([`Executor::admit`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Capacity reserved; the launch may proceed. The reservation is
+    /// released by [`Executor::halt`].
+    Granted,
+    /// Every worker that could hold this demand is currently full; the
+    /// trial should park as Pending and retry when capacity frees.
+    Exhausted,
+    /// No worker could *ever* hold this demand — the trial can never
+    /// run on this executor and should fail fast.
+    Infeasible,
+}
+
 /// The execution substrate interface the runner drives. Implementations
 /// differ in clock (virtual vs wall) and concurrency model, not
 /// semantics: launch, request asynchronous steps, collect completion
@@ -67,6 +82,17 @@ pub enum ExecEvent {
 pub trait Executor: Send {
     /// Seconds since experiment start (virtual or wall).
     fn now(&self) -> f64;
+
+    /// Capacity-aware admission: reserve executor-side room for a
+    /// trial's resource demand before launching it. The default grants
+    /// everything — the sim and thread executors model capacity purely
+    /// through the cluster substrate; pool executors built with
+    /// per-worker capacity vectors do a real vector fit (see
+    /// [`PoolExecutor::with_capacities`]). A granted reservation is
+    /// released by [`Executor::halt`].
+    fn admit(&mut self, _id: TrialId, _demand: &Resources) -> Admission {
+        Admission::Granted
+    }
 
     /// Instantiate the trial's trainable (optionally restoring). The
     /// blob is a shared checkpoint handle: passing it costs a refcount
@@ -89,7 +115,9 @@ pub trait Executor: Send {
     /// Runtime hyperparameter mutation.
     fn update_config(&mut self, id: TrialId, config: &Config);
 
-    /// Tear down the trial's trainable.
+    /// Tear down the trial's trainable and release any capacity
+    /// reservation made by [`Executor::admit`]. Safe to call for a
+    /// trial that was admitted but never launched (placement failed).
     fn halt(&mut self, id: TrialId);
 
     /// Number of trials currently holding a live trainable.
@@ -422,6 +450,83 @@ impl Drop for ThreadExecutor {
 trait PoolKey: Copy + Eq + std::hash::Hash + Send + 'static {}
 impl<T: Copy + Eq + std::hash::Hash + Send + 'static> PoolKey for T {}
 
+/// Per-worker capacity vectors plus current reservations — the
+/// executor-side half of resource admission. The cluster substrate
+/// models the *nodes* trials lease; this models the *worker processes*
+/// their trainables actually step on (e.g. 4 workers, two of them
+/// holding a GPU). Admission is a first-fit vector fit reusing
+/// [`Resources::fits`]; trainables still step on whichever thread
+/// steals the request — the fleet bounds how many live trainables of
+/// which shape coexist, not which thread runs them.
+struct WorkerFleet<K> {
+    /// Full capacity per worker (distinguishes Exhausted/Infeasible).
+    total: Vec<Resources>,
+    /// Unreserved remainder per worker.
+    free: Vec<Resources>,
+    /// Reservations: key -> (worker index, reserved demand).
+    assigned: HashMap<K, (usize, Resources)>,
+}
+
+impl<K: PoolKey> WorkerFleet<K> {
+    fn new(caps: Vec<Resources>) -> Self {
+        WorkerFleet { free: caps.clone(), total: caps, assigned: HashMap::new() }
+    }
+
+    /// Scarce dimensions `total` offers that `demand` leaves idle:
+    /// admission prefers the fitting worker that wastes the fewest (a
+    /// CPU-only trial must not occupy the GPU worker's CPUs while a
+    /// CPU-only worker has room — it would starve later GPU trials).
+    fn scarce_waste(total: &Resources, demand: &Resources) -> usize {
+        let mut waste = 0;
+        if total.gpu > 0.0 && demand.gpu <= 0.0 {
+            waste += 1;
+        }
+        for (k, v) in &total.custom {
+            if *v > 0.0 && demand.custom.get(k).map_or(true, |d| *d <= 0.0) {
+                waste += 1;
+            }
+        }
+        waste
+    }
+
+    /// Reserve `demand` under `key` on the fitting worker that wastes
+    /// the least scarce capacity (ties break to the lowest index —
+    /// deterministic).
+    fn admit(&mut self, key: K, demand: &Resources) -> Admission {
+        if self.assigned.contains_key(&key) {
+            // A re-launch without an intervening halt would double-book;
+            // treat the existing reservation as authoritative.
+            return Admission::Granted;
+        }
+        let mut best: Option<(usize, usize)> = None; // (waste, worker)
+        for (w, f) in self.free.iter().enumerate() {
+            if !f.fits(demand) {
+                continue;
+            }
+            let waste = Self::scarce_waste(&self.total[w], demand);
+            if best.map_or(true, |(b, _)| waste < b) {
+                best = Some((waste, w));
+            }
+        }
+        match best.map(|(_, w)| w) {
+            Some(w) => {
+                self.free[w].acquire(demand);
+                self.assigned.insert(key, (w, demand.clone()));
+                Admission::Granted
+            }
+            None if self.total.iter().any(|t| t.fits(demand)) => Admission::Exhausted,
+            None => Admission::Infeasible,
+        }
+    }
+
+    /// Release the reservation held under `key` (no-op if none).
+    fn release(&mut self, key: &K) {
+        if let Some((w, demand)) = self.assigned.remove(key) {
+            self.free[w].release(&demand);
+        }
+    }
+}
+
 /// Per-trial mailbox state inside a pool.
 enum Slot {
     /// Trainable parked between steps; synchronous ops may touch it.
@@ -633,13 +738,34 @@ pub struct PoolExecutor {
     /// Step requests queued but not yet answered by a [`RawEvent`].
     queued: usize,
     started: Instant,
+    /// Per-worker capacity vectors (None = capacity-oblivious: live
+    /// trials are bounded only by the cluster substrate, the original
+    /// M ≫ N pool contract).
+    fleet: Option<WorkerFleet<TrialId>>,
 }
 
 impl PoolExecutor {
     /// Spawn a pool of `workers` (min 1) threads over `factory`-built
-    /// trainables.
+    /// trainables, capacity-oblivious (admission always granted).
     pub fn new(factory: TrainableFactory, workers: usize) -> Self {
-        let workers = workers.max(1);
+        Self::build(factory, workers.max(1), None)
+    }
+
+    /// Spawn one worker per capacity vector in `caps`; admission
+    /// becomes a first-fit vector fit against those capacities, so e.g.
+    /// `[{cpu:8, gpu:1}, {cpu:8}]` holds at most two 0.5-GPU trials
+    /// (both on worker 0) however many CPU trials sit alongside them.
+    pub fn with_capacities(factory: TrainableFactory, caps: Vec<Resources>) -> Self {
+        let caps = if caps.is_empty() { vec![Resources::cpu(1.0)] } else { caps };
+        let workers = caps.len();
+        Self::build(factory, workers, Some(WorkerFleet::new(caps)))
+    }
+
+    fn build(
+        factory: TrainableFactory,
+        workers: usize,
+        fleet: Option<WorkerFleet<TrialId>>,
+    ) -> Self {
         let (injector_tx, injector_rx) = mpsc::channel::<(TrialId, u64)>();
         let injector_rx = Arc::new(Mutex::new(injector_rx));
         let (event_tx, event_rx) = mpsc::channel::<RawEvent<TrialId>>();
@@ -665,6 +791,7 @@ impl PoolExecutor {
             workers: handles,
             queued: 0,
             started: Instant::now(),
+            fleet,
         }
     }
 
@@ -677,6 +804,13 @@ impl PoolExecutor {
 impl Executor for PoolExecutor {
     fn now(&self) -> f64 {
         self.started.elapsed().as_secs_f64()
+    }
+
+    fn admit(&mut self, id: TrialId, demand: &Resources) -> Admission {
+        match &mut self.fleet {
+            Some(f) => f.admit(id, demand),
+            None => Admission::Granted,
+        }
     }
 
     fn launch(&mut self, trial: &Trial, restore: Option<Arc<[u8]>>) -> Result<(), String> {
@@ -726,6 +860,9 @@ impl Executor for PoolExecutor {
     }
 
     fn halt(&mut self, id: TrialId) {
+        if let Some(f) = &mut self.fleet {
+            f.release(&id);
+        }
         self.shared.halt_slot(id);
     }
 
@@ -804,6 +941,9 @@ struct SharedPoolInner {
     injector_tx: Mutex<Option<Sender<(SharedKey, u64)>>>,
     event_rx: Mutex<Receiver<RawEvent<SharedKey>>>,
     router: Mutex<Router>,
+    /// Shared per-worker capacity vectors; every experiment's handle
+    /// admits against the same fleet (None = capacity-oblivious).
+    fleet: Mutex<Option<WorkerFleet<SharedKey>>>,
 }
 
 impl SharedPoolInner {
@@ -845,9 +985,34 @@ pub struct SharedPool {
 }
 
 impl SharedPool {
-    /// Spawn a shared pool of `workers` (min 1) threads.
+    /// Spawn a shared pool of `workers` (min 1) threads,
+    /// capacity-oblivious (admission always granted).
     pub fn new(workers: usize) -> Self {
-        let workers = workers.max(1);
+        Self::build(workers.max(1), None)
+    }
+
+    /// Spawn one shared worker per capacity vector in `caps`; every
+    /// experiment's handle admits against the same fleet, so resource
+    /// admission is global across the multiplexed experiments.
+    pub fn with_capacities(caps: Vec<Resources>) -> Self {
+        let caps = if caps.is_empty() { vec![Resources::cpu(1.0)] } else { caps };
+        let workers = caps.len();
+        Self::build(workers, Some(WorkerFleet::new(caps)))
+    }
+
+    /// Sum of worker capacities (None when capacity-oblivious) — what
+    /// the hub splits into per-experiment resource shares.
+    pub fn total_capacity(&self) -> Option<Resources> {
+        self.inner.fleet.lock().unwrap().as_ref().map(|f| {
+            let mut sum = Resources::default();
+            for cap in &f.total {
+                sum.release(cap);
+            }
+            sum
+        })
+    }
+
+    fn build(workers: usize, fleet: Option<WorkerFleet<SharedKey>>) -> Self {
         let (injector_tx, injector_rx) = mpsc::channel::<(SharedKey, u64)>();
         let injector_rx = Arc::new(Mutex::new(injector_rx));
         let (event_tx, event_rx) = mpsc::channel::<RawEvent<SharedKey>>();
@@ -860,6 +1025,7 @@ impl SharedPool {
                 queued: HashMap::new(),
                 total_queued: 0,
             }),
+            fleet: Mutex::new(fleet),
         });
         let handles = (0..workers)
             .map(|w| {
@@ -969,6 +1135,13 @@ impl Executor for SharedPoolHandle {
         self.started.elapsed().as_secs_f64()
     }
 
+    fn admit(&mut self, id: TrialId, demand: &Resources) -> Admission {
+        match self.inner.fleet.lock().unwrap().as_mut() {
+            Some(f) => f.admit((self.exp, id), demand),
+            None => Admission::Granted,
+        }
+    }
+
     fn launch(&mut self, trial: &Trial, restore: Option<Arc<[u8]>>) -> Result<(), String> {
         let t = build_trainable(&self.factory, trial, restore)?;
         self.inner.shared.launch_slot((self.exp, trial.id), t);
@@ -1033,6 +1206,9 @@ impl Executor for SharedPoolHandle {
     }
 
     fn halt(&mut self, id: TrialId) {
+        if let Some(f) = self.inner.fleet.lock().unwrap().as_mut() {
+            f.release(&(self.exp, id));
+        }
         self.inner.shared.halt_slot((self.exp, id));
     }
 
@@ -1417,6 +1593,76 @@ mod tests {
             }
         }
         assert_eq!(seen.len(), 16);
+    }
+
+    #[test]
+    fn pool_capacity_admission_is_a_vector_fit() {
+        // Workers: one GPU-bearing, one CPU-only.
+        let mut ex = PoolExecutor::with_capacities(
+            const_factory(),
+            vec![Resources::cpu_gpu(2.0, 1.0), Resources::cpu(2.0)],
+        );
+        assert_eq!(ex.num_workers(), 2);
+        let half_gpu = Resources::cpu_gpu(1.0, 0.5);
+        // Two half-GPU trials fit (both on worker 0), a third is
+        // Exhausted (worker 0 full, worker 1 has no GPU), and a
+        // 2-GPU demand can never run here.
+        assert_eq!(ex.admit(1, &half_gpu), Admission::Granted);
+        assert_eq!(ex.admit(2, &half_gpu), Admission::Granted);
+        assert_eq!(ex.admit(3, &half_gpu), Admission::Exhausted);
+        assert_eq!(ex.admit(4, &Resources::cpu_gpu(1.0, 2.0)), Admission::Infeasible);
+        // CPU-only demands still land on worker 1.
+        assert_eq!(ex.admit(5, &Resources::cpu(2.0)), Admission::Granted);
+        // Halt releases the reservation; the parked demand fits again.
+        ex.halt(1);
+        assert_eq!(ex.admit(3, &half_gpu), Admission::Granted);
+        // Re-admitting an already-admitted trial is idempotent.
+        assert_eq!(ex.admit(3, &half_gpu), Admission::Granted);
+    }
+
+    #[test]
+    fn pool_capacity_prefers_workers_without_scarce_dimensions() {
+        // CPU-only demands must not squat on the GPU worker while the
+        // CPU-only worker has room — that would starve later GPU trials.
+        let mut ex = PoolExecutor::with_capacities(
+            const_factory(),
+            vec![Resources::cpu_gpu(2.0, 1.0), Resources::cpu(2.0)],
+        );
+        assert_eq!(ex.admit(1, &Resources::cpu(1.0)), Admission::Granted);
+        assert_eq!(ex.admit(2, &Resources::cpu(1.0)), Admission::Granted);
+        // Worker 1 (CPU-only) absorbed both; the GPU worker is intact.
+        assert_eq!(ex.admit(3, &Resources::cpu_gpu(2.0, 1.0)), Admission::Granted);
+        // CPU demands overflow onto the GPU worker only when forced.
+        assert_eq!(ex.admit(4, &Resources::cpu(1.0)), Admission::Exhausted);
+        ex.halt(3);
+        assert_eq!(ex.admit(4, &Resources::cpu(1.0)), Admission::Granted);
+    }
+
+    #[test]
+    fn pool_without_capacities_admits_everything() {
+        let mut ex = PoolExecutor::new(const_factory(), 2);
+        for id in 0..100 {
+            assert_eq!(ex.admit(id, &Resources::cpu_gpu(64.0, 64.0)), Admission::Granted);
+        }
+    }
+
+    #[test]
+    fn shared_pool_capacity_is_global_across_experiments() {
+        let mut pool = SharedPool::with_capacities(vec![Resources::cpu(2.0)]);
+        assert_eq!(pool.total_capacity(), Some(Resources::cpu(2.0)));
+        let mut a = pool.handle(const_factory());
+        let mut b = pool.handle(const_factory());
+        let one = Resources::cpu(1.0);
+        assert_eq!(a.admit(0, &one), Admission::Granted);
+        assert_eq!(b.admit(0, &one), Admission::Granted);
+        // Same trial id, different experiment: namespaced, and the
+        // shared fleet is now full for either experiment.
+        assert_eq!(a.admit(1, &one), Admission::Exhausted);
+        assert_eq!(b.admit(1, &one), Admission::Exhausted);
+        assert_eq!(b.admit(2, &Resources::cpu(3.0)), Admission::Infeasible);
+        // One experiment's halt frees capacity for the other.
+        a.halt(0);
+        assert_eq!(b.admit(1, &one), Admission::Granted);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! initial set of trials, and a trial scheduler."
 
 use crate::logger::{JsonlLogger, ProgressReporter};
-use crate::ray::{Cluster, FaultPlan, Resources};
+use crate::ray::{AutoscalePolicy, Cluster, FaultPlan, Resources};
 use crate::trainable::TrainableFactory;
 use crate::util::json::Json;
 
@@ -214,6 +214,18 @@ pub struct RunOptions {
     /// uninterrupted run would have reached. Starts fresh (with a note)
     /// when the directory holds no snapshot yet.
     pub resume: bool,
+    /// Elastic autoscaling policy for the cluster (None = fixed size):
+    /// scale up on sustained unplaceable queue pressure, drain and
+    /// retire idle/low-utilization nodes with checkpoint-then-requeue
+    /// preemption.
+    pub autoscale: Option<AutoscalePolicy>,
+    /// Per-worker capacity vectors for `ExecMode::Pool` (None =
+    /// capacity-oblivious workers, the historical behavior): admission
+    /// of live trainables becomes a first-fit vector fit of
+    /// `resources_per_trial` against these, so e.g. only GPU-bearing
+    /// workers ever hold GPU trials. Overrides the pool's worker count
+    /// with `worker_caps.len()`.
+    pub worker_caps: Option<Vec<Resources>>,
 }
 
 impl Default for RunOptions {
@@ -226,6 +238,8 @@ impl Default for RunOptions {
             experiment_dir: None,
             snapshot_every: 50,
             resume: false,
+            autoscale: None,
+            worker_caps: None,
         }
     }
 }
@@ -250,6 +264,9 @@ pub(crate) fn manifest_json(
         ),
         ("num_samples", Json::Num(spec.num_samples as f64)),
         ("max_iterations_per_trial", Json::Num(spec.max_iterations_per_trial as f64)),
+        // Informational (not part of resume validation): lets `analyze`
+        // report what each trial demanded.
+        ("resources_per_trial", spec.resources_per_trial.to_json()),
         ("seed", u64_to_json(spec.seed)),
         ("scheduler", Json::Str(scheduler.label().into())),
         ("search", Json::Str(search.label().into())),
@@ -278,15 +295,23 @@ pub fn build_runner(
         experiment_dir,
         snapshot_every,
         resume,
+        autoscale,
+        worker_caps,
     } = opts;
-    let executor: Box<dyn Executor> = match exec {
-        ExecMode::Sim => Box::new(SimExecutor::new(factory)),
-        ExecMode::Threads => Box::new(ThreadExecutor::new(factory)),
-        ExecMode::Pool { workers } => Box::new(PoolExecutor::new(factory, workers)),
+    let executor: Box<dyn Executor> = match (exec, worker_caps) {
+        (ExecMode::Sim, _) => Box::new(SimExecutor::new(factory)),
+        (ExecMode::Threads, _) => Box::new(ThreadExecutor::new(factory)),
+        (ExecMode::Pool { .. }, Some(caps)) => {
+            Box::new(PoolExecutor::with_capacities(factory, caps))
+        }
+        (ExecMode::Pool { workers }, None) => Box::new(PoolExecutor::new(factory, workers)),
     };
     let sched = scheduler.build(spec.seed);
     let search_alg = search.build(space, spec.num_samples);
     let mut runner = TrialRunner::new(spec, sched, search_alg, executor, cluster);
+    if let Some(policy) = autoscale {
+        runner.set_autoscaler(policy);
+    }
 
     if let Some(root) = experiment_dir {
         let dir = ExperimentDir::new(root.clone()).expect("create experiment dir");

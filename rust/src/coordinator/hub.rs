@@ -32,7 +32,7 @@
 use std::time::{Duration, Instant};
 
 use crate::logger::JsonlLogger;
-use crate::ray::{Cluster, Resources};
+use crate::ray::{AutoscalePolicy, Cluster, Resources};
 use crate::trainable::TrainableFactory;
 use crate::util::json::Json;
 
@@ -59,6 +59,8 @@ pub struct Submission {
     /// Simulated cluster the experiment's trials lease resources from
     /// (per-experiment, like every other piece of runner state).
     pub cluster: Cluster,
+    /// Elastic autoscaling of the experiment's cluster (None = fixed).
+    pub autoscale: Option<AutoscalePolicy>,
     /// Fair-share weight (min 1): slots are split proportionally.
     pub weight: u64,
     /// Durable experiment directory (JSONL logs, checkpoint spill,
@@ -87,6 +89,7 @@ impl Submission {
             search,
             factory,
             cluster: Cluster::uniform(1, Resources::cpu(8.0)),
+            autoscale: None,
             weight: 1,
             experiment_dir: None,
             snapshot_every: 50,
@@ -162,9 +165,23 @@ impl ExperimentHub {
     /// (0 = unbounded: each experiment is limited only by its own
     /// `max_concurrent` and cluster capacity).
     pub fn new(workers: usize, max_live: usize) -> Self {
+        Self::over(SharedPool::new(workers), max_live)
+    }
+
+    /// A hub whose shared pool carries per-worker capacity vectors: the
+    /// fleet admits live trainables by vector fit, and fair share is
+    /// additionally dealt as *resource-weighted* shares of the total
+    /// capacity (each experiment's running demands must fit inside its
+    /// weighted slice of the fleet, with one running trial always
+    /// allowed).
+    pub fn with_capacities(caps: Vec<Resources>, max_live: usize) -> Self {
+        Self::over(SharedPool::with_capacities(caps), max_live)
+    }
+
+    fn over(pool: SharedPool, max_live: usize) -> Self {
         ExperimentHub {
             experiments: Vec::new(),
-            pool: SharedPool::new(workers),
+            pool,
             max_live,
             rr_cursor: 0,
             occ_sum: 0.0,
@@ -205,6 +222,9 @@ impl ExperimentHub {
         let search = sub.search.build(sub.space, sub.spec.num_samples);
         let mut runner =
             TrialRunner::new(sub.spec, scheduler, search, Box::new(handle), sub.cluster);
+        if let Some(policy) = sub.autoscale {
+            runner.set_autoscaler(policy);
+        }
         if let Some((root, dir)) = durable {
             let manifest = manifest_json(
                 &runner.spec,
@@ -285,6 +305,20 @@ impl ExperimentHub {
             .collect();
         if active.is_empty() {
             return;
+        }
+        // Resource-weighted shares (the vector generalization of slot
+        // quotas): on a capacitated pool every active experiment gets a
+        // `weight / total_weight` slice of the fleet's total capacity.
+        // The runner enforces "running demands fit inside the slice",
+        // with one running trial always allowed — the same ≥1 guarantee
+        // the slot floor provides, so fault recovery cannot deadlock.
+        let capacity = self.pool.total_capacity();
+        let total_w_f: f64 = active.iter().map(|&i| self.experiments[i].weight as f64).sum();
+        for &i in &active {
+            let share = capacity
+                .as_ref()
+                .map(|cap| cap.scaled(self.experiments[i].weight as f64 / total_w_f));
+            self.experiments[i].runner.set_resource_share(share);
         }
         if self.max_live == 0 {
             for &i in &active {
@@ -420,6 +454,7 @@ impl ExperimentHub {
             .experiments
             .iter()
             .map(|s| {
+                let util = s.runner.utilization();
                 let (trials, running, best) = match &s.result {
                     Some(r) => (r.trials.len(), 0, r.best_metric()),
                     None => {
@@ -453,6 +488,11 @@ impl ExperimentHub {
                         ),
                     ),
                     ("best_metric", best.map(Json::Num).unwrap_or(Json::Null)),
+                    // Cluster utilization (SchedulerCtx exposes the same
+                    // snapshot to schedulers; `tune status` prints it).
+                    ("util_cpu", Json::Num(util.cpu_frac())),
+                    ("util_gpu", Json::Num(util.gpu_frac())),
+                    ("nodes_alive", Json::Num(util.nodes_alive as f64)),
                 ])
             })
             .collect();
@@ -530,6 +570,35 @@ mod tests {
         assert_eq!(results.len(), 3);
         for (_, r) in &results {
             assert_eq!(r.trials.len(), 2);
+        }
+    }
+
+    #[test]
+    fn capacitated_hub_deals_resource_weighted_shares() {
+        // Fleet: 2 workers x 2 cpus = 4 cpus total. Weights 3:1 give
+        // the experiments cpu shares of 3.0 and 1.0; the lighter one
+        // still always gets its guaranteed single running trial. Both
+        // must complete despite the 1-cpu-per-trial demands contending
+        // for the fleet.
+        let mut hub = ExperimentHub::with_capacities(
+            vec![Resources::cpu(2.0), Resources::cpu(2.0)],
+            8,
+        );
+        let mut heavy = curve_submission("heavy", 1, 4, 5);
+        heavy.weight = 3;
+        hub.submit(heavy).unwrap();
+        let mut light = curve_submission("light", 2, 4, 5);
+        light.weight = 1;
+        hub.submit(light).unwrap();
+        let results = hub.run_all();
+        assert_eq!(results.len(), 2);
+        for (name, r) in &results {
+            assert_eq!(r.trials.len(), 4, "{name}");
+            assert_eq!(
+                r.count(crate::coordinator::trial::TrialStatus::Completed),
+                4,
+                "{name}"
+            );
         }
     }
 

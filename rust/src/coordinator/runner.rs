@@ -14,12 +14,15 @@ use std::sync::Arc;
 
 use crate::checkpoint::CheckpointStore;
 use crate::logger::ResultLogger;
-use crate::ray::{Cluster, FaultInjector, LeaseId, NodeId, PlacementStats, TwoLevelScheduler};
+use crate::ray::{
+    AutoscaleAction, AutoscalePolicy, Autoscaler, Cluster, FaultInjector, LeaseId, NodeId,
+    PlacementStats, Resources, TwoLevelScheduler, Utilization,
+};
 use crate::util::intern::{MetricId, MetricSchema};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-use super::executor::{ExecEvent, Executor};
+use super::executor::{Admission, ExecEvent, Executor};
 use super::experiment::ExperimentSpec;
 use super::persist::{
     id_map_from_json, id_map_to_json, u64_from_json, u64_to_json, ExperimentDir, FORMAT_VERSION,
@@ -57,6 +60,18 @@ pub struct RunnerStats {
     pub snapshots: u64,
     /// Results re-executed (and suppressed) while replaying after resume.
     pub replayed: u64,
+    /// Trials checkpointed and requeued off a draining node (autoscale
+    /// shrink preemption — never a lost trial).
+    pub preemptions: u64,
+    /// Nodes added by the elastic autoscaler.
+    pub scale_ups: u64,
+    /// Nodes retired by the elastic autoscaler.
+    pub scale_downs: u64,
+    /// Sum of per-result cluster CPU-utilization samples (divide by
+    /// `results` for the mean; reported by `tune run`/`analyze`).
+    pub util_cpu_sum: f64,
+    /// Sum of per-result cluster GPU-utilization samples.
+    pub util_gpu_sum: f64,
 }
 
 impl RunnerStats {
@@ -75,6 +90,11 @@ impl RunnerStats {
             ("handling_ns", Json::Num(self.handling_ns as f64)),
             ("snapshots", Json::Num(self.snapshots as f64)),
             ("replayed", Json::Num(self.replayed as f64)),
+            ("preemptions", Json::Num(self.preemptions as f64)),
+            ("scale_ups", Json::Num(self.scale_ups as f64)),
+            ("scale_downs", Json::Num(self.scale_downs as f64)),
+            ("util_cpu_sum", Json::Num(self.util_cpu_sum)),
+            ("util_gpu_sum", Json::Num(self.util_gpu_sum)),
         ])
     }
 
@@ -94,6 +114,12 @@ impl RunnerStats {
             handling_ns: g("handling_ns"),
             snapshots: g("snapshots"),
             replayed: g("replayed"),
+            preemptions: g("preemptions"),
+            scale_ups: g("scale_ups"),
+            scale_downs: g("scale_downs"),
+            // f64 sums (older snapshots simply lack the keys: default 0).
+            util_cpu_sum: j.get("util_cpu_sum").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            util_gpu_sum: j.get("util_gpu_sum").and_then(|v| v.as_f64()).unwrap_or(0.0),
         }
     }
 }
@@ -137,12 +163,36 @@ pub struct ExperimentResult {
     /// The experiment's metric-name table: resolves the interned ids in
     /// each trial's `last_result` back to names.
     pub schema: MetricSchema,
+    /// Set when `resources_per_trial` could never fit any node (current
+    /// or autoscalable): the experiment failed fast with this message,
+    /// launching zero trials.
+    pub infeasible: Option<String>,
+    /// Cluster utilization snapshot at experiment end — after an
+    /// autoscaled run, `nodes_alive`/totals reflect the cluster the run
+    /// actually ended on.
+    pub final_utilization: Utilization,
 }
 
 impl ExperimentResult {
     /// Best metric value observed across the experiment.
     pub fn best_metric(&self) -> Option<f64> {
         self.best.and_then(|id| self.trials[&id].best_metric)
+    }
+    /// Mean cluster CPU utilization sampled at every processed result.
+    pub fn mean_cpu_utilization(&self) -> f64 {
+        if self.stats.results == 0 {
+            0.0
+        } else {
+            self.stats.util_cpu_sum / self.stats.results as f64
+        }
+    }
+    /// Mean cluster GPU utilization sampled at every processed result.
+    pub fn mean_gpu_utilization(&self) -> f64 {
+        if self.stats.results == 0 {
+            0.0
+        } else {
+            self.stats.util_gpu_sum / self.stats.results as f64
+        }
     }
     /// Config of the best trial.
     pub fn best_config(&self) -> Option<&super::trial::Config> {
@@ -212,6 +262,32 @@ pub struct TrialRunner {
     /// (0 = none). Orthogonal to `spec.max_concurrent`: the effective
     /// limit is the stricter of the two.
     hub_slots: usize,
+    /// Resource-weighted fair share granted by the hub (None = no
+    /// quota): the sum of running trials' demands must fit inside it,
+    /// except that one running trial is always allowed — the vector
+    /// generalization of the slot-quota's ≥1 guarantee.
+    hub_share: Option<Resources>,
+    /// Sum of the demands of currently Running trials (share checks).
+    running_demand: Resources,
+    /// Elastic autoscaler, if enabled for this experiment.
+    autoscaler: Option<Autoscaler>,
+    /// Cached cluster utilization, refreshed on every lease change and
+    /// handed to every `SchedulerCtx`.
+    util: Utilization,
+    /// A pending trial failed *cluster* placement since the last
+    /// autoscale tick (the scale-up pressure signal).
+    unplaceable: bool,
+    /// A launch was refused by *executor* capacity (shared-pool worker
+    /// fleet full). Transient by construction — every reservation
+    /// belongs to a running trial whose halt frees it — so the hub must
+    /// keep the experiment alive rather than finalize it; and unlike
+    /// `unplaceable` it must NOT feed cluster scale-up pressure (new
+    /// nodes cannot relieve a full worker fleet).
+    exec_exhausted: bool,
+    /// Set by `preflight` when `resources_per_trial` can never fit.
+    infeasible: Option<String>,
+    /// Feasibility verified (caches the preflight on the happy path).
+    preflight_ok: bool,
 }
 
 impl TrialRunner {
@@ -227,6 +303,7 @@ impl TrialRunner {
         let fault = FaultInjector::new(spec.fault_plan.clone(), spec.seed ^ 0xFA17);
         let mut schema = MetricSchema::new();
         let metric_id = schema.intern(&spec.metric);
+        let util = cluster.utilization();
         TrialRunner {
             spec,
             scheduler,
@@ -256,7 +333,29 @@ impl TrialRunner {
             restored_epoch: 0,
             restored_deltas: 0,
             hub_slots: 0,
+            hub_share: None,
+            running_demand: Resources::default(),
+            autoscaler: None,
+            util,
+            unplaceable: false,
+            exec_exhausted: false,
+            infeasible: None,
+            preflight_ok: false,
         }
+    }
+
+    /// Enable elastic autoscaling of this experiment's cluster.
+    pub fn set_autoscaler(&mut self, policy: AutoscalePolicy) {
+        self.autoscaler = Some(Autoscaler::new(policy));
+    }
+
+    /// Current cluster utilization snapshot (what `tune status` shows).
+    pub fn utilization(&self) -> Utilization {
+        self.util
+    }
+
+    fn refresh_util(&mut self) {
+        self.util = self.cluster.utilization();
     }
 
     /// The experiment's metric-name table (interned ids <-> names).
@@ -298,6 +397,7 @@ impl TrialRunner {
                 trials: &self.trials,
                 metric_id: self.metric_id,
                 mode: self.spec.mode,
+                utilization: self.util,
             },
             &trial,
         );
@@ -318,6 +418,15 @@ impl TrialRunner {
         self.hub_slots = slots;
     }
 
+    /// Resource-weighted fair share (the vector generalization of
+    /// [`TrialRunner::set_slot_limit`]): the sum of running trials'
+    /// demands must fit inside `share`, except that one running trial
+    /// is always allowed — so fault recovery can never deadlock behind
+    /// a shrunken quota. `None` lifts the quota.
+    pub(crate) fn set_resource_share(&mut self, share: Option<Resources>) {
+        self.hub_share = share;
+    }
+
     /// Admission: launch trials while the scheduler has candidates and
     /// the cluster has room.
     fn admit(&mut self) {
@@ -336,6 +445,7 @@ impl TrialRunner {
                     trials: &self.trials,
                     metric_id: self.metric_id,
                     mode: self.spec.mode,
+                    utilization: self.util,
                 };
                 self.scheduler.choose_trial_to_run(&ctx)
             };
@@ -347,6 +457,7 @@ impl TrialRunner {
                     trials: &self.trials,
                     metric_id: self.metric_id,
                     mode: self.spec.mode,
+                    utilization: self.util,
                 };
                 choice = self.scheduler.choose_trial_to_run(&ctx);
             }
@@ -357,12 +468,49 @@ impl TrialRunner {
         }
     }
 
-    /// Place + start one trial. Returns false when out of resources.
+    /// Place + start one trial. Returns false when out of resources
+    /// (cluster, executor capacity or fair share) — the trial parks as
+    /// Pending; true otherwise (including a fail-fast Errored finish
+    /// for a demand that can never run anywhere).
     fn launch(&mut self, id: TrialId) -> bool {
         let demand = self.trials[&id].resources.clone();
+        // Fail fast: a demand that no node shape — current, restartable
+        // or autoscalable — could ever hold would otherwise park as
+        // Pending forever.
+        if let Err(e) = self.demand_feasible(&demand) {
+            eprintln!("trial {id}: demand {demand} is unsatisfiable: {e}");
+            self.finish(id, TrialStatus::Errored);
+            return true; // keep admitting others
+        }
+        // Hub fair share: the vector quota binds only past the first
+        // running trial (the ≥1 guarantee).
+        if let Some(share) = &self.hub_share {
+            if self.num_running() > 0 {
+                let mut want = self.running_demand.clone();
+                want.release(&demand);
+                if !share.fits(&want) {
+                    return false;
+                }
+            }
+        }
+        // Executor-side capacity (pool worker vectors).
+        match self.executor.admit(id, &demand) {
+            Admission::Granted => {}
+            Admission::Exhausted => {
+                self.exec_exhausted = true;
+                return false;
+            }
+            Admission::Infeasible => {
+                eprintln!("trial {id}: demand {demand} exceeds every executor worker");
+                self.finish(id, TrialStatus::Errored);
+                return true;
+            }
+        }
         // Trial drivers originate on the head node (node 0), matching
         // Tune-on-Ray's driver placement; children would spill.
         let Some(p) = self.placer.place(&mut self.cluster, 0, &demand) else {
+            self.executor.halt(id); // release the capacity reservation
+            self.unplaceable = true;
             return false;
         };
         // Shared checkpoint handle: a relaunch hands the executor the
@@ -378,6 +526,8 @@ impl TrialRunner {
                 self.leases.insert(id, (p.node, p.lease));
                 let started = self.time_offset + self.executor.now();
                 self.run_clock.insert(id, (started, trial.time_total_s));
+                self.running_demand.release(&demand); // add to the sum
+                self.refresh_util();
                 self.stats.launches += 1;
                 if restored {
                     self.stats.restores += 1;
@@ -397,8 +547,21 @@ impl TrialRunner {
     fn release(&mut self, id: TrialId) {
         if let Some((node, lease)) = self.leases.remove(&id) {
             self.cluster.release(node, lease);
+            self.running_demand.acquire(&self.trials[&id].resources);
+            self.maybe_finish_drain(node);
+            self.refresh_util();
         }
         self.run_clock.remove(&id);
+    }
+
+    /// Retire a draining node once its last lease is gone (the final
+    /// step of an autoscale shrink).
+    fn maybe_finish_drain(&mut self, node: NodeId) {
+        let n = self.cluster.node(node);
+        if n.alive && n.draining && n.leases.is_empty() {
+            self.cluster.retire_node(node);
+            self.stats.scale_downs += 1;
+        }
     }
 
     fn finish(&mut self, id: TrialId, status: TrialStatus) {
@@ -422,6 +585,7 @@ impl TrialRunner {
             trials: &self.trials,
             metric_id: self.metric_id,
             mode: self.spec.mode,
+            utilization: self.util,
         };
         self.scheduler.on_trial_remove(&ctx, id);
         self.search.on_complete(&config, last_metric, self.spec.mode);
@@ -479,13 +643,7 @@ impl TrialRunner {
                 self.save_checkpoint(id);
                 self.executor.request_step(id);
             }
-            Decision::Pause => {
-                self.save_checkpoint(id);
-                self.executor.halt(id);
-                self.release(id);
-                self.trials.get_mut(&id).unwrap().status = TrialStatus::Paused;
-                self.dirty.insert(id);
-            }
+            Decision::Pause => self.shed(id, TrialStatus::Paused),
             Decision::Stop => self.finish(id, TrialStatus::Stopped),
             Decision::Exploit { source, config } => {
                 let donor = self
@@ -595,6 +753,8 @@ impl TrialRunner {
         }
         self.replay_until.remove(&id);
         self.stats.results += 1;
+        self.stats.util_cpu_sum += self.util.cpu_frac();
+        self.stats.util_gpu_sum += self.util.gpu_frac();
 
         // Best-so-far curve (experiment time axis). A NaN (diverged)
         // metric never enters the curve: as a *first* result it would
@@ -640,6 +800,7 @@ impl TrialRunner {
                 trials: &self.trials,
                 metric_id: self.metric_id,
                 mode: self.spec.mode,
+                utilization: self.util,
             };
             let t = &self.trials[&id];
             let row = t.last_result.as_ref().expect("record_step just set last_result");
@@ -647,7 +808,21 @@ impl TrialRunner {
             self.stats.decision_ns += t0.elapsed().as_nanos() as u64;
             d
         };
-        self.apply_decision(id, decision);
+        // A trial on a draining node is shed at this result boundary
+        // (its trainable is idle right now): checkpoint-then-requeue
+        // instead of stepping on. Terminal/pausing decisions already
+        // release the node, so only keep-going decisions are
+        // intercepted; an Exploit proceeds and is preempted at its next
+        // result.
+        let draining = self
+            .leases
+            .get(&id)
+            .map_or(false, |(node, _)| self.cluster.node(*node).draining);
+        if draining && matches!(decision, Decision::Continue | Decision::Checkpoint) {
+            self.preempt(id);
+        } else {
+            self.apply_decision(id, decision);
+        }
 
         // Out-of-band terminations (HyperBand rung cuts).
         for victim in self.scheduler.drain_stops() {
@@ -707,6 +882,14 @@ impl TrialRunner {
                 id_map_to_json(&self.replay_until, |v| Json::Num(*v as f64)),
             ),
             ("fault", self.fault.snapshot()),
+            // Autoscaled runs must resume on the cluster they actually
+            // grew (plus the autoscaler's counters), not the initial
+            // shape.
+            ("cluster", self.cluster.snapshot()),
+            (
+                "autoscaler",
+                self.autoscaler.as_ref().map(|a| a.snapshot()).unwrap_or(Json::Null),
+            ),
             ("checkpoints", self.checkpoints.snapshot()),
             ("scheduler", self.scheduler.snapshot()),
             ("search", self.search.snapshot()),
@@ -749,6 +932,12 @@ impl TrialRunner {
                 id_map_to_json(&self.replay_until, |v| Json::Num(*v as f64)),
             ),
             ("fault", self.fault.snapshot()),
+            // Small (a handful of nodes): carried in full per record.
+            ("cluster", self.cluster.snapshot()),
+            (
+                "autoscaler",
+                self.autoscaler.as_ref().map(|a| a.snapshot()).unwrap_or(Json::Null),
+            ),
             ("checkpoints", self.checkpoints.snapshot_delta()),
             ("scheduler", self.scheduler.snapshot_delta()),
             ("search", self.search.snapshot_delta()),
@@ -898,6 +1087,16 @@ impl TrialRunner {
             .unwrap_or_default();
         if let Some(f) = j.get("fault") {
             self.fault.restore(f)?;
+        }
+        // Pre-resource-aware snapshots lack these keys: keep the
+        // constructor-provided cluster / a cold autoscaler then.
+        if let Some(cj) = j.get("cluster") {
+            self.cluster = Cluster::restore_nodes(cj)?;
+        }
+        if let Some(aj) = j.get("autoscaler") {
+            if let (Some(a), false) = (self.autoscaler.as_mut(), matches!(aj, Json::Null)) {
+                a.restore(aj)?;
+            }
         }
         Ok(finished)
     }
@@ -1060,7 +1259,129 @@ impl TrialRunner {
                 std::fs::remove_file(dir.trial_log_path(id)).ok();
             }
         }
+        // The restored cluster (autoscaled shape, drain/retire flags)
+        // replaces the constructor's; refresh the cached utilization.
+        self.refresh_util();
         Ok(())
+    }
+
+    /// Could `demand` ever run? Checks the demand itself (finite,
+    /// non-negative), every non-retired node's total capacity, and —
+    /// when autoscaling is on — the scale-up template, which only
+    /// counts while there is headroom to actually add such a node
+    /// (a template fit with the cluster already at `max_nodes` would
+    /// otherwise pass preflight and then silently strand every trial).
+    fn demand_feasible(&self, demand: &Resources) -> Result<(), String> {
+        demand.validate_demand()?;
+        if self.cluster.any_node_fits(demand) {
+            return Ok(());
+        }
+        if let Some(a) = &self.autoscaler {
+            if a.can_grow(&self.cluster, demand) {
+                return Ok(());
+            }
+            return Err(format!(
+                "no node fits it and the autoscale template {} cannot help \
+                 (template too small, or already at max_nodes={})",
+                a.policy.node_template, a.policy.max_nodes
+            ));
+        }
+        Err("no node in the cluster is large enough".into())
+    }
+
+    /// Experiment-level fail-fast: refuse to create or launch *any*
+    /// trial when `resources_per_trial` is unsatisfiable — a clear
+    /// error beats 64 trials parked Pending forever. Returns false
+    /// (and records the error for the result summary) on infeasibility.
+    fn preflight(&mut self) -> bool {
+        if self.preflight_ok {
+            return true;
+        }
+        if self.infeasible.is_some() {
+            return false;
+        }
+        let demand = self.spec.resources_per_trial.clone();
+        match self.demand_feasible(&demand) {
+            Ok(()) => {
+                self.preflight_ok = true;
+                true
+            }
+            Err(e) => {
+                let msg = format!("resources_per_trial {demand} is unsatisfiable: {e}");
+                eprintln!("experiment {:?}: {msg}", self.spec.name);
+                self.infeasible = Some(msg);
+                false
+            }
+        }
+    }
+
+    /// Advance the elastic autoscaler one tick (driven per coordinator
+    /// event, like `fault_tick`, so decisions are deterministic) and
+    /// apply its action: grow the cluster, or start draining a node —
+    /// the drained node's trials are preempted checkpoint-then-requeue
+    /// as they report (see `handle_stepped`), and the node retires once
+    /// empty.
+    fn autoscale_tick(&mut self) {
+        if self.autoscaler.is_none() {
+            return;
+        }
+        let unplaceable = std::mem::take(&mut self.unplaceable);
+        let action = {
+            let a = self.autoscaler.as_mut().expect("checked above");
+            a.tick(&self.cluster, unplaceable, &self.spec.resources_per_trial)
+        };
+        match action {
+            AutoscaleAction::None => {}
+            AutoscaleAction::AddNode(cap) => {
+                let id = self.cluster.add_node(cap);
+                // add_node may have reused a retired slot: the fresh
+                // node must not inherit its predecessor's idle streak.
+                if let Some(a) = &mut self.autoscaler {
+                    a.reset_streak(id);
+                }
+                self.stats.scale_ups += 1;
+                self.refresh_util();
+            }
+            AutoscaleAction::Drain(node) => {
+                self.cluster.begin_drain(node);
+                self.maybe_finish_drain(node); // already idle: retire now
+                self.refresh_util();
+            }
+        }
+    }
+
+    /// Checkpoint-then-deschedule: snapshot the trial's state (it is
+    /// idle between steps — callers sit at a result boundary), halt the
+    /// trainable, release the lease and park it in `status`. Shared by
+    /// the scheduler's Pause decision (→ Paused) and autoscale
+    /// preemption (→ Pending).
+    fn shed(&mut self, id: TrialId, status: TrialStatus) {
+        self.save_checkpoint(id);
+        self.executor.halt(id);
+        self.release(id);
+        self.trials.get_mut(&id).unwrap().status = status;
+        self.dirty.insert(id);
+    }
+
+    /// Checkpoint-then-requeue a trial off a draining node; the next
+    /// admission pass relaunches it elsewhere from that checkpoint — a
+    /// shrink never loses a trial.
+    fn preempt(&mut self, id: TrialId) {
+        self.shed(id, TrialStatus::Pending);
+        self.stats.preemptions += 1;
+    }
+
+    /// With a launchable candidate but nothing running and no event in
+    /// flight, can anything still change the cluster so placement
+    /// succeeds? (A fault plan that restarts killed nodes, or an
+    /// autoscaler with headroom for this demand.) When not, the
+    /// experiment can never advance: finalize instead of spinning.
+    fn can_wait_for_capacity(&self) -> bool {
+        (self.fault.plan.node_failure_prob > 0.0 && self.fault.plan.nodes_restart)
+            || self
+                .autoscaler
+                .as_ref()
+                .map_or(false, |a| a.can_grow(&self.cluster, &self.spec.resources_per_trial))
     }
 
     fn fault_tick(&mut self) {
@@ -1084,6 +1405,7 @@ impl TrialRunner {
                 self.handle_failure(id, "node failure");
             }
         }
+        self.refresh_util();
     }
 
     /// Apply one completion event (the body shared by the blocking
@@ -1105,6 +1427,7 @@ impl TrialRunner {
                 trials: &self.trials,
                 metric_id: self.metric_id,
                 mode: self.spec.mode,
+                utilization: self.util,
             };
             self.scheduler.choose_trial_to_run(&ctx).is_some()
         };
@@ -1121,6 +1444,9 @@ impl TrialRunner {
     /// [`TrialRunner::run_to_crash`]. Returns `true` when crash
     /// injection fired (the loop was abandoned mid-flight).
     fn drive(&mut self, crash_after_snapshots: Option<u64>) -> bool {
+        if !self.preflight() {
+            return false; // unsatisfiable demand: zero trials launched
+        }
         loop {
             self.admit();
             if self.clock() >= self.spec.max_experiment_time_s {
@@ -1136,10 +1462,22 @@ impl TrialRunner {
                     if !self.try_unblock() {
                         return false;
                     }
+                    // Try to place the candidate now; if nothing is
+                    // running afterwards, placement failed with every
+                    // lease free. Spin only while a node restart or an
+                    // autoscale-up can still unblock it (the
+                    // per-iteration ticks below drive both); otherwise
+                    // the backlog is permanent — finalize instead of
+                    // livelocking.
+                    self.admit();
+                    if self.num_running() == 0 && !self.can_wait_for_capacity() {
+                        return false;
+                    }
                 }
             }
             self.stats.handling_ns += t0.elapsed().as_nanos() as u64;
             self.fault_tick();
+            self.autoscale_tick();
             let snapped = self.maybe_snapshot();
             if snapped && crash_after_snapshots.map_or(false, |n| self.stats.snapshots >= n) {
                 return true;
@@ -1164,6 +1502,9 @@ impl TrialRunner {
     /// nothing in flight, and the hub's idle pass re-pumps it until the
     /// node comes back.
     pub(crate) fn hub_pump(&mut self) -> bool {
+        if !self.preflight() {
+            return false; // unsatisfiable demand: finalize immediately
+        }
         loop {
             if self.clock() >= self.spec.max_experiment_time_s {
                 return false;
@@ -1178,16 +1519,30 @@ impl TrialRunner {
             }
             if self.next_id == created_before {
                 // A candidate exists but could not be placed with every
-                // lease free. Under a node-failure plan with restarts
-                // the cluster may just be waiting out a dead node: tick
-                // the fault clock (the blocking loop does this by
-                // spinning) and stay alive — the hub re-pumps on its
-                // next idle pass until the node returns. Without
-                // restarts the demand permanently exceeds the cluster:
-                // report no progress so the hub finalizes instead of
-                // livelocking.
+                // lease free. A shared-pool fleet refusal is transient
+                // — sibling experiments hold the capacity and free it
+                // as their trials halt — so stay alive and let the
+                // hub's next pass retry. Under a node-failure plan with
+                // restarts the cluster may just be waiting out a dead
+                // node: tick the fault clock (the blocking loop does
+                // this by spinning) and stay alive. Likewise an
+                // autoscaler with headroom: tick it so pressure
+                // accumulates into a scale-up. Otherwise the demand
+                // permanently exceeds the cluster: report no progress
+                // so the hub finalizes instead of livelocking.
+                if std::mem::take(&mut self.exec_exhausted) {
+                    return true;
+                }
                 if self.fault.plan.node_failure_prob > 0.0 && self.fault.plan.nodes_restart {
                     self.fault_tick();
+                    return true;
+                }
+                if self
+                    .autoscaler
+                    .as_ref()
+                    .map_or(false, |a| a.can_grow(&self.cluster, &self.spec.resources_per_trial))
+                {
+                    self.autoscale_tick();
                     return true;
                 }
                 return false;
@@ -1204,6 +1559,7 @@ impl TrialRunner {
         self.dispatch(event);
         self.stats.handling_ns += t0.elapsed().as_nanos() as u64;
         self.fault_tick();
+        self.autoscale_tick();
         self.maybe_snapshot();
     }
 
@@ -1262,6 +1618,8 @@ impl TrialRunner {
             placement: self.placer.stats,
             best_curve: std::mem::take(&mut self.best_curve),
             schema: self.schema.clone(),
+            infeasible: self.infeasible.take(),
+            final_utilization: self.util,
         }
     }
 

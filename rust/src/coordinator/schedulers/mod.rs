@@ -29,6 +29,7 @@
 use std::collections::BTreeMap;
 
 use super::trial::{Config, Mode, ResultRow, Trial, TrialId, TrialStatus};
+use crate::ray::Utilization;
 use crate::util::intern::MetricId;
 
 pub mod asha;
@@ -70,6 +71,11 @@ pub struct SchedulerCtx<'a> {
     pub metric_id: MetricId,
     /// Optimization direction.
     pub mode: Mode,
+    /// Current cluster utilization snapshot (CPU/GPU leased fractions,
+    /// alive/draining node counts) — refreshed by the runner on every
+    /// lease change, so resource-aware schedulers can modulate their
+    /// aggressiveness and `tune status` can report it.
+    pub utilization: Utilization,
 }
 
 impl<'a> SchedulerCtx<'a> {
@@ -194,7 +200,12 @@ pub(crate) mod testutil {
         }
 
         pub fn ctx(&self) -> SchedulerCtx<'_> {
-            SchedulerCtx { trials: &self.trials, metric_id: self.metric_id, mode: self.mode }
+            SchedulerCtx {
+                trials: &self.trials,
+                metric_id: self.metric_id,
+                mode: self.mode,
+                utilization: Utilization::default(),
+            }
         }
 
         pub fn add_all(&mut self, s: &mut dyn TrialScheduler) {
@@ -205,6 +216,7 @@ pub(crate) mod testutil {
                     trials: &self.trials,
                     metric_id: self.metric_id,
                     mode: self.mode,
+                    utilization: Utilization::default(),
                 };
                 s.on_trial_add(&ctx, &t);
             }
@@ -228,6 +240,7 @@ pub(crate) mod testutil {
                 trials: &self.trials,
                 metric_id: self.metric_id,
                 mode: self.mode,
+                utilization: Utilization::default(),
             };
             let d = s.on_result(&ctx, &t, &r);
             match &d {

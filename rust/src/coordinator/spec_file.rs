@@ -22,10 +22,19 @@
 //!   "resources_per_trial": {"cpu": 1.0, "gpu": 0.0}
 //! }
 //! ```
+//!
+//! Resource-aware forms: `resources_per_trial` accepts fractional
+//! `cpu`/`gpu` plus arbitrary custom keys (`{"cpu": 1, "gpu": 0.5,
+//! "tpu": 1}`); `cluster.nodes` may be a *list* of per-node shapes for
+//! a heterogeneous cluster (`{"nodes": [{"cpus": 8, "gpus": 4},
+//! {"cpus": 16}]}`); and an optional `autoscale` block enables elastic
+//! scaling (`{"autoscale": {"max_nodes": 8, "node_cpus": 8,
+//! "node_gpus": 4, "scale_up_after": 4, "scale_down_after": 200,
+//! "scale_down_util": 0.1, "min_nodes": 1}}`).
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::ray::{Cluster, Resources};
+use crate::ray::{AutoscalePolicy, Cluster, Resources};
 use crate::util::json::{parse, Json};
 
 use super::experiment::{ExperimentSpec, SchedulerKind, SearchKind};
@@ -46,6 +55,9 @@ pub struct SpecFile {
     pub workload: String,
     /// Cluster shape to run on.
     pub cluster: Cluster,
+    /// Elastic autoscaling policy, when the spec has an `autoscale`
+    /// block (None = fixed cluster).
+    pub autoscale: Option<AutoscalePolicy>,
     /// Fair-share weight when the spec runs under `tune serve` (min 1;
     /// ignored by the single-experiment `tune run`).
     pub weight: u64,
@@ -210,10 +222,7 @@ impl SpecFile {
             spec.seed = n as u64;
         }
         if let Some(r) = j.get("resources_per_trial") {
-            spec.resources_per_trial = Resources::cpu_gpu(
-                jf(r, "cpu").unwrap_or(1.0),
-                jf(r, "gpu").unwrap_or(0.0),
-            );
+            spec.resources_per_trial = parse_resources(r)?;
         }
 
         let scheduler =
@@ -230,16 +239,95 @@ impl SpecFile {
             .and_then(|v| v.as_str())
             .unwrap_or("curve")
             .to_string();
-        let nodes = j.get("cluster").and_then(|c| jf(c, "nodes")).unwrap_or(4.0) as usize;
-        let cpus = j.get("cluster").and_then(|c| jf(c, "cpus_per_node")).unwrap_or(8.0);
-        let gpus = j.get("cluster").and_then(|c| jf(c, "gpus_per_node")).unwrap_or(0.0);
-        let cluster = Cluster::uniform(nodes.max(1), Resources::cpu_gpu(cpus, gpus));
+        let cluster = parse_cluster(j.get("cluster"))?;
+        let autoscale = j.get("autoscale").map(parse_autoscale).transpose()?;
         // Clamped: the hub multiplies weights by the live-trial budget,
         // so an absurd value must not be able to overflow the math.
         let weight = (jf(&j, "weight").unwrap_or(1.0) as u64).clamp(1, 1_000_000);
 
-        Ok(SpecFile { spec, space, scheduler, search, workload, cluster, weight })
+        Ok(SpecFile { spec, space, scheduler, search, workload, cluster, autoscale, weight })
     }
+}
+
+/// Parse a resource vector: `cpu`/`gpu` plus arbitrary custom keys,
+/// fractional amounts allowed. Rejects NaN/negative quantities up front
+/// so a bad demand errors at spec load, not mid-experiment.
+fn parse_resources(j: &Json) -> Result<Resources> {
+    let obj = j.as_obj().ok_or_else(|| anyhow!("expected a {{name: amount}} object"))?;
+    // Default 1 CPU, matching ExperimentSpec::named.
+    let mut r = Resources { cpu: 1.0, ..Default::default() };
+    for (k, v) in obj {
+        let amount = v.as_f64().ok_or_else(|| anyhow!("{k}: expected a number"))?;
+        match k.as_str() {
+            "cpu" => r.cpu = amount,
+            "gpu" => r.gpu = amount,
+            _ => {
+                r.custom.insert(k.clone(), amount);
+            }
+        }
+    }
+    r.validate_demand().map_err(|e| anyhow!("resources_per_trial: {e}"))?;
+    Ok(r)
+}
+
+/// Parse the cluster shape: uniform (`{"nodes": 4, "cpus_per_node": 8,
+/// "gpus_per_node": 4}`) or heterogeneous (`{"nodes": [{"cpus": 8,
+/// "gpus": 4}, {"cpus": 16}]}`, custom keys allowed per node).
+fn parse_cluster(j: Option<&Json>) -> Result<Cluster> {
+    let Some(c) = j else {
+        return Ok(Cluster::uniform(4, Resources::cpu(8.0)));
+    };
+    if let Some(list) = c.get("nodes").and_then(|n| n.as_arr()) {
+        let mut shapes = Vec::with_capacity(list.len());
+        for (i, nj) in list.iter().enumerate() {
+            let obj = nj
+                .as_obj()
+                .ok_or_else(|| anyhow!("cluster.nodes[{i}]: expected an object"))?;
+            let mut shape = Resources::default();
+            for (k, v) in obj {
+                let amount =
+                    v.as_f64().ok_or_else(|| anyhow!("cluster.nodes[{i}].{k}: bad number"))?;
+                match k.as_str() {
+                    "cpus" | "cpu" => shape.cpu = amount,
+                    "gpus" | "gpu" => shape.gpu = amount,
+                    _ => {
+                        shape.custom.insert(k.clone(), amount);
+                    }
+                }
+            }
+            shape
+                .validate_demand()
+                .map_err(|e| anyhow!("cluster.nodes[{i}]: {e}"))?;
+            shapes.push(shape);
+        }
+        anyhow::ensure!(!shapes.is_empty(), "cluster.nodes: empty node list");
+        return Ok(Cluster::heterogeneous(shapes));
+    }
+    let nodes = jf(c, "nodes").unwrap_or(4.0) as usize;
+    let cpus = jf(c, "cpus_per_node").unwrap_or(8.0);
+    let gpus = jf(c, "gpus_per_node").unwrap_or(0.0);
+    Ok(Cluster::uniform(nodes.max(1), Resources::cpu_gpu(cpus, gpus)))
+}
+
+/// Parse the `autoscale` block into an [`AutoscalePolicy`] (defaults
+/// applied per field; the node template defaults to an 8-CPU node).
+fn parse_autoscale(j: &Json) -> Result<AutoscalePolicy> {
+    anyhow::ensure!(j.as_obj().is_some(), "autoscale: expected an object");
+    let d = AutoscalePolicy::default();
+    let template = Resources::cpu_gpu(
+        jf(j, "node_cpus").unwrap_or(d.node_template.cpu),
+        jf(j, "node_gpus").unwrap_or(0.0),
+    );
+    let policy = AutoscalePolicy {
+        node_template: template,
+        min_nodes: jf(j, "min_nodes").unwrap_or(d.min_nodes as f64) as usize,
+        max_nodes: jf(j, "max_nodes").unwrap_or(d.max_nodes as f64) as usize,
+        scale_up_after: jf(j, "scale_up_after").unwrap_or(d.scale_up_after as f64) as u64,
+        scale_down_after: jf(j, "scale_down_after").unwrap_or(d.scale_down_after as f64) as u64,
+        scale_down_util: jf(j, "scale_down_util").unwrap_or(d.scale_down_util),
+    };
+    policy.validate().map_err(|e| anyhow!("autoscale: {e}"))?;
+    Ok(policy)
 }
 
 #[cfg(test)]
@@ -311,6 +399,70 @@ mod tests {
         assert!(SpecFile::parse_str(r#"{"mode": "sideways"}"#).is_err());
         assert!(SpecFile::parse_str(r#"{"scheduler": "warp"}"#).is_err());
         assert!(SpecFile::parse_str(r#"{"space": {"x": {"zipf": [1]}}}"#).is_err());
+    }
+
+    #[test]
+    fn resources_accept_fractional_gpu_and_custom_keys() {
+        let f = SpecFile::parse_str(
+            r#"{"resources_per_trial": {"cpu": 0.5, "gpu": 0.25, "tpu": 1}}"#,
+        )
+        .unwrap();
+        let r = &f.spec.resources_per_trial;
+        assert_eq!(r.cpu, 0.5);
+        assert_eq!(r.gpu, 0.25);
+        assert_eq!(r.custom.get("tpu"), Some(&1.0));
+        // cpu omitted: defaults to 1, matching ExperimentSpec::named.
+        let f = SpecFile::parse_str(r#"{"resources_per_trial": {"gpu": 2}}"#).unwrap();
+        assert_eq!(f.spec.resources_per_trial.cpu, 1.0);
+        assert_eq!(f.spec.resources_per_trial.gpu, 2.0);
+    }
+
+    #[test]
+    fn negative_or_non_numeric_resources_error() {
+        assert!(SpecFile::parse_str(r#"{"resources_per_trial": {"gpu": -1}}"#).is_err());
+        assert!(SpecFile::parse_str(r#"{"resources_per_trial": {"cpu": "lots"}}"#).is_err());
+        assert!(SpecFile::parse_str(r#"{"resources_per_trial": 4}"#).is_err());
+    }
+
+    #[test]
+    fn heterogeneous_cluster_node_list() {
+        let f = SpecFile::parse_str(
+            r#"{"cluster": {"nodes": [
+                {"cpus": 8, "gpus": 4},
+                {"cpus": 8, "gpus": 4},
+                {"cpus": 16},
+                {"cpus": 4, "tpu": 2}
+            ]}}"#,
+        )
+        .unwrap();
+        assert_eq!(f.cluster.nodes.len(), 4);
+        assert_eq!(f.cluster.node(0).total, Resources::cpu_gpu(8.0, 4.0));
+        assert_eq!(f.cluster.node(2).total, Resources::cpu(16.0));
+        assert_eq!(f.cluster.node(3).total.custom.get("tpu"), Some(&2.0));
+        assert!(SpecFile::parse_str(r#"{"cluster": {"nodes": []}}"#).is_err());
+        assert!(SpecFile::parse_str(r#"{"cluster": {"nodes": [{"cpus": -8}]}}"#).is_err());
+    }
+
+    #[test]
+    fn autoscale_block_parses_into_policy() {
+        let f = SpecFile::parse_str(
+            r#"{"autoscale": {"max_nodes": 6, "min_nodes": 2, "node_cpus": 8,
+                "node_gpus": 4, "scale_up_after": 3, "scale_down_after": 40,
+                "scale_down_util": 0.2}}"#,
+        )
+        .unwrap();
+        let p = f.autoscale.expect("autoscale parsed");
+        assert_eq!(p.max_nodes, 6);
+        assert_eq!(p.min_nodes, 2);
+        assert_eq!(p.node_template, Resources::cpu_gpu(8.0, 4.0));
+        assert_eq!(p.scale_up_after, 3);
+        assert_eq!(p.scale_down_after, 40);
+        assert_eq!(p.scale_down_util, 0.2);
+        // Absent block: no autoscaler.
+        assert!(SpecFile::parse_str("{}").unwrap().autoscale.is_none());
+        // Bad knobs error.
+        assert!(SpecFile::parse_str(r#"{"autoscale": {"scale_down_util": 2}}"#).is_err());
+        assert!(SpecFile::parse_str(r#"{"autoscale": {"scale_up_after": 0}}"#).is_err());
     }
 
     #[test]

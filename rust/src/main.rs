@@ -24,7 +24,7 @@ use tune::coordinator::{
     SpecFile,
 };
 use tune::logger::ExperimentAnalysis;
-use tune::ray::{Cluster, Resources};
+use tune::ray::{AutoscalePolicy, Cluster, Resources};
 use tune::runtime::{Manifest, PjrtService};
 use tune::trainable::jax_model::jax_factory;
 use tune::trainable::synthetic::{CurveTrainable, NonStationaryTrainable};
@@ -74,8 +74,25 @@ COMMANDS
              --iters N          max iterations per trial (default 81)
              --nodes N          cluster nodes (default 4)
              --cpus-per-node F  (default 8)
+             --gpus-per-node F  (default 0)
+             --cpus-per-trial F resource demand per trial (default 1)
+             --gpus-per-trial F fractional GPUs allowed (default 0; a
+                                demand no node can hold fails fast)
+             --autoscale-max-nodes N  enable elastic autoscaling up to N
+                                nodes (template = the per-node shape);
+                                idle nodes drain and retire, their
+                                trials checkpoint-then-requeue
+             --autoscale-min-nodes N    never drain below N (default 1)
+             --autoscale-up-after N     pressure ticks per scale-up (4)
+             --autoscale-down-after N   idle ticks before a drain (200)
+             --autoscale-down-util F    drain nodes at or below this
+                                utilization fraction (default 0.0:
+                                fully idle only)
              --exec sim|threads|pool  executor (default per workload)
              --workers N        pool worker threads (default 4)
+             --worker-cpus F --worker-gpus F  per-worker capacity
+                                vectors for --exec pool: admission is a
+                                vector fit instead of a slot count
              --metric NAME --mode min|max
              --log-dir DIR      write JSONL logs (no durability)
              --exp-dir DIR      durable experiment directory: JSONL logs,
@@ -91,6 +108,9 @@ COMMANDS
                                 with weighted fair-share admission;
                                 results land in DIR/experiments/<name>/
              --workers N        pool worker threads (default 4)
+             --worker-cpus F --worker-gpus F  per-worker capacities:
+                                admission + fair share become resource
+                                vectors instead of slot counts
              --max-live N       global live-trial budget split across
                                 experiments (default 4 x workers)
              --drain            exit once the queue is empty and every
@@ -161,6 +181,45 @@ fn scheduler_kind(name: &str, iters: u64, space: &SearchSpace) -> SchedulerKind 
     }
 }
 
+/// `--worker-cpus`/`--worker-gpus`: per-worker capacity vectors for the
+/// pool executor (None unless at least one flag is present).
+fn worker_caps(flags: &Flags, workers: usize) -> Option<Vec<Resources>> {
+    if !flags.0.contains_key("worker-cpus") && !flags.0.contains_key("worker-gpus") {
+        return None;
+    }
+    let cap = Resources::cpu_gpu(
+        flags.get_f64("worker-cpus", 1.0),
+        flags.get_f64("worker-gpus", 0.0),
+    );
+    Some(vec![cap; workers.max(1)])
+}
+
+/// `--autoscale-max-nodes N` (plus the per-node shape flags) enables an
+/// elastic autoscaler whose template matches the cluster's node shape.
+fn autoscale_policy(
+    flags: &Flags,
+    node_shape: &Resources,
+    min_nodes: usize,
+) -> Option<AutoscalePolicy> {
+    let max_nodes = flags.get_u64("autoscale-max-nodes", 0) as usize;
+    if max_nodes == 0 {
+        return None;
+    }
+    let policy = AutoscalePolicy {
+        node_template: node_shape.clone(),
+        min_nodes: flags.get_u64("autoscale-min-nodes", min_nodes as u64) as usize,
+        max_nodes,
+        scale_up_after: flags.get_u64("autoscale-up-after", 4),
+        scale_down_after: flags.get_u64("autoscale-down-after", 200),
+        scale_down_util: flags.get_f64("autoscale-down-util", 0.0),
+    };
+    if let Err(e) = policy.validate() {
+        eprintln!("bad --autoscale-* flags: {e}");
+        std::process::exit(2);
+    }
+    Some(policy)
+}
+
 /// `--exec`/`--workers` override of a workload's default executor.
 fn exec_override(flags: &Flags, default: ExecMode) -> ExecMode {
     match flags.0.get("exec").map(|s| s.as_str()) {
@@ -197,6 +256,7 @@ fn cmd_run(flags: &Flags) {
     let samples = flags.get_u64("samples", 32) as usize;
     let nodes = flags.get_u64("nodes", 4) as usize;
     let cpus = flags.get_f64("cpus-per-node", 8.0);
+    let gpus = flags.get_f64("gpus-per-node", 0.0);
     let seed = flags.get_u64("seed", 0);
 
     // Workload-specific defaults.
@@ -253,23 +313,38 @@ fn cmd_run(flags: &Flags) {
     spec.max_iterations_per_trial = iters;
     spec.seed = seed;
     spec.checkpoint_freq = (iters / 10).max(1);
+    spec.resources_per_trial = Resources::cpu_gpu(
+        flags.get_f64("cpus-per-trial", 1.0),
+        flags.get_f64("gpus-per-trial", 0.0),
+    );
+    if let Err(e) = spec.resources_per_trial.validate_demand() {
+        eprintln!("bad --cpus-per-trial/--gpus-per-trial: {e}");
+        std::process::exit(2);
+    }
 
     let sched = scheduler_kind(&flags.get("scheduler", "asha"), iters, &space);
     let search = search_kind(&flags.get("search", "random"));
     let exec = exec_override(flags, exec);
     let exec_label = exec.label();
+    let node_shape = Resources::cpu_gpu(cpus, gpus);
     let opts = RunOptions {
-        cluster: Cluster::uniform(nodes, Resources::cpu(cpus)),
+        cluster: Cluster::uniform(nodes, node_shape.clone()),
         exec,
         progress_every: flags.get_u64("progress-every", 200),
         log_dir: flags.0.get("log-dir").map(PathBuf::from),
         experiment_dir: flags.0.get("exp-dir").map(PathBuf::from),
         snapshot_every: flags.get_u64("snapshot-every", 50),
         resume: flags.0.get("resume").is_some(),
+        autoscale: autoscale_policy(flags, &node_shape, 1),
+        worker_caps: worker_caps(flags, flags.get_u64("workers", 4) as usize),
     };
 
     let label = sched.label();
     let res = run_experiments(spec, space, sched, search, fac, opts);
+    if let Some(e) = &res.infeasible {
+        eprintln!("\nexperiment failed fast (no trial launched): {e}");
+        std::process::exit(1);
+    }
     println!("\n== experiment complete ==");
     println!("scheduler            : {label}");
     println!("executor             : {exec_label}");
@@ -286,6 +361,17 @@ fn cmd_run(flags: &Flags) {
         res.placement.spilled,
         res.placement.spill_fraction() * 100.0
     );
+    println!(
+        "mean utilization     : cpu {:.0}%, gpu {:.0}%",
+        res.mean_cpu_utilization() * 100.0,
+        res.mean_gpu_utilization() * 100.0
+    );
+    if res.stats.scale_ups + res.stats.scale_downs > 0 {
+        println!(
+            "autoscale            : +{} nodes, -{} nodes, {} preemption(s) (0 trials lost)",
+            res.stats.scale_ups, res.stats.scale_downs, res.stats.preemptions
+        );
+    }
     if let (Some(best), Some(m)) = (res.best, res.best_metric()) {
         println!(
             "best trial           : #{best}  best metric {m:.4} after {} iters",
@@ -354,11 +440,17 @@ fn run_spec_file(path: &std::path::Path, flags: &Flags) {
         experiment_dir: flags.0.get("exp-dir").map(PathBuf::from),
         snapshot_every: flags.get_u64("snapshot-every", 50),
         resume: flags.0.get("resume").is_some(),
+        autoscale: f.autoscale,
+        worker_caps: worker_caps(flags, flags.get_u64("workers", 4) as usize),
     };
     let label = f.scheduler.label();
     println!("spec {:?}: workload={} scheduler={} trials={}",
              f.spec.name, f.workload, label, f.spec.num_samples);
     let res = run_experiments(f.spec, f.space, f.scheduler, f.search, fac, opts);
+    if let Some(e) = &res.infeasible {
+        eprintln!("\nexperiment failed fast (no trial launched): {e}");
+        std::process::exit(1);
+    }
     println!("\n== {} complete: {} trials, best {} ==",
              label,
              res.trials.len(),
@@ -430,6 +522,7 @@ fn ingest_queue(
         };
         let mut sub = Submission::new(f.spec, f.space, f.scheduler, f.search, factory);
         sub.cluster = f.cluster;
+        sub.autoscale = f.autoscale;
         sub.weight = f.weight;
         sub.experiment_dir = Some(root.join("experiments").join(&name));
         match hub.submit(sub) {
@@ -466,7 +559,13 @@ fn cmd_serve(flags: &Flags) {
     let stop_file = root.join("serve.stop");
     std::fs::remove_file(&stop_file).ok(); // stale stop from a past server
 
-    let mut hub = ExperimentHub::new(workers, max_live);
+    // --worker-cpus/--worker-gpus turn the shared pool capacity-aware:
+    // live trainables are admitted by vector fit across all experiments
+    // and fair share is dealt as resource-weighted slices.
+    let mut hub = match worker_caps(flags, workers) {
+        Some(caps) => ExperimentHub::with_capacities(caps, max_live),
+        None => ExperimentHub::new(workers, max_live),
+    };
     let mut seen = std::collections::BTreeSet::new();
     let mut served = 0usize;
     println!(
@@ -556,26 +655,29 @@ fn cmd_status(flags: &Flags) {
         num("active")
     );
     println!(
-        "{:<24} {:>9} {:>7} {:>8} {:>8} {:>12}",
-        "experiment", "state", "weight", "trials", "running", "best"
+        "{:<24} {:>9} {:>7} {:>8} {:>8} {:>12} {:>6} {:>6}",
+        "experiment", "state", "weight", "trials", "running", "best", "cpu%", "gpu%"
     );
-    println!("{}", "-".repeat(74));
+    println!("{}", "-".repeat(88));
     for e in s.get("experiments").and_then(|e| e.as_arr()).unwrap_or(&[]) {
         let get = |k: &str| e.get(k).and_then(|v| v.as_str()).unwrap_or("?").to_string();
         let n = |k: &str| e.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+        let frac = |k: &str| e.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0) * 100.0;
         let best = e
             .get("best_metric")
             .and_then(|v| v.as_f64())
             .map(|v| format!("{v:.4}"))
             .unwrap_or_else(|| "-".into());
         println!(
-            "{:<24} {:>9} {:>7} {:>8} {:>8} {:>12}",
+            "{:<24} {:>9} {:>7} {:>8} {:>8} {:>12} {:>6.0} {:>6.0}",
             get("name"),
             get("state"),
             n("weight"),
             n("trials"),
             n("running"),
-            best
+            best,
+            frac("util_cpu"),
+            frac("util_gpu"),
         );
     }
 }
@@ -660,6 +762,13 @@ fn cmd_analyze(flags: &Flags) {
                 get("scheduler"),
                 get("exec"),
             );
+            if let Some(r) = m.get("resources_per_trial").and_then(|r| r.as_obj()) {
+                let parts: Vec<String> = r
+                    .iter()
+                    .filter_map(|(k, v)| v.as_f64().map(|f| format!("{k}={f}")))
+                    .collect();
+                println!("resources_per_trial: {}", parts.join(", "));
+            }
             match exp.read_snapshot() {
                 Some(s) => {
                     let finished =
@@ -685,6 +794,27 @@ fn cmd_analyze(flags: &Flags) {
                         },
                         if finished { "" } else { " — resumable with `tune run --resume`" },
                     );
+                    // Mean cluster utilization, from the persisted
+                    // per-result samples (SchedulerCtx sees the same
+                    // numbers live).
+                    let stats = s.get("stats");
+                    let results = stats
+                        .and_then(|st| st.get("results"))
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.0);
+                    if results > 0.0 {
+                        let sum = |k: &str| {
+                            stats
+                                .and_then(|st| st.get(k))
+                                .and_then(|v| v.as_f64())
+                                .unwrap_or(0.0)
+                        };
+                        println!(
+                            "mean cluster utilization: cpu {:.0}%, gpu {:.0}%",
+                            sum("util_cpu_sum") / results * 100.0,
+                            sum("util_gpu_sum") / results * 100.0,
+                        );
+                    }
                 }
                 None => println!("snapshot: none yet"),
             }

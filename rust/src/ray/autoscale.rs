@@ -1,0 +1,435 @@
+//! Elastic cluster autoscaling, the "scale to the workload" half of the
+//! paper's resource model: trials declare demands, the cluster grows
+//! when demand outstrips it and shrinks when nodes go idle.
+//!
+//! The policy is deliberately simple and fully deterministic (ticks are
+//! counted in coordinator events, not wall time, so sim and pool runs
+//! make identical decisions):
+//!
+//! * **Scale up** — after `scale_up_after` consecutive ticks in which a
+//!   pending trial failed placement *and* the node template could hold
+//!   its demand, add one template node (bounded by `max_nodes`).
+//! * **Scale down** — a node whose busiest-dimension utilization stays
+//!   at or below `scale_down_util` for `scale_down_after` consecutive
+//!   ticks is *drained*: placement stops targeting it, the coordinator
+//!   preempts its remaining trials checkpoint-then-requeue at their
+//!   next result, and the node retires once empty — a shrink never
+//!   loses a trial. At most `min_nodes` survivors are never drained.
+//!
+//! The autoscaler only decides; the coordinator (which owns leases and
+//! checkpoints) applies [`AutoscaleAction`]s.
+
+use std::collections::BTreeMap;
+
+use super::cluster::{Cluster, NodeId};
+use super::resources::Resources;
+
+/// Tolerance for the scale-down utilization comparison.
+const UTIL_EPS: f64 = 1e-9;
+
+/// Knobs for the elastic autoscaler.
+#[derive(Clone, Debug)]
+pub struct AutoscalePolicy {
+    /// Capacity of every node added on scale-up.
+    pub node_template: Resources,
+    /// Never drain below this many alive, non-draining nodes.
+    pub min_nodes: usize,
+    /// Never grow past this many alive nodes.
+    pub max_nodes: usize,
+    /// Consecutive unplaceable-pressure ticks before adding a node.
+    pub scale_up_after: u64,
+    /// Consecutive low-utilization ticks before draining a node.
+    pub scale_down_after: u64,
+    /// Utilization (busiest dimension, fraction of capacity) at or
+    /// below which a node counts as scale-down eligible. 0.0 drains
+    /// only fully idle nodes; e.g. 0.2 also consolidates stragglers off
+    /// nearly-empty nodes (their trials are preempted with a checkpoint
+    /// and requeued elsewhere).
+    pub scale_down_util: f64,
+}
+
+impl Default for AutoscalePolicy {
+    fn default() -> Self {
+        AutoscalePolicy {
+            node_template: Resources::cpu(8.0),
+            min_nodes: 1,
+            max_nodes: 8,
+            scale_up_after: 4,
+            scale_down_after: 200,
+            scale_down_util: 0.0,
+        }
+    }
+}
+
+impl AutoscalePolicy {
+    /// Validate knob ranges — the single rule set shared by the CLI
+    /// flags and the spec-file `autoscale` block.
+    pub fn validate(&self) -> Result<(), String> {
+        self.node_template
+            .validate_demand()
+            .map_err(|e| format!("node template: {e}"))?;
+        if self.scale_up_after == 0 || self.scale_down_after == 0 {
+            return Err("scale_up_after and scale_down_after must be >= 1".into());
+        }
+        if !(0.0..=1.0).contains(&self.scale_down_util) {
+            return Err("scale_down_util must be in [0, 1]".into());
+        }
+        if self.min_nodes > self.max_nodes {
+            return Err(format!(
+                "min_nodes {} exceeds max_nodes {}",
+                self.min_nodes, self.max_nodes
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// What the autoscaler wants done this tick (at most one action —
+/// gentle, deterministic steps).
+#[derive(Clone, Debug, PartialEq)]
+pub enum AutoscaleAction {
+    /// Nothing to do.
+    None,
+    /// Add a node with this capacity.
+    AddNode(Resources),
+    /// Drain this node toward retirement (preempt its trials as they
+    /// report, retire it once empty).
+    Drain(NodeId),
+}
+
+/// Deterministic elastic autoscaler: counts queue-pressure and idle
+/// streaks in coordinator ticks and emits one [`AutoscaleAction`] at a
+/// time. Owned by the runner; one per experiment (clusters are
+/// per-experiment, like all other runner state).
+#[derive(Clone, Debug)]
+pub struct Autoscaler {
+    /// The policy being executed.
+    pub policy: AutoscalePolicy,
+    /// Consecutive ticks with unplaceable pending demand.
+    pressure: u64,
+    /// Per-node consecutive low-utilization tick streaks.
+    low_util: BTreeMap<NodeId, u64>,
+}
+
+impl Autoscaler {
+    /// A fresh autoscaler for `policy`.
+    pub fn new(policy: AutoscalePolicy) -> Self {
+        Autoscaler { policy, pressure: 0, low_util: BTreeMap::new() }
+    }
+
+    /// Could adding template nodes ever help `demand`? (Used by the
+    /// coordinator to decide whether an unplaceable backlog is worth
+    /// waiting out or hopeless.) Empty draining nodes do not occupy
+    /// headroom: the zombie sweep retires them on the very next tick —
+    /// counting them would make a run resumed from a mid-drain snapshot
+    /// at `max_nodes` look permanently stuck and finalize with its
+    /// rolled-back trials unrun.
+    pub fn can_grow(&self, cluster: &Cluster, demand: &Resources) -> bool {
+        let occupying = cluster
+            .alive_nodes()
+            .filter(|n| !(n.draining && n.leases.is_empty()))
+            .count();
+        occupying < self.policy.max_nodes && self.policy.node_template.fits(demand)
+    }
+
+    /// Reset a node's low-utilization streak — the coordinator calls
+    /// this when `add_node` reuses a retired slot, so the fresh node
+    /// does not inherit its predecessor's idle history.
+    pub fn reset_streak(&mut self, node: NodeId) {
+        self.low_util.insert(node, 0);
+    }
+
+    /// Serialize mutable state (pressure + per-node streaks) for the
+    /// experiment snapshot, so a resumed run continues the same
+    /// scale-up/scale-down trajectory instead of starting cold.
+    pub fn snapshot(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("pressure", Json::Num(self.pressure as f64)),
+            (
+                "low_util",
+                Json::Obj(
+                    self.low_util
+                        .iter()
+                        .map(|(n, s)| (n.to_string(), Json::Num(*s as f64)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Rebuild state from an [`Autoscaler::snapshot`] value.
+    pub fn restore(&mut self, snap: &crate::util::json::Json) -> Result<(), String> {
+        self.pressure = snap
+            .get("pressure")
+            .and_then(|v| v.as_u64())
+            .ok_or("autoscaler snapshot: bad pressure")?;
+        self.low_util = snap
+            .get("low_util")
+            .and_then(|m| m.as_obj())
+            .ok_or("autoscaler snapshot: bad streaks")?
+            .iter()
+            .map(|(k, v)| Some((k.parse::<NodeId>().ok()?, v.as_u64()?)))
+            .collect::<Option<_>>()
+            .ok_or("autoscaler snapshot: bad streak entry")?;
+        Ok(())
+    }
+
+    /// Advance one tick. `unplaceable` reports whether the coordinator
+    /// failed to place a pending demand of shape `demand` since the
+    /// last tick. Returns at most one action for the coordinator to
+    /// apply.
+    pub fn tick(
+        &mut self,
+        cluster: &Cluster,
+        unplaceable: bool,
+        demand: &Resources,
+    ) -> AutoscaleAction {
+        // Zombie sweep: a draining node whose leases are gone (e.g. a
+        // fault cleared them) must still retire — re-issue the drain so
+        // the coordinator completes it.
+        for n in cluster.alive_nodes() {
+            if n.draining && n.leases.is_empty() {
+                return AutoscaleAction::Drain(n.id);
+            }
+        }
+
+        // Scale up on sustained pressure the template could relieve.
+        if unplaceable && self.policy.node_template.fits(demand) {
+            self.pressure += 1;
+            if self.pressure >= self.policy.scale_up_after
+                && cluster.alive_nodes().count() < self.policy.max_nodes
+            {
+                self.pressure = 0;
+                return AutoscaleAction::AddNode(self.policy.node_template.clone());
+            }
+        } else {
+            self.pressure = 0;
+        }
+
+        // Scale down: drain the first node (id order, deterministic)
+        // whose low-utilization streak crossed the threshold, keeping
+        // at least `min_nodes` non-draining survivors — and never the
+        // demand's last possible home: retiring the only shape that
+        // fits `demand` (with a template that cannot replace it) would
+        // strand every preempted/pending trial of that shape.
+        let survivors = cluster.alive_nodes().filter(|n| !n.draining).count();
+        let template_helps = self.policy.node_template.fits(demand);
+        let mut candidate = None;
+        for n in cluster.alive_nodes() {
+            if n.draining {
+                continue;
+            }
+            let low = n.utilization() <= self.policy.scale_down_util + UTIL_EPS;
+            let streak = self.low_util.entry(n.id).or_insert(0);
+            *streak = if low { *streak + 1 } else { 0 };
+            if candidate.is_none()
+                && *streak >= self.policy.scale_down_after
+                && survivors > self.policy.min_nodes
+            {
+                let last_home = n.total.fits(demand)
+                    && !template_helps
+                    && !cluster
+                        .alive_nodes()
+                        .any(|m| m.id != n.id && !m.draining && m.total.fits(demand));
+                if !last_home {
+                    candidate = Some(n.id);
+                }
+            }
+        }
+        if let Some(id) = candidate {
+            self.low_util.insert(id, 0);
+            return AutoscaleAction::Drain(id);
+        }
+        AutoscaleAction::None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(up: u64, down: u64, util: f64, min: usize, max: usize) -> AutoscalePolicy {
+        AutoscalePolicy {
+            node_template: Resources::cpu_gpu(8.0, 4.0),
+            min_nodes: min,
+            max_nodes: max,
+            scale_up_after: up,
+            scale_down_after: down,
+            scale_down_util: util,
+        }
+    }
+
+    #[test]
+    fn sustained_pressure_adds_a_node() {
+        let mut a = Autoscaler::new(policy(3, 1000, 0.0, 1, 4));
+        let mut c = Cluster::uniform(1, Resources::cpu_gpu(8.0, 4.0));
+        c.lease(0, Resources::cpu_gpu(8.0, 4.0)); // full
+        let d = Resources::cpu_gpu(1.0, 0.5);
+        assert_eq!(a.tick(&c, true, &d), AutoscaleAction::None);
+        assert_eq!(a.tick(&c, true, &d), AutoscaleAction::None);
+        match a.tick(&c, true, &d) {
+            AutoscaleAction::AddNode(cap) => assert_eq!(cap, Resources::cpu_gpu(8.0, 4.0)),
+            other => panic!("{other:?}"),
+        }
+        // Pressure resets after an add.
+        assert_eq!(a.tick(&c, true, &d), AutoscaleAction::None);
+    }
+
+    #[test]
+    fn pressure_ignored_when_template_cannot_help() {
+        let mut a = Autoscaler::new(policy(1, 1000, 0.0, 1, 4));
+        let c = Cluster::uniform(1, Resources::cpu(1.0));
+        // Demand exceeds even the template: adding nodes is pointless.
+        let d = Resources::cpu_gpu(1.0, 9.0);
+        for _ in 0..5 {
+            assert_eq!(a.tick(&c, true, &d), AutoscaleAction::None);
+        }
+        assert!(!a.can_grow(&c, &d));
+        assert!(a.can_grow(&c, &Resources::cpu_gpu(1.0, 0.5)));
+    }
+
+    #[test]
+    fn max_nodes_caps_growth() {
+        let mut a = Autoscaler::new(policy(1, 1000, 0.0, 1, 2));
+        let c = Cluster::uniform(2, Resources::cpu(1.0));
+        let d = Resources::cpu(1.0);
+        for _ in 0..5 {
+            assert_eq!(a.tick(&c, true, &d), AutoscaleAction::None);
+        }
+    }
+
+    #[test]
+    fn idle_streak_drains_above_min_nodes() {
+        let mut a = Autoscaler::new(policy(100, 3, 0.0, 1, 4));
+        let mut c = Cluster::uniform(2, Resources::cpu(4.0));
+        c.lease(0, Resources::cpu(2.0)); // node 0 busy, node 1 idle
+        let d = Resources::cpu(1.0);
+        assert_eq!(a.tick(&c, false, &d), AutoscaleAction::None);
+        assert_eq!(a.tick(&c, false, &d), AutoscaleAction::None);
+        assert_eq!(a.tick(&c, false, &d), AutoscaleAction::Drain(1));
+        c.begin_drain(1);
+        c.retire_node(1);
+        // min_nodes = 1: the survivor is never drained even when idle.
+        let mut b = Autoscaler::new(policy(100, 1, 1.0, 1, 4));
+        let c2 = Cluster::uniform(1, Resources::cpu(4.0));
+        for _ in 0..5 {
+            assert_eq!(b.tick(&c2, false, &d), AutoscaleAction::None);
+        }
+    }
+
+    #[test]
+    fn low_util_threshold_consolidates_stragglers() {
+        let mut a = Autoscaler::new(policy(100, 2, 0.3, 0, 4));
+        let mut c = Cluster::uniform(1, Resources::cpu_gpu(8.0, 4.0));
+        c.lease(0, Resources::cpu_gpu(1.0, 0.5)); // 12.5% busy: a straggler
+        let d = Resources::cpu(1.0);
+        assert_eq!(a.tick(&c, false, &d), AutoscaleAction::None);
+        assert_eq!(a.tick(&c, false, &d), AutoscaleAction::Drain(0));
+    }
+
+    #[test]
+    fn busy_node_resets_its_streak() {
+        let mut a = Autoscaler::new(policy(100, 2, 0.0, 0, 4));
+        let mut c = Cluster::uniform(1, Resources::cpu(4.0));
+        let d = Resources::cpu(1.0);
+        assert_eq!(a.tick(&c, false, &d), AutoscaleAction::None);
+        let l = c.lease(0, Resources::cpu(1.0));
+        assert_eq!(a.tick(&c, false, &d), AutoscaleAction::None); // reset
+        c.release(0, l);
+        assert_eq!(a.tick(&c, false, &d), AutoscaleAction::None);
+        assert_eq!(a.tick(&c, false, &d), AutoscaleAction::Drain(0));
+    }
+
+    #[test]
+    fn never_drains_the_demands_last_home() {
+        // CPU-only template cannot replace the lone GPU node, so the
+        // GPU node is protected however idle it is; the idle CPU node
+        // drains instead — and after that, nothing does.
+        let mut p = policy(100, 2, 1.0, 0, 4);
+        p.node_template = Resources::cpu(8.0);
+        let mut a = Autoscaler::new(p);
+        let mut c = Cluster::heterogeneous(vec![
+            Resources::cpu_gpu(8.0, 4.0),
+            Resources::cpu(8.0),
+        ]);
+        let d = Resources::cpu_gpu(1.0, 0.5);
+        assert_eq!(a.tick(&c, false, &d), AutoscaleAction::None);
+        assert_eq!(a.tick(&c, false, &d), AutoscaleAction::Drain(1));
+        c.begin_drain(1);
+        c.retire_node(1);
+        for _ in 0..5 {
+            assert_eq!(a.tick(&c, false, &d), AutoscaleAction::None);
+        }
+        // A GPU-bearing template lifts the protection.
+        let mut b = Autoscaler::new(policy(100, 2, 1.0, 0, 4));
+        let c2 = Cluster::uniform(1, Resources::cpu_gpu(8.0, 4.0));
+        assert_eq!(b.tick(&c2, false, &d), AutoscaleAction::None);
+        assert_eq!(b.tick(&c2, false, &d), AutoscaleAction::Drain(0));
+    }
+
+    #[test]
+    fn snapshot_roundtrip_preserves_pressure_and_streaks() {
+        let mut a = Autoscaler::new(policy(5, 10, 0.0, 1, 4));
+        let c = Cluster::uniform(2, Resources::cpu(4.0));
+        let d = Resources::cpu(1.0);
+        for _ in 0..3 {
+            a.tick(&c, true, &d); // pressure 3, idle streaks 3
+        }
+        let text = a.snapshot().to_string();
+        let mut b = Autoscaler::new(policy(5, 10, 0.0, 1, 4));
+        b.restore(&crate::util::json::parse(&text).unwrap()).unwrap();
+        // Same continuation: two more pressure ticks trigger the add in
+        // both the original and the restored instance.
+        assert_eq!(a.tick(&c, true, &d), b.tick(&c, true, &d));
+        let (x, y) = (a.tick(&c, true, &d), b.tick(&c, true, &d));
+        assert_eq!(x, y);
+        assert!(matches!(x, AutoscaleAction::AddNode(_)));
+        // Streak reset hook (used when add_node reuses a retired slot).
+        a.reset_streak(0);
+        assert_eq!(a.snapshot().get("low_util").unwrap().get("0").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn empty_draining_node_is_swept() {
+        let mut a = Autoscaler::new(policy(100, 1000, 0.0, 0, 4));
+        let mut c = Cluster::uniform(2, Resources::cpu(4.0));
+        c.begin_drain(0);
+        let d = Resources::cpu(1.0);
+        assert_eq!(a.tick(&c, false, &d), AutoscaleAction::Drain(0));
+    }
+
+    #[test]
+    fn empty_draining_nodes_do_not_occupy_headroom() {
+        // A mid-drain snapshot restored at max_nodes: the empty
+        // draining zombie retires on the next tick, so growth must
+        // still be considered possible — otherwise the resumed run
+        // finalizes with its trials unrun.
+        let a = Autoscaler::new(policy(2, 1000, 0.0, 0, 2));
+        let mut c = Cluster::uniform(2, Resources::cpu_gpu(8.0, 4.0));
+        let d = Resources::cpu_gpu(1.0, 0.5);
+        assert!(!a.can_grow(&c, &d)); // genuinely full
+        c.begin_drain(0);
+        assert!(a.can_grow(&c, &d)); // zombie: about to retire
+        // A draining node still holding leases DOES occupy headroom.
+        c.lease(1, Resources::cpu(1.0));
+        c.begin_drain(1);
+        assert!(a.can_grow(&c, &d));
+        let _ = c.lease(0, Resources::cpu(1.0));
+        assert!(!a.can_grow(&c, &d));
+    }
+
+    #[test]
+    fn policy_validation_rejects_bad_knobs() {
+        assert!(AutoscalePolicy::default().validate().is_ok());
+        let bad_util = AutoscalePolicy { scale_down_util: 2.0, ..Default::default() };
+        assert!(bad_util.validate().is_err());
+        let zero_tick = AutoscalePolicy { scale_up_after: 0, ..Default::default() };
+        assert!(zero_tick.validate().is_err());
+        let inverted = AutoscalePolicy { min_nodes: 9, max_nodes: 2, ..Default::default() };
+        assert!(inverted.validate().is_err());
+        let nan_template =
+            AutoscalePolicy { node_template: Resources::cpu(f64::NAN), ..Default::default() };
+        assert!(nan_template.validate().is_err());
+    }
+}

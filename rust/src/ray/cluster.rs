@@ -25,6 +25,15 @@ pub struct Node {
     pub available: Resources,
     /// False once killed by fault injection (until restarted).
     pub alive: bool,
+    /// Being removed by the autoscaler: the placement layer stops
+    /// putting new work here; once its last lease is released the
+    /// coordinator retires it ([`Cluster::retire_node`]).
+    pub draining: bool,
+    /// Permanently removed by an autoscale shrink. Unlike a
+    /// fault-killed node it never restarts, its capacity does not count
+    /// toward feasibility, and its slot is reused by the next
+    /// [`Cluster::add_node`].
+    pub retired: bool,
     /// Live leases placed on this node: lease -> demand.
     pub leases: BTreeMap<LeaseId, Resources>,
 }
@@ -32,7 +41,15 @@ pub struct Node {
 impl Node {
     /// A fresh, alive node with `total` capacity.
     pub fn new(id: NodeId, total: Resources) -> Self {
-        Node { id, available: total.clone(), total, alive: true, leases: BTreeMap::new() }
+        Node {
+            id,
+            available: total.clone(),
+            total,
+            alive: true,
+            draining: false,
+            retired: false,
+            leases: BTreeMap::new(),
+        }
     }
 
     /// Fraction of CPU capacity currently leased.
@@ -41,6 +58,69 @@ impl Node {
             0.0
         } else {
             1.0 - self.available.cpu / self.total.cpu
+        }
+    }
+
+    /// Fraction of GPU capacity currently leased (0 on GPU-less nodes).
+    pub fn utilization_gpu(&self) -> f64 {
+        if self.total.gpu == 0.0 {
+            0.0
+        } else {
+            1.0 - self.available.gpu / self.total.gpu
+        }
+    }
+
+    /// The busiest dimension's utilization — what the autoscaler's
+    /// scale-down threshold compares against (a node with a busy GPU or
+    /// a saturated custom resource is not "idle" just because its CPUs
+    /// are free).
+    pub fn utilization(&self) -> f64 {
+        let mut u = self.utilization_cpu().max(self.utilization_gpu());
+        for (k, total) in &self.total.custom {
+            if *total > 0.0 {
+                let avail = self.available.custom.get(k).copied().unwrap_or(0.0);
+                u = u.max(1.0 - avail / total);
+            }
+        }
+        u
+    }
+}
+
+/// Aggregate CPU/GPU utilization across alive nodes — the cheap (`Copy`,
+/// allocation-free) snapshot the runner refreshes on every lease change
+/// and exposes through `SchedulerCtx`, `tune status` and run summaries.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Utilization {
+    /// CPU cores currently leased across alive nodes.
+    pub cpu_used: f64,
+    /// Total CPU cores on alive nodes.
+    pub cpu_total: f64,
+    /// GPU devices currently leased across alive nodes.
+    pub gpu_used: f64,
+    /// Total GPU devices on alive nodes.
+    pub gpu_total: f64,
+    /// Alive nodes (draining included — they still hold leases).
+    pub nodes_alive: usize,
+    /// Alive nodes currently draining toward retirement.
+    pub nodes_draining: usize,
+}
+
+impl Utilization {
+    /// Leased fraction of CPU capacity (0 when the cluster has none).
+    pub fn cpu_frac(&self) -> f64 {
+        if self.cpu_total == 0.0 {
+            0.0
+        } else {
+            self.cpu_used / self.cpu_total
+        }
+    }
+
+    /// Leased fraction of GPU capacity (0 when the cluster has none).
+    pub fn gpu_frac(&self) -> f64 {
+        if self.gpu_total == 0.0 {
+            0.0
+        } else {
+            self.gpu_used / self.gpu_total
         }
     }
 }
@@ -68,8 +148,26 @@ impl Cluster {
         c
     }
 
+    /// A heterogeneous node set: one node per capacity vector, in order
+    /// (e.g. two 4-GPU trainers plus two CPU-only preprocessing nodes).
+    pub fn heterogeneous(shapes: Vec<Resources>) -> Self {
+        let mut c = Cluster::new();
+        for s in shapes {
+            c.add_node(s);
+        }
+        c
+    }
+
     /// Add a node with `total` capacity (autoscaling); returns its id.
+    /// Reuses the first retired slot if any, so scale up/down churn
+    /// never grows the node table without bound (fault-killed nodes are
+    /// NOT reused — they may restart with their original capacity).
     pub fn add_node(&mut self, total: Resources) -> NodeId {
+        if let Some(slot) = self.nodes.iter().position(|n| n.retired) {
+            let id = slot as NodeId;
+            self.nodes[slot] = Node::new(id, total);
+            return id;
+        }
         let id = self.nodes.len() as NodeId;
         self.nodes.push(Node::new(id, total));
         id
@@ -111,13 +209,108 @@ impl Cluster {
         std::mem::take(&mut n.leases).into_keys().collect()
     }
 
-    /// Restart a dead node with its original capacity.
+    /// Restart a dead node with its original capacity. Retired nodes
+    /// never come back (their slot belongs to the next `add_node`).
     pub fn restart_node(&mut self, node: NodeId) {
         let n = &mut self.nodes[node as usize];
-        if !n.alive {
+        if !n.alive && !n.retired {
             n.alive = true;
             n.available = n.total.clone();
         }
+    }
+
+    /// Start draining a node: the placement layer stops placing new work
+    /// on it, existing leases keep running until the coordinator sheds
+    /// them (checkpoint-then-requeue). Idempotent.
+    pub fn begin_drain(&mut self, node: NodeId) {
+        self.nodes[node as usize].draining = true;
+    }
+
+    /// Gracefully remove a drained node (autoscale shrink). Unlike
+    /// [`Cluster::kill_node`] this is only legal once every lease is
+    /// gone — the coordinator preempts lease-holders first, so a shrink
+    /// never loses a trial.
+    pub fn retire_node(&mut self, node: NodeId) {
+        let n = &mut self.nodes[node as usize];
+        debug_assert!(n.leases.is_empty(), "retiring node {node} with live leases");
+        n.alive = false;
+        n.draining = false;
+        n.retired = true;
+        n.available = Resources::default();
+    }
+
+    /// Aggregate utilization snapshot over alive nodes (allocation-free).
+    pub fn utilization(&self) -> Utilization {
+        let mut u = Utilization::default();
+        for n in self.alive_nodes() {
+            u.cpu_total += n.total.cpu;
+            u.gpu_total += n.total.gpu;
+            u.cpu_used += n.total.cpu - n.available.cpu;
+            u.gpu_used += n.total.gpu - n.available.gpu;
+            u.nodes_alive += 1;
+            if n.draining {
+                u.nodes_draining += 1;
+            }
+        }
+        u
+    }
+
+    /// Could `demand` ever run on this cluster's node shapes? Checks
+    /// *total* capacities (dead nodes may restart, busy ones free up)
+    /// but skips retired nodes (gone for good) — the fail-fast
+    /// feasibility test behind `resources_per_trial` validation, not an
+    /// admission check.
+    pub fn any_node_fits(&self, demand: &Resources) -> bool {
+        self.nodes.iter().any(|n| !n.retired && n.total.fits(demand))
+    }
+
+    /// Serialize the node table (shapes + alive/draining/retired flags)
+    /// for the experiment snapshot. Leases and free capacity are NOT
+    /// recorded: a resumed run rolls every running trial back and
+    /// re-leases on relaunch, so nodes restore at full availability.
+    pub fn snapshot(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::Arr(
+            self.nodes
+                .iter()
+                .map(|n| {
+                    Json::obj(vec![
+                        ("total", n.total.to_json()),
+                        ("alive", Json::Bool(n.alive)),
+                        ("draining", Json::Bool(n.draining)),
+                        ("retired", Json::Bool(n.retired)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Rebuild a cluster from [`Cluster::snapshot`]: every node at full
+    /// availability with no leases, preserving shapes and
+    /// alive/draining/retired flags — so a resumed autoscaled
+    /// experiment continues on the cluster it actually grew, not the
+    /// initial shape.
+    pub fn restore_nodes(snap: &crate::util::json::Json) -> Result<Cluster, String> {
+        let list = snap.as_arr().ok_or("cluster snapshot: expected node array")?;
+        let mut c = Cluster::new();
+        for (i, nj) in list.iter().enumerate() {
+            let flag = |k: &str| nj.get(k).and_then(|v| v.as_bool()).unwrap_or(false);
+            let total = nj
+                .get("total")
+                .and_then(Resources::from_json)
+                .ok_or("cluster snapshot: bad node capacity")?;
+            // Push directly (not add_node: it would reuse a slot we
+            // just restored as retired and corrupt the id mapping).
+            let mut n = Node::new(i as NodeId, total);
+            n.alive = flag("alive");
+            n.draining = flag("draining");
+            n.retired = flag("retired");
+            if !n.alive {
+                n.available = Resources::default();
+            }
+            c.nodes.push(n);
+        }
+        Ok(c)
     }
 
     /// Iterator over nodes that are currently alive.
@@ -192,5 +385,109 @@ mod tests {
         let mut c = Cluster::uniform(3, Resources::cpu(2.0));
         c.kill_node(1);
         assert_eq!(c.total_available().cpu, 4.0);
+    }
+
+    #[test]
+    fn heterogeneous_shapes_and_feasibility() {
+        let c = Cluster::heterogeneous(vec![
+            Resources::cpu_gpu(8.0, 4.0),
+            Resources::cpu(8.0),
+        ]);
+        assert_eq!(c.nodes.len(), 2);
+        assert!(c.any_node_fits(&Resources::cpu_gpu(1.0, 0.5)));
+        assert!(c.any_node_fits(&Resources::cpu(8.0)));
+        assert!(!c.any_node_fits(&Resources::cpu_gpu(0.0, 9.0)));
+        assert!(!c.any_node_fits(&Resources::cpu(16.0)));
+    }
+
+    #[test]
+    fn drain_then_retire_lifecycle() {
+        let mut c = Cluster::uniform(2, Resources::cpu_gpu(4.0, 2.0));
+        let l = c.lease(0, Resources::cpu_gpu(1.0, 0.5));
+        c.begin_drain(0);
+        assert!(c.node(0).alive && c.node(0).draining);
+        c.release(0, l);
+        c.retire_node(0);
+        assert!(!c.node(0).alive && !c.node(0).draining && c.node(0).retired);
+        assert_eq!(c.total_available().cpu, 4.0);
+        assert!(c.check_invariants());
+        // Retired nodes never restart and never count for feasibility.
+        c.restart_node(0);
+        assert!(!c.node(0).alive);
+        assert!(!Cluster::uniform(0, Resources::default())
+            .any_node_fits(&Resources::cpu(1.0)));
+        c.retire_node(1);
+        assert!(!c.any_node_fits(&Resources::cpu(1.0)));
+    }
+
+    #[test]
+    fn add_node_reuses_retired_slots_only() {
+        let mut c = Cluster::uniform(2, Resources::cpu(4.0));
+        c.kill_node(0); // fault-killed: may restart, slot NOT reusable
+        c.retire_node(1);
+        let id = c.add_node(Resources::cpu_gpu(8.0, 2.0));
+        assert_eq!(id, 1, "retired slot must be reused");
+        assert_eq!(c.nodes.len(), 2);
+        assert!(c.node(1).alive && !c.node(1).retired);
+        assert_eq!(c.node(1).total, Resources::cpu_gpu(8.0, 2.0));
+        // No retired slot left: append.
+        let id = c.add_node(Resources::cpu(2.0));
+        assert_eq!(id, 2);
+        assert_eq!(c.nodes.len(), 3);
+        // The fault-killed node is still restartable.
+        c.restart_node(0);
+        assert!(c.node(0).alive);
+    }
+
+    #[test]
+    fn cluster_snapshot_roundtrip_preserves_shapes_and_flags() {
+        let mut c = Cluster::heterogeneous(vec![
+            Resources::cpu_gpu(8.0, 4.0).with_custom("tpu", 2.0),
+            Resources::cpu(8.0),
+            Resources::cpu(4.0),
+        ]);
+        c.lease(0, Resources::cpu_gpu(1.0, 0.5)); // leases are NOT persisted
+        c.begin_drain(1);
+        c.retire_node(2);
+        let text = c.snapshot().to_string();
+        let back =
+            Cluster::restore_nodes(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.nodes.len(), 3);
+        assert_eq!(back.node(0).total, c.node(0).total);
+        // Restored at full availability, no leases.
+        assert_eq!(back.node(0).available, back.node(0).total);
+        assert!(back.node(0).leases.is_empty());
+        assert!(back.node(1).draining && back.node(1).alive);
+        assert!(back.node(2).retired && !back.node(2).alive);
+        assert!(back.check_invariants());
+        // A retired slot restored as retired is still reusable.
+        assert_eq!(back.clone().add_node(Resources::cpu(1.0)), 2);
+    }
+
+    #[test]
+    fn utilization_tracks_leases_and_draining() {
+        let mut c = Cluster::heterogeneous(vec![
+            Resources::cpu_gpu(8.0, 4.0),
+            Resources::cpu(8.0),
+        ]);
+        c.lease(0, Resources::cpu_gpu(2.0, 1.0));
+        c.begin_drain(1);
+        let u = c.utilization();
+        assert_eq!(u.cpu_total, 16.0);
+        assert_eq!(u.gpu_total, 4.0);
+        assert!((u.cpu_frac() - 2.0 / 16.0).abs() < 1e-9);
+        assert!((u.gpu_frac() - 0.25).abs() < 1e-9);
+        assert_eq!(u.nodes_alive, 2);
+        assert_eq!(u.nodes_draining, 1);
+        assert!((c.node(0).utilization() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn node_utilization_counts_custom_dimensions() {
+        // A node fully busy on a custom resource must not look idle to
+        // the autoscaler just because cpu/gpu are mostly free.
+        let mut c = Cluster::uniform(1, Resources::cpu(16.0).with_custom("tpu", 2.0));
+        c.lease(0, Resources::cpu(2.0).with_custom("tpu", 2.0));
+        assert!((c.node(0).utilization() - 1.0).abs() < 1e-9);
     }
 }

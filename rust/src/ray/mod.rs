@@ -9,13 +9,15 @@
 //! run on the discrete-event executor (virtual time) or on real threads
 //! driving PJRT executables.
 
+pub mod autoscale;
 pub mod cluster;
 pub mod fault;
 pub mod object_store;
 pub mod placement;
 pub mod resources;
 
-pub use cluster::{Cluster, LeaseId, Node, NodeId};
+pub use autoscale::{AutoscaleAction, AutoscalePolicy, Autoscaler};
+pub use cluster::{Cluster, LeaseId, Node, NodeId, Utilization};
 pub use fault::{FaultInjector, FaultPlan};
 pub use object_store::{ObjectId, ObjectStore};
 pub use placement::{Placement, PlacementStats, TwoLevelScheduler};

@@ -72,10 +72,11 @@ impl TwoLevelScheduler {
         origin: NodeId,
         demand: &Resources,
     ) -> Option<Placement> {
-        // Level 1: local decision.
+        // Level 1: local decision. Draining nodes are never placement
+        // targets — the autoscaler is emptying them.
         {
             let n = cluster.node(origin);
-            if n.alive && n.available.fits(demand) {
+            if n.alive && !n.draining && n.available.fits(demand) {
                 let lease = cluster.lease(origin, demand.clone());
                 self.stats.local += 1;
                 return Some(Placement { node: origin, lease, spilled: false });
@@ -89,7 +90,7 @@ impl TwoLevelScheduler {
                 continue;
             }
             let n = cluster.node(id);
-            if n.alive && n.available.fits(demand) {
+            if n.alive && !n.draining && n.available.fits(demand) {
                 self.cursor = (self.cursor + k + 1) % n_nodes;
                 let lease = cluster.lease(id, demand.clone());
                 self.stats.spilled += 1;
@@ -110,7 +111,7 @@ impl TwoLevelScheduler {
     ) -> Option<Placement> {
         let mut best: Option<(NodeId, f64)> = None;
         for n in cluster.nodes.iter() {
-            if n.alive && n.available.fits(demand) {
+            if n.alive && !n.draining && n.available.fits(demand) {
                 let load = n.utilization_cpu();
                 if best.map_or(true, |(_, b)| load < b) {
                     best = Some((n.id, load));
@@ -173,6 +174,18 @@ mod tests {
         let mut s = TwoLevelScheduler::new();
         let p = s.place(&mut c, 0, &Resources::cpu(1.0)).unwrap();
         assert_eq!(p.node, 1);
+    }
+
+    #[test]
+    fn skips_draining_nodes() {
+        let mut c = Cluster::uniform(2, Resources::cpu(2.0));
+        c.begin_drain(0);
+        let mut s = TwoLevelScheduler::new();
+        let p = s.place(&mut c, 0, &Resources::cpu(1.0)).unwrap();
+        assert_eq!(p.node, 1);
+        // Node 1 still has free capacity, but draining blocks it too.
+        c.begin_drain(1);
+        assert!(s.place(&mut c, 0, &Resources::cpu(1.0)).is_none());
     }
 
     #[test]

@@ -12,7 +12,7 @@ const EPS: f64 = 1e-9;
 
 /// A resource vector: CPU + GPU + named custom quantities, fractional
 /// amounts allowed. Used both as node capacity and as trial demand.
-#[derive(Clone, Debug, Default, PartialEq)]
+#[derive(Clone, Debug, Default)]
 pub struct Resources {
     /// CPU cores (fractional allowed).
     pub cpu: f64,
@@ -20,6 +20,32 @@ pub struct Resources {
     pub gpu: f64,
     /// Named custom resources (e.g. "tpu", "mem").
     pub custom: BTreeMap<String, f64>,
+}
+
+/// EPS-tolerant equality, matching the tolerance every fit/accounting
+/// check in this module already uses. A raw-f64 derive would make a
+/// vector that went through `acquire` + `release` compare unequal to its
+/// original (floating-point round-trip error), while `fits` treats the
+/// two as interchangeable. A custom key that one side omits compares
+/// equal to an explicit 0.0 on the other, mirroring `fits`. Tolerant
+/// comparisons are not transitive, so this is an accounting-equality
+/// check, not a total equivalence — don't use `Resources` as a map key.
+impl PartialEq for Resources {
+    fn eq(&self, other: &Self) -> bool {
+        let close = |a: f64, b: f64| (a - b).abs() < EPS;
+        close(self.cpu, other.cpu)
+            && close(self.gpu, other.gpu)
+            && self
+                .custom
+                .keys()
+                .chain(other.custom.keys())
+                .all(|k| {
+                    close(
+                        self.custom.get(k).copied().unwrap_or(0.0),
+                        other.custom.get(k).copied().unwrap_or(0.0),
+                    )
+                })
+    }
 }
 
 impl Resources {
@@ -82,6 +108,72 @@ impl Resources {
     pub fn is_valid(&self) -> bool {
         self.cpu > -EPS && self.gpu > -EPS && self.custom.values().all(|v| *v > -EPS)
     }
+
+    /// Validate a user-supplied *demand* vector: every quantity must be
+    /// finite and non-negative. A NaN or negative demand would silently
+    /// corrupt every downstream fit (`NaN` compares false both ways, so
+    /// a NaN demand "fits" everywhere while wrecking the accounting).
+    pub fn validate_demand(&self) -> Result<(), String> {
+        let ok = |v: f64| v.is_finite() && v >= 0.0;
+        if !ok(self.cpu) {
+            return Err(format!("cpu demand {} must be finite and >= 0", self.cpu));
+        }
+        if !ok(self.gpu) {
+            return Err(format!("gpu demand {} must be finite and >= 0", self.gpu));
+        }
+        for (k, v) in &self.custom {
+            if !ok(*v) {
+                return Err(format!("custom demand {k}={v} must be finite and >= 0"));
+            }
+        }
+        Ok(())
+    }
+
+    /// This vector scaled by a non-negative factor (fair-share math:
+    /// an experiment's resource share is `total * weight / total_weight`).
+    pub fn scaled(&self, factor: f64) -> Resources {
+        Resources {
+            cpu: self.cpu * factor,
+            gpu: self.gpu * factor,
+            custom: self.custom.iter().map(|(k, v)| (k.clone(), v * factor)).collect(),
+        }
+    }
+
+    /// Serialize as a flat `{cpu, gpu, <custom>...}` JSON map — the one
+    /// encoding shared by cluster snapshots and experiment manifests.
+    /// Custom keys cannot collide with the named fields: the spec
+    /// parser routes "cpu"/"gpu" to the struct fields, never into
+    /// `custom`.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::Obj(
+            [
+                ("cpu".to_string(), Json::Num(self.cpu)),
+                ("gpu".to_string(), Json::Num(self.gpu)),
+            ]
+            .into_iter()
+            .chain(self.custom.iter().map(|(k, v)| (k.clone(), Json::Num(*v))))
+            .collect(),
+        )
+    }
+
+    /// Rebuild from a [`Resources::to_json`] map (unknown keys are
+    /// custom resources; absent `cpu`/`gpu` default to 0).
+    pub fn from_json(j: &crate::util::json::Json) -> Option<Resources> {
+        let obj = j.as_obj()?;
+        let mut r = Resources::default();
+        for (k, v) in obj {
+            let amount = v.as_f64()?;
+            match k.as_str() {
+                "cpu" => r.cpu = amount,
+                "gpu" => r.gpu = amount,
+                _ => {
+                    r.custom.insert(k.clone(), amount);
+                }
+            }
+        }
+        Some(r)
+    }
 }
 
 impl fmt::Display for Resources {
@@ -124,6 +216,51 @@ mod tests {
         assert_eq!(cap.cpu, 5.0);
         cap.release(&d);
         assert_eq!(cap, Resources::cpu_gpu(8.0, 2.0).with_custom("mem", 64.0));
+    }
+
+    #[test]
+    fn equality_is_eps_tolerant() {
+        // A release/acquire round trip may leave ~1e-16 of float dust;
+        // the vectors must still compare equal.
+        let a = Resources::cpu_gpu(0.3, 0.1);
+        let mut b = Resources::cpu_gpu(0.1 + 0.2, 0.1);
+        assert_eq!(a, b);
+        // Absent custom key == explicit zero, mirroring `fits`.
+        b.custom.insert("tpu".into(), 0.0);
+        assert_eq!(a, b);
+        b.custom.insert("tpu".into(), 1.0);
+        assert_ne!(a, b);
+        assert_ne!(a, Resources::cpu_gpu(0.3 + 1e-6, 0.1));
+    }
+
+    #[test]
+    fn validate_demand_rejects_nan_and_negative() {
+        assert!(Resources::cpu_gpu(1.0, 0.5).validate_demand().is_ok());
+        assert!(Resources::cpu(f64::NAN).validate_demand().is_err());
+        assert!(Resources::cpu_gpu(1.0, -0.5).validate_demand().is_err());
+        assert!(Resources::cpu_gpu(1.0, f64::INFINITY).validate_demand().is_err());
+        assert!(Resources::cpu(1.0).with_custom("tpu", f64::NAN).validate_demand().is_err());
+        assert!(Resources::cpu(1.0).with_custom("tpu", -1.0).validate_demand().is_err());
+        assert!(Resources::default().validate_demand().is_ok());
+    }
+
+    #[test]
+    fn scaled_scales_every_dimension() {
+        let r = Resources::cpu_gpu(8.0, 2.0).with_custom("tpu", 4.0).scaled(0.25);
+        assert_eq!(r, Resources::cpu_gpu(2.0, 0.5).with_custom("tpu", 1.0));
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_every_dimension() {
+        let r = Resources::cpu_gpu(0.5, 0.25).with_custom("tpu", 2.0);
+        let text = r.to_json().to_string();
+        let back = Resources::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(
+            Resources::from_json(&crate::util::json::parse("{}").unwrap()),
+            Some(Resources::default())
+        );
+        assert!(Resources::from_json(&crate::util::json::parse("[1]").unwrap()).is_none());
     }
 
     #[test]

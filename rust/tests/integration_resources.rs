@@ -1,0 +1,463 @@
+//! Resource-aware trials end to end: fractional CPU/GPU demands flowing
+//! from the spec through placement, heterogeneous clusters, elastic
+//! autoscaling with checkpoint-then-requeue preemption, executor-side
+//! capacity vectors, fail-fast infeasibility — and sim-vs-pool
+//! determinism of all of it (the ISSUE 5 acceptance scenarios).
+
+use std::path::PathBuf;
+
+use tune::coordinator::spec::{SearchSpace, SpaceBuilder};
+use tune::coordinator::trial::Config;
+use tune::coordinator::{
+    build_runner, run_experiments, ExecMode, ExperimentResult, ExperimentSpec, Mode, RunOptions,
+    SchedulerKind, SearchKind, TrialStatus,
+};
+use tune::ray::{AutoscalePolicy, Cluster, Resources};
+use tune::trainable::synthetic::CurveTrainable;
+use tune::trainable::{factory, StepOutput, Trainable, TrainableFactory};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("tune_resources_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn curve_space() -> SearchSpace {
+    SpaceBuilder::new()
+        .loguniform("lr", 1e-4, 1.0)
+        .uniform("momentum", 0.8, 0.99)
+        .build()
+}
+
+fn spec(name: &str, samples: usize, iters: u64, seed: u64) -> ExperimentSpec {
+    let mut spec = ExperimentSpec::named(name);
+    spec.metric = "accuracy".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = samples;
+    spec.max_iterations_per_trial = iters;
+    spec.seed = seed;
+    spec
+}
+
+/// Two 4-GPU trainer nodes plus two CPU-only nodes — the heterogeneous
+/// cluster of the acceptance scenario.
+fn het_cluster() -> Cluster {
+    Cluster::heterogeneous(vec![
+        Resources::cpu_gpu(8.0, 4.0),
+        Resources::cpu_gpu(8.0, 4.0),
+        Resources::cpu(8.0),
+        Resources::cpu(8.0),
+    ])
+}
+
+/// [`CurveTrainable`] with a constant 1.0s step cost. With uniform step
+/// costs the sim executor's virtual-time ordering degenerates to FIFO —
+/// exactly the order a single-worker pool executes in — so sim and pool
+/// produce identical event streams and therefore identical scheduler
+/// decisions, autoscale ticks and preemptions. (The per-trial random
+/// cost of the raw curve trainable is what usually makes virtual
+/// ordering diverge from wall ordering.)
+struct UniformCostCurve(CurveTrainable);
+
+impl Trainable for UniformCostCurve {
+    fn step(&mut self) -> Result<StepOutput, String> {
+        self.0.step()
+    }
+    fn save(&mut self) -> Vec<u8> {
+        self.0.save()
+    }
+    fn restore(&mut self, blob: &[u8]) -> Result<(), String> {
+        self.0.restore(blob)
+    }
+    fn update_config(&mut self, config: &Config) {
+        self.0.update_config(config)
+    }
+    fn step_cost(&self) -> f64 {
+        1.0
+    }
+}
+
+fn uniform_curve_factory() -> TrainableFactory {
+    factory(|c, s| Box::new(UniformCostCurve(CurveTrainable::new(c, s))))
+}
+
+/// Clock-free fingerprint (id, status, iteration, config, metric bits):
+/// byte-identical across executors means identical semantics.
+fn fingerprint(res: &ExperimentResult) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    for t in res.trials.values() {
+        writeln!(
+            out,
+            "{}|{}|{}|{}|{}",
+            t.id,
+            t.status.as_str(),
+            t.iteration,
+            tune::coordinator::trial::config_str(&t.config),
+            t.best_metric.map(f64::to_bits).unwrap_or(0),
+        )
+        .unwrap();
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Fail fast on unsatisfiable demands
+// ---------------------------------------------------------------------------
+
+/// A gpu=9 demand on a cluster whose largest node has 4 GPUs must error
+/// out before launching (or even creating) any trial — on the sim AND
+/// the pool executor.
+#[test]
+fn unsatisfiable_gpu_demand_errors_before_any_launch() {
+    for exec in [ExecMode::Sim, ExecMode::Pool { workers: 2 }] {
+        let mut sp = spec("infeasible", 8, 10, 1);
+        sp.resources_per_trial = Resources::cpu_gpu(1.0, 9.0);
+        let res = run_experiments(
+            sp,
+            curve_space(),
+            SchedulerKind::Fifo,
+            SearchKind::Random,
+            uniform_curve_factory(),
+            RunOptions { cluster: het_cluster(), exec, ..Default::default() },
+        );
+        let msg = res.infeasible.as_deref().expect("must report infeasibility");
+        assert!(msg.contains("unsatisfiable"), "{msg}");
+        assert_eq!(res.stats.launches, 0, "launched a trial despite infeasibility");
+        assert!(res.trials.is_empty(), "created trials despite infeasibility");
+        assert_eq!(res.stats.results, 0);
+    }
+}
+
+/// NaN / negative demands are rejected the same way (never reach the
+/// accounting), and a feasible demand reports no error.
+#[test]
+fn garbage_demands_fail_fast_and_clean_demands_do_not() {
+    let mut bad = spec("nan-demand", 4, 5, 2);
+    bad.resources_per_trial = Resources::cpu(f64::NAN);
+    let res = run_experiments(
+        bad,
+        curve_space(),
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        uniform_curve_factory(),
+        RunOptions { cluster: het_cluster(), ..Default::default() },
+    );
+    assert!(res.infeasible.is_some());
+    assert!(res.trials.is_empty());
+
+    let mut ok = spec("ok-demand", 4, 5, 2);
+    ok.resources_per_trial = Resources::cpu_gpu(1.0, 0.5);
+    let res = run_experiments(
+        ok,
+        curve_space(),
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        uniform_curve_factory(),
+        RunOptions { cluster: het_cluster(), ..Default::default() },
+    );
+    assert!(res.infeasible.is_none());
+    assert_eq!(res.count(TrialStatus::Completed), 4);
+}
+
+// ---------------------------------------------------------------------------
+// Placement honors demands; scarce capacity parks trials as Pending
+// ---------------------------------------------------------------------------
+
+/// Fractional-GPU trials only ever land on GPU-bearing nodes, and
+/// capacity bounds concurrency: 8 GPUs at 0.5/trial = 16 concurrent.
+#[test]
+fn gpu_demands_place_only_on_gpu_nodes_and_bound_parallelism() {
+    let mut sp = spec("placement", 24, 8, 3);
+    sp.resources_per_trial = Resources::cpu_gpu(1.0, 0.5);
+    let res = run_experiments(
+        sp,
+        curve_space(),
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        uniform_curve_factory(),
+        RunOptions { cluster: het_cluster(), ..Default::default() },
+    );
+    assert_eq!(res.count(TrialStatus::Completed), 24);
+    for t in res.trials.values() {
+        let node = t.node.expect("every trial ran somewhere");
+        assert!(node < 2, "gpu trial {} placed on CPU-only node {node}", t.id);
+    }
+    // 24 trials over 16 GPU slots: someone had to wait (placement
+    // failures are the Pending-parking signal, not errors)...
+    assert!(res.placement.failed > 0);
+    assert_eq!(res.stats.errored, 0);
+    // ...and the virtual duration reflects ≤16-way parallelism.
+    assert!(res.duration_s >= res.budget_used_s / 16.0 - 1e-6);
+}
+
+/// A demand that fits the cluster but exceeds every *executor worker*
+/// capacity vector errors trials with a clear message instead of
+/// hanging (the executor-side Infeasible path).
+#[test]
+fn executor_worker_capacity_infeasible_errors_trials() {
+    let mut sp = spec("worker-infeasible", 3, 5, 4);
+    sp.resources_per_trial = Resources::cpu(2.0);
+    let res = run_experiments(
+        sp,
+        curve_space(),
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        uniform_curve_factory(),
+        RunOptions {
+            cluster: Cluster::uniform(1, Resources::cpu(8.0)),
+            exec: ExecMode::Pool { workers: 2 },
+            // Each worker holds 1 CPU: a 2-CPU trainable fits nowhere.
+            worker_caps: Some(vec![Resources::cpu(1.0), Resources::cpu(1.0)]),
+            ..Default::default()
+        },
+    );
+    assert_eq!(res.count(TrialStatus::Errored), res.trials.len());
+    assert!(!res.trials.is_empty());
+}
+
+/// Executor capacity vectors bound live trainables: 2 one-CPU workers
+/// serve 6 one-CPU trials by parking the overflow as Pending until
+/// capacity frees — everything still completes.
+#[test]
+fn executor_worker_capacity_exhaustion_parks_and_completes() {
+    let mut sp = spec("worker-exhausted", 6, 5, 5);
+    sp.resources_per_trial = Resources::cpu(1.0);
+    let res = run_experiments(
+        sp,
+        curve_space(),
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        uniform_curve_factory(),
+        RunOptions {
+            cluster: Cluster::uniform(1, Resources::cpu(64.0)),
+            exec: ExecMode::Pool { workers: 2 },
+            worker_caps: Some(vec![Resources::cpu(1.0), Resources::cpu(1.0)]),
+            ..Default::default()
+        },
+    );
+    assert_eq!(res.count(TrialStatus::Completed), 6);
+    assert_eq!(res.stats.errored, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Elastic autoscaling: shrink never loses a trial
+// ---------------------------------------------------------------------------
+
+/// Aggressive consolidation: every node (even one hosting trials) falls
+/// under the 80% scale-down threshold, so draining repeatedly preempts
+/// running trials — checkpoint-then-requeue must carry every trial to
+/// completion with zero lost iterations, across repeated shrink/grow
+/// churn.
+#[test]
+fn drain_preempts_checkpoint_then_requeue_loses_nothing() {
+    let mut sp = spec("drain", 3, 12, 6);
+    sp.resources_per_trial = Resources::cpu(1.0);
+    let res = run_experiments(
+        sp,
+        curve_space(),
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        uniform_curve_factory(),
+        RunOptions {
+            cluster: Cluster::uniform(2, Resources::cpu(4.0)),
+            autoscale: Some(AutoscalePolicy {
+                node_template: Resources::cpu(4.0),
+                min_nodes: 0,
+                max_nodes: 2,
+                scale_up_after: 2,
+                scale_down_after: 10,
+                scale_down_util: 0.8,
+            }),
+            ..Default::default()
+        },
+    );
+    assert_eq!(res.count(TrialStatus::Completed), 3, "{:?}", res.stats);
+    assert_eq!(res.stats.errored, 0);
+    // Every completed trial reached full term: preemption lost nothing.
+    assert_eq!(res.total_iterations(), 3 * 12);
+    assert!(res.stats.preemptions >= 3, "no preemption happened: {:?}", res.stats);
+    assert!(res.stats.scale_downs >= 1, "{:?}", res.stats);
+    assert!(res.stats.scale_ups >= 1, "{:?}", res.stats);
+    // Preempted trials relaunched from their preemption checkpoints.
+    assert!(res.stats.restores >= res.stats.preemptions);
+}
+
+/// The acceptance scenario: a 64-trial ASHA run with 0.5-GPU demands on
+/// the heterogeneous cluster, under an elastic autoscaler that grows on
+/// queue pressure and shrinks as ASHA culls the population. It must
+/// complete with no lost trials across the shrink, and the sim and
+/// (single-worker) pool executors must produce byte-identical
+/// fingerprints — identical best trial included — because uniform step
+/// costs make both event streams FIFO.
+#[test]
+fn asha_64_halfgpu_autoscaled_identical_on_sim_and_pool() {
+    let run = |exec: ExecMode| {
+        let mut sp = spec("asha-het", 64, 27, 7);
+        sp.resources_per_trial = Resources::cpu_gpu(1.0, 0.5);
+        sp.checkpoint_freq = 5;
+        run_experiments(
+            sp,
+            curve_space(),
+            SchedulerKind::Asha { grace_period: 1, reduction_factor: 3.0, max_t: 27 },
+            SearchKind::Random,
+            uniform_curve_factory(),
+            RunOptions {
+                cluster: het_cluster(),
+                exec,
+                autoscale: Some(AutoscalePolicy {
+                    node_template: Resources::cpu_gpu(8.0, 4.0),
+                    min_nodes: 2,
+                    max_nodes: 6,
+                    scale_up_after: 3,
+                    scale_down_after: 60,
+                    scale_down_util: 0.3,
+                }),
+                ..Default::default()
+            },
+        )
+    };
+    let sim = run(ExecMode::Sim);
+    // All 64 trials accounted for, none lost, none errored.
+    assert_eq!(sim.trials.len(), 64);
+    for t in sim.trials.values() {
+        assert!(t.status.is_terminal(), "trial {} stuck in {:?}", t.id, t.status);
+    }
+    assert_eq!(sim.stats.errored, 0);
+    assert_eq!(
+        sim.count(TrialStatus::Completed) + sim.count(TrialStatus::Stopped),
+        64
+    );
+    // The elastic story actually happened: pressure grew the cluster,
+    // the post-cull idle capacity shrank it.
+    assert!(sim.stats.scale_ups >= 1, "never scaled up: {:?}", sim.stats);
+    assert!(sim.stats.scale_downs >= 1, "never scaled down: {:?}", sim.stats);
+    assert!(sim.stats.stopped_early > 0, "ASHA culled nothing");
+
+    let pool = run(ExecMode::Pool { workers: 1 });
+    assert_eq!(fingerprint(&pool), fingerprint(&sim), "sim/pool fingerprints diverge");
+    assert_eq!(pool.best, sim.best, "best trial differs");
+    assert_eq!(
+        pool.best_metric().map(f64::to_bits),
+        sim.best_metric().map(f64::to_bits),
+        "best metric bits differ"
+    );
+    // The autoscale/preemption trajectory is part of the determinism
+    // contract too.
+    assert_eq!(pool.stats.preemptions, sim.stats.preemptions);
+    assert_eq!(pool.stats.scale_ups, sim.stats.scale_ups);
+    assert_eq!(pool.stats.scale_downs, sim.stats.scale_downs);
+}
+
+/// The scaled cluster survives the durable snapshot: resuming an
+/// autoscaled run restores the node set the run actually ended on
+/// (grown/retired shape included), not the initial RunOptions cluster.
+#[test]
+fn autoscaled_cluster_shape_survives_resume() {
+    let dir = tmpdir("autoscale");
+    let policy = AutoscalePolicy {
+        node_template: Resources::cpu(4.0),
+        min_nodes: 0,
+        max_nodes: 2,
+        scale_up_after: 2,
+        scale_down_after: 10,
+        scale_down_util: 0.8,
+    };
+    let mk_spec = || {
+        let mut sp = spec("autoscale-durable", 3, 12, 6);
+        sp.resources_per_trial = Resources::cpu(1.0);
+        sp
+    };
+    let opts = |resume: bool| RunOptions {
+        cluster: Cluster::uniform(2, Resources::cpu(4.0)),
+        autoscale: Some(policy.clone()),
+        experiment_dir: Some(dir.clone()),
+        snapshot_every: 5,
+        resume,
+        ..Default::default()
+    };
+    let res = run_experiments(
+        mk_spec(),
+        curve_space(),
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        uniform_curve_factory(),
+        opts(false),
+    );
+    assert_eq!(res.count(TrialStatus::Completed), 3);
+    assert!(res.stats.scale_ups >= 1 && res.stats.scale_downs >= 1, "{:?}", res.stats);
+    let runner = build_runner(
+        mk_spec(),
+        curve_space(),
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        uniform_curve_factory(),
+        opts(true),
+    );
+    // The restored cluster matches the run's final shape, not the
+    // 2-node constructor cluster the drains retired from.
+    assert_eq!(
+        runner.utilization().nodes_alive,
+        res.final_utilization.nodes_alive,
+        "resume reset the autoscaled cluster"
+    );
+    assert_eq!(runner.trials().len(), 3);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Demands survive snapshot / resume
+// ---------------------------------------------------------------------------
+
+/// Fractional + custom resource demands round-trip through the durable
+/// snapshot: a resumed runner's trial table carries the exact vectors.
+#[test]
+fn resource_demands_survive_snapshot_and_resume() {
+    let dir = tmpdir("demands");
+    let demand = Resources::cpu_gpu(0.5, 0.25).with_custom("tpu", 1.0);
+    let mk_spec = || {
+        let mut sp = spec("demand-durable", 4, 6, 8);
+        sp.resources_per_trial = demand.clone();
+        sp
+    };
+    let cluster = || {
+        Cluster::uniform(1, Resources::cpu_gpu(4.0, 2.0).with_custom("tpu", 8.0))
+    };
+    let res = run_experiments(
+        mk_spec(),
+        curve_space(),
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        uniform_curve_factory(),
+        RunOptions {
+            cluster: cluster(),
+            experiment_dir: Some(dir.clone()),
+            snapshot_every: 5,
+            ..Default::default()
+        },
+    );
+    assert_eq!(res.count(TrialStatus::Completed), 4);
+    for t in res.trials.values() {
+        assert_eq!(t.resources, demand);
+    }
+    // Resume the finished experiment: the restored table must carry the
+    // same demand vectors (EPS-aware equality).
+    let runner = build_runner(
+        mk_spec(),
+        curve_space(),
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        uniform_curve_factory(),
+        RunOptions {
+            cluster: cluster(),
+            experiment_dir: Some(dir.clone()),
+            resume: true,
+            ..Default::default()
+        },
+    );
+    assert_eq!(runner.trials().len(), 4);
+    for t in runner.trials().values() {
+        assert_eq!(t.resources, demand, "restored demand drifted for trial {}", t.id);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

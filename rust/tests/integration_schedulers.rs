@@ -254,6 +254,163 @@ fn experiments_replay_bit_identically() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Conformance matrix: every scheduler × search algorithm × executor
+// ---------------------------------------------------------------------------
+
+/// A stable, clock-free fingerprint of an experiment outcome: one line
+/// per trial (id, status, iterations, mutations, config, best-metric
+/// bits). Times are deliberately excluded — sim reports virtual
+/// seconds, pool/threads report wall seconds — so byte-identical
+/// fingerprints mean the *semantics* matched across substrates.
+fn fingerprint(res: &tune::coordinator::ExperimentResult) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    for t in res.trials.values() {
+        writeln!(
+            out,
+            "{}|{}|{}|{}|{}|{}",
+            t.id,
+            t.status.as_str(),
+            t.iteration,
+            t.mutations,
+            tune::coordinator::trial::config_str(&t.config),
+            t.best_metric.map(f64::to_bits).unwrap_or(0),
+        )
+        .unwrap();
+    }
+    writeln!(
+        out,
+        "best={:?} best_bits={}",
+        res.best,
+        res.best_metric().map(f64::to_bits).unwrap_or(0)
+    )
+    .unwrap();
+    out
+}
+
+/// One conformance cell: a small-budget experiment under the given
+/// scheduler/search/executor. `max_concurrent = 1` serializes execution,
+/// which makes the event stream — and therefore every scheduler and
+/// search decision — identical on all three substrates, turning the
+/// fingerprint comparison into a strict executor-transparency check.
+fn conformance_run(
+    sched: SchedulerKind,
+    search: SearchKind,
+    exec: ExecMode,
+) -> tune::coordinator::ExperimentResult {
+    let mut spec = curve_spec("conformance", 4, 8, 13);
+    spec.max_concurrent = 1;
+    spec.checkpoint_freq = 3; // exercise save/restore on every substrate
+    let space = SpaceBuilder::new()
+        .grid_f64("lr", &[0.02, 0.001])
+        .uniform("momentum", 0.8, 0.99)
+        .build();
+    run_experiments(
+        spec,
+        space,
+        sched,
+        search,
+        factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+        RunOptions {
+            cluster: Cluster::uniform(2, Resources::cpu(4.0)),
+            exec,
+            ..Default::default()
+        },
+    )
+}
+
+/// The scheduler × search × executor conformance matrix (5 × 4 × 3):
+/// every combination must terminate with every trial in a terminal
+/// state, produce identical trial counts on every executor, and produce
+/// byte-identical fingerprints on sim, threads and pool — the narrow
+/// waist's promise that scheduling research results transfer to real
+/// execution. Writes the fingerprint table to `$CONFORMANCE_FP_OUT`
+/// when set (CI uploads it as an artifact).
+#[test]
+fn conformance_matrix_scheduler_x_search_x_executor() {
+    let space_for_pbt = SpaceBuilder::new()
+        .grid_f64("lr", &[0.02, 0.001])
+        .uniform("momentum", 0.8, 0.99)
+        .build();
+    let schedulers: Vec<(&str, SchedulerKind)> = vec![
+        ("fifo", SchedulerKind::Fifo),
+        (
+            "asha",
+            SchedulerKind::Asha { grace_period: 1, reduction_factor: 2.0, max_t: 8 },
+        ),
+        ("hyperband", SchedulerKind::HyperBand { max_t: 8, eta: 2.0 }),
+        (
+            "median",
+            SchedulerKind::MedianStopping { grace_period: 2, min_samples: 2 },
+        ),
+        (
+            "pbt",
+            SchedulerKind::Pbt { perturbation_interval: 3, space: space_for_pbt },
+        ),
+    ];
+    let searches: Vec<(&str, SearchKind)> = vec![
+        ("grid", SearchKind::Grid),
+        ("random", SearchKind::Random),
+        ("tpe", SearchKind::Tpe),
+        ("evolution", SearchKind::Evolution),
+    ];
+    let execs: Vec<(&str, ExecMode)> = vec![
+        ("sim", ExecMode::Sim),
+        ("threads", ExecMode::Threads),
+        ("pool", ExecMode::Pool { workers: 2 }),
+    ];
+
+    let mut report = String::new();
+    for (s_name, sched) in &schedulers {
+        for (q_name, search) in &searches {
+            let mut prints: Vec<(&str, usize, String)> = Vec::new();
+            for (e_name, exec) in &execs {
+                let res = conformance_run(sched.clone(), search.clone(), *exec);
+                assert!(
+                    !res.trials.is_empty(),
+                    "{s_name}×{q_name}×{e_name}: no trials ran"
+                );
+                for t in res.trials.values() {
+                    assert!(
+                        t.status.is_terminal(),
+                        "{s_name}×{q_name}×{e_name}: trial {} stuck in {:?}",
+                        t.id,
+                        t.status
+                    );
+                }
+                assert_eq!(
+                    res.count(TrialStatus::Errored),
+                    0,
+                    "{s_name}×{q_name}×{e_name}: errored trials"
+                );
+                prints.push((*e_name, res.trials.len(), fingerprint(&res)));
+            }
+            // Invariant trial counts across executors...
+            let counts: Vec<usize> = prints.iter().map(|(_, n, _)| *n).collect();
+            assert!(
+                counts.windows(2).all(|w| w[0] == w[1]),
+                "{s_name}×{q_name}: trial counts differ across executors: {counts:?}"
+            );
+            // ...and byte-identical fingerprints (sim vs pool vs threads).
+            for (e_name, _, fp) in &prints[1..] {
+                assert_eq!(
+                    fp, &prints[0].2,
+                    "{s_name}×{q_name}: {} fingerprint diverges from {}",
+                    e_name, prints[0].0
+                );
+            }
+            report.push_str(&format!(
+                "=== {s_name} x {q_name} ({} trials) ===\n{}",
+                counts[0], prints[0].2
+            ));
+        }
+    }
+    if let Ok(path) = std::env::var("CONFORMANCE_FP_OUT") {
+        std::fs::write(&path, &report).expect("write conformance fingerprint artifact");
+    }
+}
+
 /// Grid search + §4.3's quickstart space: exactly 6 trials, all complete.
 #[test]
 fn quickstart_grid_runs_six_trials() {

@@ -6,7 +6,7 @@ use tune::coordinator::schedulers::{
 };
 use tune::coordinator::spec::{expand_grid, grid_size, sample_config, ParamDist, SpaceBuilder};
 use tune::coordinator::trial::{Config, Mode, ParamValue, ResultRow, Trial, TrialStatus};
-use tune::ray::{Cluster, Resources, TwoLevelScheduler};
+use tune::ray::{Cluster, Resources, TwoLevelScheduler, Utilization};
 use tune::util::intern::MetricId;
 use tune::util::prop::check;
 use tune::util::rng::Rng;
@@ -46,6 +46,101 @@ fn prop_grid_expansion_size_is_product() {
         for c in &configs {
             assert_eq!(c.len(), space.len());
         }
+    });
+}
+
+/// A random fractional resource vector (sometimes with custom keys).
+fn rand_resources(rng: &mut Rng) -> Resources {
+    let mut r = Resources::cpu_gpu(
+        rng.uniform(0.0, 8.0),
+        if rng.bool(0.5) { rng.uniform(0.0, 4.0) } else { 0.0 },
+    );
+    for i in 0..rng.index(3) {
+        r.custom.insert(format!("c{i}"), rng.uniform(0.0, 16.0));
+    }
+    r
+}
+
+/// `Resources` arithmetic closure: for any capacity and any demand that
+/// fits it, acquire keeps the vector valid (non-negative), release
+/// restores the original exactly (EPS-aware equality — the satellite
+/// fix: a raw-f64 `==` fails this after float round trips), and `fits`
+/// is monotone under growing capacity.
+#[test]
+fn prop_resources_acquire_release_closure() {
+    check("resources_closure", 0x5E50, 300, |rng, _| {
+        let cap = rand_resources(rng);
+        // A demand scaled inside the capacity always fits...
+        let demand = cap.scaled(rng.uniform(0.0, 1.0));
+        assert!(cap.fits(&demand), "{cap} should fit {demand}");
+        // ...and a grown capacity still fits it (monotonicity).
+        let mut grown = cap.clone();
+        grown.release(&rand_resources(rng));
+        assert!(grown.fits(&demand));
+        // acquire/release closure.
+        let mut work = cap.clone();
+        work.acquire(&demand);
+        assert!(work.is_valid(), "negative after acquire: {work}");
+        work.release(&demand);
+        assert_eq!(work, cap, "release did not restore the original");
+        // Chains of fitting sub-demands stay valid and restore too.
+        let parts: Vec<Resources> =
+            (0..rng.index(4) + 1).map(|_| work.scaled(rng.uniform(0.0, 0.2))).collect();
+        let mut acc = work.clone();
+        for p in &parts {
+            assert!(acc.fits(p));
+            acc.acquire(p);
+            assert!(acc.is_valid());
+        }
+        for p in &parts {
+            acc.release(p);
+        }
+        assert_eq!(acc, cap);
+    });
+}
+
+/// EPS boundary behaviour of `fits`: exact equality fits, overshoot
+/// within EPS/2 still fits, overshoot beyond 2*EPS does not.
+#[test]
+fn prop_resources_fits_eps_boundary() {
+    check("resources_eps", 0xE95, 300, |rng, _| {
+        let cap = rand_resources(rng);
+        assert!(cap.fits(&cap), "exact equality must fit");
+        let mut barely = cap.clone();
+        barely.cpu += 5e-10;
+        barely.gpu += 5e-10;
+        assert!(cap.fits(&barely), "within-EPS overshoot must fit");
+        let dim = rng.index(2);
+        let mut over = cap.clone();
+        if dim == 0 {
+            over.cpu += 2e-9 + rng.uniform(0.0, 1.0);
+        } else {
+            over.gpu += 2e-9 + rng.uniform(0.0, 1.0);
+        }
+        assert!(!cap.fits(&over), "{cap} must not fit {over}");
+        // A custom key the capacity lacks never fits (beyond EPS).
+        let mut alien = cap.clone();
+        alien.custom.insert("alien".into(), rng.uniform(0.1, 4.0));
+        assert!(!cap.fits(&alien));
+    });
+}
+
+/// NaN / negative / infinite demands are rejected by validation, and a
+/// NaN demand never silently "fits" validation-guarded paths.
+#[test]
+fn prop_resources_validate_rejects_garbage() {
+    check("resources_validate", 0xBAD, 200, |rng, case| {
+        let mut r = rand_resources(rng);
+        assert!(r.validate_demand().is_ok(), "clean vector rejected: {r}");
+        let poison = [f64::NAN, -1.0 - rng.uniform(0.0, 5.0), f64::INFINITY][case % 3];
+        match rng.index(3) {
+            0 => r.cpu = poison,
+            1 => r.gpu = poison,
+            _ => {
+                r.custom.insert("bad".into(), poison);
+            }
+        }
+        assert!(r.validate_demand().is_err(), "poisoned vector accepted: {r}");
     });
 }
 
@@ -115,7 +210,12 @@ fn prop_asha_promotion_rate_bounded() {
             t.status = TrialStatus::Running;
             t.record(row.clone(), METRIC, Mode::Max);
             trials.insert(id, t.clone());
-            let ctx = SchedulerCtx { trials: &trials, metric_id: METRIC, mode: Mode::Max };
+            let ctx = SchedulerCtx {
+                trials: &trials,
+                metric_id: METRIC,
+                mode: Mode::Max,
+                utilization: Utilization::default(),
+            };
             match s.on_result(&ctx, &t, &row) {
                 Decision::Stop => {}
                 _ => promoted += 1,
@@ -165,7 +265,12 @@ fn prop_median_never_stops_best() {
                     t.status = TrialStatus::Running;
                 }
                 let t = trials[&id].clone();
-                let ctx = SchedulerCtx { trials: &trials, metric_id: METRIC, mode: Mode::Max };
+                let ctx = SchedulerCtx {
+                    trials: &trials,
+                    metric_id: METRIC,
+                    mode: Mode::Max,
+                    utilization: Utilization::default(),
+                };
                 let d = s.on_result(&ctx, &t, &row);
                 if let Decision::Stop = d {
                     assert_ne!(id, best, "stopped the best trial (quality {})", qualities[id as usize]);
@@ -199,7 +304,12 @@ fn prop_pbt_exploit_sources_are_top() {
             let row = ResultRow::new(1, 1.0).with(METRIC, scores[id as usize]);
             trials.get_mut(&id).unwrap().record(row.clone(), METRIC, Mode::Max);
             let t = trials[&id].clone();
-            let ctx = SchedulerCtx { trials: &trials, metric_id: METRIC, mode: Mode::Max };
+            let ctx = SchedulerCtx {
+                trials: &trials,
+                metric_id: METRIC,
+                mode: Mode::Max,
+                utilization: Utilization::default(),
+            };
             if let Decision::Exploit { source, config } = s.on_result(&ctx, &t, &row) {
                 // Source strictly better than self.
                 assert!(
