@@ -1,0 +1,198 @@
+//! C8 bench: the million-trial coordinator — end-to-end throughput of
+//! the indexed per-event hot loops at trial counts two orders of
+//! magnitude past the other benches. 100k trials through FIFO and ASHA
+//! on the sim executor (virtual time, single thread: pure coordinator
+//! cost), plus a 10k-trial smoke on the real thread-pool executor.
+//!
+//! Run: `cargo bench --bench million_trials`
+//!
+//! Reported per case: results/sec, events/sec (launches + results +
+//! terminals through the event loop), and peak resident heap per trial
+//! (a counting allocator watches the whole process, so the number is a
+//! conservative upper bound on trial-table bytes/trial).
+//!
+//! `TUNE_BENCH_FAST=1` shrinks trial counts so CI can smoke the binary
+//! in seconds; the emitted `BENCH_million_trials.json` records which
+//! mode produced the numbers.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use tune::coordinator::spec::SpaceBuilder;
+use tune::coordinator::{
+    run_experiments, ExecMode, ExperimentSpec, Mode, RunOptions, SchedulerKind, SearchKind,
+};
+use tune::ray::{Cluster, Resources};
+use tune::trainable::factory;
+use tune::trainable::synthetic::CurveTrainable;
+use tune::util::json::Json;
+
+/// Tracks live heap bytes and the high-water mark since the last reset.
+struct PeakAlloc;
+
+static LIVE: AtomicU64 = AtomicU64::new(0);
+static PEAK: AtomicU64 = AtomicU64::new(0);
+
+fn note_alloc(size: usize) {
+    let now = LIVE.fetch_add(size as u64, Ordering::Relaxed) + size as u64;
+    PEAK.fetch_max(now, Ordering::Relaxed);
+}
+
+// SAFETY: defers entirely to `System`; counters are relaxed atomics.
+unsafe impl GlobalAlloc for PeakAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        note_alloc(layout.size());
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        LIVE.fetch_sub(layout.size() as u64, Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        LIVE.fetch_sub(layout.size() as u64, Ordering::Relaxed);
+        note_alloc(new_size);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: PeakAlloc = PeakAlloc;
+
+/// Restart the high-water mark at the current live size, so each case
+/// measures only its own growth above the steady baseline.
+fn reset_peak() -> u64 {
+    let base = LIVE.load(Ordering::Relaxed);
+    PEAK.store(base, Ordering::Relaxed);
+    base
+}
+
+struct Case {
+    label: &'static str,
+    exec: &'static str,
+    trials: usize,
+    results: u64,
+    wall_s: f64,
+    results_per_sec: f64,
+    events_per_sec: f64,
+    peak_bytes_per_trial: f64,
+}
+
+fn run_case(label: &'static str, kind: SchedulerKind, exec: ExecMode, trials: usize) -> Case {
+    let space = SpaceBuilder::new()
+        .loguniform("lr", 1e-4, 1.0)
+        .uniform("momentum", 0.8, 0.99)
+        .build();
+    let mut spec = ExperimentSpec::named("million-trials");
+    spec.metric = "accuracy".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = trials;
+    spec.max_iterations_per_trial = 3;
+    let exec_name = match exec {
+        ExecMode::Sim => "sim",
+        ExecMode::Pool { .. } => "pool",
+        ExecMode::Threads => "threads",
+    };
+    let base = reset_peak();
+    let t0 = std::time::Instant::now();
+    let res = run_experiments(
+        spec,
+        space,
+        kind,
+        SearchKind::Random,
+        factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+        RunOptions {
+            cluster: Cluster::uniform(32, Resources::cpu(64.0)),
+            exec,
+            ..Default::default()
+        },
+    );
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let peak = PEAK.load(Ordering::Relaxed).saturating_sub(base);
+    assert_eq!(res.trials.len(), trials, "{label}: not every trial ran");
+    // Events through the loop: one launch per placement, one result per
+    // step, one terminal per trial (early stops make this approximate
+    // from below — a conservative denominator).
+    let events = res.stats.results + res.placement.total() + trials as u64;
+    Case {
+        label,
+        exec: exec_name,
+        trials,
+        results: res.stats.results,
+        wall_s: wall,
+        results_per_sec: res.stats.results as f64 / wall,
+        events_per_sec: events as f64 / wall,
+        peak_bytes_per_trial: peak as f64 / trials as f64,
+    }
+}
+
+fn main() {
+    let fast = std::env::var("TUNE_BENCH_FAST").is_ok();
+    let (big, smoke) = if fast { (2_000, 500) } else { (100_000, 10_000) };
+    println!(
+        "== million-trial coordinator: indexed per-event hot loops, {} sim trials{} ==",
+        big,
+        if fast { " [FAST]" } else { "" },
+    );
+    println!(
+        "{:<14} {:>6} {:>8} {:>9} {:>8} {:>13} {:>12} {:>12}",
+        "case", "exec", "trials", "results", "wall s", "results/sec", "events/sec", "peak B/trial"
+    );
+    println!("{}", "-".repeat(88));
+    let mut cases = Vec::new();
+    let runs: Vec<(&'static str, SchedulerKind, ExecMode, usize)> = vec![
+        ("fifo-sim", SchedulerKind::Fifo, ExecMode::Sim, big),
+        (
+            "asha-sim",
+            SchedulerKind::Asha { grace_period: 1, reduction_factor: 3.0, max_t: 3 },
+            ExecMode::Sim,
+            big,
+        ),
+        ("fifo-pool", SchedulerKind::Fifo, ExecMode::Pool { workers: 8 }, smoke),
+    ];
+    for (label, kind, exec, trials) in runs {
+        let c = run_case(label, kind, exec, trials);
+        println!(
+            "{:<14} {:>6} {:>8} {:>9} {:>8.2} {:>13.0} {:>12.0} {:>12.0}",
+            c.label,
+            c.exec,
+            c.trials,
+            c.results,
+            c.wall_s,
+            c.results_per_sec,
+            c.events_per_sec,
+            c.peak_bytes_per_trial
+        );
+        cases.push(c);
+    }
+
+    // Machine-readable record for CI artifacts / EXPERIMENTS.md updates.
+    let json = Json::obj(vec![
+        ("bench", Json::Str("million_trials".into())),
+        ("fast_mode", Json::Bool(fast)),
+        ("iters_per_trial", Json::Num(3.0)),
+        (
+            "cases",
+            Json::Arr(
+                cases
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("case", Json::Str(c.label.into())),
+                            ("exec", Json::Str(c.exec.into())),
+                            ("trials", Json::Num(c.trials as f64)),
+                            ("results", Json::Num(c.results as f64)),
+                            ("wall_s", Json::Num(c.wall_s)),
+                            ("results_per_sec", Json::Num(c.results_per_sec)),
+                            ("events_per_sec", Json::Num(c.events_per_sec)),
+                            ("peak_bytes_per_trial", Json::Num(c.peak_bytes_per_trial)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    match std::fs::write("BENCH_million_trials.json", json.to_string()) {
+        Ok(()) => println!("\nwrote BENCH_million_trials.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_million_trials.json: {e}"),
+    }
+}

@@ -72,6 +72,20 @@ pub struct RunnerStats {
     pub util_cpu_sum: f64,
     /// Sum of per-result cluster GPU-utilization samples.
     pub util_gpu_sum: f64,
+    /// Total training iterations across all trials: the incrementally
+    /// maintained mirror of summing `Trial::iteration` over the table
+    /// (updated on every step and failure rollback), so finalize never
+    /// rescans.
+    pub total_iterations: u64,
+    /// Training seconds consumed across all trials: the incrementally
+    /// maintained mirror of summing `Trial::time_total_s`, same
+    /// contract as `total_iterations`.
+    pub budget_used_s: f64,
+    /// Trials failed by node-kill handling — exactly the victims found
+    /// through the per-node lease index. Scale tests assert this (and
+    /// the table touches around it) stays proportional to the victim
+    /// node's leases, never the trial population.
+    pub kill_touched: u64,
 }
 
 impl RunnerStats {
@@ -95,6 +109,9 @@ impl RunnerStats {
             ("scale_downs", Json::Num(self.scale_downs as f64)),
             ("util_cpu_sum", Json::Num(self.util_cpu_sum)),
             ("util_gpu_sum", Json::Num(self.util_gpu_sum)),
+            ("total_iterations", Json::Num(self.total_iterations as f64)),
+            ("budget_used_s", Json::Num(self.budget_used_s)),
+            ("kill_touched", Json::Num(self.kill_touched as f64)),
         ])
     }
 
@@ -117,9 +134,12 @@ impl RunnerStats {
             preemptions: g("preemptions"),
             scale_ups: g("scale_ups"),
             scale_downs: g("scale_downs"),
+            total_iterations: g("total_iterations"),
+            kill_touched: g("kill_touched"),
             // f64 sums (older snapshots simply lack the keys: default 0).
             util_cpu_sum: j.get("util_cpu_sum").and_then(|v| v.as_f64()).unwrap_or(0.0),
             util_gpu_sum: j.get("util_gpu_sum").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            budget_used_s: j.get("budget_used_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
         }
     }
 }
@@ -208,6 +228,87 @@ impl ExperimentResult {
     }
 }
 
+/// The trial table, instrumented: every keyed access bumps a touch
+/// counter (a `Cell`, so shared reads count too) that the scale tests
+/// read to prove per-event work stays O(log n) in the population — an
+/// allocation counter cannot see a BTreeMap walk, this can. Whole-table
+/// iteration is only reachable through [`TrialTable::scan`] (counted as
+/// one touch per row) and [`TrialTable::map`] (uncounted, for read-only
+/// context views whose consumers do their own keyed reads), which keeps
+/// an accidentally reintroduced O(n) rescan grep- and test-visible.
+#[derive(Default)]
+struct TrialTable {
+    map: BTreeMap<TrialId, Trial>,
+    touches: std::cell::Cell<u64>,
+}
+
+impl TrialTable {
+    fn touch(&self, n: u64) {
+        self.touches.set(self.touches.get() + n);
+    }
+    fn get(&self, id: &TrialId) -> Option<&Trial> {
+        self.touch(1);
+        self.map.get(id)
+    }
+    fn get_mut(&mut self, id: &TrialId) -> Option<&mut Trial> {
+        self.touch(1);
+        self.map.get_mut(id)
+    }
+    fn insert(&mut self, id: TrialId, t: Trial) {
+        self.touch(1);
+        self.map.insert(id, t);
+    }
+    fn remove(&mut self, id: &TrialId) -> Option<Trial> {
+        self.touch(1);
+        self.map.remove(id)
+    }
+    fn contains_key(&self, id: &TrialId) -> bool {
+        self.touch(1);
+        self.map.contains_key(id)
+    }
+    fn clear(&mut self) {
+        self.map.clear();
+    }
+    /// Full-table walk, counted as one touch per row: snapshot, restore
+    /// and finalize only — never the per-event path.
+    fn scan(&self) -> impl Iterator<Item = &Trial> + '_ {
+        self.touch(self.map.len() as u64);
+        self.map.values()
+    }
+    /// Uncounted read-only view (scheduler contexts, public accessors).
+    fn map(&self) -> &BTreeMap<TrialId, Trial> {
+        &self.map
+    }
+    /// Surrender the table (finalize moves it into the result).
+    fn into_map(self) -> BTreeMap<TrialId, Trial> {
+        self.map
+    }
+    fn touches(&self) -> u64 {
+        self.touches.get()
+    }
+}
+
+impl std::ops::Index<&TrialId> for TrialTable {
+    type Output = Trial;
+    fn index(&self, id: &TrialId) -> &Trial {
+        self.touch(1);
+        &self.map[id]
+    }
+}
+
+/// Dense index of a [`TrialStatus`] into the runner's per-status
+/// counters.
+fn sidx(s: TrialStatus) -> usize {
+    match s {
+        TrialStatus::Pending => 0,
+        TrialStatus::Running => 1,
+        TrialStatus::Paused => 2,
+        TrialStatus::Completed => 3,
+        TrialStatus::Stopped => 4,
+        TrialStatus::Errored => 5,
+    }
+}
+
 /// Tune's central event loop: owns the trial table and drives the
 /// scheduler/search/executor/substrate quartet to completion.
 pub struct TrialRunner {
@@ -221,7 +322,18 @@ pub struct TrialRunner {
     /// Checkpoint store (exposed for post-hoc restore tooling).
     pub checkpoints: CheckpointStore,
     fault: FaultInjector,
-    trials: BTreeMap<TrialId, Trial>,
+    trials: TrialTable,
+    /// Per-status trial counts (indexed by [`sidx`]), kept in lockstep
+    /// with the table by `set_status` — `num_running` and the
+    /// live-budget checks are O(1) reads, never scans.
+    status_counts: [usize; 6],
+    /// Pending trials in ascending id (= creation) order: the explicit
+    /// FIFO queue behind `SchedulerCtx::first_pending`, maintained by
+    /// `set_status` so admission never rescans the table.
+    pending: BTreeSet<TrialId>,
+    /// Node -> trials currently leased on it: node-kill handling walks
+    /// only the victim's entry, not the whole lease map.
+    node_trials: BTreeMap<NodeId, BTreeSet<TrialId>>,
     leases: BTreeMap<TrialId, (NodeId, LeaseId)>,
     /// Wall/virtual time at which each running trial was (re)launched,
     /// plus previously accumulated training seconds.
@@ -288,6 +400,11 @@ pub struct TrialRunner {
     infeasible: Option<String>,
     /// Feasibility verified (caches the preflight on the happy path).
     preflight_ok: bool,
+    /// Positive `demand_feasible` memo, valid while the cluster's shape
+    /// epoch is unchanged (feasibility reads *total* node shapes, which
+    /// only add/retire can alter) — the per-launch fail-fast check
+    /// stops iterating nodes in the steady state.
+    feasible_cache: Option<(Resources, u64)>,
 }
 
 impl TrialRunner {
@@ -313,7 +430,10 @@ impl TrialRunner {
             placer: TwoLevelScheduler::new(),
             checkpoints: CheckpointStore::new(),
             fault,
-            trials: BTreeMap::new(),
+            trials: TrialTable::default(),
+            status_counts: [0; 6],
+            pending: BTreeSet::new(),
+            node_trials: BTreeMap::new(),
             leases: BTreeMap::new(),
             run_clock: BTreeMap::new(),
             loggers: Vec::new(),
@@ -341,6 +461,7 @@ impl TrialRunner {
             exec_exhausted: false,
             infeasible: None,
             preflight_ok: false,
+            feasible_cache: None,
         }
     }
 
@@ -376,7 +497,7 @@ impl TrialRunner {
 
     /// Read-only view of the trial table.
     pub fn trials(&self) -> &BTreeMap<TrialId, Trial> {
-        &self.trials
+        self.trials.map()
     }
 
     /// Pull one fresh config from the search algorithm into the pool.
@@ -394,7 +515,8 @@ impl TrialRunner {
         let trial = Trial::new(id, config, self.spec.resources_per_trial.clone(), seed);
         self.scheduler.on_trial_add(
             &SchedulerCtx {
-                trials: &self.trials,
+                trials: self.trials.map(),
+                pending: &self.pending,
                 metric_id: self.metric_id,
                 mode: self.spec.mode,
                 utilization: self.util,
@@ -402,12 +524,36 @@ impl TrialRunner {
             &trial,
         );
         self.trials.insert(id, trial);
+        // A fresh trial is born Pending: index it directly (set_status
+        // handles every transition after this point).
+        self.status_counts[sidx(TrialStatus::Pending)] += 1;
+        self.pending.insert(id);
         self.dirty.insert(id);
         Some(id)
     }
 
     pub(crate) fn num_running(&self) -> usize {
-        self.trials.values().filter(|t| t.status == TrialStatus::Running).count()
+        self.status_counts[sidx(TrialStatus::Running)]
+    }
+
+    /// The single choke point for status transitions after creation:
+    /// mutates the trial and keeps the per-status counters and the
+    /// Pending queue in lockstep — O(log n) keyed work, no scans.
+    fn set_status(&mut self, id: TrialId, to: TrialStatus) {
+        let t = self.trials.get_mut(&id).expect("status change on unknown trial");
+        let from = t.status;
+        if from == to {
+            return;
+        }
+        t.status = to;
+        self.status_counts[sidx(from)] -= 1;
+        self.status_counts[sidx(to)] += 1;
+        if from == TrialStatus::Pending {
+            self.pending.remove(&id);
+        }
+        if to == TrialStatus::Pending {
+            self.pending.insert(id);
+        }
     }
 
     /// Cap the number of live trials from outside (the hub's fair-share
@@ -442,7 +588,8 @@ impl TrialRunner {
             // otherwise try to create a fresh trial.
             let mut choice = {
                 let ctx = SchedulerCtx {
-                    trials: &self.trials,
+                    trials: self.trials.map(),
+                    pending: &self.pending,
                     metric_id: self.metric_id,
                     mode: self.spec.mode,
                     utilization: self.util,
@@ -454,7 +601,8 @@ impl TrialRunner {
                     return;
                 }
                 let ctx = SchedulerCtx {
-                    trials: &self.trials,
+                    trials: self.trials.map(),
+                    pending: &self.pending,
                     metric_id: self.metric_id,
                     mode: self.spec.mode,
                     utilization: self.util,
@@ -519,13 +667,15 @@ impl TrialRunner {
         let restored = restore.is_some();
         let trial = self.trials.get_mut(&id).unwrap();
         trial.node = Some(p.node);
+        let acc = trial.time_total_s;
         match self.executor.launch(trial, restore) {
             Ok(()) => {
-                trial.status = TrialStatus::Running;
+                self.set_status(id, TrialStatus::Running);
                 self.dirty.insert(id);
                 self.leases.insert(id, (p.node, p.lease));
+                self.node_trials.entry(p.node).or_default().insert(id);
                 let started = self.time_offset + self.executor.now();
-                self.run_clock.insert(id, (started, trial.time_total_s));
+                self.run_clock.insert(id, (started, acc));
                 self.running_demand.release(&demand); // add to the sum
                 self.refresh_util();
                 self.stats.launches += 1;
@@ -548,6 +698,14 @@ impl TrialRunner {
         if let Some((node, lease)) = self.leases.remove(&id) {
             self.cluster.release(node, lease);
             self.running_demand.acquire(&self.trials[&id].resources);
+            if let Some(set) = self.node_trials.get_mut(&node) {
+                set.remove(&id);
+                if set.is_empty() {
+                    // Keep the index minimal: absent == no trials, so a
+                    // full-scan reference compares byte-equal.
+                    self.node_trials.remove(&node);
+                }
+            }
             self.maybe_finish_drain(node);
             self.refresh_util();
         }
@@ -567,13 +725,11 @@ impl TrialRunner {
     fn finish(&mut self, id: TrialId, status: TrialStatus) {
         self.executor.halt(id);
         self.release(id);
-        let (config, last_metric);
-        {
-            let t = self.trials.get_mut(&id).unwrap();
-            t.status = status;
-            config = t.config.clone();
-            last_metric = t.last_result.as_ref().and_then(|r| r.get(self.metric_id));
-        }
+        self.set_status(id, status);
+        let (config, last_metric) = {
+            let t = &self.trials[&id];
+            (t.config.clone(), t.last_result.as_ref().and_then(|r| r.get(self.metric_id)))
+        };
         self.dirty.insert(id);
         match status {
             TrialStatus::Completed => self.stats.completed += 1,
@@ -582,7 +738,8 @@ impl TrialRunner {
             _ => {}
         }
         let ctx = SchedulerCtx {
-            trials: &self.trials,
+            trials: self.trials.map(),
+            pending: &self.pending,
             metric_id: self.metric_id,
             mode: self.spec.mode,
             utilization: self.util,
@@ -618,7 +775,7 @@ impl TrialRunner {
         if t.num_failures <= max_failures {
             // Recover: back to Pending; relaunch restores the latest
             // checkpoint (possibly iteration 0 if none exists).
-            t.status = TrialStatus::Pending;
+            let (old_iter, old_time) = (t.iteration, t.time_total_s);
             if t.checkpoint.is_none() {
                 t.iteration = 0;
                 t.time_total_s = 0.0;
@@ -629,6 +786,11 @@ impl TrialRunner {
                     t.time_total_s = m.time_total_s;
                 }
             }
+            // Roll the incremental totals back with the trial.
+            let (new_iter, new_time) = (t.iteration, t.time_total_s);
+            self.stats.total_iterations -= old_iter - new_iter;
+            self.stats.budget_used_s -= old_time - new_time;
+            self.set_status(id, TrialStatus::Pending);
             self.stats.failures_recovered += 1;
         } else {
             eprintln!("trial {id} errored permanently: {error}");
@@ -704,6 +866,7 @@ impl TrialRunner {
             let (started, acc) = self.run_clock[&id];
             let t = self.trials.get_mut(&id).unwrap();
             let iteration = t.iteration + 1;
+            let prev_time = t.time_total_s;
             // Build the row in place inside the trial, reusing the
             // previous `last_result` allocation: the hot path performs
             // no row clone and (steady state) no row allocation at all.
@@ -715,6 +878,11 @@ impl TrialRunner {
                 self.metric_id,
                 self.spec.mode,
             );
+            // The incremental totals mirror the table through every
+            // step — including replayed ones, which advance the trial
+            // exactly like the original execution did.
+            self.stats.total_iterations += 1;
+            self.stats.budget_used_s += t.time_total_s - prev_time;
             iteration
         };
         self.dirty.insert(id);
@@ -797,7 +965,8 @@ impl TrialRunner {
         let decision = {
             let t0 = std::time::Instant::now();
             let ctx = SchedulerCtx {
-                trials: &self.trials,
+                trials: self.trials.map(),
+                pending: &self.pending,
                 metric_id: self.metric_id,
                 mode: self.spec.mode,
                 utilization: self.util,
@@ -895,7 +1064,7 @@ impl TrialRunner {
             ("search", self.search.snapshot()),
             (
                 "trials",
-                Json::Arr(self.trials.values().map(|t| t.to_json(&self.schema)).collect()),
+                Json::Arr(self.trials.scan().map(|t| t.to_json(&self.schema)).collect()),
             ),
         ])
     }
@@ -1190,7 +1359,7 @@ impl TrialRunner {
         self.curve_flushed = self.best_curve.len();
 
         // ---- roll running trials back to durable state ----
-        let ids: Vec<TrialId> = self.trials.keys().copied().collect();
+        let ids: Vec<TrialId> = self.trials.map().keys().copied().collect();
         for id in ids {
             let mut t = self.trials.remove(&id).expect("id enumerated from the table");
             // Progress recorded by the trial's checkpoint, if its blob
@@ -1243,7 +1412,7 @@ impl TrialRunner {
         // Align the on-disk logs with the restored state: drop rows past
         // the rollback point (the replay re-logs them identically) and
         // any half-written final line from the crash.
-        for t in self.trials.values() {
+        for t in self.trials.scan() {
             if !t.status.is_terminal() {
                 if let Err(e) = dir.prune_trial_log(t.id, t.iteration) {
                     eprintln!("pruning log of trial {}: {e}", t.id);
@@ -1259,10 +1428,42 @@ impl TrialRunner {
                 std::fs::remove_file(dir.trial_log_path(id)).ok();
             }
         }
+        // Derived indices are never persisted: rebuild every one from
+        // the restored table. The placer's fail memo and the
+        // feasibility memo are keyed on the *previous* cluster
+        // instance's epochs, which the restored cluster does not share
+        // — drop both.
+        self.rebuild_indexes();
+        self.placer.invalidate();
+        self.feasible_cache = None;
         // The restored cluster (autoscaled shape, drain/retire flags)
         // replaces the constructor's; refresh the cached utilization.
         self.refresh_util();
         Ok(())
+    }
+
+    /// Recompute the per-status counters, Pending queue and incremental
+    /// stat totals from the trial table — O(trials), restore path only.
+    /// The rollback above requeued every formerly-Running trial, so no
+    /// leases exist and the per-node index rebuilds to empty.
+    fn rebuild_indexes(&mut self) {
+        let mut counts = [0usize; 6];
+        let mut pending = BTreeSet::new();
+        let mut iters = 0u64;
+        let mut budget = 0.0;
+        for t in self.trials.scan() {
+            counts[sidx(t.status)] += 1;
+            if t.status == TrialStatus::Pending {
+                pending.insert(t.id);
+            }
+            iters += t.iteration;
+            budget += t.time_total_s;
+        }
+        self.status_counts = counts;
+        self.pending = pending;
+        self.node_trials.clear();
+        self.stats.total_iterations = iters;
+        self.stats.budget_used_s = budget;
     }
 
     /// Could `demand` ever run? Checks the demand itself (finite,
@@ -1271,9 +1472,20 @@ impl TrialRunner {
     /// counts while there is headroom to actually add such a node
     /// (a template fit with the cluster already at `max_nodes` would
     /// otherwise pass preflight and then silently strand every trial).
-    fn demand_feasible(&self, demand: &Resources) -> Result<(), String> {
+    fn demand_feasible(&mut self, demand: &Resources) -> Result<(), String> {
         demand.validate_demand()?;
+        // Positive memo: feasibility depends only on *total* node shapes
+        // (dead nodes may restart), which only add/retire — the shape
+        // epoch — can change. Negative results are not memoized: they
+        // either fail the experiment outright or depend on the
+        // autoscaler's live headroom.
+        if let Some((d, epoch)) = &self.feasible_cache {
+            if *epoch == self.cluster.shape_epoch() && d == demand {
+                return Ok(());
+            }
+        }
         if self.cluster.any_node_fits(demand) {
+            self.feasible_cache = Some((demand.clone(), self.cluster.shape_epoch()));
             return Ok(());
         }
         if let Some(a) = &self.autoscaler {
@@ -1359,7 +1571,7 @@ impl TrialRunner {
         self.save_checkpoint(id);
         self.executor.halt(id);
         self.release(id);
-        self.trials.get_mut(&id).unwrap().status = status;
+        self.set_status(id, status);
         self.dirty.insert(id);
     }
 
@@ -1388,24 +1600,31 @@ impl TrialRunner {
         if self.fault.plan.node_failure_prob == 0.0 {
             return;
         }
-        let alive: Vec<NodeId> = self.cluster.alive_nodes().map(|n| n.id).collect();
-        let (kill, restarts) = self.fault.tick(&alive);
+        let (kill, restarts) = self.fault.tick(self.cluster.alive_ids());
         for n in restarts {
             self.cluster.restart_node(n);
         }
         if let Some(victim) = kill {
-            let dead_leases = self.cluster.kill_node(victim);
-            let victims: Vec<TrialId> = self
-                .leases
-                .iter()
-                .filter(|(_, (node, lease))| *node == victim && dead_leases.contains(lease))
-                .map(|(id, _)| *id)
-                .collect();
-            for id in victims {
-                self.handle_failure(id, "node failure");
-            }
+            self.cluster.kill_node(victim);
+            self.apply_node_kill(victim);
         }
         self.refresh_util();
+    }
+
+    /// Fail every trial the killed node was hosting. The victims come
+    /// from the per-node lease index — O(victim's trials), never a walk
+    /// of the lease map or the table — and each goes through the normal
+    /// failure path (checkpoint rollback, retry budget).
+    fn apply_node_kill(&mut self, victim: NodeId) {
+        let dead: Vec<TrialId> = self
+            .node_trials
+            .remove(&victim)
+            .map(|s| s.into_iter().collect())
+            .unwrap_or_default();
+        self.stats.kill_touched += dead.len() as u64;
+        for id in dead {
+            self.handle_failure(id, "node failure");
+        }
     }
 
     /// Apply one completion event (the body shared by the blocking
@@ -1424,7 +1643,8 @@ impl TrialRunner {
     fn try_unblock(&mut self) -> bool {
         let can_progress = {
             let ctx = SchedulerCtx {
-                trials: &self.trials,
+                trials: self.trials.map(),
+                pending: &self.pending,
                 metric_id: self.metric_id,
                 mode: self.spec.mode,
                 utilization: self.util,
@@ -1440,6 +1660,46 @@ impl TrialRunner {
         self.create_trial().is_some()
     }
 
+    /// One event-loop iteration: admit, apply one completion event (or
+    /// unblock an idle experiment), then the per-event fault/autoscale/
+    /// snapshot ticks. Returns `None` when the experiment can make no
+    /// further progress, `Some(snapped)` otherwise — extracted from
+    /// [`Self::drive`] so scale and property tests can interleave
+    /// invariant checks between events.
+    fn step_once(&mut self) -> Option<bool> {
+        self.admit();
+        if self.clock() >= self.spec.max_experiment_time_s {
+            return None;
+        }
+        let event = self.executor.next_event();
+        let t0 = std::time::Instant::now();
+        match event {
+            Some(ev) => self.dispatch(ev),
+            None => {
+                // Nothing in flight. If nothing can ever run again,
+                // we are done; otherwise admit more.
+                if !self.try_unblock() {
+                    return None;
+                }
+                // Try to place the candidate now; if nothing is
+                // running afterwards, placement failed with every
+                // lease free. Spin only while a node restart or an
+                // autoscale-up can still unblock it (the
+                // per-iteration ticks below drive both); otherwise
+                // the backlog is permanent — finalize instead of
+                // livelocking.
+                self.admit();
+                if self.num_running() == 0 && !self.can_wait_for_capacity() {
+                    return None;
+                }
+            }
+        }
+        self.stats.handling_ns += t0.elapsed().as_nanos() as u64;
+        self.fault_tick();
+        self.autoscale_tick();
+        Some(self.maybe_snapshot())
+    }
+
     /// The event loop shared by [`TrialRunner::run`] and
     /// [`TrialRunner::run_to_crash`]. Returns `true` when crash
     /// injection fired (the loop was abandoned mid-flight).
@@ -1447,42 +1707,12 @@ impl TrialRunner {
         if !self.preflight() {
             return false; // unsatisfiable demand: zero trials launched
         }
-        loop {
-            self.admit();
-            if self.clock() >= self.spec.max_experiment_time_s {
-                return false;
-            }
-            let event = self.executor.next_event();
-            let t0 = std::time::Instant::now();
-            match event {
-                Some(ev) => self.dispatch(ev),
-                None => {
-                    // Nothing in flight. If nothing can ever run again,
-                    // we are done; otherwise admit more.
-                    if !self.try_unblock() {
-                        return false;
-                    }
-                    // Try to place the candidate now; if nothing is
-                    // running afterwards, placement failed with every
-                    // lease free. Spin only while a node restart or an
-                    // autoscale-up can still unblock it (the
-                    // per-iteration ticks below drive both); otherwise
-                    // the backlog is permanent — finalize instead of
-                    // livelocking.
-                    self.admit();
-                    if self.num_running() == 0 && !self.can_wait_for_capacity() {
-                        return false;
-                    }
-                }
-            }
-            self.stats.handling_ns += t0.elapsed().as_nanos() as u64;
-            self.fault_tick();
-            self.autoscale_tick();
-            let snapped = self.maybe_snapshot();
+        while let Some(snapped) = self.step_once() {
             if snapped && crash_after_snapshots.map_or(false, |n| self.stats.snapshots >= n) {
                 return true;
             }
         }
+        false
     }
 
     // -----------------------------------------------------------------
@@ -1574,14 +1804,15 @@ impl TrialRunner {
         self.drive(Some(snapshots))
     }
 
-    /// Endgame shared by [`TrialRunner::run`] and the hub: terminate
-    /// whatever is still live (budget exhausted or orphaned paused
-    /// trials), flush loggers, write the final snapshot and assemble
-    /// the result summary. The runner's trial table is consumed.
-    pub(crate) fn finalize(&mut self) -> ExperimentResult {
+    /// Endgame shared by [`TrialRunner::run`], the hub and the stepping
+    /// test harnesses: terminate whatever is still live (budget
+    /// exhausted or orphaned paused trials), flush loggers, write the
+    /// final snapshot and assemble the result summary. The runner's
+    /// trial table is consumed.
+    pub fn finalize(&mut self) -> ExperimentResult {
         let leftovers: Vec<TrialId> = self
             .trials
-            .values()
+            .scan()
             .filter(|t| !t.status.is_terminal())
             .map(|t| t.id)
             .collect();
@@ -1589,7 +1820,7 @@ impl TrialRunner {
             self.finish(id, TrialStatus::Stopped);
         }
         for l in &mut self.loggers {
-            l.on_experiment_end(&self.trials);
+            l.on_experiment_end(self.trials.map());
         }
         // Final snapshot: marks the experiment finished so a later
         // `--resume` reports completion instead of re-running anything.
@@ -1601,7 +1832,7 @@ impl TrialRunner {
         // `Trial::record`), but the order stays total regardless.
         let best = self
             .trials
-            .values()
+            .scan()
             .filter(|t| t.best_metric.is_some())
             .max_by(|a, b| {
                 let am = self.spec.mode.ascending(a.best_metric.unwrap());
@@ -1612,8 +1843,11 @@ impl TrialRunner {
         ExperimentResult {
             best,
             duration_s: self.clock(),
-            budget_used_s: self.trials.values().map(|t| t.time_total_s).sum(),
-            trials: std::mem::take(&mut self.trials),
+            // The incrementally maintained mirror of the per-trial sum
+            // (see `RunnerStats::budget_used_s`): finalize reads it
+            // instead of rescanning the table.
+            budget_used_s: self.stats.budget_used_s,
+            trials: std::mem::take(&mut self.trials).into_map(),
             stats: self.stats.clone(),
             placement: self.placer.stats,
             best_curve: std::mem::take(&mut self.best_curve),
@@ -1627,6 +1861,116 @@ impl TrialRunner {
     pub fn run(&mut self) -> ExperimentResult {
         self.drive(None);
         self.finalize()
+    }
+
+    // -----------------------------------------------------------------
+    // Test hooks (index-equivalence and scale harnesses)
+    // -----------------------------------------------------------------
+
+    /// Drive one event-loop iteration from a test: `true` while the
+    /// experiment can still make progress. Callers pair it with
+    /// [`TrialRunner::finalize`] once it returns `false`.
+    #[doc(hidden)]
+    pub fn debug_step(&mut self) -> bool {
+        if !self.preflight() {
+            return false;
+        }
+        self.step_once().is_some()
+    }
+
+    /// Kill `node` right now (targeted fault injection for tests),
+    /// routing through the same per-node index as `fault_tick`.
+    #[doc(hidden)]
+    pub fn debug_kill_node(&mut self, node: NodeId) {
+        self.cluster.kill_node(node);
+        self.apply_node_kill(node);
+        self.refresh_util();
+    }
+
+    /// Node currently hosting the most trials (with its count), per the
+    /// incremental per-node index.
+    #[doc(hidden)]
+    pub fn debug_busiest_node(&self) -> Option<(NodeId, usize)> {
+        self.node_trials.iter().map(|(n, s)| (*n, s.len())).max_by_key(|&(_, k)| k)
+    }
+
+    /// Cumulative keyed-access count on the trial table (see
+    /// `TrialTable`): scale tests assert it grows with events, not with
+    /// events x trials.
+    #[doc(hidden)]
+    pub fn debug_table_touches(&self) -> u64 {
+        self.trials.touches()
+    }
+
+    /// Live runner counters (tests read them mid-run; `run`/`finalize`
+    /// also return them in the result).
+    #[doc(hidden)]
+    pub fn debug_stats(&self) -> &RunnerStats {
+        &self.stats
+    }
+
+    /// Compare every incrementally maintained index against a freshly
+    /// computed full-scan reference — the property tests' oracle.
+    /// O(trials + nodes); test-only by construction.
+    #[doc(hidden)]
+    pub fn debug_check_indices(&self) -> Result<(), String> {
+        let mut counts = [0usize; 6];
+        let mut pending = BTreeSet::new();
+        let mut iters = 0u64;
+        let mut budget = 0.0;
+        let mut demand = Resources::default();
+        for t in self.trials.scan() {
+            counts[sidx(t.status)] += 1;
+            if t.status == TrialStatus::Pending {
+                pending.insert(t.id);
+            }
+            if t.status == TrialStatus::Running {
+                demand.release(&t.resources); // add to the sum
+            }
+            iters += t.iteration;
+            budget += t.time_total_s;
+        }
+        if counts != self.status_counts {
+            return Err(format!(
+                "status counts diverged: index {:?} != reference {counts:?}",
+                self.status_counts
+            ));
+        }
+        if pending != self.pending {
+            return Err(format!(
+                "pending queue diverged: index {:?} != reference {pending:?}",
+                self.pending
+            ));
+        }
+        let mut node_trials: BTreeMap<NodeId, BTreeSet<TrialId>> = BTreeMap::new();
+        for (id, (node, _)) in &self.leases {
+            node_trials.entry(*node).or_default().insert(*id);
+        }
+        if node_trials != self.node_trials {
+            return Err(format!(
+                "per-node lease index diverged: index {:?} != reference {node_trials:?}",
+                self.node_trials
+            ));
+        }
+        if iters != self.stats.total_iterations {
+            return Err(format!(
+                "total_iterations diverged: index {} != reference {iters}",
+                self.stats.total_iterations
+            ));
+        }
+        if (budget - self.stats.budget_used_s).abs() > 1e-6 * budget.abs().max(1.0) {
+            return Err(format!(
+                "budget_used_s diverged: index {} != reference {budget}",
+                self.stats.budget_used_s
+            ));
+        }
+        if demand != self.running_demand {
+            return Err(format!(
+                "running demand diverged: index {:?} != reference {demand:?}",
+                self.running_demand
+            ));
+        }
+        self.cluster.debug_check()
     }
 }
 

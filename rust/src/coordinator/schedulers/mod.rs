@@ -26,7 +26,7 @@
 //!
 //! (HyperOpt-style TPE is a *search algorithm*, `coordinator::search::tpe`.)
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use super::trial::{Config, Mode, ResultRow, Trial, TrialId, TrialStatus};
 use crate::ray::Utilization;
@@ -65,6 +65,12 @@ pub enum Decision {
 pub struct SchedulerCtx<'a> {
     /// The full trial table, by id.
     pub trials: &'a BTreeMap<TrialId, Trial>,
+    /// Ids of Pending trials in ascending id (= creation) order — the
+    /// runner's incrementally maintained FIFO queue. Always consistent
+    /// with `trials`: a scheduler reading either view sees the same
+    /// Pending set, but this one answers "who runs next" in O(1)
+    /// instead of scanning the table.
+    pub pending: &'a BTreeSet<TrialId>,
     /// Interned id of the metric being optimized (resolved once per
     /// experiment by the runner; per-result lookups are integer
     /// compares, not string hashing).
@@ -88,12 +94,10 @@ impl<'a> SchedulerCtx<'a> {
             .map(|v| self.mode.ascending(v))
     }
 
-    /// First Pending trial in id order (the FIFO policy).
+    /// First Pending trial in id order (the FIFO policy) — an O(1)
+    /// read of the maintained queue, not a table scan.
     pub fn first_pending(&self) -> Option<TrialId> {
-        self.trials
-            .values()
-            .find(|t| t.status == TrialStatus::Pending)
-            .map(|t| t.id)
+        self.pending.iter().next().copied()
     }
 }
 
@@ -189,19 +193,35 @@ pub(crate) mod testutil {
     #[derive(Clone)]
     pub struct Sandbox {
         pub trials: BTreeMap<TrialId, Trial>,
+        pub pending: BTreeSet<TrialId>,
         pub metric_id: MetricId,
         pub mode: Mode,
     }
 
     impl Sandbox {
         pub fn new(n: u64, _metric: &str, mode: Mode) -> Self {
-            let trials = (0..n).map(|i| (i, mk_trial(i, 0.01 * (i + 1) as f64))).collect();
-            Sandbox { trials, metric_id: METRIC, mode }
+            let trials: BTreeMap<TrialId, Trial> =
+                (0..n).map(|i| (i, mk_trial(i, 0.01 * (i + 1) as f64))).collect();
+            let mut sb = Sandbox { trials, pending: BTreeSet::new(), metric_id: METRIC, mode };
+            sb.refresh_pending();
+            sb
+        }
+
+        /// Recompute the pending set from trial statuses (the sandbox
+        /// takes the slow path; the runner maintains it incrementally).
+        fn refresh_pending(&mut self) {
+            self.pending = self
+                .trials
+                .values()
+                .filter(|t| t.status == TrialStatus::Pending)
+                .map(|t| t.id)
+                .collect();
         }
 
         pub fn ctx(&self) -> SchedulerCtx<'_> {
             SchedulerCtx {
                 trials: &self.trials,
+                pending: &self.pending,
                 metric_id: self.metric_id,
                 mode: self.mode,
                 utilization: Utilization::default(),
@@ -214,6 +234,7 @@ pub(crate) mod testutil {
                 let t = self.trials[&id].clone();
                 let ctx = SchedulerCtx {
                     trials: &self.trials,
+                    pending: &self.pending,
                     metric_id: self.metric_id,
                     mode: self.mode,
                     utilization: Utilization::default(),
@@ -235,9 +256,11 @@ pub(crate) mod testutil {
                 t.status = TrialStatus::Running;
                 t.record(r.clone(), self.metric_id, self.mode);
             }
+            self.refresh_pending();
             let t = self.trials[&id].clone();
             let ctx = SchedulerCtx {
                 trials: &self.trials,
+                pending: &self.pending,
                 metric_id: self.metric_id,
                 mode: self.mode,
                 utilization: Utilization::default(),
@@ -248,6 +271,7 @@ pub(crate) mod testutil {
                 Decision::Pause => self.trials.get_mut(&id).unwrap().status = TrialStatus::Paused,
                 _ => {}
             }
+            self.refresh_pending();
             d
         }
     }

@@ -19,7 +19,7 @@
 //! The autoscaler only decides; the coordinator (which owns leases and
 //! checkpoints) applies [`AutoscaleAction`]s.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use super::cluster::{Cluster, NodeId};
 use super::resources::Resources;
@@ -101,20 +101,61 @@ pub enum AutoscaleAction {
 /// streaks in coordinator ticks and emits one [`AutoscaleAction`] at a
 /// time. Owned by the runner; one per experiment (clusters are
 /// per-experiment, like all other runner state).
+///
+/// Streaks are tracked *lazily*: instead of walking every node each
+/// tick to bump its counter, the autoscaler records the logical tick at
+/// which a node's current low-utilization run began (`low_since`) and
+/// re-classifies nodes only when the cluster's change epoch moves —
+/// node utilizations cannot change without a cluster mutation, so a
+/// quiet tick costs O(1) regardless of node count. The observable
+/// decision sequence is identical to the eager per-tick walk (the unit
+/// tests below pin it tick by tick).
 #[derive(Clone, Debug)]
 pub struct Autoscaler {
     /// The policy being executed.
     pub policy: AutoscalePolicy,
     /// Consecutive ticks with unplaceable pending demand.
     pressure: u64,
-    /// Per-node consecutive low-utilization tick streaks.
-    low_util: BTreeMap<NodeId, u64>,
+    /// Logical scale-down clock. Advances only on ticks that reach the
+    /// scale-down section — ticks that early-return (zombie sweep,
+    /// scale-up) freeze every streak, exactly as the eager walk did.
+    down_clock: u64,
+    /// node -> `down_clock` value at which its current low streak was 0
+    /// (so streak = `down_clock - low_since`). Absent = streak 0.
+    low_since: BTreeMap<NodeId, u64>,
+    /// Every node id ever classified — busy nodes snapshot as streak 0.
+    known: BTreeSet<NodeId>,
+    /// `down_clock` -> (node, low_since) entries whose streak reaches
+    /// `scale_down_after` at that clock value; stale entries (the node
+    /// left or restarted its low run) are dropped on promotion.
+    upcoming: BTreeMap<u64, Vec<(NodeId, u64)>>,
+    /// Nodes whose streak already crossed the threshold, in id order —
+    /// the candidate scan only ever looks here.
+    eligible: BTreeSet<NodeId>,
+    /// Eligible nodes skipped by the last-home guard; re-examined when
+    /// the cluster epoch or the demand shape changes.
+    parked: BTreeSet<NodeId>,
+    /// Cluster change epoch at the last reclassification.
+    seen_epoch: Option<u64>,
+    /// Demand shape seen last tick (last-home verdicts depend on it).
+    last_demand: Option<Resources>,
 }
 
 impl Autoscaler {
     /// A fresh autoscaler for `policy`.
     pub fn new(policy: AutoscalePolicy) -> Self {
-        Autoscaler { policy, pressure: 0, low_util: BTreeMap::new() }
+        Autoscaler {
+            policy,
+            pressure: 0,
+            down_clock: 0,
+            low_since: BTreeMap::new(),
+            known: BTreeSet::new(),
+            upcoming: BTreeMap::new(),
+            eligible: BTreeSet::new(),
+            parked: BTreeSet::new(),
+            seen_epoch: None,
+            last_demand: None,
+        }
     }
 
     /// Could adding template nodes ever help `demand`? (Used by the
@@ -125,10 +166,7 @@ impl Autoscaler {
     /// at `max_nodes` look permanently stuck and finalize with its
     /// rolled-back trials unrun.
     pub fn can_grow(&self, cluster: &Cluster, demand: &Resources) -> bool {
-        let occupying = cluster
-            .alive_nodes()
-            .filter(|n| !(n.draining && n.leases.is_empty()))
-            .count();
+        let occupying = cluster.utilization().nodes_alive - cluster.draining_empty_count();
         occupying < self.policy.max_nodes && self.policy.node_template.fits(demand)
     }
 
@@ -136,12 +174,25 @@ impl Autoscaler {
     /// this when `add_node` reuses a retired slot, so the fresh node
     /// does not inherit its predecessor's idle history.
     pub fn reset_streak(&mut self, node: NodeId) {
-        self.low_util.insert(node, 0);
+        self.known.insert(node);
+        self.low_since.remove(&node);
+        self.eligible.remove(&node);
+        self.parked.remove(&node);
+        // Any upcoming entry is now stale (low_since mismatch) and will
+        // be dropped on promotion; reclassify on the next tick.
+        self.seen_epoch = None;
+    }
+
+    /// The eager-walk streak value for `node` at the current clock.
+    fn streak_of(&self, node: NodeId) -> u64 {
+        self.low_since.get(&node).map_or(0, |s| self.down_clock - s)
     }
 
     /// Serialize mutable state (pressure + per-node streaks) for the
     /// experiment snapshot, so a resumed run continues the same
-    /// scale-up/scale-down trajectory instead of starting cold.
+    /// scale-up/scale-down trajectory instead of starting cold. The
+    /// format is the eager streak map — lazy bookkeeping never leaks
+    /// into snapshots.
     pub fn snapshot(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
         Json::obj(vec![
@@ -149,22 +200,24 @@ impl Autoscaler {
             (
                 "low_util",
                 Json::Obj(
-                    self.low_util
+                    self.known
                         .iter()
-                        .map(|(n, s)| (n.to_string(), Json::Num(*s as f64)))
+                        .map(|n| (n.to_string(), Json::Num(self.streak_of(*n) as f64)))
                         .collect(),
                 ),
             ),
         ])
     }
 
-    /// Rebuild state from an [`Autoscaler::snapshot`] value.
+    /// Rebuild state from an [`Autoscaler::snapshot`] value. Streak
+    /// dynamics only depend on clock *differences*, so the clock
+    /// restarts at the largest restored streak.
     pub fn restore(&mut self, snap: &crate::util::json::Json) -> Result<(), String> {
         self.pressure = snap
             .get("pressure")
             .and_then(|v| v.as_u64())
             .ok_or("autoscaler snapshot: bad pressure")?;
-        self.low_util = snap
+        let streaks: BTreeMap<NodeId, u64> = snap
             .get("low_util")
             .and_then(|m| m.as_obj())
             .ok_or("autoscaler snapshot: bad streaks")?
@@ -172,7 +225,56 @@ impl Autoscaler {
             .map(|(k, v)| Some((k.parse::<NodeId>().ok()?, v.as_u64()?)))
             .collect::<Option<_>>()
             .ok_or("autoscaler snapshot: bad streak entry")?;
+        let clock = streaks.values().copied().max().unwrap_or(0);
+        self.down_clock = clock;
+        self.known = streaks.keys().copied().collect();
+        self.low_since = streaks
+            .iter()
+            .filter(|(_, s)| **s > 0)
+            .map(|(n, s)| (*n, clock - s))
+            .collect();
+        self.upcoming.clear();
+        self.eligible.clear();
+        self.parked.clear();
+        self.seen_epoch = None;
+        self.last_demand = None;
         Ok(())
+    }
+
+    /// Re-derive low/busy membership from the cluster — the only
+    /// O(nodes) step, run when the cluster's change epoch moved (i.e.
+    /// at most once per actual mutation, not once per tick).
+    fn reclassify(&mut self, cluster: &Cluster) {
+        for n in cluster.alive_nodes() {
+            if n.draining {
+                self.low_since.remove(&n.id);
+                continue;
+            }
+            self.known.insert(n.id);
+            if n.utilization() <= self.policy.scale_down_util + UTIL_EPS {
+                // Newly low: streak counts 1 on this tick, like the
+                // eager walk's 0 -> 1 bump.
+                self.low_since.entry(n.id).or_insert(self.down_clock - 1);
+            } else {
+                self.low_since.remove(&n.id);
+            }
+        }
+        let nodes = &cluster.nodes;
+        self.low_since.retain(|id, _| {
+            let n = &nodes[*id as usize];
+            n.alive && !n.draining
+        });
+        self.upcoming.clear();
+        self.eligible.clear();
+        self.parked.clear();
+        for (&id, &since) in &self.low_since {
+            let due = since + self.policy.scale_down_after;
+            if due <= self.down_clock {
+                self.eligible.insert(id);
+            } else {
+                self.upcoming.entry(due).or_default().push((id, since));
+            }
+        }
     }
 
     /// Advance one tick. `unplaceable` reports whether the coordinator
@@ -187,18 +289,16 @@ impl Autoscaler {
     ) -> AutoscaleAction {
         // Zombie sweep: a draining node whose leases are gone (e.g. a
         // fault cleared them) must still retire — re-issue the drain so
-        // the coordinator completes it.
-        for n in cluster.alive_nodes() {
-            if n.draining && n.leases.is_empty() {
-                return AutoscaleAction::Drain(n.id);
-            }
+        // the coordinator completes it. O(1) via the cluster's index.
+        if let Some(id) = cluster.first_zombie() {
+            return AutoscaleAction::Drain(id);
         }
 
         // Scale up on sustained pressure the template could relieve.
         if unplaceable && self.policy.node_template.fits(demand) {
             self.pressure += 1;
             if self.pressure >= self.policy.scale_up_after
-                && cluster.alive_nodes().count() < self.policy.max_nodes
+                && cluster.utilization().nodes_alive < self.policy.max_nodes
             {
                 self.pressure = 0;
                 return AutoscaleAction::AddNode(self.policy.node_template.clone());
@@ -213,32 +313,67 @@ impl Autoscaler {
         // demand's last possible home: retiring the only shape that
         // fits `demand` (with a template that cannot replace it) would
         // strand every preempted/pending trial of that shape.
-        let survivors = cluster.alive_nodes().filter(|n| !n.draining).count();
-        let template_helps = self.policy.node_template.fits(demand);
-        let mut candidate = None;
-        for n in cluster.alive_nodes() {
-            if n.draining {
-                continue;
+        self.down_clock += 1;
+        let epoch = cluster.change_epoch();
+        if self.seen_epoch != Some(epoch) {
+            self.reclassify(cluster);
+            self.seen_epoch = Some(epoch);
+        }
+        if self.last_demand.as_ref() != Some(demand) {
+            // Last-home verdicts depend on the demand shape: recheck
+            // parked nodes when it changes.
+            let parked = std::mem::take(&mut self.parked);
+            self.eligible.extend(parked);
+            self.last_demand = Some(demand.clone());
+        }
+        // Promote nodes whose streak crosses the threshold this tick.
+        while let Some((&due, _)) = self.upcoming.first_key_value() {
+            if due > self.down_clock {
+                break;
             }
-            let low = n.utilization() <= self.policy.scale_down_util + UTIL_EPS;
-            let streak = self.low_util.entry(n.id).or_insert(0);
-            *streak = if low { *streak + 1 } else { 0 };
-            if candidate.is_none()
-                && *streak >= self.policy.scale_down_after
-                && survivors > self.policy.min_nodes
-            {
+            for (id, since) in self.upcoming.remove(&due).unwrap_or_default() {
+                if self.low_since.get(&id) == Some(&since) {
+                    self.eligible.insert(id);
+                }
+            }
+        }
+        let u = cluster.utilization();
+        let survivors = u.nodes_alive - u.nodes_draining;
+        let mut chosen = None;
+        let mut park = Vec::new();
+        if survivors > self.policy.min_nodes {
+            let template_helps = self.policy.node_template.fits(demand);
+            for &id in &self.eligible {
+                let n = cluster.node(id);
                 let last_home = n.total.fits(demand)
                     && !template_helps
                     && !cluster
                         .alive_nodes()
-                        .any(|m| m.id != n.id && !m.draining && m.total.fits(demand));
-                if !last_home {
-                    candidate = Some(n.id);
+                        .any(|m| m.id != id && !m.draining && m.total.fits(demand));
+                if last_home {
+                    park.push(id);
+                } else {
+                    chosen = Some(id);
+                    break;
                 }
             }
         }
-        if let Some(id) = candidate {
-            self.low_util.insert(id, 0);
+        for id in park {
+            self.eligible.remove(&id);
+            self.parked.insert(id);
+        }
+        if let Some(id) = chosen {
+            // Streak restarts at zero, exactly as the eager walk reset
+            // the drained candidate's counter (the node is still low:
+            // it re-qualifies after another full streak if the
+            // coordinator ignores the drain).
+            self.eligible.remove(&id);
+            let since = self.down_clock;
+            self.low_since.insert(id, since);
+            self.upcoming
+                .entry(since + self.policy.scale_down_after)
+                .or_default()
+                .push((id, since));
             return AutoscaleAction::Drain(id);
         }
         AutoscaleAction::None

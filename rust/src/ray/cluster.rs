@@ -5,7 +5,7 @@
 //! (fault injection); killing a node surfaces the set of lease-holders
 //! that were placed there so the coordinator can reschedule them.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use super::resources::Resources;
 
@@ -126,17 +126,55 @@ impl Utilization {
 }
 
 /// A set of nodes trials are placed onto.
+///
+/// Alongside the node table the cluster maintains incremental indices —
+/// a cached [`Utilization`] aggregate, the sorted alive-id list, the
+/// set of empty draining nodes and three change epochs — so the
+/// coordinator's per-event reads (`utilization()`, `alive_ids()`,
+/// `first_zombie()`, the placement fail-fast) are O(1) instead of
+/// O(nodes). Every index is maintained by the mutating methods below;
+/// mutate nodes only through those methods, never via the `nodes` field
+/// directly.
 #[derive(Clone, Debug)]
 pub struct Cluster {
-    /// All nodes, indexed by `NodeId`.
+    /// All nodes, indexed by `NodeId`. Read-only outside this module:
+    /// direct mutation would desynchronize the incremental indices.
     pub nodes: Vec<Node>,
     next_lease: LeaseId,
+    /// Incrementally maintained aggregate over alive nodes.
+    util: Utilization,
+    /// Ids of alive nodes, ascending — the same order
+    /// [`Cluster::alive_nodes`] yields, so fault-victim selection over
+    /// this slice replays identically.
+    alive_ids: Vec<NodeId>,
+    /// Alive draining nodes with no leases left ("zombies" awaiting
+    /// retirement), ascending.
+    draining_empty: BTreeSet<NodeId>,
+    /// Bumped on every observable mutation; consumers (autoscaler) use
+    /// it to skip per-node rescans when nothing changed.
+    change_epoch: u64,
+    /// Bumped whenever placeable free capacity may have increased
+    /// (release on a non-draining alive node, restart, add). The
+    /// placement layer's negative cache is keyed on this.
+    grow_epoch: u64,
+    /// Bumped when the set of node shapes eligible for
+    /// [`Cluster::any_node_fits`] changes (add / retire).
+    shape_epoch: u64,
 }
 
 impl Cluster {
     /// An empty cluster.
     pub fn new() -> Self {
-        Cluster { nodes: Vec::new(), next_lease: 1 }
+        Cluster {
+            nodes: Vec::new(),
+            next_lease: 1,
+            util: Utilization::default(),
+            alive_ids: Vec::new(),
+            draining_empty: BTreeSet::new(),
+            change_epoch: 0,
+            grow_epoch: 0,
+            shape_epoch: 0,
+        }
     }
 
     /// `n` identical nodes of `each` capacity.
@@ -163,14 +201,36 @@ impl Cluster {
     /// never grows the node table without bound (fault-killed nodes are
     /// NOT reused — they may restart with their original capacity).
     pub fn add_node(&mut self, total: Resources) -> NodeId {
-        if let Some(slot) = self.nodes.iter().position(|n| n.retired) {
+        let id = if let Some(slot) = self.nodes.iter().position(|n| n.retired) {
             let id = slot as NodeId;
             self.nodes[slot] = Node::new(id, total);
-            return id;
-        }
-        let id = self.nodes.len() as NodeId;
-        self.nodes.push(Node::new(id, total));
+            id
+        } else {
+            let id = self.nodes.len() as NodeId;
+            self.nodes.push(Node::new(id, total));
+            id
+        };
+        let n = &self.nodes[id as usize];
+        self.util.cpu_total += n.total.cpu;
+        self.util.gpu_total += n.total.gpu;
+        self.util.nodes_alive += 1;
+        self.alive_insert(id);
+        self.change_epoch += 1;
+        self.grow_epoch += 1;
+        self.shape_epoch += 1;
         id
+    }
+
+    fn alive_insert(&mut self, id: NodeId) {
+        if let Err(pos) = self.alive_ids.binary_search(&id) {
+            self.alive_ids.insert(pos, id);
+        }
+    }
+
+    fn alive_remove(&mut self, id: NodeId) {
+        if let Ok(pos) = self.alive_ids.binary_search(&id) {
+            self.alive_ids.remove(pos);
+        }
     }
 
     /// Borrow a node by id.
@@ -184,9 +244,16 @@ impl Cluster {
         let n = &mut self.nodes[node as usize];
         debug_assert!(n.alive && n.available.fits(&demand));
         n.available.acquire(&demand);
+        self.util.cpu_used += demand.cpu;
+        self.util.gpu_used += demand.gpu;
         let id = self.next_lease;
         self.next_lease += 1;
+        let was_empty = n.leases.is_empty();
         n.leases.insert(id, demand);
+        if n.draining && was_empty {
+            self.draining_empty.remove(&node);
+        }
+        self.change_epoch += 1;
         id
     }
 
@@ -197,15 +264,41 @@ impl Cluster {
         if let Some(demand) = n.leases.remove(&lease) {
             if n.alive {
                 n.available.release(&demand);
+                self.util.cpu_used -= demand.cpu;
+                self.util.gpu_used -= demand.gpu;
+                if n.draining {
+                    if n.leases.is_empty() {
+                        self.draining_empty.insert(node);
+                    }
+                } else {
+                    // Capacity a future placement could use came free.
+                    self.grow_epoch += 1;
+                }
             }
+            self.change_epoch += 1;
         }
     }
 
     /// Kill a node; returns the lease ids that were running there.
     pub fn kill_node(&mut self, node: NodeId) -> Vec<LeaseId> {
         let n = &mut self.nodes[node as usize];
+        if n.alive {
+            self.util.cpu_total -= n.total.cpu;
+            self.util.gpu_total -= n.total.gpu;
+            self.util.cpu_used -= n.total.cpu - n.available.cpu;
+            self.util.gpu_used -= n.total.gpu - n.available.gpu;
+            self.util.nodes_alive -= 1;
+            if n.draining {
+                self.util.nodes_draining -= 1;
+            }
+        }
+        let n = &mut self.nodes[node as usize];
         n.alive = false;
         n.available = Resources::default();
+        self.alive_remove(node);
+        self.draining_empty.remove(&node);
+        self.change_epoch += 1;
+        let n = &mut self.nodes[node as usize];
         std::mem::take(&mut n.leases).into_keys().collect()
     }
 
@@ -216,6 +309,20 @@ impl Cluster {
         if !n.alive && !n.retired {
             n.alive = true;
             n.available = n.total.clone();
+            self.util.cpu_total += n.total.cpu;
+            self.util.gpu_total += n.total.gpu;
+            self.util.nodes_alive += 1;
+            let draining = n.draining;
+            if draining {
+                // The drain flag survives a kill; it comes back as an
+                // empty draining node the autoscaler can sweep.
+                self.util.nodes_draining += 1;
+                self.draining_empty.insert(node);
+            } else {
+                self.grow_epoch += 1;
+            }
+            self.alive_insert(node);
+            self.change_epoch += 1;
         }
     }
 
@@ -223,7 +330,17 @@ impl Cluster {
     /// on it, existing leases keep running until the coordinator sheds
     /// them (checkpoint-then-requeue). Idempotent.
     pub fn begin_drain(&mut self, node: NodeId) {
-        self.nodes[node as usize].draining = true;
+        let n = &mut self.nodes[node as usize];
+        if !n.draining {
+            n.draining = true;
+            if n.alive {
+                self.util.nodes_draining += 1;
+                if self.nodes[node as usize].leases.is_empty() {
+                    self.draining_empty.insert(node);
+                }
+            }
+            self.change_epoch += 1;
+        }
     }
 
     /// Gracefully remove a drained node (autoscale shrink). Unlike
@@ -233,14 +350,36 @@ impl Cluster {
     pub fn retire_node(&mut self, node: NodeId) {
         let n = &mut self.nodes[node as usize];
         debug_assert!(n.leases.is_empty(), "retiring node {node} with live leases");
+        if n.alive {
+            self.util.cpu_total -= n.total.cpu;
+            self.util.gpu_total -= n.total.gpu;
+            self.util.cpu_used -= n.total.cpu - n.available.cpu;
+            self.util.gpu_used -= n.total.gpu - n.available.gpu;
+            self.util.nodes_alive -= 1;
+            if n.draining {
+                self.util.nodes_draining -= 1;
+            }
+        }
+        let n = &mut self.nodes[node as usize];
         n.alive = false;
         n.draining = false;
         n.retired = true;
         n.available = Resources::default();
+        self.alive_remove(node);
+        self.draining_empty.remove(&node);
+        self.change_epoch += 1;
+        self.shape_epoch += 1;
     }
 
-    /// Aggregate utilization snapshot over alive nodes (allocation-free).
+    /// Aggregate utilization snapshot over alive nodes — an O(1) read
+    /// of the incrementally maintained aggregate.
     pub fn utilization(&self) -> Utilization {
+        self.util
+    }
+
+    /// Recompute the aggregate by scanning every node — the reference
+    /// the cached value is checked against (tests / debug audits only).
+    pub fn recompute_utilization(&self) -> Utilization {
         let mut u = Utilization::default();
         for n in self.alive_nodes() {
             u.cpu_total += n.total.cpu;
@@ -253,6 +392,41 @@ impl Cluster {
             }
         }
         u
+    }
+
+    /// Ids of alive nodes in ascending order — same order (and
+    /// therefore same deterministic fault-victim stream) as
+    /// [`Cluster::alive_nodes`], without building a fresh `Vec` per
+    /// event.
+    pub fn alive_ids(&self) -> &[NodeId] {
+        &self.alive_ids
+    }
+
+    /// Lowest-id alive draining node with no leases left, if any — the
+    /// O(1) zombie sweep the autoscaler runs every tick.
+    pub fn first_zombie(&self) -> Option<NodeId> {
+        self.draining_empty.iter().next().copied()
+    }
+
+    /// Alive draining nodes with no leases (candidates for retirement).
+    pub fn draining_empty_count(&self) -> usize {
+        self.draining_empty.len()
+    }
+
+    /// Bumped on every observable mutation (see field docs).
+    pub fn change_epoch(&self) -> u64 {
+        self.change_epoch
+    }
+
+    /// Bumped whenever placeable free capacity may have increased.
+    pub fn grow_epoch(&self) -> u64 {
+        self.grow_epoch
+    }
+
+    /// Bumped when the shape set behind [`Cluster::any_node_fits`]
+    /// changes.
+    pub fn shape_epoch(&self) -> u64 {
+        self.shape_epoch
     }
 
     /// Could `demand` ever run on this cluster's node shapes? Checks
@@ -310,7 +484,62 @@ impl Cluster {
             }
             c.nodes.push(n);
         }
+        c.rebuild_index();
         Ok(c)
+    }
+
+    /// Recompute every incremental index from the node table. Called
+    /// once after restore (indices are never persisted); everywhere
+    /// else the mutating methods keep them current.
+    fn rebuild_index(&mut self) {
+        self.util = self.recompute_utilization();
+        self.alive_ids = self.nodes.iter().filter(|n| n.alive).map(|n| n.id).collect();
+        self.draining_empty = self
+            .nodes
+            .iter()
+            .filter(|n| n.alive && n.draining && n.leases.is_empty())
+            .map(|n| n.id)
+            .collect();
+        self.change_epoch += 1;
+        self.grow_epoch += 1;
+        self.shape_epoch += 1;
+    }
+
+    /// Verify every incremental index against a full recompute;
+    /// returns a description of the first mismatch. Test support.
+    #[doc(hidden)]
+    pub fn debug_check(&self) -> Result<(), String> {
+        let want = self.recompute_utilization();
+        let close = |a: f64, b: f64| (a - b).abs() < 1e-6;
+        if !(close(self.util.cpu_used, want.cpu_used)
+            && close(self.util.cpu_total, want.cpu_total)
+            && close(self.util.gpu_used, want.gpu_used)
+            && close(self.util.gpu_total, want.gpu_total)
+            && self.util.nodes_alive == want.nodes_alive
+            && self.util.nodes_draining == want.nodes_draining)
+        {
+            return Err(format!("cached util {:?} != recomputed {:?}", self.util, want));
+        }
+        let alive: Vec<NodeId> = self.nodes.iter().filter(|n| n.alive).map(|n| n.id).collect();
+        if self.alive_ids != alive {
+            return Err(format!("alive_ids {:?} != recomputed {:?}", self.alive_ids, alive));
+        }
+        let zombies: BTreeSet<NodeId> = self
+            .nodes
+            .iter()
+            .filter(|n| n.alive && n.draining && n.leases.is_empty())
+            .map(|n| n.id)
+            .collect();
+        if self.draining_empty != zombies {
+            return Err(format!(
+                "draining_empty {:?} != recomputed {:?}",
+                self.draining_empty, zombies
+            ));
+        }
+        if !self.check_invariants() {
+            return Err("per-node lease accounting violated".into());
+        }
+        Ok(())
     }
 
     /// Iterator over nodes that are currently alive.
@@ -480,6 +709,72 @@ mod tests {
         assert_eq!(u.nodes_alive, 2);
         assert_eq!(u.nodes_draining, 1);
         assert!((c.node(0).utilization() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn incremental_indices_track_full_lifecycle() {
+        let mut c = Cluster::heterogeneous(vec![
+            Resources::cpu_gpu(8.0, 4.0),
+            Resources::cpu(8.0),
+            Resources::cpu(4.0),
+        ]);
+        c.debug_check().unwrap();
+        let l0 = c.lease(0, Resources::cpu_gpu(2.0, 1.0));
+        let l1 = c.lease(1, Resources::cpu(3.0));
+        c.debug_check().unwrap();
+        assert_eq!(c.utilization(), c.recompute_utilization());
+        assert_eq!(c.alive_ids(), &[0, 1, 2]);
+        c.begin_drain(1);
+        assert_eq!(c.first_zombie(), None, "draining node still holds a lease");
+        c.release(1, l1);
+        assert_eq!(c.first_zombie(), Some(1));
+        c.debug_check().unwrap();
+        c.retire_node(1);
+        assert_eq!(c.alive_ids(), &[0, 2]);
+        assert_eq!(c.first_zombie(), None);
+        c.kill_node(2);
+        assert_eq!(c.alive_ids(), &[0]);
+        c.restart_node(2);
+        assert_eq!(c.alive_ids(), &[0, 2]);
+        c.release(0, l0);
+        c.add_node(Resources::cpu(16.0));
+        c.debug_check().unwrap();
+        assert_eq!(c.utilization(), c.recompute_utilization());
+    }
+
+    #[test]
+    fn grow_epoch_moves_only_when_capacity_can_appear() {
+        let mut c = Cluster::uniform(2, Resources::cpu(4.0));
+        let e0 = c.grow_epoch();
+        let l = c.lease(0, Resources::cpu(4.0));
+        assert_eq!(c.grow_epoch(), e0, "acquiring capacity must not invalidate fail-fast");
+        c.release(0, l);
+        assert!(c.grow_epoch() > e0, "released capacity must invalidate fail-fast");
+        let e1 = c.grow_epoch();
+        let l = c.lease(1, Resources::cpu(1.0));
+        c.begin_drain(1);
+        c.release(1, l);
+        assert_eq!(c.grow_epoch(), e1, "draining capacity is not placeable");
+        c.kill_node(0);
+        assert_eq!(c.grow_epoch(), e1);
+        c.restart_node(0);
+        assert!(c.grow_epoch() > e1, "a restarted node is placeable again");
+    }
+
+    #[test]
+    fn restored_cluster_rebuilds_indices() {
+        let mut c = Cluster::heterogeneous(vec![Resources::cpu(8.0), Resources::cpu(4.0)]);
+        c.lease(0, Resources::cpu(2.0));
+        c.begin_drain(1);
+        let back = Cluster::restore_nodes(
+            &crate::util::json::parse(&c.snapshot().to_string()).unwrap(),
+        )
+        .unwrap();
+        back.debug_check().unwrap();
+        assert_eq!(back.alive_ids(), &[0, 1]);
+        // Leases are not persisted, so the drained node restores empty.
+        assert_eq!(back.first_zombie(), Some(1));
+        assert_eq!(back.utilization(), back.recompute_utilization());
     }
 
     #[test]

@@ -143,7 +143,11 @@ impl FaultInjector {
     /// Advance one tick; returns (node to kill, nodes to restart now).
     pub fn tick(&mut self, alive: &[NodeId]) -> (Option<NodeId>, Vec<NodeId>) {
         self.tick += 1;
-        let restarts: Vec<NodeId> = {
+        // Fast path: most ticks have no queued restarts, and a fault-free
+        // plan never will — don't churn two Vecs per event for that.
+        let restarts: Vec<NodeId> = if self.pending_restarts.is_empty() {
+            Vec::new()
+        } else {
             let tick = self.tick;
             let (ready, keep): (Vec<_>, Vec<_>) =
                 self.pending_restarts.drain(..).partition(|(_, t)| *t <= tick);

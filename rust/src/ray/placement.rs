@@ -57,12 +57,26 @@ pub struct TwoLevelScheduler {
     cursor: usize,
     /// Outcome counters (read by benches and result summaries).
     pub stats: PlacementStats,
+    /// Fail-fast memo: the last demand that failed a full spill scan,
+    /// with the cluster's grow epoch at that moment. While the epoch is
+    /// unchanged no placeable capacity can have appeared, so repeating
+    /// the identical request fails in O(1) instead of rescanning every
+    /// node — the saturated-cluster steady state, where the runner
+    /// probes placement once per completion event.
+    fail_cache: Option<(Resources, u64)>,
 }
 
 impl TwoLevelScheduler {
     /// A fresh scheduler with zeroed stats.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Drop the fail-fast memo. Required whenever the cluster instance
+    /// behind previous calls is replaced (experiment restore), because
+    /// grow epochs are only comparable within one cluster's lifetime.
+    pub fn invalidate(&mut self) {
+        self.fail_cache = None;
     }
 
     /// Place `demand` preferring `origin`; spill over otherwise.
@@ -72,6 +86,12 @@ impl TwoLevelScheduler {
         origin: NodeId,
         demand: &Resources,
     ) -> Option<Placement> {
+        if let Some((d, epoch)) = &self.fail_cache {
+            if *epoch == cluster.grow_epoch() && d == demand {
+                self.stats.failed += 1;
+                return None;
+            }
+        }
         // Level 1: local decision. Draining nodes are never placement
         // targets — the autoscaler is emptying them.
         {
@@ -97,6 +117,7 @@ impl TwoLevelScheduler {
                 return Some(Placement { node: id, lease, spilled: true });
             }
         }
+        self.fail_cache = Some((demand.clone(), cluster.grow_epoch()));
         self.stats.failed += 1;
         None
     }
@@ -165,6 +186,27 @@ mod tests {
         assert!(s.place(&mut c, 0, &Resources::cpu(1.0)).is_some());
         assert!(s.place(&mut c, 0, &Resources::cpu(1.0)).is_none());
         assert_eq!(s.stats.failed, 1);
+    }
+
+    #[test]
+    fn fail_cache_clears_when_capacity_frees() {
+        let mut c = Cluster::uniform(2, Resources::cpu(1.0));
+        let mut s = TwoLevelScheduler::new();
+        let p = s.place(&mut c, 0, &Resources::cpu(1.0)).unwrap();
+        assert!(s.place(&mut c, 1, &Resources::cpu(1.0)).is_some());
+        // Saturated: the first miss scans, repeats hit the memo — both
+        // still count as failures.
+        assert!(s.place(&mut c, 0, &Resources::cpu(1.0)).is_none());
+        assert!(s.place(&mut c, 0, &Resources::cpu(1.0)).is_none());
+        assert_eq!(s.stats.failed, 2);
+        // A release bumps the grow epoch, so placement works again.
+        c.release(p.node, p.lease);
+        let q = s.place(&mut c, 0, &Resources::cpu(1.0)).unwrap();
+        assert_eq!(q.node, 0);
+        // A different demand never hits the memo.
+        assert!(s.place(&mut c, 0, &Resources::cpu(0.5)).is_none());
+        assert!(s.place(&mut c, 0, &Resources::cpu(0.25)).is_none());
+        assert_eq!(s.stats.failed, 4);
     }
 
     #[test]

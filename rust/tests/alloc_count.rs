@@ -15,7 +15,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use tune::coordinator::spec::SpaceBuilder;
 use tune::coordinator::{
-    run_experiments, ExperimentSpec, Mode, RunOptions, SchedulerKind, SearchKind,
+    build_runner, run_experiments, ExperimentSpec, Mode, RunOptions, SchedulerKind, SearchKind,
 };
 use tune::ray::{Cluster, Resources};
 use tune::trainable::factory;
@@ -73,6 +73,44 @@ fn allocs_per_result(kind: SchedulerKind, samples: usize, iters: u64) -> (f64, u
     (total as f64 / res.stats.results as f64, res.stats.results)
 }
 
+/// Amortized (allocations, keyed trial-table accesses) per processed
+/// result — the doubling check's probe. Uses `build_runner` so the
+/// table's touch counter is readable after the run.
+fn cost_per_result(samples: usize, iters: u64) -> (f64, f64) {
+    let space = SpaceBuilder::new()
+        .loguniform("lr", 1e-4, 1.0)
+        .uniform("momentum", 0.8, 0.99)
+        .build();
+    let mut spec = ExperimentSpec::named("alloc-doubling");
+    spec.metric = "accuracy".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = samples;
+    spec.max_iterations_per_trial = iters;
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let mut runner = build_runner(
+        spec,
+        space,
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+        RunOptions {
+            cluster: Cluster::uniform(4, Resources::cpu(16.0)),
+            ..Default::default()
+        },
+    );
+    // Step the loop to exhaustion, read the touch counter, THEN
+    // finalize: finalize consumes the table (taking its counter with
+    // it) and legitimately scans it, so the measurement window is
+    // exactly the per-event path.
+    while runner.debug_step() {}
+    let touches = runner.debug_table_touches();
+    let res = runner.finalize();
+    let total = ALLOCS.load(Ordering::Relaxed) - before;
+    let n = res.stats.results;
+    assert!(n >= samples as u64 * iters, "short run: {n} results");
+    (total as f64 / n as f64, touches as f64 / n as f64)
+}
+
 /// THE pinned constant. Current steady state is dominated by the
 /// trainable's own `StepOutput` (a `BTreeMap` with two `String` keys,
 /// ~4-6 allocations per step — upstream of the coordinator); the
@@ -120,5 +158,21 @@ fn steady_state_result_path_allocations_stay_pinned() {
     assert!(
         median <= MAX_ALLOCS_PER_RESULT,
         "median hot path allocates {median:.1}/result (pin {MAX_ALLOCS_PER_RESULT})"
+    );
+
+    // Doubling check for the indexed per-event hot loops: 4x the trial
+    // table, same amortized per-result cost — in heap allocations AND
+    // in keyed trial-table accesses. Any O(live-trials) walk left on
+    // the dispatch/unblock/fault path makes either ratio grow with the
+    // table instead of staying flat.
+    let (allocs_1k, touches_1k) = cost_per_result(1024, 12);
+    let (allocs_4k, touches_4k) = cost_per_result(4096, 12);
+    assert!(
+        allocs_4k <= allocs_1k * 1.15 + 0.5,
+        "allocs/result grew with trial count: {allocs_1k:.2} @1k -> {allocs_4k:.2} @4k"
+    );
+    assert!(
+        touches_4k <= touches_1k * 1.15 + 0.5,
+        "table touches/result grew with trial count: {touches_1k:.2} @1k -> {touches_4k:.2} @4k"
     );
 }

@@ -1,15 +1,30 @@
 //! Property-based tests over coordinator invariants (routing, batching,
 //! state), using the library's deterministic property harness.
 
+use std::collections::BTreeSet;
+
 use tune::coordinator::schedulers::{
     AshaScheduler, Decision, MedianStoppingRule, PbtScheduler, SchedulerCtx, TrialScheduler,
 };
 use tune::coordinator::spec::{expand_grid, grid_size, sample_config, ParamDist, SpaceBuilder};
-use tune::coordinator::trial::{Config, Mode, ParamValue, ResultRow, Trial, TrialStatus};
-use tune::ray::{Cluster, Resources, TwoLevelScheduler, Utilization};
+use tune::coordinator::trial::{Config, Mode, ParamValue, ResultRow, Trial, TrialId, TrialStatus};
+use tune::coordinator::{
+    build_runner, ExperimentSpec, RunOptions, SchedulerKind, SearchKind, TrialRunner,
+};
+use tune::ray::{
+    AutoscalePolicy, Cluster, FaultPlan, Resources, TwoLevelScheduler, Utilization,
+};
+use tune::trainable::factory;
+use tune::trainable::synthetic::CurveTrainable;
 use tune::util::intern::MetricId;
 use tune::util::prop::check;
 use tune::util::rng::Rng;
+
+/// Slow-path reference for the runner's incrementally maintained
+/// Pending queue: recompute it from trial statuses.
+fn pending_of(trials: &std::collections::BTreeMap<TrialId, Trial>) -> BTreeSet<TrialId> {
+    trials.values().filter(|t| t.status == TrialStatus::Pending).map(|t| t.id).collect()
+}
 
 fn random_space(rng: &mut Rng) -> tune::coordinator::spec::SearchSpace {
     let mut b = SpaceBuilder::new();
@@ -210,8 +225,10 @@ fn prop_asha_promotion_rate_bounded() {
             t.status = TrialStatus::Running;
             t.record(row.clone(), METRIC, Mode::Max);
             trials.insert(id, t.clone());
+            let pending = pending_of(&trials);
             let ctx = SchedulerCtx {
                 trials: &trials,
+                pending: &pending,
                 metric_id: METRIC,
                 mode: Mode::Max,
                 utilization: Utilization::default(),
@@ -265,8 +282,10 @@ fn prop_median_never_stops_best() {
                     t.status = TrialStatus::Running;
                 }
                 let t = trials[&id].clone();
+                let pending = pending_of(&trials);
                 let ctx = SchedulerCtx {
                     trials: &trials,
+                    pending: &pending,
                     metric_id: METRIC,
                     mode: Mode::Max,
                     utilization: Utilization::default(),
@@ -304,8 +323,10 @@ fn prop_pbt_exploit_sources_are_top() {
             let row = ResultRow::new(1, 1.0).with(METRIC, scores[id as usize]);
             trials.get_mut(&id).unwrap().record(row.clone(), METRIC, Mode::Max);
             let t = trials[&id].clone();
+            let pending = pending_of(&trials);
             let ctx = SchedulerCtx {
                 trials: &trials,
+                pending: &pending,
                 metric_id: METRIC,
                 mode: Mode::Max,
                 utilization: Utilization::default(),
@@ -321,6 +342,173 @@ fn prop_pbt_exploit_sources_are_top() {
             }
         }
     });
+}
+
+// ---------------------------------------------------------------------
+// Runner index equivalence (the million-trial tentpole's oracle)
+// ---------------------------------------------------------------------
+
+/// Step `runner` to completion, re-deriving every incrementally
+/// maintained index (per-status counters, Pending queue, per-node lease
+/// index, running-demand sum, iteration/budget totals, cluster caches)
+/// from a full scan after each event; fail on the first divergence.
+fn drive_checked(runner: &mut TrialRunner, label: &str) {
+    runner
+        .debug_check_indices()
+        .unwrap_or_else(|e| panic!("{label}: diverged before the first event: {e}"));
+    while runner.debug_step() {
+        runner.debug_check_indices().unwrap_or_else(|e| panic!("{label}: {e}"));
+    }
+}
+
+fn lr_space() -> tune::coordinator::spec::SearchSpace {
+    SpaceBuilder::new().loguniform("lr", 1e-4, 1.0).build()
+}
+
+/// Final-state consistency shared by the oracle tests below.
+fn assert_result_consistent(res: &tune::coordinator::ExperimentResult, n: usize) {
+    assert_eq!(res.trials.len(), n);
+    assert!(res.trials.values().all(|t| t.status.is_terminal()));
+    assert_eq!(res.stats.total_iterations, res.total_iterations());
+    let budget: f64 = res.trials.values().map(|t| t.time_total_s).sum();
+    assert!(
+        (res.budget_used_s - budget).abs() <= 1e-6 * budget.abs().max(1.0),
+        "incremental budget {} != recomputed {budget}",
+        res.budget_used_s
+    );
+}
+
+/// The tentpole's oracle: across randomized runs mixing schedulers
+/// (FIFO/ASHA/HyperBand/median), search algorithms, step and node
+/// faults, HyperBand pauses and autoscaler drains, the runner's
+/// incremental indices stay equal to a freshly computed full-scan
+/// reference after EVERY event.
+#[test]
+fn prop_runner_indices_match_full_scan_reference() {
+    check("runner_indices", 0x1D5, 10, |rng, case| {
+        let mut spec = ExperimentSpec::named(&format!("prop-idx-{case}"));
+        spec.metric = "accuracy".into();
+        spec.mode = Mode::Max;
+        spec.num_samples = rng.index(120) + 40;
+        spec.max_iterations_per_trial = rng.range(3, 9) as u64;
+        spec.seed = 0xD0 + case as u64;
+        spec.checkpoint_freq = 2;
+        spec.max_failures = 20;
+        if rng.bool(0.5) {
+            spec.fault_plan = FaultPlan {
+                step_failure_prob: 0.01,
+                node_failure_prob: 0.01,
+                nodes_restart: true,
+                node_restart_delay: 10,
+            };
+        }
+        let scheduler = match rng.index(4) {
+            0 => SchedulerKind::Fifo,
+            1 => SchedulerKind::Asha {
+                grace_period: 1,
+                reduction_factor: 3.0,
+                max_t: spec.max_iterations_per_trial,
+            },
+            2 => SchedulerKind::MedianStopping { grace_period: 2, min_samples: 3 },
+            _ => SchedulerKind::HyperBand { max_t: spec.max_iterations_per_trial, eta: 3.0 },
+        };
+        let search = if rng.bool(0.5) { SearchKind::Random } else { SearchKind::Tpe };
+        let mut opts = RunOptions {
+            cluster: Cluster::uniform(rng.index(3) + 2, Resources::cpu(4.0)),
+            ..Default::default()
+        };
+        if rng.bool(0.4) {
+            opts.autoscale = Some(AutoscalePolicy {
+                node_template: Resources::cpu(4.0),
+                min_nodes: 1,
+                max_nodes: 6,
+                scale_up_after: 3,
+                scale_down_after: 10,
+                scale_down_util: 0.15,
+            });
+        }
+        let n = spec.num_samples;
+        let mut runner = build_runner(
+            spec,
+            lr_space(),
+            scheduler,
+            search,
+            factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+            opts,
+        );
+        drive_checked(&mut runner, &format!("case {case}"));
+        assert_result_consistent(&runner.finalize(), n);
+    });
+}
+
+/// The same oracle across snapshot→restore at 2k trials: a faulty ASHA
+/// run is driven with per-event index checks until two periodic
+/// snapshots are durable, abandoned mid-flight, resumed from disk (the
+/// indices are rebuilt from the trial table — they are never
+/// persisted), and driven to completion with per-event checks.
+#[test]
+fn runner_indices_survive_snapshot_restore_at_2k_trials() {
+    let dir = std::env::temp_dir().join(format!("tune_prop_idx_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let spec = || {
+        let mut s = ExperimentSpec::named("prop-idx-2k");
+        s.metric = "accuracy".into();
+        s.mode = Mode::Max;
+        s.num_samples = 2000;
+        s.max_iterations_per_trial = 3;
+        s.seed = 0x2B5;
+        s.checkpoint_freq = 2;
+        s.max_failures = 30;
+        s.fault_plan = FaultPlan {
+            step_failure_prob: 0.002,
+            node_failure_prob: 0.002,
+            nodes_restart: true,
+            node_restart_delay: 20,
+        };
+        s
+    };
+    let sched = || SchedulerKind::Asha { grace_period: 1, reduction_factor: 3.0, max_t: 3 };
+    let opts = |resume| RunOptions {
+        cluster: Cluster::uniform(4, Resources::cpu(8.0)),
+        experiment_dir: Some(dir.clone()),
+        snapshot_every: 400,
+        resume,
+        ..Default::default()
+    };
+    let mk = |resume| {
+        build_runner(
+            spec(),
+            lr_space(),
+            sched(),
+            SearchKind::Random,
+            factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+            opts(resume),
+        )
+    };
+    // Phase 1: per-event oracle checks until two snapshots exist, then
+    // abandon the runner mid-flight (the in-process crash).
+    {
+        let mut r = mk(false);
+        r.debug_check_indices().expect("pre-crash divergence before first event");
+        while r.debug_step() {
+            r.debug_check_indices().expect("pre-crash divergence");
+            if r.debug_stats().snapshots >= 2 {
+                break;
+            }
+        }
+        assert!(r.debug_stats().snapshots >= 2, "finished before the crash point");
+    }
+    // Phase 2: resume. The restore path must rebuild every index from
+    // the trial table before the first post-resume event fires.
+    let mut r = mk(true);
+    r.debug_check_indices().expect("restored indices diverged");
+    while r.debug_step() {
+        r.debug_check_indices().expect("post-resume divergence");
+    }
+    let res = r.finalize();
+    assert_result_consistent(&res, 2000);
+    assert!(res.stats.replayed > 0, "the crash should have forced a replay");
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// Checkpoint store GC keeps the newest blobs and latest_for is stable.

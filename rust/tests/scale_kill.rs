@@ -1,0 +1,102 @@
+//! Fault locality at scale: killing one node of a 10k-trial experiment
+//! must touch only that node's trials, with work proportional to the
+//! victim's lease count — not to the trial table. The runner's per-node
+//! lease index is what makes this O(victim); this harness pins it with
+//! the trial-table touch counter (the ops analogue of the counting
+//! allocator in `alloc_count`).
+
+use tune::coordinator::spec::SpaceBuilder;
+use tune::coordinator::{
+    build_runner, ExperimentSpec, Mode, RunOptions, SchedulerKind, SearchKind, TrialStatus,
+};
+use tune::ray::{Cluster, Resources};
+use tune::trainable::factory;
+use tune::trainable::synthetic::CurveTrainable;
+
+const SAMPLES: usize = 10_000;
+const ITERS: u64 = 5;
+
+#[test]
+fn node_kill_at_10k_trials_touches_only_the_victims() {
+    let space = SpaceBuilder::new().loguniform("lr", 1e-4, 1.0).build();
+    let mut spec = ExperimentSpec::named("scale-kill");
+    spec.metric = "accuracy".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = SAMPLES;
+    spec.max_iterations_per_trial = ITERS;
+    spec.seed = 7;
+    spec.checkpoint_freq = 2; // bounds post-kill replay
+    let mut runner = build_runner(
+        spec,
+        space,
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+        RunOptions {
+            cluster: Cluster::uniform(24, Resources::cpu(16.0)),
+            ..Default::default()
+        },
+    );
+
+    // Reach a saturated steady state: hundreds of concurrent leases
+    // spread over every node, thousands of trials in the table.
+    while runner.debug_step() {
+        if runner.debug_stats().results >= 2_000 {
+            break;
+        }
+    }
+    let (victim, victims) = runner.debug_busiest_node().expect("no leases at steady state");
+    assert!(victims >= 8, "busiest node holds only {victims} leases");
+
+    let before: std::collections::BTreeMap<u64, TrialStatus> =
+        runner.trials().iter().map(|(id, t)| (*id, t.status)).collect();
+    let touches_before = runner.debug_table_touches();
+    let kill_touched_before = runner.debug_stats().kill_touched;
+
+    runner.debug_kill_node(victim);
+
+    // Work bound: the kill walked the victim's lease set, not the
+    // 10k-entry table. Each failed trial costs a small constant of keyed
+    // accesses (rollback, counter moves, requeue); 64x leaves generous
+    // headroom while a full-table walk (10k touches minimum) still
+    // fails by two orders of magnitude.
+    let touch_delta = runner.debug_table_touches() - touches_before;
+    assert!(
+        touch_delta <= 64 * victims as u64 + 16,
+        "kill of {victims} leases touched the table {touch_delta} times"
+    );
+    assert_eq!(
+        runner.debug_stats().kill_touched - kill_touched_before,
+        victims as u64,
+        "kill_touched must count exactly the victim's trials"
+    );
+
+    // Blast radius: exactly the victim's trials changed, every one of
+    // them Running -> Pending (first failure, so none errored out).
+    let mut changed = 0usize;
+    for (id, t) in runner.trials() {
+        let old = before[id];
+        if t.status != old {
+            changed += 1;
+            assert_eq!(old, TrialStatus::Running, "trial {id} was not running before the kill");
+            assert_eq!(
+                t.status,
+                TrialStatus::Pending,
+                "trial {id} should be requeued, not {:?}",
+                t.status
+            );
+        }
+    }
+    assert_eq!(changed, victims, "blast radius was not confined to the victim node");
+    runner.debug_check_indices().expect("indices diverged after the kill");
+
+    // The dead node stays dead; the remaining 23 nodes absorb the
+    // requeued trials and the run completes.
+    while runner.debug_step() {}
+    let res = runner.finalize();
+    assert_eq!(res.trials.len(), SAMPLES);
+    assert!(res.trials.values().all(|t| t.status.is_terminal()));
+    assert_eq!(res.stats.kill_touched, victims as u64);
+    assert_eq!(res.stats.failures_recovered, victims as u64);
+    assert_eq!(res.count(TrialStatus::Completed), SAMPLES);
+}
