@@ -1,0 +1,328 @@
+//! C8 bench: the content-addressed checkpoint store under a PBT
+//! workload — save/restore throughput, dedup ratio, and spill traffic.
+//!
+//! Run: `cargo bench --bench ckpt_store`
+//!
+//! Two cases:
+//!  * `store_pbt` drives `CheckpointStore` directly with the shape PBT
+//!    produces — per-round small mutations of large weight blobs,
+//!    bottom-quantile trials cloning top-quantile checkpoints — with
+//!    the spill tier and a memory budget active, then measures restore
+//!    bandwidth by evicting everything and reading every live blob
+//!    back from chunks.
+//!  * `runner_pbt` runs a real PBT experiment through the coordinator
+//!    with a big-state trainable and reports the store counters the
+//!    runner surfaces in `ExperimentResult::ckpt`.
+//!
+//! `TUNE_BENCH_FAST=1` shrinks blob sizes and round counts so CI can
+//! smoke the binary in seconds; the emitted `BENCH_ckpt_store.json`
+//! records which mode produced the numbers.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use tune::checkpoint::CheckpointStore;
+use tune::coordinator::spec::SpaceBuilder;
+use tune::coordinator::trial::Config;
+use tune::coordinator::{
+    run_experiments, ExperimentSpec, Mode, RunOptions, SchedulerKind, SearchKind,
+};
+use tune::ray::{Cluster, Resources};
+use tune::trainable::{factory, StepOutput, Trainable};
+use tune::util::json::Json;
+use tune::util::rng::Rng;
+
+const MIB: f64 = 1024.0 * 1024.0;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("tune_bench_ckpt_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+struct StoreCase {
+    save_mb_s: f64,
+    restore_mb_s: f64,
+    dedup_ratio: f64,
+    logical_mib: f64,
+    physical_mib: f64,
+    unique_chunks: u64,
+    blob_dedup_hits: u64,
+    spilled_chunks: u64,
+}
+
+/// Store-level PBT simulation: `trials` populations of `blob` bytes of
+/// "weights"; each round every trial perturbs a 4 KiB window and
+/// checkpoints; from round 2 on, the bottom half exploits (clones the
+/// state of) a top-quartile trial before perturbing — the lineage
+/// convergence that makes real PBT checkpoint sets collapse under
+/// content addressing.
+fn store_pbt(trials: usize, blob: usize, rounds: usize) -> StoreCase {
+    let dir = tmpdir("store");
+    let mut store = CheckpointStore::new().with_disk(dir.clone());
+    store.keep_per_trial = 2;
+    store.set_mem_budget(Some(8 << 20));
+    let mut rng = Rng::new(0xBE7C);
+    let mut state: Vec<Vec<u8>> = (0..trials)
+        .map(|t| (0..blob).map(|i| (i as u64 * 31 + t as u64) as u8).collect())
+        .collect();
+
+    let mut saved_bytes = 0u64;
+    let mut save_time = 0.0f64;
+    for round in 0..rounds {
+        // Exploit phase: the bottom half clones a top-quartile trial's
+        // latest checkpoint (a shuffle stands in for the score ranking;
+        // the storage shape is what's measured). Like the runner, the
+        // exploiter checkpoints the cloned state verbatim — the
+        // whole-blob dedup fast path — before perturbing it.
+        if round >= 2 {
+            let mut order: Vec<usize> = (0..trials).collect();
+            rng.shuffle(&mut order);
+            let (top, rest) = order.split_at(trials / 4);
+            for &loser in &rest[trials / 4..] {
+                let winner = *rng.choose(top);
+                if let Some(cid) = store.latest_for(winner as u64) {
+                    if let Some(cloned) = store.get(cid) {
+                        state[loser] = cloned.to_vec();
+                        saved_bytes += cloned.len() as u64;
+                        let t0 = Instant::now();
+                        store.save_timed(loser as u64, round as u64, round as f64, cloned);
+                        save_time += t0.elapsed().as_secs_f64();
+                    }
+                }
+            }
+        }
+        // Perturb + checkpoint phase.
+        for t in 0..trials {
+            let at = rng.index(state[t].len().saturating_sub(4096).max(1));
+            let end = (at + 4096).min(state[t].len());
+            for b in &mut state[t][at..end] {
+                *b = b.wrapping_add(1);
+            }
+            let payload = state[t].clone();
+            saved_bytes += payload.len() as u64;
+            let t0 = Instant::now();
+            store.save_timed(t as u64, round as u64 + 1, round as f64, payload);
+            save_time += t0.elapsed().as_secs_f64();
+        }
+    }
+
+    // Restore bandwidth: evict every resident byte (assembled caches
+    // and chunk payloads both), then reassemble every live blob from
+    // the spill tier.
+    store.set_mem_budget(Some(0));
+    store.set_mem_budget(None);
+    let ids: Vec<u64> = store.ids().collect();
+    let mut restored_bytes = 0u64;
+    let t0 = Instant::now();
+    for id in &ids {
+        restored_bytes += store.get(*id).expect("live blob reads back").len() as u64;
+    }
+    let restore_time = t0.elapsed().as_secs_f64();
+
+    let s = store.stats();
+    std::fs::remove_dir_all(&dir).ok();
+    StoreCase {
+        save_mb_s: saved_bytes as f64 / MIB / save_time.max(1e-9),
+        restore_mb_s: restored_bytes as f64 / MIB / restore_time.max(1e-9),
+        dedup_ratio: s.dedup_ratio(),
+        logical_mib: s.logical_bytes as f64 / MIB,
+        physical_mib: s.physical_bytes as f64 / MIB,
+        unique_chunks: s.unique_chunks,
+        blob_dedup_hits: s.blob_dedup_hits,
+        spilled_chunks: s.spilled_chunks,
+    }
+}
+
+/// A trainable with PBT-shaped state: a large weight buffer of which
+/// one step touches only a small window. `save` is the whole buffer —
+/// exactly what makes naive checkpoint storage O(population x rounds x
+/// weights) and the chunk store O(weights + edits).
+struct BigStateTrainable {
+    state: Vec<u8>,
+    t: u64,
+    quality: f64,
+    lr: f64,
+}
+
+impl BigStateTrainable {
+    fn new(config: &Config, seed: u64, bytes: usize) -> Self {
+        let mut rng = Rng::new(seed ^ 0xB16_57A7E);
+        let state = (0..bytes).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        BigStateTrainable {
+            state,
+            t: 0,
+            quality: 0.0,
+            lr: config.get("lr").and_then(|v| v.as_f64()).unwrap_or(0.01),
+        }
+    }
+}
+
+impl Trainable for BigStateTrainable {
+    fn step(&mut self) -> Result<StepOutput, String> {
+        self.t += 1;
+        // One optimizer step dirties a deterministic 2 KiB window.
+        let at = (self.t as usize * 2048) % self.state.len().saturating_sub(2048).max(1);
+        let end = (at + 2048).min(self.state.len());
+        for b in &mut self.state[at..end] {
+            *b = b.wrapping_add(1);
+        }
+        self.quality += self.lr / (1.0 + self.lr * self.t as f64);
+        Ok(StepOutput::of(&[("accuracy", self.quality)]))
+    }
+    fn save(&mut self) -> Vec<u8> {
+        let mut blob = Vec::with_capacity(self.state.len() + 16);
+        blob.extend_from_slice(&self.t.to_le_bytes());
+        blob.extend_from_slice(&self.quality.to_le_bytes());
+        blob.extend_from_slice(&self.state);
+        blob
+    }
+    fn restore(&mut self, blob: &[u8]) -> Result<(), String> {
+        if blob.len() < 16 {
+            return Err("short blob".into());
+        }
+        self.t = u64::from_le_bytes(blob[..8].try_into().unwrap());
+        self.quality = f64::from_le_bytes(blob[8..16].try_into().unwrap());
+        self.state = blob[16..].to_vec();
+        Ok(())
+    }
+    fn update_config(&mut self, config: &Config) {
+        if let Some(lr) = config.get("lr").and_then(|v| v.as_f64()) {
+            self.lr = lr;
+        }
+    }
+}
+
+struct RunnerCase {
+    wall_s: f64,
+    exploits: u64,
+    saved: u64,
+    dedup_ratio: f64,
+    logical_mib: f64,
+    physical_mib: f64,
+    spilled_chunks: u64,
+}
+
+/// Runner-level PBT with the spill tier and memory budget on: the
+/// numbers here are the store counters a real experiment reports.
+fn runner_pbt(samples: usize, iters: u64, state_bytes: usize) -> RunnerCase {
+    let dir = tmpdir("runner");
+    let space = SpaceBuilder::new()
+        .loguniform("lr", 1e-3, 1.0)
+        .uniform("momentum", 0.8, 0.99)
+        .build();
+    let mut spec = ExperimentSpec::named("ckpt-bench-pbt");
+    spec.metric = "accuracy".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = samples;
+    spec.max_iterations_per_trial = iters;
+    spec.seed = 7;
+    spec.checkpoint_freq = 2;
+    let t0 = Instant::now();
+    let res = run_experiments(
+        spec,
+        space.clone(),
+        SchedulerKind::Pbt { perturbation_interval: 3, space },
+        SearchKind::Random,
+        factory(move |c, s| Box::new(BigStateTrainable::new(c, s, state_bytes))),
+        RunOptions {
+            cluster: Cluster::uniform(4, Resources::cpu(8.0)),
+            experiment_dir: Some(dir.clone()),
+            snapshot_every: 10,
+            checkpoint_mem_budget: Some(4 << 20),
+            ..Default::default()
+        },
+    );
+    let wall_s = t0.elapsed().as_secs_f64();
+    std::fs::remove_dir_all(&dir).ok();
+    RunnerCase {
+        wall_s,
+        exploits: res.stats.exploits,
+        saved: res.ckpt.saved,
+        dedup_ratio: res.ckpt.dedup_ratio(),
+        logical_mib: res.ckpt.logical_bytes as f64 / MIB,
+        physical_mib: res.ckpt.physical_bytes as f64 / MIB,
+        spilled_chunks: res.ckpt.spilled_chunks,
+    }
+}
+
+fn main() {
+    let fast = std::env::var("TUNE_BENCH_FAST").is_ok();
+    let (blob, rounds) = if fast { (128 << 10, 6) } else { (1 << 20, 20) };
+    let (samples, iters, state_bytes) = if fast { (8, 8, 64 << 10) } else { (16, 24, 256 << 10) };
+
+    println!(
+        "== content-addressed checkpoint store under PBT{} ==",
+        if fast { " [FAST]" } else { "" }
+    );
+
+    let sc = store_pbt(16, blob, rounds);
+    println!(
+        "store_pbt   16 trials x {} rounds x {:.1} MiB blobs (spill + 8 MiB budget)",
+        rounds,
+        blob as f64 / MIB
+    );
+    println!(
+        "  save {:.0} MB/s   restore {:.0} MB/s   dedup {:.1}x ({:.1} -> {:.1} MiB, {} chunks)",
+        sc.save_mb_s, sc.restore_mb_s, sc.dedup_ratio, sc.logical_mib, sc.physical_mib,
+        sc.unique_chunks
+    );
+    println!(
+        "  blob-level exploit hits {}   chunks spilled {}",
+        sc.blob_dedup_hits, sc.spilled_chunks
+    );
+
+    let rc = runner_pbt(samples, iters, state_bytes);
+    println!(
+        "runner_pbt  {} trials x {} iters x {} KiB state (PBT, ckpt every 2)",
+        samples,
+        iters,
+        state_bytes >> 10
+    );
+    println!(
+        "  wall {:.2}s   exploits {}   saves {}   dedup {:.1}x ({:.1} -> {:.1} MiB, {} spilled)",
+        rc.wall_s, rc.exploits, rc.saved, rc.dedup_ratio, rc.logical_mib, rc.physical_mib,
+        rc.spilled_chunks
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("ckpt_store".into())),
+        ("fast_mode", Json::Bool(fast)),
+        (
+            "store_pbt",
+            Json::obj(vec![
+                ("trials", Json::Num(16.0)),
+                ("rounds", Json::Num(rounds as f64)),
+                ("blob_bytes", Json::Num(blob as f64)),
+                ("save_mb_s", Json::Num(sc.save_mb_s)),
+                ("restore_mb_s", Json::Num(sc.restore_mb_s)),
+                ("dedup_ratio", Json::Num(sc.dedup_ratio)),
+                ("logical_mib", Json::Num(sc.logical_mib)),
+                ("physical_mib", Json::Num(sc.physical_mib)),
+                ("unique_chunks", Json::Num(sc.unique_chunks as f64)),
+                ("blob_dedup_hits", Json::Num(sc.blob_dedup_hits as f64)),
+                ("spilled_chunks", Json::Num(sc.spilled_chunks as f64)),
+            ]),
+        ),
+        (
+            "runner_pbt",
+            Json::obj(vec![
+                ("trials", Json::Num(samples as f64)),
+                ("iters", Json::Num(iters as f64)),
+                ("state_bytes", Json::Num(state_bytes as f64)),
+                ("wall_s", Json::Num(rc.wall_s)),
+                ("exploits", Json::Num(rc.exploits as f64)),
+                ("saves", Json::Num(rc.saved as f64)),
+                ("dedup_ratio", Json::Num(rc.dedup_ratio)),
+                ("logical_mib", Json::Num(rc.logical_mib)),
+                ("physical_mib", Json::Num(rc.physical_mib)),
+                ("spilled_chunks", Json::Num(rc.spilled_chunks as f64)),
+            ]),
+        ),
+    ]);
+    match std::fs::write("BENCH_ckpt_store.json", json.to_string()) {
+        Ok(()) => println!("\nwrote BENCH_ckpt_store.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_ckpt_store.json: {e}"),
+    }
+}

@@ -1,0 +1,782 @@
+//! Content-addressed chunk layer beneath [`CheckpointStore`].
+//!
+//! Checkpoint blobs are split into **content-defined chunks** with a
+//! gear-hash rolling boundary (cut points follow the *content*, so an
+//! insertion near the front of a blob shifts at most the chunks it
+//! touches — consecutive lineage checkpoints and PBT exploit clones
+//! share almost all their chunks). Each chunk is keyed by a 128-bit
+//! content hash and refcounted: storing the same bytes twice bumps a
+//! counter instead of copying, and per-trial GC only physically frees a
+//! chunk when its refcount reaches zero.
+//!
+//! The table is **tiered**: with a disk directory attached, every chunk
+//! is eagerly spilled to `chunks/c<32-hex>.bin` with the same atomic
+//! write + fsync discipline `persist.rs` uses (so a crash never leaves a
+//! torn chunk behind a completed save), and under a memory budget the
+//! in-memory payloads of cold chunks are dropped — `get` faults them
+//! back in from disk, verifying length *and* content hash so a torn or
+//! truncated file degrades to "chunk missing" instead of serving
+//! corrupt bytes.
+//!
+//! Indices and refcounts are never persisted; restore recomputes them
+//! from the blob manifests in the snapshot (the same rebuild-don't-trust
+//! discipline as the runner's `rebuild_indexes`).
+//!
+//! [`CheckpointStore`]: super::CheckpointStore
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::persist::write_atomic_bytes;
+
+/// A 128-bit content hash — wide enough that random collisions are out
+/// of reach for any realistic checkpoint population (2^64 chunks for a
+/// birthday collision).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ContentHash {
+    /// High 64 bits.
+    pub hi: u64,
+    /// Low 64 bits.
+    pub lo: u64,
+}
+
+impl ContentHash {
+    /// Render as 32 lowercase hex digits (the on-disk chunk file stem
+    /// and the snapshot wire format).
+    pub fn to_hex(self) -> String {
+        format!("{:016x}{:016x}", self.hi, self.lo)
+    }
+
+    /// Parse the 32-hex-digit form; `None` on any malformed input.
+    pub fn from_hex(s: &str) -> Option<ContentHash> {
+        if s.len() != 32 || !s.is_ascii() {
+            return None;
+        }
+        let hi = u64::from_str_radix(&s[..16], 16).ok()?;
+        let lo = u64::from_str_radix(&s[16..], 16).ok()?;
+        Some(ContentHash { hi, lo })
+    }
+}
+
+impl fmt::Display for ContentHash {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:016x}{:016x}", self.hi, self.lo)
+    }
+}
+
+/// Domain-separation seed for whole-blob keys.
+pub const BLOB_SEED: u64 = 0xB10B;
+/// Domain-separation seed for chunk keys.
+pub const CHUNK_SEED: u64 = 0xC4A2;
+
+const C1: u64 = 0x87C3_7B91_1142_53D5;
+const C2: u64 = 0x4CF5_AD43_2745_937F;
+
+#[inline]
+fn fmix64(mut k: u64) -> u64 {
+    k ^= k >> 33;
+    k = k.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    k ^= k >> 33;
+    k = k.wrapping_mul(0xC4CE_B9FE_1A85_EC53);
+    k ^= k >> 33;
+    k
+}
+
+/// 128-bit content hash (MurmurHash3-x64-128 style mixing) of `data`
+/// under a domain-separation `seed`. Not cryptographic — the threat
+/// model is accidental collision, not an adversary forging checkpoints.
+pub fn content_hash(data: &[u8], seed: u64) -> ContentHash {
+    let mut h1 = seed;
+    let mut h2 = seed;
+    let mut chunks = data.chunks_exact(16);
+    for block in &mut chunks {
+        let mut k1 = u64::from_le_bytes(block[..8].try_into().expect("8-byte block"));
+        let mut k2 = u64::from_le_bytes(block[8..].try_into().expect("8-byte block"));
+        k1 = k1.wrapping_mul(C1).rotate_left(31).wrapping_mul(C2);
+        h1 = (h1 ^ k1).rotate_left(27).wrapping_add(h2).wrapping_mul(5).wrapping_add(0x52DC_E729);
+        k2 = k2.wrapping_mul(C2).rotate_left(33).wrapping_mul(C1);
+        h2 = (h2 ^ k2).rotate_left(31).wrapping_add(h1).wrapping_mul(5).wrapping_add(0x3849_5AB5);
+    }
+    let tail = chunks.remainder();
+    if !tail.is_empty() {
+        let mut buf = [0u8; 16];
+        buf[..tail.len()].copy_from_slice(tail);
+        let mut k1 = u64::from_le_bytes(buf[..8].try_into().expect("8-byte block"));
+        let mut k2 = u64::from_le_bytes(buf[8..].try_into().expect("8-byte block"));
+        k1 = k1.wrapping_mul(C1).rotate_left(31).wrapping_mul(C2);
+        h1 ^= k1;
+        k2 = k2.wrapping_mul(C2).rotate_left(33).wrapping_mul(C1);
+        h2 ^= k2;
+    }
+    h1 ^= data.len() as u64;
+    h2 ^= data.len() as u64;
+    h1 = h1.wrapping_add(h2);
+    h2 = h2.wrapping_add(h1);
+    h1 = fmix64(h1);
+    h2 = fmix64(h2);
+    h1 = h1.wrapping_add(h2);
+    h2 = h2.wrapping_add(h1);
+    ContentHash { hi: h1, lo: h2 }
+}
+
+/// Whole-blob identity key — the fast path: two saves of identical
+/// bytes (a PBT exploit clone) collapse to a refcount bump with no
+/// chunking work at all.
+pub fn blob_key(data: &[u8]) -> ContentHash {
+    content_hash(data, BLOB_SEED)
+}
+
+/// Per-chunk content key.
+pub fn chunk_key(data: &[u8]) -> ContentHash {
+    content_hash(data, CHUNK_SEED)
+}
+
+const fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Gear table for the rolling boundary hash: one random-looking 64-bit
+/// word per byte value, generated deterministically at compile time.
+const GEAR: [u64; 256] = {
+    let mut t = [0u64; 256];
+    let mut i = 0;
+    while i < 256 {
+        t[i] = splitmix64(i as u64 ^ 0x6EA2_D15C_31FB_770Cu64);
+        i += 1;
+    }
+    t
+};
+
+/// Content-defined chunking parameters. The gear hash `h = (h << 1) +
+/// GEAR[byte]` carries an intrinsic 64-byte window (older bytes shift
+/// out the top); a boundary is declared when the low `mask` bits are
+/// zero, giving an expected chunk size of `mask + 1` bytes past `min`.
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkParams {
+    /// No boundary before this many bytes (also caps tiny-chunk
+    /// metadata overhead).
+    pub min: usize,
+    /// Boundary condition `h & mask == 0`; expected spacing `mask + 1`.
+    pub mask: u64,
+    /// Forced boundary at this size regardless of content.
+    pub max: usize,
+}
+
+impl Default for ChunkParams {
+    fn default() -> Self {
+        // avg ~8 KiB chunks: small enough that a few-KiB mutation in a
+        // large checkpoint dirties ~1-2 chunks, big enough that manifest
+        // overhead stays ~0.4% of blob size.
+        ChunkParams { min: 2048, mask: 0x1FFF, max: 65536 }
+    }
+}
+
+/// Split `data` into content-defined spans under `params`. The spans
+/// concatenate back to exactly `data`; every span except possibly the
+/// last is in `[min, max]`.
+pub fn chunk_spans(data: &[u8], params: ChunkParams) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut start = 0;
+    while start < data.len() {
+        let remain = data.len() - start;
+        if remain <= params.min {
+            spans.push((start, data.len()));
+            break;
+        }
+        let limit = remain.min(params.max);
+        let mut h: u64 = 0;
+        let mut cut = limit;
+        // The first `min` bytes still feed the rolling hash so the
+        // boundary decision at `min` has full window context.
+        for (i, &b) in data[start..start + limit].iter().enumerate() {
+            h = (h << 1).wrapping_add(GEAR[b as usize]);
+            if i + 1 >= params.min && h & params.mask == 0 {
+                cut = i + 1;
+                break;
+            }
+        }
+        spans.push((start, start + cut));
+        start += cut;
+    }
+    spans
+}
+
+/// One refcounted chunk.
+#[derive(Debug)]
+struct ChunkEntry {
+    /// Live references: one per occurrence in a live blob manifest.
+    refs: u64,
+    /// Payload length in bytes.
+    len: u32,
+    /// Resident payload; `None` when evicted to the disk tier.
+    data: Option<Arc<[u8]>>,
+    /// Whether `chunks/c<hex>.bin` holds a durable copy.
+    on_disk: bool,
+    /// LRU clock for eviction ordering.
+    last_use: u64,
+}
+
+/// Counters the store surfaces in results and benches. Copy-cheap.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ChunkTableStats {
+    /// Distinct chunks currently live.
+    pub unique_chunks: u64,
+    /// Sum of live chunk payload lengths (deduped physical bytes).
+    pub physical_bytes: u64,
+    /// Bytes of chunk payloads currently resident in memory.
+    pub resident_bytes: u64,
+    /// `intern` calls that hit an existing chunk (deduped).
+    pub dedup_hits: u64,
+    /// Chunks spilled to the disk tier over the table's lifetime.
+    pub spilled: u64,
+    /// Evicted chunks faulted back in from disk.
+    pub disk_loads: u64,
+}
+
+/// The refcounted, tiered chunk table. Shared (behind
+/// [`SharedChunkTable`]) between the checkpoint store and the plasma
+/// object store so cross-layer duplicates are stored once.
+#[derive(Debug, Default)]
+pub struct ChunkTable {
+    chunks: BTreeMap<ContentHash, ChunkEntry>,
+    disk_dir: Option<PathBuf>,
+    params: ChunkParams,
+    tick: u64,
+    resident_bytes: u64,
+    physical_bytes: u64,
+    dedup_hits: u64,
+    spilled: u64,
+    disk_loads: u64,
+}
+
+/// Shared handle: the coordinator is single-threaded, the mutex exists
+/// only so the handle is `Send + Sync` across executor boundaries.
+pub type SharedChunkTable = Arc<Mutex<ChunkTable>>;
+
+/// A fresh, unshared table handle.
+pub fn new_shared_table() -> SharedChunkTable {
+    Arc::new(Mutex::new(ChunkTable::default()))
+}
+
+impl ChunkTable {
+    /// Chunking parameters (stable across save/restore so restored
+    /// blobs re-chunk identically).
+    pub fn params(&self) -> ChunkParams {
+        self.params
+    }
+
+    fn file_for(&self, key: ContentHash) -> Option<PathBuf> {
+        self.disk_dir.as_ref().map(|d| d.join(format!("c{key}.bin")))
+    }
+
+    /// Attach the disk tier. Creates the directory and eagerly spills
+    /// every chunk that predates it, so durability is uniform from here
+    /// on.
+    pub fn set_disk_dir(&mut self, dir: PathBuf) {
+        std::fs::create_dir_all(&dir).ok();
+        self.disk_dir = Some(dir);
+        let keys: Vec<ContentHash> = self
+            .chunks
+            .iter()
+            .filter(|(_, e)| !e.on_disk)
+            .map(|(k, _)| *k)
+            .collect();
+        for key in keys {
+            self.spill(key);
+        }
+    }
+
+    /// Whether a disk tier is attached.
+    pub fn has_disk(&self) -> bool {
+        self.disk_dir.is_some()
+    }
+
+    fn spill(&mut self, key: ContentHash) {
+        let Some(path) = self.file_for(key) else { return };
+        let Some(e) = self.chunks.get_mut(&key) else { return };
+        if e.on_disk {
+            return;
+        }
+        let Some(data) = &e.data else { return };
+        if write_atomic_bytes(&path, data).is_ok() {
+            e.on_disk = true;
+            self.spilled += 1;
+        }
+    }
+
+    /// Intern one chunk's bytes: bump the refcount if the content is
+    /// already stored, otherwise insert (and spill if a disk tier is
+    /// attached). Returns the chunk's content key.
+    pub fn intern(&mut self, data: &[u8]) -> ContentHash {
+        let key = chunk_key(data);
+        self.tick += 1;
+        if let Some(e) = self.chunks.get_mut(&key) {
+            debug_assert_eq!(e.len as usize, data.len(), "content hash collision");
+            e.refs += 1;
+            e.last_use = self.tick;
+            self.dedup_hits += 1;
+            return key;
+        }
+        let entry = ChunkEntry {
+            refs: 1,
+            len: data.len() as u32,
+            data: Some(Arc::from(data)),
+            on_disk: false,
+            last_use: self.tick,
+        };
+        self.resident_bytes += data.len() as u64;
+        self.physical_bytes += data.len() as u64;
+        self.chunks.insert(key, entry);
+        self.spill(key);
+        key
+    }
+
+    /// Drop one reference; at zero the chunk is physically freed —
+    /// memory and chunk file both.
+    pub fn release(&mut self, key: ContentHash) {
+        let Some(e) = self.chunks.get_mut(&key) else { return };
+        e.refs = e.refs.saturating_sub(1);
+        if e.refs > 0 {
+            return;
+        }
+        let e = self.chunks.remove(&key).expect("entry just seen");
+        if e.data.is_some() {
+            self.resident_bytes -= u64::from(e.len);
+        }
+        self.physical_bytes -= u64::from(e.len);
+        if e.on_disk {
+            if let Some(path) = self.file_for(key) {
+                std::fs::remove_file(path).ok();
+            }
+        }
+    }
+
+    /// Fetch a chunk's bytes, faulting in from the disk tier if it was
+    /// evicted. A torn/truncated/corrupt chunk file fails the length or
+    /// rehash check and yields `None` — the caller degrades that one
+    /// blob instead of serving bad bytes.
+    pub fn get(&mut self, key: ContentHash) -> Option<Arc<[u8]>> {
+        self.tick += 1;
+        let tick = self.tick;
+        let e = self.chunks.get_mut(&key)?;
+        e.last_use = tick;
+        if let Some(d) = &e.data {
+            return Some(Arc::clone(d));
+        }
+        let len = e.len;
+        let path = self.file_for(key)?;
+        let bytes = std::fs::read(path).ok()?;
+        if bytes.len() != len as usize || chunk_key(&bytes) != key {
+            return None;
+        }
+        let arc: Arc<[u8]> = bytes.into();
+        let e = self.chunks.get_mut(&key).expect("entry just seen");
+        e.data = Some(Arc::clone(&arc));
+        self.resident_bytes += u64::from(len);
+        self.disk_loads += 1;
+        Some(arc)
+    }
+
+    /// Make sure `key` is servable for a manifest being restored:
+    /// either resident with the right length, or loadable+verifiable
+    /// from disk. Inserts a refcount-0 placeholder for disk chunks —
+    /// the caller commits references with [`Self::commit_ref`] only
+    /// once the *whole* manifest validates, and sweeps refcount-0
+    /// leftovers with [`Self::drop_unreferenced`] afterwards.
+    pub fn ensure_loadable(&mut self, key: ContentHash, len: usize) -> bool {
+        if let Some(e) = self.chunks.get(&key) {
+            return e.len as usize == len;
+        }
+        let Some(path) = self.file_for(key) else { return false };
+        let Ok(bytes) = std::fs::read(path) else { return false };
+        if bytes.len() != len || chunk_key(&bytes) != key {
+            return false;
+        }
+        self.tick += 1;
+        let entry = ChunkEntry {
+            refs: 0,
+            len: len as u32,
+            data: Some(bytes.into()),
+            on_disk: true,
+            last_use: self.tick,
+        };
+        self.resident_bytes += len as u64;
+        self.physical_bytes += len as u64;
+        self.disk_loads += 1;
+        self.chunks.insert(key, entry);
+        true
+    }
+
+    /// Add one reference to an already-materialized chunk (restore's
+    /// commit phase).
+    pub fn commit_ref(&mut self, key: ContentHash) {
+        let e = self.chunks.get_mut(&key).expect("commit_ref on validated chunk");
+        e.refs += 1;
+    }
+
+    /// Drop refcount-0 placeholders left by failed manifest validation
+    /// — from memory only; their files stay for [`Self::sweep_orphans`]
+    /// to judge after all deltas have folded.
+    pub fn drop_unreferenced(&mut self) {
+        let dead: Vec<ContentHash> =
+            self.chunks.iter().filter(|(_, e)| e.refs == 0).map(|(k, _)| *k).collect();
+        for key in dead {
+            let e = self.chunks.remove(&key).expect("entry just seen");
+            if e.data.is_some() {
+                self.resident_bytes -= u64::from(e.len);
+            }
+            self.physical_bytes -= u64::from(e.len);
+        }
+    }
+
+    /// Delete chunk files on disk that no live chunk entry claims.
+    /// Must run only *after* every delta has folded into a restore —
+    /// earlier, a file may belong to a chunk only a later delta
+    /// references. Returns the number of files removed.
+    pub fn sweep_orphans(&mut self) -> usize {
+        let Some(dir) = self.disk_dir.clone() else { return 0 };
+        let Ok(entries) = std::fs::read_dir(&dir) else { return 0 };
+        let mut removed = 0;
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            let Some(hex) = name.strip_prefix('c').and_then(|n| n.strip_suffix(".bin")) else {
+                continue;
+            };
+            let Some(key) = ContentHash::from_hex(hex) else { continue };
+            if !self.chunks.contains_key(&key) && std::fs::remove_file(entry.path()).is_ok() {
+                removed += 1;
+            }
+        }
+        removed
+    }
+
+    /// Evict resident payloads (coldest first) until resident bytes fit
+    /// `budget`. Only chunks with a durable disk copy are evictable;
+    /// without a disk tier this is a no-op for safety.
+    pub fn evict_to(&mut self, budget: u64) {
+        if self.resident_bytes <= budget {
+            return;
+        }
+        let mut victims: Vec<(u64, ContentHash, u32)> = self
+            .chunks
+            .iter()
+            .filter(|(_, e)| e.data.is_some() && e.on_disk)
+            .map(|(k, e)| (e.last_use, *k, e.len))
+            .collect();
+        victims.sort_unstable();
+        for (_, key, len) in victims {
+            if self.resident_bytes <= budget {
+                break;
+            }
+            let e = self.chunks.get_mut(&key).expect("entry just seen");
+            e.data = None;
+            self.resident_bytes -= u64::from(len);
+        }
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> ChunkTableStats {
+        ChunkTableStats {
+            unique_chunks: self.chunks.len() as u64,
+            physical_bytes: self.physical_bytes,
+            resident_bytes: self.resident_bytes,
+            dedup_hits: self.dedup_hits,
+            spilled: self.spilled,
+            disk_loads: self.disk_loads,
+        }
+    }
+
+    /// Resident payload bytes (the part a memory budget constrains).
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident_bytes
+    }
+
+    /// Deduped physical bytes across all live chunks.
+    pub fn physical_bytes(&self) -> u64 {
+        self.physical_bytes
+    }
+
+    /// Number of distinct live chunks.
+    pub fn len(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// True when no chunks are live.
+    pub fn is_empty(&self) -> bool {
+        self.chunks.is_empty()
+    }
+
+    /// Full-scan verification of the incremental state (the PR 6
+    /// `debug_check_indices` discipline at the chunk layer):
+    /// per-entry sanity, recomputed byte counters, refcounts against
+    /// `expected` occurrence counts, and the disk tier (every `on_disk`
+    /// entry's file exists with the right length; no orphan chunk files
+    /// unless `allow_orphans`). With `strict`, refcounts must *equal*
+    /// the expected counts (sole-owner table); a table shared across
+    /// stores only checks `>=`.
+    ///
+    /// Panics (via `assert`) on any violation.
+    #[doc(hidden)]
+    pub fn debug_check(
+        &self,
+        expected: &BTreeMap<ContentHash, u64>,
+        strict: bool,
+        allow_orphans: bool,
+    ) {
+        let mut resident = 0u64;
+        let mut physical = 0u64;
+        for (key, e) in &self.chunks {
+            assert!(e.refs > 0, "chunk {key} live with refcount 0");
+            if let Some(d) = &e.data {
+                assert_eq!(d.len(), e.len as usize, "chunk {key} resident length mismatch");
+                resident += u64::from(e.len);
+            } else {
+                assert!(e.on_disk, "chunk {key} neither resident nor on disk");
+            }
+            physical += u64::from(e.len);
+            if e.on_disk {
+                let path = self.file_for(*key).expect("on_disk implies disk_dir");
+                let meta = std::fs::metadata(&path)
+                    .unwrap_or_else(|_| panic!("chunk file missing for on-disk chunk {key}"));
+                assert_eq!(meta.len(), u64::from(e.len), "chunk file length mismatch for {key}");
+            }
+            let want = expected.get(key).copied().unwrap_or(0);
+            if strict {
+                assert_eq!(e.refs, want, "chunk {key} refcount {} != expected {want}", e.refs);
+            } else {
+                assert!(e.refs >= want, "chunk {key} refcount {} < expected {want}", e.refs);
+            }
+        }
+        assert_eq!(resident, self.resident_bytes, "resident byte counter drifted");
+        assert_eq!(physical, self.physical_bytes, "physical byte counter drifted");
+        for (key, want) in expected {
+            if *want > 0 {
+                assert!(self.chunks.contains_key(key), "expected chunk {key} not in table");
+            }
+        }
+        if let (Some(dir), false) = (&self.disk_dir, allow_orphans) {
+            if let Ok(entries) = std::fs::read_dir(dir) {
+                for entry in entries.flatten() {
+                    let name = entry.file_name();
+                    let name = name.to_string_lossy();
+                    let Some(hex) = name.strip_prefix('c').and_then(|n| n.strip_suffix(".bin"))
+                    else {
+                        continue;
+                    };
+                    if let Some(key) = ContentHash::from_hex(hex) {
+                        assert!(
+                            self.chunks.contains_key(&key),
+                            "orphan chunk file on disk: {name}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Chunk `data` and intern every span, returning the blob's manifest:
+/// `(chunk key, span length)` in order. Concatenating the chunks in
+/// manifest order reproduces `data` exactly.
+pub fn intern_manifest(table: &mut ChunkTable, data: &[u8]) -> Vec<(ContentHash, u32)> {
+    let spans = chunk_spans(data, table.params());
+    let mut manifest = Vec::with_capacity(spans.len());
+    for (a, b) in spans {
+        let key = table.intern(&data[a..b]);
+        manifest.push((key, (b - a) as u32));
+    }
+    manifest
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tune_chunk_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// Deterministic pseudo-random bytes without pulling in the util rng.
+    fn noise(len: usize, seed: u64) -> Vec<u8> {
+        let mut x = seed;
+        (0..len)
+            .map(|_| {
+                x = splitmix64(x);
+                (x & 0xFF) as u8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn content_hash_is_stable_and_seed_separated() {
+        let a = content_hash(b"hello world", 1);
+        assert_eq!(a, content_hash(b"hello world", 1));
+        assert_ne!(a, content_hash(b"hello world", 2));
+        assert_ne!(a, content_hash(b"hello worle", 1));
+        assert_ne!(blob_key(b"x"), chunk_key(b"x"));
+        // Length is mixed in: a zero-padded prefix is not the same hash.
+        assert_ne!(content_hash(&[0u8; 8], 1), content_hash(&[0u8; 16], 1));
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let k = content_hash(b"roundtrip", 7);
+        assert_eq!(ContentHash::from_hex(&k.to_hex()), Some(k));
+        assert_eq!(ContentHash::from_hex("nope"), None);
+        assert_eq!(ContentHash::from_hex(&"g".repeat(32)), None);
+    }
+
+    #[test]
+    fn spans_concatenate_to_input_and_respect_bounds() {
+        let params = ChunkParams::default();
+        for (len, seed) in [(0usize, 1u64), (1, 2), (2047, 3), (2048, 4), (100_000, 5), (300_000, 6)]
+        {
+            let data = noise(len, seed);
+            let spans = chunk_spans(&data, params);
+            let mut rebuilt = Vec::new();
+            for (i, &(a, b)) in spans.iter().enumerate() {
+                rebuilt.extend_from_slice(&data[a..b]);
+                let n = b - a;
+                assert!(n <= params.max, "span {n} over max");
+                if i + 1 < spans.len() {
+                    assert!(n >= params.min, "non-final span {n} under min");
+                }
+            }
+            assert_eq!(rebuilt, data, "len {len}");
+            if len == 0 {
+                assert!(spans.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn chunking_is_shift_resistant() {
+        // Insert 100 bytes near the front of a 200 KiB blob: most chunk
+        // keys must survive (a fixed-stride chunker would lose ~all).
+        let base = noise(200_000, 42);
+        let mut shifted = base.clone();
+        for (i, b) in noise(100, 43).into_iter().enumerate() {
+            shifted.insert(5000 + i, b);
+        }
+        let params = ChunkParams::default();
+        let keys = |d: &[u8]| -> std::collections::BTreeSet<ContentHash> {
+            chunk_spans(d, params).into_iter().map(|(a, b)| chunk_key(&d[a..b])).collect()
+        };
+        let a = keys(&base);
+        let b = keys(&shifted);
+        let shared = a.intersection(&b).count();
+        assert!(
+            shared * 10 >= a.len() * 7,
+            "only {shared}/{} chunks survived an insertion",
+            a.len()
+        );
+    }
+
+    #[test]
+    fn intern_release_refcounts_and_frees_at_zero() {
+        let mut t = ChunkTable::default();
+        let data = noise(10_000, 9);
+        let k = t.intern(&data);
+        let k2 = t.intern(&data);
+        assert_eq!(k, k2);
+        assert_eq!(t.stats().dedup_hits, 1);
+        assert_eq!(t.physical_bytes(), 10_000);
+        t.release(k);
+        assert_eq!(t.len(), 1, "still one live ref");
+        t.release(k);
+        assert!(t.is_empty());
+        assert_eq!(t.physical_bytes(), 0);
+        assert_eq!(t.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn spill_evict_fault_in_roundtrip() {
+        let dir = tmpdir("spill");
+        let mut t = ChunkTable::default();
+        let data = noise(30_000, 11);
+        let k = t.intern(&data);
+        // Attaching the tier late spills the pre-existing chunk.
+        t.set_disk_dir(dir.clone());
+        assert!(t.stats().spilled >= 1);
+        t.evict_to(0);
+        assert_eq!(t.resident_bytes(), 0);
+        let got = t.get(k).expect("fault-in from disk");
+        assert_eq!(&got[..], &data[..]);
+        assert_eq!(t.stats().disk_loads, 1);
+        assert_eq!(t.resident_bytes(), 30_000);
+        // Release at zero deletes the chunk file too.
+        t.release(k);
+        assert_eq!(std::fs::read_dir(dir.clone()).unwrap().count(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_chunk_file_fails_verification() {
+        let dir = tmpdir("torn");
+        let mut t = ChunkTable::default();
+        t.set_disk_dir(dir.clone());
+        let data = noise(20_000, 13);
+        let k = t.intern(&data);
+        t.evict_to(0);
+        // Truncate the spilled file: length check trips.
+        let path = dir.join(format!("c{k}.bin"));
+        std::fs::write(&path, &data[..100]).unwrap();
+        assert!(t.get(k).is_none());
+        // Right length, wrong bytes: rehash trips.
+        let mut bad = data.clone();
+        bad[0] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(t.get(k).is_none());
+        // Restore the real bytes: readable again (no poisoning).
+        std::fs::write(&path, &data).unwrap();
+        assert_eq!(&t.get(k).expect("healed")[..], &data[..]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_orphans_removes_only_unclaimed_files() {
+        let dir = tmpdir("sweep");
+        let mut t = ChunkTable::default();
+        t.set_disk_dir(dir.clone());
+        let data = noise(5_000, 17);
+        let _k = t.intern(&data);
+        let orphan = dir.join(format!("c{}.bin", content_hash(b"ghost", CHUNK_SEED)));
+        std::fs::write(&orphan, b"ghost").unwrap();
+        std::fs::write(dir.join("README.txt"), b"not a chunk").unwrap();
+        assert_eq!(t.sweep_orphans(), 1);
+        assert!(!orphan.exists());
+        assert!(dir.join("README.txt").exists(), "non-chunk files are left alone");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ensure_loadable_validates_then_commit_refs() {
+        let dir = tmpdir("ensure");
+        let mut t = ChunkTable::default();
+        t.set_disk_dir(dir.clone());
+        let data = noise(8_000, 19);
+        let k = t.intern(&data);
+        // A second table over the same directory (the restore path).
+        let mut r = ChunkTable::default();
+        r.set_disk_dir(dir.clone());
+        assert!(r.ensure_loadable(k, data.len()));
+        assert!(!r.ensure_loadable(k, data.len() + 1), "length mismatch rejected");
+        assert!(!r.ensure_loadable(chunk_key(b"missing"), 7));
+        r.commit_ref(k);
+        let mut expected = BTreeMap::new();
+        expected.insert(k, 1u64);
+        r.debug_check(&expected, true, false);
+        r.drop_unreferenced();
+        assert_eq!(r.len(), 1, "committed chunk survives the placeholder sweep");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

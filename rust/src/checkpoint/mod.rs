@@ -2,13 +2,30 @@
 //! metadata in memory and relies on checkpoints for fault tolerance;
 //! schedulers "save and clone promising parameters (via checkpoint and
 //! restore)". Checkpoints are opaque byte blobs produced by
-//! `Trainable::save`; the store keeps them in memory (as shared
-//! `Arc<[u8]>` handles, so relaunches and PBT exploits clone a
-//! refcount, never the bytes) and can optionally spill every write to
-//! disk for post-mortem restore — and, since the durability work, for
-//! crash-safe experiment resume: the store's metadata is serialized
-//! into the experiment snapshot and the blobs are re-read from the
-//! spill directory on restart.
+//! `Trainable::save`.
+//!
+//! The store is **content-addressed** (see [`chunk`]): every blob is
+//! identified by a 128-bit whole-blob hash and split into
+//! content-defined chunks held in a refcounted [`chunk::ChunkTable`].
+//! Two consequences drive the design:
+//!
+//! * **PBT exploit clones are refcount bumps.** Saving bytes the store
+//!   already holds — the exploit path hands the donor's `Arc<[u8]>`
+//!   straight back in — matches on the blob key and stores nothing.
+//! * **Lineage checkpoints dedup.** Consecutive checkpoints of one
+//!   trial share all chunks outside the mutated regions, so keeping a
+//!   deep history costs the *delta*, not the full state, per step.
+//!
+//! Per-trial GC decrements refcounts and only physically frees a chunk
+//! (memory and its spill file) at refcount zero. With a disk directory
+//! attached, chunks stream to `checkpoints/chunks/` with the atomic
+//! write + fsync discipline of `persist.rs`, and an optional memory
+//! budget evicts cold payloads to that tier; `get` faults them back in
+//! with length + rehash verification, degrading a torn file to "blob
+//! unavailable" (the runner restarts that trial from scratch) instead
+//! of serving corrupt bytes. Snapshots persist chunk *manifests*;
+//! refcounts and indices are rebuilt on restore, and legacy whole-blob
+//! snapshots (pre-chunk format) remain restorable.
 //!
 //! # Example
 //!
@@ -28,6 +45,12 @@ use std::sync::Arc;
 
 use crate::util::json::Json;
 
+pub mod chunk;
+
+pub use chunk::{ChunkParams, ChunkTable, ChunkTableStats, ContentHash, SharedChunkTable};
+
+use chunk::{blob_key, intern_manifest};
+
 /// Handle to one stored checkpoint.
 pub type CheckpointId = u64;
 
@@ -45,19 +68,109 @@ pub struct CheckpointMeta {
     /// [`CheckpointStore::save_timed`] so crash-resume rollback restores
     /// time accounting exactly, not just the iteration count).
     pub time_total_s: f64,
-    /// Blob size in bytes.
+    /// Blob size in bytes (logical — the deduped physical footprint is
+    /// tracked by the chunk table).
     pub bytes: usize,
 }
 
-/// In-memory checkpoint store with per-trial GC and optional disk spill.
+/// One distinct blob: its chunk manifest plus how many checkpoint ids
+/// currently map to it.
+#[derive(Debug)]
+struct BlobEntry {
+    /// Checkpoint ids referencing this blob.
+    refs: u64,
+    /// Logical length in bytes.
+    len: usize,
+    /// Ordered `(chunk key, chunk length)` — concatenation rebuilds the
+    /// blob.
+    manifest: Vec<(ContentHash, u32)>,
+    /// Cached fully-assembled blob (what `get` hands out); dropped
+    /// first under memory pressure, rebuilt from chunks on demand.
+    assembled: Option<Arc<[u8]>>,
+    /// LRU clock for assembled-cache eviction.
+    last_use: u64,
+}
+
+/// Copyable store counters, surfaced in `ExperimentResult` and benches.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CkptStoreStats {
+    /// Checkpoints written over the store's lifetime.
+    pub saved: u64,
+    /// Successful blob reads over the store's lifetime.
+    pub restored: u64,
+    /// Checkpoints currently live.
+    pub checkpoints: u64,
+    /// Distinct blobs currently live.
+    pub unique_blobs: u64,
+    /// Distinct chunks currently live in the chunk table.
+    pub unique_chunks: u64,
+    /// Sum of live checkpoints' blob sizes (pre-dedup).
+    pub logical_bytes: u64,
+    /// Deduped bytes in the chunk table. With a chunk table shared
+    /// across stores this includes the other owners' chunks.
+    pub physical_bytes: u64,
+    /// Memory-resident bytes: chunk payloads + assembled-blob caches.
+    pub resident_bytes: u64,
+    /// Saves that matched a live blob byte-for-byte (PBT exploit
+    /// clones and no-progress re-saves).
+    pub blob_dedup_hits: u64,
+    /// Chunk interns that matched an existing chunk.
+    pub chunk_dedup_hits: u64,
+    /// Chunks spilled to the disk tier.
+    pub spilled_chunks: u64,
+    /// Evicted chunks faulted back in from disk.
+    pub chunk_disk_loads: u64,
+}
+
+impl CkptStoreStats {
+    /// Logical bytes ÷ physical bytes — how much the content addressing
+    /// saved. 1.0 means no duplication existed; an exploit-heavy PBT
+    /// run is expected well above 5.
+    pub fn dedup_ratio(&self) -> f64 {
+        if self.physical_bytes == 0 {
+            if self.logical_bytes == 0 {
+                1.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            self.logical_bytes as f64 / self.physical_bytes as f64
+        }
+    }
+}
+
+/// Content-addressed checkpoint store with per-trial GC, blob- and
+/// chunk-level dedup, and an optional memory-budgeted disk tier.
 #[derive(Debug, Default)]
 pub struct CheckpointStore {
     next_id: CheckpointId,
-    data: BTreeMap<CheckpointId, Arc<[u8]>>,
     meta: BTreeMap<CheckpointId, CheckpointMeta>,
+    /// Checkpoint id -> whole-blob content key.
+    blob_of: BTreeMap<CheckpointId, ContentHash>,
+    /// Distinct live blobs by content key.
+    blobs: BTreeMap<ContentHash, BlobEntry>,
+    /// The refcounted chunk tier (shareable with the object store).
+    table: SharedChunkTable,
     /// Latest checkpoint per trial (what PBT exploit clones).
     latest: BTreeMap<u64, CheckpointId>,
+    /// Live checkpoint ids per trial, ascending — O(1) GC eviction
+    /// instead of a full meta scan per save.
+    per_trial: BTreeMap<u64, Vec<CheckpointId>>,
+    /// Ids restored from a legacy whole-blob snapshot -> their
+    /// `trialN_iterM_ckptK.bin` file, deleted when that id is GCed.
+    legacy_files: BTreeMap<CheckpointId, String>,
     disk_dir: Option<PathBuf>,
+    /// Cap on memory-resident bytes (assembled caches + chunk
+    /// payloads); `None` = unbounded. Eviction needs the disk tier.
+    mem_budget: Option<usize>,
+    /// Bytes currently held in assembled-blob caches.
+    assembled_bytes: usize,
+    /// Sum of live checkpoints' logical sizes.
+    logical_bytes: u64,
+    /// LRU clock shared by save/get touches.
+    tick: u64,
+    /// Saves deduped at the whole-blob level.
+    blob_dedup_hits: u64,
     /// Keep at most this many checkpoints per trial (0 = unbounded).
     pub keep_per_trial: usize,
     /// Checkpoints written so far.
@@ -78,11 +191,37 @@ impl CheckpointStore {
         CheckpointStore { next_id: 1, keep_per_trial: 2, ..Default::default() }
     }
 
-    /// Also persist every checkpoint under `dir` (for `analyze`/restart).
+    /// Also persist every checkpoint under `dir` (for `analyze`/
+    /// restart): chunks stream to `dir/chunks/` as they are interned.
+    /// Chunks saved before the tier was attached are spilled eagerly.
     pub fn with_disk(mut self, dir: PathBuf) -> Self {
         std::fs::create_dir_all(&dir).ok();
+        self.table.lock().expect("chunk table lock").set_disk_dir(dir.join("chunks"));
         self.disk_dir = Some(dir);
         self
+    }
+
+    /// Use a caller-provided chunk table (shared with the plasma object
+    /// store, so cross-layer duplicates are stored once). Must be
+    /// called before any save.
+    pub fn with_chunk_table(mut self, table: SharedChunkTable) -> Self {
+        debug_assert!(self.blobs.is_empty(), "attach the shared table before saving");
+        self.table = table;
+        self
+    }
+
+    /// Handle to the underlying chunk table.
+    pub fn chunk_table(&self) -> SharedChunkTable {
+        Arc::clone(&self.table)
+    }
+
+    /// Cap memory-resident bytes (assembled caches + chunk payloads),
+    /// evicting immediately if over. Chunk eviction requires the disk
+    /// tier; without it only assembled caches are droppable (chunks are
+    /// the sole copy of the bytes).
+    pub fn set_mem_budget(&mut self, budget: Option<usize>) {
+        self.mem_budget = budget;
+        self.enforce_budget();
     }
 
     /// Store a blob for `trial` at `iteration`; returns its id.
@@ -94,8 +233,9 @@ impl CheckpointStore {
     /// seconds, so a crash-resume rollback can restore time accounting
     /// exactly alongside the iteration count. Accepts a `Vec<u8>`
     /// (fresh `Trainable::save` output) or an already-shared
-    /// `Arc<[u8]>` (PBT exploit clones) — the latter stores without
-    /// copying the bytes.
+    /// `Arc<[u8]>` (PBT exploit clones) — identical bytes dedup to a
+    /// refcount bump on the existing blob entry; near-identical bytes
+    /// share all unchanged chunks.
     pub fn save_timed(
         &mut self,
         trial: u64,
@@ -104,30 +244,95 @@ impl CheckpointStore {
         blob: impl Into<Arc<[u8]>>,
     ) -> CheckpointId {
         let blob: Arc<[u8]> = blob.into();
+        let key = blob_key(&blob);
         let id = self.next_id;
         self.next_id += 1;
         let meta = CheckpointMeta { id, trial, iteration, time_total_s, bytes: blob.len() };
-        if let Some(dir) = &self.disk_dir {
-            std::fs::write(dir.join(Self::spill_name(&meta)), &blob[..]).ok();
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(e) = self.blobs.get_mut(&key) {
+            debug_assert_eq!(e.len, blob.len(), "blob key collision");
+            e.refs += 1;
+            e.last_use = tick;
+            if e.assembled.is_none() {
+                self.assembled_bytes += e.len;
+                e.assembled = Some(Arc::clone(&blob));
+            }
+            self.blob_dedup_hits += 1;
+        } else {
+            let manifest = {
+                let mut table = self.table.lock().expect("chunk table lock");
+                intern_manifest(&mut table, &blob)
+            };
+            self.assembled_bytes += blob.len();
+            self.blobs.insert(
+                key,
+                BlobEntry {
+                    refs: 1,
+                    len: blob.len(),
+                    manifest,
+                    assembled: Some(blob),
+                    last_use: tick,
+                },
+            );
         }
+        self.logical_bytes += meta.bytes as u64;
+        self.blob_of.insert(id, key);
         self.meta.insert(id, meta);
-        self.data.insert(id, blob);
         self.latest.insert(trial, id);
+        self.per_trial.entry(trial).or_default().push(id);
         self.saved += 1;
         self.delta_added.push(id);
         self.gc(trial);
+        self.enforce_budget();
         id
     }
 
-    /// Shared handle to a checkpoint blob (counts as a restore). The
-    /// clone is a refcount bump, not a byte copy — launches and PBT
-    /// exploits hand the same allocation around.
+    /// Shared handle to a checkpoint blob (counts as a restore). A
+    /// cached assembled blob is a refcount bump, not a byte copy;
+    /// otherwise the blob is reassembled from its chunks, faulting
+    /// evicted ones in from disk. Returns `None` for unknown ids *and*
+    /// for blobs whose chunks can no longer be read back verifiably
+    /// (torn spill file) — callers degrade that trial to
+    /// replay-from-scratch rather than poisoning the store.
     pub fn get(&mut self, id: CheckpointId) -> Option<Arc<[u8]>> {
-        let found = self.data.get(&id).map(Arc::clone);
-        if found.is_some() {
-            self.restored += 1;
+        let key = *self.blob_of.get(&id)?;
+        self.tick += 1;
+        let tick = self.tick;
+        {
+            let e = self.blobs.get_mut(&key)?;
+            e.last_use = tick;
+            if let Some(b) = &e.assembled {
+                self.restored += 1;
+                return Some(Arc::clone(b));
+            }
         }
-        found
+        // Slow path: reassemble from (possibly spilled) chunks.
+        let (len, manifest) = {
+            let e = &self.blobs[&key];
+            (e.len, e.manifest.clone())
+        };
+        let mut buf = Vec::with_capacity(len);
+        {
+            let mut table = self.table.lock().expect("chunk table lock");
+            for (k, l) in &manifest {
+                let piece = table.get(*k)?;
+                if piece.len() != *l as usize {
+                    return None;
+                }
+                buf.extend_from_slice(&piece);
+            }
+        }
+        if buf.len() != len {
+            return None;
+        }
+        let arc: Arc<[u8]> = buf.into();
+        let e = self.blobs.get_mut(&key).expect("blob entry seen above");
+        e.assembled = Some(Arc::clone(&arc));
+        self.assembled_bytes += len;
+        self.restored += 1;
+        self.enforce_budget();
+        Some(arc)
     }
 
     /// Metadata of a stored checkpoint.
@@ -140,30 +345,26 @@ impl CheckpointStore {
         self.latest.get(&trial).copied()
     }
 
-    /// Drop all but the newest `keep_per_trial` checkpoints of `trial`,
-    /// including their spill files — otherwise a long durable run grows
-    /// `checkpoints/` without bound. (Snapshots only ever reference
-    /// still-live metadata, so deleting evicted files never breaks
-    /// resume.)
+    /// All live checkpoint ids, ascending.
+    pub fn ids(&self) -> impl Iterator<Item = CheckpointId> + '_ {
+        self.meta.keys().copied()
+    }
+
+    /// Drop all but the newest `keep_per_trial` checkpoints of `trial`.
+    /// Eviction decrements the blob's refcount; the blob's chunks are
+    /// only physically freed (memory and spill files) when no live blob
+    /// references them. (Snapshots only ever reference still-live
+    /// metadata, so freeing evicted chunks never breaks resume.)
     fn gc(&mut self, trial: u64) {
         if self.keep_per_trial == 0 {
             return;
         }
-        let mut ids: Vec<CheckpointId> = self
-            .meta
-            .values()
-            .filter(|m| m.trial == trial)
-            .map(|m| m.id)
-            .collect();
-        ids.sort();
-        while ids.len() > self.keep_per_trial {
-            let old = ids.remove(0);
-            self.data.remove(&old);
-            if let Some(meta) = self.meta.remove(&old) {
-                if let Some(dir) = &self.disk_dir {
-                    std::fs::remove_file(dir.join(Self::spill_name(&meta))).ok();
-                }
+        loop {
+            let Some(ids) = self.per_trial.get(&trial) else { return };
+            if ids.len() <= self.keep_per_trial {
+                return;
             }
+            let old = ids[0];
             // Delta bookkeeping: an id born and evicted inside the same
             // delta window never reaches disk state — drop it from the
             // add list instead of journaling a remove.
@@ -172,46 +373,261 @@ impl CheckpointStore {
             } else {
                 self.delta_removed.push(old);
             }
+            self.drop_checkpoint(old);
         }
     }
 
-    /// File name a checkpoint spills to (stable across restarts).
+    /// Remove one checkpoint from every index, releasing its blob (and
+    /// transitively its chunks at refcount zero). No delta journaling —
+    /// callers that evict live state journal at their own site.
+    fn drop_checkpoint(&mut self, id: CheckpointId) {
+        let Some(meta) = self.meta.remove(&id) else { return };
+        self.logical_bytes -= meta.bytes as u64;
+        if let Some(ids) = self.per_trial.get_mut(&meta.trial) {
+            if let Some(pos) = ids.iter().position(|x| *x == id) {
+                ids.remove(pos);
+            }
+            match ids.last() {
+                Some(l) => {
+                    self.latest.insert(meta.trial, *l);
+                }
+                None => {
+                    self.per_trial.remove(&meta.trial);
+                    self.latest.remove(&meta.trial);
+                }
+            }
+        }
+        if let Some(key) = self.blob_of.remove(&id) {
+            let free = {
+                let e = self.blobs.get_mut(&key).expect("blob entry for live checkpoint");
+                e.refs -= 1;
+                e.refs == 0
+            };
+            if free {
+                let e = self.blobs.remove(&key).expect("entry just seen");
+                if e.assembled.is_some() {
+                    self.assembled_bytes -= e.len;
+                }
+                let mut table = self.table.lock().expect("chunk table lock");
+                for (k, _) in &e.manifest {
+                    table.release(*k);
+                }
+            }
+        }
+        if let Some(name) = self.legacy_files.remove(&id) {
+            if let Some(dir) = &self.disk_dir {
+                std::fs::remove_file(dir.join(name)).ok();
+            }
+        }
+    }
+
+    /// Enforce the memory budget: drop assembled-blob caches coldest
+    /// first (they are rebuildable from chunks), then evict chunk
+    /// payloads to the disk tier.
+    fn enforce_budget(&mut self) {
+        let Some(budget) = self.mem_budget else { return };
+        let chunk_resident =
+            self.table.lock().expect("chunk table lock").resident_bytes() as usize;
+        let mut total = self.assembled_bytes + chunk_resident;
+        if total <= budget {
+            return;
+        }
+        let mut victims: Vec<(u64, ContentHash, usize)> = self
+            .blobs
+            .iter()
+            .filter(|(_, e)| e.assembled.is_some())
+            .map(|(k, e)| (e.last_use, *k, e.len))
+            .collect();
+        victims.sort_unstable();
+        for (_, key, len) in victims {
+            if total <= budget {
+                break;
+            }
+            let e = self.blobs.get_mut(&key).expect("entry just listed");
+            e.assembled = None;
+            self.assembled_bytes -= len;
+            total -= len;
+        }
+        if total > budget {
+            let chunk_budget = budget.saturating_sub(self.assembled_bytes) as u64;
+            self.table.lock().expect("chunk table lock").evict_to(chunk_budget);
+        }
+    }
+
+    /// File name a legacy whole-blob checkpoint spilled to (the
+    /// pre-chunk on-disk format, still read on restore).
     fn spill_name(meta: &CheckpointMeta) -> String {
         format!("trial{}_iter{}_ckpt{}.bin", meta.trial, meta.iteration, meta.id)
     }
 
-    /// Serialize the store's metadata for the experiment snapshot. Blobs
-    /// are not embedded — they already live in the spill directory.
+    fn meta_json(&self, m: &CheckpointMeta) -> Json {
+        let key = self.blob_of.get(&m.id).expect("live meta has a blob key");
+        Json::obj(vec![
+            ("id", Json::Num(m.id as f64)),
+            ("trial", Json::Num(m.trial as f64)),
+            ("iteration", Json::Num(m.iteration as f64)),
+            ("time", Json::Num(m.time_total_s)),
+            ("bytes", Json::Num(m.bytes as f64)),
+            ("blob", Json::Str(key.to_hex())),
+        ])
+    }
+
+    fn manifest_json(manifest: &[(ContentHash, u32)]) -> Json {
+        Json::Arr(
+            manifest
+                .iter()
+                .map(|(k, l)| Json::Arr(vec![Json::Str(k.to_hex()), Json::Num(*l as f64)]))
+                .collect(),
+        )
+    }
+
+    fn parse_manifest(v: &Json) -> Option<Vec<(ContentHash, u32)>> {
+        let arr = v.as_arr()?;
+        let mut out = Vec::with_capacity(arr.len());
+        for pair in arr {
+            let pair = pair.as_arr()?;
+            if pair.len() != 2 {
+                return None;
+            }
+            let key = ContentHash::from_hex(pair[0].as_str()?)?;
+            let len = pair[1].as_u64()?;
+            out.push((key, len as u32));
+        }
+        Some(out)
+    }
+
+    /// Serialize the store's metadata for the experiment snapshot:
+    /// checkpoint metas (with their blob keys) plus each distinct
+    /// blob's chunk manifest. Chunk *bytes* are not embedded — they
+    /// live in the `chunks/` spill tier.
     pub fn snapshot(&self) -> Json {
+        let metas = self.meta.values().map(|m| self.meta_json(m)).collect();
+        let blobs = self
+            .blobs
+            .iter()
+            .map(|(key, e)| {
+                Json::obj(vec![
+                    ("key", Json::Str(key.to_hex())),
+                    ("len", Json::Num(e.len as f64)),
+                    ("chunks", Self::manifest_json(&e.manifest)),
+                ])
+            })
+            .collect();
         Json::obj(vec![
             ("next_id", Json::Num(self.next_id as f64)),
             ("saved", Json::Num(self.saved as f64)),
             ("restored", Json::Num(self.restored as f64)),
-            (
-                "metas",
-                Json::Arr(
-                    self.meta
-                        .values()
-                        .map(|m| {
-                            Json::obj(vec![
-                                ("id", Json::Num(m.id as f64)),
-                                ("trial", Json::Num(m.trial as f64)),
-                                ("iteration", Json::Num(m.iteration as f64)),
-                                ("time", Json::Num(m.time_total_s)),
-                                ("bytes", Json::Num(m.bytes as f64)),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
+            ("metas", Json::Arr(metas)),
+            ("blobs", Json::Arr(blobs)),
         ])
     }
 
-    /// Rebuild a store from a [`CheckpointStore::snapshot`] manifest,
-    /// reading the blobs back from the spill directory `dir`. Metadata
-    /// entries whose blob file is missing or truncated are dropped
-    /// (callers fall back to restart-from-scratch for those trials).
-    /// The rebuilt store keeps spilling to `dir`.
+    fn parse_meta(m: &Json) -> Result<CheckpointMeta, String> {
+        let (Some(id), Some(trial), Some(iteration), Some(bytes)) = (
+            m.get("id").and_then(|v| v.as_u64()),
+            m.get("trial").and_then(|v| v.as_u64()),
+            m.get("iteration").and_then(|v| v.as_u64()),
+            m.get("bytes").and_then(|v| v.as_u64()),
+        ) else {
+            return Err("checkpoint snapshot: malformed meta entry".into());
+        };
+        let time_total_s = m.get("time").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        Ok(CheckpointMeta { id, trial, iteration, time_total_s, bytes: bytes as usize })
+    }
+
+    /// Register a restored meta under `key` in every index (no delta
+    /// journaling — restored state is the baseline the next journal
+    /// diffs against).
+    fn register_restored(&mut self, meta: CheckpointMeta, key: ContentHash) {
+        let e = self.blobs.get_mut(&key).expect("blob entry materialized by caller");
+        e.refs += 1;
+        self.logical_bytes += meta.bytes as u64;
+        self.blob_of.insert(meta.id, key);
+        self.latest.insert(meta.trial, meta.id);
+        self.per_trial.entry(meta.trial).or_default().push(meta.id);
+        self.meta.insert(meta.id, meta);
+    }
+
+    /// Materialize (or validate against) the blob entry for `key`,
+    /// two-phase: every chunk of the manifest must be resident or
+    /// loadable+verifiable from disk before any refcount commits, so a
+    /// half-valid manifest leaves no trace. Returns false to drop the
+    /// checkpoint (degradation, not an error).
+    fn adopt_blob(
+        &mut self,
+        key: ContentHash,
+        len: usize,
+        manifest: &[(ContentHash, u32)],
+    ) -> bool {
+        if let Some(e) = self.blobs.get(&key) {
+            return e.len == len;
+        }
+        if manifest.iter().map(|(_, l)| *l as usize).sum::<usize>() != len {
+            return false;
+        }
+        {
+            let mut table = self.table.lock().expect("chunk table lock");
+            if !manifest.iter().all(|(k, l)| table.ensure_loadable(*k, *l as usize)) {
+                return false;
+            }
+            for (k, _) in manifest {
+                table.commit_ref(*k);
+            }
+        }
+        self.blobs.insert(
+            key,
+            BlobEntry { refs: 0, len, manifest: manifest.to_vec(), assembled: None, last_use: 0 },
+        );
+        true
+    }
+
+    /// Ingest a whole blob read from a legacy spill file: chunk it into
+    /// the table exactly like a fresh save (so a mixed legacy/new
+    /// population still dedups), remembering the legacy file for
+    /// deletion when this id is GCed. The legacy file itself is NOT
+    /// deleted here — until the next full snapshot lands, a crash would
+    /// re-restore from the *old* snapshot, which still needs it.
+    fn ingest_legacy(&mut self, meta: CheckpointMeta, bytes: Vec<u8>, file: String) {
+        let arc: Arc<[u8]> = bytes.into();
+        let key = blob_key(&arc);
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(e) = self.blobs.get_mut(&key) {
+            e.last_use = tick;
+        } else {
+            let manifest = {
+                let mut table = self.table.lock().expect("chunk table lock");
+                intern_manifest(&mut table, &arc)
+            };
+            self.assembled_bytes += arc.len();
+            self.blobs.insert(
+                key,
+                BlobEntry {
+                    refs: 0,
+                    len: arc.len(),
+                    manifest,
+                    assembled: Some(arc),
+                    last_use: tick,
+                },
+            );
+        }
+        self.legacy_files.insert(meta.id, file);
+        self.register_restored(meta, key);
+    }
+
+    /// Rebuild a store from a [`CheckpointStore::snapshot`] manifest.
+    /// Chunked entries revalidate every chunk (resident or readable
+    /// from `dir/chunks/` with matching length and content hash);
+    /// legacy entries (no `blob` key) read their whole-blob spill file
+    /// from `dir`. Entries that fail either way are dropped — callers
+    /// fall back to restart-from-scratch for those trials. Refcounts
+    /// and indices are recomputed here, never trusted from disk. The
+    /// rebuilt store keeps spilling to `dir`.
+    ///
+    /// After folding any delta journals on top, call
+    /// [`CheckpointStore::sweep_orphan_chunks`] — not earlier: a chunk
+    /// file unreferenced by the base snapshot may belong to a blob only
+    /// a later delta adds.
     pub fn restore_from(snap: &Json, dir: &Path) -> Result<Self, String> {
         let mut store = CheckpointStore::new().with_disk(dir.to_path_buf());
         store.next_id = snap
@@ -220,55 +636,76 @@ impl CheckpointStore {
             .ok_or("checkpoint snapshot: missing next_id")?;
         store.saved = snap.get("saved").and_then(|v| v.as_u64()).unwrap_or(0);
         store.restored = snap.get("restored").and_then(|v| v.as_u64()).unwrap_or(0);
+        let mut defs: BTreeMap<ContentHash, (usize, Vec<(ContentHash, u32)>)> = BTreeMap::new();
+        if let Some(blobs) = snap.get("blobs").and_then(|b| b.as_arr()) {
+            for b in blobs {
+                let (Some(key), Some(len), Some(manifest)) = (
+                    b.get("key").and_then(|v| v.as_str()).and_then(ContentHash::from_hex),
+                    b.get("len").and_then(|v| v.as_u64()),
+                    b.get("chunks").and_then(Self::parse_manifest),
+                ) else {
+                    return Err("checkpoint snapshot: malformed blob entry".into());
+                };
+                defs.insert(key, (len as usize, manifest));
+            }
+        }
         let metas = snap
             .get("metas")
             .and_then(|m| m.as_arr())
             .ok_or("checkpoint snapshot: missing metas")?;
         for m in metas {
-            let (Some(id), Some(trial), Some(iteration), Some(bytes)) = (
-                m.get("id").and_then(|v| v.as_u64()),
-                m.get("trial").and_then(|v| v.as_u64()),
-                m.get("iteration").and_then(|v| v.as_u64()),
-                m.get("bytes").and_then(|v| v.as_u64()),
-            ) else {
-                return Err("checkpoint snapshot: malformed meta entry".into());
-            };
-            let time_total_s = m.get("time").and_then(|v| v.as_f64()).unwrap_or(0.0);
-            let meta =
-                CheckpointMeta { id, trial, iteration, time_total_s, bytes: bytes as usize };
-            let Ok(blob) = std::fs::read(dir.join(Self::spill_name(&meta))) else {
-                continue; // spill file lost: drop the entry
-            };
-            if blob.len() != meta.bytes {
-                continue; // truncated write: drop the entry
+            let meta = Self::parse_meta(m)?;
+            match m.get("blob").and_then(|v| v.as_str()).and_then(ContentHash::from_hex) {
+                Some(key) => {
+                    let Some((len, manifest)) = defs.get(&key) else { continue };
+                    if *len != meta.bytes {
+                        continue;
+                    }
+                    // Clone keeps `defs` borrowed immutably only here.
+                    let manifest = manifest.clone();
+                    if !store.adopt_blob(key, *len, &manifest) {
+                        continue;
+                    }
+                    store.register_restored(meta, key);
+                }
+                None => {
+                    // Legacy whole-blob format.
+                    let name = Self::spill_name(&meta);
+                    let Ok(blob) = std::fs::read(dir.join(&name)) else {
+                        continue; // spill file lost: drop the entry
+                    };
+                    if blob.len() != meta.bytes {
+                        continue; // truncated write: drop the entry
+                    }
+                    store.ingest_legacy(meta, blob, name);
+                }
             }
-            // `latest` is the max id per trial by construction (ids are
-            // monotone), so it rebuilds incrementally here.
-            if store.latest.get(&trial).map_or(true, |l| *l < id) {
-                store.latest.insert(trial, id);
-            }
-            store.data.insert(id, blob.into());
-            store.meta.insert(id, meta);
         }
         Ok(store)
     }
 
     /// Incremental snapshot: metadata added/removed since the last
     /// [`CheckpointStore::snapshot`]/delta, for the runner's delta
-    /// records. Blobs are never embedded — additions re-read from the
-    /// spill directory on fold, exactly like a full restore.
+    /// records. Added entries carry their blob key *and* chunk manifest
+    /// inline, so folding needs no base-snapshot lookup; chunk bytes
+    /// are never embedded — the fold revalidates them from the spill
+    /// tier, exactly like a full restore.
     pub fn snapshot_delta(&mut self) -> Json {
         let added = self
             .delta_added
             .iter()
             .filter_map(|id| self.meta.get(id))
             .map(|m| {
+                let key = self.blob_of.get(&m.id).expect("live meta has a blob key");
+                let e = &self.blobs[key];
                 Json::obj(vec![
                     ("id", Json::Num(m.id as f64)),
                     ("trial", Json::Num(m.trial as f64)),
                     ("iteration", Json::Num(m.iteration as f64)),
                     ("time", Json::Num(m.time_total_s)),
                     ("bytes", Json::Num(m.bytes as f64)),
+                    ("blob", Json::Str(key.to_hex())),
+                    ("chunks", Self::manifest_json(&e.manifest)),
                 ])
             })
             .collect();
@@ -285,9 +722,10 @@ impl CheckpointStore {
     }
 
     /// Fold a [`CheckpointStore::snapshot_delta`] record into this
-    /// store, reading added blobs back from the spill directory `dir`.
-    /// Additions whose spill file is missing/truncated are dropped, the
-    /// same degradation contract as [`CheckpointStore::restore_from`].
+    /// store. Additions revalidate their chunks from the spill tier
+    /// (legacy whole-blob entries read their spill file); entries that
+    /// fail are dropped, the same degradation contract as
+    /// [`CheckpointStore::restore_from`]. Folding never journals.
     pub fn apply_delta(&mut self, delta: &Json, dir: &Path) -> Result<(), String> {
         if let Some(n) = delta.get("next_id").and_then(|v| v.as_u64()) {
             self.next_id = n;
@@ -303,28 +741,28 @@ impl CheckpointStore {
             .and_then(|a| a.as_arr())
             .ok_or("checkpoint delta: missing added")?
         {
-            let (Some(id), Some(trial), Some(iteration), Some(bytes)) = (
-                m.get("id").and_then(|v| v.as_u64()),
-                m.get("trial").and_then(|v| v.as_u64()),
-                m.get("iteration").and_then(|v| v.as_u64()),
-                m.get("bytes").and_then(|v| v.as_u64()),
-            ) else {
-                return Err("checkpoint delta: malformed added entry".into());
-            };
-            let time_total_s = m.get("time").and_then(|v| v.as_f64()).unwrap_or(0.0);
-            let meta =
-                CheckpointMeta { id, trial, iteration, time_total_s, bytes: bytes as usize };
-            let Ok(blob) = std::fs::read(dir.join(Self::spill_name(&meta))) else {
-                continue; // spill file lost: drop the entry
-            };
-            if blob.len() != meta.bytes {
-                continue; // truncated write: drop the entry
+            let meta = Self::parse_meta(m).map_err(|_| "checkpoint delta: malformed added entry")?;
+            match m.get("blob").and_then(|v| v.as_str()).and_then(ContentHash::from_hex) {
+                Some(key) => {
+                    let Some(manifest) = m.get("chunks").and_then(Self::parse_manifest) else {
+                        return Err("checkpoint delta: malformed added entry".into());
+                    };
+                    if !self.adopt_blob(key, meta.bytes, &manifest) {
+                        continue;
+                    }
+                    self.register_restored(meta, key);
+                }
+                None => {
+                    let name = Self::spill_name(&meta);
+                    let Ok(blob) = std::fs::read(dir.join(&name)) else {
+                        continue; // spill file lost: drop the entry
+                    };
+                    if blob.len() != meta.bytes {
+                        continue; // truncated write: drop the entry
+                    }
+                    self.ingest_legacy(meta, blob, name);
+                }
             }
-            if self.latest.get(&trial).map_or(true, |l| *l < id) {
-                self.latest.insert(trial, id);
-            }
-            self.data.insert(id, blob.into());
-            self.meta.insert(id, meta);
         }
         for id in delta
             .get("removed")
@@ -332,25 +770,19 @@ impl CheckpointStore {
             .ok_or("checkpoint delta: missing removed")?
         {
             let id = id.as_u64().ok_or("checkpoint delta: bad removed id")?;
-            self.data.remove(&id);
-            if let Some(meta) = self.meta.remove(&id) {
-                // GC only ever evicts non-latest ids, but stay robust:
-                // recompute this trial's latest if it was removed.
-                if self.latest.get(&meta.trial) == Some(&id) {
-                    let new_latest = self
-                        .meta
-                        .values()
-                        .filter(|m| m.trial == meta.trial)
-                        .map(|m| m.id)
-                        .max();
-                    match new_latest {
-                        Some(l) => self.latest.insert(meta.trial, l),
-                        None => self.latest.remove(&meta.trial),
-                    };
-                }
-            }
+            self.drop_checkpoint(id);
         }
         Ok(())
+    }
+
+    /// Drop refcount-0 chunk placeholders left by degraded manifests
+    /// and delete chunk files no live chunk claims. Call once per
+    /// restore, **after** all delta journals have folded. Returns the
+    /// number of files removed.
+    pub fn sweep_orphan_chunks(&mut self) -> usize {
+        let mut table = self.table.lock().expect("chunk table lock");
+        table.drop_unreferenced();
+        table.sweep_orphans()
     }
 
     /// A full snapshot was just persisted; forget the journals.
@@ -361,21 +793,126 @@ impl CheckpointStore {
 
     /// Number of checkpoints currently stored.
     pub fn len(&self) -> usize {
-        self.data.len()
+        self.meta.len()
     }
     /// True when no checkpoints are stored.
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.meta.is_empty()
     }
-    /// Total stored bytes across checkpoints.
+    /// Total *logical* bytes across live checkpoints (pre-dedup; the
+    /// physical footprint is `stats().physical_bytes`).
     pub fn total_bytes(&self) -> usize {
-        self.data.values().map(|v| v.len()).sum()
+        self.logical_bytes as usize
+    }
+
+    /// Current counters, cheap to copy into results and benches.
+    pub fn stats(&self) -> CkptStoreStats {
+        let t = self.table.lock().expect("chunk table lock").stats();
+        CkptStoreStats {
+            saved: self.saved,
+            restored: self.restored,
+            checkpoints: self.meta.len() as u64,
+            unique_blobs: self.blobs.len() as u64,
+            unique_chunks: t.unique_chunks,
+            logical_bytes: self.logical_bytes,
+            physical_bytes: t.physical_bytes,
+            resident_bytes: t.resident_bytes + self.assembled_bytes as u64,
+            blob_dedup_hits: self.blob_dedup_hits,
+            chunk_dedup_hits: t.dedup_hits,
+            spilled_chunks: t.spilled,
+            chunk_disk_loads: t.disk_loads,
+        }
+    }
+
+    /// Full-scan verification that every incrementally-maintained index
+    /// and counter matches a recomputation from the ground-truth meta
+    /// table — the store-level mirror of the runner's
+    /// `debug_check_indices`. Covers: meta/blob_of/blobs alignment,
+    /// per-trial index and `latest`, logical/assembled byte counters,
+    /// blob refcounts vs live ids, chunk refcounts vs manifest
+    /// occurrences, and the chunk tier's files (length-checked, no
+    /// orphans). Panics on any violation. Test-only diagnostics.
+    #[doc(hidden)]
+    pub fn debug_check_store(&self) {
+        assert_eq!(self.meta.len(), self.blob_of.len(), "meta/blob_of key drift");
+        let mut logical = 0u64;
+        let mut per: BTreeMap<u64, Vec<CheckpointId>> = BTreeMap::new();
+        for (id, m) in &self.meta {
+            assert_eq!(m.id, *id, "meta id key drift");
+            assert!(self.blob_of.contains_key(id), "meta {id} missing blob key");
+            logical += m.bytes as u64;
+            per.entry(m.trial).or_default().push(*id);
+        }
+        assert_eq!(logical, self.logical_bytes, "logical byte counter drifted");
+        assert_eq!(per, self.per_trial, "per-trial index drifted");
+        assert_eq!(per.len(), self.latest.len(), "latest index size drift");
+        for (trial, ids) in &per {
+            assert_eq!(
+                self.latest.get(trial),
+                ids.last(),
+                "latest[{trial}] != newest live id"
+            );
+        }
+        let mut blob_refs: BTreeMap<ContentHash, u64> = BTreeMap::new();
+        for key in self.blob_of.values() {
+            *blob_refs.entry(*key).or_default() += 1;
+        }
+        assert_eq!(
+            blob_refs.len(),
+            self.blobs.len(),
+            "blob entries out of sync with referenced keys"
+        );
+        let mut assembled = 0usize;
+        let mut chunk_refs: BTreeMap<ContentHash, u64> = BTreeMap::new();
+        for (key, e) in &self.blobs {
+            assert_eq!(
+                Some(&e.refs),
+                blob_refs.get(key),
+                "blob {key} refcount != live ids mapping to it"
+            );
+            let sum: usize = e.manifest.iter().map(|(_, l)| *l as usize).sum();
+            assert_eq!(sum, e.len, "blob {key} manifest lengths != blob length");
+            if let Some(a) = &e.assembled {
+                assert_eq!(a.len(), e.len, "blob {key} assembled cache length mismatch");
+                assembled += e.len;
+            }
+            for (k, _) in &e.manifest {
+                *chunk_refs.entry(*k).or_default() += 1;
+            }
+        }
+        assert_eq!(assembled, self.assembled_bytes, "assembled byte counter drifted");
+        let table = self.table.lock().expect("chunk table lock");
+        // A table shared with another store legitimately holds chunks
+        // (and refs) this store doesn't know about.
+        let strict = Arc::strong_count(&self.table) == 1;
+        table.debug_check(&chunk_refs, strict, !strict);
+        if let Some(budget) = self.mem_budget {
+            if table.has_disk() {
+                assert!(
+                    self.assembled_bytes as u64 + table.resident_bytes() <= budget as u64,
+                    "resident {} + {} over budget {budget}",
+                    self.assembled_bytes,
+                    table.resident_bytes()
+                );
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tune_ckpt_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn chunk_files(dir: &Path) -> usize {
+        std::fs::read_dir(dir.join("chunks")).map(|d| d.count()).unwrap_or(0)
+    }
 
     #[test]
     fn save_get_roundtrip() {
@@ -385,6 +922,7 @@ mod tests {
         assert_eq!(s.latest_for(7), Some(id));
         assert_eq!(s.meta(id).unwrap().iteration, 10);
         assert_eq!((s.saved, s.restored), (1, 1));
+        s.debug_check_store();
     }
 
     #[test]
@@ -397,6 +935,7 @@ mod tests {
         assert!(s.get(b).is_some());
         assert_eq!(s.latest_for(1), Some(c));
         assert_eq!(s.len(), 2);
+        s.debug_check_store();
     }
 
     #[test]
@@ -406,13 +945,83 @@ mod tests {
             s.save(t, 1, vec![t as u8]);
         }
         assert_eq!(s.len(), 4);
+        s.debug_check_store();
+    }
+
+    #[test]
+    fn exploit_clone_is_a_refcount_bump() {
+        let mut s = CheckpointStore::new();
+        let blob: Arc<[u8]> = vec![7u8; 50_000].into();
+        let a = s.save_timed(1, 10, 1.0, Arc::clone(&blob));
+        // The PBT exploit path: hand the donor's handle straight back.
+        let donor = s.get(a).unwrap();
+        let b = s.save_timed(2, 10, 1.0, donor);
+        let st = s.stats();
+        assert_eq!(st.blob_dedup_hits, 1);
+        assert_eq!(st.logical_bytes, 100_000);
+        assert_eq!(st.physical_bytes, 50_000, "clone stored zero new bytes");
+        assert!((st.dedup_ratio() - 2.0).abs() < 1e-9);
+        // Both ids hand out the same allocation.
+        assert!(Arc::ptr_eq(&s.get(a).unwrap(), &s.get(b).unwrap()));
+        s.debug_check_store();
+        // Dropping one clone keeps the blob; dropping both frees it.
+        s.keep_per_trial = 0; // disable GC; drop via delta-removed path
+        let d = Json::obj(vec![
+            ("added", Json::Arr(vec![])),
+            ("removed", Json::Arr(vec![Json::Num(a as f64)])),
+        ]);
+        s.apply_delta(&d, Path::new("/nonexistent")).unwrap();
+        assert_eq!(s.stats().physical_bytes, 50_000);
+        assert!(s.get(b).is_some());
+        s.debug_check_store();
+    }
+
+    #[test]
+    fn lineage_checkpoints_share_chunks() {
+        // A 100 KiB state with a 1 KiB mutation: the second checkpoint
+        // must cost ~the delta, not another 100 KiB.
+        let mut s = CheckpointStore::new();
+        let mut state = vec![0u8; 100_000];
+        for (i, b) in state.iter_mut().enumerate() {
+            *b = (i * 31 % 251) as u8;
+        }
+        s.save(1, 1, state.clone());
+        for b in state[40_000..41_000].iter_mut() {
+            *b ^= 0xAA;
+        }
+        s.save(1, 2, state.clone());
+        let st = s.stats();
+        assert_eq!(st.logical_bytes, 200_000);
+        assert!(
+            st.physical_bytes < 130_000,
+            "near-identical checkpoints stored {} physical bytes",
+            st.physical_bytes
+        );
+        assert!(st.chunk_dedup_hits > 0);
+        s.debug_check_store();
+    }
+
+    #[test]
+    fn budget_evicts_and_faults_back_in() {
+        let dir = tmpdir("budget");
+        let mut s = CheckpointStore::new().with_disk(dir.clone());
+        let blob: Vec<u8> = (0..60_000u32).map(|i| (i % 241) as u8).collect();
+        let id = s.save(1, 1, blob.clone());
+        s.set_mem_budget(Some(1024));
+        assert!(s.stats().resident_bytes <= 1024);
+        s.debug_check_store();
+        // Reassembly faults chunks back in from the spill tier...
+        assert_eq!(&s.get(id).unwrap()[..], &blob[..]);
+        assert!(s.stats().chunk_disk_loads > 0);
+        // ...and the budget re-applies after the fetch.
+        assert!(s.stats().resident_bytes <= 1024);
+        s.debug_check_store();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn snapshot_restore_roundtrip_through_disk() {
-        let dir = std::env::temp_dir().join(format!("tune_ckpt_resume_{}", std::process::id()));
-        std::fs::remove_dir_all(&dir).ok();
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmpdir("resume");
         let mut s = CheckpointStore::new().with_disk(dir.clone());
         let a = s.save(1, 5, vec![1, 1]);
         let b = s.save(1, 10, vec![2, 2]);
@@ -427,6 +1036,10 @@ mod tests {
         assert_eq!(r.latest_for(1), Some(b));
         assert_eq!(r.latest_for(3), Some(c));
         assert_eq!(r.meta(b).unwrap().iteration, 10);
+        // Dedup state survives the roundtrip bit-for-bit.
+        assert_eq!(r.stats().physical_bytes, s.stats().physical_bytes);
+        r.sweep_orphan_chunks();
+        r.debug_check_store();
         // New saves continue the id sequence without collisions.
         let d = r.save(1, 15, vec![4]);
         assert!(d > c);
@@ -434,43 +1047,115 @@ mod tests {
     }
 
     #[test]
-    fn restore_drops_missing_and_truncated_blobs() {
-        let dir = std::env::temp_dir().join(format!("tune_ckpt_trunc_{}", std::process::id()));
-        std::fs::remove_dir_all(&dir).ok();
-        std::fs::create_dir_all(&dir).unwrap();
+    fn restore_drops_blobs_with_torn_chunks() {
+        let dir = tmpdir("torn");
         let mut s = CheckpointStore::new().with_disk(dir.clone());
-        let a = s.save(1, 1, vec![9; 8]);
-        let b = s.save(2, 1, vec![8; 8]);
+        let blob_a: Vec<u8> = vec![9; 8];
+        let blob_b: Vec<u8> = vec![8; 8];
+        let a = s.save(1, 1, blob_a.clone());
+        let b = s.save(2, 1, blob_b.clone());
         let snap = s.snapshot();
-        // Corrupt trial 1's file, delete trial 2's entirely.
-        std::fs::write(dir.join("trial1_iter1_ckpt1.bin"), [9; 3]).unwrap();
-        std::fs::remove_file(dir.join("trial2_iter1_ckpt2.bin")).unwrap();
+        // Truncate a's chunk file, delete b's entirely. The restoring
+        // store has nothing resident, so both must fail validation.
+        let file_a = dir.join("chunks").join(format!("c{}.bin", chunk::chunk_key(&blob_a)));
+        let file_b = dir.join("chunks").join(format!("c{}.bin", chunk::chunk_key(&blob_b)));
+        std::fs::write(&file_a, [9; 3]).unwrap();
+        std::fs::remove_file(&file_b).unwrap();
         let mut r = CheckpointStore::restore_from(&snap, &dir).unwrap();
         assert!(r.get(a).is_none());
         assert!(r.get(b).is_none());
         assert_eq!(r.latest_for(1), None);
+        assert!(r.is_empty(), "both entries degraded");
+        // The degraded store is not poisoned: sweeping and saving work.
+        r.sweep_orphan_chunks();
+        r.debug_check_store();
+        let c = r.save(1, 2, vec![5; 8]);
+        assert_eq!(&r.get(c).unwrap()[..], &[5; 8]);
+        r.debug_check_store();
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
-    fn gc_also_deletes_spill_files() {
-        let dir = std::env::temp_dir().join(format!("tune_ckpt_gc_{}", std::process::id()));
+    fn legacy_whole_blob_snapshot_restores() {
+        let dir = tmpdir("legacy");
+        // A pre-chunk snapshot: metas without blob keys, whole-blob
+        // spill files on disk.
+        std::fs::write(dir.join("trial1_iter5_ckpt1.bin"), [1u8, 1]).unwrap();
+        std::fs::write(dir.join("trial1_iter9_ckpt2.bin"), [2u8, 2, 2]).unwrap();
+        std::fs::write(dir.join("trial2_iter3_ckpt3.bin"), [3u8]).unwrap();
+        let text = r#"{"next_id":4,"saved":3,"restored":0,"metas":[
+            {"id":1,"trial":1,"iteration":5,"time":5.0,"bytes":2},
+            {"id":2,"trial":1,"iteration":9,"time":9.0,"bytes":3},
+            {"id":3,"trial":2,"iteration":3,"time":3.0,"bytes":1}]}"#;
+        let snap = crate::util::json::parse(text).unwrap();
+        let mut r = CheckpointStore::restore_from(&snap, &dir).unwrap();
+        assert_eq!(r.len(), 3);
+        assert_eq!(&r.get(1).unwrap()[..], &[1, 1]);
+        assert_eq!(&r.get(2).unwrap()[..], &[2, 2, 2]);
+        assert_eq!(r.latest_for(1), Some(2));
+        assert_eq!(r.meta(2).unwrap().time_total_s, 9.0);
+        r.debug_check_store();
+        // Legacy files stay on disk after ingest (the old snapshot must
+        // remain restorable until a new-format snapshot lands) ...
+        assert!(dir.join("trial1_iter5_ckpt1.bin").exists());
+        // ... a new snapshot is chunked ...
+        let snap2 = r.snapshot();
+        let r2 = CheckpointStore::restore_from(&snap2, &dir).unwrap();
+        assert_eq!(r2.len(), 3);
+        // ... and GC of a legacy id finally deletes its file.
+        let _ = r.save(1, 12, vec![7; 2]); // keep=2: evicts legacy id 1
+        assert!(!dir.join("trial1_iter5_ckpt1.bin").exists());
+        assert!(dir.join("trial1_iter9_ckpt2.bin").exists());
+        r.debug_check_store();
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn legacy_missing_and_truncated_blobs_are_dropped() {
+        let dir = tmpdir("legacy_trunc");
+        std::fs::write(dir.join("trial1_iter1_ckpt1.bin"), [9u8; 3]).unwrap(); // truncated
+        let text = r#"{"next_id":3,"saved":2,"restored":0,"metas":[
+            {"id":1,"trial":1,"iteration":1,"time":0.0,"bytes":8},
+            {"id":2,"trial":2,"iteration":1,"time":0.0,"bytes":8}]}"#;
+        let snap = crate::util::json::parse(text).unwrap();
+        let mut r = CheckpointStore::restore_from(&snap, &dir).unwrap();
+        assert!(r.get(1).is_none());
+        assert!(r.get(2).is_none());
+        assert_eq!(r.latest_for(1), None);
+        r.debug_check_store();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gc_frees_chunk_files_only_at_refcount_zero() {
+        let dir = tmpdir("gc");
         let mut s = CheckpointStore::new().with_disk(dir.clone()); // keep 2
         for i in 1..=5u64 {
-            s.save_timed(1, i, i as f64, vec![i as u8]);
+            s.save_timed(1, i, i as f64, vec![i as u8; 8]);
         }
-        // Only the 2 newest survive, in memory AND on disk.
+        // Only the 2 newest survive, in memory AND in the chunk tier
+        // (each tiny blob is exactly one chunk, all distinct).
         assert_eq!(s.len(), 2);
-        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 2);
+        assert_eq!(chunk_files(&dir), 2);
+        s.debug_check_store();
+        // A shared blob's chunk survives until BOTH referents die.
+        let shared = vec![42u8; 8];
+        s.save(2, 1, shared.clone());
+        s.save(3, 1, shared.clone());
+        assert_eq!(chunk_files(&dir), 3);
+        s.save(2, 2, vec![43u8; 8]);
+        s.save(2, 3, vec![44u8; 8]); // evicts trial 2's shared-blob ref
+        assert_eq!(chunk_files(&dir), 5, "chunk still pinned by trial 3");
+        s.save(3, 2, vec![45u8; 8]);
+        s.save(3, 3, vec![46u8; 8]); // evicts the last shared-blob ref
+        assert_eq!(chunk_files(&dir), 6, "shared chunk freed at refcount 0");
+        s.debug_check_store();
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn delta_fold_matches_live_store() {
-        let dir = std::env::temp_dir().join(format!("tune_ckpt_delta_{}", std::process::id()));
-        std::fs::remove_dir_all(&dir).ok();
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmpdir("delta");
         let mut live = CheckpointStore::new().with_disk(dir.clone());
         let a = live.save_timed(1, 1, 1.0, vec![1; 4]);
         let base = live.snapshot();
@@ -492,10 +1177,14 @@ mod tests {
         assert_eq!(folded.latest_for(1), Some(c));
         assert_eq!(folded.latest_for(2), Some(d));
         assert_eq!(folded.len(), live.len());
+        assert_eq!(folded.stats().physical_bytes, live.stats().physical_bytes);
+        folded.sweep_orphan_chunks();
+        folded.debug_check_store();
         // New saves continue the id sequence without collisions.
         assert!(folded.save(3, 1, vec![9]) > d);
         // An id born AND evicted inside one window never appears.
-        let mut w = CheckpointStore::new().with_disk(dir.clone());
+        let dir2 = tmpdir("delta_w");
+        let mut w = CheckpointStore::new().with_disk(dir2.clone());
         w.keep_per_trial = 1;
         w.reset_delta_cursor();
         let x = w.save(7, 1, vec![1]);
@@ -506,15 +1195,50 @@ mod tests {
         assert_ne!(added[0].get("id").unwrap().as_u64(), Some(x));
         assert_eq!(dj.get("removed").unwrap().as_arr().unwrap().len(), 0);
         std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&dir2).ok();
     }
 
     #[test]
-    fn disk_spill_writes_files() {
-        let dir = std::env::temp_dir().join(format!("tune_ckpt_test_{}", std::process::id()));
+    fn disk_spill_writes_chunk_files() {
+        let dir = tmpdir("spillfiles");
         let mut s = CheckpointStore::new().with_disk(dir.clone());
         s.save(1, 5, vec![9; 16]);
-        let n = std::fs::read_dir(&dir).unwrap().count();
-        assert_eq!(n, 1);
+        assert_eq!(chunk_files(&dir), 1);
+        // No whole-blob files in the new format — only the chunk tier.
+        let top: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(top, vec!["chunks".to_string()]);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_blob_roundtrips() {
+        let dir = tmpdir("empty");
+        let mut s = CheckpointStore::new().with_disk(dir.clone());
+        let id = s.save(1, 1, Vec::new());
+        assert_eq!(s.get(id).unwrap().len(), 0);
+        let snap = s.snapshot();
+        let mut r = CheckpointStore::restore_from(&snap, &dir).unwrap();
+        assert_eq!(r.get(id).unwrap().len(), 0);
+        r.debug_check_store();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shared_chunk_table_dedups_across_stores() {
+        let table = chunk::new_shared_table();
+        let mut a = CheckpointStore::new().with_chunk_table(Arc::clone(&table));
+        let mut b = CheckpointStore::new().with_chunk_table(Arc::clone(&table));
+        let blob = vec![5u8; 30_000];
+        a.save(1, 1, blob.clone());
+        let before = table.lock().unwrap().physical_bytes();
+        b.save(1, 1, blob);
+        let after = table.lock().unwrap().physical_bytes();
+        assert_eq!(before, after, "second store stored zero new chunk bytes");
+        a.debug_check_store();
+        b.debug_check_store();
     }
 }

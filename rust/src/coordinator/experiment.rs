@@ -226,6 +226,12 @@ pub struct RunOptions {
     /// workers ever hold GPU trials. Overrides the pool's worker count
     /// with `worker_caps.len()`.
     pub worker_caps: Option<Vec<Resources>>,
+    /// Cap on the checkpoint store's memory-resident bytes (assembled
+    /// blobs + chunk payloads); cold chunks evict to the experiment
+    /// directory's `checkpoints/chunks/` tier and fault back in on
+    /// demand. `None` = unbounded. Effective with `experiment_dir` set
+    /// (the disk tier is where evicted chunks go).
+    pub checkpoint_mem_budget: Option<usize>,
 }
 
 impl Default for RunOptions {
@@ -240,6 +246,7 @@ impl Default for RunOptions {
             resume: false,
             autoscale: None,
             worker_caps: None,
+            checkpoint_mem_budget: None,
         }
     }
 }
@@ -297,6 +304,7 @@ pub fn build_runner(
         resume,
         autoscale,
         worker_caps,
+        checkpoint_mem_budget,
     } = opts;
     let executor: Box<dyn Executor> = match (exec, worker_caps) {
         (ExecMode::Sim, _) => Box::new(SimExecutor::new(factory)),
@@ -346,6 +354,10 @@ pub fn build_runner(
     if progress_every > 0 {
         let metric = runner.spec.metric.clone();
         runner.add_logger(Box::new(ProgressReporter::new(&metric, progress_every)));
+    }
+    // After enable_persistence, so eviction has its disk tier.
+    if checkpoint_mem_budget.is_some() {
+        runner.set_checkpoint_mem_budget(checkpoint_mem_budget);
     }
     runner
 }

@@ -227,7 +227,14 @@ impl ExperimentDir {
             }
         }
         for entry in std::fs::read_dir(self.checkpoints_dir())?.flatten() {
-            std::fs::remove_file(entry.path())?;
+            let path = entry.path();
+            if path.is_dir() {
+                // The content-addressed store keeps its chunk tier in a
+                // `chunks/` subdirectory.
+                std::fs::remove_dir_all(&path)?;
+            } else {
+                std::fs::remove_file(&path)?;
+            }
         }
         Ok(())
     }
@@ -413,12 +420,18 @@ impl ExperimentDir {
 /// power loss can persist the rename before the data, replacing the
 /// previous good file with garbage.
 pub fn write_atomic(path: &Path, text: &str) -> std::io::Result<()> {
+    write_atomic_bytes(path, text.as_bytes())
+}
+
+/// Byte-blob variant of [`write_atomic`] — same tmp/fsync/rename/dir-sync
+/// discipline, used by the checkpoint chunk tier for binary chunk files.
+pub fn write_atomic_bytes(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
     use std::io::Write as _;
     let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
     name.push(".tmp");
     let tmp = path.with_file_name(name);
     let mut f = std::fs::File::create(&tmp)?;
-    f.write_all(text.as_bytes())?;
+    f.write_all(bytes)?;
     f.sync_all()?;
     std::fs::rename(&tmp, path)?;
     // Directory fsync makes the rename itself durable; best-effort since

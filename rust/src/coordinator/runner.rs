@@ -12,7 +12,7 @@
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
-use crate::checkpoint::CheckpointStore;
+use crate::checkpoint::{CheckpointStore, CkptStoreStats};
 use crate::logger::ResultLogger;
 use crate::ray::{
     AutoscaleAction, AutoscalePolicy, Autoscaler, Cluster, FaultInjector, LeaseId, NodeId,
@@ -191,6 +191,9 @@ pub struct ExperimentResult {
     /// autoscaled run, `nodes_alive`/totals reflect the cluster the run
     /// actually ended on.
     pub final_utilization: Utilization,
+    /// Checkpoint-store counters at experiment end: dedup ratio, tier
+    /// residency, spill traffic (see [`CkptStoreStats`]).
+    pub ckpt: CkptStoreStats,
 }
 
 impl ExperimentResult {
@@ -664,6 +667,28 @@ impl TrialRunner {
         // Shared checkpoint handle: a relaunch hands the executor the
         // store's own Arc, never a byte copy.
         let restore = self.trials[&id].checkpoint.and_then(|c| self.checkpoints.get(c));
+        if restore.is_none() && self.trials[&id].checkpoint.is_some() {
+            // The recorded checkpoint no longer loads (e.g. a spilled
+            // chunk file torn after restore validated it). Degrade to
+            // replay-from-scratch instead of launching a fresh
+            // trainable against stale table progress: roll the trial —
+            // and the incremental experiment totals, which normally
+            // only `rebuild_indexes` recomputes — back to zero, and
+            // suppress duplicate log rows up to the old position.
+            let t = self.trials.get_mut(&id).unwrap();
+            let (old_iter, old_time) = (t.iteration, t.time_total_s);
+            let until = self.replay_until.get(&id).copied().unwrap_or(0).max(old_iter);
+            t.checkpoint = None;
+            t.iteration = 0;
+            t.time_total_s = 0.0;
+            if until > 0 {
+                self.replay_until.insert(id, until);
+            }
+            self.stats.total_iterations -= old_iter;
+            self.stats.budget_used_s -= old_time;
+            self.dirty.insert(id);
+            eprintln!("trial {id}: checkpoint unreadable; restarting from scratch");
+        }
         let restored = restore.is_some();
         let trial = self.trials.get_mut(&id).unwrap();
         trial.node = Some(p.node);
@@ -1222,7 +1247,9 @@ impl TrialRunner {
     /// survive: restart it from iteration 0 and replay (suppressed) up
     /// to the progress the snapshot had recorded.
     fn degrade_to_scratch(&mut self, t: &mut Trial) {
-        let until = t.iteration;
+        // Never *shrink* an existing suppression window: the restore
+        // path may already have recorded progress past t.iteration.
+        let until = self.replay_until.get(&t.id).copied().unwrap_or(0).max(t.iteration);
         t.status = TrialStatus::Pending;
         t.checkpoint = None;
         t.iteration = 0;
@@ -1357,6 +1384,10 @@ impl TrialRunner {
         self.restored_epoch = base_epoch;
         self.restored_deltas = folded;
         self.curve_flushed = self.best_curve.len();
+        // Only now — after every delta folded — is "no live manifest
+        // references this chunk" a safe verdict: sweep chunk files the
+        // crashed run wrote past the last durable journal record.
+        self.checkpoints.sweep_orphan_chunks();
 
         // ---- roll running trials back to durable state ----
         let ids: Vec<TrialId> = self.trials.map().keys().copied().collect();
@@ -1854,6 +1885,7 @@ impl TrialRunner {
             schema: self.schema.clone(),
             infeasible: self.infeasible.take(),
             final_utilization: self.util,
+            ckpt: self.checkpoints.stats(),
         }
     }
 
@@ -1907,6 +1939,21 @@ impl TrialRunner {
     #[doc(hidden)]
     pub fn debug_stats(&self) -> &RunnerStats {
         &self.stats
+    }
+
+    /// Direct access to the checkpoint store (crash/fault-injection
+    /// tests read blobs out and verify store invariants mid-run).
+    #[doc(hidden)]
+    pub fn debug_ckpt_store(&mut self) -> &mut CheckpointStore {
+        &mut self.checkpoints
+    }
+
+    /// Cap the checkpoint store's memory-resident bytes; cold chunks
+    /// spill to the experiment directory's `chunks/` tier. No-op
+    /// eviction until persistence is enabled (the disk tier is the only
+    /// safe destination for the sole copy of a chunk).
+    pub fn set_checkpoint_mem_budget(&mut self, budget: Option<usize>) {
+        self.checkpoints.set_mem_budget(budget);
     }
 
     /// Compare every incrementally maintained index against a freshly

@@ -101,6 +101,9 @@ COMMANDS
              --resume           continue the experiment in --exp-dir from
                                 its latest snapshot
              --snapshot-every N snapshot cadence in results (default 50)
+             --ckpt-mem-mb N    cap checkpoint-store memory residency at
+                                N MiB (cold chunks spill to --exp-dir's
+                                chunk tier; 0 = unbounded)
              --seed N
   serve      --exp-dir DIR      server root: spec files dropped into
                                 DIR/queue/ become live experiments, all
@@ -192,6 +195,17 @@ fn worker_caps(flags: &Flags, workers: usize) -> Option<Vec<Resources>> {
         flags.get_f64("worker-gpus", 0.0),
     );
     Some(vec![cap; workers.max(1)])
+}
+
+/// `--ckpt-mem-mb N` caps the checkpoint store's memory residency at N
+/// MiB; cold chunks spill to the experiment directory's chunk tier.
+fn ckpt_mem_budget(flags: &Flags) -> Option<usize> {
+    let mb = flags.get_u64("ckpt-mem-mb", 0);
+    if mb == 0 {
+        None
+    } else {
+        Some((mb as usize) << 20)
+    }
 }
 
 /// `--autoscale-max-nodes N` (plus the per-node shape flags) enables an
@@ -337,6 +351,7 @@ fn cmd_run(flags: &Flags) {
         resume: flags.0.get("resume").is_some(),
         autoscale: autoscale_policy(flags, &node_shape, 1),
         worker_caps: worker_caps(flags, flags.get_u64("workers", 4) as usize),
+        checkpoint_mem_budget: ckpt_mem_budget(flags),
     };
 
     let label = sched.label();
@@ -355,6 +370,15 @@ fn cmd_run(flags: &Flags) {
     );
     println!("duration             : {:.1}s  (budget used {:.1} trial-s)", res.duration_s, res.budget_used_s);
     println!("checkpoints/restores : {}/{}", res.stats.checkpoints, res.stats.restores);
+    if res.ckpt.saved > 0 {
+        println!(
+            "ckpt store           : {:.1}x dedup ({:.1} logical MiB, {:.1} physical MiB, {} chunks)",
+            res.ckpt.dedup_ratio(),
+            res.ckpt.logical_bytes as f64 / (1 << 20) as f64,
+            res.ckpt.physical_bytes as f64 / (1 << 20) as f64,
+            res.ckpt.unique_chunks
+        );
+    }
     println!(
         "placement            : {} local, {} spilled ({:.0}% spill)",
         res.placement.local,
@@ -442,6 +466,7 @@ fn run_spec_file(path: &std::path::Path, flags: &Flags) {
         resume: flags.0.get("resume").is_some(),
         autoscale: f.autoscale,
         worker_caps: worker_caps(flags, flags.get_u64("workers", 4) as usize),
+        checkpoint_mem_budget: ckpt_mem_budget(flags),
     };
     let label = f.scheduler.label();
     println!("spec {:?}: workload={} scheduler={} trials={}",

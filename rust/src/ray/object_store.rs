@@ -3,9 +3,20 @@
 //! copy and accounts inter-node transfer bytes, so the e2e example can
 //! demonstrate weight/dataset broadcast (`ray.put` / `ray.get`) and the
 //! benches can report transfer volume.
+//!
+//! Objects are `Arc<[u8]>` — the same currency as `CheckpointStore` —
+//! so checkpoint blobs hand off between the two layers as refcount
+//! bumps, never byte copies. Optionally the store shares the
+//! checkpoint layer's content-addressed [`ChunkTable`], in which case
+//! every `put` also interns the payload's chunks: broadcast accounting
+//! then sees *deduped* bytes (`unique_bytes`), and a blob that already
+//! lives in the checkpoint store costs no additional chunk storage.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
+
+use crate::checkpoint::chunk::{intern_manifest, ContentHash, SharedChunkTable};
+use crate::checkpoint::ChunkTable;
 
 use super::cluster::NodeId;
 
@@ -16,7 +27,12 @@ pub type ObjectId = u64;
 #[derive(Debug, Default)]
 pub struct ObjectStore {
     next_id: ObjectId,
-    objects: BTreeMap<ObjectId, Arc<Vec<u8>>>,
+    objects: BTreeMap<ObjectId, Arc<[u8]>>,
+    /// Chunk manifests per object, when a chunk table is attached.
+    manifests: BTreeMap<ObjectId, Vec<(ContentHash, u32)>>,
+    /// Shared content-addressed chunk tier (usually the checkpoint
+    /// store's table).
+    chunks: Option<SharedChunkTable>,
     /// Which nodes hold a local copy of each object.
     locations: BTreeMap<ObjectId, BTreeSet<NodeId>>,
     /// Inter-node transfers performed.
@@ -33,20 +49,37 @@ impl ObjectStore {
         Self { next_id: 1, ..Default::default() }
     }
 
-    /// Store `data`, creating the primary copy on `node`.
-    pub fn put(&mut self, node: NodeId, data: Vec<u8>) -> ObjectId {
+    /// Account object payloads in a shared content-addressed chunk
+    /// table (see module docs). Attach before the first `put`.
+    pub fn with_chunks(mut self, table: SharedChunkTable) -> Self {
+        debug_assert!(self.objects.is_empty(), "attach the chunk table before puts");
+        self.chunks = Some(table);
+        self
+    }
+
+    /// Store `data`, creating the primary copy on `node`. Accepts a
+    /// `Vec<u8>` or an already-shared `Arc<[u8]>` (e.g. straight out of
+    /// `CheckpointStore::get`) — the latter stores without copying.
+    pub fn put(&mut self, node: NodeId, data: impl Into<Arc<[u8]>>) -> ObjectId {
+        let data: Arc<[u8]> = data.into();
         let id = self.next_id;
         self.next_id += 1;
-        self.objects.insert(id, Arc::new(data));
+        if let Some(table) = &self.chunks {
+            let mut table = table.lock().expect("chunk table lock");
+            let manifest = intern_manifest(&mut table, &data);
+            self.manifests.insert(id, manifest);
+        }
+        self.objects.insert(id, data);
         self.locations.entry(id).or_default().insert(node);
         id
     }
 
     /// Fetch an object from `node`. First access from a node without a
     /// local copy counts as one inter-node transfer (and caches it
-    /// there); later accesses are local hits.
-    pub fn get(&mut self, node: NodeId, id: ObjectId) -> Option<Arc<Vec<u8>>> {
-        let data = self.objects.get(&id)?.clone();
+    /// there); later accesses are local hits. The returned handle is a
+    /// refcount bump on the stored allocation.
+    pub fn get(&mut self, node: NodeId, id: ObjectId) -> Option<Arc<[u8]>> {
+        let data = Arc::clone(self.objects.get(&id)?);
         let locs = self.locations.get_mut(&id).expect("locations tracked per object");
         if locs.contains(&node) {
             self.local_hits += 1;
@@ -63,10 +96,19 @@ impl ObjectStore {
         self.objects.contains_key(&id)
     }
 
-    /// Drop an object everywhere (checkpoint GC).
+    /// Drop an object everywhere (checkpoint GC). With a chunk table
+    /// attached, releases the object's chunk references too.
     pub fn delete(&mut self, id: ObjectId) {
         self.objects.remove(&id);
         self.locations.remove(&id);
+        if let Some(manifest) = self.manifests.remove(&id) {
+            if let Some(table) = &self.chunks {
+                let mut table = table.lock().expect("chunk table lock");
+                for (key, _) in manifest {
+                    table.release(key);
+                }
+            }
+        }
     }
 
     /// A node died: its cached copies are gone (primary copies live in
@@ -87,10 +129,51 @@ impl ObjectStore {
     pub fn is_empty(&self) -> bool {
         self.objects.is_empty()
     }
-    /// Total payload bytes currently stored.
+    /// Total *logical* payload bytes currently stored (pre-dedup).
     pub fn total_bytes(&self) -> u64 {
         self.objects.values().map(|o| o.len() as u64).sum()
     }
+
+    /// Deduped bytes this store's objects occupy in the chunk table:
+    /// each distinct chunk referenced by a live manifest counts once,
+    /// even when several objects (or the checkpoint store) share it.
+    /// Falls back to [`ObjectStore::total_bytes`] without a table.
+    pub fn unique_bytes(&self) -> u64 {
+        if self.chunks.is_none() {
+            return self.total_bytes();
+        }
+        let mut seen: BTreeMap<ContentHash, u64> = BTreeMap::new();
+        for manifest in self.manifests.values() {
+            for (key, len) in manifest {
+                seen.insert(*key, u64::from(*len));
+            }
+        }
+        seen.values().sum()
+    }
+
+    /// Expected chunk refcount contribution of this store's live
+    /// objects, for cross-layer `ChunkTable::debug_check` runs.
+    #[doc(hidden)]
+    pub fn debug_chunk_refs(&self) -> BTreeMap<ContentHash, u64> {
+        let mut refs: BTreeMap<ContentHash, u64> = BTreeMap::new();
+        for manifest in self.manifests.values() {
+            for (key, _) in manifest {
+                *refs.entry(*key).or_default() += 1;
+            }
+        }
+        refs
+    }
+
+    /// The attached chunk table, if any.
+    pub fn chunk_table(&self) -> Option<&SharedChunkTable> {
+        self.chunks.as_ref()
+    }
+}
+
+/// Convenience: a fresh table handle for wiring a store pair together
+/// in tests/examples without importing the checkpoint module.
+pub fn shared_chunk_table() -> SharedChunkTable {
+    Arc::new(std::sync::Mutex::new(ChunkTable::default()))
 }
 
 #[cfg(test)]
@@ -101,9 +184,18 @@ mod tests {
     fn put_get_roundtrip() {
         let mut s = ObjectStore::new();
         let id = s.put(0, vec![1, 2, 3]);
-        assert_eq!(&*s.get(0, id).unwrap(), &vec![1, 2, 3]);
+        assert_eq!(&s.get(0, id).unwrap()[..], &[1, 2, 3]);
         assert_eq!(s.local_hits, 1);
         assert_eq!(s.transfers, 0);
+    }
+
+    #[test]
+    fn get_is_a_refcount_bump_not_a_copy() {
+        let mut s = ObjectStore::new();
+        let blob: Arc<[u8]> = vec![9u8; 4096].into();
+        let id = s.put(0, Arc::clone(&blob));
+        let got = s.get(0, id).unwrap();
+        assert!(Arc::ptr_eq(&blob, &got), "same allocation end to end");
     }
 
     #[test]
@@ -145,5 +237,40 @@ mod tests {
         let id = s.put(0, vec![1]);
         s.delete(id);
         assert!(s.get(0, id).is_none());
+    }
+
+    #[test]
+    fn shared_chunk_table_dedups_broadcast_payloads() {
+        let table = shared_chunk_table();
+        let mut s = ObjectStore::new().with_chunks(Arc::clone(&table));
+        let payload = vec![3u8; 20_000];
+        let a = s.put(0, payload.clone());
+        let b = s.put(1, payload.clone());
+        assert_eq!(s.total_bytes(), 40_000, "logical bytes double-count");
+        assert_eq!(s.unique_bytes(), 20_000, "chunk tier stores the payload once");
+        assert_eq!(table.lock().unwrap().physical_bytes(), 20_000);
+        table.lock().unwrap().debug_check(&s.debug_chunk_refs(), true, false);
+        // Deleting one referent keeps the chunks; deleting both frees.
+        s.delete(a);
+        assert_eq!(table.lock().unwrap().physical_bytes(), 20_000);
+        s.delete(b);
+        assert_eq!(table.lock().unwrap().physical_bytes(), 0);
+    }
+
+    #[test]
+    fn checkpoint_blob_handoff_costs_no_new_chunk_bytes() {
+        use crate::checkpoint::CheckpointStore;
+        let table = shared_chunk_table();
+        let mut ckpts = CheckpointStore::new().with_chunk_table(Arc::clone(&table));
+        let mut objs = ObjectStore::new().with_chunks(Arc::clone(&table));
+        let cid = ckpts.save(1, 1, vec![8u8; 25_000]);
+        let before = table.lock().unwrap().physical_bytes();
+        // Broadcast the checkpoint through the object store (PBT
+        // exploit handing weights to a remote node).
+        let blob = ckpts.get(cid).unwrap();
+        let oid = objs.put(0, blob);
+        assert_eq!(table.lock().unwrap().physical_bytes(), before);
+        assert_eq!(&objs.get(3, oid).unwrap()[..], &[8u8; 25_000][..]);
+        ckpts.debug_check_store();
     }
 }

@@ -24,11 +24,16 @@ use tune::trainable::synthetic::CurveTrainable;
 struct CountingAlloc;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
+/// Bytes requested, not just events — the checkpoint-handoff case pins
+/// "zero blob-sized copies", which an event count can't distinguish
+/// from small bookkeeping allocations.
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
 
-// SAFETY: defers entirely to `System`; the counter is a relaxed atomic.
+// SAFETY: defers entirely to `System`; the counters are relaxed atomics.
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
         System.alloc(layout)
     }
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
@@ -36,6 +41,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
     }
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
         System.realloc(ptr, layout, new_size)
     }
 }
@@ -175,4 +181,34 @@ fn steady_state_result_path_allocations_stay_pinned() {
         touches_4k <= touches_1k * 1.15 + 0.5,
         "table touches/result grew with trial count: {touches_1k:.2} @1k -> {touches_4k:.2} @4k"
     );
+
+    // PBT exploit-clone handoff: `CheckpointStore` and `ObjectStore`
+    // share `Arc<[u8]>` as their blob currency, so cloning a donor
+    // checkpoint into another trial and broadcasting it to a worker is
+    // refcount bumps end to end — a 1 MiB blob must move with zero
+    // blob-sized allocations (64 KiB slack covers map nodes and the
+    // manifest vec; a single byte copy would cost 1 MiB+).
+    {
+        use std::sync::Arc;
+        use tune::checkpoint::CheckpointStore;
+        use tune::ray::ObjectStore;
+
+        let mut store = CheckpointStore::new();
+        let mut objs = ObjectStore::new();
+        let blob: Arc<[u8]> = vec![0xAB; 1 << 20].into();
+        let donor = store.save(1, 1, Arc::clone(&blob)); // chunking copies happen HERE
+        let bytes_before = ALLOC_BYTES.load(Ordering::Relaxed);
+        let handle = store.get(donor).expect("donor blob readable");
+        assert!(Arc::ptr_eq(&handle, &blob), "get must return the stored allocation");
+        let clone_id = store.save(2, 1, Arc::clone(&handle)); // the exploit clone
+        let oid = objs.put(0, handle); // broadcast to a worker
+        let moved = ALLOC_BYTES.load(Ordering::Relaxed) - bytes_before;
+        assert!(
+            moved < 64 * 1024,
+            "exploit-clone handoff allocated {moved} bytes for a 1 MiB blob"
+        );
+        assert_eq!(store.stats().blob_dedup_hits, 1, "clone must dedup at the blob level");
+        assert!(Arc::ptr_eq(&store.get(clone_id).unwrap(), &blob));
+        assert!(Arc::ptr_eq(&objs.get(1, oid).unwrap(), &blob));
+    }
 }

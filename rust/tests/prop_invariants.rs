@@ -529,3 +529,196 @@ fn prop_checkpoint_gc_keeps_latest() {
         }
     });
 }
+
+/// Random mutation of a checkpoint payload: in-place flips, appends,
+/// truncations, and shifting inserts — the mix that exercises both the
+/// whole-blob dedup fast path (no-op mutations are rare but legal) and
+/// the content-defined chunker's shift resistance.
+fn mutate_blob(rng: &mut Rng, buf: &mut Vec<u8>) {
+    match rng.index(4) {
+        0 => {
+            // XOR a small window in place (same-length edit).
+            if !buf.is_empty() {
+                let at = rng.index(buf.len());
+                let n = (rng.range(1, 2000) as usize).min(buf.len() - at);
+                for b in &mut buf[at..at + n] {
+                    *b ^= 0x5A;
+                }
+            }
+        }
+        1 => {
+            // Grow at the tail.
+            for i in 0..rng.range(1, 8000) {
+                buf.push((i * 13) as u8);
+            }
+        }
+        2 => {
+            // Shrink.
+            let keep = rng.index(buf.len() + 1);
+            buf.truncate(keep);
+        }
+        _ => {
+            // Insert bytes mid-stream, shifting everything after them.
+            if buf.is_empty() {
+                buf.push(7);
+            } else {
+                let at = rng.index(buf.len());
+                let ins: Vec<u8> = (0..rng.range(1, 300)).map(|i| (i * 7) as u8).collect();
+                buf.splice(at..at, ins);
+            }
+        }
+    }
+}
+
+/// Mirror of `CheckpointStore::gc` over the shadow oracle: keep only
+/// the newest `keep` ids per trial.
+fn mirror_gc(
+    keep: usize,
+    live: &mut std::collections::BTreeMap<u64, Vec<u64>>,
+    shadow: &mut std::collections::BTreeMap<u64, Vec<u8>>,
+    trial: u64,
+) {
+    let ids = live.entry(trial).or_default();
+    while ids.len() > keep {
+        let old = ids.remove(0);
+        shadow.remove(&old);
+    }
+}
+
+/// Content-addressed checkpoint store: after every randomized op
+/// (save with mutation, PBT exploit-clone, read-back, memory-budget
+/// churn) the incrementally maintained refcounts/indices/counters must
+/// match a full-scan recomputation (`debug_check_store`), every live
+/// id must read back byte-identically to an independent shadow map,
+/// and a snapshot + delta-journal fold must reproduce the live store
+/// bit for bit — including its physical (deduped) footprint.
+#[test]
+fn prop_ckpt_store_invariants_hold_under_random_op_sequences() {
+    check("ckpt_store_ops", 0xC4A2_57_0E, 12, |rng, case| {
+        let dir = std::env::temp_dir()
+            .join(format!("tune_prop_ckpt_{}_{case}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let keep = rng.range(1, 4) as usize;
+        let mut store = tune::checkpoint::CheckpointStore::new().with_disk(dir.clone());
+        store.keep_per_trial = keep;
+        let trials = rng.range(2, 6) as usize;
+        // Per-trial evolving state; sizes straddle the chunker's min
+        // and average chunk sizes so manifests have 0..n chunks.
+        let mut state: Vec<Vec<u8>> = (0..trials)
+            .map(|t| {
+                let len = rng.index(60_000);
+                (0..len).map(|i| (i as u64 * 31 + t as u64 * 7) as u8).collect()
+            })
+            .collect();
+        let mut iter = vec![0u64; trials];
+        // Shadow oracle: live checkpoint id -> expected payload bytes.
+        let mut shadow: std::collections::BTreeMap<u64, Vec<u8>> = Default::default();
+        let mut live: std::collections::BTreeMap<u64, Vec<u64>> = Default::default();
+
+        let mut save_current = |rng: &mut Rng,
+                                store: &mut tune::checkpoint::CheckpointStore,
+                                state: &mut [Vec<u8>],
+                                iter: &mut [u64],
+                                shadow: &mut std::collections::BTreeMap<u64, Vec<u8>>,
+                                live: &mut std::collections::BTreeMap<u64, Vec<u64>>| {
+            let t = rng.index(state.len());
+            mutate_blob(rng, &mut state[t]);
+            iter[t] += 1;
+            let id = store.save_timed(t as u64, iter[t], iter[t] as f64, state[t].clone());
+            shadow.insert(id, state[t].clone());
+            live.entry(t as u64).or_default().push(id);
+            mirror_gc(keep, live, shadow, t as u64);
+        };
+
+        for _ in 0..rng.range(20, 50) {
+            match rng.index(10) {
+                0..=4 => {
+                    save_current(rng, &mut store, &mut state, &mut iter, &mut shadow, &mut live)
+                }
+                5 | 6 => {
+                    // PBT exploit: clone the donor's latest checkpoint
+                    // into the target trial — must be a pure refcount
+                    // bump on the existing blob.
+                    let donor = rng.index(trials) as u64;
+                    if let Some(cid) = store.latest_for(donor) {
+                        let hits_before = store.stats().blob_dedup_hits;
+                        let blob = store.get(cid).expect("latest id must read back");
+                        let target = rng.index(trials);
+                        state[target] = blob.to_vec();
+                        iter[target] += 1;
+                        let id = store.save_timed(
+                            target as u64,
+                            iter[target],
+                            iter[target] as f64,
+                            blob,
+                        );
+                        assert_eq!(
+                            store.stats().blob_dedup_hits,
+                            hits_before + 1,
+                            "exploit clone did not dedup at the blob level"
+                        );
+                        shadow.insert(id, state[target].clone());
+                        live.entry(target as u64).or_default().push(id);
+                        mirror_gc(keep, &mut live, &mut shadow, target as u64);
+                    }
+                }
+                7 => {
+                    // Random live read must match the shadow bytes.
+                    if !shadow.is_empty() {
+                        let keys: Vec<u64> = shadow.keys().copied().collect();
+                        let id = *rng.choose(&keys);
+                        let got = store.get(id).expect("live id readable");
+                        assert_eq!(&got[..], &shadow[&id][..], "payload drift for id {id}");
+                    }
+                }
+                8 => {
+                    // Budget churn: evict resident chunk payloads to
+                    // disk, or lift the cap again.
+                    let budget =
+                        if rng.bool(0.3) { None } else { Some(rng.index(150_000)) };
+                    store.set_mem_budget(budget);
+                }
+                _ => {
+                    // GC'd / unknown ids must be gone, not half-alive.
+                    let id = rng.range(1, 1000) as u64;
+                    if !shadow.contains_key(&id) {
+                        assert!(store.get(id).is_none(), "dead id {id} still readable");
+                    }
+                }
+            }
+            store.debug_check_store();
+            assert_eq!(store.len(), shadow.len(), "live count drifted from oracle");
+        }
+
+        // Durability fold: base snapshot + a delta window of further
+        // ops must rebuild the identical store from disk.
+        let base = store.snapshot();
+        store.reset_delta_cursor();
+        for _ in 0..rng.range(1, 8) {
+            save_current(rng, &mut store, &mut state, &mut iter, &mut shadow, &mut live);
+            store.debug_check_store();
+        }
+        let delta = store.snapshot_delta();
+        let mut folded =
+            tune::checkpoint::CheckpointStore::restore_from(&base, &dir).expect("restore");
+        folded.apply_delta(&delta, &dir).expect("delta fold");
+        // Only after the fold is it safe to sweep: base-orphaned chunk
+        // files may belong to delta-added blobs. Folded == live, so the
+        // sweep must find nothing to delete.
+        assert_eq!(folded.sweep_orphan_chunks(), 0, "fold left orphan chunk files");
+        folded.debug_check_store();
+        assert_eq!(folded.len(), shadow.len());
+        for (id, bytes) in &shadow {
+            let got = folded.get(*id).expect("folded store lost a live id");
+            assert_eq!(&got[..], &bytes[..], "folded payload drift for id {id}");
+        }
+        assert_eq!(
+            folded.stats().physical_bytes,
+            store.stats().physical_bytes,
+            "dedup ratio did not survive the fold"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
