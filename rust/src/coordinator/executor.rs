@@ -31,8 +31,28 @@
 //! poisoning shared state and cascading `lock().unwrap()` panics
 //! through the coordinator.
 
+// The unwraps here are deliberate — lock poisoning is unrecoverable, and
+// the rest guard build-time-validated invariants. The file opts out of the
+// workspace `-D clippy::unwrap_used` gate; lint.toml's panic budgets still
+// cap the hot-path files.
+#![allow(clippy::unwrap_used)]
+
+// Two lint.toml file-level exemptions apply here, justified once for
+// the whole file:
+//
+// lint:allow(clock): the ThreadExecutor/PoolExecutor/SharedPool halves
+// of this file ARE the wall-clock substrate — `started: Instant` and
+// recv deadlines are their contract. SimExecutor never reads a clock.
+//
+// lint:allow(hash_container): the remaining HashMaps (SimExecutor
+// live/epoch, PoolState slots/epochs, WorkerFleet assigned) are keyed
+// lookups that are never iterated on fingerprint-bearing paths; the
+// generic pool key is `Hash`, not `Ord`, so BTreeMap cannot replace
+// them. Everything iterated (ThreadExecutor workers, Router buffers)
+// is a BTreeMap.
+
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -163,27 +183,12 @@ fn step_contained(t: &mut Box<dyn Trainable>) -> Result<StepOutput, String> {
 // Discrete-event executor
 // ---------------------------------------------------------------------------
 
-/// f64 ordered for the completion heap. Times are finite by
-/// construction (step costs are clamped positive), but the order is
-/// total anyway — NaN sorts first — so a pathological `step_cost` can
-/// never panic the queue.
-struct F64Ord(f64);
-impl PartialEq for F64Ord {
-    fn eq(&self, other: &Self) -> bool {
-        self.cmp(other) == std::cmp::Ordering::Equal
-    }
-}
-impl Eq for F64Ord {}
-impl PartialOrd for F64Ord {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for F64Ord {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        crate::util::order::asc(self.0, other.0)
-    }
-}
+// Completion times are ordered with `util::order::OrdF64` — finite by
+// construction (step costs are clamped positive), but the order is
+// total anyway, NaN sorting first, so a pathological `step_cost` can
+// never panic the queue. One lawful float Ord lives in this codebase;
+// tune-lint's `nan` rule keeps it that way.
+use crate::util::order::OrdF64;
 
 /// Discrete-event executor: virtual clock ordered by `step_cost`.
 pub struct SimExecutor {
@@ -191,7 +196,7 @@ pub struct SimExecutor {
     now: f64,
     seq: u64,
     /// (completion time, seq, trial, launch epoch).
-    queue: BinaryHeap<Reverse<(F64Ord, u64, TrialId, u64)>>,
+    queue: BinaryHeap<Reverse<(OrdF64, u64, TrialId, u64)>>,
     live: HashMap<TrialId, Box<dyn Trainable>>,
     /// Launch generation per trial id. A halt + relaunch of the same id
     /// bumps it, so stale queue entries from a previous incarnation are
@@ -231,12 +236,12 @@ impl Executor for SimExecutor {
             let done_at = self.now + t.step_cost().max(1e-9);
             self.seq += 1;
             let epoch = self.epoch.get(&id).copied().unwrap_or(0);
-            self.queue.push(Reverse((F64Ord(done_at), self.seq, id, epoch)));
+            self.queue.push(Reverse((OrdF64(done_at), self.seq, id, epoch)));
         }
     }
 
     fn next_event(&mut self) -> Option<ExecEvent> {
-        while let Some(Reverse((F64Ord(at), _, id, epoch))) = self.queue.pop() {
+        while let Some(Reverse((OrdF64(at), _, id, epoch))) = self.queue.pop() {
             // Halted (or halted-then-relaunched) trials leave stale queue
             // entries; skip anything from a previous launch epoch.
             if self.epoch.get(&id).copied().unwrap_or(0) != epoch {
@@ -296,7 +301,9 @@ struct Worker {
 /// process-per-trial model, in-process).
 pub struct ThreadExecutor {
     factory: TrainableFactory,
-    workers: HashMap<TrialId, Worker>,
+    /// BTreeMap so the halt sweep in `Drop` walks trials in id order —
+    /// shutdown is deterministic, not hash-order.
+    workers: BTreeMap<TrialId, Worker>,
     event_tx: Sender<ExecEvent>,
     event_rx: Receiver<ExecEvent>,
     started: Instant,
@@ -308,7 +315,7 @@ impl ThreadExecutor {
         let (event_tx, event_rx) = mpsc::channel();
         ThreadExecutor {
             factory,
-            workers: HashMap::new(),
+            workers: BTreeMap::new(),
             event_tx,
             event_rx,
             started: Instant::now(),
@@ -623,6 +630,7 @@ impl<K: PoolKey> PoolShared<K> {
             .lock()
             .unwrap()
             .slots
+            // lint:allow(hash_iteration): order-insensitive count; PoolKey is Hash, not Ord
             .iter()
             .filter(|&(k, s)| pred(k) && !matches!(s, Slot::Halted))
             .count()
@@ -907,9 +915,13 @@ pub(crate) enum PoolPoll {
 /// channel are credited to the owning experiment, and those destined
 /// for a handle other than the caller are buffered until that
 /// experiment is driven.
+/// Both maps are BTreeMaps: `pop_any` scans buffers in key order, so
+/// which experiment's event a `drive_any` wakes on is a deterministic
+/// function of the buffered state, not of sip hashing. (Per-experiment
+/// fingerprints never see this order, but hub-level traces do.)
 struct Router {
-    buffers: HashMap<ExpId, VecDeque<ExecEvent>>,
-    queued: HashMap<ExpId, usize>,
+    buffers: BTreeMap<ExpId, VecDeque<ExecEvent>>,
+    queued: BTreeMap<ExpId, usize>,
     total_queued: usize,
 }
 
@@ -1021,8 +1033,8 @@ impl SharedPool {
             injector_tx: Mutex::new(Some(injector_tx)),
             event_rx: Mutex::new(event_rx),
             router: Mutex::new(Router {
-                buffers: HashMap::new(),
-                queued: HashMap::new(),
+                buffers: BTreeMap::new(),
+                queued: BTreeMap::new(),
                 total_queued: 0,
             }),
             fleet: Mutex::new(fleet),

@@ -389,12 +389,14 @@ impl ExperimentHub {
     /// in a loop, interleaving control-plane work (queue ingestion,
     /// status publication) between slices.
     pub fn run_for(&mut self, budget: Duration) -> bool {
+        // lint:allow(clock): run_for slices real wall time by contract with the serve loop
         let deadline = Instant::now() + budget;
         self.pump_all();
         loop {
             if self.active_count() == 0 {
                 return false;
             }
+            // lint:allow(clock): same wall-clock deadline loop as above
             let now = Instant::now();
             if now >= deadline {
                 return true;

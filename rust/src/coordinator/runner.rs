@@ -9,6 +9,12 @@
 //! or restart-with-mutated-config. Checkpoints provide fault tolerance
 //! (trial metadata itself stays in memory, per the paper).
 
+// The unwraps here are deliberate — lock poisoning is unrecoverable, and
+// the rest guard build-time-validated invariants. The file opts out of the
+// workspace `-D clippy::unwrap_used` gate; lint.toml's panic budgets still
+// cap the hot-path files.
+#![allow(clippy::unwrap_used)]
+
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
@@ -988,6 +994,7 @@ impl TrialRunner {
         }
 
         let decision = {
+            // lint:allow(clock): perf counter (decision_ns); never feeds trial state
             let t0 = std::time::Instant::now();
             let ctx = SchedulerCtx {
                 trials: self.trials.map(),
@@ -1703,6 +1710,7 @@ impl TrialRunner {
             return None;
         }
         let event = self.executor.next_event();
+        // lint:allow(clock): perf counter (handling_ns); never feeds trial state
         let t0 = std::time::Instant::now();
         match event {
             Some(ev) => self.dispatch(ev),
@@ -1816,6 +1824,7 @@ impl TrialRunner {
     /// fault ticks, snapshot cadence). The hub follows up with
     /// [`Self::hub_pump`] to re-admit and detect completion.
     pub(crate) fn hub_handle_event(&mut self, event: ExecEvent) {
+        // lint:allow(clock): perf counter (handling_ns); never feeds trial state
         let t0 = std::time::Instant::now();
         self.dispatch(event);
         self.stats.handling_ns += t0.elapsed().as_nanos() as u64;

@@ -25,6 +25,12 @@
 //! (they continue instead of being judged against laggards) and to
 //! long-dead trials no longer dragging every later median.
 
+// The unwraps here are deliberate — lock poisoning is unrecoverable, and
+// the rest guard build-time-validated invariants. The file opts out of the
+// workspace `-D clippy::unwrap_used` gate; lint.toml's panic budgets still
+// cap the hot-path files.
+#![allow(clippy::unwrap_used)]
+
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 

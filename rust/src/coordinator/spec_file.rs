@@ -32,6 +32,12 @@
 //! "node_gpus": 4, "scale_up_after": 4, "scale_down_after": 200,
 //! "scale_down_util": 0.1, "min_nodes": 1}}`).
 
+// The unwraps here are deliberate — lock poisoning is unrecoverable, and
+// the rest guard build-time-validated invariants. The file opts out of the
+// workspace `-D clippy::unwrap_used` gate; lint.toml's panic budgets still
+// cap the hot-path files.
+#![allow(clippy::unwrap_used)]
+
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::ray::{AutoscalePolicy, Cluster, Resources};

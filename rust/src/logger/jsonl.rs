@@ -126,6 +126,9 @@ impl JsonlLogger {
     /// trial, so the header's local buffer allocation is fine). `None`
     /// when the file cannot be created — warned once, rows dropped.
     fn open_writer(dir: &std::path::Path, append: bool, trial: &Trial) -> Option<BufWriter<File>> {
+        // lint:allow(durability): trial logs are append-only JSONL streams — torn
+        // tails are expected and skipped by the resume scanner; routing them
+        // through write_atomic would mean rewriting the whole log per row.
         let path = dir.join(format!("trial_{:04}.jsonl", trial.id));
         // Resume mode reopens a surviving log in append position (its
         // header is already on disk); everything else starts fresh.
@@ -227,7 +230,10 @@ impl ResultLogger for JsonlLogger {
             let _ = write!(out, ",\"mutations\":{}}}", t.mutations);
         }
         out.push(']');
-        std::fs::write(self.dir.join("experiment.json"), out).ok();
+        // The end-of-run summary is a real recovery artifact: write it
+        // atomically so a crash mid-write can never leave a torn
+        // experiment.json next to intact trial logs.
+        crate::coordinator::persist::write_atomic(&self.dir.join("experiment.json"), &out).ok();
     }
 }
 

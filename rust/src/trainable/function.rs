@@ -28,6 +28,12 @@
 //! executors ("Tune inserts adapters over the cooperative interface to
 //! provide a facade of direct control to trial schedulers").
 
+// The unwraps here are deliberate — lock poisoning is unrecoverable, and
+// the rest guard build-time-validated invariants. The file opts out of the
+// workspace `-D clippy::unwrap_used` gate; lint.toml's panic budgets still
+// cap the hot-path files.
+#![allow(clippy::unwrap_used)]
+
 use std::collections::BTreeMap;
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 use std::sync::{mpsc, Arc, Mutex};

@@ -7,6 +7,12 @@
 //! executable each step (so PBT can mutate them mid-training);
 //! `activation` / `model` select the compiled variant.
 
+// The unwraps here are deliberate — lock poisoning is unrecoverable, and
+// the rest guard build-time-validated invariants. The file opts out of the
+// workspace `-D clippy::unwrap_used` gate; lint.toml's panic budgets still
+// cap the hot-path files.
+#![allow(clippy::unwrap_used)]
+
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::coordinator::trial::Config;

@@ -5,6 +5,12 @@
 //! exactly this kind of simulated workload; DESIGN.md documents the
 //! substitution (C1/C2).
 
+// The unwraps here are deliberate — lock poisoning is unrecoverable, and
+// the rest guard build-time-validated invariants. The file opts out of the
+// workspace `-D clippy::unwrap_used` gate; lint.toml's panic budgets still
+// cap the hot-path files.
+#![allow(clippy::unwrap_used)]
+
 use crate::coordinator::trial::Config;
 use crate::util::rng::Rng;
 

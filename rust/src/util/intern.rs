@@ -26,6 +26,8 @@ pub type MetricId = u32;
 #[derive(Clone, Debug, Default)]
 pub struct MetricSchema {
     names: Vec<String>,
+    /// lint:allow(hash_container): keyed lookup only, never iterated —
+    /// enumeration order comes from `names`, which is insertion-ordered.
     index: HashMap<String, MetricId>,
 }
 

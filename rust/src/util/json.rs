@@ -6,6 +6,12 @@
 //! held as f64 (all our payloads — shapes, metrics, counts — fit
 //! losslessly below 2^53).
 
+// The unwraps here are deliberate — lock poisoning is unrecoverable, and
+// the rest guard build-time-validated invariants. The file opts out of the
+// workspace `-D clippy::unwrap_used` gate; lint.toml's panic budgets still
+// cap the hot-path files.
+#![allow(clippy::unwrap_used)]
+
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 

@@ -1,0 +1,8 @@
+//! Clean: a wall-clock read excused by a justified site directive.
+
+use std::time::Instant;
+
+pub fn heartbeat_probe() -> Instant {
+    // lint:allow(clock): worker heartbeat timestamps real elapsed time, not sim time
+    Instant::now()
+}

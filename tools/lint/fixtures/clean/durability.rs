@@ -1,0 +1,6 @@
+//! Clean: persistence goes through the atomic writer, never through
+//! direct file creation.
+
+pub fn save(path: &std::path::Path, text: &str) -> std::io::Result<()> {
+    crate::coordinator::persist::write_atomic(path, text)
+}

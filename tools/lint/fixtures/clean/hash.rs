@@ -1,0 +1,21 @@
+//! Clean: in iteration scope, a hash map used for keyed lookup only,
+//! plus one iteration excused by a justified site directive.
+
+use std::collections::HashMap;
+
+pub struct Index {
+    by_id: HashMap<u64, String>,
+}
+
+impl Index {
+    pub fn lookup(&self, id: u64) -> Option<&String> {
+        self.by_id.get(&id)
+    }
+
+    pub fn shutdown_ids(&self) -> Vec<u64> {
+        // lint:allow(hash_iteration): shutdown snapshot is sorted below, order never escapes
+        let mut ids: Vec<u64> = self.by_id.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+}

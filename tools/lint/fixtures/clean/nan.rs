@@ -1,0 +1,8 @@
+//! Clean: float ordering routed through the order module, no raw
+//! comparisons anywhere.
+
+pub fn best(xs: &[f64]) -> Option<f64> {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| crate::util::order::asc(*a, *b));
+    sorted.last().copied()
+}

@@ -1,0 +1,33 @@
+//! Clean: this file IS the nan home — raw comparisons and the lawful
+//! Ord impl are allowed to live here (and only here).
+
+use std::cmp::Ordering;
+
+pub fn asc(a: f64, b: f64) -> Ordering {
+    match a.partial_cmp(&b) {
+        Some(o) => o,
+        None => a.is_nan().cmp(&b.is_nan()).reverse(),
+    }
+}
+
+pub struct OrdF64(pub f64);
+
+impl PartialEq for OrdF64 {
+    fn eq(&self, other: &Self) -> bool {
+        asc(self.0, other.0) == Ordering::Equal
+    }
+}
+
+impl Eq for OrdF64 {}
+
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(asc(self.0, other.0))
+    }
+}
+
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> Ordering {
+        asc(self.0, other.0)
+    }
+}

@@ -1,0 +1,20 @@
+//! Clean: exactly at the frozen panic budget (3) in non-test code;
+//! test-module unwraps do not count.
+
+pub fn run(lock: &std::sync::Mutex<u64>) -> u64 {
+    let a = lock.lock().unwrap();
+    let b = std::env::var("X").expect("X set by the harness");
+    let c: u64 = b.parse().unwrap();
+    *a + c
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn free_unwraps_in_tests() {
+        let v: Option<u64> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+        let w: Result<u64, ()> = Ok(2);
+        assert_eq!(w.expect("ok"), 2);
+    }
+}

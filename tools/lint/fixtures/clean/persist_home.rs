@@ -1,0 +1,22 @@
+//! Clean: this file IS the durability home — the raw file-creation
+//! primitives are its whole reason to exist.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+
+pub fn write_atomic(path: &std::path::Path, text: &str) -> std::io::Result<()> {
+    let tmp = path.with_extension("tmp");
+    let mut f = File::create(&tmp)?;
+    f.write_all(text.as_bytes())?;
+    f.sync_all()?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+pub fn append_handle(path: &std::path::Path) -> std::io::Result<File> {
+    OpenOptions::new().create(true).append(true).open(path)
+}
+
+pub fn overwrite(path: &std::path::Path, bytes: &[u8]) -> std::io::Result<()> {
+    std::fs::write(path, bytes)
+}

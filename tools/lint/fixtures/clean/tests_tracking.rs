@@ -1,0 +1,33 @@
+//! Clean: everything that LOOKS like a violation here is either inside
+//! a comment, a string literal, or test-only code — the lexer must see
+//! through all of it.
+
+/* A block comment mentioning fs::write and Instant::now() is inert.
+   /* Even when nested — partial_cmp, HashMap::new(), File::create. */
+   Still inside the outer comment. */
+
+pub const DOC: &str = "strings are opaque: Instant::now() fs::write partial_cmp";
+
+pub const RAW: &str = r#"raw strings too: SystemTime::now() "File::create" OpenOptions"#;
+
+pub fn lifetime_not_char<'a>(s: &'a str) -> &'a str {
+    s
+}
+
+#[cfg(test)]
+mod clocked {
+    use std::time::Instant;
+
+    #[test]
+    fn timing_in_tests_is_fine() {
+        let t = Instant::now();
+        std::fs::write("/tmp/scratch", "test artifacts may write directly").unwrap();
+        assert!(t.elapsed().as_secs() < 60);
+    }
+}
+
+mod tests {
+    pub fn bare_mod_tests_is_also_test_scope() {
+        let _ = std::time::SystemTime::now();
+    }
+}

@@ -1,0 +1,10 @@
+//! Violating: every way a lint:allow directive can itself be wrong.
+
+// lint:allow(clock)
+pub fn missing_reason() {}
+
+// lint:allow(made_up_rule): confidently excusing a rule that does not exist
+pub fn unknown_rule() {}
+
+// lint:allow(durability): justified, but there is nothing here to suppress
+pub fn stale_directive() {}

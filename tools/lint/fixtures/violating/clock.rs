@@ -1,0 +1,7 @@
+//! Violating: wall-clock reads in simulated-time code, no directive.
+
+use std::time::{Instant, SystemTime};
+
+pub fn stamp() -> (Instant, SystemTime) {
+    (Instant::now(), SystemTime::now())
+}

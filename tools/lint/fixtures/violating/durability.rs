@@ -1,0 +1,16 @@
+//! Violating: direct file creation in non-test code outside the
+//! durability home — a torn write waiting for a power cut.
+
+use std::fs::{File, OpenOptions};
+
+pub fn save(path: &std::path::Path, text: &str) -> std::io::Result<()> {
+    std::fs::write(path, text)
+}
+
+pub fn open_log(path: &std::path::Path) -> std::io::Result<File> {
+    OpenOptions::new().create(true).append(true).open(path)
+}
+
+pub fn truncate(path: &std::path::Path) -> std::io::Result<File> {
+    File::create(path)
+}

@@ -1,0 +1,9 @@
+//! Violating: hash containers named inside a fingerprint-sensitive
+//! module — iteration order would leak into fingerprints.
+
+use std::collections::{HashMap, HashSet};
+
+pub struct State {
+    pub live: HashMap<u64, u64>,
+    pub seen: HashSet<u64>,
+}

@@ -1,0 +1,26 @@
+//! Violating: iterating hash containers in an iteration-sensitive
+//! scope, in both method-call and for-in form.
+
+use std::collections::HashMap;
+
+pub struct Hub {
+    buffers: HashMap<u64, Vec<u64>>,
+}
+
+impl Hub {
+    pub fn drain_all(&mut self) -> Vec<u64> {
+        let mut out = Vec::new();
+        for (_, v) in &mut self.buffers {
+            out.extend(v.drain(..));
+        }
+        out
+    }
+}
+
+pub fn sum(counts: HashMap<String, u64>) -> u64 {
+    let mut total = 0;
+    for v in counts.values() {
+        total += v;
+    }
+    total
+}

@@ -1,0 +1,20 @@
+//! Violating: raw float comparison and a duplicate hand-rolled Ord
+//! impl outside the nan home.
+
+use std::cmp::Ordering;
+
+pub struct Wrapped(pub f64);
+
+impl PartialOrd for Wrapped {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        self.0.partial_cmp(&other.0)
+    }
+}
+
+pub fn pick(a: f64, b: f64) -> f64 {
+    if a.total_cmp(&b) == Ordering::Greater {
+        a
+    } else {
+        b
+    }
+}

@@ -1,0 +1,9 @@
+//! Violating: three non-test unwrap/expect calls against a frozen
+//! budget of two.
+
+pub fn run(lock: &std::sync::Mutex<u64>) -> u64 {
+    let a = lock.lock().unwrap();
+    let b = std::env::var("X").expect("X set by the harness");
+    let c: u64 = b.parse().unwrap();
+    *a + c
+}

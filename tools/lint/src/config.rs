@@ -1,0 +1,325 @@
+//! `lint.toml` loading — a deliberately tiny TOML subset.
+//!
+//! The configuration needs tables, arrays-of-tables, strings, integers
+//! and single-line string arrays; nothing else. The parser is strict:
+//! an unknown table or key is a hard error, so a typo in `lint.toml`
+//! fails the build instead of silently disabling a rule.
+
+use std::path::{Path, PathBuf};
+
+/// One file-level allowlist entry (`[[allow]]` in `lint.toml`).
+///
+/// A file-level entry suppresses every violation of `rule` in `file`,
+/// but only counts as justified if the file itself carries at least one
+/// `// lint:allow(rule): …` comment — the justification must live next
+/// to the code it excuses, not only in the config.
+#[derive(Clone, Debug)]
+pub struct FileAllow {
+    /// Rule being exempted (e.g. `hash_container`).
+    pub rule: String,
+    /// Root-relative file the exemption applies to.
+    pub file: String,
+    /// Why the exemption exists (config-side summary).
+    pub why: String,
+}
+
+/// Parsed linter configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Absolute directory the rules walk (`rust/src` in this repo).
+    pub root: PathBuf,
+    /// Files where raw float ordering is the point (util/order.rs).
+    pub nan_home: Vec<String>,
+    /// Files allowed to create/write files directly (persist.rs).
+    pub durability_home: Vec<String>,
+    /// Fingerprint-sensitive scopes where `HashMap`/`HashSet` are
+    /// banned outright. Entries ending in `/` are directory prefixes.
+    pub container_scopes: Vec<String>,
+    /// Scopes where *iterating* a hash container is banned.
+    pub iteration_scopes: Vec<String>,
+    /// Files whose business is the wall clock (util/bench.rs).
+    pub clock_home: Vec<String>,
+    /// Frozen per-file `unwrap()/expect()` budgets for hot-path files.
+    pub budgets: Vec<(String, usize)>,
+    /// File-level rule exemptions.
+    pub allows: Vec<FileAllow>,
+}
+
+impl Config {
+    /// An empty config rooted at `root` — the starting point tests use
+    /// to build configurations programmatically.
+    pub fn empty(root: PathBuf) -> Config {
+        Config {
+            root,
+            nan_home: Vec::new(),
+            durability_home: Vec::new(),
+            container_scopes: Vec::new(),
+            iteration_scopes: Vec::new(),
+            clock_home: Vec::new(),
+            budgets: Vec::new(),
+            allows: Vec::new(),
+        }
+    }
+
+    /// Load and parse `path`, resolving `root` relative to its parent
+    /// directory.
+    pub fn load(path: &Path) -> Result<Config, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let dir = path.parent().unwrap_or(Path::new("."));
+        Self::parse(&text, dir)
+    }
+
+    /// Parse config text; `config_dir` anchors the `root` key.
+    pub fn parse(text: &str, config_dir: &Path) -> Result<Config, String> {
+        let mut cfg = Config::empty(config_dir.to_path_buf());
+        let mut root_rel = String::from("rust/src");
+        let mut table = String::new();
+        for (ln, line) in logical_lines(text) {
+            if line.is_empty() {
+                continue;
+            }
+            let line = line.as_str();
+            if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+                let name = name.trim();
+                if name != "allow" {
+                    return Err(format!("lint.toml:{ln}: unknown array table [[{name}]]"));
+                }
+                cfg.allows.push(FileAllow {
+                    rule: String::new(),
+                    file: String::new(),
+                    why: String::new(),
+                });
+                table = "allow".into();
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                table = name.trim().to_string();
+                match table.as_str() {
+                    "nan" | "durability" | "determinism" | "clock" | "panic_budget"
+                    | "panic_budget.budgets" => {}
+                    other => return Err(format!("lint.toml:{ln}: unknown table [{other}]")),
+                }
+                continue;
+            }
+            let (key, val) = split_key_value(&line)
+                .ok_or_else(|| format!("lint.toml:{ln}: expected `key = value`"))?;
+            match (table.as_str(), key.as_str()) {
+                ("", "root") => root_rel = val.as_str(ln)?,
+                ("nan", "home") => cfg.nan_home = val.as_str_array(ln)?,
+                ("durability", "home") => cfg.durability_home = val.as_str_array(ln)?,
+                ("determinism", "container_scopes") => {
+                    cfg.container_scopes = val.as_str_array(ln)?
+                }
+                ("determinism", "iteration_scopes") => {
+                    cfg.iteration_scopes = val.as_str_array(ln)?
+                }
+                ("clock", "home") => cfg.clock_home = val.as_str_array(ln)?,
+                ("panic_budget.budgets", file) => {
+                    cfg.budgets.push((file.to_string(), val.as_int(ln)?))
+                }
+                ("allow", field) => {
+                    let entry = cfg
+                        .allows
+                        .last_mut()
+                        .ok_or_else(|| format!("lint.toml:{ln}: key outside [[allow]]"))?;
+                    match field {
+                        "rule" => entry.rule = val.as_str(ln)?,
+                        "file" => entry.file = val.as_str(ln)?,
+                        "why" => entry.why = val.as_str(ln)?,
+                        other => {
+                            return Err(format!("lint.toml:{ln}: unknown allow key `{other}`"))
+                        }
+                    }
+                }
+                (t, k) => return Err(format!("lint.toml:{ln}: unknown key `{k}` in [{t}]")),
+            }
+        }
+        cfg.root = config_dir.join(root_rel);
+        Ok(cfg)
+    }
+}
+
+/// Raw right-hand-side value before typing.
+struct Value(String);
+
+impl Value {
+    fn as_str(&self, ln: usize) -> Result<String, String> {
+        unquote(self.0.trim())
+            .ok_or_else(|| format!("lint.toml:{ln}: expected a quoted string, got `{}`", self.0))
+    }
+
+    fn as_int(&self, ln: usize) -> Result<usize, String> {
+        self.0
+            .trim()
+            .parse::<usize>()
+            .map_err(|_| format!("lint.toml:{ln}: expected an integer, got `{}`", self.0))
+    }
+
+    fn as_str_array(&self, ln: usize) -> Result<Vec<String>, String> {
+        let t = self.0.trim();
+        let inner = t
+            .strip_prefix('[')
+            .and_then(|s| s.strip_suffix(']'))
+            .ok_or_else(|| format!("lint.toml:{ln}: expected a single-line string array"))?;
+        let mut out = Vec::new();
+        for part in split_top_level_commas(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            out.push(unquote(part).ok_or_else(|| {
+                format!("lint.toml:{ln}: expected quoted strings in array, got `{part}`")
+            })?);
+        }
+        Ok(out)
+    }
+}
+
+/// Comment-strip and trim each physical line, joining continuation
+/// lines of a multi-line `[...]` value (bracket depth counted outside
+/// quotes) into one logical line tagged with its starting line number.
+fn logical_lines(text: &str) -> Vec<(usize, String)> {
+    let mut out: Vec<(usize, String)> = Vec::new();
+    let mut depth: i32 = 0;
+    for (ln0, raw) in text.lines().enumerate() {
+        let piece = strip_comment(raw).trim().to_string();
+        if depth > 0 {
+            if let Some((_, cur)) = out.last_mut() {
+                cur.push(' ');
+                cur.push_str(&piece);
+            }
+        } else {
+            out.push((ln0 + 1, piece));
+        }
+        let mut in_str = false;
+        for c in strip_comment(raw).chars() {
+            match c {
+                '"' => in_str = !in_str,
+                '[' if !in_str => depth += 1,
+                ']' if !in_str => depth -= 1,
+                _ => {}
+            }
+        }
+        depth = depth.max(0);
+    }
+    out
+}
+
+/// Strip a `#` comment, honoring quotes.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Split `key = value` at the first `=` outside quotes; the key may be
+/// bare or quoted (`"coordinator/runner.rs" = 12`).
+fn split_key_value(line: &str) -> Option<(String, Value)> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => {
+                let key_raw = line[..i].trim();
+                let key = unquote(key_raw).unwrap_or_else(|| key_raw.to_string());
+                return Some((key, Value(line[i + 1..].to_string())));
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn unquote(s: &str) -> Option<String> {
+    s.strip_prefix('"')?.strip_suffix('"').map(|inner| inner.to_string())
+}
+
+fn split_top_level_commas(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# comment
+root = "rust/src"
+
+[nan]
+home = ["util/order.rs"]
+
+[determinism]
+container_scopes = ["coordinator/runner.rs", "ray/"]
+iteration_scopes = ["coordinator/", "ray/"]
+
+[panic_budget.budgets]
+"coordinator/runner.rs" = 15
+
+[[allow]]
+rule = "clock"
+file = "coordinator/executor.rs"
+why = "wall-clock substrates"
+"#;
+
+    #[test]
+    fn parses_the_full_shape() {
+        let cfg = Config::parse(SAMPLE, Path::new("/repo")).expect("parse");
+        assert_eq!(cfg.root, PathBuf::from("/repo/rust/src"));
+        assert_eq!(cfg.nan_home, vec!["util/order.rs"]);
+        assert_eq!(cfg.container_scopes, vec!["coordinator/runner.rs", "ray/"]);
+        assert_eq!(cfg.budgets, vec![("coordinator/runner.rs".to_string(), 15)]);
+        assert_eq!(cfg.allows.len(), 1);
+        assert_eq!(cfg.allows[0].rule, "clock");
+        assert_eq!(cfg.allows[0].file, "coordinator/executor.rs");
+        assert_eq!(cfg.allows[0].why, "wall-clock substrates");
+    }
+
+    #[test]
+    fn unknown_table_and_key_are_hard_errors() {
+        assert!(Config::parse("[nope]\n", Path::new(".")).is_err());
+        assert!(Config::parse("[nan]\nhom = [\"x\"]\n", Path::new(".")).is_err());
+        assert!(Config::parse("[[allows]]\n", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn multiline_arrays_join_into_one_logical_line() {
+        let cfg = Config::parse(
+            "[determinism]\ncontainer_scopes = [\n  \"a.rs\", # inline comment\n  \"b/\",\n]\n",
+            Path::new("."),
+        )
+        .expect("parse");
+        assert_eq!(cfg.container_scopes, vec!["a.rs", "b/"]);
+    }
+
+    #[test]
+    fn quoted_keys_and_hash_in_strings() {
+        let cfg = Config::parse(
+            "[panic_budget.budgets]\n\"a/b.rs\" = 3 # trailing comment\n",
+            Path::new("."),
+        )
+        .expect("parse");
+        assert_eq!(cfg.budgets, vec![("a/b.rs".to_string(), 3)]);
+    }
+}

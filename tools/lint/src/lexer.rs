@@ -1,0 +1,540 @@
+//! A lightweight Rust lexer: just enough structure for invariant rules.
+//!
+//! This is not a parser. It produces a flat token stream with three
+//! properties the rules need and plain `grep` cannot deliver:
+//!
+//! * **Literals and comments are opaque** — `"Instant::now"` inside a
+//!   string, a doc example, or a nested block comment never matches a
+//!   rule. Normal, byte, C and raw strings (`r#"…"#` with any hash
+//!   count) are handled, and `'a'` char literals are distinguished from
+//!   `'a` lifetimes.
+//! * **Test code is marked** — tokens inside a `#[cfg(test)]` item (of
+//!   any shape: module, function, `use`) or an unattributed inline
+//!   `mod tests { … }` carry `in_test = true`, so every rule can exempt
+//!   test code without a parallel source layout.
+//! * **`lint:allow` directives survive** — comments are stripped from
+//!   the token stream, but `// lint:allow(rule): justification`
+//!   directives found inside them are collected with their line, rule
+//!   name and justification text for the suppression machinery.
+
+/// Kind of one lexed token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fs`, `impl`, `for`, …).
+    Ident,
+    /// A single punctuation byte (`::` is two `:` tokens).
+    Punct,
+    /// Any literal — string/char/number — with its text blanked.
+    Literal,
+    /// A lifetime (`'a`); kept distinct so it never reads as a char.
+    Lifetime,
+}
+
+/// One token with its 1-based source line and test-code marker.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    /// 1-based line the token starts on.
+    pub line: u32,
+    /// Token class.
+    pub kind: TokKind,
+    /// Identifier/punct text; empty for literals.
+    pub text: String,
+    /// True when the token sits inside `#[cfg(test)]` or `mod tests`.
+    pub in_test: bool,
+}
+
+impl Tok {
+    /// True when this token is the identifier `s`.
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    /// True when this token is the punctuation `s`.
+    pub fn is_punct(&self, s: &str) -> bool {
+        self.kind == TokKind::Punct && self.text == s
+    }
+}
+
+/// An in-source `lint:allow(rule): justification` directive.
+#[derive(Clone, Debug)]
+pub struct Directive {
+    /// Line the directive text appears on (not the comment start).
+    pub line: u32,
+    /// Rule name between the parentheses (may be empty if malformed).
+    pub rule: String,
+    /// Justification after the trailing colon; empty when missing.
+    pub reason: String,
+}
+
+/// Lexed view of one source file.
+#[derive(Debug, Default)]
+pub struct LexFile {
+    /// The comment- and literal-stripped token stream.
+    pub toks: Vec<Tok>,
+    /// Every `lint:allow` directive found in comments.
+    pub directives: Vec<Directive>,
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphabetic() || c >= 0x80
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    is_ident_start(c) || c.is_ascii_digit()
+}
+
+/// Collect `lint:allow(rule): reason` directives out of comment text.
+/// `start_line` is the line the comment text begins on; embedded
+/// newlines (block comments) offset the recorded directive line.
+fn scan_directives(text: &str, start_line: u32, out: &mut Vec<Directive>) {
+    const NEEDLE: &str = "lint:allow(";
+    let mut pos = 0;
+    while let Some(off) = text[pos..].find(NEEDLE) {
+        let idx = pos + off;
+        let line = start_line + text[..idx].bytes().filter(|&b| b == b'\n').count() as u32;
+        let after = &text[idx + NEEDLE.len()..];
+        match after.find(')') {
+            None => out.push(Directive { line, rule: String::new(), reason: String::new() }),
+            Some(close) => {
+                let rule = after[..close].trim().to_string();
+                let rest = &after[close + 1..];
+                let reason = match rest.strip_prefix(':') {
+                    None => String::new(),
+                    Some(tail) => {
+                        let seg = tail.split('\n').next().unwrap_or("");
+                        // A block-comment terminator on the same line is
+                        // not part of the justification.
+                        seg.replace("*/", " ").trim().to_string()
+                    }
+                };
+                out.push(Directive { line, rule, reason });
+            }
+        }
+        pos = idx + 1;
+    }
+}
+
+/// Consume a `"…"` string body starting at the opening quote; returns
+/// the index past the closing quote, updating the line counter.
+fn skip_string(b: &[u8], mut i: usize, line: &mut u32) -> usize {
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => {
+                if i + 1 < b.len() && b[i + 1] == b'\n' {
+                    *line += 1;
+                }
+                i += 2;
+            }
+            b'\n' => {
+                *line += 1;
+                i += 1;
+            }
+            b'"' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Lex one source file. Never fails: unterminated constructs are
+/// consumed to end-of-file (a linter must not panic on weird input).
+pub fn lex(src: &str) -> LexFile {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut directives: Vec<Directive> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let lit = |line: u32| Tok { line, kind: TokKind::Literal, text: String::new(), in_test: false };
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let start = i;
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            scan_directives(&src[start..i], line, &mut directives);
+            continue;
+        }
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let (start, start_line) = (i, line);
+            let mut depth = 1u32;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            scan_directives(&src[start..i], start_line, &mut directives);
+            continue;
+        }
+        if c == b'"' {
+            i = skip_string(b, i, &mut line);
+            toks.push(lit(line));
+            continue;
+        }
+        if c == b'\'' {
+            if i + 1 < n && b[i + 1] == b'\\' {
+                // Escaped char literal: scan to the closing quote.
+                i += 2;
+                while i < n && b[i] != b'\'' {
+                    i += 1;
+                }
+                i += 1;
+                toks.push(lit(line));
+            } else if i + 2 < n && b[i + 2] == b'\'' && b[i + 1] != b'\'' {
+                i += 3;
+                toks.push(lit(line));
+            } else {
+                // Lifetime: tick + identifier.
+                i += 1;
+                let s = i;
+                while i < n && is_ident_cont(b[i]) {
+                    i += 1;
+                }
+                toks.push(Tok {
+                    line,
+                    kind: TokKind::Lifetime,
+                    text: src[s..i].to_string(),
+                    in_test: false,
+                });
+            }
+            continue;
+        }
+        if is_ident_start(c) {
+            let s = i;
+            while i < n && is_ident_cont(b[i]) {
+                i += 1;
+            }
+            let word = &src[s..i];
+            // Raw / byte / C string prefixes and raw identifiers.
+            if matches!(word, "r" | "br" | "cr") && i < n && (b[i] == b'"' || b[i] == b'#') {
+                let mut h = 0usize;
+                let mut j = i;
+                while j < n && b[j] == b'#' {
+                    h += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == b'"' {
+                    // Raw string with `h` hashes: find `"` + h hashes.
+                    j += 1;
+                    let closer: Vec<u8> =
+                        std::iter::once(b'"').chain(std::iter::repeat(b'#').take(h)).collect();
+                    let end = find_sub(&b[j..], &closer).map(|off| j + off).unwrap_or(n);
+                    line += b[i..end.min(n)].iter().filter(|&&x| x == b'\n').count() as u32;
+                    i = (end + closer.len()).min(n);
+                    toks.push(lit(line));
+                    continue;
+                }
+                if word == "r" && h >= 1 {
+                    // Raw identifier r#foo: token is the bare name.
+                    i += 1;
+                    let s2 = i;
+                    while i < n && is_ident_cont(b[i]) {
+                        i += 1;
+                    }
+                    toks.push(Tok {
+                        line,
+                        kind: TokKind::Ident,
+                        text: src[s2..i].to_string(),
+                        in_test: false,
+                    });
+                    continue;
+                }
+            }
+            if matches!(word, "b" | "c") && i < n && b[i] == b'"' {
+                i = skip_string(b, i, &mut line);
+                toks.push(lit(line));
+                continue;
+            }
+            if word == "b" && i < n && b[i] == b'\'' {
+                i += 1;
+                if i < n && b[i] == b'\\' {
+                    i += 1;
+                    while i < n && b[i] != b'\'' {
+                        i += 1;
+                    }
+                    i += 1;
+                } else {
+                    i = (i + 2).min(n);
+                }
+                toks.push(lit(line));
+                continue;
+            }
+            toks.push(Tok { line, kind: TokKind::Ident, text: word.to_string(), in_test: false });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            while i < n && is_ident_cont(b[i]) {
+                i += 1;
+            }
+            // `1.5` continues the number; `0..8` does not.
+            if i + 1 < n && b[i] == b'.' && b[i + 1].is_ascii_digit() {
+                i += 1;
+                while i < n && is_ident_cont(b[i]) {
+                    i += 1;
+                }
+            }
+            toks.push(lit(line));
+            continue;
+        }
+        toks.push(Tok {
+            line,
+            kind: TokKind::Punct,
+            text: (c as char).to_string(),
+            in_test: false,
+        });
+        i += 1;
+    }
+    mark_tests(&mut toks);
+    LexFile { toks, directives }
+}
+
+fn find_sub(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    if needle.is_empty() || haystack.len() < needle.len() {
+        return None;
+    }
+    (0..=haystack.len() - needle.len()).find(|&k| &haystack[k..k + needle.len()] == needle)
+}
+
+/// True when the attribute token slice contains the exact sequence
+/// `cfg ( test )` (the canonical `#[cfg(test)]` form; `any`/`all`
+/// compositions are deliberately not recognized — the repo does not use
+/// them, and guessing wrong would silently exempt real code).
+fn attr_is_cfg_test(attr: &[Tok]) -> bool {
+    attr.windows(4).any(|w| {
+        w[0].is_ident("cfg") && w[1].is_punct("(") && w[2].is_ident("test") && w[3].is_punct(")")
+    })
+}
+
+/// Second pass: mark tokens inside test-only regions. Tracks brace
+/// depth; a `#[cfg(test)]` outer attribute arms a pending marker that
+/// claims the next `{ … }` block (or is discharged by a `;` for
+/// body-less items), and an unattributed inline `mod tests {` block is
+/// claimed the same way. `#![cfg(test)]` at file scope marks the whole
+/// file.
+fn mark_tests(toks: &mut [Tok]) {
+    let n = toks.len();
+    let mut depth: i64 = 0;
+    let mut stack: Vec<i64> = Vec::new();
+    let mut pending = false;
+    let mut i = 0usize;
+    while i < n {
+        if toks[i].is_punct("#") && i + 1 < n {
+            let j = if toks[i + 1].is_punct("!") { i + 2 } else { i + 1 };
+            let inner = j == i + 2;
+            if j < n && toks[j].is_punct("[") {
+                let mut d = 0i64;
+                let mut k = j;
+                while k < n {
+                    if toks[k].is_punct("[") {
+                        d += 1;
+                    } else if toks[k].is_punct("]") {
+                        d -= 1;
+                        if d == 0 {
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                let k = k.min(n - 1);
+                let is_test = attr_is_cfg_test(&toks[j..=k]);
+                let in_t = !stack.is_empty();
+                for t in &mut toks[i..=k] {
+                    t.in_test = in_t;
+                }
+                if is_test {
+                    if inner && depth == 0 {
+                        // `#![cfg(test)]`: the entire file is test code.
+                        stack.push(-1);
+                    } else if !inner {
+                        pending = true;
+                    }
+                }
+                i = k + 1;
+                continue;
+            }
+        }
+        if toks[i].is_punct("{") {
+            depth += 1;
+            if pending {
+                stack.push(depth - 1);
+                pending = false;
+            }
+            toks[i].in_test = !stack.is_empty();
+        } else if toks[i].is_punct("}") {
+            depth -= 1;
+            toks[i].in_test = !stack.is_empty();
+            if stack.last() == Some(&depth) {
+                stack.pop();
+            }
+        } else if toks[i].is_punct(";") && pending {
+            // `#[cfg(test)] use …;` — no block to claim.
+            pending = false;
+            toks[i].in_test = !stack.is_empty();
+        } else if toks[i].is_ident("mod")
+            && i + 1 < n
+            && toks[i + 1].is_ident("tests")
+            && stack.is_empty()
+        {
+            pending = true;
+            toks[i].in_test = false;
+        } else {
+            toks[i].in_test = !stack.is_empty();
+        }
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(lf: &LexFile) -> Vec<(&str, bool)> {
+        lf.toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| (t.text.as_str(), t.in_test))
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_opaque() {
+        let lf = lex(concat!(
+            "let s = \"Instant::now partial_cmp\";\n",
+            "// fs::write in a line comment\n",
+            "let c = 'x'; let esc = '\\n';\n",
+            "let r = r#\"OpenOptions \"quoted\" inside\"#;\n",
+            "let b = b\"File::create\";\n",
+            "call(real_ident);\n",
+        ));
+        let names: Vec<&str> = idents(&lf).iter().map(|(t, _)| *t).collect();
+        assert!(!names.contains(&"Instant"));
+        assert!(!names.contains(&"fs"));
+        assert!(!names.contains(&"OpenOptions"));
+        assert!(!names.contains(&"File"));
+        assert!(names.contains(&"real_ident"));
+    }
+
+    #[test]
+    fn nested_block_comments_strip_fully() {
+        let lf = lex("before /* outer /* inner Instant::now */ still comment */ after");
+        let names: Vec<&str> = idents(&lf).iter().map(|(t, _)| *t).collect();
+        assert_eq!(names, vec!["before", "after"]);
+    }
+
+    #[test]
+    fn lifetimes_do_not_eat_code() {
+        let lf = lex("fn f<'a>(x: &'a str) -> &'a str { x }");
+        let names: Vec<&str> = idents(&lf).iter().map(|(t, _)| *t).collect();
+        assert!(names.contains(&"str"));
+        assert!(lf.toks.iter().any(|t| t.kind == TokKind::Lifetime && t.text == "a"));
+    }
+
+    #[test]
+    fn raw_string_with_hashes_spans_quotes() {
+        let lf = lex("let s = r##\"one \"# two\"##; tail();");
+        let names: Vec<&str> = idents(&lf).iter().map(|(t, _)| *t).collect();
+        assert!(names.contains(&"tail"));
+        assert!(!names.contains(&"one"));
+    }
+
+    #[test]
+    fn cfg_test_inline_module_is_marked() {
+        let lf = lex(concat!(
+            "fn live() { touch(); }\n",
+            "#[cfg(test)]\n",
+            "mod checks {\n",
+            "    fn helper() { test_only(); }\n",
+            "}\n",
+            "fn live2() { touch2(); }\n",
+        ));
+        let m: Vec<(&str, bool)> = idents(&lf);
+        assert!(m.contains(&("touch", false)));
+        assert!(m.contains(&("test_only", true)));
+        assert!(m.contains(&("touch2", false)));
+    }
+
+    #[test]
+    fn bare_mod_tests_is_marked() {
+        let lf = lex("fn live() {}\nmod tests { fn t() { inside(); } }\nfn after() { out(); }");
+        let m = idents(&lf);
+        assert!(m.contains(&("inside", true)));
+        assert!(m.contains(&("out", false)));
+    }
+
+    #[test]
+    fn cfg_test_fn_and_attr_stacking() {
+        let lf = lex(concat!(
+            "#[cfg(test)]\n",
+            "#[allow(dead_code)]\n",
+            "fn probe() { test_only(); }\n",
+            "fn live() { outside(); }\n",
+            "#[cfg(test)]\n",
+            "use std::vec::Vec;\n",
+            "fn live2() { outside2(); }\n",
+        ));
+        let m = idents(&lf);
+        assert!(m.contains(&("test_only", true)));
+        assert!(m.contains(&("outside", false)));
+        assert!(m.contains(&("outside2", false)));
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_test_code() {
+        let lf = lex("#[cfg(not(test))]\nfn live() { touch(); }");
+        assert!(idents(&lf).contains(&("touch", false)));
+    }
+
+    #[test]
+    fn directives_parse_rule_and_reason() {
+        let lf = lex(concat!(
+            "let m = 1; // lint:allow(hash_container): keyed lookup only, never iterated\n",
+            "// lint:allow(clock)\n",
+            "/* lint:allow(durability): block form */\n",
+        ));
+        assert_eq!(lf.directives.len(), 3);
+        assert_eq!(lf.directives[0].line, 1);
+        assert_eq!(lf.directives[0].rule, "hash_container");
+        assert_eq!(lf.directives[0].reason, "keyed lookup only, never iterated");
+        assert_eq!(lf.directives[1].line, 2);
+        assert_eq!(lf.directives[1].rule, "clock");
+        assert_eq!(lf.directives[1].reason, "");
+        assert_eq!(lf.directives[2].rule, "durability");
+        assert_eq!(lf.directives[2].reason, "block form");
+    }
+
+    #[test]
+    fn directive_line_inside_multiline_block_comment() {
+        let lf = lex("/*\n  text\n  lint:allow(nan): deep in a block\n*/\n");
+        assert_eq!(lf.directives.len(), 1);
+        assert_eq!(lf.directives[0].line, 3);
+    }
+
+    #[test]
+    fn unterminated_constructs_do_not_panic() {
+        lex("let s = \"never closed");
+        lex("/* never closed");
+        lex("let r = r#\"never closed");
+        lex("'");
+    }
+}

@@ -1,0 +1,25 @@
+//! `tune-lint` — the repo-specific invariant linter.
+//!
+//! Seven PRs of this Tune reproduction accumulated coding disciplines
+//! that its headline guarantees rest on: NaN-total metric ordering
+//! through `util::order`, atomic persistence through
+//! `persist::write_atomic*`, deterministic (hash-free) iteration in
+//! fingerprinted modules, no wall clocks in the simulated path, and a
+//! frozen unwrap budget on hot-path files. This crate mechanizes those
+//! disciplines as a zero-dependency lexical pass over `rust/src/**`,
+//! configured by the checked-in `lint.toml`.
+//!
+//! Run it with `cargo run -p tune-lint` from the workspace root. It
+//! prints `file:line: rule — message` per violation and exits nonzero
+//! if any remain.
+
+#![warn(missing_docs)]
+#![forbid(unsafe_code)]
+
+pub mod config;
+pub mod lexer;
+pub mod rules;
+
+pub use config::{Config, FileAllow};
+pub use lexer::{lex, Directive, LexFile, Tok, TokKind};
+pub use rules::{lint_paths, lint_source, lint_tree, Report, Violation, KNOWN_RULES};

@@ -1,0 +1,84 @@
+//! CLI entry point for `tune-lint`.
+//!
+//! Usage:
+//!
+//! ```text
+//! tune-lint [--config PATH] [FILE ...]
+//! ```
+//!
+//! With no arguments, finds `lint.toml` by walking up from the current
+//! directory and lints the whole configured tree. With explicit FILE
+//! arguments, lints just those files under the same config (used by
+//! the fixture suite). Exit codes: 0 clean, 1 violations, 2 usage or
+//! I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use tune_lint::{lint_paths, lint_tree, Config};
+
+fn find_config() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let candidate = dir.join("lint.toml");
+        if candidate.is_file() {
+            return Some(candidate);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+fn run() -> Result<bool, String> {
+    let mut config_path: Option<PathBuf> = None;
+    let mut files: Vec<PathBuf> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--config" => {
+                let p = args.next().ok_or("--config needs a path")?;
+                config_path = Some(PathBuf::from(p));
+            }
+            "--help" | "-h" => {
+                println!("usage: tune-lint [--config PATH] [FILE ...]");
+                return Ok(true);
+            }
+            other if other.starts_with('-') => {
+                return Err(format!("unknown flag `{other}`"));
+            }
+            other => files.push(PathBuf::from(other)),
+        }
+    }
+    let config_path = match config_path.or_else(find_config) {
+        Some(p) => p,
+        None => return Err("no lint.toml found here or in any parent directory".into()),
+    };
+    let cfg = Config::load(&config_path)?;
+    let report =
+        if files.is_empty() { lint_tree(&cfg)? } else { lint_paths(&cfg, &files)? };
+    for v in &report.violations {
+        println!("{v}");
+    }
+    for n in &report.notes {
+        eprintln!("note: {n}");
+    }
+    if report.violations.is_empty() {
+        eprintln!("tune-lint: clean ({})", config_path.display());
+        Ok(true)
+    } else {
+        eprintln!("tune-lint: {} violation(s)", report.violations.len());
+        Ok(false)
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::from(0),
+        Ok(false) => ExitCode::from(1),
+        Err(e) => {
+            eprintln!("tune-lint: error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

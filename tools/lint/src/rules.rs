@@ -1,0 +1,624 @@
+//! The rule engine: five repo invariants plus the allow-discipline
+//! meta-rule, evaluated over the lexed token stream of each file.
+//!
+//! Every rule reports `file:line: rule — message`. Suppression happens
+//! at two levels:
+//!
+//! * **site** — a `// lint:allow(rule): reason` comment suppresses
+//!   same-rule violations on its own line and the line below it;
+//! * **file** — a `[[allow]]` entry in `lint.toml` suppresses the rule
+//!   for the whole file, but only if the file also carries at least
+//!   one in-source `lint:allow(rule)` justification comment.
+//!
+//! Directives themselves are checked: an unknown rule name, an empty
+//! reason, or a site directive that suppresses nothing is a violation
+//! (`allow_discipline`), so the allowlist can only shrink honestly.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use crate::config::Config;
+use crate::lexer::{lex, Tok, TokKind};
+
+/// Rule names a directive may reference.
+pub const KNOWN_RULES: [&str; 6] =
+    ["nan", "durability", "hash_container", "hash_iteration", "clock", "panic_budget"];
+
+/// Hash-container methods whose call observes iteration order.
+const ITER_METHODS: [&str; 10] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "retain",
+];
+
+/// One reported violation.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Violation {
+    /// Root-relative file (or `lint.toml` for config-side problems).
+    pub file: String,
+    /// 1-based line number.
+    pub line: u32,
+    /// Rule identifier (`nan`, `durability`, …, `allow_discipline`).
+    pub rule: &'static str,
+    /// Human-readable detail.
+    pub msg: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: {} — {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Violations plus advisory notes (budget slack) from one run.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    /// Hard failures; nonzero exit when non-empty.
+    pub violations: Vec<Violation>,
+    /// Advisory stderr notes that do not affect the exit code.
+    pub notes: Vec<String>,
+}
+
+/// Is `rel` covered by `scopes`? Entries ending in `/` are directory
+/// prefixes; everything else must match the whole path.
+fn in_scope(rel: &str, scopes: &[String]) -> bool {
+    scopes.iter().any(|s| if s.ends_with('/') { rel.starts_with(s.as_str()) } else { rel == s })
+}
+
+/// Do the tokens starting at `i` spell `pat` exactly?
+fn seq_at(toks: &[Tok], i: usize, pat: &[&str]) -> bool {
+    i + pat.len() <= toks.len() && pat.iter().enumerate().all(|(k, p)| toks[i + k].text == *p)
+}
+
+/// Lint a single file's source. Returns the final violations, notes,
+/// and the set of rules the file carries justified directives for
+/// (used by the tree-level allowlist cross-check).
+pub fn lint_source(cfg: &Config, rel: &str, src: &str) -> (Report, BTreeSet<String>) {
+    let lexed = lex(src);
+    let (toks, directives) = (lexed.toks, lexed.directives);
+    let mut raw: Vec<(u32, &'static str, String)> = Vec::new();
+    let mut report = Report::default();
+
+    let home = |scopes: &[String]| in_scope(rel, scopes);
+
+    // nan: float comparisons must route through util::order.
+    if !home(&cfg.nan_home) {
+        for (i, t) in toks.iter().enumerate() {
+            if t.in_test || t.kind != TokKind::Ident {
+                continue;
+            }
+            if t.text == "partial_cmp" {
+                raw.push((t.line, "nan", "raw partial_cmp (use util::order)".into()));
+            }
+            if t.text == "total_cmp" {
+                raw.push((t.line, "nan", "raw total_cmp (use util::order)".into()));
+            }
+            if t.text == "impl" {
+                let mut saw_ord = false;
+                for tk in toks.iter().skip(i + 1).take(59) {
+                    if tk.is_punct("{") || tk.is_punct(";") {
+                        break;
+                    }
+                    if tk.kind == TokKind::Ident && (tk.text == "Ord" || tk.text == "PartialOrd") {
+                        saw_ord = true;
+                    }
+                    if tk.is_ident("for") && saw_ord {
+                        raw.push((
+                            t.line,
+                            "nan",
+                            "hand-rolled Ord/PartialOrd impl (use util::order::OrdF64)".into(),
+                        ));
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    // durability: file creation goes through persist::write_atomic*.
+    if !home(&cfg.durability_home) {
+        for (i, t) in toks.iter().enumerate() {
+            if t.in_test || t.kind != TokKind::Ident {
+                continue;
+            }
+            if seq_at(&toks, i, &["fs", ":", ":", "write"]) {
+                raw.push((t.line, "durability", "fs::write (use persist::write_atomic)".into()));
+            }
+            if seq_at(&toks, i, &["File", ":", ":", "create"]) {
+                raw.push((t.line, "durability", "File::create (use persist)".into()));
+            }
+            if t.text == "OpenOptions" {
+                raw.push((t.line, "durability", "OpenOptions (use persist)".into()));
+            }
+        }
+    }
+
+    // hash_container: fingerprint-sensitive modules must not name
+    // HashMap/HashSet at all.
+    if in_scope(rel, &cfg.container_scopes) {
+        for t in &toks {
+            if !t.in_test
+                && t.kind == TokKind::Ident
+                && (t.text == "HashMap" || t.text == "HashSet")
+            {
+                raw.push((
+                    t.line,
+                    "hash_container",
+                    format!("{} in a fingerprint-sensitive module (use BTreeMap/BTreeSet)", t.text),
+                ));
+            }
+        }
+    }
+
+    // hash_iteration: taint names declared as hash containers, then
+    // flag order-observing method calls and for-in loops on them.
+    if in_scope(rel, &cfg.iteration_scopes) {
+        let mut taint: BTreeSet<String> = BTreeSet::new();
+        for (i, t) in toks.iter().enumerate() {
+            if t.in_test
+                || t.kind != TokKind::Ident
+                || (t.text != "HashMap" && t.text != "HashSet")
+            {
+                continue;
+            }
+            if i >= 2 && toks[i - 1].is_punct(":") && toks[i - 2].kind == TokKind::Ident {
+                taint.insert(toks[i - 2].text.clone());
+            }
+            if i >= 3
+                && toks[i - 1].is_punct("=")
+                && toks[i - 2].kind == TokKind::Ident
+                && (toks[i - 3].is_ident("let") || toks[i - 3].is_ident("mut"))
+            {
+                taint.insert(toks[i - 2].text.clone());
+            }
+        }
+        for (i, t) in toks.iter().enumerate() {
+            if t.in_test {
+                continue;
+            }
+            if t.kind == TokKind::Ident
+                && ITER_METHODS.contains(&t.text.as_str())
+                && i >= 2
+                && toks[i - 1].is_punct(".")
+                && toks[i - 2].kind == TokKind::Ident
+                && taint.contains(&toks[i - 2].text)
+                && i + 1 < toks.len()
+                && toks[i + 1].is_punct("(")
+            {
+                raw.push((
+                    t.line,
+                    "hash_iteration",
+                    format!(".{}() on hash container `{}`", t.text, toks[i - 2].text),
+                ));
+            }
+            if t.is_ident("in") {
+                let mut j = i + 1;
+                while j < toks.len() && (toks[j].is_punct("&") || toks[j].is_ident("mut")) {
+                    j += 1;
+                }
+                if j + 1 < toks.len() && toks[j].is_ident("self") && toks[j + 1].is_punct(".") {
+                    j += 2;
+                }
+                if j + 1 < toks.len()
+                    && toks[j].kind == TokKind::Ident
+                    && taint.contains(&toks[j].text)
+                    && toks[j + 1].is_punct("{")
+                {
+                    raw.push((
+                        t.line,
+                        "hash_iteration",
+                        format!("for-in over hash container `{}`", toks[j].text),
+                    ));
+                }
+            }
+        }
+    }
+
+    // clock: Instant/SystemTime::now only in declared wall-clock code.
+    if !home(&cfg.clock_home) {
+        for (i, t) in toks.iter().enumerate() {
+            if t.in_test {
+                continue;
+            }
+            if seq_at(&toks, i, &["Instant", ":", ":", "now"])
+                || seq_at(&toks, i, &["SystemTime", ":", ":", "now"])
+            {
+                raw.push((t.line, "clock", format!("{}::now in simulated-time code", t.text)));
+            }
+        }
+    }
+
+    // panic_budget: frozen unwrap/expect counts for hot-path files.
+    if let Some(&(_, budget)) = cfg.budgets.iter().find(|(f, _)| f == rel) {
+        let mut count: usize = 0;
+        let mut over_line: u32 = 0;
+        for (i, t) in toks.iter().enumerate() {
+            if t.in_test || t.kind != TokKind::Ident {
+                continue;
+            }
+            if (t.text == "unwrap" || t.text == "expect")
+                && i >= 1
+                && toks[i - 1].is_punct(".")
+                && i + 1 < toks.len()
+                && toks[i + 1].is_punct("(")
+            {
+                count += 1;
+                if count == budget + 1 {
+                    over_line = t.line;
+                }
+            }
+        }
+        if count > budget {
+            raw.push((
+                over_line,
+                "panic_budget",
+                format!("{count} non-test unwrap/expect calls exceed the frozen budget {budget}"),
+            ));
+        } else if count < budget {
+            report.notes.push(format!(
+                "{rel}: panic budget slack ({count} < {budget}) — tighten lint.toml"
+            ));
+        }
+    }
+
+    // Directive discipline: malformed directives are violations in
+    // their own right, before any suppression happens.
+    let mut used = vec![false; directives.len()];
+    for d in &directives {
+        if !KNOWN_RULES.contains(&d.rule.as_str()) {
+            report.violations.push(Violation {
+                file: rel.to_string(),
+                line: d.line,
+                rule: "allow_discipline",
+                msg: format!("lint:allow names unknown rule `{}`", d.rule),
+            });
+        } else if d.reason.is_empty() {
+            report.violations.push(Violation {
+                file: rel.to_string(),
+                line: d.line,
+                rule: "allow_discipline",
+                msg: format!("lint:allow({}) has no justification after the colon", d.rule),
+            });
+        }
+    }
+
+    // File-level allows from lint.toml mark same-rule directives used
+    // (the in-source comment is their justification site).
+    let file_allows: BTreeSet<&str> = cfg
+        .allows
+        .iter()
+        .filter(|a| a.file == rel)
+        .map(|a| a.rule.as_str())
+        .collect();
+    for (di, d) in directives.iter().enumerate() {
+        if file_allows.contains(d.rule.as_str()) {
+            used[di] = true;
+        }
+    }
+
+    // Apply suppression: file-level first, then site directives that
+    // sit on the violation line or the line above it.
+    for (vline, vrule, vmsg) in raw {
+        if file_allows.contains(vrule) {
+            continue;
+        }
+        let mut suppressed = false;
+        for (di, d) in directives.iter().enumerate() {
+            if d.rule == vrule
+                && !d.reason.is_empty()
+                && (d.line == vline || d.line + 1 == vline)
+            {
+                used[di] = true;
+                suppressed = true;
+            }
+        }
+        if !suppressed {
+            report.violations.push(Violation {
+                file: rel.to_string(),
+                line: vline,
+                rule: vrule,
+                msg: vmsg,
+            });
+        }
+    }
+
+    // A well-formed directive that suppresses nothing is stale.
+    for (di, d) in directives.iter().enumerate() {
+        if KNOWN_RULES.contains(&d.rule.as_str()) && !d.reason.is_empty() && !used[di] {
+            report.violations.push(Violation {
+                file: rel.to_string(),
+                line: d.line,
+                rule: "allow_discipline",
+                msg: format!("lint:allow({}) suppresses nothing — remove it", d.rule),
+            });
+        }
+    }
+
+    let justified: BTreeSet<String> = directives
+        .iter()
+        .filter(|d| !d.reason.is_empty())
+        .map(|d| d.rule.clone())
+        .collect();
+    (report, justified)
+}
+
+/// Collect `.rs` files under `root` in sorted (deterministic) order.
+fn collect_rs_files(root: &Path) -> Result<Vec<std::path::PathBuf>, String> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let rd = std::fs::read_dir(&dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+        let mut entries: Vec<_> = rd
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Lint the whole tree under `cfg.root`, then cross-check the
+/// config-side allowlist: every `[[allow]]` must have a `why`, point
+/// at a file that exists, and be justified by an in-source directive.
+pub fn lint_tree(cfg: &Config) -> Result<Report, String> {
+    let files = collect_rs_files(&cfg.root)?;
+    let mut report = Report::default();
+    let mut justified: Vec<(String, BTreeSet<String>)> = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&cfg.root)
+            .map_err(|_| format!("{}: outside root", path.display()))?
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src =
+            std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let (r, j) = lint_source(cfg, &rel, &src);
+        report.violations.extend(r.violations);
+        report.notes.extend(r.notes);
+        justified.push((rel, j));
+    }
+    check_allowlist(cfg, &justified, &mut report);
+    report.violations.sort();
+    Ok(report)
+}
+
+/// Lint explicit file paths (fixture mode); paths are used verbatim as
+/// the display name and scoped against `cfg.root`-relative rules via
+/// their file name alone, so `cfg` should be built for the fixtures.
+pub fn lint_paths(cfg: &Config, paths: &[std::path::PathBuf]) -> Result<Report, String> {
+    let mut report = Report::default();
+    let mut justified: Vec<(String, BTreeSet<String>)> = Vec::new();
+    for path in paths {
+        let rel = match path.strip_prefix(&cfg.root) {
+            Ok(p) => p.to_string_lossy().replace('\\', "/"),
+            Err(_) => path.to_string_lossy().replace('\\', "/"),
+        };
+        let src =
+            std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let (r, j) = lint_source(cfg, &rel, &src);
+        report.violations.extend(r.violations);
+        report.notes.extend(r.notes);
+        justified.push((rel, j));
+    }
+    check_allowlist(cfg, &justified, &mut report);
+    report.violations.sort();
+    Ok(report)
+}
+
+fn check_allowlist(cfg: &Config, justified: &[(String, BTreeSet<String>)], report: &mut Report) {
+    for a in &cfg.allows {
+        if a.why.is_empty() {
+            report.violations.push(Violation {
+                file: "lint.toml".into(),
+                line: 1,
+                rule: "allow_discipline",
+                msg: format!("allow({}) for {} has no `why`", a.rule, a.file),
+            });
+        }
+        match justified.iter().find(|(rel, _)| *rel == a.file) {
+            None => report.violations.push(Violation {
+                file: "lint.toml".into(),
+                line: 1,
+                rule: "allow_discipline",
+                msg: format!("stale allow entry: {} not found under root", a.file),
+            }),
+            Some((_, rules)) if !rules.contains(&a.rule) => {
+                report.violations.push(Violation {
+                    file: a.file.clone(),
+                    line: 1,
+                    rule: "allow_discipline",
+                    msg: format!(
+                        "lint.toml allows {} here but the file carries no \
+                         lint:allow({}) justification comment",
+                        a.rule, a.rule
+                    ),
+                })
+            }
+            Some(_) => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FileAllow;
+    use std::path::PathBuf;
+
+    fn cfg_for(rel_scopes: impl FnOnce(&mut Config)) -> Config {
+        let mut c = Config::empty(PathBuf::from("."));
+        rel_scopes(&mut c);
+        c
+    }
+
+    fn rules_of(r: &Report) -> Vec<&'static str> {
+        r.violations.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn nan_flags_partial_cmp_outside_home() {
+        let cfg = cfg_for(|c| c.nan_home = vec!["util/order.rs".into()]);
+        let src = "fn f(a: f64, b: f64) { a.partial_cmp(&b); }";
+        let (r, _) = lint_source(&cfg, "coordinator/x.rs", src);
+        assert_eq!(rules_of(&r), vec!["nan"]);
+        let (r, _) = lint_source(&cfg, "util/order.rs", src);
+        assert!(r.violations.is_empty());
+    }
+
+    #[test]
+    fn nan_flags_hand_rolled_ord_impl() {
+        let cfg = cfg_for(|_| {});
+        let src = "struct W(f64);\nimpl Ord for W { fn cmp(&self, o: &W) -> O { todo() } }";
+        let (r, _) = lint_source(&cfg, "a.rs", src);
+        assert!(rules_of(&r).contains(&"nan"));
+        // `impl Trait for T` without Ord/PartialOrd is fine.
+        let (r, _) = lint_source(&cfg, "a.rs", "impl Display for W { }");
+        assert!(r.violations.is_empty());
+    }
+
+    #[test]
+    fn durability_flags_fs_write_but_not_in_tests() {
+        let cfg = cfg_for(|c| c.durability_home = vec!["coordinator/persist.rs".into()]);
+        let src = "fn f() { std::fs::write(p, b); }";
+        let (r, _) = lint_source(&cfg, "a.rs", src);
+        assert_eq!(rules_of(&r), vec!["durability"]);
+        let test_src = "#[cfg(test)]\nmod tests { fn f() { std::fs::write(p, b); } }";
+        let (r, _) = lint_source(&cfg, "a.rs", test_src);
+        assert!(r.violations.is_empty());
+    }
+
+    #[test]
+    fn hash_container_scoped_to_sensitive_modules() {
+        let cfg = cfg_for(|c| c.container_scopes = vec!["coordinator/runner.rs".into()]);
+        let src = "use std::collections::HashMap;";
+        let (r, _) = lint_source(&cfg, "coordinator/runner.rs", src);
+        assert_eq!(rules_of(&r), vec!["hash_container"]);
+        let (r, _) = lint_source(&cfg, "logger/jsonl.rs", src);
+        assert!(r.violations.is_empty());
+    }
+
+    #[test]
+    fn hash_iteration_taints_declared_names() {
+        let cfg = cfg_for(|c| c.iteration_scopes = vec!["coordinator/".into()]);
+        let src = "struct S { live: HashMap<u64, T> }\n\
+                   impl S { fn f(&self) { for (k, v) in &self.live { } } }";
+        let (r, _) = lint_source(&cfg, "coordinator/x.rs", src);
+        assert_eq!(rules_of(&r), vec!["hash_iteration"]);
+        // Keyed access only: no violation.
+        let keyed = "struct S { live: HashMap<u64, T> }\n\
+                     impl S { fn f(&self) { self.live.get(&1); } }";
+        let (r, _) = lint_source(&cfg, "coordinator/x.rs", keyed);
+        assert!(r.violations.is_empty());
+        // Method-call form.
+        let m = "fn f(live: HashMap<u64, T>) { let _ = live.keys(); }";
+        let (r, _) = lint_source(&cfg, "coordinator/x.rs", m);
+        assert_eq!(rules_of(&r), vec!["hash_iteration"]);
+    }
+
+    #[test]
+    fn clock_flags_instant_now() {
+        let cfg = cfg_for(|c| c.clock_home = vec!["util/bench.rs".into()]);
+        let src = "fn f() { let t = Instant::now(); }";
+        let (r, _) = lint_source(&cfg, "coordinator/x.rs", src);
+        assert_eq!(rules_of(&r), vec!["clock"]);
+        let (r, _) = lint_source(&cfg, "util/bench.rs", src);
+        assert!(r.violations.is_empty());
+    }
+
+    #[test]
+    fn panic_budget_over_and_slack() {
+        let cfg = cfg_for(|c| c.budgets = vec![("a.rs".into(), 1)]);
+        let over = "fn f() { x.unwrap(); y.expect(\"m\"); }";
+        let (r, _) = lint_source(&cfg, "a.rs", over);
+        assert_eq!(rules_of(&r), vec!["panic_budget"]);
+        let slack = "fn f() { }";
+        let (r, _) = lint_source(&cfg, "a.rs", slack);
+        assert!(r.violations.is_empty());
+        assert_eq!(r.notes.len(), 1);
+    }
+
+    #[test]
+    fn site_directive_suppresses_same_and_next_line_only() {
+        let cfg = cfg_for(|_| {});
+        let ok = "// lint:allow(clock): wall-clock probe for the worker heartbeat\n\
+                  fn f() { let t = Instant::now(); }";
+        let (r, _) = lint_source(&cfg, "a.rs", ok);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+        let far = "// lint:allow(clock): too far away\n\nfn f() { let t = Instant::now(); }";
+        let (r, _) = lint_source(&cfg, "a.rs", far);
+        // The clock violation survives AND the directive reads stale.
+        let rs = rules_of(&r);
+        assert!(rs.contains(&"clock") && rs.contains(&"allow_discipline"));
+    }
+
+    #[test]
+    fn directive_without_reason_or_with_unknown_rule_is_violation() {
+        let cfg = cfg_for(|_| {});
+        let (r, _) = lint_source(&cfg, "a.rs", "// lint:allow(clock)\nfn f() {}");
+        assert_eq!(rules_of(&r), vec!["allow_discipline"]);
+        let (r, _) = lint_source(&cfg, "a.rs", "// lint:allow(made_up): because\nfn f() {}");
+        assert_eq!(rules_of(&r), vec!["allow_discipline"]);
+    }
+
+    #[test]
+    fn file_allow_needs_in_source_justification() {
+        let mut cfg = cfg_for(|c| c.clock_home = vec!["util/bench.rs".into()]);
+        cfg.allows.push(FileAllow {
+            rule: "clock".into(),
+            file: "a.rs".into(),
+            why: "wall-clock file".into(),
+        });
+        // Without the in-source comment, the cross-check fires.
+        let (r, j) = lint_source(&cfg, "a.rs", "fn f() { Instant::now(); }");
+        assert!(r.violations.is_empty(), "file allow should suppress: {:?}", r.violations);
+        let mut report = Report::default();
+        check_allowlist(&cfg, &[("a.rs".into(), j)], &mut report);
+        assert_eq!(rules_of(&report), vec!["allow_discipline"]);
+        // With it, everything is quiet.
+        let src = "// lint:allow(clock): this whole file is the wall-clock substrate\n\
+                   fn f() { Instant::now(); }";
+        let (r, j) = lint_source(&cfg, "a.rs", src);
+        assert!(r.violations.is_empty());
+        let mut report = Report::default();
+        check_allowlist(&cfg, &[("a.rs".into(), j)], &mut report);
+        assert!(report.violations.is_empty(), "{:?}", report.violations);
+    }
+
+    #[test]
+    fn allow_entry_missing_why_is_violation() {
+        let mut cfg = cfg_for(|_| {});
+        cfg.allows.push(FileAllow { rule: "clock".into(), file: "a.rs".into(), why: "".into() });
+        let mut report = Report::default();
+        let mut j = BTreeSet::new();
+        j.insert("clock".to_string());
+        check_allowlist(&cfg, &[("a.rs".into(), j)], &mut report);
+        assert_eq!(rules_of(&report), vec!["allow_discipline"]);
+    }
+
+    #[test]
+    fn stale_allow_entry_is_violation() {
+        let mut cfg = cfg_for(|_| {});
+        cfg.allows.push(FileAllow {
+            rule: "clock".into(),
+            file: "gone.rs".into(),
+            why: "was removed".into(),
+        });
+        let mut report = Report::default();
+        check_allowlist(&cfg, &[], &mut report);
+        assert_eq!(rules_of(&report), vec!["allow_discipline"]);
+    }
+}

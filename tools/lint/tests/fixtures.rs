@@ -1,0 +1,136 @@
+//! Fixture-based self-tests: run the real binary against every
+//! clean/violating fixture pair and assert on exit codes and the rule
+//! names in the report.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+fn fixtures_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures")
+}
+
+fn run_on(file: &str) -> Output {
+    let dir = fixtures_dir();
+    Command::new(env!("CARGO_BIN_EXE_tune-lint"))
+        .arg("--config")
+        .arg(dir.join("lint.toml"))
+        .arg(dir.join(file))
+        .output()
+        .expect("spawn tune-lint")
+}
+
+fn assert_clean(file: &str) {
+    let out = run_on(file);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "{file} should be clean but reported:\n{stdout}"
+    );
+    assert!(stdout.trim().is_empty(), "{file}: unexpected output:\n{stdout}");
+}
+
+fn assert_violates(file: &str, rule: &str) {
+    let out = run_on(file);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(
+        out.status.code(),
+        Some(1),
+        "{file} should exit 1, got {:?}:\n{stdout}",
+        out.status.code()
+    );
+    assert!(
+        stdout.lines().any(|l| l.contains(&format!(" {rule} — "))),
+        "{file}: expected a `{rule}` violation, got:\n{stdout}"
+    );
+}
+
+#[test]
+fn clean_fixtures_pass() {
+    for f in [
+        "clean/nan.rs",
+        "clean/order_home.rs",
+        "clean/durability.rs",
+        "clean/persist_home.rs",
+        "clean/hash.rs",
+        "clean/clock_allowed.rs",
+        "clean/panics.rs",
+        "clean/tests_tracking.rs",
+    ] {
+        assert_clean(f);
+    }
+}
+
+#[test]
+fn violating_fixtures_fail_with_their_rule() {
+    for (f, rule) in [
+        ("violating/nan.rs", "nan"),
+        ("violating/durability.rs", "durability"),
+        ("violating/hash_container.rs", "hash_container"),
+        ("violating/hash_iteration.rs", "hash_iteration"),
+        ("violating/clock.rs", "clock"),
+        ("violating/panics.rs", "panic_budget"),
+        ("violating/allow.rs", "allow_discipline"),
+    ] {
+        assert_violates(f, rule);
+    }
+}
+
+#[test]
+fn tree_mode_over_fixtures_reports_all_violating_files() {
+    let dir = fixtures_dir();
+    let out = Command::new(env!("CARGO_BIN_EXE_tune-lint"))
+        .arg("--config")
+        .arg(dir.join("lint.toml"))
+        .output()
+        .expect("spawn tune-lint");
+    assert_eq!(out.status.code(), Some(1));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for rule in
+        ["nan", "durability", "hash_container", "hash_iteration", "clock", "panic_budget"]
+    {
+        assert!(
+            stdout.lines().any(|l| l.contains(&format!(" {rule} — "))),
+            "tree mode missing `{rule}`:\n{stdout}"
+        );
+    }
+    // Violations come out sorted by (file, line) for stable CI diffs.
+    let files: Vec<&str> =
+        stdout.lines().filter_map(|l| l.split(':').next()).collect();
+    let mut sorted = files.clone();
+    sorted.sort();
+    assert_eq!(files, sorted, "report not sorted:\n{stdout}");
+}
+
+#[test]
+fn config_allow_without_in_source_comment_is_a_violation() {
+    use tune_lint::{lint_paths, Config, FileAllow};
+    let dir = fixtures_dir();
+    let mut cfg = Config::empty(dir.clone());
+    cfg.clock_home = vec![];
+    cfg.allows.push(FileAllow {
+        rule: "clock".into(),
+        file: "violating/clock.rs".into(),
+        why: "pretend this is a wall-clock file".into(),
+    });
+    let report = lint_paths(&cfg, &[dir.join("violating/clock.rs")]).expect("lint");
+    // The clock violations are suppressed by the file-level allow...
+    assert!(report.violations.iter().all(|v| v.rule != "clock"), "{:?}", report.violations);
+    // ...but the missing in-source justification comment is itself flagged.
+    assert!(
+        report
+            .violations
+            .iter()
+            .any(|v| v.rule == "allow_discipline" && v.msg.contains("justification comment")),
+        "{:?}",
+        report.violations
+    );
+}
+
+#[test]
+fn unknown_flag_and_missing_config_are_usage_errors() {
+    let out = Command::new(env!("CARGO_BIN_EXE_tune-lint"))
+        .arg("--bogus")
+        .output()
+        .expect("spawn tune-lint");
+    assert_eq!(out.status.code(), Some(2));
+}
