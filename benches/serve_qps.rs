@@ -1,0 +1,236 @@
+//! Serve control-plane load bench: QPS and tail latency of a live
+//! socket server at 1 / 4 / 16 hub shards over ONE shared worker fleet.
+//!
+//! Each case boots an in-process `serve` on an ephemeral TCP port and
+//! drives it the way real clients would: M persistent connections fire
+//! a burst of unique-name submissions, then churn `status` requests,
+//! while one well-behaved `watch` stream stays attached throughout; the
+//! case ends with a stop-and-drain that must complete every admitted
+//! experiment. Reported per case: submissions/sec, status QPS, p99
+//! latency for both verbs, bytes moved per request and drain time.
+//!
+//! What to look for: submission throughput should grow with shards —
+//! admission serializes on a shard's command loop, so hashing
+//! experiments across N shards removes the single-hub funnel — while
+//! status QPS stays flat-ish (it reads per-shard cached cells and never
+//! touches a shard thread).
+//!
+//! `TUNE_BENCH_FAST=1` shrinks connection and request counts so CI can
+//! smoke the binary in seconds; the emitted `BENCH_serve_qps.json`
+//! records which mode produced the numbers.
+//!
+//! Run: `cargo bench --bench serve_qps`
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use tune::net::{
+    serve, Client, ListenAddr, ServeOptions, ShardedHub, ShardedHubOptions, WorkloadResolver,
+};
+use tune::trainable::factory;
+use tune::trainable::synthetic::ConstTrainable;
+use tune::util::json::Json;
+
+const WORKERS: usize = 4;
+
+fn const_resolver() -> WorkloadResolver {
+    Arc::new(|w: &str| {
+        if w == "const" {
+            Ok(factory(|c, s| Box::new(ConstTrainable::new(c, s))))
+        } else {
+            Err(format!("unknown workload {w:?}"))
+        }
+    })
+}
+
+/// A tiny constant-workload experiment (2 trials x 2 iters): the bench
+/// measures the control plane, not the training loop.
+fn spec_text(name: &str, seed: u64) -> String {
+    format!(
+        r#"{{
+            "name": "{name}", "metric": "iters", "mode": "max",
+            "num_samples": 2, "max_iterations_per_trial": 2, "seed": {seed},
+            "workload": "const", "scheduler": "fifo", "search": "random",
+            "space": {{"step_cost": {{"uniform": [1.0, 1.0]}}}},
+            "cluster": {{"nodes": 1, "cpus_per_node": 8}}
+        }}"#
+    )
+}
+
+/// p99 of a latency sample, in milliseconds (sorts in place).
+fn p99_ms(lat: &mut [u128]) -> f64 {
+    if lat.is_empty() {
+        return 0.0;
+    }
+    lat.sort_unstable();
+    let idx = ((lat.len() as f64 * 0.99).ceil() as usize).saturating_sub(1);
+    lat[idx.min(lat.len() - 1)] as f64 / 1e6
+}
+
+struct Case {
+    shards: usize,
+    submit_qps: f64,
+    submit_p99_ms: f64,
+    status_qps: f64,
+    status_p99_ms: f64,
+    bytes_per_req: f64,
+    watch_events: usize,
+    drain_s: f64,
+}
+
+fn run_case(shards: usize, conns: usize, submits: usize, statuses: usize) -> Case {
+    let hub = ShardedHub::new(ShardedHubOptions { shards, workers: WORKERS, ..Default::default() });
+    let addr = ListenAddr::parse("127.0.0.1:0").expect("parse addr");
+    let handle = serve(&addr, hub, const_resolver(), ServeOptions::default()).expect("serve");
+    let addr = handle.addr().clone();
+
+    // One live, acking watch stream for the whole case: realistic
+    // status-delta traffic that must never be shed.
+    let watch_events = Arc::new(AtomicUsize::new(0));
+    let we = Arc::clone(&watch_events);
+    let waddr = addr.clone();
+    let watcher = std::thread::spawn(move || {
+        let c = Client::connect(&waddr).expect("watch conn");
+        c.watch(|_| {
+            we.fetch_add(1, Ordering::Relaxed);
+            true
+        })
+        .expect("watch stream");
+    });
+
+    // Phase 1 — submit burst: M persistent conns x B unique names.
+    let t0 = Instant::now();
+    let joins: Vec<_> = (0..conns)
+        .map(|ci| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).expect("submit conn");
+                let mut lat = Vec::with_capacity(submits);
+                for i in 0..submits {
+                    let text = spec_text(&format!("load-{ci}-{i}"), (ci * 1009 + i) as u64);
+                    let t = Instant::now();
+                    c.submit_spec_text(&text).expect("submit");
+                    lat.push(t.elapsed().as_nanos());
+                }
+                (lat, c.bytes_moved())
+            })
+        })
+        .collect();
+    let mut submit_lat = Vec::new();
+    let mut bytes = 0u64;
+    for j in joins {
+        let (lat, moved) = j.join().expect("submit thread");
+        submit_lat.extend(lat);
+        bytes += moved;
+    }
+    let submit_wall = t0.elapsed().as_secs_f64();
+
+    // Phase 2 — status churn on fresh persistent conns while the
+    // experiments run.
+    let t0 = Instant::now();
+    let joins: Vec<_> = (0..conns)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).expect("status conn");
+                let mut lat = Vec::with_capacity(statuses);
+                for _ in 0..statuses {
+                    let t = Instant::now();
+                    c.status().expect("status");
+                    lat.push(t.elapsed().as_nanos());
+                }
+                (lat, c.bytes_moved())
+            })
+        })
+        .collect();
+    let mut status_lat = Vec::new();
+    for j in joins {
+        let (lat, moved) = j.join().expect("status thread");
+        status_lat.extend(lat);
+        bytes += moved;
+    }
+    let status_wall = t0.elapsed().as_secs_f64();
+
+    // Phase 3 — stop and drain: every admitted experiment completes.
+    let t0 = Instant::now();
+    handle.shutdown(true);
+    let results = handle.join();
+    let drain_s = t0.elapsed().as_secs_f64();
+    assert_eq!(results.len(), conns * submits, "drain lost experiments");
+    watcher.join().expect("watcher thread");
+
+    let reqs = (submit_lat.len() + status_lat.len()) as f64;
+    Case {
+        shards,
+        submit_qps: submit_lat.len() as f64 / submit_wall,
+        submit_p99_ms: p99_ms(&mut submit_lat),
+        status_qps: status_lat.len() as f64 / status_wall,
+        status_p99_ms: p99_ms(&mut status_lat),
+        bytes_per_req: bytes as f64 / reqs,
+        watch_events: watch_events.load(Ordering::Relaxed),
+        drain_s,
+    }
+}
+
+fn main() {
+    let fast = std::env::var("TUNE_BENCH_FAST").is_ok();
+    let (conns, submits, statuses) = if fast { (2, 4, 16) } else { (8, 8, 64) };
+    println!(
+        "== serve QPS: {conns} conns x ({submits} submits + {statuses} status reqs), \
+         {WORKERS} workers{} ==",
+        if fast { " [FAST]" } else { "" }
+    );
+    println!(
+        "{:>7} {:>12} {:>12} {:>11} {:>11} {:>10} {:>7} {:>9}",
+        "shards", "submit/s", "sub p99 ms", "status/s", "st p99 ms", "bytes/req", "watch", "drain s"
+    );
+    let mut cases = Vec::new();
+    for shards in [1usize, 4, 16] {
+        let c = run_case(shards, conns, submits, statuses);
+        println!(
+            "{:>7} {:>12.1} {:>12.3} {:>11.1} {:>11.3} {:>10.0} {:>7} {:>9.2}",
+            c.shards,
+            c.submit_qps,
+            c.submit_p99_ms,
+            c.status_qps,
+            c.status_p99_ms,
+            c.bytes_per_req,
+            c.watch_events,
+            c.drain_s
+        );
+        cases.push(c);
+    }
+    let json = Json::obj(vec![
+        ("bench", Json::Str("serve_qps".into())),
+        ("mode", Json::Str(if fast { "fast" } else { "full" }.into())),
+        ("workers", Json::Num(WORKERS as f64)),
+        ("conns", Json::Num(conns as f64)),
+        ("submits_per_conn", Json::Num(submits as f64)),
+        ("statuses_per_conn", Json::Num(statuses as f64)),
+        (
+            "cases",
+            Json::Arr(
+                cases
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("shards", Json::Num(c.shards as f64)),
+                            ("submit_qps", Json::Num(c.submit_qps)),
+                            ("submit_p99_ms", Json::Num(c.submit_p99_ms)),
+                            ("status_qps", Json::Num(c.status_qps)),
+                            ("status_p99_ms", Json::Num(c.status_p99_ms)),
+                            ("bytes_per_req", Json::Num(c.bytes_per_req)),
+                            ("watch_events", Json::Num(c.watch_events as f64)),
+                            ("drain_s", Json::Num(c.drain_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    match std::fs::write("BENCH_serve_qps.json", json.to_string()) {
+        Ok(()) => println!("\nwrote BENCH_serve_qps.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_serve_qps.json: {e}"),
+    }
+}

@@ -52,7 +52,7 @@
 // is a BTreeMap.
 
 use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -900,12 +900,12 @@ pub type ExpId = u32;
 /// Work key on the shared pool: (experiment, trial).
 type SharedKey = (ExpId, TrialId);
 
-/// Outcome of one [`SharedPool`] poll by the hub.
+/// Outcome of one [`SharedPool`] / [`SharedPoolClient`] poll by a hub.
 #[derive(Debug)]
-pub(crate) enum PoolPoll {
+pub enum PoolPoll {
     /// A completion event for the given experiment.
     Event(ExpId, ExecEvent),
-    /// No step request is in flight anywhere: every experiment is idle.
+    /// No step request is in flight for any polled experiment.
     Idle,
     /// In-flight work exists but nothing completed within the timeout.
     Timeout,
@@ -944,6 +944,20 @@ impl Router {
         }
         None
     }
+    /// `pop_any` restricted to a client's owned experiments (same
+    /// key-order determinism, scoped to one shard).
+    fn pop_owned(&mut self, owned: &BTreeSet<ExpId>) -> Option<(ExpId, ExecEvent)> {
+        for exp in owned {
+            if let Some(ev) = self.buffers.get_mut(exp).and_then(|q| q.pop_front()) {
+                return Some((*exp, ev));
+            }
+        }
+        None
+    }
+    /// In-flight request count across a client's owned experiments.
+    fn queued_for(&self, owned: &BTreeSet<ExpId>) -> usize {
+        owned.iter().map(|e| self.queued.get(e).copied().unwrap_or(0)).sum()
+    }
 }
 
 struct SharedPoolInner {
@@ -956,6 +970,9 @@ struct SharedPoolInner {
     /// Shared per-worker capacity vectors; every experiment's handle
     /// admits against the same fleet (None = capacity-oblivious).
     fleet: Mutex<Option<WorkerFleet<SharedKey>>>,
+    /// Pool-wide experiment-id allocator, shared so every
+    /// [`SharedPoolClient`] hands out ids from one namespace.
+    next_exp: Mutex<ExpId>,
 }
 
 impl SharedPoolInner {
@@ -979,6 +996,30 @@ impl SharedPoolInner {
             }
         }
     }
+
+    /// Allocate the next experiment id from the pool-wide namespace and
+    /// register its router entries, then wrap it in an executor handle.
+    /// Shared by [`SharedPool::handle`] and [`SharedPoolClient::handle`]
+    /// so two shards can never mint the same id.
+    fn new_handle(self: &Arc<Self>, factory: TrainableFactory) -> SharedPoolHandle {
+        let exp = {
+            let mut next = self.next_exp.lock().unwrap();
+            let exp = *next;
+            *next += 1;
+            exp
+        };
+        {
+            let mut r = self.router.lock().unwrap();
+            r.buffers.entry(exp).or_default();
+            r.queued.entry(exp).or_insert(0);
+        }
+        SharedPoolHandle {
+            inner: Arc::clone(self),
+            factory,
+            exp,
+            started: Instant::now(),
+        }
+    }
 }
 
 /// ONE bounded worker pool multiplexed across many experiments — the
@@ -993,7 +1034,6 @@ impl SharedPoolInner {
 pub struct SharedPool {
     inner: Arc<SharedPoolInner>,
     workers: Vec<std::thread::JoinHandle<()>>,
-    next_exp: ExpId,
 }
 
 impl SharedPool {
@@ -1038,6 +1078,7 @@ impl SharedPool {
                 total_queued: 0,
             }),
             fleet: Mutex::new(fleet),
+            next_exp: Mutex::new(0),
         });
         let handles = (0..workers)
             .map(|w| {
@@ -1050,7 +1091,7 @@ impl SharedPool {
                     .expect("spawn shared pool worker")
             })
             .collect();
-        SharedPool { inner, workers: handles, next_exp: 0 }
+        SharedPool { inner, workers: handles }
     }
 
     /// Number of worker threads in the pool.
@@ -1062,26 +1103,37 @@ impl SharedPool {
     /// per-experiment: different experiments can run entirely different
     /// workloads on the same pool.
     pub fn handle(&mut self, factory: TrainableFactory) -> SharedPoolHandle {
-        let exp = self.next_exp;
-        self.next_exp += 1;
-        {
-            let mut r = self.inner.router.lock().unwrap();
-            r.buffers.entry(exp).or_default();
-            r.queued.entry(exp).or_insert(0);
-        }
-        SharedPoolHandle {
+        self.inner.new_handle(factory)
+    }
+
+    /// Create a shard-scoped view of this pool. The client allocates
+    /// experiment ids from the same pool-wide namespace, but its
+    /// [`SharedPoolClient::poll`] only ever *returns* events for
+    /// experiments registered through it — a sharded hub gives each
+    /// shard one client so N shards can drive one worker fleet
+    /// concurrently without stealing each other's completions.
+    /// `capacity_frac` scales the capacity total the shard's fair-share
+    /// math sees (1/N for N equal shards; 1.0 for a sole owner).
+    pub fn client(&self, capacity_frac: f64) -> SharedPoolClient {
+        SharedPoolClient {
             inner: Arc::clone(&self.inner),
-            factory,
-            exp,
-            started: Instant::now(),
+            owned: BTreeSet::new(),
+            workers: self.workers.len(),
+            capacity_frac: if capacity_frac.is_finite() && capacity_frac > 0.0 {
+                capacity_frac.min(1.0)
+            } else {
+                1.0
+            },
         }
     }
 
-    /// Hub event pump: the next completion event from *any* experiment.
-    /// Returns [`PoolPoll::Idle`] when no request is in flight anywhere
-    /// (every experiment is quiescent) and [`PoolPoll::Timeout`] when
-    /// in-flight work exists but nothing completed within `timeout`.
-    pub(crate) fn poll(&self, timeout: Duration) -> PoolPoll {
+    /// Sole-owner event pump: the next completion event from *any*
+    /// experiment. Returns [`PoolPoll::Idle`] when no request is in
+    /// flight anywhere (every experiment is quiescent) and
+    /// [`PoolPoll::Timeout`] when in-flight work exists but nothing
+    /// completed within `timeout`. Sharded callers use
+    /// [`SharedPoolClient::poll`] instead.
+    pub fn poll(&self, timeout: Duration) -> PoolPoll {
         let deadline = Instant::now() + timeout;
         loop {
             {
@@ -1120,6 +1172,95 @@ impl Drop for SharedPool {
         self.inner.injector_tx.lock().unwrap().take();
         for h in self.workers.drain(..) {
             let _ = h.join();
+        }
+    }
+}
+
+/// One shard's view of a [`SharedPool`]: hands out experiment handles
+/// from the pool-wide id namespace and pumps events for exactly the
+/// experiments it created. Many clients can poll the same pool
+/// concurrently — the single raw-event channel is drained
+/// cooperatively: whichever client receives a raw event settles it
+/// into the router's per-experiment buffer (under the same lock as the
+/// in-flight accounting), where the owning client's next buffer scan
+/// picks it up. A client therefore never drops or steals a sibling
+/// shard's completion; at worst it does the routing work for it.
+///
+/// Drop order mirrors the pool's: finish the client's experiment
+/// owners before dropping the [`SharedPool`] that spawned it.
+pub struct SharedPoolClient {
+    inner: Arc<SharedPoolInner>,
+    owned: BTreeSet<ExpId>,
+    workers: usize,
+    capacity_frac: f64,
+}
+
+impl SharedPoolClient {
+    /// Create the executor handle for one experiment and take ownership
+    /// of its event stream (this client's `poll` is now the only pump
+    /// that returns the experiment's events).
+    pub fn handle(&mut self, factory: TrainableFactory) -> SharedPoolHandle {
+        let handle = self.inner.new_handle(factory);
+        self.owned.insert(handle.exp_id());
+        handle
+    }
+
+    /// Number of worker threads in the underlying pool (the whole
+    /// fleet — shards share workers, not split them).
+    pub fn num_workers(&self) -> usize {
+        self.workers
+    }
+
+    /// This shard's slice of the fleet capacity: the pool total scaled
+    /// by `capacity_frac` (None when capacity-oblivious). Keeps N
+    /// shards' independent fair-share splits from collectively
+    /// oversubscribing one fleet.
+    pub fn total_capacity(&self) -> Option<Resources> {
+        self.inner.fleet.lock().unwrap().as_ref().map(|f| {
+            let mut sum = Resources::default();
+            for cap in &f.total {
+                sum.release(cap);
+            }
+            sum.scaled(self.capacity_frac)
+        })
+    }
+
+    /// Shard-scoped event pump: the next completion event for an
+    /// experiment created through this client. [`PoolPoll::Idle`] when
+    /// none of the owned experiments has a request in flight (other
+    /// shards' traffic does not keep this shard awake);
+    /// [`PoolPoll::Timeout`] when owned work exists but nothing owned
+    /// completed within `timeout`. Receives in short slices so one
+    /// shard blocked on the channel cannot strand a sibling whose
+    /// event it has already drained into the router.
+    pub fn poll(&self, timeout: Duration) -> PoolPoll {
+        let deadline = Instant::now() + timeout;
+        loop {
+            {
+                let mut r = self.inner.router.lock().unwrap();
+                if let Some((exp, ev)) = r.pop_owned(&self.owned) {
+                    return PoolPoll::Event(exp, ev);
+                }
+                if r.queued_for(&self.owned) == 0 {
+                    return PoolPoll::Idle;
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PoolPoll::Timeout;
+            }
+            let slice = (deadline - now).min(Duration::from_millis(5));
+            let recv = {
+                let rx = self.inner.event_rx.lock().unwrap();
+                rx.recv_timeout(slice)
+            };
+            match recv {
+                // Settle into the router: if it is ours the loop top
+                // pops it; a sibling's event lands in their buffer.
+                Ok(raw) => self.inner.route(raw),
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => return PoolPoll::Idle,
+            }
         }
     }
 }
@@ -1171,8 +1312,8 @@ impl Executor for SharedPoolHandle {
         }
     }
 
-    /// Standalone event wait (the hub uses [`SharedPool::poll`] instead
-    /// and feeds events in). Every received event is settled into the
+    /// Standalone event wait (a hub uses [`SharedPool::poll`] or
+    /// [`SharedPoolClient::poll`] instead and feeds events in). Every received event is settled into the
     /// router's per-experiment buffers under one lock, and the loop top
     /// pops this handle's buffer — with a short receive timeout so a
     /// sibling handle draining the channel concurrently cannot strand
@@ -1731,6 +1872,41 @@ mod tests {
             other => panic!("{other:?}"),
         }
         assert!(matches!(pool.poll(Duration::from_millis(10)), PoolPoll::Idle));
+    }
+
+    #[test]
+    fn shared_pool_clients_poll_only_owned_experiments() {
+        let pool = SharedPool::new(2);
+        let mut ca = pool.client(0.5);
+        let mut cb = pool.client(0.5);
+        let mut a = ca.handle(const_factory());
+        let mut b = cb.handle(const_factory());
+        assert_ne!(a.exp_id(), b.exp_id());
+        // A shard with no in-flight work is Idle even while the
+        // sibling is busy.
+        assert!(matches!(ca.poll(Duration::from_millis(5)), PoolPoll::Idle));
+        a.launch(&mk_trial(0, 0.0), None).unwrap();
+        b.launch(&mk_trial(7, 0.0), None).unwrap();
+        a.request_step(0);
+        b.request_step(7);
+        // Each client returns exactly its own experiment's completion,
+        // even when the sibling drains the raw channel first.
+        match ca.poll(Duration::from_secs(5)) {
+            PoolPoll::Event(exp, ExecEvent::Stepped { trial, .. }) => {
+                assert_eq!(exp, a.exp_id());
+                assert_eq!(trial, 0);
+            }
+            other => panic!("{other:?}"),
+        }
+        match cb.poll(Duration::from_secs(5)) {
+            PoolPoll::Event(exp, ExecEvent::Stepped { trial, .. }) => {
+                assert_eq!(exp, b.exp_id());
+                assert_eq!(trial, 7);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(ca.poll(Duration::from_millis(5)), PoolPoll::Idle));
+        assert!(matches!(cb.poll(Duration::from_millis(5)), PoolPoll::Idle));
     }
 
     #[test]

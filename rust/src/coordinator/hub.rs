@@ -36,7 +36,7 @@ use crate::ray::{AutoscalePolicy, Cluster, Resources};
 use crate::trainable::TrainableFactory;
 use crate::util::json::Json;
 
-use super::executor::{ExpId, PoolPoll, SharedPool};
+use super::executor::{ExpId, PoolPoll, SharedPool, SharedPoolClient};
 use super::experiment::{manifest_json, ExecMode, ExperimentSpec, SchedulerKind, SearchKind};
 use super::persist::ExperimentDir;
 use super::runner::{ExperimentResult, TrialRunner};
@@ -145,10 +145,20 @@ struct HubSlot {
 /// assert!(results.iter().all(|(_, r)| r.trials.len() == 4));
 /// ```
 pub struct ExperimentHub {
-    // Declared before `pool`: slots (and with them the runners' pool
-    // handles) drop first, so the pool's Drop can join its workers.
+    // Declared before `fleet`: slots (and with them the runners' pool
+    // handles) drop first, so the owned pool's Drop can join its
+    // workers.
     experiments: Vec<HubSlot>,
-    pool: SharedPool,
+    /// Shard-scoped pool view: every experiment this hub admits is
+    /// registered through (and pumped from) this client.
+    pool: SharedPoolClient,
+    /// The worker fleet itself when this hub stands alone
+    /// (`new`/`with_capacities`); `None` when the hub is one shard of a
+    /// [`crate::net::ShardedHub`], which owns the fleet for all shards.
+    /// Never read — held purely so the sole-owner fleet drops (and
+    /// joins its workers) after the slots above.
+    #[allow(dead_code)]
+    fleet: Option<SharedPool>,
     /// Global live-trial budget split across active experiments
     /// (0 = no global cap; per-experiment caps and clusters still bind).
     max_live: usize,
@@ -179,9 +189,28 @@ impl ExperimentHub {
     }
 
     fn over(pool: SharedPool, max_live: usize) -> Self {
+        let client = pool.client(1.0);
+        ExperimentHub {
+            experiments: Vec::new(),
+            pool: client,
+            fleet: Some(pool),
+            max_live,
+            rr_cursor: 0,
+            occ_sum: 0.0,
+            occ_samples: 0,
+        }
+    }
+
+    /// A hub over a borrowed slice of a shared fleet: one shard of a
+    /// sharded control plane. The caller (the fleet owner) is
+    /// responsible for outliving this hub — the client's handles send
+    /// into the owner's pool, and a dropped pool silently drops late
+    /// step requests (same contract as a halted trial).
+    pub(crate) fn over_client(pool: SharedPoolClient, max_live: usize) -> Self {
         ExperimentHub {
             experiments: Vec::new(),
             pool,
+            fleet: None,
             max_live,
             rr_cursor: 0,
             occ_sum: 0.0,

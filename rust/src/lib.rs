@@ -15,6 +15,8 @@
 //! * [`trainable`] — the user API (class-based + cooperative function),
 //!   synthetic benchmark workloads.
 //! * [`runtime`] — PJRT: load HLO artifacts, drive real training steps.
+//! * [`net`] — the serve control plane: framed socket protocol,
+//!   sharded hub, server and client.
 //! * [`checkpoint`] / [`logger`] — durability and observability.
 //! * [`util`] — JSON, deterministic RNG, bench/prop harnesses.
 //!
@@ -49,6 +51,7 @@
 pub mod checkpoint;
 pub mod coordinator;
 pub mod logger;
+pub mod net;
 pub mod ray;
 pub mod runtime;
 pub mod trainable;

@@ -15,6 +15,8 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use tune::coordinator::hub::{ExperimentHub, Submission};
 use tune::coordinator::persist::write_atomic;
@@ -24,6 +26,10 @@ use tune::coordinator::{
     SpecFile,
 };
 use tune::logger::ExperimentAnalysis;
+use tune::net::{
+    serve, wait_until_up, Client, ListenAddr, ServeOptions, ShardedHub, ShardedHubOptions,
+    WorkloadResolver,
+};
 use tune::ray::{AutoscalePolicy, Cluster, Resources};
 use tune::runtime::{Manifest, PjrtService};
 use tune::trainable::jax_model::jax_factory;
@@ -105,24 +111,35 @@ COMMANDS
                                 N MiB (cold chunks spill to --exp-dir's
                                 chunk tier; 0 = unbounded)
              --seed N
-  serve      --exp-dir DIR      server root: spec files dropped into
-                                DIR/queue/ become live experiments, all
-                                multiplexed over ONE shared worker pool
-                                with weighted fair-share admission;
-                                results land in DIR/experiments/<name>/
+  serve      --listen ADDR      serve the control plane on a socket:
+                                HOST:PORT (TCP, port 0 = pick) or
+                                unix:/path.sock; clients connect with
+                                submit/status/stop --addr ADDR
+             --shards N         hub shards over the one worker fleet
+                                (experiments hashed by name; default 1)
+             --exp-dir DIR      durable root; results land under
+                                DIR/shards/<k>/experiments/<name>/
              --workers N        pool worker threads (default 4)
              --worker-cpus F --worker-gpus F  per-worker capacities:
                                 admission + fair share become resource
                                 vectors instead of slot counts
              --max-live N       global live-trial budget split across
                                 experiments (default 4 x workers)
-             --drain            exit once the queue is empty and every
-                                experiment finished (for scripting)
-  submit     --exp-dir DIR --spec FILE.json
-                                validate FILE and queue it on the server
-                                (spec field \"weight\" sets its share)
-  status     --exp-dir DIR      print the server's experiment table
-  stop       --exp-dir DIR      ask the server to shut down
+             (without --listen: DEPRECATED file-queue mode — specs
+              dropped into DIR/queue/ are ingested, status published
+              to DIR/serve.status.json; --drain exits once idle)
+  submit     --addr ADDR --spec FILE.json
+                                validate FILE and submit it over the
+                                socket (spec field \"weight\" sets its
+                                share); --exp-dir DIR uses the
+                                deprecated file queue instead
+  status     --addr ADDR        print the server's experiment table
+                                (--exp-dir DIR reads the deprecated
+                                status file instead)
+  stop       --addr ADDR        ask the server to shut down; --no-drain
+                                abandons in-flight experiments instead
+                                of finishing them (--exp-dir DIR writes
+                                the deprecated stop file instead)
   shootout   --samples N --iters N   compare all schedulers (sim, C1)
   loc-table  regenerate Table 1 (lines of code per algorithm)
   analyze    --log-dir DIR --metric NAME --mode min|max
@@ -563,24 +580,71 @@ fn ingest_queue(
     accepted
 }
 
-/// Atomically publish the hub's status table for `tune status`.
-fn publish_status(hub: &ExperimentHub, root: &Path) {
-    if let Err(e) = write_atomic(&root.join("serve.status.json"), &hub.status_json().to_string()) {
-        eprintln!("serve: writing status file: {e}");
+/// Minimum gap between `serve.status.json` rewrites in the file-queue
+/// fallback. The table is a poll target, not a log: writers that dump
+/// an identical file every 300 ms tick just burn fsyncs.
+const STATUS_WRITE_EVERY: Duration = Duration::from_millis(250);
+
+/// Rate-limited atomic publisher for the file-queue fallback's status
+/// table: writes only when the rendered status actually changed, and at
+/// most once per [`STATUS_WRITE_EVERY`] unless forced (final publish).
+struct StatusPublisher {
+    path: PathBuf,
+    last_text: String,
+    last_write: Instant,
+}
+
+impl StatusPublisher {
+    fn new(root: &Path) -> StatusPublisher {
+        StatusPublisher {
+            path: root.join("serve.status.json"),
+            last_text: String::new(),
+            // lint:allow(clock): status rate limiting is wall-clock by definition.
+            last_write: Instant::now(),
+        }
+    }
+
+    fn publish(&mut self, hub: &ExperimentHub, force: bool) {
+        let text = hub.status_json().to_string();
+        if text == self.last_text {
+            return; // nothing changed: an idle server writes nothing
+        }
+        // lint:allow(clock): status rate limiting is wall-clock by definition.
+        let now = Instant::now();
+        if !force && now.duration_since(self.last_write) < STATUS_WRITE_EVERY {
+            return; // changed, but inside the window: next tick catches it
+        }
+        if let Err(e) = write_atomic(&self.path, &text) {
+            eprintln!("serve: writing status file: {e}");
+        }
+        self.last_text = text;
+        self.last_write = now;
     }
 }
 
-/// `tune serve`: the long-running multi-experiment coordinator. One
-/// shared bounded pool serves every experiment; the control plane is
-/// the filesystem (queue/ for submissions, serve.status.json for
-/// status, serve.stop to shut down) so no network stack is needed.
+/// `tune serve`: the long-running multi-experiment coordinator. With
+/// `--listen`, serves the socket control plane: N hub shards over one
+/// shared worker fleet, clients speaking the framed protocol via
+/// `submit`/`status`/`stop --addr`. Without it, falls back to the
+/// DEPRECATED file-queue control plane (queue/ for submissions,
+/// serve.status.json for status, serve.stop to shut down).
 fn cmd_serve(flags: &Flags) {
+    if let Some(listen) = flags.0.get("listen") {
+        return cmd_serve_net(flags, listen);
+    }
+    eprintln!(
+        "serve: file-queue mode is deprecated; prefer `tune serve --listen HOST:PORT` \
+         (or unix:/path.sock) with `tune submit/status/stop --addr ADDR`"
+    );
     let root = PathBuf::from(flags.get("exp-dir", "tune_serve"));
     let workers = flags.get_u64("workers", 4) as usize;
     let max_live = flags.get_u64("max-live", 4 * workers as u64) as usize;
     let drain = flags.0.contains_key("drain");
     let queue = root.join("queue");
-    std::fs::create_dir_all(&queue).expect("create serve queue dir");
+    if let Err(e) = std::fs::create_dir_all(&queue) {
+        eprintln!("serve: cannot create queue dir {queue:?}: {e}");
+        std::process::exit(1);
+    }
     let stop_file = root.join("serve.stop");
     std::fs::remove_file(&stop_file).ok(); // stale stop from a past server
 
@@ -592,6 +656,7 @@ fn cmd_serve(flags: &Flags) {
         None => ExperimentHub::new(workers, max_live),
     };
     let mut seen = std::collections::BTreeSet::new();
+    let mut publisher = StatusPublisher::new(&root);
     let mut served = 0usize;
     println!(
         "serve: {} workers, {} live-trial slots; queue at {:?}",
@@ -600,7 +665,7 @@ fn cmd_serve(flags: &Flags) {
     loop {
         served += ingest_queue(&mut hub, &root, &queue, &mut seen);
         let any_active = hub.run_for(std::time::Duration::from_millis(300));
-        publish_status(&hub, &root);
+        publisher.publish(&hub, false);
         if stop_file.exists() {
             std::fs::remove_file(&stop_file).ok();
             println!(
@@ -618,12 +683,76 @@ fn cmd_serve(flags: &Flags) {
             std::thread::sleep(std::time::Duration::from_millis(200));
         }
     }
-    publish_status(&hub, &root);
+    publisher.publish(&hub, true);
 }
 
-/// `tune submit`: validate a spec file and queue it on a server.
-fn cmd_submit(flags: &Flags) {
+/// `tune serve --listen`: the sharded socket control plane.
+fn cmd_serve_net(flags: &Flags, listen: &str) {
+    let addr = match ListenAddr::parse(listen) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("serve: bad --listen {listen:?}: {e}");
+            std::process::exit(2);
+        }
+    };
+    let workers = flags.get_u64("workers", 4) as usize;
+    let max_live = flags.get_u64("max-live", 4 * workers as u64) as usize;
+    let shards = (flags.get_u64("shards", 1) as usize).max(1);
     let root = PathBuf::from(flags.get("exp-dir", "tune_serve"));
+    if let Err(e) = std::fs::create_dir_all(&root) {
+        eprintln!("serve: cannot create {root:?}: {e}");
+        std::process::exit(1);
+    }
+    let hub = ShardedHub::new(ShardedHubOptions {
+        shards,
+        workers,
+        worker_caps: worker_caps(flags, workers),
+        max_live,
+        root: Some(root.clone()),
+        snapshot_every: flags.get_u64("snapshot-every", 50),
+    });
+    let resolver: WorkloadResolver =
+        Arc::new(|workload| try_workload_factory(workload).map(|(factory, _exec)| factory));
+    let handle = match serve(&addr, hub, resolver, ServeOptions::default()) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("serve: cannot listen on {addr}: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "serve: listening on {} ({} shard(s), {} workers, {} live-trial slots); results under {:?}",
+        handle.addr(),
+        shards,
+        workers,
+        max_live,
+        root
+    );
+    let results = handle.join();
+    println!("serve: stopped ({} experiment(s) completed)", results.len());
+}
+
+/// Parse a `--addr` socket address or exit with the parse error.
+fn parse_addr_or_exit(cmd: &str, addr: &str) -> ListenAddr {
+    ListenAddr::parse(addr).unwrap_or_else(|e| {
+        eprintln!("{cmd}: bad --addr {addr:?}: {e}");
+        std::process::exit(2);
+    })
+}
+
+/// Dial a serve control plane (short retry window: the server the
+/// caller just started may still be binding) or exit with the error.
+fn connect_or_exit(cmd: &str, addr: &ListenAddr) -> Client {
+    wait_until_up(addr, Duration::from_secs(2)).unwrap_or_else(|e| {
+        eprintln!("{cmd}: {e}");
+        std::process::exit(1);
+    })
+}
+
+/// `tune submit`: validate a spec file and submit it to a server —
+/// over the socket with `--addr`, or onto the DEPRECATED file queue
+/// with `--exp-dir`.
+fn cmd_submit(flags: &Flags) {
     let Some(spec_path) = flags.0.get("spec").map(PathBuf::from) else {
         eprintln!("submit: --spec FILE.json is required");
         std::process::exit(2);
@@ -634,9 +763,34 @@ fn cmd_submit(flags: &Flags) {
         eprintln!("submit: spec error: {e:#}");
         std::process::exit(2);
     });
+    let text = match std::fs::read_to_string(&spec_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("submit: cannot re-read {spec_path:?}: {e}");
+            std::process::exit(1);
+        }
+    };
+    if let Some(addr) = flags.0.get("addr") {
+        let addr = parse_addr_or_exit("submit", addr);
+        let mut client = connect_or_exit("submit", &addr);
+        match client.submit_spec_text(&text) {
+            Ok(name) => println!(
+                "submitted {:?} (experiment {:?}, weight {}) to {}",
+                spec_path, name, f.weight, addr
+            ),
+            Err(e) => {
+                eprintln!("submit: server rejected the spec: {e}");
+                std::process::exit(1);
+            }
+        }
+        return;
+    }
+    let root = PathBuf::from(flags.get("exp-dir", "tune_serve"));
     let queue = root.join("queue");
-    std::fs::create_dir_all(&queue).expect("create serve queue dir");
-    let text = std::fs::read_to_string(&spec_path).expect("re-read spec file");
+    if let Err(e) = std::fs::create_dir_all(&queue) {
+        eprintln!("submit: cannot create queue dir {queue:?}: {e}");
+        std::process::exit(1);
+    }
     // Key the queue entry by the validated experiment name, not the
     // caller's file stem: two users submitting different experiments
     // from files that happen to share a name must not clobber each
@@ -650,15 +804,97 @@ fn cmd_submit(flags: &Flags) {
         );
         std::process::exit(1);
     }
-    write_atomic(&target, &text).expect("queue spec file");
+    if let Err(e) = write_atomic(&target, &text) {
+        eprintln!("submit: cannot queue spec at {target:?}: {e}");
+        std::process::exit(1);
+    }
     println!(
         "submitted {:?} (experiment {:?}, weight {}) to {:?}",
         spec_path, f.spec.name, f.weight, queue
     );
 }
 
-/// `tune status`: print the server's published experiment table.
+/// Render a status document (from either control plane) as the
+/// standard experiment table. Sharded status (a `shards` field) grows
+/// a per-experiment shard column; legacy file-queue status keeps the
+/// original columns.
+fn print_status_table(s: &tune::util::json::Json) {
+    let num = |k: &str| s.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+    let sharded = s.get("shards").is_some();
+    println!(
+        "serve: {} workers, {} live-trial slots, {} active experiment(s){}",
+        num("workers"),
+        num("max_live"),
+        num("active"),
+        if sharded { format!(", {} shard(s)", num("shards")) } else { String::new() },
+    );
+    if sharded {
+        println!(
+            "{:<24} {:>5} {:>9} {:>7} {:>8} {:>8} {:>12} {:>6} {:>6}",
+            "experiment", "shard", "state", "weight", "trials", "running", "best", "cpu%", "gpu%"
+        );
+        println!("{}", "-".repeat(94));
+    } else {
+        println!(
+            "{:<24} {:>9} {:>7} {:>8} {:>8} {:>12} {:>6} {:>6}",
+            "experiment", "state", "weight", "trials", "running", "best", "cpu%", "gpu%"
+        );
+        println!("{}", "-".repeat(88));
+    }
+    for e in s.get("experiments").and_then(|e| e.as_arr()).unwrap_or(&[]) {
+        let get = |k: &str| e.get(k).and_then(|v| v.as_str()).unwrap_or("?").to_string();
+        let n = |k: &str| e.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+        let frac = |k: &str| e.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0) * 100.0;
+        let best = e
+            .get("best_metric")
+            .and_then(|v| v.as_f64())
+            .map(|v| format!("{v:.4}"))
+            .unwrap_or_else(|| "-".into());
+        if sharded {
+            println!(
+                "{:<24} {:>5} {:>9} {:>7} {:>8} {:>8} {:>12} {:>6.0} {:>6.0}",
+                get("name"),
+                n("shard"),
+                get("state"),
+                n("weight"),
+                n("trials"),
+                n("running"),
+                best,
+                frac("util_cpu"),
+                frac("util_gpu"),
+            );
+        } else {
+            println!(
+                "{:<24} {:>9} {:>7} {:>8} {:>8} {:>12} {:>6.0} {:>6.0}",
+                get("name"),
+                get("state"),
+                n("weight"),
+                n("trials"),
+                n("running"),
+                best,
+                frac("util_cpu"),
+                frac("util_gpu"),
+            );
+        }
+    }
+}
+
+/// `tune status`: print the server's experiment table — over the
+/// socket with `--addr`, or from the DEPRECATED published status file
+/// with `--exp-dir`.
 fn cmd_status(flags: &Flags) {
+    if let Some(addr) = flags.0.get("addr") {
+        let addr = parse_addr_or_exit("status", addr);
+        let mut client = connect_or_exit("status", &addr);
+        match client.status() {
+            Ok(s) => print_status_table(&s),
+            Err(e) => {
+                eprintln!("status: {e}");
+                std::process::exit(1);
+            }
+        }
+        return;
+    }
     let root = PathBuf::from(flags.get("exp-dir", "tune_serve"));
     let path = root.join("serve.status.json");
     let Ok(text) = std::fs::read_to_string(&path) else {
@@ -672,45 +908,32 @@ fn cmd_status(flags: &Flags) {
         eprintln!("status: unreadable status file: {e}");
         std::process::exit(1);
     });
-    let num = |k: &str| s.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
-    println!(
-        "serve: {} workers, {} live-trial slots, {} active experiment(s)",
-        num("workers"),
-        num("max_live"),
-        num("active")
-    );
-    println!(
-        "{:<24} {:>9} {:>7} {:>8} {:>8} {:>12} {:>6} {:>6}",
-        "experiment", "state", "weight", "trials", "running", "best", "cpu%", "gpu%"
-    );
-    println!("{}", "-".repeat(88));
-    for e in s.get("experiments").and_then(|e| e.as_arr()).unwrap_or(&[]) {
-        let get = |k: &str| e.get(k).and_then(|v| v.as_str()).unwrap_or("?").to_string();
-        let n = |k: &str| e.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
-        let frac = |k: &str| e.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0) * 100.0;
-        let best = e
-            .get("best_metric")
-            .and_then(|v| v.as_f64())
-            .map(|v| format!("{v:.4}"))
-            .unwrap_or_else(|| "-".into());
-        println!(
-            "{:<24} {:>9} {:>7} {:>8} {:>8} {:>12} {:>6.0} {:>6.0}",
-            get("name"),
-            get("state"),
-            n("weight"),
-            n("trials"),
-            n("running"),
-            best,
-            frac("util_cpu"),
-            frac("util_gpu"),
-        );
-    }
+    print_status_table(&s);
 }
 
-/// `tune stop`: ask a running server to shut down.
+/// `tune stop`: ask a running server to shut down — over the socket
+/// with `--addr` (drains in-flight experiments unless `--no-drain`),
+/// or via the DEPRECATED stop file with `--exp-dir`.
 fn cmd_stop(flags: &Flags) {
+    if let Some(addr) = flags.0.get("addr") {
+        let addr = parse_addr_or_exit("stop", addr);
+        let drain = !flags.0.contains_key("no-drain");
+        let mut client = connect_or_exit("stop", &addr);
+        if let Err(e) = client.stop(drain) {
+            eprintln!("stop: {e}");
+            std::process::exit(1);
+        }
+        println!(
+            "stop requested at {addr} ({} in-flight experiments)",
+            if drain { "draining" } else { "abandoning" }
+        );
+        return;
+    }
     let root = PathBuf::from(flags.get("exp-dir", "tune_serve"));
-    write_atomic(&root.join("serve.stop"), "stop\n").expect("write stop file");
+    if let Err(e) = write_atomic(&root.join("serve.stop"), "stop\n") {
+        eprintln!("stop: cannot write stop file under {root:?}: {e}");
+        std::process::exit(1);
+    }
     println!("stop requested for server at {:?}", root);
 }
 

@@ -1,0 +1,190 @@
+//! Socket client for the serve control plane — what `tune submit` /
+//! `status` / `stop` (and the QPS bench) speak. One [`Client`] is one
+//! persistent connection; every verb is a request frame followed by
+//! one reply frame, except `watch`, which turns the connection into a
+//! stream of status-delta events that the client acknowledges.
+
+// lint:allow(clock): connect retries and read deadlines are wall-clock
+// by nature, like the rest of the net substrate.
+
+use std::io::{self, Write};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+use super::protocol::{
+    frame_bytes, read_frame, FrameError, ListenAddr, NetStream, MAX_FRAME_BYTES,
+    PROTOCOL_VERSION,
+};
+
+/// One persistent control-plane connection.
+pub struct Client {
+    stream: NetStream,
+    /// Request+reply bytes moved on this connection (for bytes/req
+    /// accounting in the bench).
+    bytes: u64,
+}
+
+impl Client {
+    /// Dial the server with the default 30 s read deadline.
+    pub fn connect(addr: &ListenAddr) -> io::Result<Client> {
+        Client::connect_with_timeout(addr, Duration::from_secs(30))
+    }
+
+    /// Dial with an explicit read deadline (None = block forever).
+    pub fn connect_with_timeout(
+        addr: &ListenAddr,
+        read_timeout: Duration,
+    ) -> io::Result<Client> {
+        let stream = NetStream::connect(addr)?;
+        stream.set_read_timeout(Some(read_timeout))?;
+        stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+        Ok(Client { stream, bytes: 0 })
+    }
+
+    /// Total request+reply bytes this connection has moved.
+    pub fn bytes_moved(&self) -> u64 {
+        self.bytes
+    }
+
+    fn request(&mut self, mut req: Json) -> Result<Json, String> {
+        if let Json::Obj(obj) = &mut req {
+            obj.insert("proto".into(), Json::Num(PROTOCOL_VERSION as f64));
+        }
+        let frame = frame_bytes(&req);
+        self.bytes += frame.len() as u64;
+        self.stream
+            .write_all(&frame)
+            .map_err(|e| format!("sending request: {e}"))?;
+        match read_frame(&mut self.stream, MAX_FRAME_BYTES) {
+            Ok(Some(reply)) => {
+                self.bytes += 4 + reply.to_string().len() as u64;
+                if reply.get("ok").and_then(Json::as_bool) == Some(false) {
+                    let msg = reply
+                        .get("error")
+                        .and_then(Json::as_str)
+                        .unwrap_or("unspecified server error");
+                    return Err(msg.to_string());
+                }
+                Ok(reply)
+            }
+            Ok(None) => Err("server closed the connection".into()),
+            Err(FrameError::Io(e)) => Err(format!("reading reply: {e}")),
+            Err(e) => Err(format!("bad reply: {e}")),
+        }
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<(), String> {
+        self.request(Json::obj(vec![("verb", Json::Str("ping".into()))]))
+            .map(|_| ())
+    }
+
+    /// Submit a spec file's *text*; the server parses and admits it.
+    /// Returns the admitted experiment name.
+    pub fn submit_spec_text(&mut self, spec_text: &str) -> Result<String, String> {
+        let reply = self.request(Json::obj(vec![
+            ("verb", Json::Str("submit".into())),
+            ("spec", Json::Str(spec_text.to_string())),
+        ]))?;
+        Ok(reply
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string())
+    }
+
+    /// Aggregated hub status (the `status` field of the reply).
+    pub fn status(&mut self) -> Result<Json, String> {
+        let reply = self.request(Json::obj(vec![("verb", Json::Str("status".into()))]))?;
+        reply
+            .get("status")
+            .cloned()
+            .ok_or_else(|| "status reply missing \"status\"".into())
+    }
+
+    /// Ask the server to stop. `drain` = finish in-flight experiments
+    /// first.
+    pub fn stop(&mut self, drain: bool) -> Result<(), String> {
+        self.request(Json::obj(vec![
+            ("verb", Json::Str("stop".into())),
+            ("drain", Json::Bool(drain)),
+        ]))
+        .map(|_| ())
+    }
+
+    /// Enter watch mode: stream status-delta events into `on_event`
+    /// (acknowledging each, which is what keeps this client from
+    /// being shed) until the server says bye, the callback returns
+    /// `false`, or the stream ends. Consumes the client — a watch
+    /// connection never returns to request/reply mode.
+    pub fn watch(mut self, mut on_event: impl FnMut(&Json) -> bool) -> Result<(), String> {
+        let frame = frame_bytes(&Json::obj(vec![
+            ("verb", Json::Str("watch".into())),
+            ("proto", Json::Num(PROTOCOL_VERSION as f64)),
+        ]));
+        self.stream
+            .write_all(&frame)
+            .map_err(|e| format!("sending watch request: {e}"))?;
+        // The ok-reply that precedes the stream.
+        match read_frame(&mut self.stream, MAX_FRAME_BYTES) {
+            Ok(Some(reply)) if reply.get("ok").and_then(Json::as_bool) == Some(true) => {}
+            Ok(Some(reply)) => {
+                return Err(reply
+                    .get("error")
+                    .and_then(Json::as_str)
+                    .unwrap_or("watch rejected")
+                    .to_string())
+            }
+            Ok(None) => return Err("server closed the connection".into()),
+            Err(e) => return Err(format!("bad watch reply: {e}")),
+        }
+        loop {
+            match read_frame(&mut self.stream, MAX_FRAME_BYTES) {
+                Ok(Some(event)) => {
+                    if event.get("event").and_then(Json::as_str) == Some("bye") {
+                        return Ok(());
+                    }
+                    if let Some(seq) = event.get("seq").and_then(Json::as_f64) {
+                        let ack = frame_bytes(&Json::obj(vec![
+                            ("verb", Json::Str("ack".into())),
+                            ("seq", Json::Num(seq)),
+                        ]));
+                        self.stream
+                            .write_all(&ack)
+                            .map_err(|e| format!("sending ack: {e}"))?;
+                    }
+                    if !on_event(&event) {
+                        return Ok(());
+                    }
+                }
+                // Shed or server gone: the stream just ends.
+                Ok(None) => return Ok(()),
+                Err(FrameError::Io(e)) => return Err(format!("watch stream: {e}")),
+                Err(e) => return Err(format!("bad watch frame: {e}")),
+            }
+        }
+    }
+}
+
+/// Dial-with-retry until the server answers a ping or `total` elapses
+/// — the standard way to wait out a server that is still binding.
+pub fn wait_until_up(addr: &ListenAddr, total: Duration) -> Result<Client, String> {
+    let deadline = Instant::now() + total;
+    loop {
+        match Client::connect_with_timeout(addr, Duration::from_secs(5)) {
+            Ok(mut c) => match c.ping() {
+                Ok(()) => return Ok(c),
+                Err(e) if Instant::now() >= deadline => {
+                    return Err(format!("server at {addr} not answering: {e}"))
+                }
+                Err(_) => {}
+            },
+            Err(e) if Instant::now() >= deadline => {
+                return Err(format!("cannot reach {addr}: {e}"))
+            }
+            Err(_) => {}
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}

@@ -1,0 +1,25 @@
+//! The network control plane: `tune serve` as a socket service.
+//!
+//! Three layers, bottom up:
+//!
+//! * [`protocol`] — length-prefixed JSON frames over TCP or Unix
+//!   sockets, with an error taxonomy that distinguishes recoverable
+//!   garbage from unrecoverable framing loss.
+//! * [`shard`] — [`ShardedHub`]: N `ExperimentHub` shards over ONE
+//!   shared worker fleet, experiments routed by a deterministic name
+//!   hash, status aggregated from per-shard cached snapshots.
+//! * [`server`] / [`client`] — the accept loop, verb dispatch, watch
+//!   streaming with slow-consumer shedding, and the matching client.
+//!
+//! See ARCHITECTURE.md ("The network control plane") for the frame
+//! format, verb table and drain semantics.
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+pub mod shard;
+
+pub use client::{wait_until_up, Client};
+pub use protocol::ListenAddr;
+pub use server::{serve, ServeOptions, ServerHandle, WorkloadResolver};
+pub use shard::{shard_of, ShardedHub, ShardedHubOptions};

@@ -1,0 +1,457 @@
+//! Wire protocol for the serve control plane: length-prefixed JSON
+//! frames over TCP or Unix-domain sockets.
+//!
+//! A frame is a 4-byte big-endian length followed by exactly that many
+//! bytes of UTF-8 JSON. Requests are objects with a `"verb"` key
+//! (`submit` / `status` / `stop` / `watch` / `ping` / `ack`); replies
+//! are objects with `"ok": true|false`. The framing is deliberately
+//! dumb: no compression, no multiplexing, no version negotiation
+//! beyond a `proto` field — a control plane moves kilobytes, and every
+//! client in any language can speak it with a dozen lines of code.
+//!
+//! Error taxonomy, which the server's connection loop leans on:
+//!
+//! * [`FrameError::Garbage`] — the length header was sane and fully
+//!   consumed, but the body is not valid JSON. Framing is intact, so
+//!   the server replies with an error frame and keeps the connection.
+//! * [`FrameError::Oversized`] — the header declares more than the
+//!   cap. The body has NOT been consumed and cannot be trusted enough
+//!   to skip, so the server replies with an error frame and closes.
+//! * [`FrameError::Io`] — the peer vanished (torn frame:
+//!   `UnexpectedEof` mid-frame) or a read deadline fired
+//!   (`WouldBlock`/`TimedOut`). The connection is dropped.
+//!
+//! A clean EOF *between* frames is not an error: [`read_frame`]
+//! returns `Ok(None)` and the server retires the connection.
+
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::util::json::{parse, Json};
+
+/// Protocol revision carried in every request (`"proto"`); bumped on
+/// incompatible changes.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Default per-frame size cap. A submit frame is a spec file (a few
+/// KiB); a megabyte already means a confused or hostile peer.
+pub const MAX_FRAME_BYTES: usize = 1 << 20;
+
+/// Length-header size.
+const HEADER_BYTES: usize = 4;
+
+/// Where a serve control plane listens (or a client dials).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ListenAddr {
+    /// TCP `host:port` (port 0 = kernel-assigned, reported on bind).
+    Tcp(String),
+    /// Unix-domain socket at the given filesystem path.
+    Unix(PathBuf),
+}
+
+impl ListenAddr {
+    /// Parse an address argument: `unix:/path/to.sock` selects a
+    /// Unix-domain socket, anything else must look like `host:port`.
+    pub fn parse(text: &str) -> Result<ListenAddr, String> {
+        if let Some(path) = text.strip_prefix("unix:") {
+            if path.is_empty() {
+                return Err("unix: address needs a socket path".into());
+            }
+            return Ok(ListenAddr::Unix(PathBuf::from(path)));
+        }
+        match text.rsplit_once(':') {
+            Some((host, port)) if !host.is_empty() && port.parse::<u16>().is_ok() => {
+                Ok(ListenAddr::Tcp(text.to_string()))
+            }
+            _ => Err(format!(
+                "bad address {text:?}: expected host:port or unix:/path.sock"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for ListenAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ListenAddr::Tcp(hp) => write!(f, "{hp}"),
+            ListenAddr::Unix(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+/// A bound listener over either transport.
+pub enum NetListener {
+    /// TCP listener.
+    Tcp(TcpListener),
+    /// Unix-domain listener.
+    Unix(UnixListener),
+}
+
+impl NetListener {
+    /// Bind `addr`. A pre-existing Unix socket file is removed first
+    /// (the previous server is dead or it would still hold the bind);
+    /// TCP port 0 resolves to a kernel-assigned port, readable from
+    /// the returned display address.
+    pub fn bind(addr: &ListenAddr) -> io::Result<(NetListener, ListenAddr)> {
+        match addr {
+            ListenAddr::Tcp(hp) => {
+                let l = TcpListener::bind(hp.as_str())?;
+                let actual = l.local_addr()?;
+                Ok((NetListener::Tcp(l), ListenAddr::Tcp(actual.to_string())))
+            }
+            ListenAddr::Unix(path) => {
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)?;
+                Ok((NetListener::Unix(l), ListenAddr::Unix(path.clone())))
+            }
+        }
+    }
+
+    /// Toggle accept-loop blocking (the server polls non-blocking so
+    /// it can observe its stop flag between accepts).
+    pub fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            NetListener::Tcp(l) => l.set_nonblocking(nb),
+            NetListener::Unix(l) => l.set_nonblocking(nb),
+        }
+    }
+
+    /// Accept one connection (transport-erased).
+    pub fn accept(&self) -> io::Result<NetStream> {
+        match self {
+            NetListener::Tcp(l) => l.accept().map(|(s, _)| NetStream::Tcp(s)),
+            NetListener::Unix(l) => l.accept().map(|(s, _)| NetStream::Unix(s)),
+        }
+    }
+}
+
+/// One connected stream over either transport.
+#[derive(Debug)]
+pub enum NetStream {
+    /// A TCP connection.
+    Tcp(TcpStream),
+    /// A Unix-domain connection.
+    Unix(UnixStream),
+}
+
+impl NetStream {
+    /// Dial a server.
+    pub fn connect(addr: &ListenAddr) -> io::Result<NetStream> {
+        match addr {
+            ListenAddr::Tcp(hp) => TcpStream::connect(hp.as_str()).map(NetStream::Tcp),
+            ListenAddr::Unix(p) => UnixStream::connect(p).map(NetStream::Unix),
+        }
+    }
+
+    /// Read deadline: a blocked read fails with
+    /// `WouldBlock`/`TimedOut` after `dur` (None = wait forever).
+    pub fn set_read_timeout(&self, dur: Option<Duration>) -> io::Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.set_read_timeout(dur),
+            NetStream::Unix(s) => s.set_read_timeout(dur),
+        }
+    }
+
+    /// Write deadline, same contract as the read side.
+    pub fn set_write_timeout(&self, dur: Option<Duration>) -> io::Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.set_write_timeout(dur),
+            NetStream::Unix(s) => s.set_write_timeout(dur),
+        }
+    }
+
+    /// Non-blocking mode (the watch loop interleaves ack reads with
+    /// delta writes on one thread).
+    pub fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.set_nonblocking(nb),
+            NetStream::Unix(s) => s.set_nonblocking(nb),
+        }
+    }
+
+    /// Close both directions; the peer's next read sees EOF.
+    pub fn shutdown(&self) -> io::Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+            NetStream::Unix(s) => s.shutdown(std::net::Shutdown::Both),
+        }
+    }
+}
+
+impl Read for NetStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            NetStream::Tcp(s) => s.read(buf),
+            NetStream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for NetStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            NetStream::Tcp(s) => s.write(buf),
+            NetStream::Unix(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.flush(),
+            NetStream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// Why a frame could not be produced. See the module docs for how the
+/// server maps each variant to reply-and-keep vs close.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Transport failure: torn frame (EOF mid-frame), reset, or an
+    /// expired read deadline.
+    Io(io::Error),
+    /// The header declared more bytes than the cap; the body was not
+    /// consumed, so the stream cannot be resynchronized.
+    Oversized(usize),
+    /// The body was fully consumed but is not valid JSON; framing is
+    /// intact and the connection can continue.
+    Garbage(String),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "io: {e}"),
+            FrameError::Oversized(n) => {
+                write!(f, "frame of {n} bytes exceeds cap of {MAX_FRAME_BYTES}")
+            }
+            FrameError::Garbage(e) => write!(f, "bad frame body: {e}"),
+        }
+    }
+}
+
+/// Encode one message as a frame, appended to `out` (callers batch
+/// several frames into one write).
+pub fn encode_frame(msg: &Json, out: &mut Vec<u8>) {
+    let body = msg.to_string();
+    let len = body.len() as u32;
+    out.extend_from_slice(&len.to_be_bytes());
+    out.extend_from_slice(body.as_bytes());
+}
+
+/// Encode one message as an owned frame buffer.
+pub fn frame_bytes(msg: &Json) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_frame(msg, &mut out);
+    out
+}
+
+/// Blocking frame read. `Ok(None)` = clean EOF at a frame boundary
+/// (the peer hung up between requests). Honors whatever read deadline
+/// is set on the stream (deadline expiry surfaces as
+/// [`FrameError::Io`]).
+pub fn read_frame(r: &mut impl Read, max: usize) -> Result<Option<Json>, FrameError> {
+    let mut header = [0u8; HEADER_BYTES];
+    // Distinguish "no frame at all" (clean close) from a torn header.
+    let mut got = 0;
+    while got < HEADER_BYTES {
+        match r.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(FrameError::Io(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "torn frame header",
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    let len = u32::from_be_bytes(header) as usize;
+    if len == 0 {
+        return Err(FrameError::Garbage("empty frame body".into()));
+    }
+    if len > max {
+        return Err(FrameError::Oversized(len));
+    }
+    let mut body = vec![0u8; len];
+    let mut got = 0;
+    while got < len {
+        match r.read(&mut body[got..]) {
+            Ok(0) => {
+                return Err(FrameError::Io(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "torn frame body",
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    match std::str::from_utf8(&body) {
+        Ok(text) => match parse(text) {
+            Ok(j) => Ok(Some(j)),
+            Err(e) => Err(FrameError::Garbage(e)),
+        },
+        Err(e) => Err(FrameError::Garbage(format!("frame body not UTF-8: {e}"))),
+    }
+}
+
+/// Incremental frame decoder for non-blocking streams: feed whatever
+/// bytes arrived, pop complete frames. The watch loop uses this to
+/// read client acks without ever blocking its delta writes.
+pub struct FrameReader {
+    buf: Vec<u8>,
+    max: usize,
+}
+
+impl FrameReader {
+    /// A decoder enforcing the given per-frame cap.
+    pub fn new(max: usize) -> FrameReader {
+        FrameReader { buf: Vec::new(), max }
+    }
+
+    /// Append newly-received bytes.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pop the next complete frame; `Ok(None)` = need more bytes.
+    /// Oversized and garbage frames carry the same
+    /// keep-vs-close semantics as [`read_frame`].
+    pub fn next_frame(&mut self) -> Result<Option<Json>, FrameError> {
+        if self.buf.len() < HEADER_BYTES {
+            return Ok(None);
+        }
+        let mut header = [0u8; HEADER_BYTES];
+        header.copy_from_slice(&self.buf[..HEADER_BYTES]);
+        let len = u32::from_be_bytes(header) as usize;
+        if len == 0 {
+            self.buf.drain(..HEADER_BYTES);
+            return Err(FrameError::Garbage("empty frame body".into()));
+        }
+        if len > self.max {
+            return Err(FrameError::Oversized(len));
+        }
+        if self.buf.len() < HEADER_BYTES + len {
+            return Ok(None);
+        }
+        let body: Vec<u8> = self.buf[HEADER_BYTES..HEADER_BYTES + len].to_vec();
+        self.buf.drain(..HEADER_BYTES + len);
+        match std::str::from_utf8(&body) {
+            Ok(text) => match parse(text) {
+                Ok(j) => Ok(Some(j)),
+                Err(e) => Err(FrameError::Garbage(e)),
+            },
+            Err(e) => Err(FrameError::Garbage(format!("frame body not UTF-8: {e}"))),
+        }
+    }
+}
+
+/// A `{"ok": false, "error": ...}` reply frame body.
+pub fn error_reply(msg: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.to_string())),
+    ])
+}
+
+/// A `{"ok": true, ...extra}` reply frame body.
+pub fn ok_reply(extra: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![("ok", Json::Bool(true))];
+    pairs.extend(extra);
+    Json::obj(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let msg = Json::obj(vec![
+            ("verb", Json::Str("status".into())),
+            ("proto", Json::Num(PROTOCOL_VERSION as f64)),
+        ]);
+        let bytes = frame_bytes(&msg);
+        assert_eq!(bytes.len(), 4 + msg.to_string().len());
+        let mut cursor = std::io::Cursor::new(bytes);
+        let back = read_frame(&mut cursor, MAX_FRAME_BYTES).unwrap().unwrap();
+        assert_eq!(back, msg);
+        // Clean EOF at the frame boundary.
+        assert!(read_frame(&mut cursor, MAX_FRAME_BYTES).unwrap().is_none());
+    }
+
+    #[test]
+    fn torn_and_oversized_and_garbage_frames() {
+        // Torn: header promises 100 bytes, stream ends after 3.
+        let mut torn = 100u32.to_be_bytes().to_vec();
+        torn.extend_from_slice(b"abc");
+        let mut cursor = std::io::Cursor::new(torn);
+        match read_frame(&mut cursor, MAX_FRAME_BYTES) {
+            Err(FrameError::Io(e)) => {
+                assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof)
+            }
+            other => panic!("{other:?}"),
+        }
+        // Oversized: header alone condemns the frame.
+        let big = ((MAX_FRAME_BYTES + 1) as u32).to_be_bytes().to_vec();
+        let mut cursor = std::io::Cursor::new(big);
+        assert!(matches!(
+            read_frame(&mut cursor, MAX_FRAME_BYTES),
+            Err(FrameError::Oversized(_))
+        ));
+        // Garbage: well-framed, unparseable body — then the NEXT frame
+        // on the same stream still decodes (framing survived).
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&5u32.to_be_bytes());
+        bytes.extend_from_slice(b"{oops");
+        encode_frame(&Json::obj(vec![("ok", Json::Bool(true))]), &mut bytes);
+        let mut cursor = std::io::Cursor::new(bytes);
+        assert!(matches!(
+            read_frame(&mut cursor, MAX_FRAME_BYTES),
+            Err(FrameError::Garbage(_))
+        ));
+        let next = read_frame(&mut cursor, MAX_FRAME_BYTES).unwrap().unwrap();
+        assert_eq!(next.get("ok"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn incremental_reader_handles_split_frames() {
+        let a = Json::obj(vec![("verb", Json::Str("ack".into())), ("seq", Json::Num(1.0))]);
+        let b = Json::obj(vec![("verb", Json::Str("ack".into())), ("seq", Json::Num(2.0))]);
+        let mut bytes = Vec::new();
+        encode_frame(&a, &mut bytes);
+        encode_frame(&b, &mut bytes);
+        let mut r = FrameReader::new(MAX_FRAME_BYTES);
+        // Drip-feed one byte at a time; frames pop exactly when whole.
+        let mut seen = Vec::new();
+        for byte in bytes {
+            r.feed(&[byte]);
+            while let Some(f) = r.next_frame().unwrap() {
+                seen.push(f);
+            }
+        }
+        assert_eq!(seen, vec![a, b]);
+    }
+
+    #[test]
+    fn addr_parse() {
+        assert_eq!(
+            ListenAddr::parse("127.0.0.1:4321").unwrap(),
+            ListenAddr::Tcp("127.0.0.1:4321".into())
+        );
+        assert_eq!(
+            ListenAddr::parse("unix:/tmp/tune.sock").unwrap(),
+            ListenAddr::Unix(PathBuf::from("/tmp/tune.sock"))
+        );
+        assert!(ListenAddr::parse("unix:").is_err());
+        assert!(ListenAddr::parse("no-port").is_err());
+        assert!(ListenAddr::parse(":123").is_err());
+        assert!(ListenAddr::parse("host:notaport").is_err());
+    }
+}

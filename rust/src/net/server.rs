@@ -1,0 +1,431 @@
+//! The serve-side of the control plane: an accept loop, per-connection
+//! verb threads, and the watch streamer with its backpressure policy.
+//!
+//! Threading model: one non-blocking accept loop (so it can observe
+//! the stop flag between accepts) spawns a thread per connection.
+//! Connection threads do blocking framed reads under a per-connection
+//! read deadline and dispatch verbs against the shared [`ShardedHub`];
+//! `submit` crosses into the owning shard over its bounded command
+//! channel, `status` aggregates the per-shard cached cells without
+//! touching any shard thread, and `watch` turns the connection into a
+//! non-blocking status-delta stream.
+//!
+//! Backpressure, in order of preference: a full shard queue rejects
+//! the *one* submission with a retryable error; a slow watch consumer
+//! is shed (connection closed) once its unacknowledged bytes exceed
+//! the cap. Watch streams are always sacrificed before submissions —
+//! they are reconstructible from a fresh `watch`, an admission is not.
+//!
+//! Graceful drain: `stop {drain: true}` flips the server into
+//! draining (new submissions rejected at the door), asks every shard
+//! to finish its in-flight experiments, and keeps answering `status` /
+//! `watch` until the last shard retires; then the accept loop exits
+//! and [`ServerHandle::join`] hands back every experiment result.
+
+// The unwraps here are deliberate (lock poisoning is fatal, as
+// everywhere in the coordinator); the file opts out of the workspace
+// unwrap gate.
+#![allow(clippy::unwrap_used)]
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::runner::ExperimentResult;
+use crate::coordinator::spec_file::SpecFile;
+use crate::trainable::TrainableFactory;
+use crate::util::json::Json;
+
+use super::protocol::{
+    error_reply, frame_bytes, ok_reply, read_frame, FrameError, FrameReader, ListenAddr,
+    NetListener, NetStream, MAX_FRAME_BYTES,
+};
+use super::shard::{submission_from_spec, ShardedHub};
+
+/// Maps a spec file's `workload` name to a trainable factory. The
+/// binary injects its full workload table; tests inject a synthetic
+/// one — the server itself has no workload opinions.
+pub type WorkloadResolver = Arc<dyn Fn(&str) -> Result<TrainableFactory, String> + Send + Sync>;
+
+/// Tunables for one server instance.
+#[derive(Clone)]
+pub struct ServeOptions {
+    /// Per-connection read deadline: an idle persistent connection is
+    /// retired after this long without a frame.
+    pub read_timeout: Duration,
+    /// Per-connection write deadline for blocking reply writes.
+    pub write_timeout: Duration,
+    /// Watch backpressure cap: a watcher with more than this many
+    /// bytes in flight (queued locally + written but unacknowledged)
+    /// is shed.
+    pub watch_cap_bytes: usize,
+    /// Per-frame size cap (requests and replies).
+    pub max_frame_bytes: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            read_timeout: Duration::from_secs(60),
+            write_timeout: Duration::from_secs(10),
+            watch_cap_bytes: 256 * 1024,
+            max_frame_bytes: MAX_FRAME_BYTES,
+        }
+    }
+}
+
+/// Monotonic counters exposed for tests, the bench and `status`
+/// debugging. All relaxed: they order nothing.
+#[derive(Default)]
+pub struct ServerStats {
+    /// Connections accepted.
+    pub conns: AtomicU64,
+    /// Request frames successfully decoded.
+    pub frames_in: AtomicU64,
+    /// Reply/stream frames queued for write.
+    pub frames_out: AtomicU64,
+    /// Submissions admitted.
+    pub submits_ok: AtomicU64,
+    /// Submissions rejected (duplicate, busy shard, draining, bad spec).
+    pub submits_rejected: AtomicU64,
+    /// Garbage/oversized frames answered with an error reply.
+    pub protocol_errors: AtomicU64,
+    /// Watch streams closed by the backpressure cap.
+    pub watch_shed: AtomicU64,
+}
+
+struct ServerShared {
+    hub: ShardedHub,
+    resolver: WorkloadResolver,
+    stats: ServerStats,
+    opts: ServeOptions,
+    /// Set by the `stop` verb (or `ServerHandle::shutdown`): the
+    /// accept loop retires once the shards have too.
+    stop: AtomicBool,
+}
+
+/// A running server: hold it to keep serving, `join` it to wait for
+/// stop-and-drain and collect every experiment result.
+pub struct ServerHandle {
+    addr: ListenAddr,
+    shared: Arc<ServerShared>,
+    accept_join: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound address (TCP port 0 resolved to the real port).
+    pub fn addr(&self) -> &ListenAddr {
+        &self.addr
+    }
+
+    /// Server counters.
+    pub fn stats(&self) -> &ServerStats {
+        &self.shared.stats
+    }
+
+    /// The hub behind the server (tests submit in-process through it).
+    pub fn hub(&self) -> &ShardedHub {
+        &self.shared.hub
+    }
+
+    /// Programmatic stop — same effect as a `stop` verb from a client.
+    pub fn shutdown(&self, drain: bool) {
+        self.shared.hub.stop(drain);
+        self.shared.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Block until the server has stopped (via the `stop` verb or
+    /// [`Self::shutdown`]) and every shard has retired, then return
+    /// all experiment results.
+    pub fn join(mut self) -> Vec<(String, ExperimentResult)> {
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+        self.shared.hub.wait()
+    }
+}
+
+/// Bind `addr` and start serving `hub` on background threads. Returns
+/// once the listener is bound (so the caller can print the resolved
+/// address and clients can connect immediately).
+pub fn serve(
+    addr: &ListenAddr,
+    hub: ShardedHub,
+    resolver: WorkloadResolver,
+    opts: ServeOptions,
+) -> io::Result<ServerHandle> {
+    let (listener, bound) = NetListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    let shared = Arc::new(ServerShared {
+        hub,
+        resolver,
+        stats: ServerStats::default(),
+        opts,
+        stop: AtomicBool::new(false),
+    });
+    let shared2 = Arc::clone(&shared);
+    let accept_join = std::thread::Builder::new()
+        .name("tune-serve-accept".into())
+        .spawn(move || accept_loop(&listener, &shared2))
+        .expect("spawn accept loop");
+    Ok(ServerHandle { addr: bound, shared, accept_join: Some(accept_join) })
+}
+
+fn accept_loop(listener: &NetListener, shared: &Arc<ServerShared>) {
+    let mut conn_id = 0u64;
+    loop {
+        if shared.stop.load(Ordering::SeqCst) && shared.hub.shards_finished() {
+            return;
+        }
+        match listener.accept() {
+            Ok(stream) => {
+                conn_id += 1;
+                shared.stats.conns.fetch_add(1, Ordering::Relaxed);
+                let shared = Arc::clone(shared);
+                std::thread::Builder::new()
+                    .name(format!("tune-conn-{conn_id}"))
+                    .spawn(move || handle_conn(stream, &shared))
+                    .expect("spawn connection thread");
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            // A failed accept (EMFILE, peer reset mid-handshake) must
+            // not kill the control plane; back off and keep serving.
+            Err(_) => std::thread::sleep(Duration::from_millis(25)),
+        }
+    }
+}
+
+/// Write one reply frame; false = peer unreachable, drop the conn.
+fn send(stream: &mut NetStream, shared: &ServerShared, msg: &Json) -> bool {
+    shared.stats.frames_out.fetch_add(1, Ordering::Relaxed);
+    stream.write_all(&frame_bytes(msg)).is_ok()
+}
+
+fn handle_conn(mut stream: NetStream, shared: &Arc<ServerShared>) {
+    let _ = stream.set_read_timeout(Some(shared.opts.read_timeout));
+    let _ = stream.set_write_timeout(Some(shared.opts.write_timeout));
+    loop {
+        let req = match read_frame(&mut stream, shared.opts.max_frame_bytes) {
+            Ok(Some(req)) => req,
+            // Clean close between frames: the peer is done.
+            Ok(None) => return,
+            Err(FrameError::Garbage(e)) => {
+                // Framing survived; answer and keep the connection.
+                shared.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                if !send(&mut stream, shared, &error_reply(&format!("bad frame: {e}"))) {
+                    return;
+                }
+                continue;
+            }
+            Err(FrameError::Oversized(n)) => {
+                // The body was never consumed — the stream cannot be
+                // resynchronized. Answer, then close.
+                shared.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                let _ = send(
+                    &mut stream,
+                    shared,
+                    &error_reply(&format!(
+                        "frame of {n} bytes exceeds cap of {}; closing",
+                        shared.opts.max_frame_bytes
+                    )),
+                );
+                let _ = stream.shutdown();
+                return;
+            }
+            // Torn frame, reset, or read-deadline expiry.
+            Err(FrameError::Io(_)) => return,
+        };
+        shared.stats.frames_in.fetch_add(1, Ordering::Relaxed);
+        let verb = req.get("verb").and_then(Json::as_str).unwrap_or("").to_string();
+        match verb.as_str() {
+            "ping" => {
+                if !send(&mut stream, shared, &ok_reply(vec![])) {
+                    return;
+                }
+            }
+            "status" => {
+                let status = shared.hub.status_json();
+                if !send(&mut stream, shared, &ok_reply(vec![("status", status)])) {
+                    return;
+                }
+            }
+            "submit" => {
+                let reply = match handle_submit(&req, shared) {
+                    Ok(name) => {
+                        shared.stats.submits_ok.fetch_add(1, Ordering::Relaxed);
+                        ok_reply(vec![("name", Json::Str(name))])
+                    }
+                    Err(e) => {
+                        shared.stats.submits_rejected.fetch_add(1, Ordering::Relaxed);
+                        error_reply(&e)
+                    }
+                };
+                if !send(&mut stream, shared, &reply) {
+                    return;
+                }
+            }
+            "stop" => {
+                let drain = req.get("drain").and_then(Json::as_bool).unwrap_or(true);
+                shared.hub.stop(drain);
+                shared.stop.store(true, Ordering::SeqCst);
+                if !send(
+                    &mut stream,
+                    shared,
+                    &ok_reply(vec![("draining", Json::Bool(drain))]),
+                ) {
+                    return;
+                }
+            }
+            "watch" => {
+                if !send(&mut stream, shared, &ok_reply(vec![])) {
+                    return;
+                }
+                watch_loop(stream, shared);
+                return;
+            }
+            other => {
+                if !send(
+                    &mut stream,
+                    shared,
+                    &error_reply(&format!("unknown verb {other:?}")),
+                ) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn handle_submit(req: &Json, shared: &ServerShared) -> Result<String, String> {
+    if shared.hub.stopping() {
+        return Err("server is draining; submission rejected".into());
+    }
+    let text = req
+        .get("spec")
+        .and_then(Json::as_str)
+        .ok_or("submit needs a \"spec\" field holding the spec-file text")?;
+    let file = SpecFile::parse_str(text).map_err(|e| format!("parsing spec: {e:#}"))?;
+    let factory = (shared.resolver)(&file.workload)?;
+    let name = file.spec.name.clone();
+    shared.hub.submit(submission_from_spec(file, factory))?;
+    Ok(name)
+}
+
+/// Stream status deltas until the watcher hangs up, falls too far
+/// behind (shed), or the server drains. The stream is non-blocking:
+/// acks are read and deltas written from one thread, and a consumer
+/// that stops reading OR stops acking accumulates in-flight bytes
+/// until the cap sheds it.
+fn watch_loop(mut stream: NetStream, shared: &ServerShared) {
+    if stream.set_nonblocking(true).is_err() {
+        return;
+    }
+    let n = shared.hub.shard_count();
+    let mut last_versions = vec![0u64; n];
+    let mut reader = FrameReader::new(shared.opts.max_frame_bytes);
+    // Bytes composed but not yet written to the socket.
+    let mut outbuf: Vec<u8> = Vec::new();
+    // (seq, frame bytes) written or queued, awaiting a client ack.
+    let mut pending: VecDeque<(u64, usize)> = VecDeque::new();
+    let mut in_flight = 0usize;
+    let mut seq = 0u64;
+    let mut buf = [0u8; 4096];
+    loop {
+        // Snapshot drain-state BEFORE composing deltas: a shard's
+        // final status publish happens-before its thread exits, so a
+        // `finished` observed here guarantees step 2 below sees the
+        // terminal versions — the close at step 5 can never swallow
+        // the last delta.
+        let finished = shared.stop.load(Ordering::SeqCst) && shared.hub.shards_finished();
+        // 1. Drain whatever acks arrived.
+        loop {
+            match stream.read(&mut buf) {
+                Ok(0) => return, // watcher hung up
+                Ok(got) => reader.feed(&buf[..got]),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => return,
+            }
+        }
+        loop {
+            match reader.next_frame() {
+                Ok(Some(frame)) => {
+                    if frame.get("verb").and_then(Json::as_str) == Some("ack") {
+                        let acked =
+                            frame.get("seq").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                        while pending.front().is_some_and(|(s, _)| *s <= acked) {
+                            let (_, bytes) = pending.pop_front().unwrap();
+                            in_flight = in_flight.saturating_sub(bytes);
+                        }
+                    }
+                }
+                Ok(None) => break,
+                Err(_) => {
+                    shared.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = stream.shutdown();
+                    return;
+                }
+            }
+        }
+        // 2. Compose a delta frame if any shard's status moved.
+        let mut changed = Vec::new();
+        for (k, last) in last_versions.iter_mut().enumerate() {
+            let (v, status) = shared.hub.shard_status(k);
+            if v > *last {
+                *last = v;
+                changed.push(Json::obj(vec![
+                    ("shard", Json::Num(k as f64)),
+                    ("version", Json::Num(v as f64)),
+                    ("status", status),
+                ]));
+            }
+        }
+        if !changed.is_empty() {
+            seq += 1;
+            let frame = Json::obj(vec![
+                ("event", Json::Str("status".into())),
+                ("seq", Json::Num(seq as f64)),
+                ("shards", Json::Arr(changed)),
+            ]);
+            let bytes = frame_bytes(&frame);
+            pending.push_back((seq, bytes.len()));
+            in_flight += bytes.len();
+            outbuf.extend_from_slice(&bytes);
+            shared.stats.frames_out.fetch_add(1, Ordering::Relaxed);
+        }
+        // 3. Flush as much as the socket accepts right now.
+        while !outbuf.is_empty() {
+            match stream.write(&outbuf) {
+                Ok(0) => return,
+                Ok(wrote) => {
+                    outbuf.drain(..wrote);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => return,
+            }
+        }
+        // 4. Backpressure: shed a consumer that is too far behind.
+        if in_flight > shared.opts.watch_cap_bytes {
+            shared.stats.watch_shed.fetch_add(1, Ordering::Relaxed);
+            let _ = stream.shutdown();
+            return;
+        }
+        // 5. Drained server with nothing left to say: close politely.
+        if finished && outbuf.is_empty() {
+            let _ = stream.write_all(&frame_bytes(&Json::obj(vec![(
+                "event",
+                Json::Str("bye".into()),
+            )])));
+            let _ = stream.shutdown();
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}

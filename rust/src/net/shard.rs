@@ -1,0 +1,491 @@
+//! N-way sharded hub: many [`ExperimentHub`]s over ONE worker fleet.
+//!
+//! The single-hub serve loop has a structural ceiling: every
+//! submission, status render and completion event funnels through one
+//! thread. A [`ShardedHub`] splits the *coordinator* state N ways —
+//! experiments are hashed by name to a shard, each shard thread runs
+//! its own [`ExperimentHub`] over a [`SharedPoolClient`] view of one
+//! shared [`SharedPool`] — while the *workers* stay one fleet, so
+//! shards contend for steps, not threads.
+//!
+//! Routing is deterministic (FNV-1a of the experiment name, mod N):
+//! concurrent submissions of the same name always land on the same
+//! shard, whose single-threaded command loop admits exactly one of
+//! them. Per-shard durable state lives under `root/shards/<k>/`, so
+//! two shards never write the same path.
+//!
+//! Status is pull-free: each shard renders its status at most every
+//! 100 ms and publishes into its [`StatusCell`] only when the rendered
+//! text actually changed; readers aggregate the cached cells without
+//! ever touching a shard thread. The cell's version counter is what
+//! `watch` streams diff against.
+//!
+//! [`SharedPoolClient`]: crate::coordinator::executor::SharedPoolClient
+
+// The unwraps here are deliberate: lock poisoning (a panicked shard or
+// reader) is unrecoverable for the process, matching the rest of the
+// coordinator. The file opts out of the workspace unwrap gate.
+#![allow(clippy::unwrap_used)]
+
+// lint:allow(clock): shard loops slice real wall time (run_for budgets,
+// status heartbeats, command-channel parks) — this module is part of
+// the wall-clock serving substrate, like executor.rs.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::executor::SharedPool;
+use crate::coordinator::hub::{ExperimentHub, Submission};
+use crate::coordinator::runner::ExperimentResult;
+use crate::ray::Resources;
+use crate::util::json::Json;
+
+/// How long a shard drives its hub between command-channel drains.
+const RUN_SLICE: Duration = Duration::from_millis(25);
+/// Minimum interval between status renders (change detection requires
+/// a render; this bounds how much CPU an idle-ish shard spends on it).
+const RENDER_EVERY: Duration = Duration::from_millis(100);
+/// Bounded per-shard command queue: submits beyond this shed with a
+/// retryable error instead of queueing unboundedly.
+const SHARD_QUEUE_DEPTH: usize = 64;
+
+/// FNV-1a 64-bit — a stable, dependency-free name hash. Experiment →
+/// shard routing must be deterministic across processes and runs
+/// (SipHash's per-process keys would scatter re-submissions).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Which shard (of `n`) owns the experiment with this name.
+pub fn shard_of(name: &str, n: usize) -> usize {
+    if n <= 1 {
+        return 0;
+    }
+    (fnv1a(name.as_bytes()) % n as u64) as usize
+}
+
+/// Filesystem-safe experiment-directory name: alphanumerics, `-`, `_`
+/// and `.` pass through; everything else becomes `_`. Shared by the
+/// sharded hub and the legacy file-queue serve path so both layouts
+/// agree on directory names.
+pub fn sanitize_name(name: &str) -> String {
+    name.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '-' || c == '_' || c == '.' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+/// Build a hub submission from a parsed spec file and a resolved
+/// trainable factory — the one translation both the socket server and
+/// the legacy file-queue ingest use, so the two admission paths can
+/// never drift.
+pub fn submission_from_spec(
+    file: crate::coordinator::spec_file::SpecFile,
+    factory: crate::trainable::TrainableFactory,
+) -> Submission {
+    let mut sub = Submission::new(file.spec, file.space, file.scheduler, file.search, factory);
+    sub.cluster = file.cluster;
+    sub.autoscale = file.autoscale;
+    sub.weight = file.weight;
+    sub
+}
+
+/// One shard's published status snapshot, read lock-free-ish by
+/// aggregators (version first, then the cached JSON under a mutex).
+struct StatusCell {
+    /// Bumped once per *changed* publish; watchers diff against it.
+    version: AtomicU64,
+    /// The shard hub's last rendered `status_json`.
+    json: Mutex<Json>,
+}
+
+enum ShardCmd {
+    Submit { sub: Submission, reply: mpsc::Sender<Result<(), String>> },
+    Stop { drain: bool },
+}
+
+struct Shard {
+    tx: SyncSender<ShardCmd>,
+    cell: Arc<StatusCell>,
+}
+
+/// Configuration for a [`ShardedHub`].
+pub struct ShardedHubOptions {
+    /// Number of hub shards (clamped to ≥ 1).
+    pub shards: usize,
+    /// Worker threads in the one shared fleet (ignored when
+    /// `worker_caps` is set — then one worker per capacity vector).
+    pub workers: usize,
+    /// Per-worker capacity vectors (None = capacity-oblivious fleet).
+    pub worker_caps: Option<Vec<Resources>>,
+    /// Global live-trial budget, split evenly across shards
+    /// (0 = unbounded).
+    pub max_live: usize,
+    /// Durable root: experiment `k` of shard `s` persists under
+    /// `root/shards/<s>/experiments/<name>`. None = in-memory only.
+    pub root: Option<PathBuf>,
+    /// Snapshot cadence forwarded to each submission that has no
+    /// explicit cadence of its own.
+    pub snapshot_every: u64,
+}
+
+impl Default for ShardedHubOptions {
+    fn default() -> Self {
+        ShardedHubOptions {
+            shards: 1,
+            workers: 4,
+            worker_caps: None,
+            max_live: 0,
+            root: None,
+            snapshot_every: 50,
+        }
+    }
+}
+
+/// N hub shards over one shared worker fleet. `submit` / `status_json`
+/// / `stop` all take `&self` — the struct is shared across server
+/// connection threads behind an `Arc`.
+pub struct ShardedHub {
+    shards: Vec<Shard>,
+    joins: Mutex<Vec<JoinHandle<Vec<(String, ExperimentResult)>>>>,
+    stopping: AtomicBool,
+    max_live: usize,
+    workers: usize,
+    root: Option<PathBuf>,
+    snapshot_every: u64,
+    /// Declared last: the fleet drops (joining its worker threads)
+    /// only after the shard joins above have retired every hub.
+    _pool: SharedPool,
+}
+
+impl ShardedHub {
+    /// Spawn the fleet and `opts.shards` shard threads.
+    pub fn new(opts: ShardedHubOptions) -> ShardedHub {
+        let n = opts.shards.max(1);
+        let pool = match &opts.worker_caps {
+            Some(caps) => SharedPool::with_capacities(caps.clone()),
+            None => SharedPool::new(opts.workers),
+        };
+        let workers = pool.num_workers();
+        let per_shard_live = if opts.max_live == 0 { 0 } else { opts.max_live.div_ceil(n) };
+        let frac = 1.0 / n as f64;
+        let mut shards = Vec::with_capacity(n);
+        let mut joins = Vec::with_capacity(n);
+        for k in 0..n {
+            let (tx, rx) = mpsc::sync_channel(SHARD_QUEUE_DEPTH);
+            let cell = Arc::new(StatusCell {
+                version: AtomicU64::new(0),
+                json: Mutex::new(Json::Null),
+            });
+            let hub = ExperimentHub::over_client(pool.client(frac), per_shard_live);
+            let cell2 = Arc::clone(&cell);
+            let join = std::thread::Builder::new()
+                .name(format!("tune-shard-{k}"))
+                .spawn(move || shard_main(hub, rx, &cell2))
+                .expect("spawn shard thread");
+            shards.push(Shard { tx, cell });
+            joins.push(join);
+        }
+        ShardedHub {
+            shards,
+            joins: Mutex::new(joins),
+            stopping: AtomicBool::new(false),
+            max_live: opts.max_live,
+            workers,
+            root: opts.root,
+            snapshot_every: opts.snapshot_every,
+            _pool: pool,
+        }
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// True once [`Self::stop`] has been called (new submissions are
+    /// rejected from then on).
+    pub fn stopping(&self) -> bool {
+        self.stopping.load(Ordering::SeqCst)
+    }
+
+    /// Route a submission to its name's shard and wait for the
+    /// admission verdict. Errors are per-submission: a full shard
+    /// queue ("busy"), a duplicate name, or a hub setup failure never
+    /// affects other experiments.
+    pub fn submit(&self, mut sub: Submission) -> Result<(), String> {
+        if self.stopping() {
+            return Err("server is draining; submission rejected".into());
+        }
+        let name = sub.spec.name.clone();
+        if name.is_empty() {
+            return Err("experiment name must not be empty".into());
+        }
+        let k = shard_of(&name, self.shards.len());
+        if sub.experiment_dir.is_none() {
+            if let Some(root) = &self.root {
+                sub.experiment_dir = Some(
+                    root.join("shards")
+                        .join(k.to_string())
+                        .join("experiments")
+                        .join(sanitize_name(&name)),
+                );
+                sub.snapshot_every = self.snapshot_every;
+            }
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        match self.shards[k].tx.try_send(ShardCmd::Submit { sub, reply: reply_tx }) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) => {
+                return Err(format!(
+                    "shard {k} is busy ({SHARD_QUEUE_DEPTH} commands queued); retry"
+                ))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                return Err(format!("shard {k} has shut down"))
+            }
+        }
+        match reply_rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(verdict) => verdict,
+            Err(_) => Err(format!("shard {k} did not answer the submission")),
+        }
+    }
+
+    /// Sum of per-shard status versions — monotonic, bumps whenever
+    /// any shard's published status changes.
+    pub fn status_version(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.cell.version.load(Ordering::SeqCst))
+            .sum()
+    }
+
+    /// One shard's `(version, cached status)` pair, for watch deltas.
+    /// Returns `Json::Null` status before the shard's first publish.
+    pub fn shard_status(&self, k: usize) -> (u64, Json) {
+        let cell = &self.shards[k].cell;
+        let v = cell.version.load(Ordering::SeqCst);
+        let j = cell.json.lock().unwrap().clone();
+        (v, j)
+    }
+
+    /// Aggregated status assembled from the per-shard cached cells
+    /// (no shard round-trips): experiments in shard order, each
+    /// annotated with its `shard`, under pool-wide header fields.
+    pub fn status_json(&self) -> Json {
+        let mut experiments = Vec::new();
+        let mut active = 0usize;
+        let mut version = 0u64;
+        for (k, shard) in self.shards.iter().enumerate() {
+            version += shard.cell.version.load(Ordering::SeqCst);
+            let j = shard.cell.json.lock().unwrap().clone();
+            active += j.get("active").and_then(Json::as_f64).unwrap_or(0.0) as usize;
+            if let Some(arr) = j.get("experiments").and_then(Json::as_arr) {
+                for e in arr {
+                    if let Some(obj) = e.as_obj() {
+                        let mut obj = obj.clone();
+                        obj.insert("shard".to_string(), Json::Num(k as f64));
+                        experiments.push(Json::Obj(obj));
+                    }
+                }
+            }
+        }
+        Json::obj(vec![
+            ("workers", Json::Num(self.workers as f64)),
+            ("shards", Json::Num(self.shards.len() as f64)),
+            ("max_live", Json::Num(self.max_live as f64)),
+            ("active", Json::Num(active as f64)),
+            ("version", Json::Num(version as f64)),
+            ("experiments", Json::Arr(experiments)),
+        ])
+    }
+
+    /// Number of experiments still active across all shards, per the
+    /// cached cells.
+    pub fn active_count(&self) -> usize {
+        self.status_json()
+            .get("active")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0) as usize
+    }
+
+    /// Ask every shard to stop. `drain` = finish in-flight experiments
+    /// first; otherwise they are abandoned (their durable snapshots
+    /// survive for `tune run --resume`). Idempotent.
+    pub fn stop(&self, drain: bool) {
+        self.stopping.store(true, Ordering::SeqCst);
+        for s in &self.shards {
+            // `send` (not try_send): stop must get through even when
+            // the command queue is momentarily full. The shard drains
+            // its queue every RUN_SLICE, so this blocks briefly at
+            // worst; a disconnected shard has already stopped.
+            let _ = s.tx.send(ShardCmd::Stop { drain });
+        }
+    }
+
+    /// True when every shard thread has exited (after a stop, drained
+    /// or not). The accept loop polls this to know when to retire.
+    pub fn shards_finished(&self) -> bool {
+        self.joins.lock().unwrap().iter().all(|j| j.is_finished())
+    }
+
+    /// Join every shard thread and collect `(name, result)` pairs
+    /// (shard order, submission order within a shard). Call after
+    /// [`Self::stop`]; a second call returns an empty vec.
+    pub fn wait(&self) -> Vec<(String, ExperimentResult)> {
+        let joins: Vec<_> = self.joins.lock().unwrap().drain(..).collect();
+        let mut all = Vec::new();
+        for j in joins {
+            if let Ok(results) = j.join() {
+                all.extend(results);
+            }
+        }
+        all
+    }
+}
+
+impl Drop for ShardedHub {
+    fn drop(&mut self) {
+        self.stop(false);
+        let _ = self.wait();
+        // `_pool` drops last (field order), joining the worker fleet
+        // now that no shard hub holds a handle.
+    }
+}
+
+fn apply_cmd(
+    cmd: ShardCmd,
+    hub: &mut ExperimentHub,
+    seen: &mut BTreeSet<String>,
+    stopping: &mut bool,
+    drain: &mut bool,
+) {
+    match cmd {
+        ShardCmd::Submit { sub, reply } => {
+            let verdict = if *stopping {
+                Err("server is draining; submission rejected".into())
+            } else {
+                let name = sub.spec.name.clone();
+                if seen.contains(&name) {
+                    Err(format!("experiment {name:?} already submitted"))
+                } else {
+                    hub.submit(sub).map(|_| {
+                        seen.insert(name);
+                    })
+                }
+            };
+            // A vanished submitter (timed out, disconnected) is its
+            // problem; the admission above already happened.
+            let _ = reply.send(verdict);
+        }
+        ShardCmd::Stop { drain: d } => {
+            *stopping = true;
+            *drain = d;
+        }
+    }
+}
+
+/// Render the hub status and publish it into the cell iff it changed
+/// since the last publish; the version counter bumps only on change,
+/// which is exactly what watch-delta diffing needs.
+fn publish(hub: &ExperimentHub, cell: &StatusCell, last_text: &mut String) {
+    let status = hub.status_json();
+    let text = status.to_string();
+    if text != *last_text {
+        *cell.json.lock().unwrap() = status;
+        cell.version.fetch_add(1, Ordering::SeqCst);
+        *last_text = text;
+    }
+}
+
+fn shard_main(
+    mut hub: ExperimentHub,
+    rx: Receiver<ShardCmd>,
+    cell: &StatusCell,
+) -> Vec<(String, ExperimentResult)> {
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    let mut stopping = false;
+    let mut drain = true;
+    let mut last_text = String::new();
+    let mut last_render = Instant::now();
+    publish(&hub, cell, &mut last_text);
+    loop {
+        // Apply everything already queued.
+        let mut applied = false;
+        loop {
+            match rx.try_recv() {
+                Ok(cmd) => {
+                    apply_cmd(cmd, &mut hub, &mut seen, &mut stopping, &mut drain);
+                    applied = true;
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    // Owner gone: finish what is running, then exit.
+                    stopping = true;
+                    break;
+                }
+            }
+        }
+        let active = hub.run_for(RUN_SLICE);
+        if applied || last_render.elapsed() >= RENDER_EVERY {
+            last_render = Instant::now();
+            publish(&hub, cell, &mut last_text);
+        }
+        if stopping && (!drain || !active) {
+            break;
+        }
+        if !active && !stopping {
+            // Idle: park on the command channel instead of spinning.
+            match rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(cmd) => apply_cmd(cmd, &mut hub, &mut seen, &mut stopping, &mut drain),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => stopping = true,
+            }
+        }
+    }
+    // Publish the terminal snapshot (every experiment's final state)
+    // BEFORE draining results out of the hub, so late status readers
+    // see "finished", not an empty hub.
+    publish(&hub, cell, &mut last_text);
+    hub.take_results()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_routing_is_deterministic_and_spread() {
+        let names: Vec<String> = (0..256).map(|i| format!("exp-{i}")).collect();
+        let mut counts = vec![0usize; 4];
+        for n in &names {
+            let k = shard_of(n, 4);
+            assert_eq!(k, shard_of(n, 4)); // stable
+            counts[k] += 1;
+        }
+        // FNV over distinct names must not collapse onto few shards.
+        assert!(counts.iter().all(|&c| c > 16), "skewed: {counts:?}");
+        assert_eq!(shard_of("anything", 1), 0);
+    }
+
+    #[test]
+    fn sanitize_name_keeps_safe_chars() {
+        assert_eq!(sanitize_name("exp-1_ok.v2"), "exp-1_ok.v2");
+        assert_eq!(sanitize_name("a/b c:d"), "a_b_c_d");
+    }
+}

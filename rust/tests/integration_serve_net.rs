@@ -1,0 +1,369 @@
+//! Network control-plane integration suite: frame abuse against a live
+//! server, slow-watcher shedding under the backpressure cap, concurrent
+//! same-name admission, graceful drain, the sharded-vs-solo isolation
+//! proof (extending the PR-3 byte-identity check to `ShardedHub`), and
+//! a CLI end-to-end run over a real Unix socket.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tune::coordinator::hub::Submission;
+use tune::coordinator::spec::SpaceBuilder;
+use tune::coordinator::trial::config_str;
+use tune::coordinator::{
+    run_experiments, ExecMode, ExperimentResult, ExperimentSpec, Mode, RunOptions, SchedulerKind,
+    SearchKind, TrialStatus,
+};
+use tune::net::protocol::{frame_bytes, read_frame, NetStream, MAX_FRAME_BYTES};
+use tune::net::{
+    serve, shard_of, Client, ListenAddr, ServeOptions, ShardedHub, ShardedHubOptions,
+    WorkloadResolver,
+};
+use tune::trainable::synthetic::CurveTrainable;
+use tune::trainable::{factory, TrainableFactory};
+use tune::util::json::Json;
+
+fn curve_factory() -> TrainableFactory {
+    factory(|c, s| Box::new(CurveTrainable::new(c, s)))
+}
+
+/// The workload table a test server resolves against: `curve` only.
+fn curve_resolver() -> WorkloadResolver {
+    Arc::new(|w: &str| {
+        if w == "curve" {
+            Ok(factory(|c, s| Box::new(CurveTrainable::new(c, s))))
+        } else {
+            Err(format!("unknown workload {w:?}"))
+        }
+    })
+}
+
+fn curve_spec(name: &str, seed: u64, samples: usize, iters: u64) -> ExperimentSpec {
+    let mut spec = ExperimentSpec::named(name);
+    spec.metric = "accuracy".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = samples;
+    spec.max_iterations_per_trial = iters;
+    spec.seed = seed;
+    spec
+}
+
+fn lr_space() -> tune::coordinator::spec::SearchSpace {
+    SpaceBuilder::new().loguniform("lr", 1e-4, 1.0).build()
+}
+
+/// Spec-file text as a client would send it over the `submit` verb.
+fn spec_text(name: &str, seed: u64, samples: usize, iters: u64) -> String {
+    format!(
+        r#"{{
+            "name": "{name}", "metric": "accuracy", "mode": "max",
+            "num_samples": {samples}, "max_iterations_per_trial": {iters}, "seed": {seed},
+            "workload": "curve", "scheduler": "fifo", "search": "random",
+            "space": {{"lr": {{"loguniform": [1e-4, 1.0]}}}},
+            "cluster": {{"nodes": 1, "cpus_per_node": 8}}
+        }}"#
+    )
+}
+
+/// Canonical, timing-free serialization of an experiment's outcome
+/// (same shape as the PR-3 hub isolation proof): per trial its config,
+/// iteration count, terminal status and the exact bits of its best
+/// metric.
+fn fingerprint(res: &ExperimentResult) -> String {
+    let mut out = String::new();
+    for t in res.trials.values() {
+        out.push_str(&format!(
+            "{}|{}|{}|{}|{}\n",
+            t.id,
+            config_str(&t.config),
+            t.iteration,
+            t.status.as_str(),
+            t.best_metric.map(|v| format!("{:016x}", v.to_bits())).unwrap_or_else(|| "-".into()),
+        ));
+    }
+    out.push_str(&format!(
+        "best={:?} completed={}\n",
+        res.best,
+        res.count(TrialStatus::Completed)
+    ));
+    out
+}
+
+/// Boot an in-process server on an ephemeral TCP port.
+fn serve_curve(opts: ShardedHubOptions, serve_opts: ServeOptions) -> tune::net::ServerHandle {
+    let hub = ShardedHub::new(opts);
+    let addr = ListenAddr::parse("127.0.0.1:0").unwrap();
+    serve(&addr, hub, curve_resolver(), serve_opts).unwrap()
+}
+
+#[test]
+fn frame_abuse_gets_error_replies_without_killing_the_server() {
+    let handle = serve_curve(
+        ShardedHubOptions { shards: 1, workers: 2, ..Default::default() },
+        ServeOptions::default(),
+    );
+    let addr = handle.addr().clone();
+
+    // Garbage body inside an intact frame: error reply, connection kept.
+    let mut s = NetStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let body = b"not json at all";
+    s.write_all(&(body.len() as u32).to_be_bytes()).unwrap();
+    s.write_all(body).unwrap();
+    let reply = read_frame(&mut s, MAX_FRAME_BYTES).unwrap().unwrap();
+    assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(false));
+    // The same connection still serves well-formed requests.
+    s.write_all(&frame_bytes(&Json::obj(vec![("verb", Json::Str("ping".into()))]))).unwrap();
+    let reply = read_frame(&mut s, MAX_FRAME_BYTES).unwrap().unwrap();
+    assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true));
+
+    // Oversized length header: error reply, then the server closes the
+    // connection (the unread body makes the stream unresynchronizable).
+    let mut s = NetStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(&(MAX_FRAME_BYTES as u32 + 1).to_be_bytes()).unwrap();
+    let reply = read_frame(&mut s, MAX_FRAME_BYTES).unwrap().unwrap();
+    assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(false));
+    match read_frame(&mut s, MAX_FRAME_BYTES) {
+        Ok(None) | Err(_) => {} // closed, as promised
+        Ok(Some(f)) => panic!("expected close after oversized frame, got {f}"),
+    }
+
+    // Torn frame: half a length header, then hang up. Dropped silently.
+    let mut s = NetStream::connect(&addr).unwrap();
+    s.write_all(&[0u8, 0]).unwrap();
+    drop(s);
+
+    assert_eq!(handle.stats().protocol_errors.load(Ordering::Relaxed), 2);
+    // A fresh client still gets service after all of the above.
+    let mut c = Client::connect(&addr).unwrap();
+    c.ping().unwrap();
+    handle.shutdown(false);
+    handle.join();
+}
+
+#[test]
+fn slow_watcher_is_shed_while_request_service_survives() {
+    let handle = serve_curve(
+        ShardedHubOptions { shards: 1, workers: 2, ..Default::default() },
+        // Tiny cap: the very first status delta exceeds it, so a watcher
+        // that neither reads nor acks is shed almost immediately.
+        ServeOptions { watch_cap_bytes: 64, ..Default::default() },
+    );
+    let addr = handle.addr().clone();
+
+    // A watcher that never reads its stream and never acks.
+    let mut lazy = NetStream::connect(&addr).unwrap();
+    lazy.write_all(&frame_bytes(&Json::obj(vec![("verb", Json::Str("watch".into()))]))).unwrap();
+
+    // Churn keeps the per-shard status (and thus the deltas) moving.
+    let mut c = Client::connect(&addr).unwrap();
+    c.submit_spec_text(&spec_text("churn", 1, 4, 30)).unwrap();
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while handle.stats().watch_shed.load(Ordering::Relaxed) == 0 {
+        assert!(Instant::now() < deadline, "watcher never shed");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // Shedding the watch stream must not degrade request/reply service.
+    c.ping().unwrap();
+    c.status().unwrap();
+    drop(lazy);
+    c.stop(true).unwrap();
+    handle.join();
+}
+
+#[test]
+fn concurrent_same_name_submissions_admit_exactly_one() {
+    let handle = serve_curve(
+        ShardedHubOptions { shards: 4, workers: 2, ..Default::default() },
+        ServeOptions::default(),
+    );
+    let addr = handle.addr().clone();
+    let text = spec_text("dup", 9, 3, 6);
+    let joins: Vec<_> = (0..8)
+        .map(|_| {
+            let addr = addr.clone();
+            let text = text.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                c.submit_spec_text(&text)
+            })
+        })
+        .collect();
+    let verdicts: Vec<Result<String, String>> =
+        joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let admitted = verdicts.iter().filter(|v| v.is_ok()).count();
+    assert_eq!(admitted, 1, "verdicts: {verdicts:?}");
+    assert_eq!(handle.stats().submits_ok.load(Ordering::Relaxed), 1);
+    assert_eq!(handle.stats().submits_rejected.load(Ordering::Relaxed), 7);
+    handle.shutdown(true);
+    let results = handle.join();
+    assert_eq!(results.len(), 1);
+    assert_eq!(results[0].0, "dup");
+}
+
+#[test]
+fn drain_completes_in_flight_experiments_and_watchers_get_bye() {
+    let root = std::env::temp_dir().join(format!("tune_net_drain_{}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok();
+    let handle = serve_curve(
+        ShardedHubOptions {
+            shards: 2,
+            workers: 2,
+            root: Some(root.clone()),
+            snapshot_every: 5,
+            ..Default::default()
+        },
+        ServeOptions::default(),
+    );
+    let addr = handle.addr().clone();
+
+    // A well-behaved (acking) watcher, attached before any submission.
+    let events = Arc::new(AtomicUsize::new(0));
+    let ev = Arc::clone(&events);
+    let watch_conn = Client::connect(&addr).unwrap();
+    let watcher = std::thread::spawn(move || {
+        watch_conn.watch(|_| {
+            ev.fetch_add(1, Ordering::SeqCst);
+            true
+        })
+    });
+
+    let mut c = Client::connect(&addr).unwrap();
+    let name = c.submit_spec_text(&spec_text("drain-a", 7, 4, 10)).unwrap();
+    assert_eq!(name, "drain-a");
+    // Stop with drain while the experiment is in flight: it must still
+    // run to completion before the server retires.
+    c.stop(true).unwrap();
+    let results = handle.join();
+    assert_eq!(results.len(), 1);
+    let (rname, res) = &results[0];
+    assert_eq!(rname, "drain-a");
+    assert_eq!(res.count(TrialStatus::Completed), 4, "{:?}", res.stats);
+
+    // Durable output landed in the owning shard's directory.
+    let k = shard_of("drain-a", 2);
+    let dir = root.join("shards").join(k.to_string()).join("experiments").join("drain-a");
+    assert!(dir.join("experiment.json").exists(), "no results at {dir:?}");
+    assert!(dir.join("snapshot.json").exists(), "{dir:?}");
+
+    // The watcher saw status flow and then a clean bye (Ok return).
+    watcher.join().unwrap().unwrap();
+    assert!(events.load(Ordering::SeqCst) > 0, "watcher saw no status deltas");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn sharded_experiments_match_solo_runs_byte_for_byte() {
+    // The PR-3 isolation proof, extended across shards: 3 experiments
+    // hashed over 2 hub shards sharing ONE 4-worker fleet must produce
+    // results byte-identical to running each alone on its own pool.
+    let seeds = [11u64, 22, 33];
+    let solo: Vec<String> = seeds
+        .iter()
+        .map(|&seed| {
+            let res = run_experiments(
+                curve_spec(&format!("iso-{seed}"), seed, 6, 12),
+                lr_space(),
+                SchedulerKind::Fifo,
+                SearchKind::Random,
+                curve_factory(),
+                RunOptions { exec: ExecMode::Pool { workers: 4 }, ..Default::default() },
+            );
+            fingerprint(&res)
+        })
+        .collect();
+
+    let hub = ShardedHub::new(ShardedHubOptions { shards: 2, workers: 4, ..Default::default() });
+    for &seed in &seeds {
+        hub.submit(Submission::new(
+            curve_spec(&format!("iso-{seed}"), seed, 6, 12),
+            lr_space(),
+            SchedulerKind::Fifo,
+            SearchKind::Random,
+            curve_factory(),
+        ))
+        .unwrap();
+    }
+    hub.stop(true);
+    let results = hub.wait();
+    assert_eq!(results.len(), 3);
+    for (i, &seed) in seeds.iter().enumerate() {
+        let name = format!("iso-{seed}");
+        let res = results
+            .iter()
+            .find(|(n, _)| n == &name)
+            .map(|(_, r)| r)
+            .unwrap_or_else(|| panic!("missing experiment {name}"));
+        assert_eq!(fingerprint(res), solo[i], "{name} diverged from its solo run");
+    }
+}
+
+#[test]
+fn serve_net_cli_end_to_end_over_unix_socket() {
+    use std::process::Command;
+    let tune = env!("CARGO_BIN_EXE_tune");
+    let root = std::env::temp_dir().join(format!("tune_net_cli_{}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok();
+    std::fs::create_dir_all(&root).unwrap();
+    let addr = format!("unix:{}", root.join("ctl.sock").display());
+    let spec_path = root.join("net-a.json");
+    std::fs::write(&spec_path, spec_text("net-a", 3, 4, 5)).unwrap();
+    let exp_dir = root.join("server");
+
+    let mut server = Command::new(tune)
+        .args(["serve", "--listen", &addr, "--shards", "2", "--workers", "2", "--exp-dir"])
+        .arg(&exp_dir)
+        .spawn()
+        .expect("spawn tune serve --listen");
+
+    // submit: retries its dial for ~2 s internally; loop a few times in
+    // case the server binds slowly on a loaded CI machine.
+    let mut admitted = false;
+    for _ in 0..10 {
+        let out = Command::new(tune)
+            .args(["submit", "--addr", &addr, "--spec"])
+            .arg(&spec_path)
+            .output()
+            .expect("run tune submit");
+        if out.status.success() {
+            admitted = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    assert!(admitted, "submit never reached the server at {addr}");
+
+    // status: the admitted experiment shows up in the sharded table.
+    let mut seen = false;
+    for _ in 0..25 {
+        let out = Command::new(tune)
+            .args(["status", "--addr", &addr])
+            .output()
+            .expect("run tune status");
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        if String::from_utf8_lossy(&out.stdout).contains("net-a") {
+            seen = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert!(seen, "status table never showed net-a");
+
+    // stop (drain): the server finishes the experiment and exits 0.
+    let out = Command::new(tune)
+        .args(["stop", "--addr", &addr])
+        .output()
+        .expect("run tune stop");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let status = server.wait().expect("server exit");
+    assert!(status.success());
+
+    let k = shard_of("net-a", 2);
+    let dir = exp_dir.join("shards").join(k.to_string()).join("experiments").join("net-a");
+    assert!(dir.join("experiment.json").exists(), "no results at {dir:?}");
+    std::fs::remove_dir_all(&root).ok();
+}
