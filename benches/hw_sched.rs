@@ -1,0 +1,197 @@
+//! Hardware-aware scheduling bench: cost-aware vs cost-blind
+//! autoscaling over 2 and 4 planted hardware classes (ISSUE 10, the
+//! SHADHO-style claim). Everything runs on the sim executor's virtual
+//! clock, so the numbers are deterministic offline proofs, not
+//! wall-clock noise.
+//!
+//! Each class is a (shape, $/hour, step-time factor) triple; the
+//! workload steps up to 10x faster on the accelerator shapes. The
+//! cost-blind policy is the legacy first-fit template pick — it always
+//! buys the default CPU shape. The cost-aware policy learns per-shape
+//! throughput online and buys (and places onto) the shape with the
+//! best predicted steps/sec per dollar.
+//!
+//! What to look for: with the same trial set, the aware policy should
+//! finish in a fraction of the virtual makespan and pay less per
+//! result; the gap should widen from 2 to 4 classes as the planted
+//! hardware spread grows.
+//!
+//! `TUNE_BENCH_FAST=1` shrinks trials/iterations so CI can smoke the
+//! binary in seconds; `BENCH_hw_sched.json` records which mode ran.
+//!
+//! Run: `cargo bench --bench hw_sched`
+
+use tune::coordinator::spec::SpaceBuilder;
+use tune::coordinator::trial::ParamValue;
+use tune::coordinator::{
+    run_experiments, ExecMode, ExperimentSpec, Mode, RunOptions, SchedulerKind, SearchKind,
+};
+use tune::ray::{AutoscalePolicy, Cluster, NodeTemplate, Resources, ShapeFactors};
+use tune::trainable::factory;
+use tune::trainable::synthetic::CurveTrainable;
+use tune::util::json::Json;
+
+/// One planted hardware class: what the autoscaler can buy, what it
+/// bills, and how fast the workload actually steps on it.
+struct HwClass {
+    name: &'static str,
+    shape: Resources,
+    price_per_hour: f64,
+    step_factor: f64,
+}
+
+/// The class menu, default-CPU first (that is what the cost-blind
+/// first-fit pick buys). Per-dollar throughput improves down the list,
+/// so a policy that learns it should walk down.
+fn classes() -> Vec<HwClass> {
+    vec![
+        HwClass {
+            name: "cpu-small",
+            shape: Resources::cpu(4.0),
+            price_per_hour: 1.0,
+            step_factor: 1.0,
+        },
+        HwClass {
+            name: "cpu-big",
+            shape: Resources::cpu(16.0),
+            price_per_hour: 4.5,
+            step_factor: 0.9,
+        },
+        HwClass {
+            name: "gpu",
+            shape: Resources::cpu_gpu(8.0, 4.0),
+            price_per_hour: 6.0,
+            step_factor: 0.2,
+        },
+        HwClass {
+            name: "tpu",
+            shape: Resources::cpu(8.0).with_custom("tpu", 4.0),
+            price_per_hour: 8.0,
+            step_factor: 0.1,
+        },
+    ]
+}
+
+struct Case {
+    n_classes: usize,
+    policy: &'static str,
+    makespan_vs: f64,
+    cost: f64,
+    results: u64,
+    cost_per_kresult: f64,
+    scale_ups: u64,
+}
+
+fn run_case(n_classes: usize, hw_aware: bool, samples: usize, iters: u64) -> Case {
+    let menu: Vec<HwClass> = classes().into_iter().take(n_classes).collect();
+    let mut factors = ShapeFactors::new();
+    for c in &menu {
+        factors = factors.rule("train", &tune::ray::shape_key(&c.shape), c.step_factor);
+    }
+    let mut spec = ExperimentSpec::named(if hw_aware { "hw-aware" } else { "hw-blind" });
+    spec.metric = "accuracy".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = samples;
+    spec.max_iterations_per_trial = iters;
+    spec.seed = 42;
+    spec.resources_per_trial = Resources::cpu(1.0);
+    spec.hw_aware = hw_aware;
+    let policy = AutoscalePolicy {
+        node_template: menu[0].shape.clone(),
+        templates: menu
+            .iter()
+            .map(|c| NodeTemplate { shape: c.shape.clone(), price_per_hour: c.price_per_hour })
+            .collect(),
+        min_nodes: 1,
+        max_nodes: 6,
+        scale_up_after: 2,
+        scale_down_after: 1_000_000,
+        scale_down_util: 0.0,
+    };
+    let res = run_experiments(
+        spec,
+        SpaceBuilder::new()
+            .loguniform("lr", 1e-4, 1.0)
+            .constant("workload", ParamValue::Str("train".into()))
+            .build(),
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        factory(|c, s| Box::new(CurveTrainable::new(c, s))),
+        RunOptions {
+            cluster: Cluster::heterogeneous_priced(vec![(
+                menu[0].shape.clone(),
+                menu[0].price_per_hour,
+            )]),
+            exec: ExecMode::Sim,
+            autoscale: Some(policy),
+            shape_factors: Some(factors),
+            ..Default::default()
+        },
+    );
+    assert!(res.infeasible.is_none(), "bench scenario must be feasible");
+    assert_eq!(res.trials.len(), samples, "every trial must run");
+    let results = res.stats.results.max(1);
+    Case {
+        n_classes,
+        policy: if hw_aware { "cost-aware" } else { "cost-blind" },
+        makespan_vs: res.duration_s,
+        cost: res.stats.cost_accrued,
+        results,
+        cost_per_kresult: res.stats.cost_accrued * 1000.0 / results as f64,
+        scale_ups: res.stats.scale_ups,
+    }
+}
+
+fn main() {
+    let fast = std::env::var("TUNE_BENCH_FAST").is_ok();
+    let (samples, iters) = if fast { (24, 10) } else { (96, 40) };
+    println!(
+        "== hw-aware scheduling: {samples} trials x {iters} iters, up to 6 nodes{} ==",
+        if fast { " [FAST]" } else { "" }
+    );
+    println!(
+        "{:>8} {:>11} {:>14} {:>10} {:>9} {:>13} {:>9}",
+        "classes", "policy", "makespan(vs)", "cost($)", "results", "$/1k results", "scaleups"
+    );
+    let mut cases = Vec::new();
+    for n_classes in [2usize, 4] {
+        for hw_aware in [false, true] {
+            let c = run_case(n_classes, hw_aware, samples, iters);
+            println!(
+                "{:>8} {:>11} {:>14.1} {:>10.4} {:>9} {:>13.4} {:>9}",
+                c.n_classes, c.policy, c.makespan_vs, c.cost, c.results, c.cost_per_kresult,
+                c.scale_ups
+            );
+            cases.push(c);
+        }
+    }
+    let json = Json::obj(vec![
+        ("bench", Json::Str("hw_sched".into())),
+        ("mode", Json::Str(if fast { "fast" } else { "full" }.into())),
+        ("samples", Json::Num(samples as f64)),
+        ("iters", Json::Num(iters as f64)),
+        (
+            "cases",
+            Json::Arr(
+                cases
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("classes", Json::Num(c.n_classes as f64)),
+                            ("policy", Json::Str(c.policy.into())),
+                            ("makespan_vs", Json::Num(c.makespan_vs)),
+                            ("cost", Json::Num(c.cost)),
+                            ("results", Json::Num(c.results as f64)),
+                            ("cost_per_kresult", Json::Num(c.cost_per_kresult)),
+                            ("scale_ups", Json::Num(c.scale_ups as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    match std::fs::write("BENCH_hw_sched.json", json.to_string()) {
+        Ok(()) => println!("\nwrote BENCH_hw_sched.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_hw_sched.json: {e}"),
+    }
+}

@@ -119,7 +119,7 @@ fn main() {
             let mut cluster = Cluster::uniform(nodes, Resources::cpu(8.0));
             let mut placer = TwoLevelScheduler::new();
             for _ in 0..nodes * 8 {
-                if placer.place_centralized(&mut cluster, &demand).is_none() {
+                if placer.place_centralized(&mut cluster, 0, &demand).is_none() {
                     break;
                 }
             }

@@ -45,11 +45,11 @@
 // recv deadlines are their contract. SimExecutor never reads a clock.
 //
 // lint:allow(hash_container): the remaining HashMaps (SimExecutor
-// live/epoch, PoolState slots/epochs, WorkerFleet assigned) are keyed
-// lookups that are never iterated on fingerprint-bearing paths; the
-// generic pool key is `Hash`, not `Ord`, so BTreeMap cannot replace
-// them. Everything iterated (ThreadExecutor workers, Router buffers)
-// is a BTreeMap.
+// live/epoch/hints/speed, PoolState slots/epochs, WorkerFleet assigned)
+// are keyed lookups that are never iterated on fingerprint-bearing
+// paths; the generic pool key is `Hash`, not `Ord`, so BTreeMap cannot
+// replace them. Everything iterated (ThreadExecutor workers, Router
+// buffers) is a BTreeMap.
 
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap, VecDeque};
@@ -113,6 +113,15 @@ pub trait Executor: Send {
     fn admit(&mut self, _id: TrialId, _demand: &Resources) -> Admission {
         Admission::Granted
     }
+
+    /// Tell the executor which node shape the trial was placed on,
+    /// called by the runner after placement and before
+    /// [`Executor::launch`]. Wall-clock executors ignore it — real
+    /// hardware is its own speed. The sim executor uses it to apply
+    /// shape-dependent step times ([`SimExecutor::with_shape_factors`]),
+    /// which is what makes hardware-aware scheduling testable on the
+    /// virtual clock.
+    fn place_hint(&mut self, _id: TrialId, _shape: &Resources) {}
 
     /// Instantiate the trial's trainable (optionally restoring). The
     /// blob is a shared checkpoint handle: passing it costs a refcount
@@ -203,6 +212,15 @@ pub struct SimExecutor {
     /// discarded instead of stepping the new trainable (fault recovery
     /// relaunches ids while their old entries may still be queued).
     epoch: HashMap<TrialId, u64>,
+    /// Planted (workload, shape) step-time multipliers — empty means
+    /// every shape steps at 1x, the pre-hardware-aware behavior.
+    factors: crate::ray::ShapeFactors,
+    /// Shape key of the node each trial was last placed on
+    /// ([`Executor::place_hint`]).
+    hints: HashMap<TrialId, String>,
+    /// Step-time multiplier frozen at launch from `factors` x the
+    /// placement hint; relaunching on a different shape recomputes it.
+    speed: HashMap<TrialId, f64>,
 }
 
 impl SimExecutor {
@@ -215,7 +233,19 @@ impl SimExecutor {
             queue: BinaryHeap::new(),
             live: HashMap::new(),
             epoch: HashMap::new(),
+            factors: crate::ray::ShapeFactors::default(),
+            hints: HashMap::new(),
+            speed: HashMap::new(),
         }
+    }
+
+    /// Plant shape-dependent step times: a trial's virtual step cost is
+    /// multiplied by `factors.factor(workload_class, placed shape key)`.
+    /// Deterministic on the virtual clock — the offline stand-in for
+    /// heterogeneous hardware.
+    pub fn with_shape_factors(mut self, factors: crate::ray::ShapeFactors) -> Self {
+        self.factors = factors;
+        self
     }
 }
 
@@ -224,16 +254,27 @@ impl Executor for SimExecutor {
         self.now
     }
 
+    fn place_hint(&mut self, id: TrialId, shape: &Resources) {
+        self.hints.insert(id, crate::ray::shape_key(shape));
+    }
+
     fn launch(&mut self, trial: &Trial, restore: Option<Arc<[u8]>>) -> Result<(), String> {
         let t = build_trainable(&self.factory, trial, restore)?;
         *self.epoch.entry(trial.id).or_insert(0) += 1;
+        let mult = self
+            .hints
+            .get(&trial.id)
+            .map(|s| self.factors.factor(trial.workload_class(), s))
+            .unwrap_or(1.0);
+        self.speed.insert(trial.id, mult);
         self.live.insert(trial.id, t);
         Ok(())
     }
 
     fn request_step(&mut self, id: TrialId) {
         if let Some(t) = self.live.get(&id) {
-            let done_at = self.now + t.step_cost().max(1e-9);
+            let mult = self.speed.get(&id).copied().unwrap_or(1.0);
+            let done_at = self.now + (t.step_cost() * mult).max(1e-9);
             self.seq += 1;
             let epoch = self.epoch.get(&id).copied().unwrap_or(0);
             self.queue.push(Reverse((OrdF64(done_at), self.seq, id, epoch)));
@@ -273,6 +314,8 @@ impl Executor for SimExecutor {
 
     fn halt(&mut self, id: TrialId) {
         self.live.remove(&id);
+        self.hints.remove(&id);
+        self.speed.remove(&id);
     }
 
     fn num_live(&self) -> usize {

@@ -52,6 +52,18 @@ pub struct ExperimentSpec {
     /// Root seed: search sampling, trial seeds and fault injection all
     /// derive from it, so runs replay bit-identically.
     pub seed: u64,
+    /// Hardware-aware scheduling: learn per-(workload, shape)
+    /// throughput profiles online and, once warm, rank placements by
+    /// predicted steps/sec over opportunity cost (and autoscale
+    /// templates by throughput per dollar). Off by default — with the
+    /// flag off the run is byte-identical to the pre-hardware-aware
+    /// runner.
+    pub hw_aware: bool,
+    /// Hard virtual-dollar cap: the run stops (or, if already spent,
+    /// refuses to launch) once accrued node-hours x price reach this.
+    /// `None` = uncapped. Meaningful only when nodes carry a nonzero
+    /// `price_per_hour`.
+    pub budget_max_cost: Option<f64>,
 }
 
 impl ExperimentSpec {
@@ -73,6 +85,8 @@ impl ExperimentSpec {
             checkpoint_at_end: false,
             fault_plan: FaultPlan::none(),
             seed: 0,
+            hw_aware: false,
+            budget_max_cost: None,
         }
     }
 }
@@ -232,6 +246,11 @@ pub struct RunOptions {
     /// demand. `None` = unbounded. Effective with `experiment_dir` set
     /// (the disk tier is where evicted chunks go).
     pub checkpoint_mem_budget: Option<usize>,
+    /// Planted shape-dependent step-time multipliers for
+    /// `ExecMode::Sim` (ignored by other executors): the deterministic
+    /// stand-in for heterogeneous hardware that hardware-aware
+    /// scheduling tests and benches run against.
+    pub shape_factors: Option<crate::ray::ShapeFactors>,
 }
 
 impl Default for RunOptions {
@@ -247,6 +266,7 @@ impl Default for RunOptions {
             autoscale: None,
             worker_caps: None,
             checkpoint_mem_budget: None,
+            shape_factors: None,
         }
     }
 }
@@ -305,9 +325,16 @@ pub fn build_runner(
         autoscale,
         worker_caps,
         checkpoint_mem_budget,
+        shape_factors,
     } = opts;
     let executor: Box<dyn Executor> = match (exec, worker_caps) {
-        (ExecMode::Sim, _) => Box::new(SimExecutor::new(factory)),
+        (ExecMode::Sim, _) => {
+            let mut sim = SimExecutor::new(factory);
+            if let Some(f) = shape_factors {
+                sim = sim.with_shape_factors(f);
+            }
+            Box::new(sim)
+        }
         (ExecMode::Threads, _) => Box::new(ThreadExecutor::new(factory)),
         (ExecMode::Pool { .. }, Some(caps)) => {
             Box::new(PoolExecutor::with_capacities(factory, caps))

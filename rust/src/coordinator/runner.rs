@@ -21,8 +21,8 @@ use std::sync::Arc;
 use crate::checkpoint::{CheckpointStore, CkptStoreStats};
 use crate::logger::ResultLogger;
 use crate::ray::{
-    AutoscaleAction, AutoscalePolicy, Autoscaler, Cluster, FaultInjector, LeaseId, NodeId,
-    PlacementStats, Resources, TwoLevelScheduler, Utilization,
+    AutoscaleAction, AutoscalePolicy, Autoscaler, Cluster, FaultInjector, HwInputs, LeaseId,
+    NodeId, PlacementStats, Resources, ThroughputProfiler, TwoLevelScheduler, Utilization,
 };
 use crate::util::intern::{MetricId, MetricSchema};
 use crate::util::json::Json;
@@ -92,6 +92,10 @@ pub struct RunnerStats {
     /// the table touches around it) stays proportional to the victim
     /// node's leases, never the trial population.
     pub kill_touched: u64,
+    /// Virtual dollars accrued: the integral of the cluster's alive
+    /// $/hour rate over experiment time. Stays 0.0 while every node is
+    /// free (the default), so cost-blind runs report nothing new.
+    pub cost_accrued: f64,
 }
 
 impl RunnerStats {
@@ -118,6 +122,7 @@ impl RunnerStats {
             ("total_iterations", Json::Num(self.total_iterations as f64)),
             ("budget_used_s", Json::Num(self.budget_used_s)),
             ("kill_touched", Json::Num(self.kill_touched as f64)),
+            ("cost_accrued", Json::Num(self.cost_accrued)),
         ])
     }
 
@@ -146,6 +151,7 @@ impl RunnerStats {
             util_cpu_sum: j.get("util_cpu_sum").and_then(|v| v.as_f64()).unwrap_or(0.0),
             util_gpu_sum: j.get("util_gpu_sum").and_then(|v| v.as_f64()).unwrap_or(0.0),
             budget_used_s: j.get("budget_used_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            cost_accrued: j.get("cost_accrued").and_then(|v| v.as_f64()).unwrap_or(0.0),
         }
     }
 }
@@ -414,6 +420,14 @@ pub struct TrialRunner {
     /// only add/retire can alter) — the per-launch fail-fast check
     /// stops iterating nodes in the steady state.
     feasible_cache: Option<(Resources, u64)>,
+    /// Learned (workload class, node shape) throughput profiles, fed
+    /// from every non-replayed step when `spec.hw_aware` is on. Runner
+    /// state like the autoscaler: snapshots and restores with the run.
+    profiler: ThroughputProfiler,
+    /// Experiment time up to which `stats.cost_accrued` has integrated
+    /// the cluster's price rate. Advanced by `accrue_cost` — always
+    /// *before* any node add/kill/restart/retire changes the rate.
+    cost_clock: f64,
 }
 
 impl TrialRunner {
@@ -471,6 +485,8 @@ impl TrialRunner {
             infeasible: None,
             preflight_ok: false,
             feasible_cache: None,
+            profiler: ThroughputProfiler::new(),
+            cost_clock: 0.0,
         }
     }
 
@@ -665,11 +681,17 @@ impl TrialRunner {
         }
         // Trial drivers originate on the head node (node 0), matching
         // Tune-on-Ray's driver placement; children would spill.
-        let Some(p) = self.placer.place(&mut self.cluster, 0, &demand) else {
+        let Some(p) = self.place_trial(id, &demand) else {
             self.executor.halt(id); // release the capacity reservation
             self.unplaceable = true;
             return false;
         };
+        // Tell the executor which shape the trial landed on before it
+        // builds the trainable — the sim executor derives its planted
+        // step-time multiplier from this (wall-clock executors ignore
+        // it; real hardware is its own speed).
+        let placed_shape = self.cluster.node(p.node).total.clone();
+        self.executor.place_hint(id, &placed_shape);
         // Shared checkpoint handle: a relaunch hands the executor the
         // store's own Arc, never a byte copy.
         let restore = self.trials[&id].checkpoint.and_then(|c| self.checkpoints.get(c));
@@ -725,6 +747,39 @@ impl TrialRunner {
         }
     }
 
+    /// Place one trial: the legacy two-level local-first path, or —
+    /// with `spec.hw_aware` on and ≥2 warm shape profiles for the
+    /// trial's workload class — a ranked scan choosing the node that
+    /// maximizes predicted steps/sec divided by opportunity cost
+    /// (SHADHO's routing rule: fast hardware for work that exploits
+    /// it, without squatting on scarce shapes). Cold workloads stay on
+    /// the legacy path, so with the flag off — or before warmup — the
+    /// placement stream is byte-identical to the pre-hardware-aware
+    /// runner.
+    fn place_trial(&mut self, id: TrialId, demand: &Resources) -> Option<crate::ray::Placement> {
+        if self.spec.hw_aware {
+            let workload = self.trials[&id].workload_class().to_string();
+            if self.profiler.is_warm(&workload) {
+                // Score each distinct shape once (profiles are keyed by
+                // shape, not node), then rank nodes through the memo —
+                // deterministic and O(nodes) total.
+                let mut scores: BTreeMap<String, f64> = BTreeMap::new();
+                for n in self.cluster.alive_nodes() {
+                    let key = crate::ray::shape_key(&n.total);
+                    if !scores.contains_key(&key) {
+                        let sps = self.profiler.predict_or_prior(&workload, &key);
+                        let score = sps / crate::ray::opportunity_cost(demand, &n.total);
+                        scores.insert(key, score);
+                    }
+                }
+                return self.placer.place_ranked(&mut self.cluster, 0, demand, |n| {
+                    scores.get(&crate::ray::shape_key(&n.total)).copied().unwrap_or(0.0)
+                });
+            }
+        }
+        self.placer.place(&mut self.cluster, 0, demand)
+    }
+
     fn release(&mut self, id: TrialId) {
         if let Some((node, lease)) = self.leases.remove(&id) {
             self.cluster.release(node, lease);
@@ -746,11 +801,37 @@ impl TrialRunner {
     /// Retire a draining node once its last lease is gone (the final
     /// step of an autoscale shrink).
     fn maybe_finish_drain(&mut self, node: NodeId) {
-        let n = self.cluster.node(node);
-        if n.alive && n.draining && n.leases.is_empty() {
+        let idle = {
+            let n = self.cluster.node(node);
+            n.alive && n.draining && n.leases.is_empty()
+        };
+        if idle {
+            // The node billed up to this instant; settle before its
+            // price leaves the cluster rate.
+            self.accrue_cost();
             self.cluster.retire_node(node);
             self.stats.scale_downs += 1;
         }
+    }
+
+    /// Integrate the cluster's alive $/hour rate over experiment time
+    /// since the last settlement. Must run before any action that
+    /// changes the rate (add/kill/restart/retire), so each interval is
+    /// billed at the rate that actually held during it. A free cluster
+    /// (every price 0.0 — the default) accrues exactly 0.0.
+    fn accrue_cost(&mut self) {
+        let now = self.clock();
+        let dt = now - self.cost_clock;
+        if dt > 0.0 {
+            self.stats.cost_accrued += self.cluster.price_rate() * dt / 3600.0;
+            self.cost_clock = now;
+        }
+    }
+
+    /// True once the accrued virtual spend has reached the spec's
+    /// `budget.max_cost` hard cap (never true without a cap).
+    fn cost_exhausted(&self) -> bool {
+        self.spec.budget_max_cost.map_or(false, |max| self.stats.cost_accrued >= max)
     }
 
     fn finish(&mut self, id: TrialId, status: TrialStatus) {
@@ -893,7 +974,7 @@ impl TrialRunner {
             return;
         }
         let now = self.clock();
-        let iteration = {
+        let (iteration, step_dt) = {
             let (started, acc) = self.run_clock[&id];
             let t = self.trials.get_mut(&id).unwrap();
             let iteration = t.iteration + 1;
@@ -914,7 +995,7 @@ impl TrialRunner {
             // exactly like the original execution did.
             self.stats.total_iterations += 1;
             self.stats.budget_used_s += t.time_total_s - prev_time;
-            iteration
+            (iteration, t.time_total_s - prev_time)
         };
         self.dirty.insert(id);
         // The metric value is Copy — grab it once; the row itself is
@@ -954,6 +1035,18 @@ impl TrialRunner {
         self.stats.results += 1;
         self.stats.util_cpu_sum += self.util.cpu_frac();
         self.stats.util_gpu_sum += self.util.gpu_frac();
+
+        // Feed the throughput profiler: one observed step of this
+        // workload class on the shape it is leased on. Replayed steps
+        // were observed by the original execution and are suppressed
+        // above — restore brings the profiles back instead.
+        if self.spec.hw_aware && step_dt > 0.0 {
+            if let Some((node, _)) = self.leases.get(&id) {
+                let key = crate::ray::shape_key(&self.cluster.node(*node).total);
+                let workload = self.trials[&id].workload_class().to_string();
+                self.profiler.observe(&workload, &key, step_dt);
+            }
+        }
 
         // Best-so-far curve (experiment time axis). A NaN (diverged)
         // metric never enters the curve: as a *first* result it would
@@ -1091,6 +1184,7 @@ impl TrialRunner {
                 "autoscaler",
                 self.autoscaler.as_ref().map(|a| a.snapshot()).unwrap_or(Json::Null),
             ),
+            ("profiler", self.profiler.snapshot()),
             ("checkpoints", self.checkpoints.snapshot()),
             ("scheduler", self.scheduler.snapshot()),
             ("search", self.search.snapshot()),
@@ -1139,6 +1233,9 @@ impl TrialRunner {
                 "autoscaler",
                 self.autoscaler.as_ref().map(|a| a.snapshot()).unwrap_or(Json::Null),
             ),
+            // Small (one entry per warm workload x shape pair): carried
+            // in full per record, like the cluster.
+            ("profiler", self.profiler.snapshot()),
             ("checkpoints", self.checkpoints.snapshot_delta()),
             ("scheduler", self.scheduler.snapshot_delta()),
             ("search", self.search.snapshot_delta()),
@@ -1273,6 +1370,9 @@ impl TrialRunner {
         let finished = j.get("finished").and_then(|v| v.as_bool()).unwrap_or(false);
         self.time_offset =
             j.get("now").and_then(|v| v.as_f64()).ok_or("snapshot: missing clock")?;
+        // Cost up to the snapshot is inside the restored stats; billing
+        // resumes from the snapshot's clock.
+        self.cost_clock = self.time_offset;
         self.next_id =
             j.get("next_id").and_then(|v| v.as_u64()).ok_or("snapshot: missing next_id")?;
         self.search_exhausted = finished
@@ -1300,6 +1400,10 @@ impl TrialRunner {
             if let (Some(a), false) = (self.autoscaler.as_mut(), matches!(aj, Json::Null)) {
                 a.restore(aj)?;
             }
+        }
+        // Pre-hardware-aware snapshots lack the key: stay cold then.
+        if let Some(pj) = j.get("profiler") {
+            self.profiler.restore(pj)?;
         }
         Ok(finished)
     }
@@ -1531,9 +1635,10 @@ impl TrialRunner {
                 return Ok(());
             }
             return Err(format!(
-                "no node fits it and the autoscale template {} cannot help \
-                 (template too small, or already at max_nodes={})",
-                a.policy.node_template, a.policy.max_nodes
+                "no node fits it and none of the {} autoscale template(s) can help \
+                 (templates too small, or already at max_nodes={})",
+                a.templates().len(),
+                a.policy.max_nodes
             ));
         }
         Err("no node in the cluster is large enough".into())
@@ -1549,6 +1654,26 @@ impl TrialRunner {
         }
         if self.infeasible.is_some() {
             return false;
+        }
+        // Cost-budget fail-fast: a malformed cap, or one the (possibly
+        // resumed) run has already spent, must launch zero trials — a
+        // clear error beats burning money on work the budget disowns.
+        if let Some(max) = self.spec.budget_max_cost {
+            if !max.is_finite() || max < 0.0 {
+                let msg = format!("budget.max_cost {max} must be a finite non-negative dollar amount");
+                eprintln!("experiment {:?}: {msg}", self.spec.name);
+                self.infeasible = Some(msg);
+                return false;
+            }
+            if self.cost_exhausted() {
+                let msg = format!(
+                    "cost budget exhausted: accrued ${:.4} >= max_cost ${max}",
+                    self.stats.cost_accrued
+                );
+                eprintln!("experiment {:?}: {msg}", self.spec.name);
+                self.infeasible = Some(msg);
+                return false;
+            }
         }
         let demand = self.spec.resources_per_trial.clone();
         match self.demand_feasible(&demand) {
@@ -1575,15 +1700,34 @@ impl TrialRunner {
         if self.autoscaler.is_none() {
             return;
         }
+        // Settle the bill before any action changes the price rate,
+        // and so the headroom handed to the autoscaler is current.
+        self.accrue_cost();
         let unplaceable = std::mem::take(&mut self.unplaceable);
+        // Hardware/cost context for the tick: fleet throughput scores
+        // per template (hw-aware only — cost-blind ticks rank by the
+        // prior, i.e. by price alone) and the remaining dollar budget.
+        let template_scores = match (&self.autoscaler, self.spec.hw_aware) {
+            (Some(a), true) => Some(
+                a.templates()
+                    .iter()
+                    .map(|t| self.profiler.fleet_score(&crate::ray::shape_key(&t.shape)))
+                    .collect(),
+            ),
+            _ => None,
+        };
+        let hw = HwInputs {
+            template_scores,
+            cost_headroom: self.spec.budget_max_cost.map(|m| m - self.stats.cost_accrued),
+        };
         let action = {
             let a = self.autoscaler.as_mut().expect("checked above");
-            a.tick(&self.cluster, unplaceable, &self.spec.resources_per_trial)
+            a.tick_hw(&self.cluster, unplaceable, &self.spec.resources_per_trial, &hw)
         };
         match action {
             AutoscaleAction::None => {}
-            AutoscaleAction::AddNode(cap) => {
-                let id = self.cluster.add_node(cap);
+            AutoscaleAction::AddNode(t) => {
+                let id = self.cluster.add_node_priced(t.shape, t.price_per_hour);
                 // add_node may have reused a retired slot: the fresh
                 // node must not inherit its predecessor's idle streak.
                 if let Some(a) = &mut self.autoscaler {
@@ -1638,6 +1782,8 @@ impl TrialRunner {
         if self.fault.plan.node_failure_prob == 0.0 {
             return;
         }
+        // Kills and restarts change the price rate: settle first.
+        self.accrue_cost();
         let (kill, restarts) = self.fault.tick(self.cluster.alive_ids());
         for n in restarts {
             self.cluster.restart_node(n);
@@ -1706,7 +1852,8 @@ impl TrialRunner {
     /// invariant checks between events.
     fn step_once(&mut self) -> Option<bool> {
         self.admit();
-        if self.clock() >= self.spec.max_experiment_time_s {
+        self.accrue_cost();
+        if self.clock() >= self.spec.max_experiment_time_s || self.cost_exhausted() {
             return None;
         }
         let event = self.executor.next_event();
@@ -1775,7 +1922,8 @@ impl TrialRunner {
             return false; // unsatisfiable demand: finalize immediately
         }
         loop {
-            if self.clock() >= self.spec.max_experiment_time_s {
+            self.accrue_cost();
+            if self.clock() >= self.spec.max_experiment_time_s || self.cost_exhausted() {
                 return false;
             }
             self.admit();
@@ -1850,6 +1998,9 @@ impl TrialRunner {
     /// final snapshot and assemble the result summary. The runner's
     /// trial table is consumed.
     pub fn finalize(&mut self) -> ExperimentResult {
+        // Bill the tail interval so the reported spend covers the whole
+        // experiment span.
+        self.accrue_cost();
         let leftovers: Vec<TrialId> = self
             .trials
             .scan()
@@ -1923,6 +2074,7 @@ impl TrialRunner {
     /// routing through the same per-node index as `fault_tick`.
     #[doc(hidden)]
     pub fn debug_kill_node(&mut self, node: NodeId) {
+        self.accrue_cost();
         self.cluster.kill_node(node);
         self.apply_node_kill(node);
         self.refresh_util();
@@ -1948,6 +2100,13 @@ impl TrialRunner {
     #[doc(hidden)]
     pub fn debug_stats(&self) -> &RunnerStats {
         &self.stats
+    }
+
+    /// The learned throughput profiles (property tests assert the
+    /// planted fast/slow ordering is recovered and survives resume).
+    #[doc(hidden)]
+    pub fn debug_profiler(&self) -> &ThroughputProfiler {
+        &self.profiler
     }
 
     /// Direct access to the checkpoint store (crash/fault-injection

@@ -31,6 +31,12 @@
 //! scaling (`{"autoscale": {"max_nodes": 8, "node_cpus": 8,
 //! "node_gpus": 4, "scale_up_after": 4, "scale_down_after": 200,
 //! "scale_down_util": 0.1, "min_nodes": 1}}`).
+//!
+//! Hardware-aware forms: a per-node `"price_per_hour"` ($/hour billing
+//! metadata, never a resource dimension), an autoscale `"templates"`
+//! list of priced node shapes the scaler may add, a top-level
+//! `"hw_aware": true` flag enabling learned-throughput placement, and
+//! `"budget": {"max_cost": 25.0}` as a hard virtual-dollar cap.
 
 // The unwraps here are deliberate — lock poisoning is unrecoverable, and
 // the rest guard build-time-validated invariants. The file opts out of the
@@ -40,7 +46,7 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::ray::{AutoscalePolicy, Cluster, Resources};
+use crate::ray::{AutoscalePolicy, Cluster, NodeTemplate, Resources};
 use crate::util::json::{parse, Json};
 
 use super::experiment::{ExperimentSpec, SchedulerKind, SearchKind};
@@ -230,6 +236,19 @@ impl SpecFile {
         if let Some(r) = j.get("resources_per_trial") {
             spec.resources_per_trial = parse_resources(r)?;
         }
+        if let Some(b) = j.get("hw_aware").and_then(|v| v.as_bool()) {
+            spec.hw_aware = b;
+        }
+        if let Some(bj) = j.get("budget") {
+            anyhow::ensure!(bj.as_obj().is_some(), "budget: expected an object");
+            if let Some(m) = jf(bj, "max_cost") {
+                anyhow::ensure!(
+                    m.is_finite() && m >= 0.0,
+                    "budget.max_cost: must be a finite non-negative dollar amount"
+                );
+                spec.budget_max_cost = Some(m);
+            }
+        }
 
         let scheduler =
             parse_scheduler(j.get("scheduler"), spec.max_iterations_per_trial, &space)?;
@@ -278,7 +297,8 @@ fn parse_resources(j: &Json) -> Result<Resources> {
 
 /// Parse the cluster shape: uniform (`{"nodes": 4, "cpus_per_node": 8,
 /// "gpus_per_node": 4}`) or heterogeneous (`{"nodes": [{"cpus": 8,
-/// "gpus": 4}, {"cpus": 16}]}`, custom keys allowed per node).
+/// "gpus": 4}, {"cpus": 16}]}`, custom keys allowed per node). A node's
+/// `"price_per_hour"` is billing metadata, not a resource dimension.
 fn parse_cluster(j: Option<&Json>) -> Result<Cluster> {
     let Some(c) = j else {
         return Ok(Cluster::uniform(4, Resources::cpu(8.0)));
@@ -290,12 +310,14 @@ fn parse_cluster(j: Option<&Json>) -> Result<Cluster> {
                 .as_obj()
                 .ok_or_else(|| anyhow!("cluster.nodes[{i}]: expected an object"))?;
             let mut shape = Resources::default();
+            let mut price = 0.0;
             for (k, v) in obj {
                 let amount =
                     v.as_f64().ok_or_else(|| anyhow!("cluster.nodes[{i}].{k}: bad number"))?;
                 match k.as_str() {
                     "cpus" | "cpu" => shape.cpu = amount,
                     "gpus" | "gpu" => shape.gpu = amount,
+                    "price_per_hour" => price = amount,
                     _ => {
                         shape.custom.insert(k.clone(), amount);
                     }
@@ -304,10 +326,14 @@ fn parse_cluster(j: Option<&Json>) -> Result<Cluster> {
             shape
                 .validate_demand()
                 .map_err(|e| anyhow!("cluster.nodes[{i}]: {e}"))?;
-            shapes.push(shape);
+            anyhow::ensure!(
+                price.is_finite() && price >= 0.0,
+                "cluster.nodes[{i}].price_per_hour: must be finite and >= 0"
+            );
+            shapes.push((shape, price));
         }
         anyhow::ensure!(!shapes.is_empty(), "cluster.nodes: empty node list");
-        return Ok(Cluster::heterogeneous(shapes));
+        return Ok(Cluster::heterogeneous_priced(shapes));
     }
     let nodes = jf(c, "nodes").unwrap_or(4.0) as usize;
     let cpus = jf(c, "cpus_per_node").unwrap_or(8.0);
@@ -316,7 +342,10 @@ fn parse_cluster(j: Option<&Json>) -> Result<Cluster> {
 }
 
 /// Parse the `autoscale` block into an [`AutoscalePolicy`] (defaults
-/// applied per field; the node template defaults to an 8-CPU node).
+/// applied per field; the node template defaults to an 8-CPU node). An
+/// optional `"templates"` array of priced node objects (`{"cpus": 8,
+/// "gpus": 4, "price_per_hour": 6.0}`) gives the scaler a menu of
+/// hardware shapes; `"node_price"` prices the legacy single template.
 fn parse_autoscale(j: &Json) -> Result<AutoscalePolicy> {
     anyhow::ensure!(j.as_obj().is_some(), "autoscale: expected an object");
     let d = AutoscalePolicy::default();
@@ -324,8 +353,38 @@ fn parse_autoscale(j: &Json) -> Result<AutoscalePolicy> {
         jf(j, "node_cpus").unwrap_or(d.node_template.cpu),
         jf(j, "node_gpus").unwrap_or(0.0),
     );
+    let mut templates = Vec::new();
+    if let Some(list) = j.get("templates").and_then(|t| t.as_arr()) {
+        for (i, tj) in list.iter().enumerate() {
+            let obj = tj
+                .as_obj()
+                .ok_or_else(|| anyhow!("autoscale.templates[{i}]: expected an object"))?;
+            let mut shape = Resources::default();
+            let mut price = 0.0;
+            for (k, v) in obj {
+                let amount = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("autoscale.templates[{i}].{k}: bad number"))?;
+                match k.as_str() {
+                    "cpus" | "cpu" => shape.cpu = amount,
+                    "gpus" | "gpu" => shape.gpu = amount,
+                    "price_per_hour" => price = amount,
+                    _ => {
+                        shape.custom.insert(k.clone(), amount);
+                    }
+                }
+            }
+            templates.push(NodeTemplate { shape, price_per_hour: price });
+        }
+    }
+    if templates.is_empty() {
+        if let Some(p) = jf(j, "node_price") {
+            templates.push(NodeTemplate { shape: template.clone(), price_per_hour: p });
+        }
+    }
     let policy = AutoscalePolicy {
         node_template: template,
+        templates,
         min_nodes: jf(j, "min_nodes").unwrap_or(d.min_nodes as f64) as usize,
         max_nodes: jf(j, "max_nodes").unwrap_or(d.max_nodes as f64) as usize,
         scale_up_after: jf(j, "scale_up_after").unwrap_or(d.scale_up_after as f64) as u64,
@@ -469,6 +528,58 @@ mod tests {
         // Bad knobs error.
         assert!(SpecFile::parse_str(r#"{"autoscale": {"scale_down_util": 2}}"#).is_err());
         assert!(SpecFile::parse_str(r#"{"autoscale": {"scale_up_after": 0}}"#).is_err());
+    }
+
+    #[test]
+    fn hw_aware_budget_and_priced_nodes_parse() {
+        let f = SpecFile::parse_str(
+            r#"{"hw_aware": true,
+                "budget": {"max_cost": 12.5},
+                "cluster": {"nodes": [
+                    {"cpus": 8, "gpus": 4, "price_per_hour": 6.0},
+                    {"cpus": 8}
+                ]},
+                "autoscale": {"max_nodes": 4, "templates": [
+                    {"cpus": 8, "gpus": 4, "price_per_hour": 6.0},
+                    {"cpus": 8, "price_per_hour": 1.5}
+                ]}}"#,
+        )
+        .unwrap();
+        assert!(f.spec.hw_aware);
+        assert_eq!(f.spec.budget_max_cost, Some(12.5));
+        // price_per_hour is billing metadata, never a resource dimension.
+        assert_eq!(f.cluster.node(0).total, Resources::cpu_gpu(8.0, 4.0));
+        assert!(f.cluster.node(0).total.custom.is_empty());
+        assert_eq!(f.cluster.node(0).price_per_hour, 6.0);
+        assert_eq!(f.cluster.node(1).price_per_hour, 0.0);
+        let p = f.autoscale.expect("autoscale parsed");
+        assert_eq!(p.templates.len(), 2);
+        assert_eq!(p.templates[0].shape, Resources::cpu_gpu(8.0, 4.0));
+        assert_eq!(p.templates[0].price_per_hour, 6.0);
+        assert_eq!(p.templates[1].price_per_hour, 1.5);
+        // node_price prices the legacy single-template form.
+        let f = SpecFile::parse_str(
+            r#"{"autoscale": {"node_cpus": 16, "node_price": 2.0}}"#,
+        )
+        .unwrap();
+        let p = f.autoscale.expect("autoscale parsed");
+        assert_eq!(p.templates.len(), 1);
+        assert_eq!(p.templates[0].shape, Resources::cpu(16.0));
+        assert_eq!(p.templates[0].price_per_hour, 2.0);
+        // Defaults: flag off, no budget, no templates.
+        let f = SpecFile::parse_str("{}").unwrap();
+        assert!(!f.spec.hw_aware);
+        assert_eq!(f.spec.budget_max_cost, None);
+        // Bad money errors.
+        assert!(SpecFile::parse_str(r#"{"budget": {"max_cost": -1}}"#).is_err());
+        assert!(SpecFile::parse_str(
+            r#"{"cluster": {"nodes": [{"cpus": 8, "price_per_hour": -1}]}}"#
+        )
+        .is_err());
+        assert!(SpecFile::parse_str(
+            r#"{"autoscale": {"templates": [{"cpus": 8, "price_per_hour": -1}]}}"#
+        )
+        .is_err());
     }
 
     #[test]

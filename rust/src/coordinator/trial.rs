@@ -249,6 +249,14 @@ impl Trial {
         }
     }
 
+    /// The trial's workload class for throughput profiling: the
+    /// `"workload"` config parameter when present (categorical grids
+    /// plant it), else `"default"` so homogeneous experiments share one
+    /// profile per shape.
+    pub fn workload_class(&self) -> &str {
+        self.config.get("workload").and_then(|v| v.as_str()).unwrap_or("default")
+    }
+
     /// Serialize for the experiment snapshot (see `coordinator::persist`).
     /// Metric ids are resolved back to names through `schema`: snapshots
     /// always store names, so ids stay process-ephemeral and old

@@ -30,7 +30,7 @@ use tune::net::{
     serve, wait_until_up, Client, ListenAddr, ServeOptions, ShardedHub, ShardedHubOptions,
     WorkloadResolver,
 };
-use tune::ray::{AutoscalePolicy, Cluster, Resources};
+use tune::ray::{AutoscalePolicy, Cluster, NodeTemplate, Resources};
 use tune::runtime::{Manifest, PjrtService};
 use tune::trainable::jax_model::jax_factory;
 use tune::trainable::synthetic::{CurveTrainable, NonStationaryTrainable};
@@ -94,6 +94,15 @@ COMMANDS
              --autoscale-down-util F    drain nodes at or below this
                                 utilization fraction (default 0.0:
                                 fully idle only)
+             --node-price F     virtual $/hour per node (cluster and
+                                autoscale template); enables cost
+                                accrual on the virtual clock
+             --hw-aware         learned-throughput placement and
+                                cost-aware autoscaling (online
+                                steps/sec profiles per workload class
+                                and node shape)
+             --max-cost F       hard virtual-dollar budget: the run
+                                fails fast once accrued cost reaches it
              --exec sim|threads|pool  executor (default per workload)
              --workers N        pool worker threads (default 4)
              --worker-cpus F --worker-gpus F  per-worker capacity
@@ -226,7 +235,8 @@ fn ckpt_mem_budget(flags: &Flags) -> Option<usize> {
 }
 
 /// `--autoscale-max-nodes N` (plus the per-node shape flags) enables an
-/// elastic autoscaler whose template matches the cluster's node shape.
+/// elastic autoscaler whose template matches the cluster's node shape;
+/// `--node-price F` prices that template in virtual $/hour.
 fn autoscale_policy(
     flags: &Flags,
     node_shape: &Resources,
@@ -236,8 +246,16 @@ fn autoscale_policy(
     if max_nodes == 0 {
         return None;
     }
+    let templates = match flags.0.get("node-price") {
+        Some(_) => vec![NodeTemplate {
+            shape: node_shape.clone(),
+            price_per_hour: flags.get_f64("node-price", 0.0),
+        }],
+        None => Vec::new(),
+    };
     let policy = AutoscalePolicy {
         node_template: node_shape.clone(),
+        templates,
         min_nodes: flags.get_u64("autoscale-min-nodes", min_nodes as u64) as usize,
         max_nodes,
         scale_up_after: flags.get_u64("autoscale-up-after", 4),
@@ -352,14 +370,27 @@ fn cmd_run(flags: &Flags) {
         eprintln!("bad --cpus-per-trial/--gpus-per-trial: {e}");
         std::process::exit(2);
     }
+    spec.hw_aware = flags.0.get("hw-aware").is_some();
+    if flags.0.get("max-cost").is_some() {
+        spec.budget_max_cost = Some(flags.get_f64("max-cost", 0.0));
+    }
+    let max_cost = spec.budget_max_cost;
 
     let sched = scheduler_kind(&flags.get("scheduler", "asha"), iters, &space);
     let search = search_kind(&flags.get("search", "random"));
     let exec = exec_override(flags, exec);
     let exec_label = exec.label();
     let node_shape = Resources::cpu_gpu(cpus, gpus);
+    let node_price = flags.get_f64("node-price", 0.0);
+    let cluster = if node_price > 0.0 {
+        Cluster::heterogeneous_priced(
+            (0..nodes.max(1)).map(|_| (node_shape.clone(), node_price)).collect(),
+        )
+    } else {
+        Cluster::uniform(nodes, node_shape.clone())
+    };
     let opts = RunOptions {
-        cluster: Cluster::uniform(nodes, node_shape.clone()),
+        cluster,
         exec,
         progress_every: flags.get_u64("progress-every", 200),
         log_dir: flags.0.get("log-dir").map(PathBuf::from),
@@ -369,6 +400,7 @@ fn cmd_run(flags: &Flags) {
         autoscale: autoscale_policy(flags, &node_shape, 1),
         worker_caps: worker_caps(flags, flags.get_u64("workers", 4) as usize),
         checkpoint_mem_budget: ckpt_mem_budget(flags),
+        shape_factors: None,
     };
 
     let label = sched.label();
@@ -412,6 +444,10 @@ fn cmd_run(flags: &Flags) {
             "autoscale            : +{} nodes, -{} nodes, {} preemption(s) (0 trials lost)",
             res.stats.scale_ups, res.stats.scale_downs, res.stats.preemptions
         );
+    }
+    if max_cost.is_some() || res.stats.cost_accrued > 0.0 {
+        let budget = max_cost.map(|m| format!(" (budget ${m:.2})")).unwrap_or_default();
+        println!("cost accrued         : ${:.4}{budget}", res.stats.cost_accrued);
     }
     if let (Some(best), Some(m)) = (res.best, res.best_metric()) {
         println!(
@@ -484,6 +520,7 @@ fn run_spec_file(path: &std::path::Path, flags: &Flags) {
         autoscale: f.autoscale,
         worker_caps: worker_caps(flags, flags.get_u64("workers", 4) as usize),
         checkpoint_mem_budget: ckpt_mem_budget(flags),
+        shape_factors: None,
     };
     let label = f.scheduler.label();
     println!("spec {:?}: workload={} scheduler={} trials={}",

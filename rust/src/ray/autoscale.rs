@@ -27,11 +27,45 @@ use super::resources::Resources;
 /// Tolerance for the scale-down utilization comparison.
 const UTIL_EPS: f64 = 1e-9;
 
+/// A purchasable node shape: capacity plus its virtual $/hour price.
+/// The autoscaler's scale-up step picks among these (SHADHO's
+/// cost-aware policy); the legacy single-template path is a one-entry
+/// list at price zero.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeTemplate {
+    /// Capacity of a node bought from this template.
+    pub shape: Resources,
+    /// Virtual dollars accrued per hour of *alive* time on the virtual
+    /// clock (draining nodes still bill until they retire).
+    pub price_per_hour: f64,
+}
+
+impl NodeTemplate {
+    /// A free template — the shape-only legacy form.
+    pub fn free(shape: Resources) -> Self {
+        NodeTemplate { shape, price_per_hour: 0.0 }
+    }
+    /// Knob validation shared by the spec file and CLI paths.
+    pub fn validate(&self) -> Result<(), String> {
+        self.shape.validate_demand().map_err(|e| format!("template shape: {e}"))?;
+        if !self.price_per_hour.is_finite() || self.price_per_hour < 0.0 {
+            return Err(format!(
+                "template price_per_hour must be finite and >= 0, got {}",
+                self.price_per_hour
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Knobs for the elastic autoscaler.
 #[derive(Clone, Debug)]
 pub struct AutoscalePolicy {
     /// Capacity of every node added on scale-up.
     pub node_template: Resources,
+    /// Priced node shapes scale-up may choose among. Empty means the
+    /// legacy single-shape path: `node_template` at price zero.
+    pub templates: Vec<NodeTemplate>,
     /// Never drain below this many alive, non-draining nodes.
     pub min_nodes: usize,
     /// Never grow past this many alive nodes.
@@ -52,6 +86,7 @@ impl Default for AutoscalePolicy {
     fn default() -> Self {
         AutoscalePolicy {
             node_template: Resources::cpu(8.0),
+            templates: Vec::new(),
             min_nodes: 1,
             max_nodes: 8,
             scale_up_after: 4,
@@ -68,6 +103,9 @@ impl AutoscalePolicy {
         self.node_template
             .validate_demand()
             .map_err(|e| format!("node template: {e}"))?;
+        for (i, t) in self.templates.iter().enumerate() {
+            t.validate().map_err(|e| format!("templates[{i}]: {e}"))?;
+        }
         if self.scale_up_after == 0 || self.scale_down_after == 0 {
             return Err("scale_up_after and scale_down_after must be >= 1".into());
         }
@@ -90,11 +128,28 @@ impl AutoscalePolicy {
 pub enum AutoscaleAction {
     /// Nothing to do.
     None,
-    /// Add a node with this capacity.
-    AddNode(Resources),
+    /// Add a node from this template (shape + price).
+    AddNode(NodeTemplate),
     /// Drain this node toward retirement (preempt its trials as they
     /// report, retire it once empty).
     Drain(NodeId),
+}
+
+/// Optional hardware-aware signals the runner feeds into a tick. The
+/// default (both absent) reproduces the cost/throughput-blind policy
+/// exactly, so the PR-5 decision trajectories are unchanged unless the
+/// experiment opts in.
+#[derive(Clone, Debug, Default)]
+pub struct HwInputs {
+    /// Learned fleet throughput score per policy template, in
+    /// [`Autoscaler::templates`] order (predicted steps/sec for the
+    /// current workload mix on that shape). When present, AddNode picks
+    /// the template maximizing score ÷ price instead of the first fit.
+    pub template_scores: Option<Vec<f64>>,
+    /// Remaining virtual budget (`budget.max_cost - accrued`). At or
+    /// below zero, scale-up is suppressed entirely: a node bought now
+    /// could never be paid for.
+    pub cost_headroom: Option<f64>,
 }
 
 /// Deterministic elastic autoscaler: counts queue-pressure and idle
@@ -114,6 +169,10 @@ pub enum AutoscaleAction {
 pub struct Autoscaler {
     /// The policy being executed.
     pub policy: AutoscalePolicy,
+    /// Normalized purchasable templates: `policy.templates`, or the
+    /// legacy `[node_template @ $0]` when that list is empty. Fixed at
+    /// construction so every tick indexes one canonical order.
+    templates: Vec<NodeTemplate>,
     /// Consecutive ticks with unplaceable pending demand.
     pressure: u64,
     /// Logical scale-down clock. Advances only on ticks that reach the
@@ -144,8 +203,14 @@ pub struct Autoscaler {
 impl Autoscaler {
     /// A fresh autoscaler for `policy`.
     pub fn new(policy: AutoscalePolicy) -> Self {
+        let templates = if policy.templates.is_empty() {
+            vec![NodeTemplate::free(policy.node_template.clone())]
+        } else {
+            policy.templates.clone()
+        };
         Autoscaler {
             policy,
+            templates,
             pressure: 0,
             down_clock: 0,
             low_since: BTreeMap::new(),
@@ -166,8 +231,62 @@ impl Autoscaler {
     /// at `max_nodes` look permanently stuck and finalize with its
     /// rolled-back trials unrun.
     pub fn can_grow(&self, cluster: &Cluster, demand: &Resources) -> bool {
+        self.headroom(cluster) && self.template_fits(demand)
+    }
+
+    /// Zombie-aware node headroom — the ONE growth-bound check, shared
+    /// by [`can_grow`](Self::can_grow) and the tick's scale-up branch.
+    /// (They used to disagree: tick counted empty draining zombies
+    /// against `max_nodes` while `can_grow` did not, so the runner's
+    /// hopeless-backlog guard waited forever on an AddNode that tick
+    /// refused to emit.)
+    fn headroom(&self, cluster: &Cluster) -> bool {
         let occupying = cluster.utilization().nodes_alive - cluster.draining_empty_count();
-        occupying < self.policy.max_nodes && self.policy.node_template.fits(demand)
+        occupying < self.policy.max_nodes
+    }
+
+    /// The normalized purchasable template list (never empty), in the
+    /// order [`HwInputs::template_scores`] is expected to follow.
+    pub fn templates(&self) -> &[NodeTemplate] {
+        &self.templates
+    }
+
+    /// True when at least one template shape could hold `demand`.
+    fn template_fits(&self, demand: &Resources) -> bool {
+        self.templates.iter().any(|t| t.shape.fits(demand))
+    }
+
+    /// Choose the template for a scale-up. Cost headroom at or below
+    /// zero vetoes the add outright. With learned scores the pick
+    /// maximizes predicted steps/sec per dollar (ties keep the earliest
+    /// template, so equal-value templates resolve deterministically);
+    /// without scores it is the first template that fits — the legacy
+    /// single-template behaviour.
+    fn pick_template(&self, demand: &Resources, hw: &HwInputs) -> Option<NodeTemplate> {
+        if hw.cost_headroom.is_some_and(|h| h <= 0.0) {
+            return None;
+        }
+        let mut best: Option<(usize, f64)> = None;
+        for (i, t) in self.templates.iter().enumerate() {
+            if !t.shape.fits(demand) {
+                continue;
+            }
+            match &hw.template_scores {
+                None => return Some(t.clone()),
+                Some(scores) => {
+                    // Score per dollar; the epsilon keeps free templates
+                    // finite (they win any tie on throughput alone).
+                    let value =
+                        scores.get(i).copied().unwrap_or(0.0) / t.price_per_hour.max(1e-6);
+                    if best.map_or(true, |(_, b)| {
+                        crate::util::order::asc(value, b) == std::cmp::Ordering::Greater
+                    }) {
+                        best = Some((i, value));
+                    }
+                }
+            }
+        }
+        best.map(|(i, _)| self.templates[i].clone())
     }
 
     /// Reset a node's low-utilization streak — the coordinator calls
@@ -287,6 +406,31 @@ impl Autoscaler {
         unplaceable: bool,
         demand: &Resources,
     ) -> AutoscaleAction {
+        self.tick_hw(cluster, unplaceable, demand, &HwInputs::default())
+    }
+
+    /// [`tick`](Self::tick) with optional hardware-aware inputs (learned
+    /// template scores, remaining cost budget) from the runner.
+    pub fn tick_hw(
+        &mut self,
+        cluster: &Cluster,
+        unplaceable: bool,
+        demand: &Resources,
+        hw: &HwInputs,
+    ) -> AutoscaleAction {
+        // Pressure accounting comes FIRST: a tick is a tick, whatever
+        // else it does. (The zombie sweep below used to early-return
+        // before this point, silently swallowing the tick's pressure
+        // increment — a resume from mid-drain then needed extra ticks
+        // beyond `scale_up_after` to grow.)
+        let mut want_add = false;
+        if unplaceable && self.template_fits(demand) {
+            self.pressure += 1;
+            want_add = self.pressure >= self.policy.scale_up_after && self.headroom(cluster);
+        } else {
+            self.pressure = 0;
+        }
+
         // Zombie sweep: a draining node whose leases are gone (e.g. a
         // fault cleared them) must still retire — re-issue the drain so
         // the coordinator completes it. O(1) via the cluster's index.
@@ -294,17 +438,12 @@ impl Autoscaler {
             return AutoscaleAction::Drain(id);
         }
 
-        // Scale up on sustained pressure the template could relieve.
-        if unplaceable && self.policy.node_template.fits(demand) {
-            self.pressure += 1;
-            if self.pressure >= self.policy.scale_up_after
-                && cluster.utilization().nodes_alive < self.policy.max_nodes
-            {
+        // Scale up on sustained pressure a template could relieve.
+        if want_add {
+            if let Some(t) = self.pick_template(demand, hw) {
                 self.pressure = 0;
-                return AutoscaleAction::AddNode(self.policy.node_template.clone());
+                return AutoscaleAction::AddNode(t);
             }
-        } else {
-            self.pressure = 0;
         }
 
         // Scale down: drain the first node (id order, deterministic)
@@ -339,10 +478,10 @@ impl Autoscaler {
         }
         let u = cluster.utilization();
         let survivors = u.nodes_alive - u.nodes_draining;
-        let mut chosen = None;
+        let mut chosen: Option<(NodeId, f64)> = None;
         let mut park = Vec::new();
         if survivors > self.policy.min_nodes {
-            let template_helps = self.policy.node_template.fits(demand);
+            let template_helps = self.template_fits(demand);
             for &id in &self.eligible {
                 let n = cluster.node(id);
                 let last_home = n.total.fits(demand)
@@ -352,12 +491,20 @@ impl Autoscaler {
                         .any(|m| m.id != id && !m.draining && m.total.fits(demand));
                 if last_home {
                     park.push(id);
-                } else {
-                    chosen = Some(id);
-                    break;
+                    continue;
+                }
+                // Among eligible candidates, drain the most expensive
+                // node first (cost-aware shrink); strictly-greater keeps
+                // the lowest id on ties, so at uniform prices this is
+                // byte-identical to the old first-eligible pick.
+                if chosen.map_or(true, |(_, b)| {
+                    crate::util::order::asc(n.price_per_hour, b) == std::cmp::Ordering::Greater
+                }) {
+                    chosen = Some((id, n.price_per_hour));
                 }
             }
         }
+        let chosen = chosen.map(|(id, _)| id);
         for id in park {
             self.eligible.remove(&id);
             self.parked.insert(id);
@@ -387,6 +534,7 @@ mod tests {
     fn policy(up: u64, down: u64, util: f64, min: usize, max: usize) -> AutoscalePolicy {
         AutoscalePolicy {
             node_template: Resources::cpu_gpu(8.0, 4.0),
+            templates: Vec::new(),
             min_nodes: min,
             max_nodes: max,
             scale_up_after: up,
@@ -404,7 +552,10 @@ mod tests {
         assert_eq!(a.tick(&c, true, &d), AutoscaleAction::None);
         assert_eq!(a.tick(&c, true, &d), AutoscaleAction::None);
         match a.tick(&c, true, &d) {
-            AutoscaleAction::AddNode(cap) => assert_eq!(cap, Resources::cpu_gpu(8.0, 4.0)),
+            AutoscaleAction::AddNode(t) => {
+                assert_eq!(t.shape, Resources::cpu_gpu(8.0, 4.0));
+                assert_eq!(t.price_per_hour, 0.0);
+            }
             other => panic!("{other:?}"),
         }
         // Pressure resets after an add.
@@ -555,6 +706,89 @@ mod tests {
     }
 
     #[test]
+    fn zombie_at_max_nodes_does_not_stall_scale_up() {
+        // Regression: resume-from-mid-drain at max_nodes with an
+        // unplaceable backlog. The empty draining zombie must neither
+        // occupy headroom nor swallow pressure ticks — AddNode must
+        // arrive within scale_up_after ticks of sustained pressure.
+        let mut a = Autoscaler::new(policy(2, 1000, 0.0, 0, 2));
+        let mut c = Cluster::uniform(2, Resources::cpu_gpu(8.0, 4.0));
+        c.lease(1, Resources::cpu_gpu(8.0, 4.0)); // node 1 full
+        c.begin_drain(0); // node 0: empty draining zombie (mid-drain resume)
+        let d = Resources::cpu_gpu(1.0, 0.5);
+        // The hopeless-backlog guard and the tick must agree growth is
+        // possible — this disagreement was the bug.
+        assert!(a.can_grow(&c, &d));
+        // Tick 1: the sweep re-issues the drain, but the pressure tick
+        // still counts.
+        assert_eq!(a.tick(&c, true, &d), AutoscaleAction::Drain(0));
+        c.retire_node(0);
+        // Tick 2 (= scale_up_after): pressure crosses the threshold and
+        // the add fires. The old code needed a third tick.
+        assert!(matches!(a.tick(&c, true, &d), AutoscaleAction::AddNode(_)));
+    }
+
+    #[test]
+    fn cost_aware_pick_prefers_cheaper_equal_shape() {
+        let mut p = policy(1, 1000, 0.0, 0, 4);
+        p.templates = vec![
+            NodeTemplate { shape: Resources::cpu(4.0), price_per_hour: 8.0 },
+            NodeTemplate { shape: Resources::cpu(4.0), price_per_hour: 1.0 },
+        ];
+        assert!(p.validate().is_ok());
+        let mut c = Cluster::uniform(1, Resources::cpu(1.0));
+        c.lease(0, Resources::cpu(1.0)); // full
+        let d = Resources::cpu(1.0);
+        // Equal throughput scores: price decides — the $1 shape wins.
+        let hw = HwInputs {
+            template_scores: Some(vec![1.0, 1.0]),
+            cost_headroom: Some(100.0),
+        };
+        let mut a = Autoscaler::new(p.clone());
+        match a.tick_hw(&c, true, &d, &hw) {
+            AutoscaleAction::AddNode(t) => assert_eq!(t.price_per_hour, 1.0),
+            other => panic!("{other:?}"),
+        }
+        // Without learned scores the pick is the first fitting template
+        // (legacy order), whatever its price.
+        let mut b = Autoscaler::new(p);
+        match b.tick_hw(&c, true, &d, &HwInputs::default()) {
+            AutoscaleAction::AddNode(t) => assert_eq!(t.price_per_hour, 8.0),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn exhausted_cost_headroom_vetoes_growth() {
+        let mut a = Autoscaler::new(policy(1, 1000, 0.0, 0, 4));
+        let mut c = Cluster::uniform(1, Resources::cpu(1.0));
+        c.lease(0, Resources::cpu(1.0));
+        let d = Resources::cpu(1.0);
+        let broke = HwInputs { template_scores: None, cost_headroom: Some(0.0) };
+        assert_eq!(a.tick_hw(&c, true, &d, &broke), AutoscaleAction::None);
+        assert_eq!(a.tick_hw(&c, true, &d, &broke), AutoscaleAction::None);
+        // Pressure was retained, not reset: the moment budget reappears
+        // the add fires on the very next tick.
+        let funded = HwInputs { template_scores: None, cost_headroom: Some(5.0) };
+        assert!(matches!(a.tick_hw(&c, true, &d, &funded), AutoscaleAction::AddNode(_)));
+    }
+
+    #[test]
+    fn drains_most_expensive_eligible_first() {
+        // Two equally idle nodes; the cost-aware shrink retires the
+        // expensive one. At uniform prices the lowest id still wins
+        // (the legacy deterministic order).
+        let mut a = Autoscaler::new(policy(100, 2, 1.0, 0, 4));
+        let c = Cluster::heterogeneous_priced(vec![
+            (Resources::cpu_gpu(8.0, 4.0), 1.0),
+            (Resources::cpu_gpu(8.0, 4.0), 5.0),
+        ]);
+        let d = Resources::cpu(1.0);
+        assert_eq!(a.tick(&c, false, &d), AutoscaleAction::None);
+        assert_eq!(a.tick(&c, false, &d), AutoscaleAction::Drain(1));
+    }
+
+    #[test]
     fn policy_validation_rejects_bad_knobs() {
         assert!(AutoscalePolicy::default().validate().is_ok());
         let bad_util = AutoscalePolicy { scale_down_util: 2.0, ..Default::default() };
@@ -566,5 +800,15 @@ mod tests {
         let nan_template =
             AutoscalePolicy { node_template: Resources::cpu(f64::NAN), ..Default::default() };
         assert!(nan_template.validate().is_err());
+        let neg_price = AutoscalePolicy {
+            templates: vec![NodeTemplate { shape: Resources::cpu(4.0), price_per_hour: -1.0 }],
+            ..Default::default()
+        };
+        assert!(neg_price.validate().is_err());
+        let nan_price = AutoscalePolicy {
+            templates: vec![NodeTemplate { shape: Resources::cpu(4.0), price_per_hour: f64::NAN }],
+            ..Default::default()
+        };
+        assert!(nan_price.validate().is_err());
     }
 }

@@ -36,10 +36,14 @@ pub struct Node {
     pub retired: bool,
     /// Live leases placed on this node: lease -> demand.
     pub leases: BTreeMap<LeaseId, Resources>,
+    /// Virtual $/hour this node bills while alive (draining included —
+    /// a node costs money until it actually retires). 0 for free nodes,
+    /// which is every node outside cost-aware experiments.
+    pub price_per_hour: f64,
 }
 
 impl Node {
-    /// A fresh, alive node with `total` capacity.
+    /// A fresh, alive node with `total` capacity (price zero).
     pub fn new(id: NodeId, total: Resources) -> Self {
         Node {
             id,
@@ -49,6 +53,7 @@ impl Node {
             draining: false,
             retired: false,
             leases: BTreeMap::new(),
+            price_per_hour: 0.0,
         }
     }
 
@@ -160,6 +165,10 @@ pub struct Cluster {
     /// Bumped when the set of node shapes eligible for
     /// [`Cluster::any_node_fits`] changes (add / retire).
     shape_epoch: u64,
+    /// Incrementally maintained sum of `price_per_hour` over alive
+    /// nodes — the instantaneous virtual burn rate the runner
+    /// integrates over the virtual clock.
+    price_rate: f64,
 }
 
 impl Cluster {
@@ -174,6 +183,7 @@ impl Cluster {
             change_epoch: 0,
             grow_epoch: 0,
             shape_epoch: 0,
+            price_rate: 0.0,
         }
     }
 
@@ -196,11 +206,28 @@ impl Cluster {
         c
     }
 
-    /// Add a node with `total` capacity (autoscaling); returns its id.
-    /// Reuses the first retired slot if any, so scale up/down churn
-    /// never grows the node table without bound (fault-killed nodes are
-    /// NOT reused — they may restart with their original capacity).
+    /// A heterogeneous node set with per-node $/hour prices — the
+    /// cost-aware twin of [`Cluster::heterogeneous`].
+    pub fn heterogeneous_priced(shapes: Vec<(Resources, f64)>) -> Self {
+        let mut c = Cluster::new();
+        for (s, price) in shapes {
+            c.add_node_priced(s, price);
+        }
+        c
+    }
+
+    /// Add a free node with `total` capacity (autoscaling); returns its
+    /// id. See [`Cluster::add_node_priced`].
     pub fn add_node(&mut self, total: Resources) -> NodeId {
+        self.add_node_priced(total, 0.0)
+    }
+
+    /// Add a node with `total` capacity billing `price_per_hour`;
+    /// returns its id. Reuses the first retired slot if any, so scale
+    /// up/down churn never grows the node table without bound
+    /// (fault-killed nodes are NOT reused — they may restart with their
+    /// original capacity).
+    pub fn add_node_priced(&mut self, total: Resources, price_per_hour: f64) -> NodeId {
         let id = if let Some(slot) = self.nodes.iter().position(|n| n.retired) {
             let id = slot as NodeId;
             self.nodes[slot] = Node::new(id, total);
@@ -210,6 +237,9 @@ impl Cluster {
             self.nodes.push(Node::new(id, total));
             id
         };
+        let n = &mut self.nodes[id as usize];
+        n.price_per_hour = price_per_hour;
+        self.price_rate += price_per_hour;
         let n = &self.nodes[id as usize];
         self.util.cpu_total += n.total.cpu;
         self.util.gpu_total += n.total.gpu;
@@ -291,6 +321,7 @@ impl Cluster {
             if n.draining {
                 self.util.nodes_draining -= 1;
             }
+            self.price_rate -= n.price_per_hour;
         }
         let n = &mut self.nodes[node as usize];
         n.alive = false;
@@ -312,6 +343,7 @@ impl Cluster {
             self.util.cpu_total += n.total.cpu;
             self.util.gpu_total += n.total.gpu;
             self.util.nodes_alive += 1;
+            self.price_rate += n.price_per_hour;
             let draining = n.draining;
             if draining {
                 // The drain flag survives a kill; it comes back as an
@@ -359,6 +391,7 @@ impl Cluster {
             if n.draining {
                 self.util.nodes_draining -= 1;
             }
+            self.price_rate -= n.price_per_hour;
         }
         let n = &mut self.nodes[node as usize];
         n.alive = false;
@@ -413,6 +446,13 @@ impl Cluster {
         self.draining_empty.len()
     }
 
+    /// Instantaneous virtual burn rate: sum of $/hour over alive nodes
+    /// (an O(1) read of the incrementally maintained sum). The runner
+    /// integrates this over the virtual clock into `cost_accrued`.
+    pub fn price_rate(&self) -> f64 {
+        self.price_rate
+    }
+
     /// Bumped on every observable mutation (see field docs).
     pub fn change_epoch(&self) -> u64 {
         self.change_epoch
@@ -453,6 +493,7 @@ impl Cluster {
                         ("alive", Json::Bool(n.alive)),
                         ("draining", Json::Bool(n.draining)),
                         ("retired", Json::Bool(n.retired)),
+                        ("price", Json::Num(n.price_per_hour)),
                     ])
                 })
                 .collect(),
@@ -479,6 +520,8 @@ impl Cluster {
             n.alive = flag("alive");
             n.draining = flag("draining");
             n.retired = flag("retired");
+            // Absent in pre-cost snapshots: free node.
+            n.price_per_hour = nj.get("price").and_then(|v| v.as_f64()).unwrap_or(0.0);
             if !n.alive {
                 n.available = Resources::default();
             }
@@ -493,6 +536,7 @@ impl Cluster {
     /// else the mutating methods keep them current.
     fn rebuild_index(&mut self) {
         self.util = self.recompute_utilization();
+        self.price_rate = self.alive_nodes().map(|n| n.price_per_hour).sum();
         self.alive_ids = self.nodes.iter().filter(|n| n.alive).map(|n| n.id).collect();
         self.draining_empty = self
             .nodes
@@ -535,6 +579,10 @@ impl Cluster {
                 "draining_empty {:?} != recomputed {:?}",
                 self.draining_empty, zombies
             ));
+        }
+        let rate: f64 = self.alive_nodes().map(|n| n.price_per_hour).sum();
+        if !close(self.price_rate, rate) {
+            return Err(format!("cached price_rate {} != recomputed {rate}", self.price_rate));
         }
         if !self.check_invariants() {
             return Err("per-node lease accounting violated".into());
@@ -775,6 +823,43 @@ mod tests {
         // Leases are not persisted, so the drained node restores empty.
         assert_eq!(back.first_zombie(), Some(1));
         assert_eq!(back.utilization(), back.recompute_utilization());
+    }
+
+    #[test]
+    fn price_rate_tracks_node_lifecycle_and_survives_snapshot() {
+        let mut c = Cluster::heterogeneous_priced(vec![
+            (Resources::cpu_gpu(8.0, 4.0), 6.0),
+            (Resources::cpu(8.0), 1.5),
+        ]);
+        assert!((c.price_rate() - 7.5).abs() < 1e-9);
+        // Draining still bills; kill/retire stops the meter; restart
+        // resumes it.
+        c.begin_drain(1);
+        assert!((c.price_rate() - 7.5).abs() < 1e-9);
+        c.retire_node(1);
+        assert!((c.price_rate() - 6.0).abs() < 1e-9);
+        c.kill_node(0);
+        assert!(c.price_rate().abs() < 1e-9);
+        c.restart_node(0);
+        assert!((c.price_rate() - 6.0).abs() < 1e-9);
+        let id = c.add_node_priced(Resources::cpu(4.0), 2.0);
+        assert_eq!(id, 1, "retired slot reused");
+        assert!((c.price_rate() - 8.0).abs() < 1e-9);
+        c.debug_check().unwrap();
+        // Prices survive the snapshot round trip; pre-cost snapshots
+        // (no "price" key) default to free, exercised via a stripped
+        // legacy-style node object.
+        let back = Cluster::restore_nodes(
+            &crate::util::json::parse(&c.snapshot().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert!((back.node(0).price_per_hour - 6.0).abs() < 1e-9);
+        assert!((back.price_rate() - 8.0).abs() < 1e-9);
+        back.debug_check().unwrap();
+        let legacy = r#"[{"total":{"cpu":4,"gpu":0},"alive":true,"draining":false,"retired":false}]"#;
+        let old = Cluster::restore_nodes(&crate::util::json::parse(legacy).unwrap()).unwrap();
+        assert_eq!(old.node(0).price_per_hour, 0.0);
+        assert_eq!(old.price_rate(), 0.0);
     }
 
     #[test]

@@ -14,11 +14,13 @@ pub mod cluster;
 pub mod fault;
 pub mod object_store;
 pub mod placement;
+pub mod profile;
 pub mod resources;
 
-pub use autoscale::{AutoscaleAction, AutoscalePolicy, Autoscaler};
+pub use autoscale::{AutoscaleAction, AutoscalePolicy, Autoscaler, HwInputs, NodeTemplate};
 pub use cluster::{Cluster, LeaseId, Node, NodeId, Utilization};
 pub use fault::{FaultInjector, FaultPlan};
 pub use object_store::{ObjectId, ObjectStore};
 pub use placement::{Placement, PlacementStats, TwoLevelScheduler};
+pub use profile::{opportunity_cost, shape_key, ShapeFactors, ThroughputProfiler};
 pub use resources::Resources;

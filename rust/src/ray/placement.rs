@@ -86,6 +86,13 @@ impl TwoLevelScheduler {
         origin: NodeId,
         demand: &Resources,
     ) -> Option<Placement> {
+        // An empty node table (a cluster drained to nothing) can satisfy
+        // no demand; without this guard the level-1 origin lookup indexes
+        // past the table.
+        if cluster.nodes.is_empty() {
+            self.stats.failed += 1;
+            return None;
+        }
         if let Some((d, epoch)) = &self.fail_cache {
             if *epoch == cluster.grow_epoch() && d == demand {
                 self.stats.failed += 1;
@@ -124,10 +131,14 @@ impl TwoLevelScheduler {
 
     /// Centralized baseline (for the C3 scaling ablation): always scans
     /// every node from zero and picks the least-loaded fit — the
-    /// "central bottleneck" policy the paper contrasts with.
+    /// "central bottleneck" policy the paper contrasts with. The origin
+    /// still decides local-vs-spilled accounting, so `spill_fraction()`
+    /// stays comparable with the two-level policy instead of pinning at
+    /// 100%.
     pub fn place_centralized(
         &mut self,
         cluster: &mut Cluster,
+        origin: NodeId,
         demand: &Resources,
     ) -> Option<Placement> {
         let mut best: Option<(NodeId, f64)> = None;
@@ -142,10 +153,66 @@ impl TwoLevelScheduler {
         match best {
             Some((id, _)) => {
                 let lease = cluster.lease(id, demand.clone());
-                self.stats.spilled += 1;
-                Some(Placement { node: id, lease, spilled: true })
+                let spilled = id != origin;
+                if spilled {
+                    self.stats.spilled += 1;
+                } else {
+                    self.stats.local += 1;
+                }
+                Some(Placement { node: id, lease, spilled })
             }
             None => {
+                self.stats.failed += 1;
+                None
+            }
+        }
+    }
+
+    /// Throughput-aware placement: scan every live, non-draining node
+    /// that fits `demand` and take the one with the highest `score`
+    /// (predicted steps/sec ÷ opportunity cost of the slot; ties break
+    /// to the lowest node id so the choice is deterministic). Shares the
+    /// fail-fast memo and the local/spilled accounting with [`place`];
+    /// callers flip to it only once throughput profiles are warm.
+    pub fn place_ranked<F: Fn(&super::cluster::Node) -> f64>(
+        &mut self,
+        cluster: &mut Cluster,
+        origin: NodeId,
+        demand: &Resources,
+        score: F,
+    ) -> Option<Placement> {
+        if let Some((d, epoch)) = &self.fail_cache {
+            if *epoch == cluster.grow_epoch() && d == demand {
+                self.stats.failed += 1;
+                return None;
+            }
+        }
+        let mut best: Option<(NodeId, f64)> = None;
+        for n in cluster.nodes.iter() {
+            if n.alive && !n.draining && n.available.fits(demand) {
+                let s = score(n);
+                // Strictly-greater keeps the first (lowest-id) node on
+                // ties; `asc` gives a total order even if a score is NaN.
+                if best.map_or(true, |(_, b)| {
+                    crate::util::order::asc(s, b) == std::cmp::Ordering::Greater
+                }) {
+                    best = Some((n.id, s));
+                }
+            }
+        }
+        match best {
+            Some((id, _)) => {
+                let lease = cluster.lease(id, demand.clone());
+                let spilled = id != origin;
+                if spilled {
+                    self.stats.spilled += 1;
+                } else {
+                    self.stats.local += 1;
+                }
+                Some(Placement { node: id, lease, spilled })
+            }
+            None => {
+                self.fail_cache = Some((demand.clone(), cluster.grow_epoch()));
                 self.stats.failed += 1;
                 None
             }
@@ -235,7 +302,78 @@ mod tests {
         let mut c = Cluster::uniform(2, Resources::cpu(4.0));
         let mut s = TwoLevelScheduler::new();
         c.lease(0, Resources::cpu(3.0));
-        let p = s.place_centralized(&mut c, &Resources::cpu(1.0)).unwrap();
+        let p = s.place_centralized(&mut c, 0, &Resources::cpu(1.0)).unwrap();
         assert_eq!(p.node, 1);
+    }
+
+    #[test]
+    fn centralized_counts_origin_hits_as_local() {
+        // The satellite bug: landing on the origin used to count as a
+        // spill, so the centralized baseline always read 100% spill.
+        let mut c = Cluster::uniform(2, Resources::cpu(4.0));
+        let mut s = TwoLevelScheduler::new();
+        // Node 1 busier than node 0 → least-loaded pick IS the origin.
+        c.lease(1, Resources::cpu(3.0));
+        let p = s.place_centralized(&mut c, 0, &Resources::cpu(1.0)).unwrap();
+        assert_eq!(p.node, 0);
+        assert!(!p.spilled);
+        assert_eq!((s.stats.local, s.stats.spilled), (1, 0));
+        // Now node 0 is strictly busier → a genuine spill to node 1.
+        c.lease(0, Resources::cpu(2.5));
+        let q = s.place_centralized(&mut c, 0, &Resources::cpu(1.0)).unwrap();
+        assert_eq!(q.node, 1);
+        assert!(q.spilled);
+        assert_eq!((s.stats.local, s.stats.spilled), (1, 1));
+        assert_eq!(s.stats.spill_fraction(), 0.5);
+    }
+
+    #[test]
+    fn empty_cluster_fails_cleanly() {
+        // A node table drained to nothing must fail the request, not
+        // index past the table in the level-1 origin lookup.
+        let mut c = Cluster::uniform(0, Resources::cpu(1.0));
+        let mut s = TwoLevelScheduler::new();
+        assert!(s.place(&mut c, 0, &Resources::cpu(1.0)).is_none());
+        assert!(s.place_centralized(&mut c, 0, &Resources::cpu(1.0)).is_none());
+        assert!(s.place_ranked(&mut c, 0, &Resources::cpu(1.0), |_| 1.0).is_none());
+        assert_eq!(s.stats.failed, 3);
+        assert_eq!(s.stats.total(), 3);
+    }
+
+    #[test]
+    fn ranked_takes_best_score_and_breaks_ties_low() {
+        let mut c = Cluster::uniform(3, Resources::cpu(2.0));
+        let mut s = TwoLevelScheduler::new();
+        // Highest score wins regardless of origin or id order.
+        let p = s
+            .place_ranked(&mut c, 0, &Resources::cpu(1.0), |n| n.id as f64)
+            .unwrap();
+        assert_eq!(p.node, 2);
+        assert!(p.spilled);
+        // Equal scores tie-break to the lowest id — node 0, the origin,
+        // which counts as a local hit.
+        let q = s.place_ranked(&mut c, 0, &Resources::cpu(1.0), |_| 7.0).unwrap();
+        assert_eq!(q.node, 0);
+        assert!(!q.spilled);
+        assert_eq!((s.stats.local, s.stats.spilled), (1, 1));
+    }
+
+    #[test]
+    fn ranked_skips_unfit_and_uses_fail_cache() {
+        let mut c = Cluster::uniform(2, Resources::cpu(1.0));
+        let mut s = TwoLevelScheduler::new();
+        c.begin_drain(1);
+        // Draining node 1 is excluded even though its score is higher.
+        let p = s
+            .place_ranked(&mut c, 0, &Resources::cpu(1.0), |n| n.id as f64)
+            .unwrap();
+        assert_eq!(p.node, 0);
+        // Saturated: the miss populates the memo, the repeat hits it.
+        assert!(s.place_ranked(&mut c, 0, &Resources::cpu(1.0), |_| 1.0).is_none());
+        assert!(s.place_ranked(&mut c, 0, &Resources::cpu(1.0), |_| 1.0).is_none());
+        assert_eq!(s.stats.failed, 2);
+        // Freed capacity bumps the grow epoch and clears the memo.
+        c.release(p.node, p.lease);
+        assert!(s.place_ranked(&mut c, 0, &Resources::cpu(1.0), |_| 1.0).is_some());
     }
 }

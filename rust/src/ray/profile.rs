@@ -1,0 +1,396 @@
+//! Online throughput profiling per (workload class, node shape) — the
+//! SHADHO policy (arxiv 1707.01428) on top of PR 5's mechanism.
+//!
+//! Hardware-aware scheduling needs one number: how many steps/sec does
+//! workload `w` sustain on a node of shape `s`? The profiler learns it
+//! online as an EWMA over observed step durations fed from the runner's
+//! result events, with a deterministic cold-start prior so placement and
+//! autoscaling behave identically on every executor before any sample
+//! arrives. Profiles are runner state, exactly like autoscaler pressure:
+//! they snapshot and restore, so a resumed run keeps what it learned.
+//!
+//! The sim side of the story is [`ShapeFactors`]: a planted table of
+//! step-time multipliers per (workload, shape) that the `SimExecutor`
+//! applies on the virtual clock, making fast/slow hardware classes fully
+//! testable offline — the tests assert the profiler recovers the planted
+//! ordering.
+
+use std::collections::BTreeMap;
+
+use super::resources::Resources;
+use crate::util::json::Json;
+
+/// EWMA smoothing factor for throughput observations: new samples move
+/// the estimate by 30%, so a profile tracks drift without thrashing on
+/// one noisy step.
+const EWMA_ALPHA: f64 = 0.3;
+
+/// Samples before a profile counts as warm (predictions before that
+/// fall back to the prior).
+const WARMUP_SAMPLES: u64 = 3;
+
+/// Deterministic cold-start prior, in steps/sec. A constant (rather
+/// than, say, a capacity heuristic) keeps equal-shape templates exactly
+/// tied on predicted throughput, so cold cost-aware decisions reduce to
+/// price alone — deterministic and testable.
+const COLD_PRIOR: f64 = 1.0;
+
+/// Canonical string key for a node shape, stable across runs and
+/// executors: `"c{cpu}g{gpu}"` plus `",{name}{amount}"` per custom
+/// dimension in `BTreeMap` (sorted) order. `f64` `Display` is
+/// shortest-roundtrip in Rust, so equal capacities always render the
+/// same key. [`Resources`] itself has EPS-tolerant equality and must
+/// never be a map key — this is the one sanctioned flattening.
+pub fn shape_key(r: &Resources) -> String {
+    use std::fmt::Write as _;
+    let mut k = format!("c{}g{}", r.cpu, r.gpu);
+    for (name, amount) in &r.custom {
+        let _ = write!(k, ",{name}{amount}");
+    }
+    k
+}
+
+/// Opportunity cost of parking `demand` on a node of shape `shape`:
+/// the largest capacity fraction the demand consumes across dimensions
+/// (floored at 1e-6 so tiny demands don't divide scores to infinity),
+/// plus a +1.0 penalty for every scarce dimension the node has (GPU or
+/// a custom accelerator) that the demand leaves idle. The penalty is
+/// what stops CPU-bound work from squatting on GPU shapes: a CPU trial
+/// on a GPU node blocks capacity a GPU-favored trial needs.
+pub fn opportunity_cost(demand: &Resources, shape: &Resources) -> f64 {
+    let mut frac: f64 = 0.0;
+    if shape.cpu > 0.0 {
+        frac = frac.max(demand.cpu / shape.cpu);
+    }
+    if shape.gpu > 0.0 {
+        frac = frac.max(demand.gpu / shape.gpu);
+    }
+    for (k, cap) in &shape.custom {
+        if *cap > 0.0 {
+            let want = demand.custom.get(k).copied().unwrap_or(0.0);
+            frac = frac.max(want / cap);
+        }
+    }
+    let mut cost = frac.max(1e-6);
+    if shape.gpu > 0.0 && demand.gpu <= 0.0 {
+        cost += 1.0;
+    }
+    for (k, cap) in &shape.custom {
+        if *cap > 0.0 && demand.custom.get(k).copied().unwrap_or(0.0) <= 0.0 {
+            cost += 1.0;
+        }
+    }
+    cost
+}
+
+/// One learned (workload, shape) throughput estimate.
+#[derive(Clone, Copy, Debug)]
+struct Profile {
+    /// EWMA of observed steps/sec.
+    ewma: f64,
+    /// Observations folded in so far.
+    samples: u64,
+}
+
+/// Online per-(workload class, node shape) throughput profiles: EWMA of
+/// observed steps/sec with a deterministic cold-start prior and
+/// snapshot/restore. Owned by the runner; fed from result events.
+#[derive(Clone, Debug, Default)]
+pub struct ThroughputProfiler {
+    /// (workload class, shape key) -> learned profile. `BTreeMap` keeps
+    /// iteration deterministic for snapshots and fleet scores.
+    profiles: BTreeMap<(String, String), Profile>,
+}
+
+impl ThroughputProfiler {
+    /// A fresh, fully cold profiler.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The deterministic cold-start prediction (steps/sec).
+    pub fn prior() -> f64 {
+        COLD_PRIOR
+    }
+
+    /// Fold in one observed step: workload `workload` took `step_secs`
+    /// of virtual time on a node of shape `shape`. Non-finite or
+    /// non-positive durations are dropped — a NaN step time must never
+    /// poison a profile (it would propagate through every placement
+    /// score thereafter).
+    pub fn observe(&mut self, workload: &str, shape: &str, step_secs: f64) {
+        if !step_secs.is_finite() || step_secs <= 0.0 {
+            return;
+        }
+        let sps = 1.0 / step_secs;
+        let key = (workload.to_string(), shape.to_string());
+        match self.profiles.get_mut(&key) {
+            Some(p) => {
+                p.ewma = EWMA_ALPHA * sps + (1.0 - EWMA_ALPHA) * p.ewma;
+                p.samples += 1;
+            }
+            None => {
+                self.profiles.insert(key, Profile { ewma: sps, samples: 1 });
+            }
+        }
+    }
+
+    /// Warm prediction for (workload, shape) in steps/sec, or `None`
+    /// until the profile has [`WARMUP_SAMPLES`] observations.
+    pub fn predict(&self, workload: &str, shape: &str) -> Option<f64> {
+        self.profiles
+            .get(&(workload.to_string(), shape.to_string()))
+            .filter(|p| p.samples >= WARMUP_SAMPLES)
+            .map(|p| p.ewma)
+    }
+
+    /// [`predict`](Self::predict) with the cold-start prior as the
+    /// fallback — the total function placement ranks with.
+    pub fn predict_or_prior(&self, workload: &str, shape: &str) -> f64 {
+        self.predict(workload, shape).unwrap_or(COLD_PRIOR)
+    }
+
+    /// True once `workload` has warm profiles on at least two distinct
+    /// shapes — before that, ranking shapes against each other is just
+    /// the prior comparing to itself, so callers stay on the cold
+    /// (local-first) path.
+    pub fn is_warm(&self, workload: &str) -> bool {
+        self.profiles
+            .range((workload.to_string(), String::new())..)
+            .take_while(|((w, _), _)| w == workload)
+            .filter(|(_, p)| p.samples >= WARMUP_SAMPLES)
+            .count()
+            >= 2
+    }
+
+    /// Fleet-level score for a shape: the mean warm prediction across
+    /// all workload classes that have one on this shape, or the prior
+    /// when none does. This is what the autoscaler's template choice
+    /// consumes — "how fast is the current workload mix on this shape,
+    /// as far as we know".
+    pub fn fleet_score(&self, shape: &str) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0u64;
+        for ((_, s), p) in &self.profiles {
+            if s == shape && p.samples >= WARMUP_SAMPLES {
+                sum += p.ewma;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            COLD_PRIOR
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// Serialize every profile for the experiment snapshot.
+    pub fn snapshot(&self) -> Json {
+        let mut by_workload: BTreeMap<String, Vec<(String, Json)>> = BTreeMap::new();
+        for ((w, s), p) in &self.profiles {
+            by_workload.entry(w.clone()).or_default().push((
+                s.clone(),
+                Json::obj(vec![
+                    ("ewma", Json::Num(p.ewma)),
+                    ("samples", Json::Num(p.samples as f64)),
+                ]),
+            ));
+        }
+        Json::Obj(
+            by_workload
+                .into_iter()
+                .map(|(w, shapes)| {
+                    (w, Json::Obj(shapes.into_iter().collect()))
+                })
+                .collect(),
+        )
+    }
+
+    /// Rebuild from a [`ThroughputProfiler::snapshot`] value.
+    pub fn restore(&mut self, snap: &Json) -> Result<(), String> {
+        let top = snap.as_obj().ok_or("profiler snapshot: expected object")?;
+        let mut profiles = BTreeMap::new();
+        for (w, shapes) in top {
+            let shapes = shapes
+                .as_obj()
+                .ok_or("profiler snapshot: expected per-workload object")?;
+            for (s, pj) in shapes {
+                let ewma = pj
+                    .get("ewma")
+                    .and_then(|v| v.as_f64())
+                    .ok_or("profiler snapshot: bad ewma")?;
+                let samples = pj
+                    .get("samples")
+                    .and_then(|v| v.as_u64())
+                    .ok_or("profiler snapshot: bad samples")?;
+                profiles.insert((w.clone(), s.clone()), Profile { ewma, samples });
+            }
+        }
+        self.profiles = profiles;
+        Ok(())
+    }
+}
+
+/// Planted step-time multipliers for the sim executor: rules of
+/// (workload pattern, shape-key pattern, factor), first match wins,
+/// `"*"` matches anything, default factor 1.0. A factor of 0.1 means
+/// "this workload steps 10x faster on this shape" — the deterministic
+/// stand-in for real fast/slow hardware classes, applied on the virtual
+/// clock so every executor replays it identically.
+#[derive(Clone, Debug, Default)]
+pub struct ShapeFactors {
+    rules: Vec<(String, String, f64)>,
+}
+
+impl ShapeFactors {
+    /// An empty table (every factor 1.0).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a rule; builder-style. `workload`/`shape` are exact
+    /// strings or `"*"`.
+    pub fn rule(mut self, workload: &str, shape: &str, factor: f64) -> Self {
+        self.rules.push((workload.to_string(), shape.to_string(), factor));
+        self
+    }
+
+    /// The step-time multiplier for (workload, shape): first matching
+    /// rule, else 1.0.
+    pub fn factor(&self, workload: &str, shape: &str) -> f64 {
+        for (w, s, f) in &self.rules {
+            if (w == "*" || w == workload) && (s == "*" || s == shape) {
+                return *f;
+            }
+        }
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_keys_are_canonical() {
+        assert_eq!(shape_key(&Resources::cpu(4.0)), "c4g0");
+        assert_eq!(shape_key(&Resources::cpu_gpu(8.0, 2.0)), "c8g2");
+        assert_eq!(shape_key(&Resources::cpu_gpu(8.0, 0.5)), "c8g0.5");
+        assert_eq!(
+            shape_key(&Resources::cpu(4.0).with_custom("tpu", 2.0)),
+            "c4g0,tpu2"
+        );
+        // Equal shapes always render equal keys (f64 Display is
+        // shortest-roundtrip), so keys are usable where EPS-tolerant
+        // Resources equality is not.
+        assert_eq!(
+            shape_key(&Resources::cpu_gpu(8.0, 4.0)),
+            shape_key(&Resources::cpu_gpu(8.0, 4.0))
+        );
+    }
+
+    #[test]
+    fn ewma_learns_planted_ordering() {
+        let mut p = ThroughputProfiler::new();
+        let (fast, slow) = ("c8g2", "c8g0");
+        for _ in 0..5 {
+            p.observe("w", fast, 0.1); // 10 steps/sec
+            p.observe("w", slow, 1.0); // 1 step/sec
+        }
+        let f = p.predict("w", fast).unwrap();
+        let s = p.predict("w", slow).unwrap();
+        assert!(f > s, "learned ordering inverted: fast {f} vs slow {s}");
+        assert!(p.is_warm("w"));
+        assert!(!p.is_warm("other"));
+    }
+
+    #[test]
+    fn cold_profiles_fall_back_to_the_prior() {
+        let mut p = ThroughputProfiler::new();
+        assert_eq!(p.predict("w", "c4g0"), None);
+        assert_eq!(p.predict_or_prior("w", "c4g0"), ThroughputProfiler::prior());
+        // Two samples: still below warmup.
+        p.observe("w", "c4g0", 0.5);
+        p.observe("w", "c4g0", 0.5);
+        assert_eq!(p.predict("w", "c4g0"), None);
+        assert!(!p.is_warm("w"));
+        p.observe("w", "c4g0", 0.5);
+        assert!(p.predict("w", "c4g0").is_some());
+        // One warm shape is still not "warm enough to rank".
+        assert!(!p.is_warm("w"));
+    }
+
+    #[test]
+    fn nan_and_garbage_steps_never_poison_profiles() {
+        let mut p = ThroughputProfiler::new();
+        for _ in 0..4 {
+            p.observe("w", "c4g0", 0.25);
+        }
+        let before = p.predict("w", "c4g0").unwrap();
+        p.observe("w", "c4g0", f64::NAN);
+        p.observe("w", "c4g0", 0.0);
+        p.observe("w", "c4g0", -1.0);
+        p.observe("w", "c4g0", f64::INFINITY);
+        assert_eq!(p.predict("w", "c4g0").unwrap().to_bits(), before.to_bits());
+    }
+
+    #[test]
+    fn snapshot_roundtrip_is_exact() {
+        let mut p = ThroughputProfiler::new();
+        for i in 1..6 {
+            p.observe("a", "c4g0", 0.1 * i as f64);
+            p.observe("b", "c8g2", 0.2);
+        }
+        let text = p.snapshot().to_string();
+        let mut q = ThroughputProfiler::new();
+        q.restore(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(
+            p.predict("a", "c4g0").unwrap().to_bits(),
+            q.predict("a", "c4g0").unwrap().to_bits()
+        );
+        assert_eq!(q.predict("b", "c8g2").is_some(), p.predict("b", "c8g2").is_some());
+        assert_eq!(q.fleet_score("c8g2").to_bits(), p.fleet_score("c8g2").to_bits());
+    }
+
+    #[test]
+    fn fleet_score_averages_warm_workloads() {
+        let mut p = ThroughputProfiler::new();
+        assert_eq!(p.fleet_score("c4g0"), ThroughputProfiler::prior());
+        for _ in 0..4 {
+            p.observe("a", "c4g0", 0.5); // 2 steps/sec
+            p.observe("b", "c4g0", 0.25); // 4 steps/sec
+            p.observe("cold", "c8g2", 1.0);
+        }
+        let s = p.fleet_score("c4g0");
+        assert!(s > 2.0 && s < 4.0, "mean of warm predictions expected, got {s}");
+    }
+
+    #[test]
+    fn opportunity_cost_penalizes_idle_scarce_dimensions() {
+        let gpu = Resources::cpu_gpu(4.0, 2.0);
+        let cpu = Resources::cpu(4.0);
+        let cpu_demand = Resources::cpu(1.0);
+        let gpu_demand = Resources::cpu_gpu(1.0, 1.0);
+        // CPU work on a GPU shape pays the idle-GPU penalty.
+        assert!(opportunity_cost(&cpu_demand, &gpu) > 1.0);
+        assert!(opportunity_cost(&cpu_demand, &cpu) < 1.0);
+        // GPU work on the GPU shape pays only its capacity fraction.
+        let c = opportunity_cost(&gpu_demand, &gpu);
+        assert!((c - 0.5).abs() < 1e-9, "gpu demand should cost its gpu fraction, got {c}");
+        // Idle custom accelerators penalize too.
+        let tpu = Resources::cpu(4.0).with_custom("tpu", 2.0);
+        assert!(opportunity_cost(&cpu_demand, &tpu) > 1.0);
+    }
+
+    #[test]
+    fn shape_factor_rules_first_match_and_wildcards() {
+        let f = ShapeFactors::new()
+            .rule("gpu_heavy", "c8g2", 0.1)
+            .rule("gpu_heavy", "*", 2.0)
+            .rule("*", "c8g2", 0.5);
+        assert_eq!(f.factor("gpu_heavy", "c8g2"), 0.1);
+        assert_eq!(f.factor("gpu_heavy", "c4g0"), 2.0);
+        assert_eq!(f.factor("other", "c8g2"), 0.5);
+        assert_eq!(f.factor("other", "c4g0"), 1.0);
+    }
+}

@@ -1,0 +1,178 @@
+//! Hardware-aware scheduling end to end (ISSUE 10): cost-aware
+//! autoscaling buys cheaper hardware than the cost-blind policy, a zero
+//! dollar budget fails fast before any trial launches, and learned
+//! throughput profiles route GPU-favored workloads onto GPU shapes —
+//! all on the sim executor's virtual clock, so every run is a
+//! deterministic offline proof.
+
+use tune::coordinator::spec::SpaceBuilder;
+use tune::coordinator::trial::ParamValue;
+use tune::coordinator::{
+    build_runner, run_experiments, ExecMode, ExperimentSpec, Mode, RunOptions, SchedulerKind,
+    SearchKind,
+};
+use tune::ray::{AutoscalePolicy, Cluster, NodeTemplate, Resources, ShapeFactors};
+use tune::trainable::synthetic::CurveTrainable;
+use tune::trainable::{factory, TrainableFactory};
+
+fn curve_factory() -> TrainableFactory {
+    factory(|c, s| Box::new(CurveTrainable::new(c, s)))
+}
+
+fn spec(name: &str, samples: usize, iters: u64, seed: u64) -> ExperimentSpec {
+    let mut spec = ExperimentSpec::named(name);
+    spec.metric = "accuracy".into();
+    spec.mode = Mode::Max;
+    spec.num_samples = samples;
+    spec.max_iterations_per_trial = iters;
+    spec.seed = seed;
+    spec
+}
+
+/// Two purchasable templates with identical shapes but an 8x price gap,
+/// listed expensive-first. The legacy (cost-blind) scale-up takes the
+/// first fit and pays $8/hour per node; the hardware-aware policy ranks
+/// throughput per dollar and buys the $1 node. Identical shapes mean
+/// placement, trial trajectories and scale-up counts stay the same —
+/// the accrued bill is the only thing that moves.
+#[test]
+fn cost_aware_autoscaling_buys_cheaper_nodes() {
+    let run = |hw_aware: bool| {
+        let mut sp = spec("cost-aware", 32, 30, 7);
+        sp.resources_per_trial = Resources::cpu(1.0);
+        sp.hw_aware = hw_aware;
+        let policy = AutoscalePolicy {
+            node_template: Resources::cpu(4.0),
+            templates: vec![
+                NodeTemplate { shape: Resources::cpu(4.0), price_per_hour: 8.0 },
+                NodeTemplate { shape: Resources::cpu(4.0), price_per_hour: 1.0 },
+            ],
+            min_nodes: 1,
+            max_nodes: 4,
+            scale_up_after: 2,
+            scale_down_after: 1_000_000,
+            scale_down_util: 0.0,
+        };
+        run_experiments(
+            sp,
+            SpaceBuilder::new().loguniform("lr", 1e-4, 1.0).build(),
+            SchedulerKind::Fifo,
+            SearchKind::Random,
+            curve_factory(),
+            RunOptions {
+                cluster: Cluster::heterogeneous_priced(vec![(Resources::cpu(4.0), 1.0)]),
+                exec: ExecMode::Sim,
+                autoscale: Some(policy),
+                ..Default::default()
+            },
+        )
+    };
+    let blind = run(false);
+    let aware = run(true);
+    for res in [&blind, &aware] {
+        assert!(res.infeasible.is_none());
+        assert_eq!(res.trials.len(), 32);
+        assert!(res.stats.scale_ups > 0, "no scale-up: the scenario lost its pressure");
+        assert!(res.stats.cost_accrued > 0.0);
+    }
+    // Same trials, same amount of work — strictly fewer dollars.
+    assert_eq!(blind.stats.scale_ups, aware.stats.scale_ups);
+    assert!(
+        aware.stats.cost_accrued < blind.stats.cost_accrued,
+        "cost-aware ${} should undercut cost-blind ${}",
+        aware.stats.cost_accrued,
+        blind.stats.cost_accrued
+    );
+}
+
+/// `budget.max_cost = 0` is exhausted before the first launch: the run
+/// fails fast with zero trials, exactly like an unsatisfiable resource
+/// demand. A generous budget on the same priced cluster runs to
+/// completion and bills a positive virtual-dollar amount.
+#[test]
+fn exhausted_cost_budget_fails_fast_before_any_launch() {
+    let run = |max_cost: f64| {
+        let mut sp = spec("budget", 8, 10, 3);
+        sp.budget_max_cost = Some(max_cost);
+        run_experiments(
+            sp,
+            SpaceBuilder::new().loguniform("lr", 1e-4, 1.0).build(),
+            SchedulerKind::Fifo,
+            SearchKind::Random,
+            curve_factory(),
+            RunOptions {
+                cluster: Cluster::heterogeneous_priced(vec![(Resources::cpu(8.0), 2.0)]),
+                exec: ExecMode::Sim,
+                ..Default::default()
+            },
+        )
+    };
+    let broke = run(0.0);
+    let err = broke.infeasible.expect("zero budget must fail fast");
+    assert!(err.contains("cost budget exhausted"), "unexpected error: {err}");
+    assert!(broke.trials.is_empty(), "no trial may launch on an exhausted budget");
+    assert_eq!(broke.stats.cost_accrued, 0.0);
+
+    let funded = run(1e9);
+    assert!(funded.infeasible.is_none());
+    assert_eq!(funded.trials.len(), 8);
+    assert!(funded.stats.cost_accrued > 0.0, "priced nodes must accrue cost");
+}
+
+/// Learned routing on a heterogeneous fleet: a workload that steps 10x
+/// faster on the 4-GPU shape (planted via sim shape factors) warms up
+/// its throughput profiles and is then placed onto GPU nodes, so the
+/// GPU shape ends up with both the higher learned steps/sec and the
+/// bulk of the observed steps.
+#[test]
+fn gpu_favored_workloads_route_to_gpu_shapes() {
+    let mut sp = spec("routing", 64, 20, 11);
+    sp.resources_per_trial = Resources::cpu(1.0);
+    sp.hw_aware = true;
+    let mut runner = build_runner(
+        sp,
+        SpaceBuilder::new()
+            .loguniform("lr", 1e-4, 1.0)
+            .constant("workload", ParamValue::Str("gpu_heavy".into()))
+            .build(),
+        SchedulerKind::Fifo,
+        SearchKind::Random,
+        curve_factory(),
+        RunOptions {
+            cluster: Cluster::heterogeneous_priced(vec![
+                (Resources::cpu_gpu(8.0, 4.0), 4.0),
+                (Resources::cpu_gpu(8.0, 4.0), 4.0),
+                (Resources::cpu(8.0), 1.0),
+                (Resources::cpu(8.0), 1.0),
+            ]),
+            exec: ExecMode::Sim,
+            shape_factors: Some(ShapeFactors::new().rule("gpu_heavy", "c8g4", 0.1)),
+            ..Default::default()
+        },
+    );
+    let res = runner.run();
+    assert!(res.infeasible.is_none());
+    assert_eq!(res.trials.len(), 64);
+
+    let prof = runner.debug_profiler();
+    let gpu_sps = prof.predict("gpu_heavy", "c8g4").expect("GPU profile must be warm");
+    let cpu_sps = prof.predict("gpu_heavy", "c8g0").expect("CPU profile must be warm");
+    assert!(
+        gpu_sps > 5.0 * cpu_sps,
+        "planted 10x speedup not learned: gpu {gpu_sps} vs cpu {cpu_sps}"
+    );
+    let samples = |shape: &str| {
+        prof.snapshot()
+            .get("gpu_heavy")
+            .and_then(|w| w.get(shape))
+            .and_then(|p| p.get("samples"))
+            .and_then(|s| s.as_u64())
+            .unwrap_or(0)
+    };
+    assert!(
+        samples("c8g4") > samples("c8g0"),
+        "most steps should land on the fast shape ({} gpu vs {} cpu)",
+        samples("c8g4"),
+        samples("c8g0")
+    );
+}

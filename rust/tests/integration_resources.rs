@@ -263,6 +263,7 @@ fn drain_preempts_checkpoint_then_requeue_loses_nothing() {
             cluster: Cluster::uniform(2, Resources::cpu(4.0)),
             autoscale: Some(AutoscalePolicy {
                 node_template: Resources::cpu(4.0),
+                templates: Vec::new(),
                 min_nodes: 0,
                 max_nodes: 2,
                 scale_up_after: 2,
@@ -307,6 +308,7 @@ fn asha_64_halfgpu_autoscaled_identical_on_sim_and_pool() {
                 exec,
                 autoscale: Some(AutoscalePolicy {
                     node_template: Resources::cpu_gpu(8.0, 4.0),
+                    templates: Vec::new(),
                     min_nodes: 2,
                     max_nodes: 6,
                     scale_up_after: 3,
@@ -357,6 +359,7 @@ fn autoscaled_cluster_shape_survives_resume() {
     let dir = tmpdir("autoscale");
     let policy = AutoscalePolicy {
         node_template: Resources::cpu(4.0),
+        templates: Vec::new(),
         min_nodes: 0,
         max_nodes: 2,
         scale_up_after: 2,

@@ -12,7 +12,8 @@ use tune::coordinator::{
     build_runner, ExperimentSpec, RunOptions, SchedulerKind, SearchKind, TrialRunner,
 };
 use tune::ray::{
-    AutoscalePolicy, Cluster, FaultPlan, Resources, TwoLevelScheduler, Utilization,
+    AutoscalePolicy, Cluster, FaultPlan, Resources, ThroughputProfiler, TwoLevelScheduler,
+    Utilization,
 };
 use tune::trainable::factory;
 use tune::trainable::synthetic::CurveTrainable;
@@ -420,6 +421,7 @@ fn prop_runner_indices_match_full_scan_reference() {
         if rng.bool(0.4) {
             opts.autoscale = Some(AutoscalePolicy {
                 node_template: Resources::cpu(4.0),
+                templates: Vec::new(),
                 min_nodes: 1,
                 max_nodes: 6,
                 scale_up_after: 3,
@@ -720,5 +722,45 @@ fn prop_ckpt_store_invariants_hold_under_random_op_sequences() {
             "dedup ratio did not survive the fold"
         );
         std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+/// Throughput profiles recover a planted fast/slow hardware ordering
+/// under noisy step times and hostile (NaN/negative) observations, and
+/// the learned state survives a snapshot/restore cycle bit-for-bit —
+/// the property the hardware-aware placement ranking stands on.
+#[test]
+fn prop_profiler_learns_planted_ordering() {
+    check("profiler_planted_ordering", 0x5AD0, 200, |rng, _| {
+        let mut p = ThroughputProfiler::new();
+        // Plant a >=4x throughput gap; per-step jitter of 0.8-1.25x
+        // keeps every fast observation strictly above every slow one.
+        let fast_sps = rng.uniform(2.0, 50.0);
+        let slow_sps = fast_sps / rng.uniform(4.0, 20.0);
+        for _ in 0..rng.range(5, 40) {
+            p.observe("w", "fast", 1.0 / (fast_sps * rng.uniform(0.8, 1.25)));
+            p.observe("w", "slow", 1.0 / (slow_sps * rng.uniform(0.8, 1.25)));
+            // Garbage must be dropped, not folded in.
+            p.observe("w", "fast", f64::NAN);
+            p.observe("w", "slow", -rng.uniform(0.1, 5.0));
+            p.observe("w", "fast", 0.0);
+        }
+        assert!(p.is_warm("w"), "two shapes with >=5 samples each must be warm");
+        let f = p.predict("w", "fast").expect("fast profile warm");
+        let s = p.predict("w", "slow").expect("slow profile warm");
+        assert!(f.is_finite() && s.is_finite(), "garbage poisoned a profile");
+        assert!(f > s, "planted ordering lost: fast {f} <= slow {s}");
+        // Snapshot/restore reproduces the learned state exactly.
+        let mut q = ThroughputProfiler::new();
+        q.restore(&p.snapshot()).expect("snapshot roundtrip");
+        assert_eq!(
+            q.predict("w", "fast").map(f64::to_bits),
+            p.predict("w", "fast").map(f64::to_bits)
+        );
+        assert_eq!(
+            q.predict("w", "slow").map(f64::to_bits),
+            p.predict("w", "slow").map(f64::to_bits)
+        );
+        assert_eq!(q.fleet_score("fast").to_bits(), p.fleet_score("fast").to_bits());
     });
 }
